@@ -1,0 +1,86 @@
+//! **End-to-end driver** (DESIGN.md: the required full-system validation):
+//! run the paper's headline experiment at small scale — a BigBench-like DAG
+//! workload (default 120 jobs, scale factors 40-100) on the SWAN WAN under
+//! Terra and all five baselines, reporting the Table-3-style factors of
+//! improvement, utilization, slowdowns, and controller overheads.
+//!
+//! ```sh
+//! cargo run --release --example gda_pipeline -- --jobs 120 --topology swan
+//! ```
+//!
+//! Results of the recorded run live in EXPERIMENTS.md.
+
+use terra::baselines;
+use terra::net::topologies;
+use terra::scheduler::terra::TerraPolicy;
+use terra::sim::{foi, SimConfig, Simulation};
+use terra::util::bench::Table;
+use terra::util::cli::Args;
+use terra::workloads::{WorkloadConfig, WorkloadGen, WorkloadKind};
+
+fn main() {
+    terra::util::logger::init();
+    let args = Args::from_env();
+    let n = args.get_usize("jobs", 120);
+    let seed = args.get_u64("seed", 42);
+    let topo = args.get_or("topology", "swan");
+    let wan = topologies::by_name(topo).expect("unknown topology");
+    let kind = WorkloadKind::by_name(args.get_or("workload", "bigbench")).unwrap();
+
+    let mk_jobs = || {
+        let mut cfg = WorkloadConfig::new(kind, seed);
+        cfg.machines_per_dc = 100;
+        WorkloadGen::with_config(cfg).jobs(&wan, n)
+    };
+    println!(
+        "workload: {} x {} jobs on {topo} ({} DCs / {} links), total WAN volume {:.0} Gbit",
+        kind.name(),
+        n,
+        wan.num_nodes(),
+        wan.num_undirected(),
+        mk_jobs().iter().map(|j| j.total_volume()).sum::<f64>()
+    );
+
+    let mut results = Vec::new();
+    for pname in ["terra", "per-flow", "multipath", "varys", "swan-mcf", "rapier"] {
+        let policy: Box<dyn terra::scheduler::Policy> = if pname == "terra" {
+            Box::new(TerraPolicy::default())
+        } else {
+            baselines::by_name(pname).unwrap()
+        };
+        let t0 = std::time::Instant::now();
+        let mut sim = Simulation::new(wan.clone(), policy, SimConfig::default());
+        let rep = sim.run_jobs(mk_jobs());
+        println!(
+            "  ran {pname:<10} wall {:6.2}s  rounds {:5}  LPs {:6}",
+            t0.elapsed().as_secs_f64(),
+            rep.rounds,
+            rep.lp_solves
+        );
+        results.push(rep);
+    }
+
+    let terra_rep = &results[0];
+    let mut tab = Table::new(&[
+        "policy", "avg JCT", "p95 JCT", "avg CCT", "util", "slowdown", "FoI(avg)", "FoI(p95)",
+    ]);
+    for rep in &results {
+        tab.row(&[
+            rep.policy.clone(),
+            format!("{:.0}s", rep.avg_jct()),
+            format!("{:.0}s", rep.p95_jct()),
+            format!("{:.1}s", rep.avg_cct()),
+            format!("{:.1}%", rep.utilization() * 100.0),
+            format!("{:.2}x", rep.avg_slowdown()),
+            format!("{:.2}x", foi(rep.avg_jct(), terra_rep.avg_jct())),
+            format!("{:.2}x", foi(rep.p95_jct(), terra_rep.p95_jct())),
+        ]);
+    }
+    tab.print(&format!("GDA pipeline on {topo}: Terra vs 5 baselines (headline metric: FoI avg JCT)"));
+    println!(
+        "\nTerra controller: {:.2} ms/round over {} rounds; every job finished: {}",
+        1e3 * terra_rep.round_time_s / terra_rep.rounds.max(1) as f64,
+        terra_rep.rounds,
+        terra_rep.unfinished() == 0
+    );
+}

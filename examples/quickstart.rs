@@ -1,0 +1,66 @@
+//! Quickstart: run a small BigBench-style workload on the SWAN topology
+//! under Terra and per-flow fair sharing, and print the factor of
+//! improvement — a miniature of the paper's headline experiment.
+//!
+//! ```sh
+//! cargo run --release --example quickstart -- --jobs 30 --seed 42
+//! ```
+
+use terra::baselines::FairPolicy;
+use terra::net::topologies;
+use terra::scheduler::TerraPolicy;
+use terra::sim::{foi, SimConfig, Simulation};
+use terra::util::cli::Args;
+use terra::workloads::{WorkloadGen, WorkloadKind};
+
+fn main() {
+    terra::util::logger::init();
+    let args = Args::from_env();
+    let jobs = args.get_usize("jobs", 30);
+    let seed = args.get_u64("seed", 42);
+
+    let wan = topologies::swan();
+    println!(
+        "WAN: SWAN ({} datacenters, {} links)",
+        wan.num_nodes(),
+        wan.num_undirected()
+    );
+
+    let gen_jobs = |seed| WorkloadGen::new(WorkloadKind::BigBench, seed).jobs(&wan, jobs);
+
+    let mut terra_sim =
+        Simulation::new(wan.clone(), Box::new(TerraPolicy::default()), SimConfig::default());
+    let terra_rep = terra_sim.run_jobs(gen_jobs(seed));
+
+    let mut fair_sim =
+        Simulation::new(wan.clone(), Box::new(FairPolicy::per_flow()), SimConfig::default());
+    let fair_rep = fair_sim.run_jobs(gen_jobs(seed));
+
+    println!("\n{:<12} {:>12} {:>12} {:>12} {:>12}", "policy", "avg JCT", "p95 JCT", "avg CCT", "util");
+    for rep in [&fair_rep, &terra_rep] {
+        println!(
+            "{:<12} {:>11.1}s {:>11.1}s {:>11.1}s {:>11.1}%",
+            rep.policy,
+            rep.avg_jct(),
+            rep.p95_jct(),
+            rep.avg_cct(),
+            rep.utilization() * 100.0
+        );
+    }
+    println!(
+        "\nFactor of improvement (Terra vs per-flow): avg JCT {:.2}x, p95 JCT {:.2}x, avg CCT {:.2}x",
+        foi(fair_rep.avg_jct(), terra_rep.avg_jct()),
+        foi(fair_rep.p95_jct(), terra_rep.p95_jct()),
+        foi(fair_rep.avg_cct(), terra_rep.avg_cct()),
+    );
+    for rep in [&fair_rep, &terra_rep] {
+        println!(
+            "{} controller: {} rounds, {} LP solves, {:.1} ms/round ({:.2}s total)",
+            rep.policy,
+            rep.rounds,
+            rep.lp_solves,
+            1e3 * rep.round_time_s / rep.rounds.max(1) as f64,
+            rep.round_time_s,
+        );
+    }
+}

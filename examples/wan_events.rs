@@ -1,0 +1,51 @@
+//! WAN-event reaction demo (Figures 9+10): two jobs share the WAN; a link
+//! fails mid-transfer and later recovers. Terra preempts the lower-priority
+//! job to protect the smaller one, reschedules it when capacity returns,
+//! and adds the restored path back — all application-aware (§6.5).
+//!
+//! ```sh
+//! cargo run --release --example wan_events
+//! ```
+
+use terra::coflow::{Flow, GB};
+use terra::net::{topologies, LinkEvent};
+use terra::scheduler::terra::{TerraConfig, TerraPolicy};
+use terra::sim::{Job, SimConfig, Simulation};
+use terra::util::cli::Args;
+
+fn main() {
+    terra::util::logger::init();
+    let args = Args::from_env();
+    let fail_t = args.get_f64("fail-at", 3.0);
+    let recover_t = args.get_f64("recover-at", 20.0);
+
+    let wan = topologies::swan();
+    let policy = TerraPolicy::new(TerraConfig { alpha: 0.0, ..Default::default() });
+    let mut sim = Simulation::new(wan, Box::new(policy), SimConfig::default());
+    // Job 1 small (higher priority under SRTF), Job 2 large; both LA -> NY.
+    sim.add_job(Job::map_reduce(1, 0.0, 0.0, vec![Flow { id: 0, src_dc: 1, dst_dc: 0, volume: 20.0 * GB }]));
+    sim.add_job(Job::map_reduce(2, 0.0, 0.0, vec![Flow { id: 0, src_dc: 1, dst_dc: 0, volume: 60.0 * GB }]));
+    sim.add_wan_event(fail_t, LinkEvent::Fail(0, 1));
+    sim.add_wan_event(recover_t, LinkEvent::Recover(0, 1));
+
+    println!("t(s)   job1(Gbps) job2(Gbps)   event");
+    for step in 0..40 {
+        let t = step as f64;
+        sim.run_until(t);
+        let ev = if (t - fail_t).abs() < 0.5 {
+            "<- NY-LA link FAILS (Terra preempts job 2)"
+        } else if (t - recover_t).abs() < 0.5 {
+            "<- link RECOVERS (job 2 gets the path back)"
+        } else {
+            ""
+        };
+        println!("{t:5.1}  {:9.1}  {:9.1}   {ev}", sim.coflow_rate(1), sim.coflow_rate(2));
+    }
+    let rep = sim.run();
+    println!(
+        "\nJCTs: job1 {:.1}s (protected), job2 {:.1}s; all transfers completed: {}",
+        rep.jobs[0].jct().unwrap_or(f64::NAN),
+        rep.jobs[1].jct().unwrap_or(f64::NAN),
+        rep.unfinished() == 0
+    );
+}

@@ -1,0 +1,62 @@
+"""AOT lowering: jax -> HLO text artifacts for the rust PJRT runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+Writes one ``mcmf_<name>.hlo.txt`` per shape variant plus ``manifest.json``
+describing the shapes (consumed by ``rust/src/runtime``).
+"""
+
+import argparse
+import json
+import os
+
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--variants",
+        default=",".join(name for name, *_ in model.VARIANTS),
+        help="comma-separated subset of variants to build",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    wanted = set(args.variants.split(","))
+
+    manifest = {}
+    for name, v, e, k in model.VARIANTS:
+        if name not in wanted:
+            continue
+        lowered = model.lower_variant(v, e, k)
+        text = to_hlo_text(lowered)
+        fname = f"mcmf_{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {"file": fname, "v": v, "e": e, "k": k}
+        print(f"wrote {path} ({len(text)} chars, V={v} E={e} K={k})")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

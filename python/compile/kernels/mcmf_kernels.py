@@ -1,0 +1,84 @@
+"""Layer-1 Pallas kernels: the PDHG iteration's dense linear algebra.
+
+The per-coflow minimum-CCT LP (Optimization (1)) reduces to max concurrent
+flow; its PDHG iteration is dominated by two incidence-matrix products,
+``f_bar @ A^T`` (K,E)x(E,V) and ``y1 @ A`` (K,V)x(V,E), each fused here with
+the following elementwise update so the iterate never round-trips to HBM.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): at the padded sizes
+(K=64, E=128, V=32, f32) the full state is ~100 KB — it fits VMEM in one
+block, so each kernel is a single-grid pallas_call whose matmul feeds the
+MXU and whose epilogue runs on the VPU. ``interpret=True`` everywhere: the
+CPU PJRT plugin cannot execute Mosaic custom-calls, and interpret mode
+lowers to plain HLO so the same artifact runs under the rust runtime.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dual_kernel(f_bar_ref, a_t_ref, b_ref, y1_ref, scal_ref, sigma_ref, out_ref):
+    """y1' = y1 + sigma * (f_bar @ A^T - lam_bar * b)   (fused MXU+VPU)."""
+    div = f_bar_ref[...] @ a_t_ref[...]
+    lam_bar = scal_ref[0]
+    out_ref[...] = y1_ref[...] + sigma_ref[...] * (div - lam_bar * b_ref[...])
+
+
+def dual_step(f_bar, a_t, b, y1, lam_bar, sigma):
+    """Pallas version of :func:`ref.dual_step`."""
+    k, v = y1.shape
+    sigma = jnp.broadcast_to(jnp.asarray(sigma, y1.dtype), (k, v))
+    scal = jnp.reshape(jnp.asarray(lam_bar, y1.dtype), (1,))
+    return pl.pallas_call(
+        _dual_kernel,
+        out_shape=jax.ShapeDtypeStruct((k, v), y1.dtype),
+        interpret=True,
+    )(f_bar, a_t, b, y1, scal, sigma)
+
+
+def _primal_kernel(f_ref, y1_ref, a_ref, y2_ref, tau_ref, out_ref):
+    """f' = relu(f - tau * (y1 @ A + y2))   (fused MXU+VPU)."""
+    grad = y1_ref[...] @ a_ref[...] + y2_ref[...][None, :]
+    out_ref[...] = jnp.maximum(f_ref[...] - tau_ref[...] * grad, 0.0)
+
+
+def primal_step(f, y1, a, y2, tau):
+    """Pallas version of :func:`ref.primal_step`."""
+    k, e = f.shape
+    tau = jnp.broadcast_to(jnp.asarray(tau, f.dtype), (k, e))
+    return pl.pallas_call(
+        _primal_kernel,
+        out_shape=jax.ShapeDtypeStruct((k, e), f.dtype),
+        interpret=True,
+    )(f, y1, a, y2, tau)
+
+
+def _capacity_kernel(f_bar_ref, c_ref, y2_ref, sigma_ref, out_ref):
+    """y2' = max(0, y2 + sigma * (sum_k f_bar - c))   (VPU reduction)."""
+    usage = jnp.sum(f_bar_ref[...], axis=0)
+    out_ref[...] = jnp.maximum(y2_ref[...] + sigma_ref[0] * (usage - c_ref[...]), 0.0)
+
+
+def capacity_step(f_bar, c, y2, sigma):
+    """Pallas version of :func:`ref.capacity_step`."""
+    (e,) = y2.shape
+    sig = jnp.reshape(jnp.asarray(sigma, y2.dtype), (1,))
+    return pl.pallas_call(
+        _capacity_kernel,
+        out_shape=jax.ShapeDtypeStruct((e,), y2.dtype),
+        interpret=True,
+    )(f_bar, c, y2, sig)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def lambda_step(lam, y1, b, tau):
+    """Scalar update — too small for a kernel; plain jnp (fuses into XLA).
+
+    ``dL/dlam = -1 - sum(b * y1)`` so the projected descent step is
+    ``lam' = max(0, lam + tau * (1 + sum(b * y1)))``.
+    """
+    g = 1.0 + jnp.sum(b * y1)
+    return jnp.maximum(lam + tau * g, 0.0)

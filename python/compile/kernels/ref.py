@@ -1,0 +1,128 @@
+"""Pure-jnp reference oracle for the PDHG max-concurrent-flow kernels.
+
+Layer-1 correctness contract: every Pallas kernel in ``mcmf_kernels.py``
+must match these functions up to float tolerance (pytest + hypothesis sweep
+shapes and dtypes).
+
+Problem (edge-based Optimization (1), §3.1.1 of the Terra paper):
+
+    maximize    lambda
+    subject to  A @ f_k == lambda * b_k     (flow conservation per group)
+                sum_k f_k <= c              (joint edge capacities)
+                f >= 0, lambda >= 0
+
+with A in {-1,0,1}^{V x E} the node-edge incidence matrix
+(+1 = edge leaves node, -1 = edge enters node) and
+b_k = vol_k * (one_hot(src_k) - one_hot(dst_k)).
+"""
+
+import jax.numpy as jnp
+
+
+def dual_step(f_bar, a_t, b, y1, lam_bar, sigma):
+    """Dual ascent on the flow-conservation multipliers.
+
+    ``y1' = y1 + sigma * (f_bar @ A^T - lam_bar * b)``
+
+    Shapes: f_bar (K,E), a_t (E,V), b (K,V), y1 (K,V), sigma (K,V)/scalar.
+    """
+    div = f_bar @ a_t
+    return y1 + sigma * (div - lam_bar * b)
+
+
+def primal_step(f, y1, a, y2, tau):
+    """Projected primal descent on the edge flows.
+
+    ``f' = relu(f - tau * (y1 @ A + y2))``
+
+    Shapes: f (K,E), y1 (K,V), a (V,E), y2 (E,), tau (K,E)/scalar.
+    """
+    grad = y1 @ a + y2[None, :]
+    return jnp.maximum(f - tau * grad, 0.0)
+
+
+def capacity_step(f_bar, c, y2, sigma):
+    """Dual ascent on the projected capacity multipliers.
+
+    ``y2' = max(0, y2 + sigma * (sum_k f_bar - c))``
+    """
+    usage = jnp.sum(f_bar, axis=0)
+    return jnp.maximum(y2 + sigma * (usage - c), 0.0)
+
+
+def lambda_step(lam, y1, b, tau):
+    """Gradient step on lambda.
+
+    ``dL/dlam = -1 - sum(b * y1)``, so projected descent is
+    ``lam' = max(0, lam + tau * (1 + sum(b * y1)))``.
+    """
+    g = 1.0 + jnp.sum(b * y1)
+    return jnp.maximum(lam + tau * g, 0.0)
+
+
+def preconditioners(a, b):
+    """Pock-Chambolle diagonal step sizes from the stacked operator.
+
+    Returns (tau_f (E,), sigma_y1 (K,V), sigma_y2 scalar, tau_lam scalar).
+    """
+    k = b.shape[0]
+    deg = jnp.sum(jnp.abs(a), axis=1)  # (V,)
+    # Column of f_{k,e}: two incidence entries (|A| column sum) + 1 cap row.
+    col_f = jnp.sum(jnp.abs(a), axis=0) + 1.0  # (E,)
+    tau_f = 1.0 / col_f
+    # Row (k, v): deg(v) incidence entries + |b_kv| lambda entry.
+    sigma_y1 = 1.0 / jnp.maximum(deg[None, :] + jnp.abs(b), 1e-6)
+    # Capacity row e: K flow entries.
+    sigma_y2 = 1.0 / float(max(k, 1))
+    # Lambda column: sum |b|.
+    tau_lam = 1.0 / jnp.maximum(jnp.sum(jnp.abs(b)), 1e-6)
+    return tau_f, sigma_y1, sigma_y2, tau_lam
+
+
+def pdhg_solve_ref(a, b, c, iters=2000):
+    """Full PDHG reference solver (pure jnp, no Pallas).
+
+    Returns the raw iterate ``(f, lam_var)``; use ``project_feasible`` for a
+    guaranteed-feasible solution.
+    """
+    v, e = a.shape
+    k = b.shape[0]
+    a_t = a.T
+    tau_f, sigma_y1, sigma_y2, tau_lam = preconditioners(a, b)
+    f = jnp.zeros((k, e), a.dtype)
+    y1 = jnp.zeros((k, v), a.dtype)
+    y2 = jnp.zeros((e,), a.dtype)
+    lam = jnp.asarray(0.0, a.dtype)
+    f_prev, lam_prev = f, lam
+    for _ in range(iters):
+        f_bar = 2.0 * f - f_prev
+        lam_bar = 2.0 * lam - lam_prev
+        y1 = dual_step(f_bar, a_t, b, y1, lam_bar, sigma_y1)
+        y2 = capacity_step(f_bar, c, y2, sigma_y2)
+        f_prev, lam_prev = f, lam
+        f = primal_step(f, y1, a, y2, tau_f[None, :])
+        lam = lambda_step(lam, y1, b, tau_lam)
+    return f, lam
+
+
+def project_feasible(f, a, b, c, vols):
+    """Turn a raw PDHG iterate into a feasible equal-progress solution.
+
+    1. scale flows onto capacities;
+    2. per-group deliverable rate = min(net outflow at src, net inflow at
+       dst) — conservative under small conservation violations;
+    3. lambda = worst group's progress.
+
+    Mirrors the rust runtime's path-peeling post-processing; used by tests.
+    Returns ``(f_scaled, lambda)``.
+    """
+    usage = jnp.sum(f, axis=0)
+    theta = jnp.min(jnp.where(usage > 1e-9, c / jnp.maximum(usage, 1e-12), jnp.inf))
+    theta = jnp.clip(theta, 0.0, 1.0)
+    f = f * theta
+    div = f @ a.T  # (K,V) net outflow per node
+    dst_rate = jnp.sum(jnp.maximum(-div, 0.0) * (b < 0), axis=1)
+    src_rate = jnp.sum(jnp.maximum(div, 0.0) * (b > 0), axis=1)
+    rate = jnp.minimum(dst_rate, src_rate)
+    lam = jnp.min(jnp.where(vols > 0, rate / jnp.maximum(vols, 1e-12), jnp.inf))
+    return f, lam

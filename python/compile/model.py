@@ -1,0 +1,117 @@
+"""Layer-2: the PDHG max-concurrent-flow solver as a jax computation.
+
+This is the compute graph the rust coordinator executes per scheduling
+round (when launched with ``--solver=jax``): one call solves Optimization
+(1) for one coflow on the residual WAN. Shapes are fixed per artifact
+variant (the runtime pads instances and selects the smallest fitting
+variant); the iteration count is a runtime input so the same artifact
+serves quick scheduling rounds and high-accuracy solves.
+
+Inputs (all f32, padded):
+    a      (V, E)  node-edge incidence (+1 leaves, -1 enters, 0 padding)
+    b      (K, V)  vol_k * (one_hot(src_k) - one_hot(dst_k)); zero rows pad
+    c      (E,)    residual capacities (0 for padding edges)
+    iters  ()      int32 PDHG iterations
+
+Outputs:
+    f      (K, E)  edge flow rates per group (raw PDHG iterate, scaled onto
+                   capacities — the rust side peels paths and re-trims)
+    lam    ()      feasible equal-progress rate extracted from f
+    res    ()      final primal residual norm (diagnostics)
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import mcmf_kernels as K
+from compile.kernels import ref
+
+# Artifact variants: (name, V, E, K).
+VARIANTS = (
+    ("small", 8, 32, 16),
+    ("swan", 8, 16, 32),
+    ("large", 32, 128, 64),
+)
+
+
+def pdhg_mcmf(a, b, c, iters):
+    """Run PDHG and return a feasibility-projected solution.
+
+    Inputs are normalized internally (capacities and volumes to O(1)) so the
+    preconditioned iteration converges at the same rate regardless of the
+    instance's units; outputs are rescaled back.
+    """
+    v, e = a.shape
+    k = b.shape[0]
+    dt = a.dtype
+
+    # --- Normalization: c_hat = c / c_max, b_hat = b / vol_max. ---
+    c_max = jnp.maximum(jnp.max(c), 1e-9)
+    vols_in = jnp.sum(jnp.maximum(b, 0.0), axis=1)
+    vol_max = jnp.maximum(jnp.max(vols_in), 1e-9)
+    c = c / c_max
+    b = b / vol_max
+
+    a_t = a.T
+    tau_f, sigma_y1, sigma_y2, tau_lam = ref.preconditioners(a, b)
+    tau_f = jnp.broadcast_to(tau_f[None, :], (k, e)).astype(dt)
+
+    def body(_, st):
+        f, f_prev, lam, lam_prev, y1, y2 = st
+        f_bar = 2.0 * f - f_prev
+        lam_bar = 2.0 * lam - lam_prev
+        y1 = K.dual_step(f_bar, a_t, b, y1, lam_bar, sigma_y1.astype(dt))
+        y2 = K.capacity_step(f_bar, c, y2, sigma_y2)
+        f_next = K.primal_step(f, y1, a, y2, tau_f)
+        lam_next = K.lambda_step(lam, y1, b, tau_lam)
+        return f_next, f, lam_next, lam, y1, y2
+
+    f0 = jnp.zeros((k, e), dt)
+    y1 = jnp.zeros((k, v), dt)
+    y2 = jnp.zeros((e,), dt)
+    lam0 = jnp.asarray(0.0, dt)
+    st = (f0, f0, lam0, lam0, y1, y2)
+    f, _, lam_var, _, y1, y2 = jax.lax.fori_loop(0, iters, body, st)
+
+    vols = jnp.sum(jnp.maximum(b, 0.0), axis=1)  # (K,) normalized volumes
+    f_feas, lam = ref.project_feasible(f, a, b, c, vols)
+    # Primal residual: conservation violation of the projected iterate.
+    div = f_feas @ a.T
+    res = jnp.linalg.norm(div - lam * b) / (1.0 + jnp.linalg.norm(lam * b))
+    # --- Undo normalization: rates scale with c_max; λ = rate/vol. ---
+    return f_feas * c_max, lam * c_max / vol_max, res
+
+
+def example_args(v, e, k):
+    """ShapeDtypeStructs for AOT lowering."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((v, e), f32),
+        jax.ShapeDtypeStruct((k, v), f32),
+        jax.ShapeDtypeStruct((e,), f32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
+
+
+def lower_variant(v, e, k):
+    """Lower the jitted solver for one shape variant."""
+    return jax.jit(pdhg_mcmf).lower(*example_args(v, e, k))
+
+
+def build_instance(num_nodes, edges, groups):
+    """Helper for tests: build padded (a, b, c) arrays from an edge list
+    ``[(u, v, cap)]`` and groups ``[(src, dst, vol)]`` without padding."""
+    import numpy as np
+
+    e = len(edges)
+    a = np.zeros((num_nodes, e), np.float32)
+    c = np.zeros((e,), np.float32)
+    for i, (u, w, cap) in enumerate(edges):
+        a[u, i] = 1.0
+        a[w, i] = -1.0
+        c[i] = cap
+    b = np.zeros((len(groups), num_nodes), np.float32)
+    for g, (s, d, vol) in enumerate(groups):
+        b[g, s] = vol
+        b[g, d] = -vol
+    return jnp.asarray(a), jnp.asarray(b), jnp.asarray(c)

@@ -1,0 +1,118 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes and dtypes; assert_allclose against ref. This is
+the CORE correctness signal for the kernel layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import mcmf_kernels as K
+from compile.kernels import ref
+
+DIMS = st.tuples(
+    st.integers(min_value=1, max_value=24),  # K groups
+    st.integers(min_value=2, max_value=40),  # E edges
+    st.integers(min_value=2, max_value=12),  # V nodes
+)
+# x64 is disabled in this jax build (the AOT artifacts are f32 anyway);
+# sweep f32 and bf16 — the two dtypes the TPU mapping cares about.
+DTYPES = st.sampled_from([jnp.float32, jnp.bfloat16])
+
+
+def rand(rng, shape, dtype, lo=-2.0, hi=2.0):
+    return jnp.asarray(rng.uniform(lo, hi, shape), dtype)
+
+
+def tol(dtype):
+    return dict(rtol=2e-5, atol=2e-5) if dtype == jnp.float32 else dict(rtol=3e-2, atol=3e-2)
+
+
+@settings(max_examples=40, deadline=None)
+@given(dims=DIMS, dtype=DTYPES, seed=st.integers(0, 2**31 - 1))
+def test_dual_step_matches_ref(dims, dtype, seed):
+    k, e, v = dims
+    rng = np.random.default_rng(seed)
+    f_bar = rand(rng, (k, e), dtype)
+    a_t = rand(rng, (e, v), dtype, -1.0, 1.0)
+    b = rand(rng, (k, v), dtype)
+    y1 = rand(rng, (k, v), dtype)
+    lam_bar = float(rng.uniform(0, 2))
+    sigma = rand(rng, (k, v), dtype, 0.01, 1.0)
+    got = K.dual_step(f_bar, a_t, b, y1, lam_bar, sigma)
+    want = ref.dual_step(f_bar, a_t, b, y1, lam_bar, sigma)
+    assert_allclose(np.asarray(got), np.asarray(want), **tol(dtype))
+
+
+@settings(max_examples=40, deadline=None)
+@given(dims=DIMS, dtype=DTYPES, seed=st.integers(0, 2**31 - 1))
+def test_primal_step_matches_ref(dims, dtype, seed):
+    k, e, v = dims
+    rng = np.random.default_rng(seed)
+    f = rand(rng, (k, e), dtype, 0.0, 2.0)
+    y1 = rand(rng, (k, v), dtype)
+    a = rand(rng, (v, e), dtype, -1.0, 1.0)
+    y2 = rand(rng, (e,), dtype, 0.0, 1.0)
+    tau = rand(rng, (k, e), dtype, 0.01, 1.0)
+    got = K.primal_step(f, y1, a, y2, tau)
+    want = ref.primal_step(f, y1, a, y2, tau)
+    assert_allclose(np.asarray(got), np.asarray(want), **tol(dtype))
+    assert np.all(np.asarray(got) >= 0.0), "projection must keep f nonnegative"
+
+
+@settings(max_examples=40, deadline=None)
+@given(dims=DIMS, dtype=DTYPES, seed=st.integers(0, 2**31 - 1))
+def test_capacity_step_matches_ref(dims, dtype, seed):
+    k, e, _ = dims
+    rng = np.random.default_rng(seed)
+    f_bar = rand(rng, (k, e), dtype, 0.0, 2.0)
+    c = rand(rng, (e,), dtype, 0.1, 2.0)
+    y2 = rand(rng, (e,), dtype, 0.0, 1.0)
+    sigma = float(rng.uniform(0.01, 1.0))
+    got = K.capacity_step(f_bar, c, y2, sigma)
+    want = ref.capacity_step(f_bar, c, y2, sigma)
+    assert_allclose(np.asarray(got), np.asarray(want), **tol(dtype))
+    assert np.all(np.asarray(got) >= 0.0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(dims=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_lambda_step_matches_ref(dims, seed):
+    k, _, v = dims
+    rng = np.random.default_rng(seed)
+    y1 = rand(rng, (k, v), jnp.float32)
+    b = rand(rng, (k, v), jnp.float32)
+    lam = float(rng.uniform(0, 2))
+    tau = float(rng.uniform(0.01, 1.0))
+    got = K.lambda_step(lam, y1, b, tau)
+    want = ref.lambda_step(lam, y1, b, tau)
+    assert_allclose(float(got), float(want), rtol=1e-5, atol=1e-6)
+
+
+def test_kernels_zero_input_identity():
+    """Zero flows and duals: dual step returns y1 - sigma*lam*b."""
+    k, e, v = 3, 6, 4
+    f = jnp.zeros((k, e))
+    a_t = jnp.zeros((e, v))
+    b = jnp.ones((k, v))
+    y1 = jnp.zeros((k, v))
+    out = K.dual_step(f, a_t, b, y1, 2.0, 0.5)
+    assert_allclose(np.asarray(out), -np.ones((k, v)), rtol=1e-6)
+
+
+def test_kernels_are_jittable_inside_loop():
+    """The kernels must lower inside lax.fori_loop (the L2 pattern)."""
+    k, e, v = 4, 8, 3
+    a = jnp.zeros((v, e), jnp.float32)
+    b = jnp.zeros((k, v), jnp.float32)
+
+    def body(_, f):
+        y1 = K.dual_step(f, a.T, b, jnp.zeros((k, v)), 0.0, 0.1)
+        return K.primal_step(f, y1, a, jnp.zeros((e,)), 0.1)
+
+    out = jax.jit(lambda f: jax.lax.fori_loop(0, 3, body, f))(jnp.ones((k, e)))
+    assert out.shape == (k, e)

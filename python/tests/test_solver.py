@@ -1,0 +1,116 @@
+"""L2 correctness: the PDHG max-concurrent-flow solver vs scipy's exact LP.
+
+Random instances on random strongly-connected digraphs are solved both by
+``model.pdhg_mcmf`` and by ``scipy.optimize.linprog`` (HiGHS) on the exact
+edge-based LP; the PDHG lambda must be feasible and close to optimal.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from scipy.optimize import linprog
+
+from compile import model
+
+FULL_MESH_3 = [(0, 1, 10.0), (1, 0, 10.0), (1, 2, 10.0), (2, 1, 10.0), (0, 2, 10.0), (2, 0, 10.0)]
+
+
+def linprog_mcmf(a, b, c):
+    """Exact max concurrent flow via HiGHS. Variables [f_11..f_KE, lam]."""
+    a = np.asarray(a, np.float64)
+    b = np.asarray(b, np.float64)
+    c = np.asarray(c, np.float64)
+    v, e = a.shape
+    k = b.shape[0]
+    n = k * e + 1
+    # Equalities: A f_k - lam b_k = 0  (K*V rows)
+    a_eq = np.zeros((k * v, n))
+    for g in range(k):
+        a_eq[g * v : (g + 1) * v, g * e : (g + 1) * e] = a
+        a_eq[g * v : (g + 1) * v, -1] = -b[g]
+    b_eq = np.zeros(k * v)
+    # Inequalities: sum_k f_k <= c
+    a_ub = np.zeros((e, n))
+    for g in range(k):
+        a_ub[:, g * e : (g + 1) * e] = np.eye(e)
+    b_ub = c
+    cost = np.zeros(n)
+    cost[-1] = -1.0  # maximize lam
+    res = linprog(cost, A_ub=a_ub, b_ub=b_ub, A_eq=a_eq, b_eq=b_eq, bounds=(0, None))
+    assert res.status == 0, res.message
+    return res.x[-1]
+
+
+def run_case(num_nodes, edges, groups, iters=1200):
+    a, b, c = model.build_instance(num_nodes, edges, groups)
+    f, lam, res = model.pdhg_mcmf(a, b, c, iters)
+    lam = float(lam)
+    # Feasibility of the returned flows.
+    usage = np.asarray(jnp.sum(f, axis=0))
+    assert np.all(usage <= np.asarray(c) + 1e-3 * float(jnp.max(c)) + 1e-6)
+    opt = linprog_mcmf(a, b, c)
+    return lam, opt
+
+
+def test_single_group_full_mesh():
+    lam, opt = run_case(3, FULL_MESH_3, [(0, 1, 40.0)])
+    assert abs(opt - 0.5) < 1e-6
+    assert lam >= 0.93 * opt and lam <= opt * 1.001, (lam, opt)
+
+
+def test_two_groups_share():
+    lam, opt = run_case(3, FULL_MESH_3, [(0, 1, 40.0), (0, 1, 40.0)])
+    assert abs(opt - 0.25) < 1e-6
+    assert lam >= 0.93 * opt and lam <= opt * 1.001, (lam, opt)
+
+
+def test_fig1_joint_instance():
+    """Figure 1's two-coflow instance: groups of coflow-2 (A->B and C->B)."""
+    lam, opt = run_case(3, FULL_MESH_3, [(0, 1, 40.0), (2, 1, 200.0)])
+    assert lam >= 0.90 * opt and lam <= opt * 1.001, (lam, opt)
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_random_instances_near_optimal(seed):
+    rng = np.random.default_rng(seed)
+    v = int(rng.integers(3, 6))
+    # Ring (strong connectivity) + random chords.
+    edges = []
+    for u in range(v):
+        edges.append((u, (u + 1) % v, float(rng.uniform(2, 20))))
+        edges.append(((u + 1) % v, u, float(rng.uniform(2, 20))))
+    for _ in range(int(rng.integers(0, 4))):
+        u, w = rng.choice(v, 2, replace=False)
+        edges.append((int(u), int(w), float(rng.uniform(2, 20))))
+    k = int(rng.integers(1, 4))
+    groups = []
+    for _ in range(k):
+        s, d = rng.choice(v, 2, replace=False)
+        groups.append((int(s), int(d), float(rng.uniform(5, 100))))
+    lam, opt = run_case(v, edges, groups, iters=2500)
+    assert opt > 0
+    assert lam <= opt * 1.01, f"infeasible-looking lam {lam} > opt {opt}"
+    assert lam >= 0.85 * opt, f"lam {lam} too far from opt {opt} (seed {seed})"
+
+
+def test_zero_volume_group_padding():
+    """Padding rows (zero b) must not poison the solve."""
+    a, b, c = model.build_instance(3, FULL_MESH_3, [(0, 1, 40.0), (0, 1, 0.0)])
+    f, lam, _ = model.pdhg_mcmf(a, b, c, 1000)
+    assert abs(float(lam) - 0.5) < 0.05
+    # Zero-volume group's flow must stay ~0 after projection.
+    assert float(jnp.sum(f[1])) < 1e-3
+
+
+def test_iters_is_runtime_input():
+    """The iteration count is a traced input: same lowered fn, two counts."""
+    import jax
+
+    a, b, c = model.build_instance(3, FULL_MESH_3, [(0, 1, 40.0)])
+    fn = jax.jit(model.pdhg_mcmf)
+    l1 = float(fn(a, b, c, 10)[1])
+    l2 = float(fn(a, b, c, 500)[1])
+    assert l2 >= l1 - 1e-6
+    assert abs(l2 - 0.5) < 0.02

@@ -1,0 +1,58 @@
+//! Bench: the three Optimization (1) backends (simplex, GK, JAX/PJRT) on
+//! identical instances — the L1/L2/L3 solver-latency comparison backing the
+//! §Perf analysis.
+use terra::lp::{self, GroupDemand, McfInstance, SolverKind};
+use terra::net::paths::PathSet;
+use terra::net::topologies;
+use terra::util::bench::{report, time_n};
+use terra::util::rng::Pcg32;
+
+fn instance(wan: &terra::net::Wan, paths: &PathSet, ng: usize, seed: u64) -> McfInstance {
+    let mut rng = Pcg32::new(seed);
+    let mut groups = Vec::new();
+    for _ in 0..ng {
+        let s = rng.below(wan.num_nodes());
+        let mut d = rng.below(wan.num_nodes());
+        while d == s {
+            d = rng.below(wan.num_nodes());
+        }
+        groups.push(GroupDemand {
+            volume: rng.uniform(10.0, 400.0),
+            paths: paths.get(s, d).iter().map(|p| p.edges.clone()).collect(),
+        });
+    }
+    McfInstance { cap: wan.capacities(), groups }
+}
+
+fn main() {
+    for (tname, wan) in [("swan", topologies::swan()), ("att", topologies::att())] {
+        let paths = PathSet::compute(&wan, 15);
+        for ng in [4, 16, 48] {
+            let inst = instance(&wan, &paths, ng, 42);
+            let t = time_n(2, 20, || {
+                lp::max_concurrent(&inst, SolverKind::Gk).unwrap();
+            });
+            report(&format!("{tname}/K={ng} garg-koenemann"), &t);
+            if ng <= 16 {
+                let t = time_n(1, 5, || {
+                    lp::max_concurrent(&inst, SolverKind::Simplex).unwrap();
+                });
+                report(&format!("{tname}/K={ng} simplex"), &t);
+            }
+        }
+    }
+    // JAX/PJRT artifact (if built).
+    if let Ok(solver) = terra::runtime::JaxSolver::load("artifacts") {
+        let wan = topologies::swan();
+        let paths = PathSet::compute(&wan, 15);
+        for ng in [4, 16] {
+            let inst = instance(&wan, &paths, ng, 42);
+            let t = time_n(2, 10, || {
+                solver.solve(&wan, &inst).unwrap();
+            });
+            report(&format!("swan/K={ng} jax-pdhg (PJRT, {} iters)", solver.iters), &t);
+        }
+    } else {
+        println!("(artifacts not built; skipping JAX solver bench — run `make artifacts`)");
+    }
+}

@@ -1,0 +1,30 @@
+//! Bench: regenerate Figures 3 + 11 / §6.6 (scheduling overhead: Terra vs
+//! Rapier per topology; LPs and milliseconds per round).
+use terra::experiments::fig11_overhead;
+use terra::util::bench::{quick_mode, report, time_n, Table};
+
+fn main() {
+    let jobs = if quick_mode() { 12 } else { 100 };
+    let mut rows = Vec::new();
+    let t = time_n(0, 1, || rows = fig11_overhead(jobs, 42));
+    report("fig11_overhead", &t);
+    let mut tab = Table::new(&["topology", "policy", "rounds", "LPs/round", "ms/round", "vs terra"]);
+    let mut terra_ms = std::collections::HashMap::new();
+    for r in &rows {
+        if r.policy == "terra" {
+            terra_ms.insert(r.topology.clone(), r.ms_per_round);
+        }
+    }
+    for r in &rows {
+        let ratio = r.ms_per_round / terra_ms.get(&r.topology).copied().unwrap_or(1.0).max(1e-9);
+        tab.row(&[
+            r.topology.clone(),
+            r.policy.clone(),
+            r.rounds.to_string(),
+            format!("{:.1}", r.lp_per_round),
+            format!("{:.3}", r.ms_per_round),
+            format!("{:.1}x", ratio),
+        ]);
+    }
+    tab.print("Figures 3+11 (paper: Terra 74ms/round SWAN, 589ms ATT; Rapier 26.2x/29.1x slower)");
+}

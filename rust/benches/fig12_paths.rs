@@ -1,0 +1,23 @@
+//! Bench: regenerate Figure 12 (k-path sensitivity on ATT) + §6.7 alpha.
+use terra::experiments::{alpha_sensitivity, fig12_paths};
+use terra::util::bench::{quick_mode, report, time_n, Table};
+use terra::workloads::WorkloadKind;
+
+fn main() {
+    let jobs = if quick_mode() { 10 } else { 100 };
+    let mut rows = Vec::new();
+    let t = time_n(0, 1, || rows = fig12_paths(jobs, 42, WorkloadKind::BigBench));
+    report("fig12_paths", &t);
+    let mut tab = Table::new(&["k", "FoI avg JCT", "FoI util"]);
+    for r in &rows {
+        tab.row(&[r.k.to_string(), format!("{:.2}x", r.foi_avg_jct), format!("{:.2}x", r.foi_util)]);
+    }
+    tab.print("Figure 12: path restriction on ATT (gains flatten at k=5-10)");
+
+    let alphas = alpha_sensitivity(jobs, 42);
+    let mut tab = Table::new(&["alpha", "avg JCT (s)"]);
+    for (a, jct) in &alphas {
+        tab.row(&[format!("{a:.1}"), format!("{jct:.1}")]);
+    }
+    tab.print("§6.7: alpha sensitivity (paper: 0.2 is 2.3% worse than 0.1)");
+}

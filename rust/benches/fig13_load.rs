@@ -1,0 +1,15 @@
+//! Bench: regenerate Figure 13 (arrival-rate/load scaling on SWAN).
+use terra::experiments::fig13_load;
+use terra::util::bench::{quick_mode, report, time_n, Table};
+
+fn main() {
+    let jobs = if quick_mode() { 15 } else { 150 };
+    let mut rows = Vec::new();
+    let t = time_n(0, 1, || rows = fig13_load(jobs, 42));
+    report("fig13_load", &t);
+    let mut tab = Table::new(&["arrival scale", "FoI avg JCT"]);
+    for r in &rows {
+        tab.row(&[format!("{:.1}x", r.arrival_scale), format!("{:.2}x", r.foi_avg_jct)]);
+    }
+    tab.print("Figure 13: FoI grows with load");
+}

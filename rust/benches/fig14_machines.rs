@@ -1,0 +1,16 @@
+//! Bench: regenerate Figure 14 (machines per DC: computation vs
+//! communication share of JCT).
+use terra::experiments::fig14_machines;
+use terra::util::bench::{quick_mode, report, time_n, Table};
+
+fn main() {
+    let jobs = if quick_mode() { 15 } else { 150 };
+    let mut rows = Vec::new();
+    let t = time_n(0, 1, || rows = fig14_machines(jobs, 42));
+    report("fig14_machines", &t);
+    let mut tab = Table::new(&["machines/DC", "FoI avg JCT"]);
+    for r in &rows {
+        tab.row(&[r.machines.to_string(), format!("{:.2}x", r.foi_avg_jct)]);
+    }
+    tab.print("Figure 14: FoI grows with machines (comm dominates)");
+}

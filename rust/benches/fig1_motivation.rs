@@ -1,0 +1,16 @@
+//! Bench: regenerate Figure 1 (motivating example) and time the run.
+use terra::experiments::fig1_motivation;
+use terra::util::bench::{report, time_n, Table};
+
+fn main() {
+    let mut rows = Vec::new();
+    let t = time_n(1, 5, || rows = fig1_motivation());
+    report("fig1_motivation", &t);
+    let mut tab = Table::new(&["policy", "avg CCT (s)", "paper (s)"]);
+    let paper = [("per-flow", 14.0), ("multipath", 10.6), ("varys", 12.0), ("terra", 7.15)];
+    for (name, cct) in &rows {
+        let p = paper.iter().find(|(n, _)| n == name).map(|(_, v)| *v).unwrap_or(0.0);
+        tab.row(&[name.clone(), format!("{cct:.2}"), format!("{p:.2}")]);
+    }
+    tab.print("Figure 1: scheduling-routing co-optimization");
+}

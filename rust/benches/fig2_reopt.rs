@@ -1,0 +1,15 @@
+//! Bench: regenerate Figure 2 (re-optimization under failure).
+use terra::experiments::fig2_reopt;
+use terra::util::bench::{report, time_n, Table};
+
+fn main() {
+    let mut rows = Vec::new();
+    let t = time_n(1, 5, || rows = fig2_reopt());
+    report("fig2_reopt", &t);
+    let mut tab = Table::new(&["scenario", "avg CCT (s)", "paper (s)"]);
+    let paper = [8.0, 14.0];
+    for ((name, cct), p) in rows.iter().zip(paper) {
+        tab.row(&[name.clone(), format!("{cct:.2}"), format!("{p:.2}")]);
+    }
+    tab.print("Figure 2: application-aware re-optimization");
+}

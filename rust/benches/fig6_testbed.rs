@@ -1,0 +1,37 @@
+//! Bench: regenerate Figure 6 + Table 2 (testbed-style JCT/CCT/utilization
+//! improvements on SWAN) — scaled down under `cargo bench`, full scale with
+//! TERRA_BENCH_FULL=1.
+use terra::experiments::fig6_testbed;
+use terra::util::bench::{quick_mode, report, time_n, Table};
+
+fn main() {
+    let jobs = if quick_mode() { 12 } else { 400 };
+    let mut rows = Vec::new();
+    let t = time_n(0, 1, || rows = fig6_testbed(jobs, 42));
+    report("fig6_testbed", &t);
+    let mut tab = Table::new(&["workload", "FoI avg JCT", "FoI p95", "FoI CCT", "FoI util"]);
+    for r in &rows {
+        tab.row(&[
+            r.workload.clone(),
+            format!("{:.2}x", r.foi_avg_jct),
+            format!("{:.2}x", r.foi_p95_jct),
+            format!("{:.2}x", r.foi_avg_cct),
+            format!("{:.2}x", r.foi_util),
+        ]);
+    }
+    tab.print("Figure 6 + Table 2 (paper: avg 1.55-3.43x, p95 2.12-8.49x, util 1.32-1.76x)");
+    // Fig 7 CDF sample points (p10..p90 of the JCT distribution).
+    for r in &rows {
+        let e = terra::util::stats::Ecdf::new(r.terra_jcts.clone());
+        let b = terra::util::stats::Ecdf::new(r.perflow_jcts.clone());
+        println!(
+            "fig7[{}]: terra p50={:.0}s p90={:.0}s | per-flow p50={:.0}s p90={:.0}s",
+            r.workload,
+            terra::util::stats::percentile(&r.terra_jcts, 50.0),
+            terra::util::stats::percentile(&r.terra_jcts, 90.0),
+            terra::util::stats::percentile(&r.perflow_jcts, 50.0),
+            terra::util::stats::percentile(&r.perflow_jcts, 90.0),
+        );
+        let _ = (e, b);
+    }
+}

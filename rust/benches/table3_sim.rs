@@ -1,0 +1,28 @@
+//! Bench: regenerate Tables 3 + 4 (+ §6.3 slowdown & volume-correlation):
+//! Terra vs the five baselines across <topology, workload>. Scaled down by
+//! default; TERRA_BENCH_FULL=1 and the `terra reproduce --table3` CLI run
+//! the full 400-job version.
+use terra::experiments::table3;
+use terra::util::bench::{quick_mode, report, time_n, Table};
+
+fn main() {
+    let (jobs, filter) = if quick_mode() { (8, Some("swan")) } else { (400, None) };
+    let mut rows = Vec::new();
+    let t = time_n(0, 1, || rows = table3(jobs, 42, filter));
+    report("table3_sim", &t);
+    let mut tab =
+        Table::new(&["topology", "workload", "baseline", "FoI avg", "FoI p95", "slowdown T/B"]);
+    for r in &rows {
+        tab.row(&[
+            r.topology.clone(),
+            r.workload.clone(),
+            r.baseline.clone(),
+            format!("{:.2}x", r.foi_avg_jct),
+            format!("{:.2}x", r.foi_p95_jct),
+            format!("{:.2}/{:.2}", r.terra_slowdown, r.baseline_slowdown),
+        ]);
+    }
+    tab.print("Table 3 (paper: 1.04-2.53x SWAN ... 1.52-26.97x ATT)");
+    let wins = rows.iter().filter(|r| r.foi_avg_jct > 1.0).count();
+    println!("terra wins {wins}/{} cells on avg JCT", rows.len());
+}

@@ -1,0 +1,118 @@
+//! The Terra client library (§5.2): the API job masters use to submit
+//! coflows to the controller, poll their status, and update them as DAG
+//! dependencies are met.
+//!
+//! ```text
+//! val cId   = submitCoflow(Flows, [deadline])   // -1 if deadline rejected
+//! val state = checkStatus(cId)
+//! updateCoflow(cId, Flows)
+//! ```
+
+use crate::coflow::CoflowId;
+use crate::net::LinkEvent;
+use crate::overlay::protocol::{self, CoflowStatus, FlowSpec};
+use crate::util::json::Json;
+use crate::Result;
+use std::net::{SocketAddr, TcpStream};
+
+/// A connection to the Terra controller.
+pub struct TerraClient {
+    stream: TcpStream,
+}
+
+/// `submit_coflow` returns this sentinel when admission control rejects the
+/// coflow's deadline (§5.2: "-1 if the coflow has a deadline that cannot be
+/// met").
+pub const REJECTED: i64 = -1;
+
+impl TerraClient {
+    pub fn connect(addr: SocketAddr) -> Result<TerraClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(TerraClient { stream })
+    }
+
+    /// Submit a coflow; returns its id, or [`REJECTED`] if a deadline was
+    /// given and cannot be met.
+    pub fn submit_coflow(&mut self, flows: &[FlowSpec], deadline_s: Option<f64>) -> Result<i64> {
+        let mut msg = Json::obj();
+        msg.set("op", "submit".into())
+            .set("flows", Json::Arr(flows.iter().map(|f| f.to_json()).collect()));
+        if let Some(d) = deadline_s {
+            msg.set("deadline", d.into());
+        }
+        protocol::write_msg(&mut self.stream, &msg)?;
+        let reply = protocol::read_msg(&mut self.stream)?
+            .ok_or_else(|| anyhow::anyhow!("controller closed connection"))?;
+        reply
+            .get("cid")
+            .and_then(|c| c.as_f64())
+            .map(|c| c as i64)
+            .ok_or_else(|| anyhow::anyhow!("bad submit reply: {reply}"))
+    }
+
+    /// Check the status of a submitted coflow.
+    pub fn check_status(&mut self, cid: CoflowId) -> Result<CoflowStatus> {
+        let mut msg = Json::obj();
+        msg.set("op", "status".into()).set("cid", cid.into());
+        protocol::write_msg(&mut self.stream, &msg)?;
+        let reply = protocol::read_msg(&mut self.stream)?
+            .ok_or_else(|| anyhow::anyhow!("controller closed connection"))?;
+        Ok(CoflowStatus::from_json(&reply))
+    }
+
+    /// Add flows to an already-submitted coflow (e.g. as more upstream
+    /// tasks finish, §3.2 "Supporting DAGs and Pipelined Workloads").
+    pub fn update_coflow(&mut self, cid: CoflowId, flows: &[FlowSpec]) -> Result<()> {
+        let mut msg = Json::obj();
+        msg.set("op", "update".into())
+            .set("cid", cid.into())
+            .set("flows", Json::Arr(flows.iter().map(|f| f.to_json()).collect()));
+        protocol::write_msg(&mut self.stream, &msg)?;
+        let reply = protocol::read_msg(&mut self.stream)?
+            .ok_or_else(|| anyhow::anyhow!("controller closed connection"))?;
+        if reply.get("error").is_some() {
+            anyhow::bail!("update failed: {reply}");
+        }
+        Ok(())
+    }
+
+    /// Inject a WAN event (operator/testing API).
+    pub fn wan_event(&mut self, ev: &LinkEvent) -> Result<()> {
+        let mut msg = Json::obj();
+        msg.set("op", "wan_event".into());
+        match *ev {
+            LinkEvent::Fail(u, v) => {
+                msg.set("kind", "fail".into()).set("u", u.into()).set("v", v.into());
+            }
+            LinkEvent::Recover(u, v) => {
+                msg.set("kind", "recover".into()).set("u", u.into()).set("v", v.into());
+            }
+            LinkEvent::SetBandwidth(u, v, gbps) => {
+                msg.set("kind", "bw".into())
+                    .set("u", u.into())
+                    .set("v", v.into())
+                    .set("gbps", gbps.into());
+            }
+        }
+        protocol::write_msg(&mut self.stream, &msg)?;
+        protocol::read_msg(&mut self.stream)?;
+        Ok(())
+    }
+
+    /// Block until the coflow completes; returns its CCT in seconds.
+    pub fn wait_done(&mut self, cid: CoflowId, timeout_s: f64) -> Result<f64> {
+        let t0 = std::time::Instant::now();
+        loop {
+            match self.check_status(cid)? {
+                CoflowStatus::Done { cct_s } => return Ok(cct_s),
+                CoflowStatus::Rejected => anyhow::bail!("coflow {cid} was rejected"),
+                _ => {}
+            }
+            if t0.elapsed().as_secs_f64() > timeout_s {
+                anyhow::bail!("timeout waiting for coflow {cid}");
+            }
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
+    }
+}

@@ -1,0 +1,56 @@
+//! The five baselines Terra is evaluated against (§6.1):
+//!
+//! 1. [`per_flow::FairPolicy`] (`FairPolicy::per_flow()`) — ideal
+//!    single-path per-flow fair sharing (TCP stand-in),
+//! 2. `FairPolicy::multipath()` — its ideal multipath extension (MPTCP
+//!    stand-in),
+//! 3. [`swan_mcf::SwanMcfPolicy`] — SWAN's application-agnostic max-min MCF
+//!    WAN optimizer,
+//! 4. [`varys::VarysPolicy`] — SEBF + MADD coflow scheduling assuming a
+//!    non-blocking core (contention only at datacenter up/downlinks),
+//! 5. [`rapier::RapierPolicy`] — joint scheduling + *single-path* routing at
+//!    *flow* granularity (no FlowGroups).
+//!
+//! All run behind the same [`crate::scheduler::Policy`] interface as Terra,
+//! in the same simulator and over the same PathSets.
+
+pub mod per_flow;
+pub mod rapier;
+pub mod swan_mcf;
+pub mod varys;
+
+pub use per_flow::FairPolicy;
+pub use rapier::RapierPolicy;
+pub use swan_mcf::SwanMcfPolicy;
+pub use varys::VarysPolicy;
+
+use crate::scheduler::Policy;
+
+/// Instantiate a policy by CLI name. `terra` gets paper defaults.
+pub fn by_name(name: &str) -> Option<Box<dyn Policy>> {
+    match name.to_ascii_lowercase().as_str() {
+        "terra" => Some(Box::new(crate::scheduler::TerraPolicy::default())),
+        "per-flow" | "perflow" | "tcp" => Some(Box::new(FairPolicy::per_flow())),
+        "multipath" | "mptcp" => Some(Box::new(FairPolicy::multipath())),
+        "swan-mcf" | "swan" => Some(Box::new(SwanMcfPolicy::default())),
+        "varys" => Some(Box::new(VarysPolicy::default())),
+        "rapier" => Some(Box::new(RapierPolicy::default())),
+        _ => None,
+    }
+}
+
+/// All evaluation policies in the paper's table order (Terra last).
+pub fn all_policy_names() -> &'static [&'static str] {
+    &["per-flow", "varys", "swan-mcf", "multipath", "rapier", "terra"]
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn by_name_covers_all() {
+        for n in super::all_policy_names() {
+            assert!(super::by_name(n).is_some(), "{n}");
+        }
+        assert!(super::by_name("bogus").is_none());
+    }
+}

@@ -1,0 +1,165 @@
+//! Per-flow fair sharing (single-path "ideal TCP") and its multipath
+//! extension ("ideal MPTCP") — baselines 1 and 2 (§6.1, Fig 1c/1d).
+//!
+//! Every *flow* gets a max-min fair share; a FlowGroup of `n` flows weighs
+//! `n` shares (its constituent flows all follow the same route set, so their
+//! aggregate equals a weight-n entity). Single-path mode pins each
+//! FlowGroup to its shortest path; multipath mode spreads across all k.
+
+use crate::lp::{maxmin, GroupDemand};
+use crate::scheduler::*;
+use std::time::Instant;
+
+/// Application-agnostic fair-sharing policy.
+pub struct FairPolicy {
+    /// Use all k paths (true) or only the shortest (false).
+    pub multipath: bool,
+    stats: RoundStats,
+}
+
+impl FairPolicy {
+    pub fn per_flow() -> FairPolicy {
+        FairPolicy { multipath: false, stats: RoundStats::default() }
+    }
+
+    pub fn multipath() -> FairPolicy {
+        FairPolicy { multipath: true, stats: RoundStats::default() }
+    }
+}
+
+impl Policy for FairPolicy {
+    fn name(&self) -> &'static str {
+        if self.multipath {
+            "multipath"
+        } else {
+            "per-flow"
+        }
+    }
+
+    fn k_paths(&self) -> usize {
+        if self.multipath {
+            DEFAULT_K
+        } else {
+            1
+        }
+    }
+
+    fn allocate(
+        &mut self,
+        _now: f64,
+        _trigger: RoundTrigger,
+        coflows: &[CoflowState],
+        net: &NetView,
+    ) -> Allocation {
+        let t0 = Instant::now();
+        let caps = net.wan.capacities();
+        let k = self.k_paths();
+        let mut demands: Vec<GroupDemand> = Vec::new();
+        let mut weights: Vec<f64> = Vec::new();
+        let mut owners: Vec<(usize, usize)> = Vec::new();
+        for (ci, cf) in coflows.iter().enumerate() {
+            let (inst, index) = build_instance(&cf.groups, &cf.remaining, &caps, net, k);
+            for (ii, d) in inst.groups.into_iter().enumerate() {
+                let gi = index[ii];
+                weights.push(cf.groups[gi].num_flows.max(1) as f64);
+                demands.push(d);
+                owners.push((ci, gi));
+            }
+        }
+        let mut alloc = Allocation::default();
+        if demands.is_empty() {
+            return alloc;
+        }
+        let rates = maxmin::max_min_rates(&caps, &demands, &weights);
+        for (di, &(ci, gi)) in owners.iter().enumerate() {
+            let cf = &coflows[ci];
+            let entry =
+                alloc.rates.entry(cf.id).or_insert_with(|| vec![Vec::new(); cf.groups.len()]);
+            entry[gi] = rates[di].clone();
+        }
+        self.stats.lp_solves += 1;
+        self.stats.round_time_s += t0.elapsed().as_secs_f64();
+        alloc
+    }
+
+    fn take_stats(&mut self) -> RoundStats {
+        std::mem::take(&mut self.stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coflow::{Flow, GB};
+    use crate::net::topologies;
+    use crate::sim::{Job, SimConfig, Simulation};
+
+    fn mk_flow(id: u64, s: usize, d: usize, gb: f64) -> Flow {
+        Flow { id, src_dc: s, dst_dc: d, volume: gb * GB }
+    }
+
+    /// Paper Fig 1c: per-flow fair sharing averages 14 s on the motivating
+    /// example (f11 & f21 split A->B evenly -> both 8 s; f22 20 s alone).
+    #[test]
+    fn fig1c_per_flow_fair() {
+        let wan = topologies::fig1a();
+        let mut sim =
+            Simulation::new(wan, Box::new(FairPolicy::per_flow()), SimConfig::default());
+        let j1 = Job::map_reduce(1, 0.0, 0.0, vec![mk_flow(0, 0, 1, 5.0)]);
+        let j2 = Job::map_reduce(
+            2,
+            0.0,
+            0.0,
+            vec![mk_flow(0, 0, 1, 5.0), mk_flow(1, 2, 1, 25.0)],
+        );
+        let rep = sim.run_jobs(vec![j1, j2]);
+        let ccts: Vec<f64> = rep.coflows.iter().filter_map(|c| c.cct()).collect();
+        let avg = rep.avg_cct();
+        // Coflow-1: A->B shared until C1 finishes at 8 s; Coflow-2: 20 s.
+        assert!((avg - 14.0).abs() < 0.8, "avg={avg} ccts={ccts:?}");
+    }
+
+    /// Paper Fig 1d: multipath fair sharing averages 10.6 s.
+    #[test]
+    fn fig1d_multipath_fair() {
+        let wan = topologies::fig1a();
+        let mut sim =
+            Simulation::new(wan, Box::new(FairPolicy::multipath()), SimConfig::default());
+        let j1 = Job::map_reduce(1, 0.0, 0.0, vec![mk_flow(0, 0, 1, 5.0)]);
+        let j2 = Job::map_reduce(
+            2,
+            0.0,
+            0.0,
+            vec![mk_flow(0, 0, 1, 5.0), mk_flow(1, 2, 1, 25.0)],
+        );
+        let rep = sim.run_jobs(vec![j1, j2]);
+        let avg = rep.avg_cct();
+        // Ideal multipath fair sharing lands near the paper's 10.6 s
+        // (exact value depends on the fairness refinement; max-min gives
+        // a slightly better 9-11 s band).
+        assert!(avg < 12.0 && avg > 8.0, "avg={avg}");
+    }
+
+    #[test]
+    fn weights_favor_many_flow_groups() {
+        // Group with 9 flows vs group with 1 flow on the same link: the
+        // 9-flow group should take ~9x the bandwidth.
+        let wan = topologies::fig1a();
+        let paths = crate::net::paths::PathSet::compute(&wan, 1);
+        let net = NetView { wan: &wan, paths: &paths };
+        let mut many = Vec::new();
+        for i in 0..9 {
+            many.push(mk_flow(i, 0, 1, 1.0));
+        }
+        let c1 = CoflowState::from_coflow(&crate::coflow::Coflow::new(1, many));
+        let c2 = CoflowState::from_coflow(&crate::coflow::Coflow::new(
+            2,
+            vec![mk_flow(0, 0, 1, 1.0)],
+        ));
+        let mut p = FairPolicy::per_flow();
+        let alloc = p.allocate(0.0, RoundTrigger::Initial, &[c1, c2], &net);
+        let r1: f64 = alloc.rates[&1].iter().flatten().sum();
+        let r2: f64 = alloc.rates[&2].iter().flatten().sum();
+        assert!(r1 > 6.0 * r2, "r1={r1} r2={r2}");
+    }
+}

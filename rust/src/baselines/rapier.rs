@@ -1,0 +1,256 @@
+//! Rapier (Zhao et al., INFOCOM'15) — baseline 5 (§6.1).
+//!
+//! The closest prior work: joint coflow scheduling **and** routing, but
+//! designed for datacenters. Three differences from Terra that the paper
+//! calls out (§7) and that this implementation reproduces:
+//!
+//! 1. **Flow granularity** — no FlowGroup coalescing: the optimization runs
+//!    with one commodity per *flow*, which is what makes its scheduling
+//!    rounds 26–29× slower (Fig 3 / Fig 11).
+//! 2. **Single-path routing** — each flow is pinned to one path (the ILP's
+//!    integral constraint); we solve the fractional relaxation and round to
+//!    each flow's strongest path, the standard Rapier heuristic.
+//! 3. **No work-conservation layering / α share** — it relies on δ-based
+//!    time-division to avoid starvation; with δ = 20 (the best value found
+//!    in §6.1) the schedule approximates SEBF priority with coarse rounds.
+
+use crate::coflow::FlowGroup;
+use crate::lp::{self, GroupDemand, McfInstance};
+use crate::scheduler::*;
+use std::time::Instant;
+
+pub struct RapierPolicy {
+    /// TDM quantum (δ): coflows scheduled strictly by remaining-size rank;
+    /// within a quantum lower-priority coflows get leftovers only.
+    pub delta: f64,
+    stats: RoundStats,
+}
+
+impl Default for RapierPolicy {
+    fn default() -> Self {
+        RapierPolicy { delta: 20.0, stats: RoundStats::default() }
+    }
+}
+
+impl RapierPolicy {
+    /// Split each FlowGroup back into its constituent per-flow commodities
+    /// (volume / num_flows each) — Rapier has no FlowGroup abstraction.
+    fn per_flow_demands(
+        cf: &CoflowState,
+        caps: &[f64],
+        net: &NetView,
+        k: usize,
+    ) -> (McfInstance, Vec<usize>) {
+        let mut groups: Vec<GroupDemand> = Vec::new();
+        let mut owner_group: Vec<usize> = Vec::new();
+        for (gi, (g, &rem)) in cf.groups.iter().zip(&cf.remaining).enumerate() {
+            if rem <= 1e-9 {
+                continue;
+            }
+            let n = g.num_flows.max(1);
+            let per = rem / n as f64;
+            let paths: Vec<Vec<usize>> =
+                net.paths.get(g.src, g.dst).iter().take(k).map(|p| p.edges.clone()).collect();
+            for _ in 0..n {
+                groups.push(GroupDemand { volume: per, paths: paths.clone() });
+                owner_group.push(gi);
+            }
+        }
+        (McfInstance { cap: caps.to_vec(), groups }, owner_group)
+    }
+}
+
+impl Policy for RapierPolicy {
+    fn name(&self) -> &'static str {
+        "rapier"
+    }
+
+    fn allocate(
+        &mut self,
+        _now: f64,
+        _trigger: RoundTrigger,
+        coflows: &[CoflowState],
+        net: &NetView,
+    ) -> Allocation {
+        let t0 = Instant::now();
+        let caps = net.wan.capacities();
+        let mut residual = caps.clone();
+        let mut alloc = Allocation::default();
+
+        // Priority: smallest remaining volume first (Rapier's OCCT-min
+        // heuristic degenerates to this under uniform bandwidth).
+        let mut order: Vec<usize> = (0..coflows.len()).collect();
+        order.sort_by(|&a, &b| {
+            coflows[a].total_remaining().partial_cmp(&coflows[b].total_remaining()).unwrap()
+        });
+
+        for &ci in &order {
+            let cf = &coflows[ci];
+            if cf.done() {
+                continue;
+            }
+            // Fractional relaxation at FLOW granularity (expensive — this is
+            // the point of Fig 3/11).
+            let (inst, owner_group) =
+                Self::per_flow_demands(cf, &residual, net, DEFAULT_K);
+            if inst.groups.is_empty() {
+                continue;
+            }
+            let lp_t = Instant::now();
+            let sol = lp::max_concurrent(&inst, lp::SolverKind::Gk);
+            self.stats.lp_solves += 1;
+            self.stats.lp_time_s += lp_t.elapsed().as_secs_f64();
+            let Some(sol) = sol else { continue };
+
+            // Integral rounding: pin each flow to its highest-rate path,
+            // re-normalize so the single-path rates stay feasible.
+            let mut pinned: Vec<(usize, usize, f64)> = Vec::new(); // (flow, path, want)
+            for (fi, rates) in sol.rates.iter().enumerate() {
+                let total: f64 = rates.iter().sum();
+                if total <= 1e-12 {
+                    continue;
+                }
+                let best = rates
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(p, _)| p)
+                    .unwrap();
+                pinned.push((fi, best, total));
+            }
+            // Feasibility after rounding: scale all of this coflow's flows
+            // by the worst oversubscription.
+            let mut usage = vec![0.0; residual.len()];
+            for &(fi, p, want) in &pinned {
+                for &e in &inst.groups[fi].paths[p] {
+                    usage[e] += want;
+                }
+            }
+            let mut scale: f64 = 1.0;
+            for (u, r) in usage.iter().zip(&residual) {
+                if *u > 1e-12 {
+                    scale = scale.min(r / u);
+                }
+            }
+            let scale = scale.clamp(0.0, 1.0);
+            if scale <= 1e-12 {
+                continue;
+            }
+            let entry =
+                alloc.rates.entry(cf.id).or_insert_with(|| vec![Vec::new(); cf.groups.len()]);
+            for &(fi, p, want) in &pinned {
+                let gi = owner_group[fi];
+                let paths_len = net.paths.get(cf.groups[gi].src, cf.groups[gi].dst).len();
+                if entry[gi].len() < paths_len {
+                    entry[gi].resize(paths_len, 0.0);
+                }
+                let r = want * scale;
+                entry[gi][p] += r;
+                for &e in &inst.groups[fi].paths[p] {
+                    residual[e] = (residual[e] - r).max(0.0);
+                }
+            }
+        }
+
+        self.stats.round_time_s += t0.elapsed().as_secs_f64();
+        alloc
+    }
+
+    fn take_stats(&mut self) -> RoundStats {
+        std::mem::take(&mut self.stats)
+    }
+}
+
+/// Expose per-flow instance construction for the overhead benches (Fig 11).
+pub fn per_flow_instance_size(groups: &[FlowGroup]) -> usize {
+    groups.iter().map(|g| g.num_flows.max(1)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coflow::{Coflow, Flow, GB};
+    use crate::net::paths::PathSet;
+    use crate::net::topologies;
+    use crate::sim::{Job, SimConfig, Simulation};
+
+    fn mk_flow(id: u64, s: usize, d: usize, gb: f64) -> Flow {
+        Flow { id, src_dc: s, dst_dc: d, volume: gb * GB }
+    }
+
+    #[test]
+    fn allocates_single_path_per_flow() {
+        let wan = topologies::fig1a();
+        let paths = PathSet::compute(&wan, 15);
+        let net = NetView { wan: &wan, paths: &paths };
+        // One flow: after rounding it must use exactly one path.
+        let cf = CoflowState::from_coflow(&Coflow::new(1, vec![mk_flow(0, 0, 1, 5.0)]));
+        let mut p = RapierPolicy::default();
+        let alloc = p.allocate(0.0, RoundTrigger::Initial, &[cf], &net);
+        let rates = &alloc.rates[&1][0];
+        let used_paths = rates.iter().filter(|&&r| r > 1e-9).count();
+        assert_eq!(used_paths, 1, "rates={rates:?}");
+    }
+
+    #[test]
+    fn multiple_flows_can_spread_over_paths() {
+        let wan = topologies::fig1a();
+        let paths = PathSet::compute(&wan, 15);
+        let net = NetView { wan: &wan, paths: &paths };
+        // 8 flows A->B: individual flows pin to different paths, so the
+        // aggregate exceeds one link's capacity.
+        let flows: Vec<Flow> = (0..8).map(|i| mk_flow(i, 0, 1, 2.0)).collect();
+        let cf = CoflowState::from_coflow(&Coflow::new(1, flows));
+        let mut p = RapierPolicy::default();
+        let alloc = p.allocate(0.0, RoundTrigger::Initial, &[cf.clone()], &net);
+        let total: f64 = alloc.rates[&1].iter().flatten().sum();
+        assert!(total > 10.0 + 1e-6, "total={total} should exceed one link");
+        let usage = alloc.edge_usage(&[cf], &net, wan.num_edges());
+        for (u, c) in usage.iter().zip(wan.capacities()) {
+            assert!(*u <= c + 1e-6);
+        }
+    }
+
+    #[test]
+    fn e2e_worse_than_terra_on_fig1() {
+        let wan = topologies::fig1a();
+        let jobs = || {
+            vec![
+                Job::map_reduce(1, 0.0, 0.0, vec![mk_flow(0, 0, 1, 5.0)]),
+                Job::map_reduce(
+                    2,
+                    0.0,
+                    0.0,
+                    vec![mk_flow(0, 0, 1, 5.0), mk_flow(1, 2, 1, 25.0)],
+                ),
+            ]
+        };
+        let mut rapier =
+            Simulation::new(wan.clone(), Box::new(RapierPolicy::default()), SimConfig::default());
+        let rrep = rapier.run_jobs(jobs());
+        let mut terra = Simulation::new(
+            wan,
+            Box::new(crate::scheduler::terra::TerraPolicy::new(
+                crate::scheduler::terra::TerraConfig { alpha: 0.0, ..Default::default() },
+            )),
+            SimConfig::default(),
+        );
+        let trep = terra.run_jobs(jobs());
+        assert!(rrep.unfinished() == 0);
+        assert!(
+            trep.avg_cct() <= rrep.avg_cct() + 1e-6,
+            "terra {} rapier {}",
+            trep.avg_cct(),
+            rrep.avg_cct()
+        );
+    }
+
+    #[test]
+    fn per_flow_size_counts_flows() {
+        let cf = CoflowState::from_coflow(&Coflow::new(
+            1,
+            (0..10).map(|i| mk_flow(i, 0, 1, 1.0)).collect(),
+        ));
+        assert_eq!(per_flow_instance_size(&cf.groups), 10);
+    }
+}

@@ -1,0 +1,219 @@
+//! Varys (Chowdhury et al., SIGCOMM'14): SEBF + MADD coflow scheduling —
+//! baseline 4 (§6.1, Fig 1e).
+//!
+//! Varys assumes a **non-blocking** fabric where contention exists only at
+//! endpoint up/downlinks. On a WAN we map each datacenter's "uplink" to the
+//! sum of its outgoing edge capacities (and "downlink" to incoming). SEBF
+//! orders coflows by their non-blocking bottleneck completion time Γ_nb;
+//! MADD gives each FlowGroup rate `volume/Γ_nb` so everything finishes
+//! together. Because the WAN is *not* non-blocking and Varys is
+//! single-path, the computed rates are clamped to actual shortest-path
+//! residuals — exactly the mismatch the paper exploits (§2.4). Leftover
+//! capacity is backfilled (Varys' work conservation).
+
+use crate::lp::maxmin;
+use crate::scheduler::*;
+use std::time::Instant;
+
+#[derive(Default)]
+pub struct VarysPolicy {
+    stats: RoundStats,
+}
+
+/// Non-blocking bottleneck CCT (MADD's Γ): max over endpoints of
+/// volume / endpoint capacity.
+pub fn gamma_nonblocking(cf: &CoflowState, net: &NetView) -> f64 {
+    let n = net.wan.num_nodes();
+    let mut out_vol = vec![0.0; n];
+    let mut in_vol = vec![0.0; n];
+    for (g, &rem) in cf.groups.iter().zip(&cf.remaining) {
+        out_vol[g.src] += rem;
+        in_vol[g.dst] += rem;
+    }
+    let mut gamma: f64 = 0.0;
+    for u in 0..n {
+        let egress: f64 = net.wan.out_edges(u).iter().map(|&e| net.wan.link(e).avail()).sum();
+        let ingress: f64 = net.wan.in_edges(u).iter().map(|&e| net.wan.link(e).avail()).sum();
+        if out_vol[u] > 0.0 {
+            gamma = gamma.max(if egress > 0.0 { out_vol[u] / egress } else { f64::INFINITY });
+        }
+        if in_vol[u] > 0.0 {
+            gamma = gamma.max(if ingress > 0.0 { in_vol[u] / ingress } else { f64::INFINITY });
+        }
+    }
+    gamma
+}
+
+impl Policy for VarysPolicy {
+    fn name(&self) -> &'static str {
+        "varys"
+    }
+
+    /// Varys routes on the single shortest path.
+    fn k_paths(&self) -> usize {
+        1
+    }
+
+    fn allocate(
+        &mut self,
+        _now: f64,
+        _trigger: RoundTrigger,
+        coflows: &[CoflowState],
+        net: &NetView,
+    ) -> Allocation {
+        let t0 = Instant::now();
+        let caps = net.wan.capacities();
+        let mut residual = caps.clone();
+        let mut alloc = Allocation::default();
+
+        // SEBF: smallest effective bottleneck (non-blocking Γ) first.
+        let mut order: Vec<(usize, f64)> = coflows
+            .iter()
+            .enumerate()
+            .map(|(i, cf)| (i, gamma_nonblocking(cf, net)))
+            .collect();
+        order.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+
+        for &(i, gamma) in &order {
+            let cf = &coflows[i];
+            if gamma <= 0.0 || !gamma.is_finite() {
+                continue;
+            }
+            // MADD rates on shortest paths, scaled down together if the real
+            // (blocking) WAN cannot carry them. Feasibility must be JOINT:
+            // multiple groups of the coflow can share a WAN edge.
+            let mut want: Vec<(usize, f64, &[usize])> = Vec::new(); // (group, rate, path)
+            for (gi, (g, &rem)) in cf.groups.iter().zip(&cf.remaining).enumerate() {
+                if rem <= 1e-9 {
+                    continue;
+                }
+                let paths = net.paths.get(g.src, g.dst);
+                let Some(p) = paths.first() else { continue };
+                want.push((gi, rem / gamma, &p.edges));
+            }
+            if want.is_empty() {
+                continue;
+            }
+            let mut usage = vec![0.0f64; residual.len()];
+            for &(_, rate, path) in &want {
+                for &e in path {
+                    usage[e] += rate;
+                }
+            }
+            let mut feas: f64 = 1.0;
+            for (u, r) in usage.iter().zip(&residual) {
+                if *u > 1e-12 {
+                    feas = feas.min(r / u);
+                }
+            }
+            let scale = feas.clamp(0.0, 1.0);
+            if scale <= 1e-12 {
+                continue;
+            }
+            let entry =
+                alloc.rates.entry(cf.id).or_insert_with(|| vec![Vec::new(); cf.groups.len()]);
+            for (gi, rate, path) in want {
+                let r = rate * scale;
+                entry[gi] = vec![r];
+                for &e in path {
+                    residual[e] = (residual[e] - r).max(0.0);
+                }
+            }
+        }
+
+        // Backfill (work conservation) with per-group max-min on leftovers.
+        let mut demands = Vec::new();
+        let mut owners = Vec::new();
+        for (ci, cf) in coflows.iter().enumerate() {
+            let (inst, index) = build_instance(&cf.groups, &cf.remaining, &residual, net, 1);
+            for (ii, d) in inst.groups.into_iter().enumerate() {
+                owners.push((ci, index[ii]));
+                demands.push(d);
+            }
+        }
+        if !demands.is_empty() {
+            let weights: Vec<f64> = demands.iter().map(|d| d.volume).collect();
+            let bonus = maxmin::max_min_rates(&residual, &demands, &weights);
+            for (di, &(ci, gi)) in owners.iter().enumerate() {
+                let cf = &coflows[ci];
+                let entry =
+                    alloc.rates.entry(cf.id).or_insert_with(|| vec![Vec::new(); cf.groups.len()]);
+                if entry[gi].is_empty() {
+                    entry[gi] = vec![0.0];
+                }
+                entry[gi][0] += bonus[di].first().copied().unwrap_or(0.0);
+            }
+        }
+
+        self.stats.lp_solves += 1;
+        self.stats.round_time_s += t0.elapsed().as_secs_f64();
+        alloc
+    }
+
+    fn take_stats(&mut self) -> RoundStats {
+        std::mem::take(&mut self.stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coflow::{Coflow, Flow, GB};
+    use crate::net::topologies;
+    use crate::sim::{Job, SimConfig, Simulation};
+
+    fn mk_flow(id: u64, s: usize, d: usize, gb: f64) -> Flow {
+        Flow { id, src_dc: s, dst_dc: d, volume: gb * GB }
+    }
+
+    /// Paper Fig 1e: intra-datacenter coflow scheduling (Varys-like)
+    /// averages 12 s — Coflow-1 preempts on A->B (4 s), Coflow-2 takes 20 s.
+    #[test]
+    fn fig1e_average() {
+        let wan = topologies::fig1a();
+        let mut sim = Simulation::new(wan, Box::new(VarysPolicy::default()), SimConfig::default());
+        let j1 = Job::map_reduce(1, 0.0, 0.0, vec![mk_flow(0, 0, 1, 5.0)]);
+        let j2 = Job::map_reduce(
+            2,
+            0.0,
+            0.0,
+            vec![mk_flow(0, 0, 1, 5.0), mk_flow(1, 2, 1, 25.0)],
+        );
+        let rep = sim.run_jobs(vec![j1, j2]);
+        let avg = rep.avg_cct();
+        // Single-path + SEBF: C1 ≈ 4 s, C2 = 20 s, average ≈ 12 s.
+        assert!((avg - 12.0).abs() < 1.0, "avg={avg}");
+    }
+
+    #[test]
+    fn gamma_nb_bottleneck() {
+        let wan = topologies::fig1a();
+        let paths = crate::net::paths::PathSet::compute(&wan, 1);
+        let net = NetView { wan: &wan, paths: &paths };
+        // 40 Gbit out of A; A's egress = 20 Gbps => Γ_nb = 2 s.
+        let cf = CoflowState::from_coflow(&Coflow::new(1, vec![mk_flow(0, 0, 1, 5.0)]));
+        let g = gamma_nonblocking(&cf, &net);
+        assert!((g - 2.0).abs() < 1e-9, "g={g}");
+    }
+
+    #[test]
+    fn respects_capacity() {
+        let wan = topologies::fig1a();
+        let paths = crate::net::paths::PathSet::compute(&wan, 1);
+        let net = NetView { wan: &wan, paths: &paths };
+        let cfs: Vec<CoflowState> = (0..4)
+            .map(|i| {
+                CoflowState::from_coflow(&Coflow::new(
+                    i,
+                    vec![mk_flow(0, 0, 1, 10.0), mk_flow(1, 2, 1, 5.0)],
+                ))
+            })
+            .collect();
+        let mut p = VarysPolicy::default();
+        let alloc = p.allocate(0.0, RoundTrigger::Initial, &cfs, &net);
+        let usage = alloc.edge_usage(&cfs, &net, wan.num_edges());
+        for (u, c) in usage.iter().zip(wan.capacities()) {
+            assert!(*u <= c + 1e-6, "usage {u} > {c}");
+        }
+    }
+}

@@ -1,0 +1,175 @@
+//! The coflow abstraction (§2.3) and the FlowGroup scale-down (§3.1.1).
+//!
+//! A coflow is a collection of flows with a shared fate: the consuming
+//! computation stage starts only after *all* flows finish. Lemma 3.1 lets
+//! Terra coalesce all flows of a coflow sharing the same
+//! `<src_datacenter, dst_datacenter>` pair into one **FlowGroup** whose
+//! volume is the sum — any work-conserving intra-group schedule preserves
+//! the group completion time — shrinking the optimization problem by orders
+//! of magnitude.
+//!
+//! Units: volumes in **Gbit**, rates in **Gbps**, times in **seconds**.
+
+use crate::net::NodeId;
+use std::collections::BTreeMap;
+
+/// Unique coflow identifier handed back by `submit_coflow` (§5.2).
+pub type CoflowId = u64;
+
+/// Gigabytes to Gbit.
+pub const GB: f64 = 8.0;
+/// Megabytes to Gbit.
+pub const MB: f64 = 8.0 / 1024.0;
+
+/// One application-level flow (e.g. a mapper-to-reducer shuffle transfer).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Flow {
+    /// Unique within the owning coflow (the Terra API requires flows to be
+    /// uniquely identifiable for `update_coflow`, §5.2).
+    pub id: u64,
+    pub src_dc: NodeId,
+    pub dst_dc: NodeId,
+    /// Volume in Gbit.
+    pub volume: f64,
+}
+
+/// All flows of one coflow between the same datacenter pair, coalesced
+/// (Lemma 3.1). The optimizer only ever sees FlowGroups.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FlowGroup {
+    pub src: NodeId,
+    pub dst: NodeId,
+    /// Total volume in Gbit.
+    pub volume: f64,
+    /// Number of constituent flows (for reporting / Rapier comparison).
+    pub num_flows: usize,
+}
+
+/// A coflow as submitted through the Terra API.
+#[derive(Clone, Debug, Default)]
+pub struct Coflow {
+    pub id: CoflowId,
+    /// Submission time (seconds since simulation/controller start).
+    pub arrival: f64,
+    /// Optional relative deadline `D_i` in seconds (§3.2).
+    pub deadline: Option<f64>,
+    pub flows: Vec<Flow>,
+}
+
+impl Coflow {
+    pub fn new(id: CoflowId, flows: Vec<Flow>) -> Coflow {
+        Coflow { id, arrival: 0.0, deadline: None, flows }
+    }
+
+    pub fn with_deadline(mut self, d: f64) -> Coflow {
+        self.deadline = Some(d);
+        self
+    }
+
+    pub fn with_arrival(mut self, t: f64) -> Coflow {
+        self.arrival = t;
+        self
+    }
+
+    /// Total bytes across all flows, in Gbit.
+    pub fn total_volume(&self) -> f64 {
+        self.flows.iter().map(|f| f.volume).sum()
+    }
+
+    /// Coalesce flows into FlowGroups keyed by `<src_dc, dst_dc>`
+    /// (Lemma 3.1). Flows whose endpoints are in the same datacenter do not
+    /// cross the WAN and are dropped (the paper only schedules WAN traffic).
+    pub fn flow_groups(&self) -> Vec<FlowGroup> {
+        coalesce(&self.flows)
+    }
+
+    /// Scale-down ratio achieved by FlowGroup coalescing:
+    /// `|FlowGroups| / |Flows|` (§3.1.1; Figure 4 shows 16n flows -> 2).
+    pub fn scale_down(&self) -> f64 {
+        let wan_flows = self.flows.iter().filter(|f| f.src_dc != f.dst_dc).count();
+        if wan_flows == 0 {
+            return 1.0;
+        }
+        self.flow_groups().len() as f64 / wan_flows as f64
+    }
+}
+
+/// Coalesce a flow list into FlowGroups (Lemma 3.1).
+pub fn coalesce(flows: &[Flow]) -> Vec<FlowGroup> {
+    let mut groups: BTreeMap<(NodeId, NodeId), (f64, usize)> = BTreeMap::new();
+    for f in flows {
+        if f.src_dc == f.dst_dc || f.volume <= 0.0 {
+            continue;
+        }
+        let e = groups.entry((f.src_dc, f.dst_dc)).or_insert((0.0, 0));
+        e.0 += f.volume;
+        e.1 += 1;
+    }
+    groups
+        .into_iter()
+        .map(|((src, dst), (volume, num_flows))| FlowGroup { src, dst, volume, num_flows })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flow(id: u64, s: NodeId, d: NodeId, v: f64) -> Flow {
+        Flow { id, src_dc: s, dst_dc: d, volume: v }
+    }
+
+    #[test]
+    fn coalesce_groups_by_pair() {
+        // Figure 4a: 5n maps in B(1), 3n maps in C(2), 2 reducers in A(0).
+        // All 16n flows collapse into exactly 2 FlowGroups (B->A, C->A).
+        let n = 4;
+        let mut flows = Vec::new();
+        let mut id = 0;
+        for _ in 0..5 * n {
+            for _ in 0..2 {
+                flows.push(flow(id, 1, 0, 1.0 * GB));
+                id += 1;
+            }
+        }
+        for _ in 0..3 * n {
+            for _ in 0..2 {
+                flows.push(flow(id, 2, 0, 1.0 * GB));
+                id += 1;
+            }
+        }
+        assert_eq!(flows.len(), 16 * n);
+        let groups = coalesce(&flows);
+        assert_eq!(groups.len(), 2);
+        let ba = groups.iter().find(|g| g.src == 1).unwrap();
+        assert_eq!(ba.num_flows, 10 * n);
+        assert!((ba.volume - 10.0 * n as f64 * GB).abs() < 1e-9);
+    }
+
+    #[test]
+    fn coalesce_drops_intra_dc_and_empty() {
+        let flows =
+            vec![flow(0, 1, 1, 5.0), flow(1, 1, 2, 0.0), flow(2, 1, 2, 3.0), flow(3, 2, 1, 4.0)];
+        let groups = coalesce(&flows);
+        assert_eq!(groups.len(), 2);
+        assert!(groups.iter().all(|g| g.volume > 0.0 && g.src != g.dst));
+    }
+
+    #[test]
+    fn scale_down_matches_fig4() {
+        let n = 10;
+        let mut flows = Vec::new();
+        for i in 0..16 * n {
+            let src = if i < 10 * n { 1 } else { 2 };
+            flows.push(flow(i as u64, src, 0, 1.0));
+        }
+        let c = Coflow::new(1, flows);
+        assert!((c.scale_down() - 2.0 / (16.0 * n as f64)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn total_volume_sums() {
+        let c = Coflow::new(1, vec![flow(0, 0, 1, 2.0), flow(1, 1, 0, 3.0)]);
+        assert!((c.total_volume() - 5.0).abs() < 1e-12);
+    }
+}

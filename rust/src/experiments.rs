@@ -1,0 +1,413 @@
+//! Reproduction harness: one function per paper table/figure (§6).
+//!
+//! Shared by the `terra reproduce` CLI subcommand (full scale) and the
+//! `cargo bench` targets (scaled-down, same code paths). Each function
+//! returns structured rows so callers can render paper-style tables and
+//! record results in EXPERIMENTS.md.
+
+use crate::baselines;
+use crate::coflow::GB;
+use crate::net::{topologies, LinkEvent, Wan};
+use crate::scheduler::terra::{TerraConfig, TerraPolicy};
+use crate::scheduler::Policy;
+use crate::sim::{foi, foi_volume_correlation, Job, Report, SimConfig, Simulation};
+use crate::workloads::{assign_deadlines, WorkloadConfig, WorkloadGen, WorkloadKind};
+
+/// Topologies in the paper's order.
+pub fn eval_topologies() -> Vec<(&'static str, Wan)> {
+    vec![("swan", topologies::swan()), ("gscale", topologies::gscale()), ("att", topologies::att())]
+}
+
+/// Run one ⟨topology, workload, policy⟩ combination.
+pub fn run_combo(
+    wan: &Wan,
+    kind: WorkloadKind,
+    policy: Box<dyn Policy>,
+    jobs: usize,
+    seed: u64,
+) -> Report {
+    let mut cfg = WorkloadConfig::new(kind, seed);
+    cfg.machines_per_dc = 100; // §6.3 simulations use 100 machines per DC
+    let jobs = WorkloadGen::with_config(cfg).jobs(wan, jobs);
+    let mut sim = Simulation::new(wan.clone(), policy, SimConfig::default());
+    sim.run_jobs(jobs)
+}
+
+/// One Table 3 cell: FoI of Terra vs `baseline` for avg and p95 JCT.
+#[derive(Clone, Debug)]
+pub struct FoiRow {
+    pub topology: String,
+    pub workload: String,
+    pub baseline: String,
+    pub foi_avg_jct: f64,
+    pub foi_p95_jct: f64,
+    pub foi_util: f64,
+    pub terra_slowdown: f64,
+    pub baseline_slowdown: f64,
+    pub volume_corr: f64,
+}
+
+/// Tables 3 + 4 (and the §6.3 slowdown/correlation analyses): simulate all
+/// ⟨topology, workload⟩ combinations against all five baselines.
+pub fn table3(jobs: usize, seed: u64, topologies_filter: Option<&str>) -> Vec<FoiRow> {
+    let mut rows = Vec::new();
+    for (tname, wan) in eval_topologies() {
+        if let Some(f) = topologies_filter {
+            if f != tname {
+                continue;
+            }
+        }
+        for kind in WorkloadKind::all() {
+            let n = if kind == WorkloadKind::Fb { jobs * 4 / 3 } else { jobs };
+            let terra_rep = run_combo(&wan, kind, Box::new(TerraPolicy::default()), n, seed);
+            for bname in ["per-flow", "varys", "swan-mcf", "multipath", "rapier"] {
+                let policy = baselines::by_name(bname).unwrap();
+                let rep = run_combo(&wan, kind, policy, n, seed);
+                rows.push(FoiRow {
+                    topology: tname.to_string(),
+                    workload: kind.name().to_string(),
+                    baseline: bname.to_string(),
+                    foi_avg_jct: foi(rep.avg_jct(), terra_rep.avg_jct()),
+                    foi_p95_jct: foi(rep.p95_jct(), terra_rep.p95_jct()),
+                    foi_util: foi(terra_rep.utilization(), rep.utilization()).recip(),
+                    terra_slowdown: terra_rep.avg_slowdown(),
+                    baseline_slowdown: rep.avg_slowdown(),
+                    volume_corr: foi_volume_correlation(&terra_rep, &rep),
+                });
+            }
+        }
+    }
+    rows
+}
+
+/// Figure 6 / Table 2 (testbed-style, simulated with the controller
+/// feedback delay): Terra vs per-flow on SWAN across all four workloads.
+pub struct TestbedRow {
+    pub workload: String,
+    pub foi_avg_jct: f64,
+    pub foi_p95_jct: f64,
+    pub foi_avg_cct: f64,
+    pub foi_util: f64,
+    /// (jct of every job, terra then per-flow) for CDF plotting (Fig 7).
+    pub terra_jcts: Vec<f64>,
+    pub perflow_jcts: Vec<f64>,
+}
+
+pub fn fig6_testbed(jobs: usize, seed: u64) -> Vec<TestbedRow> {
+    let wan = topologies::swan_with_capacity(topologies::SWAN_TESTBED_GBPS);
+    let mut out = Vec::new();
+    for kind in WorkloadKind::all() {
+        let mk_jobs = |seed| {
+            let mut cfg = WorkloadConfig::new(kind, seed);
+            cfg.machines_per_dc = 10; // testbed: 10 machines per DC
+            cfg.volume_scale = 0.1; // 1 Gbps links
+            WorkloadGen::with_config(cfg).jobs(&wan, jobs)
+        };
+        let sim_cfg = SimConfig { coordination_delay_s: 0.08, ..Default::default() };
+        let mut terra_sim =
+            Simulation::new(wan.clone(), Box::new(TerraPolicy::default()), sim_cfg.clone());
+        let t = terra_sim.run_jobs(mk_jobs(seed));
+        let mut fair_sim = Simulation::new(
+            wan.clone(),
+            baselines::by_name("per-flow").unwrap(),
+            SimConfig::default(),
+        );
+        let f = fair_sim.run_jobs(mk_jobs(seed));
+        out.push(TestbedRow {
+            workload: kind.name().to_string(),
+            foi_avg_jct: foi(f.avg_jct(), t.avg_jct()),
+            foi_p95_jct: foi(f.p95_jct(), t.p95_jct()),
+            foi_avg_cct: foi(f.avg_cct(), t.avg_cct()),
+            foi_util: t.utilization() / f.utilization().max(1e-12),
+            terra_jcts: t.jobs.iter().filter_map(|j| j.jct()).collect(),
+            perflow_jcts: f.jobs.iter().filter_map(|j| j.jct()).collect(),
+        });
+    }
+    out
+}
+
+/// Figure 8: deadline-sensitive coflows — % meeting `d x min-CCT` deadlines
+/// under Terra vs a baseline, d in 2..=6.
+pub struct DeadlineRow {
+    pub d: f64,
+    pub terra_met: f64,
+    pub baseline_met: f64,
+}
+
+pub fn fig8_deadlines(jobs: usize, seed: u64, baseline: &str) -> Vec<DeadlineRow> {
+    let wan = topologies::swan();
+    let mut out = Vec::new();
+    for d in [2.0, 3.0, 4.0, 5.0, 6.0] {
+        let mk_jobs = |seed| {
+            let mut cfg = WorkloadConfig::new(WorkloadKind::BigBench, seed);
+            cfg.machines_per_dc = 100;
+            let mut jobs = WorkloadGen::with_config(cfg).jobs(&wan, jobs);
+            assign_deadlines(&mut jobs, &wan, d);
+            jobs
+        };
+        let mut terra_sim =
+            Simulation::new(wan.clone(), Box::new(TerraPolicy::default()), SimConfig::default());
+        let t = terra_sim.run_jobs(mk_jobs(seed));
+        let mut base_sim =
+            Simulation::new(wan.clone(), baselines::by_name(baseline).unwrap(), SimConfig::default());
+        let b = base_sim.run_jobs(mk_jobs(seed));
+        out.push(DeadlineRow {
+            d,
+            terra_met: t.deadline_met_fraction(),
+            baseline_met: b.deadline_met_fraction(),
+        });
+    }
+    out
+}
+
+/// Figure 11 / Fig 3 / §6.6: scheduling overhead — time and LP count per
+/// round, Terra vs Rapier, per topology.
+pub struct OverheadRow {
+    pub topology: String,
+    pub policy: String,
+    pub rounds: usize,
+    pub lp_per_round: f64,
+    pub ms_per_round: f64,
+}
+
+pub fn fig11_overhead(jobs: usize, seed: u64) -> Vec<OverheadRow> {
+    let mut out = Vec::new();
+    for (tname, wan) in eval_topologies() {
+        for pname in ["terra", "rapier"] {
+            let rep = run_combo(
+                &wan,
+                WorkloadKind::BigBench,
+                baselines::by_name(pname).unwrap(),
+                jobs,
+                seed,
+            );
+            out.push(OverheadRow {
+                topology: tname.to_string(),
+                policy: pname.to_string(),
+                rounds: rep.rounds,
+                lp_per_round: rep.lp_solves as f64 / rep.rounds.max(1) as f64,
+                ms_per_round: 1e3 * rep.round_time_s / rep.rounds.max(1) as f64,
+            });
+        }
+    }
+    out
+}
+
+/// Figure 12: sensitivity to the number of paths k on ATT.
+pub struct PathsRow {
+    pub k: usize,
+    pub foi_avg_jct: f64,
+    pub foi_util: f64,
+}
+
+pub fn fig12_paths(jobs: usize, seed: u64, kind: WorkloadKind) -> Vec<PathsRow> {
+    let wan = topologies::att();
+    let fair = run_combo(&wan, kind, baselines::by_name("per-flow").unwrap(), jobs, seed);
+    let mut out = Vec::new();
+    for k in [1, 2, 5, 10, 15] {
+        let t = run_combo(&wan, kind, Box::new(TerraPolicy::with_k(k)), jobs, seed);
+        out.push(PathsRow {
+            k,
+            foi_avg_jct: foi(fair.avg_jct(), t.avg_jct()),
+            foi_util: t.utilization() / fair.utilization().max(1e-12),
+        });
+    }
+    out
+}
+
+/// Figure 13: load scaling (arrival-rate multipliers) on SWAN.
+pub struct LoadRow {
+    pub arrival_scale: f64,
+    pub foi_avg_jct: f64,
+}
+
+pub fn fig13_load(jobs: usize, seed: u64) -> Vec<LoadRow> {
+    let wan = topologies::swan();
+    let mut out = Vec::new();
+    for scale in [0.5, 1.0, 2.0, 4.0] {
+        let mk = |policy: Box<dyn Policy>| {
+            let mut cfg = WorkloadConfig::new(WorkloadKind::BigBench, seed);
+            cfg.arrival_scale = scale;
+            let jobs = WorkloadGen::with_config(cfg).jobs(&wan, jobs);
+            let mut sim = Simulation::new(wan.clone(), policy, SimConfig::default());
+            sim.run_jobs(jobs)
+        };
+        let t = mk(Box::new(TerraPolicy::default()));
+        let f = mk(baselines::by_name("per-flow").unwrap());
+        out.push(LoadRow { arrival_scale: scale, foi_avg_jct: foi(f.avg_jct(), t.avg_jct()) });
+    }
+    out
+}
+
+/// Figure 14: machines per datacenter (computation vs communication).
+pub struct MachinesRow {
+    pub machines: usize,
+    pub foi_avg_jct: f64,
+}
+
+pub fn fig14_machines(jobs: usize, seed: u64) -> Vec<MachinesRow> {
+    let wan = topologies::swan();
+    let mut out = Vec::new();
+    for machines in [10, 20, 50, 100, 200] {
+        let mk = |policy: Box<dyn Policy>| {
+            let mut cfg = WorkloadConfig::new(WorkloadKind::BigBench, seed);
+            cfg.machines_per_dc = machines;
+            let jobs = WorkloadGen::with_config(cfg).jobs(&wan, jobs);
+            let mut sim = Simulation::new(wan.clone(), policy, SimConfig::default());
+            sim.run_jobs(jobs)
+        };
+        let t = mk(Box::new(TerraPolicy::default()));
+        let f = mk(baselines::by_name("per-flow").unwrap());
+        out.push(MachinesRow { machines, foi_avg_jct: foi(f.avg_jct(), t.avg_jct()) });
+    }
+    out
+}
+
+/// §6.7 α sensitivity: avg JCT for α values on BigBench/SWAN.
+pub fn alpha_sensitivity(jobs: usize, seed: u64) -> Vec<(f64, f64)> {
+    let wan = topologies::swan();
+    [0.0, 0.1, 0.2, 0.4]
+        .iter()
+        .map(|&alpha| {
+            let rep = run_combo(
+                &wan,
+                WorkloadKind::BigBench,
+                Box::new(TerraPolicy::with_alpha(alpha)),
+                jobs,
+                seed,
+            );
+            (alpha, rep.avg_jct())
+        })
+        .collect()
+}
+
+/// Figure 1: the motivating example — average CCT of the two coflows under
+/// the four policies of Fig 1c–1f. Returns (policy name, avg CCT seconds).
+pub fn fig1_motivation() -> Vec<(String, f64)> {
+    let wan = topologies::fig1a();
+    let mk_jobs = || {
+        vec![
+            Job::map_reduce(
+                1,
+                0.0,
+                0.0,
+                vec![crate::coflow::Flow { id: 0, src_dc: 0, dst_dc: 1, volume: 5.0 * GB }],
+            ),
+            Job::map_reduce(
+                2,
+                0.0,
+                0.0,
+                vec![
+                    crate::coflow::Flow { id: 0, src_dc: 0, dst_dc: 1, volume: 5.0 * GB },
+                    crate::coflow::Flow { id: 1, src_dc: 2, dst_dc: 1, volume: 25.0 * GB },
+                ],
+            ),
+        ]
+    };
+    let mut out = Vec::new();
+    for pname in ["per-flow", "multipath", "varys", "terra"] {
+        let policy: Box<dyn Policy> = if pname == "terra" {
+            Box::new(TerraPolicy::new(TerraConfig { alpha: 0.0, ..Default::default() }))
+        } else {
+            baselines::by_name(pname).unwrap()
+        };
+        let mut sim = Simulation::new(wan.clone(), policy, SimConfig::default());
+        let rep = sim.run_jobs(mk_jobs());
+        out.push((pname.to_string(), rep.avg_cct()));
+    }
+    out
+}
+
+/// Figure 2: re-optimization under failure. Returns (scenario, avg CCT):
+/// no failure (8 s), failure + Terra re-optimization (≈14 s paper-optimal).
+pub fn fig2_reopt() -> Vec<(String, f64)> {
+    let mk_jobs = || {
+        vec![
+            Job::map_reduce(
+                1,
+                0.0,
+                0.0,
+                vec![crate::coflow::Flow { id: 0, src_dc: 0, dst_dc: 1, volume: 10.0 * GB }],
+            ),
+            Job::map_reduce(
+                2,
+                0.0,
+                0.0,
+                vec![
+                    crate::coflow::Flow { id: 0, src_dc: 2, dst_dc: 1, volume: 10.0 * GB },
+                    crate::coflow::Flow { id: 1, src_dc: 0, dst_dc: 2, volume: 10.0 * GB },
+                ],
+            ),
+        ]
+    };
+    let mut out = Vec::new();
+    // Scenario A: no failure.
+    let mut sim = Simulation::new(
+        topologies::fig1a(),
+        Box::new(TerraPolicy::new(TerraConfig { alpha: 0.0, ..Default::default() })),
+        SimConfig::default(),
+    );
+    out.push(("no-failure".into(), sim.run_jobs(mk_jobs()).avg_cct()));
+    // Scenario B: the A-C link fails right after scheduling; Terra
+    // re-optimizes (application-aware).
+    let mut sim = Simulation::new(
+        topologies::fig1a(),
+        Box::new(TerraPolicy::new(TerraConfig { alpha: 0.0, ..Default::default() })),
+        SimConfig::default(),
+    );
+    for j in mk_jobs() {
+        sim.add_job(j);
+    }
+    sim.add_wan_event(0.05, LinkEvent::Fail(0, 2));
+    out.push(("failure+reopt".into(), sim.run().avg_cct()));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_ordering_matches_paper() {
+        let rows = fig1_motivation();
+        let get = |n: &str| rows.iter().find(|(p, _)| p == n).unwrap().1;
+        let (fair, mp, varys, terra) = (get("per-flow"), get("multipath"), get("varys"), get("terra"));
+        // Paper: 14 / 10.6 / 12 / 7.15 — exact values depend on fairness
+        // refinements; the ORDERING is the claim.
+        assert!(terra < mp && terra < varys && terra < fair, "{rows:?}");
+        assert!(mp < fair, "{rows:?}");
+        assert!(varys < fair, "{rows:?}");
+        assert!((fair - 14.0).abs() < 1.0, "{rows:?}");
+        // Paper's joint optimum is 7.15 s; the GK ε-approximation lands
+        // within ~10% (≈8.0 s), still well ahead of every baseline.
+        assert!(terra < 8.3, "{rows:?}");
+    }
+
+    #[test]
+    fn fig2_failure_recovers() {
+        let rows = fig2_reopt();
+        let no_fail = rows[0].1;
+        let with_fail = rows[1].1;
+        assert!(no_fail < with_fail, "{rows:?}");
+        // Paper: 8 s -> 14 s optimal after failure (18 s without
+        // app-aware re-optimization).
+        assert!(no_fail < 10.0, "{rows:?}");
+        assert!(with_fail < 17.0, "failure handling too slow: {rows:?}");
+    }
+
+    #[test]
+    fn small_table3_terra_wins_mostly() {
+        let rows = table3(6, 7, Some("swan"));
+        assert_eq!(rows.len(), 20); // 4 workloads x 5 baselines
+        let wins = rows.iter().filter(|r| r.foi_avg_jct > 1.0).count();
+        assert!(wins * 10 >= rows.len() * 7, "terra should win most cells: {wins}/{}", rows.len());
+    }
+
+    #[test]
+    fn fig8_terra_meets_more_deadlines() {
+        let rows = fig8_deadlines(8, 3, "per-flow");
+        let t_avg: f64 = rows.iter().map(|r| r.terra_met).sum::<f64>() / rows.len() as f64;
+        let b_avg: f64 = rows.iter().map(|r| r.baseline_met).sum::<f64>() / rows.len() as f64;
+        assert!(t_avg > b_avg, "terra {t_avg} vs baseline {b_avg}");
+    }
+}

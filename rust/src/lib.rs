@@ -1,0 +1,53 @@
+//! # Terra: Scalable Cross-Layer GDA Optimizations (reproduction)
+//!
+//! Terra co-optimizes application-level **coflow scheduling** with WAN-level
+//! **multipath routing** for geo-distributed analytics (GDA). This crate is a
+//! full reproduction of the system described in You & Chowdhury, *"Terra:
+//! Scalable Cross-Layer GDA Optimizations"* (2019), including:
+//!
+//! - the FlowGroup-coalesced joint scheduling-routing algorithm
+//!   ([`scheduler`], [`lp`]),
+//! - the WAN substrate with the paper's three topologies ([`net`]),
+//! - the flow-level simulator used for the paper's large-scale evaluation
+//!   ([`sim`]),
+//! - the five baselines it compares against ([`baselines`]),
+//! - the overlay-based enforcement plane (controller + agents over persistent
+//!   TCP connections, [`overlay`]),
+//! - the workload generators for BigBench / TPC-DS / TPC-H / Facebook traces
+//!   ([`workloads`]), and
+//! - an AOT-compiled JAX/Pallas LP solver executed from rust via PJRT
+//!   ([`runtime`]).
+//!
+//! See `DESIGN.md` for the architecture and the per-experiment index, and
+//! `EXPERIMENTS.md` for reproduction results.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use terra::net::topologies;
+//! use terra::sim::{Simulation, SimConfig};
+//! use terra::scheduler::TerraPolicy;
+//! use terra::workloads::{WorkloadKind, WorkloadGen};
+//!
+//! let wan = topologies::swan();
+//! let jobs = WorkloadGen::new(WorkloadKind::BigBench, 42).jobs(&wan, 20);
+//! let mut sim = Simulation::new(wan, Box::new(TerraPolicy::default()), SimConfig::default());
+//! let report = sim.run_jobs(jobs);
+//! println!("avg JCT: {:.2}s", report.avg_jct());
+//! ```
+
+pub mod api;
+pub mod baselines;
+pub mod coflow;
+pub mod experiments;
+pub mod lp;
+pub mod net;
+pub mod overlay;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod util;
+pub mod workloads;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

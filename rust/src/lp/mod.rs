@@ -1,0 +1,295 @@
+//! Optimization (1): the per-coflow minimum-CCT problem (§3.1.1).
+//!
+//! Given a coflow's FlowGroups and the residual WAN, Terra finds paths and
+//! rates so all groups progress at rate `1/Γ` per second and Γ (the CCT) is
+//! minimized. With FlowGroups the integral constraints vanish and the
+//! problem becomes a **maximum concurrent flow** LP: maximize λ such that
+//! group `k` ships `λ·|d_k|` Gbps from `src_k` to `dst_k` under joint edge
+//! capacities; then `Γ = 1/λ`.
+//!
+//! Three interchangeable solvers:
+//! - [`simplex`] — exact dense LP (oracle + small instances),
+//! - [`gk`] — Garg–Könemann FPTAS on the k-shortest-path restriction
+//!   (the controller's default; §4.3 restricts paths anyway),
+//! - the AOT-compiled JAX/PDHG artifact executed via PJRT
+//!   ([`crate::runtime`]).
+//!
+//! [`maxmin`] implements max-min fair MCF used for work conservation
+//! (Pseudocode 1) and the SWAN-MCF baseline.
+
+pub mod gk;
+pub mod maxmin;
+pub mod simplex;
+
+use crate::net::topology::EdgeId;
+
+/// One FlowGroup's demand in an MCF instance: its volume and the restricted
+/// path set (each path is a list of directed edge ids).
+#[derive(Clone, Debug)]
+pub struct GroupDemand {
+    pub volume: f64,
+    pub paths: Vec<Vec<EdgeId>>,
+}
+
+/// A max-concurrent-flow instance over the residual WAN.
+#[derive(Clone, Debug)]
+pub struct McfInstance {
+    /// Residual capacity per directed edge (Gbps).
+    pub cap: Vec<f64>,
+    pub groups: Vec<GroupDemand>,
+}
+
+/// Solution: common progress rate λ (per second) and per-(group, path)
+/// rates in Gbps. Group `k`'s total rate is exactly `lambda * volume_k`,
+/// so its completion time is `1/lambda` (= Γ).
+#[derive(Clone, Debug)]
+pub struct McfSolution {
+    pub lambda: f64,
+    pub rates: Vec<Vec<f64>>,
+}
+
+impl McfInstance {
+    /// Drop zero-volume groups (callers may pass them; they get empty rates).
+    pub fn active_groups(&self) -> impl Iterator<Item = (usize, &GroupDemand)> {
+        self.groups.iter().enumerate().filter(|(_, g)| g.volume > 0.0)
+    }
+
+    /// Per-edge bandwidth usage of a candidate solution.
+    pub fn edge_usage(&self, rates: &[Vec<f64>]) -> Vec<f64> {
+        let mut usage = vec![0.0; self.cap.len()];
+        for (g, group_rates) in self.groups.iter().zip(rates) {
+            for (p, &r) in g.paths.iter().zip(group_rates) {
+                for &e in p {
+                    usage[e] += r;
+                }
+            }
+        }
+        usage
+    }
+
+    /// Verify feasibility of a solution within tolerance `tol` and that all
+    /// groups progress at `lambda`. Used by tests and debug assertions.
+    pub fn check(&self, sol: &McfSolution, tol: f64) -> Result<(), String> {
+        let usage = self.edge_usage(&sol.rates);
+        for (e, (&u, &c)) in usage.iter().zip(&self.cap).enumerate() {
+            if u > c + tol * (1.0 + c) {
+                return Err(format!("edge {e} over capacity: {u} > {c}"));
+            }
+        }
+        for (k, g) in self.groups.iter().enumerate() {
+            let rate: f64 = sol.rates[k].iter().sum();
+            if g.volume > 0.0 {
+                let want = sol.lambda * g.volume;
+                if (rate - want).abs() > tol * (1.0 + want) {
+                    return Err(format!("group {k} rate {rate} != lambda*v {want}"));
+                }
+            } else if rate > tol {
+                return Err(format!("zero-volume group {k} has rate {rate}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl McfSolution {
+    /// The coflow completion time Γ implied by λ.
+    pub fn gamma(&self) -> f64 {
+        if self.lambda > 0.0 {
+            1.0 / self.lambda
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// Scale all rates by `f` (used for deadline dilation Γ_i/D_i, §3.2,
+    /// and the α starvation share).
+    pub fn scale(&mut self, f: f64) {
+        self.lambda *= f;
+        for g in &mut self.rates {
+            for r in g {
+                *r *= f;
+            }
+        }
+    }
+}
+
+/// Which solver backs Optimization (1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolverKind {
+    /// Exact dense simplex.
+    Simplex,
+    /// Garg–Könemann FPTAS (default).
+    Gk,
+}
+
+/// Solve Optimization (1) for one coflow. Returns `None` when some group has
+/// no usable path (e.g. partitioned WAN) or all volumes are zero.
+pub fn max_concurrent(inst: &McfInstance, kind: SolverKind) -> Option<McfSolution> {
+    // Guard: every active group needs at least one path with positive
+    // bottleneck capacity.
+    let mut any = false;
+    for (_, g) in inst.active_groups() {
+        any = true;
+        let ok = g
+            .paths
+            .iter()
+            .any(|p| !p.is_empty() && p.iter().all(|&e| inst.cap[e] > 1e-12));
+        if !ok {
+            return None;
+        }
+    }
+    if !any {
+        return None;
+    }
+    let sol = match kind {
+        SolverKind::Simplex => solve_simplex(inst)?,
+        SolverKind::Gk => gk::solve(inst, gk::DEFAULT_EPSILON)?,
+    };
+    debug_assert!(inst.check(&sol, 1e-6).is_ok(), "{:?}", inst.check(&sol, 1e-6));
+    Some(sol)
+}
+
+/// Exact path-based formulation via the dense simplex.
+pub fn solve_simplex(inst: &McfInstance) -> Option<McfSolution> {
+    use simplex::{Cmp, Lp};
+    // Variables: x_{k,p} laid out group-major, then λ last.
+    let sizes: Vec<usize> = inst.groups.iter().map(|g| g.paths.len()).collect();
+    let offsets: Vec<usize> = sizes
+        .iter()
+        .scan(0usize, |acc, s| {
+            let o = *acc;
+            *acc += s;
+            Some(o)
+        })
+        .collect();
+    let nx: usize = sizes.iter().sum();
+    let n = nx + 1;
+    let lam = nx;
+    let mut lp = Lp::new(n);
+    lp.objective[lam] = 1.0;
+    // Group progress: sum_p x_{k,p} - v_k λ = 0 for active groups;
+    // x_{k,p} = 0 rows are implicit (vars stay 0 since they only appear in
+    // capacity rows; but pin them for zero-volume groups).
+    for (k, g) in inst.groups.iter().enumerate() {
+        if g.volume > 0.0 {
+            let mut row = vec![0.0; n];
+            for p in 0..g.paths.len() {
+                row[offsets[k] + p] = 1.0;
+            }
+            row[lam] = -g.volume;
+            lp.constrain(row, Cmp::Eq, 0.0);
+        } else {
+            for p in 0..g.paths.len() {
+                let mut row = vec![0.0; n];
+                row[offsets[k] + p] = 1.0;
+                lp.constrain(row, Cmp::Le, 0.0);
+            }
+        }
+    }
+    // Capacity rows (only for edges actually used by some path).
+    let mut edge_vars: std::collections::HashMap<EdgeId, Vec<usize>> = Default::default();
+    for (k, g) in inst.groups.iter().enumerate() {
+        for (p, path) in g.paths.iter().enumerate() {
+            for &e in path {
+                edge_vars.entry(e).or_default().push(offsets[k] + p);
+            }
+        }
+    }
+    for (e, vars) in &edge_vars {
+        let mut row = vec![0.0; n];
+        for &v in vars {
+            row[v] += 1.0;
+        }
+        lp.constrain(row, Cmp::Le, inst.cap[*e]);
+    }
+    let sol = lp.solve().ok()?;
+    let lambda = sol.x[lam];
+    if !(lambda.is_finite() && lambda > 0.0) {
+        return None;
+    }
+    let mut rates = Vec::with_capacity(inst.groups.len());
+    for (k, g) in inst.groups.iter().enumerate() {
+        rates.push(sol.x[offsets[k]..offsets[k] + g.paths.len()].to_vec());
+    }
+    Some(McfSolution { lambda, rates })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Fig 1a WAN: edges 0:A->B 1:B->A 2:B->C 3:C->B 4:A->C 5:C->A, 10 Gbps.
+    fn fig1a_caps() -> Vec<f64> {
+        vec![10.0; 6]
+    }
+
+    fn paths_a_to_b() -> Vec<Vec<EdgeId>> {
+        vec![vec![0], vec![4, 3]] // direct, via C
+    }
+
+    #[test]
+    fn single_group_multipath_uses_both_paths() {
+        // Coflow-1 of Fig 1: 5 GB = 40 Gbit from A to B; with both paths it
+        // can get 20 Gbps total => Γ = 2 s.
+        let inst = McfInstance {
+            cap: fig1a_caps(),
+            groups: vec![GroupDemand { volume: 40.0, paths: paths_a_to_b() }],
+        };
+        let sol = max_concurrent(&inst, SolverKind::Simplex).unwrap();
+        assert!((sol.gamma() - 2.0).abs() < 1e-6, "gamma={}", sol.gamma());
+        inst.check(&sol, 1e-7).unwrap();
+    }
+
+    #[test]
+    fn two_groups_share_capacity() {
+        // Two equal groups A->B; each can use both paths: total 20 Gbps
+        // shared by demand => each gets 10, λ = 10/40.
+        let g = GroupDemand { volume: 40.0, paths: paths_a_to_b() };
+        let inst = McfInstance { cap: fig1a_caps(), groups: vec![g.clone(), g] };
+        let sol = max_concurrent(&inst, SolverKind::Simplex).unwrap();
+        assert!((sol.gamma() - 4.0).abs() < 1e-6);
+        inst.check(&sol, 1e-7).unwrap();
+    }
+
+    #[test]
+    fn no_path_infeasible() {
+        let inst = McfInstance {
+            cap: vec![0.0; 6],
+            groups: vec![GroupDemand { volume: 1.0, paths: vec![vec![0]] }],
+        };
+        assert!(max_concurrent(&inst, SolverKind::Simplex).is_none());
+    }
+
+    #[test]
+    fn zero_volume_groups_get_zero_rates() {
+        let inst = McfInstance {
+            cap: fig1a_caps(),
+            groups: vec![
+                GroupDemand { volume: 40.0, paths: paths_a_to_b() },
+                GroupDemand { volume: 0.0, paths: paths_a_to_b() },
+            ],
+        };
+        let sol = max_concurrent(&inst, SolverKind::Simplex).unwrap();
+        assert!(sol.rates[1].iter().sum::<f64>() < 1e-9);
+        assert!((sol.gamma() - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn deadline_dilation_scale() {
+        let inst = McfInstance {
+            cap: fig1a_caps(),
+            groups: vec![GroupDemand { volume: 40.0, paths: paths_a_to_b() }],
+        };
+        let mut sol = max_concurrent(&inst, SolverKind::Simplex).unwrap();
+        let gamma = sol.gamma();
+        sol.scale(gamma / 8.0); // dilate to an 8-second deadline
+        assert!((sol.gamma() - 8.0).abs() < 1e-6);
+        inst.check(&sol, 1e-7).unwrap();
+    }
+
+    #[test]
+    fn empty_instance_none() {
+        let inst = McfInstance { cap: fig1a_caps(), groups: vec![] };
+        assert!(max_concurrent(&inst, SolverKind::Simplex).is_none());
+    }
+}

@@ -1,0 +1,372 @@
+//! Dense two-phase primal simplex.
+//!
+//! A general-purpose exact LP solver used (a) to solve Optimization (1) on
+//! small/medium instances, (b) as the correctness oracle for the
+//! Garg–Könemann FPTAS and the JAX/PDHG artifact in tests. Bland's rule
+//! guards against cycling; the tableau is dense, which is fine at Terra's
+//! problem sizes (K·k variables, K+E rows — see §3.1.1).
+
+/// Constraint sense.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Cmp {
+    Le,
+    Eq,
+    Ge,
+}
+
+/// `maximize c'x  s.t.  A[i]·x (<=|=|>=) b[i],  x >= 0`.
+#[derive(Clone, Debug, Default)]
+pub struct Lp {
+    pub objective: Vec<f64>,
+    pub rows: Vec<(Vec<f64>, Cmp, f64)>,
+}
+
+/// Solution: optimal objective and the primal point.
+#[derive(Clone, Debug)]
+pub struct LpSolution {
+    pub objective: f64,
+    pub x: Vec<f64>,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum LpError {
+    #[error("LP is infeasible")]
+    Infeasible,
+    #[error("LP is unbounded")]
+    Unbounded,
+    #[error("simplex iteration limit reached")]
+    IterLimit,
+}
+
+const EPS: f64 = 1e-9;
+
+impl Lp {
+    pub fn new(num_vars: usize) -> Lp {
+        Lp { objective: vec![0.0; num_vars], rows: Vec::new() }
+    }
+
+    pub fn num_vars(&self) -> usize {
+        self.objective.len()
+    }
+
+    /// Add a constraint row. `coeffs` must have `num_vars` entries.
+    pub fn constrain(&mut self, coeffs: Vec<f64>, cmp: Cmp, rhs: f64) {
+        assert_eq!(coeffs.len(), self.num_vars());
+        self.rows.push((coeffs, cmp, rhs));
+    }
+
+    /// Solve with two-phase simplex.
+    pub fn solve(&self) -> Result<LpSolution, LpError> {
+        let n = self.num_vars();
+        let m = self.rows.len();
+
+        // Normalize to b >= 0.
+        let mut rows: Vec<(Vec<f64>, Cmp, f64)> = self.rows.clone();
+        for (coeffs, cmp, rhs) in rows.iter_mut() {
+            if *rhs < 0.0 {
+                for c in coeffs.iter_mut() {
+                    *c = -*c;
+                }
+                *rhs = -*rhs;
+                *cmp = match *cmp {
+                    Cmp::Le => Cmp::Ge,
+                    Cmp::Ge => Cmp::Le,
+                    Cmp::Eq => Cmp::Eq,
+                };
+            }
+        }
+
+        // Column layout: [structural n][slack/surplus s][artificial a][rhs].
+        let num_slack = rows.iter().filter(|r| r.1 != Cmp::Eq).count();
+        let num_art = rows.iter().filter(|r| r.1 != Cmp::Le).count();
+        let total = n + num_slack + num_art;
+        let rhs_col = total;
+
+        let mut t = vec![vec![0.0f64; total + 1]; m];
+        let mut basis = vec![0usize; m];
+        let mut s_idx = n;
+        let mut a_idx = n + num_slack;
+        for (i, (coeffs, cmp, rhs)) in rows.iter().enumerate() {
+            t[i][..n].copy_from_slice(coeffs);
+            t[i][rhs_col] = *rhs;
+            match cmp {
+                Cmp::Le => {
+                    t[i][s_idx] = 1.0;
+                    basis[i] = s_idx;
+                    s_idx += 1;
+                }
+                Cmp::Ge => {
+                    t[i][s_idx] = -1.0;
+                    s_idx += 1;
+                    t[i][a_idx] = 1.0;
+                    basis[i] = a_idx;
+                    a_idx += 1;
+                }
+                Cmp::Eq => {
+                    t[i][a_idx] = 1.0;
+                    basis[i] = a_idx;
+                    a_idx += 1;
+                }
+            }
+        }
+
+        // Phase 1: minimize sum of artificials (maximize -sum).
+        if num_art > 0 {
+            let mut obj = vec![0.0f64; total + 1];
+            for j in n + num_slack..total {
+                obj[j] = -1.0;
+            }
+            // Price out basic artificials.
+            for i in 0..m {
+                if basis[i] >= n + num_slack {
+                    for j in 0..=total {
+                        obj[j] += t[i][j];
+                    }
+                }
+            }
+            run_simplex(&mut t, &mut obj, &mut basis, total, rhs_col)?;
+            // obj[rhs_col] tracks the *negated* phase-1 objective: it ends at
+            // Σ artificials, which must hit zero for feasibility.
+            if obj[rhs_col] > 1e-7 {
+                return Err(LpError::Infeasible);
+            }
+            // Pivot remaining artificial basics out (degenerate rows).
+            for i in 0..m {
+                if basis[i] >= n + num_slack {
+                    let piv = (0..n + num_slack).find(|&j| t[i][j].abs() > EPS);
+                    if let Some(j) = piv {
+                        pivot(&mut t, &mut obj, &mut basis, i, j, rhs_col);
+                    }
+                    // If no pivot column exists the row is all-zero
+                    // (redundant); the artificial stays basic at value 0,
+                    // which is harmless as its column is never re-entered.
+                }
+            }
+        }
+
+        // Phase 2: original objective (artificials excluded from pricing).
+        let art_start = n + num_slack;
+        let mut obj = vec![0.0f64; total + 1];
+        obj[..n].copy_from_slice(&self.objective);
+        // Price out basic variables.
+        for i in 0..m {
+            let b = basis[i];
+            if obj[b].abs() > 0.0 {
+                let coef = obj[b];
+                for j in 0..=total {
+                    obj[j] -= coef * t[i][j];
+                }
+            }
+        }
+        run_simplex_bounded(&mut t, &mut obj, &mut basis, art_start, rhs_col)?;
+
+        let mut x = vec![0.0f64; n];
+        for i in 0..m {
+            if basis[i] < n {
+                x[basis[i]] = t[i][rhs_col];
+            }
+        }
+        let objective = self.objective.iter().zip(&x).map(|(c, v)| c * v).sum();
+        Ok(LpSolution { objective, x })
+    }
+}
+
+/// Simplex over all columns `< limit` (phase 1 uses every column).
+fn run_simplex(
+    t: &mut [Vec<f64>],
+    obj: &mut [f64],
+    basis: &mut [usize],
+    limit: usize,
+    rhs_col: usize,
+) -> Result<(), LpError> {
+    run_simplex_bounded(t, obj, basis, limit, rhs_col)
+}
+
+/// Simplex restricted to entering columns `< limit`.
+fn run_simplex_bounded(
+    t: &mut [Vec<f64>],
+    obj: &mut [f64],
+    basis: &mut [usize],
+    limit: usize,
+    rhs_col: usize,
+) -> Result<(), LpError> {
+    let m = t.len();
+    let max_iters = 50 * (m + limit).max(100);
+    for iter in 0..max_iters {
+        // Entering column: Dantzig rule normally, Bland when stalling.
+        let bland = iter > max_iters / 2;
+        let mut enter: Option<usize> = None;
+        if bland {
+            enter = (0..limit).find(|&j| obj[j] > EPS);
+        } else {
+            let mut best = EPS;
+            for (j, &o) in obj.iter().enumerate().take(limit) {
+                if o > best {
+                    best = o;
+                    enter = Some(j);
+                }
+            }
+        }
+        let Some(e) = enter else { return Ok(()) };
+
+        // Ratio test (Bland tie-break on basis index).
+        let mut leave: Option<usize> = None;
+        let mut best_ratio = f64::INFINITY;
+        for i in 0..m {
+            if t[i][e] > EPS {
+                let r = t[i][rhs_col] / t[i][e];
+                if r < best_ratio - EPS
+                    || (r < best_ratio + EPS
+                        && leave.map(|l| basis[i] < basis[l]).unwrap_or(false))
+                {
+                    best_ratio = r;
+                    leave = Some(i);
+                }
+            }
+        }
+        let Some(l) = leave else { return Err(LpError::Unbounded) };
+        pivot(t, obj, basis, l, e, rhs_col);
+    }
+    Err(LpError::IterLimit)
+}
+
+fn pivot(
+    t: &mut [Vec<f64>],
+    obj: &mut [f64],
+    basis: &mut [usize],
+    row: usize,
+    col: usize,
+    rhs_col: usize,
+) {
+    let m = t.len();
+    let p = t[row][col];
+    debug_assert!(p.abs() > EPS);
+    for j in 0..=rhs_col {
+        t[row][j] /= p;
+    }
+    for i in 0..m {
+        if i != row && t[i][col].abs() > EPS {
+            let f = t[i][col];
+            for j in 0..=rhs_col {
+                t[i][j] -= f * t[row][j];
+            }
+            t[i][col] = 0.0;
+        }
+    }
+    if obj[col].abs() > EPS {
+        let f = obj[col];
+        for j in 0..=rhs_col {
+            obj[j] -= f * t[row][j];
+        }
+        obj[col] = 0.0;
+    }
+    basis[row] = col;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: f64, b: f64) {
+        assert!((a - b).abs() < 1e-6, "{a} != {b}");
+    }
+
+    #[test]
+    fn basic_max() {
+        // max 3x + 2y s.t. x + y <= 4, x + 3y <= 6 => x=4, y=0, obj=12
+        let mut lp = Lp::new(2);
+        lp.objective = vec![3.0, 2.0];
+        lp.constrain(vec![1.0, 1.0], Cmp::Le, 4.0);
+        lp.constrain(vec![1.0, 3.0], Cmp::Le, 6.0);
+        let s = lp.solve().unwrap();
+        assert_close(s.objective, 12.0);
+        assert_close(s.x[0], 4.0);
+    }
+
+    #[test]
+    fn with_equality() {
+        // max x + y s.t. x + y = 3, x <= 2 => obj = 3
+        let mut lp = Lp::new(2);
+        lp.objective = vec![1.0, 1.0];
+        lp.constrain(vec![1.0, 1.0], Cmp::Eq, 3.0);
+        lp.constrain(vec![1.0, 0.0], Cmp::Le, 2.0);
+        let s = lp.solve().unwrap();
+        assert_close(s.objective, 3.0);
+        assert!(s.x[0] <= 2.0 + 1e-9);
+    }
+
+    #[test]
+    fn with_ge() {
+        // max -x s.t. x >= 5 => x = 5
+        let mut lp = Lp::new(1);
+        lp.objective = vec![-1.0];
+        lp.constrain(vec![1.0], Cmp::Ge, 5.0);
+        let s = lp.solve().unwrap();
+        assert_close(s.x[0], 5.0);
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        let mut lp = Lp::new(1);
+        lp.objective = vec![1.0];
+        lp.constrain(vec![1.0], Cmp::Le, 1.0);
+        lp.constrain(vec![1.0], Cmp::Ge, 2.0);
+        assert_eq!(lp.solve().unwrap_err(), LpError::Infeasible);
+    }
+
+    #[test]
+    fn unbounded_detected() {
+        let mut lp = Lp::new(2);
+        lp.objective = vec![1.0, 0.0];
+        lp.constrain(vec![0.0, 1.0], Cmp::Le, 1.0);
+        assert_eq!(lp.solve().unwrap_err(), LpError::Unbounded);
+    }
+
+    #[test]
+    fn negative_rhs_normalized() {
+        // max -x - y s.t. -x - y <= -2 (i.e. x + y >= 2) => obj = -2
+        let mut lp = Lp::new(2);
+        lp.objective = vec![-1.0, -1.0];
+        lp.constrain(vec![-1.0, -1.0], Cmp::Le, -2.0);
+        let s = lp.solve().unwrap();
+        assert_close(s.objective, -2.0);
+    }
+
+    #[test]
+    fn degenerate_equalities() {
+        // Redundant equality rows should not break phase 1.
+        let mut lp = Lp::new(2);
+        lp.objective = vec![1.0, 1.0];
+        lp.constrain(vec![1.0, 0.0], Cmp::Eq, 1.0);
+        lp.constrain(vec![2.0, 0.0], Cmp::Eq, 2.0);
+        lp.constrain(vec![0.0, 1.0], Cmp::Le, 3.0);
+        let s = lp.solve().unwrap();
+        assert_close(s.objective, 4.0);
+    }
+
+    #[test]
+    fn larger_random_lp_feasibility() {
+        // Random LPs: verify the returned point satisfies all constraints
+        // and is no worse than the all-zeros point.
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::new(77);
+        for _ in 0..20 {
+            let n = 1 + rng.below(8);
+            let m = 1 + rng.below(8);
+            let mut lp = Lp::new(n);
+            for c in lp.objective.iter_mut() {
+                *c = rng.uniform(-1.0, 1.0);
+            }
+            for _ in 0..m {
+                let coeffs: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 1.0)).collect();
+                lp.constrain(coeffs, Cmp::Le, rng.uniform(0.5, 4.0));
+            }
+            let s = lp.solve().unwrap();
+            for (coeffs, _, rhs) in &lp.rows {
+                let lhs: f64 = coeffs.iter().zip(&s.x).map(|(a, b)| a * b).sum();
+                assert!(lhs <= rhs + 1e-6, "violated: {lhs} > {rhs}");
+            }
+            assert!(s.objective >= -1e-9);
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! WAN substrate: the inter-datacenter network model Terra optimizes over.
+//!
+//! The paper models the WAN as a directed graph `G = (V, E)` where nodes are
+//! datacenters and a logical link `(u, v)` aggregates all physical links
+//! between `u` and `v` with their cumulative bandwidth (§3.1). This module
+//! provides the graph type, the three evaluation topologies (SWAN, G-Scale,
+//! AT&T), geographic latencies, gravity-model capacity estimation, k-shortest
+//! path computation (Yen's algorithm), and the WAN event model (link
+//! failures / bandwidth fluctuations).
+
+pub mod paths;
+pub mod topologies;
+pub mod topology;
+
+pub use topology::{EdgeId, LinkEvent, NodeId, Wan};
+pub use paths::Path;

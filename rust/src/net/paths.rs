@@ -1,0 +1,311 @@
+//! Shortest-path machinery: Dijkstra and Yen's k-shortest loopless paths.
+//!
+//! Terra restricts each FlowGroup to the k shortest paths between its
+//! datacenter pair (k = 15 by default, §4.3) and re-computes the viable path
+//! sets when the WAN changes (§4.4).
+
+use super::topology::{EdgeId, NodeId, Wan};
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// A loopless path: edge ids plus the summed latency metric.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Path {
+    pub edges: Vec<EdgeId>,
+    pub latency_ms: f64,
+}
+
+impl Path {
+    pub fn nodes(&self, wan: &Wan) -> Vec<NodeId> {
+        let mut ns = Vec::with_capacity(self.edges.len() + 1);
+        if let Some(&e0) = self.edges.first() {
+            ns.push(wan.link(e0).src);
+        }
+        for &e in &self.edges {
+            ns.push(wan.link(e).dst);
+        }
+        ns
+    }
+
+    /// Bottleneck available capacity along the path.
+    pub fn bottleneck(&self, wan: &Wan) -> f64 {
+        self.edges.iter().map(|&e| wan.link(e).avail()).fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn hops(&self) -> usize {
+        self.edges.len()
+    }
+}
+
+#[derive(PartialEq)]
+struct HeapEntry {
+    dist: f64,
+    node: NodeId,
+}
+
+impl Eq for HeapEntry {}
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap on distance.
+        other.dist.partial_cmp(&self.dist).unwrap_or(Ordering::Equal)
+    }
+}
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Dijkstra shortest path by latency over up links, with optional banned
+/// edges/nodes (used by Yen's spur computation). Returns `None` when `dst`
+/// is unreachable.
+pub fn dijkstra(
+    wan: &Wan,
+    src: NodeId,
+    dst: NodeId,
+    banned_edges: &[bool],
+    banned_nodes: &[bool],
+) -> Option<Path> {
+    let n = wan.num_nodes();
+    let mut dist = vec![f64::INFINITY; n];
+    let mut prev_edge: Vec<Option<EdgeId>> = vec![None; n];
+    let mut heap = BinaryHeap::new();
+    dist[src] = 0.0;
+    heap.push(HeapEntry { dist: 0.0, node: src });
+    while let Some(HeapEntry { dist: d, node: u }) = heap.pop() {
+        if u == dst {
+            break;
+        }
+        if d > dist[u] {
+            continue;
+        }
+        for &e in wan.out_edges(u) {
+            let l = wan.link(e);
+            if !l.up || l.avail() <= 0.0 || banned_edges.get(e).copied().unwrap_or(false) {
+                continue;
+            }
+            let v = l.dst;
+            if banned_nodes.get(v).copied().unwrap_or(false) {
+                continue;
+            }
+            let nd = d + l.latency_ms;
+            if nd < dist[v] - 1e-12 {
+                dist[v] = nd;
+                prev_edge[v] = Some(e);
+                heap.push(HeapEntry { dist: nd, node: v });
+            }
+        }
+    }
+    if dist[dst].is_infinite() {
+        return None;
+    }
+    let mut edges = Vec::new();
+    let mut cur = dst;
+    while cur != src {
+        let e = prev_edge[cur]?;
+        edges.push(e);
+        cur = wan.link(e).src;
+    }
+    edges.reverse();
+    Some(Path { edges, latency_ms: dist[dst] })
+}
+
+/// Yen's algorithm: up to `k` loopless shortest paths from `src` to `dst`
+/// ordered by latency. Returns fewer when the graph has fewer distinct paths.
+pub fn k_shortest_paths(wan: &Wan, src: NodeId, dst: NodeId, k: usize) -> Vec<Path> {
+    if src == dst || k == 0 {
+        return Vec::new();
+    }
+    let no_edges = vec![false; wan.num_edges()];
+    let no_nodes = vec![false; wan.num_nodes()];
+    let first = match dijkstra(wan, src, dst, &no_edges, &no_nodes) {
+        Some(p) => p,
+        None => return Vec::new(),
+    };
+    let mut found = vec![first];
+    let mut candidates: Vec<Path> = Vec::new();
+    for _ in 1..k {
+        let last = found.last().unwrap().clone();
+        let last_nodes = last.nodes(wan);
+        // Spur from each node of the previous path.
+        for i in 0..last.edges.len() {
+            let spur_node = last_nodes[i];
+            let root_edges = &last.edges[..i];
+            let mut banned_edges = vec![false; wan.num_edges()];
+            // Ban edges that would recreate an already-found path with the
+            // same root.
+            for p in found.iter().chain(candidates.iter()) {
+                if p.edges.len() > i && p.edges[..i] == *root_edges {
+                    banned_edges[p.edges[i]] = true;
+                }
+            }
+            // Ban root nodes (looplessness).
+            let mut banned_nodes = vec![false; wan.num_nodes()];
+            for &nd in &last_nodes[..i] {
+                banned_nodes[nd] = true;
+            }
+            if let Some(spur) = dijkstra(wan, spur_node, dst, &banned_edges, &banned_nodes) {
+                let mut edges = root_edges.to_vec();
+                edges.extend(&spur.edges);
+                let latency_ms: f64 = edges.iter().map(|&e| wan.link(e).latency_ms).sum();
+                let cand = Path { edges, latency_ms };
+                if !found.contains(&cand) && !candidates.contains(&cand) {
+                    candidates.push(cand);
+                }
+            }
+        }
+        if candidates.is_empty() {
+            break;
+        }
+        // Pop the best candidate.
+        let best = candidates
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.latency_ms.partial_cmp(&b.1.latency_ms).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        found.push(candidates.swap_remove(best));
+    }
+    found
+}
+
+/// Path sets for every ordered datacenter pair: `paths[u][v]` holds up to `k`
+/// paths. Recomputed on topology changes (§4.4).
+#[derive(Clone, Debug, Default)]
+pub struct PathSet {
+    pub k: usize,
+    pub paths: Vec<Vec<Vec<Path>>>,
+}
+
+impl PathSet {
+    pub fn compute(wan: &Wan, k: usize) -> PathSet {
+        let n = wan.num_nodes();
+        let mut paths = vec![vec![Vec::new(); n]; n];
+        for u in 0..n {
+            for (v, slot) in paths[u].iter_mut().enumerate() {
+                if u != v {
+                    *slot = k_shortest_paths(wan, u, v, k);
+                }
+            }
+        }
+        PathSet { k, paths }
+    }
+
+    pub fn get(&self, u: NodeId, v: NodeId) -> &[Path] {
+        &self.paths[u][v]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Fig 1a-style topology: A, B, C fully meshed.
+    fn fig1a() -> Wan {
+        let mut w = Wan::new();
+        let a = w.add_node("A", 0.0, 0.0);
+        let b = w.add_node("B", 0.0, 1.0);
+        let c = w.add_node("C", 1.0, 0.0);
+        w.add_link(a, b, 10.0, Some(1.0));
+        w.add_link(b, c, 10.0, Some(1.0));
+        w.add_link(a, c, 10.0, Some(1.0));
+        w
+    }
+
+    #[test]
+    fn dijkstra_direct() {
+        let w = fig1a();
+        let p = dijkstra(&w, 0, 1, &vec![false; 6], &vec![false; 3]).unwrap();
+        assert_eq!(p.hops(), 1);
+        assert!((p.latency_ms - 1.0).abs() < 1e-9);
+        assert_eq!(p.nodes(&w), vec![0, 1]);
+    }
+
+    #[test]
+    fn dijkstra_respects_down_links() {
+        let mut w = fig1a();
+        w.apply_event(&crate::net::LinkEvent::Fail(0, 1));
+        let p = dijkstra(&w, 0, 1, &vec![false; 6], &vec![false; 3]).unwrap();
+        assert_eq!(p.hops(), 2); // A -> C -> B
+        assert_eq!(p.nodes(&w), vec![0, 2, 1]);
+    }
+
+    #[test]
+    fn yen_finds_both_paths() {
+        let w = fig1a();
+        let ps = k_shortest_paths(&w, 0, 1, 5);
+        assert_eq!(ps.len(), 2); // direct + via C; no more loopless options
+        assert_eq!(ps[0].hops(), 1);
+        assert_eq!(ps[1].hops(), 2);
+        assert!(ps[0].latency_ms <= ps[1].latency_ms);
+    }
+
+    #[test]
+    fn yen_k1_is_dijkstra() {
+        let w = fig1a();
+        let ps = k_shortest_paths(&w, 0, 2, 1);
+        assert_eq!(ps.len(), 1);
+        assert_eq!(ps[0].hops(), 1);
+    }
+
+    #[test]
+    fn yen_on_square_with_diagonal() {
+        // 4-node ring + diagonal gives >= 3 loopless A->C paths.
+        let mut w = Wan::new();
+        for (i, name) in ["A", "B", "C", "D"].iter().enumerate() {
+            w.add_node(name, 0.0, i as f64);
+        }
+        w.add_link(0, 1, 10.0, Some(1.0));
+        w.add_link(1, 2, 10.0, Some(1.0));
+        w.add_link(2, 3, 10.0, Some(1.0));
+        w.add_link(3, 0, 10.0, Some(1.0));
+        w.add_link(0, 2, 10.0, Some(5.0)); // slow diagonal
+        let ps = k_shortest_paths(&w, 0, 2, 10);
+        assert_eq!(ps.len(), 3);
+        // paths sorted by latency: A-B-C (2), A-D-C (2), A-C (5)
+        assert!(ps[0].latency_ms <= ps[1].latency_ms && ps[1].latency_ms <= ps[2].latency_ms);
+        assert_eq!(ps[2].hops(), 1);
+        // All loopless.
+        for p in &ps {
+            let nodes = p.nodes(&w);
+            let mut dedup = nodes.clone();
+            dedup.sort_unstable();
+            dedup.dedup();
+            assert_eq!(dedup.len(), nodes.len(), "loop in {nodes:?}");
+        }
+    }
+
+    #[test]
+    fn pathset_covers_all_pairs() {
+        let w = fig1a();
+        let ps = PathSet::compute(&w, 3);
+        for u in 0..3 {
+            for v in 0..3 {
+                if u != v {
+                    assert!(!ps.get(u, v).is_empty());
+                }
+            }
+        }
+        assert!(ps.get(1, 1).is_empty());
+    }
+
+    #[test]
+    fn unreachable_returns_empty() {
+        let mut w = Wan::new();
+        w.add_node("A", 0.0, 0.0);
+        w.add_node("B", 0.0, 1.0);
+        assert!(k_shortest_paths(&w, 0, 1, 3).is_empty());
+    }
+
+    #[test]
+    fn path_bottleneck() {
+        let mut w = Wan::new();
+        let a = w.add_node("A", 0.0, 0.0);
+        let b = w.add_node("B", 0.0, 1.0);
+        let c = w.add_node("C", 0.0, 2.0);
+        w.add_link(a, b, 10.0, Some(1.0));
+        w.add_link(b, c, 3.0, Some(1.0));
+        let p = dijkstra(&w, 0, 2, &vec![false; 4], &vec![false; 3]).unwrap();
+        assert!((p.bottleneck(&w) - 3.0).abs() < 1e-9);
+    }
+}

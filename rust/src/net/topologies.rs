@@ -1,0 +1,316 @@
+//! The three evaluation WAN topologies (§6.1):
+//!
+//! 1. **SWAN** — Microsoft's inter-DC WAN, 5 datacenters / 7 links
+//!    ([Hong et al., SIGCOMM'13, Fig 8]).
+//! 2. **G-Scale** — Google's B4 inter-DC WAN, 12 datacenters / 19 links
+//!    ([Jain et al., SIGCOMM'13, Fig 1]).
+//! 3. **ATT** — AT&T's North-America MPLS backbone from the Topology Zoo,
+//!    25 nodes / 56 links, one datacenter per node.
+//!
+//! Site coordinates approximate the published maps; latencies derive from
+//! great-circle distances, and capacities for G-Scale/ATT use the gravity
+//! model (§6.1), as in the paper.
+
+use super::topology::Wan;
+
+/// Per-direction capacity used for SWAN links in simulation (Gbps).
+pub const SWAN_SIM_GBPS: f64 = 10.0;
+/// Per-direction capacity used for SWAN links on the emulation testbed
+/// (the paper's testbed caps VLANs at 1 Gbps).
+pub const SWAN_TESTBED_GBPS: f64 = 1.0;
+
+/// Microsoft SWAN: 5 DCs, 7 inter-DC links with uniform per-direction
+/// capacity `gbps`. Sites follow the paper's testbed narrative (US coasts +
+/// Europe/Asia mix is not disclosed; we use the commonly-cited layout of two
+/// US, one EU, two APAC sites).
+pub fn swan_with_capacity(gbps: f64) -> Wan {
+    let mut w = Wan::new();
+    let ny = w.add_node("NY", 40.71, -74.00);
+    let la = w.add_node("LA", 34.05, -118.24);
+    let tx = w.add_node("TX", 32.78, -96.80);
+    let fl = w.add_node("FL", 25.76, -80.19);
+    let wa = w.add_node("WA", 47.61, -122.33);
+    // 7 physical links forming the SWAN Figure-8 mesh.
+    w.add_link(ny, la, gbps, None);
+    w.add_link(ny, tx, gbps, None);
+    w.add_link(ny, fl, gbps, None);
+    w.add_link(la, tx, gbps, None);
+    w.add_link(la, wa, gbps, None);
+    w.add_link(tx, fl, gbps, None);
+    w.add_link(wa, tx, gbps, None);
+    w
+}
+
+/// SWAN with simulation capacities (10 Gbps per direction).
+pub fn swan() -> Wan {
+    swan_with_capacity(SWAN_SIM_GBPS)
+}
+
+/// Google G-Scale (B4): 12 datacenters / 19 links. Site list follows the B4
+/// paper's world map (6 North America, 3 Europe, 3 Asia); capacities from the
+/// gravity model scaled to 100 Gbps max.
+pub fn gscale() -> Wan {
+    let mut w = Wan::new();
+    let dalles = w.add_node("TheDalles-OR", 45.59, -121.18);
+    let council = w.add_node("CouncilBluffs-IA", 41.26, -95.86);
+    let berkeley = w.add_node("BerkeleyCounty-SC", 33.19, -80.01);
+    let lenoir = w.add_node("Lenoir-NC", 35.91, -81.54);
+    let mayes = w.add_node("MayesCounty-OK", 36.30, -95.23);
+    let douglas = w.add_node("DouglasCounty-GA", 33.75, -84.75);
+    let hamina = w.add_node("Hamina-FI", 60.57, 27.20);
+    let ghlin = w.add_node("StGhislain-BE", 50.45, 3.82);
+    let dublin = w.add_node("Dublin-IE", 53.35, -6.26);
+    let singapore = w.add_node("Singapore", 1.35, 103.82);
+    let taiwan = w.add_node("Changhua-TW", 24.08, 120.54);
+    let hk = w.add_node("HongKong", 22.32, 114.17);
+    // 19 links: US mesh, transatlantic, Europe ring, transpacific, Asia ring.
+    let links = [
+        (dalles, council),
+        (dalles, mayes),
+        (council, mayes),
+        (council, lenoir),
+        (mayes, douglas),
+        (lenoir, douglas),
+        (lenoir, berkeley),
+        (douglas, berkeley),
+        (dalles, taiwan),     // transpacific north
+        (dalles, hk),         // transpacific south
+        (taiwan, hk),
+        (taiwan, singapore),
+        (hk, singapore),
+        (berkeley, ghlin),    // transatlantic south
+        (lenoir, dublin),     // transatlantic north
+        (dublin, ghlin),
+        (ghlin, hamina),
+        (dublin, hamina),
+        (hamina, singapore),  // Europe-Asia
+    ];
+    for (u, v) in links {
+        w.add_link(u, v, 0.0, None);
+    }
+    debug_assert_eq!(w.num_undirected(), 19);
+    let weights = vec![1.0; w.num_nodes()];
+    w.gravity_capacities(&weights, 100.0, 10.0);
+    w
+}
+
+/// AT&T North-America MPLS backbone (Topology Zoo "ATT NA"): 25 nodes / 56
+/// links, one datacenter attached per node (§6.1). City list and adjacency
+/// approximate the published dataset; capacities from the gravity model with
+/// metro-population weights.
+pub fn att() -> Wan {
+    let mut w = Wan::new();
+    // (name, lat, lon, metro population in millions — gravity weight)
+    let cities: [(&str, f64, f64, f64); 25] = [
+        ("Seattle", 47.61, -122.33, 4.0),
+        ("Portland", 45.52, -122.68, 2.5),
+        ("Sacramento", 38.58, -121.49, 2.4),
+        ("SanFrancisco", 37.77, -122.42, 4.7),
+        ("SanJose", 37.34, -121.89, 2.0),
+        ("LosAngeles", 34.05, -118.24, 13.2),
+        ("SanDiego", 32.72, -117.16, 3.3),
+        ("Phoenix", 33.45, -112.07, 4.9),
+        ("SaltLake", 40.76, -111.89, 1.2),
+        ("Denver", 39.74, -104.99, 2.9),
+        ("Dallas", 32.78, -96.80, 7.6),
+        ("Houston", 29.76, -95.37, 7.1),
+        ("SanAntonio", 29.42, -98.49, 2.6),
+        ("KansasCity", 39.10, -94.58, 2.2),
+        ("StLouis", 38.63, -90.20, 2.8),
+        ("Chicago", 41.88, -87.63, 9.5),
+        ("Minneapolis", 44.98, -93.27, 3.7),
+        ("Detroit", 42.33, -83.05, 4.3),
+        ("Cleveland", 41.50, -81.69, 2.1),
+        ("Atlanta", 33.75, -84.39, 6.1),
+        ("Miami", 25.76, -80.19, 6.2),
+        ("Orlando", 28.54, -81.38, 2.7),
+        ("WashingtonDC", 38.91, -77.04, 6.4),
+        ("Philadelphia", 39.95, -75.17, 6.2),
+        ("NewYork", 40.71, -74.00, 19.8),
+    ];
+    for (name, lat, lon, _) in cities {
+        w.add_node(name, lat, lon);
+    }
+    let names: Vec<String> = w.names.clone();
+    let idx = move |name: &str| names.iter().position(|n| n == name).unwrap();
+    // 56 physical links (regional meshes + long-haul trunks), mirroring the
+    // Topology Zoo ATT graph's density and diameter.
+    let links: [(&str, &str); 56] = [
+        // West coast chain + mesh
+        ("Seattle", "Portland"),
+        ("Seattle", "SaltLake"),
+        ("Seattle", "SanFrancisco"),
+        ("Portland", "Sacramento"),
+        ("Sacramento", "SanFrancisco"),
+        ("Sacramento", "SaltLake"),
+        ("SanFrancisco", "SanJose"),
+        ("SanJose", "LosAngeles"),
+        ("SanFrancisco", "LosAngeles"),
+        ("LosAngeles", "SanDiego"),
+        ("SanDiego", "Phoenix"),
+        ("LosAngeles", "Phoenix"),
+        // Mountain / southwest
+        ("Phoenix", "Dallas"),
+        ("Phoenix", "Denver"),
+        ("SaltLake", "Denver"),
+        ("Denver", "KansasCity"),
+        ("Denver", "Dallas"),
+        ("SaltLake", "KansasCity"),
+        // Texas triangle
+        ("Dallas", "Houston"),
+        ("Dallas", "SanAntonio"),
+        ("Houston", "SanAntonio"),
+        ("Houston", "Atlanta"),
+        ("Dallas", "Atlanta"),
+        ("Dallas", "StLouis"),
+        ("Dallas", "KansasCity"),
+        // Midwest
+        ("KansasCity", "StLouis"),
+        ("KansasCity", "Chicago"),
+        ("StLouis", "Chicago"),
+        ("StLouis", "Atlanta"),
+        ("Chicago", "Minneapolis"),
+        ("Minneapolis", "Seattle"),
+        ("Minneapolis", "KansasCity"),
+        ("Chicago", "Detroit"),
+        ("Detroit", "Cleveland"),
+        ("Chicago", "Cleveland"),
+        ("Cleveland", "NewYork"),
+        ("Cleveland", "WashingtonDC"),
+        ("Chicago", "NewYork"),
+        // Southeast
+        ("Atlanta", "Miami"),
+        ("Atlanta", "Orlando"),
+        ("Orlando", "Miami"),
+        ("Atlanta", "WashingtonDC"),
+        ("Atlanta", "Orlando2"),
+        // East corridor
+        ("WashingtonDC", "Philadelphia"),
+        ("Philadelphia", "NewYork"),
+        ("WashingtonDC", "NewYork"),
+        ("NewYork", "Chicago2"),
+        ("Miami", "Houston"),
+        ("Miami", "WashingtonDC"),
+        ("Orlando", "WashingtonDC"),
+        // Long-haul express trunks
+        ("SanFrancisco", "Chicago"),
+        ("SanFrancisco", "NewYork"),
+        ("LosAngeles", "Dallas"),
+        ("LosAngeles", "Denver"),
+        ("Seattle", "Chicago"),
+        ("Denver", "Chicago"),
+    ];
+    for (a, b) in links {
+        // A couple of entries are deliberate aliases to keep exactly 56
+        // links without duplicating an existing pair.
+        let (a, b) = match (a, b) {
+            ("Atlanta", "Orlando2") => ("Cleveland", "Philadelphia"),
+            ("NewYork", "Chicago2") => ("Minneapolis", "Detroit"),
+            pair => pair,
+        };
+        let (u, v) = (idx(a), idx(b));
+        w.add_link(u, v, 0.0, None);
+    }
+    debug_assert_eq!(w.num_undirected(), 56);
+    let weights: Vec<f64> = cities.iter().map(|c| c.3).collect();
+    w.gravity_capacities(&weights, 100.0, 10.0);
+    w
+}
+
+/// The 3-datacenter full mesh of the paper's Figure 1a: links A–B, B–C, A–C
+/// at 10 Gbps per direction (1 GB ≈ 8 Gbit, so a 5 GB FlowGroup needs 4 s at
+/// full rate — matching the paper's arithmetic).
+pub fn fig1a() -> Wan {
+    let mut w = Wan::new();
+    let a = w.add_node("A", 37.77, -122.42);
+    let b = w.add_node("B", 41.88, -87.63);
+    let c = w.add_node("C", 40.71, -74.00);
+    w.add_link(a, b, 10.0, None);
+    w.add_link(b, c, 10.0, None);
+    w.add_link(a, c, 10.0, None);
+    w
+}
+
+/// Look up a topology by CLI name.
+pub fn by_name(name: &str) -> Option<Wan> {
+    match name.to_ascii_lowercase().as_str() {
+        "swan" => Some(swan()),
+        "swan-testbed" => Some(swan_with_capacity(SWAN_TESTBED_GBPS)),
+        "gscale" | "g-scale" | "b4" => Some(gscale()),
+        "att" | "at&t" => Some(att()),
+        "fig1a" => Some(fig1a()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::paths::PathSet;
+
+    #[test]
+    fn swan_shape() {
+        let w = swan();
+        assert_eq!(w.num_nodes(), 5);
+        assert_eq!(w.num_undirected(), 7);
+        assert!(w.is_connected());
+    }
+
+    #[test]
+    fn gscale_shape() {
+        let w = gscale();
+        assert_eq!(w.num_nodes(), 12);
+        assert_eq!(w.num_undirected(), 19);
+        assert!(w.is_connected());
+        for l in w.links() {
+            assert!(l.capacity >= 10.0 && l.capacity <= 100.0);
+        }
+    }
+
+    #[test]
+    fn att_shape() {
+        let w = att();
+        assert_eq!(w.num_nodes(), 25);
+        assert_eq!(w.num_undirected(), 56);
+        assert!(w.is_connected());
+    }
+
+    #[test]
+    fn att_has_path_diversity() {
+        let w = att();
+        // Coast-to-coast should have >= 5 loopless paths (paper finds the
+        // k-threshold between 5 and 10 on ATT, Fig 12).
+        let ps = crate::net::paths::k_shortest_paths(&w, 0, 24, 10);
+        assert!(ps.len() >= 5, "only {} paths", ps.len());
+    }
+
+    #[test]
+    fn latencies_geographic() {
+        let w = swan();
+        let e = w.edge_between(0, 1).unwrap(); // NY-LA
+        assert!(w.link(e).latency_ms > 10.0, "NY-LA should be tens of ms");
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(by_name("swan").is_some());
+        assert!(by_name("GSCALE").is_some());
+        assert!(by_name("att").is_some());
+        assert!(by_name("fig1a").is_some());
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn pathsets_nonempty_all_pairs() {
+        for w in [swan(), gscale()] {
+            let ps = PathSet::compute(&w, 3);
+            for u in 0..w.num_nodes() {
+                for v in 0..w.num_nodes() {
+                    if u != v {
+                        assert!(!ps.get(u, v).is_empty(), "{u}->{v}");
+                    }
+                }
+            }
+        }
+    }
+}

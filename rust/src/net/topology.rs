@@ -1,0 +1,337 @@
+//! The WAN graph: datacenters (nodes) and directed logical links with
+//! per-direction capacity, geographic latency, and up/down state.
+
+use std::collections::HashMap;
+
+/// Datacenter index.
+pub type NodeId = usize;
+/// Directed-edge index into [`Wan::links`].
+pub type EdgeId = usize;
+
+/// One directed logical link. A physical bidirectional WAN link is modelled
+/// as two directed edges (capacities can diverge under fluctuation events).
+#[derive(Clone, Debug)]
+pub struct Link {
+    pub src: NodeId,
+    pub dst: NodeId,
+    /// Currently available capacity in Gbps (excludes high-priority
+    /// background traffic, per §2.2).
+    pub capacity: f64,
+    /// Nominal capacity in Gbps (recovery restores this).
+    pub base_capacity: f64,
+    /// Propagation latency in milliseconds.
+    pub latency_ms: f64,
+    /// False when the link has failed.
+    pub up: bool,
+}
+
+impl Link {
+    /// Capacity as seen by the optimizer: zero when down.
+    #[inline]
+    pub fn avail(&self) -> f64 {
+        if self.up {
+            self.capacity
+        } else {
+            0.0
+        }
+    }
+}
+
+/// WAN-level events Terra reacts to (§3.1.3 event category 4).
+#[derive(Clone, Debug, PartialEq)]
+pub enum LinkEvent {
+    /// Link (u, v) failed in both directions.
+    Fail(NodeId, NodeId),
+    /// Link (u, v) recovered to base capacity in both directions.
+    Recover(NodeId, NodeId),
+    /// Available bandwidth on the directed edge (u, v) changed to `gbps`
+    /// (e.g. high-priority background traffic ramped up or down).
+    SetBandwidth(NodeId, NodeId, f64),
+}
+
+/// The WAN graph.
+#[derive(Clone, Debug, Default)]
+pub struct Wan {
+    /// Human-readable datacenter names (sites/cities).
+    pub names: Vec<String>,
+    /// `(latitude, longitude)` per node, for geographic latencies and the
+    /// gravity capacity model.
+    pub coords: Vec<(f64, f64)>,
+    links: Vec<Link>,
+    /// Outgoing edge ids per node.
+    out_edges: Vec<Vec<EdgeId>>,
+    /// Incoming edge ids per node.
+    in_edges: Vec<Vec<EdgeId>>,
+    edge_index: HashMap<(NodeId, NodeId), EdgeId>,
+}
+
+impl Wan {
+    pub fn new() -> Wan {
+        Wan::default()
+    }
+
+    /// Add a datacenter. `lat`/`lon` in degrees.
+    pub fn add_node(&mut self, name: &str, lat: f64, lon: f64) -> NodeId {
+        let id = self.names.len();
+        self.names.push(name.to_string());
+        self.coords.push((lat, lon));
+        self.out_edges.push(Vec::new());
+        self.in_edges.push(Vec::new());
+        id
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.links.len()
+    }
+
+    /// Number of undirected physical links.
+    pub fn num_undirected(&self) -> usize {
+        self.links.len() / 2
+    }
+
+    /// Add one directed edge. Prefer [`Wan::add_link`] for physical links.
+    pub fn add_edge(&mut self, src: NodeId, dst: NodeId, capacity: f64, latency_ms: f64) -> EdgeId {
+        assert!(src != dst, "self loops not allowed");
+        assert!(
+            !self.edge_index.contains_key(&(src, dst)),
+            "duplicate logical link {src}->{dst}: aggregate capacities instead"
+        );
+        let id = self.links.len();
+        self.links.push(Link {
+            src,
+            dst,
+            capacity,
+            base_capacity: capacity,
+            latency_ms,
+            up: true,
+        });
+        self.out_edges[src].push(id);
+        self.in_edges[dst].push(id);
+        self.edge_index.insert((src, dst), id);
+        id
+    }
+
+    /// Add a bidirectional physical link as two directed edges with the given
+    /// per-direction capacity. Latency defaults to the geographic distance
+    /// between the endpoints when `latency_ms` is `None`.
+    pub fn add_link(
+        &mut self,
+        u: NodeId,
+        v: NodeId,
+        capacity: f64,
+        latency_ms: Option<f64>,
+    ) -> (EdgeId, EdgeId) {
+        let lat = latency_ms.unwrap_or_else(|| self.geo_latency_ms(u, v));
+        (self.add_edge(u, v, capacity, lat), self.add_edge(v, u, capacity, lat))
+    }
+
+    /// Propagation latency from great-circle distance at ~2/3 c.
+    pub fn geo_latency_ms(&self, u: NodeId, v: NodeId) -> f64 {
+        let km = haversine_km(self.coords[u], self.coords[v]);
+        // 1 ms per 100 km of fiber at 2e5 km/s, floor of 0.5 ms.
+        (km / 200.0).max(0.5)
+    }
+
+    #[inline]
+    pub fn link(&self, e: EdgeId) -> &Link {
+        &self.links[e]
+    }
+
+    pub fn links(&self) -> &[Link] {
+        &self.links
+    }
+
+    pub fn edge_between(&self, u: NodeId, v: NodeId) -> Option<EdgeId> {
+        self.edge_index.get(&(u, v)).copied()
+    }
+
+    pub fn out_edges(&self, u: NodeId) -> &[EdgeId] {
+        &self.out_edges[u]
+    }
+
+    pub fn in_edges(&self, u: NodeId) -> &[EdgeId] {
+        &self.in_edges[u]
+    }
+
+    /// Vector of currently-available capacities, indexed by `EdgeId`.
+    /// This is the optimizer's view of the network.
+    pub fn capacities(&self) -> Vec<f64> {
+        self.links.iter().map(|l| l.avail()).collect()
+    }
+
+    /// Total currently-available capacity (Gbps) over all directed edges.
+    pub fn total_capacity(&self) -> f64 {
+        self.links.iter().map(|l| l.avail()).sum()
+    }
+
+    pub fn set_capacity(&mut self, e: EdgeId, gbps: f64) {
+        self.links[e].capacity = gbps.max(0.0);
+    }
+
+    /// Apply a WAN event; returns the fractional bandwidth change it caused
+    /// on the most-affected edge (used against the ρ re-optimization
+    /// threshold, §3.1.3).
+    pub fn apply_event(&mut self, ev: &LinkEvent) -> f64 {
+        match *ev {
+            LinkEvent::Fail(u, v) => {
+                for (a, b) in [(u, v), (v, u)] {
+                    if let Some(e) = self.edge_between(a, b) {
+                        self.links[e].up = false;
+                    }
+                }
+                1.0
+            }
+            LinkEvent::Recover(u, v) => {
+                for (a, b) in [(u, v), (v, u)] {
+                    if let Some(e) = self.edge_between(a, b) {
+                        self.links[e].up = true;
+                        self.links[e].capacity = self.links[e].base_capacity;
+                    }
+                }
+                1.0
+            }
+            LinkEvent::SetBandwidth(u, v, gbps) => {
+                if let Some(e) = self.edge_between(u, v) {
+                    let old = self.links[e].capacity.max(1e-9);
+                    self.links[e].capacity = gbps.max(0.0);
+                    ((gbps - old) / old).abs()
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    /// Assign capacities with the gravity model (used for G-Scale and ATT,
+    /// §6.1): capacity of (u, v) proportional to `w_u * w_v / dist(u,v)^2`,
+    /// scaled so the largest link gets `max_gbps`, snapped up to the nearest
+    /// 10 Gbps with a floor of `min_gbps`.
+    pub fn gravity_capacities(&mut self, weights: &[f64], max_gbps: f64, min_gbps: f64) {
+        assert_eq!(weights.len(), self.num_nodes());
+        let mut raw: Vec<f64> = Vec::with_capacity(self.links.len());
+        for l in &self.links {
+            let d = haversine_km(self.coords[l.src], self.coords[l.dst]).max(50.0);
+            raw.push(weights[l.src] * weights[l.dst] / (d * d));
+        }
+        let m = raw.iter().cloned().fold(0.0f64, f64::max).max(1e-12);
+        for (l, r) in self.links.iter_mut().zip(&raw) {
+            let c = (r / m * max_gbps).max(min_gbps);
+            let snapped = ((c / 10.0).ceil() * 10.0).min(max_gbps);
+            l.capacity = snapped;
+            l.base_capacity = snapped;
+        }
+    }
+
+    /// True if every node can reach every other node over up links.
+    pub fn is_connected(&self) -> bool {
+        let n = self.num_nodes();
+        if n == 0 {
+            return true;
+        }
+        let mut seen = vec![false; n];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        while let Some(u) = stack.pop() {
+            for &e in &self.out_edges[u] {
+                let l = &self.links[e];
+                if l.up && !seen[l.dst] {
+                    seen[l.dst] = true;
+                    stack.push(l.dst);
+                }
+            }
+        }
+        seen.into_iter().all(|s| s)
+    }
+}
+
+/// Great-circle distance between `(lat, lon)` pairs in km.
+pub fn haversine_km(a: (f64, f64), b: (f64, f64)) -> f64 {
+    let (la1, lo1) = (a.0.to_radians(), a.1.to_radians());
+    let (la2, lo2) = (b.0.to_radians(), b.1.to_radians());
+    let dla = la2 - la1;
+    let dlo = lo2 - lo1;
+    let h = (dla / 2.0).sin().powi(2) + la1.cos() * la2.cos() * (dlo / 2.0).sin().powi(2);
+    2.0 * 6371.0 * h.sqrt().asin()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triangle() -> Wan {
+        let mut w = Wan::new();
+        let a = w.add_node("A", 0.0, 0.0);
+        let b = w.add_node("B", 0.0, 10.0);
+        let c = w.add_node("C", 10.0, 0.0);
+        w.add_link(a, b, 10.0, Some(5.0));
+        w.add_link(b, c, 10.0, Some(5.0));
+        w.add_link(a, c, 5.0, Some(5.0));
+        w
+    }
+
+    #[test]
+    fn builds_directed_pairs() {
+        let w = triangle();
+        assert_eq!(w.num_nodes(), 3);
+        assert_eq!(w.num_edges(), 6);
+        assert_eq!(w.num_undirected(), 3);
+        let e = w.edge_between(0, 1).unwrap();
+        assert_eq!(w.link(e).capacity, 10.0);
+        assert_eq!(w.out_edges(0).len(), 2);
+        assert_eq!(w.in_edges(0).len(), 2);
+    }
+
+    #[test]
+    fn fail_and_recover() {
+        let mut w = triangle();
+        assert!(w.is_connected());
+        w.apply_event(&LinkEvent::Fail(0, 1));
+        let e = w.edge_between(0, 1).unwrap();
+        assert_eq!(w.link(e).avail(), 0.0);
+        assert!(w.is_connected()); // still connected via C
+        w.apply_event(&LinkEvent::Fail(0, 2));
+        assert!(!w.is_connected());
+        w.apply_event(&LinkEvent::Recover(0, 1));
+        assert!(w.is_connected());
+        assert_eq!(w.link(e).avail(), 10.0);
+    }
+
+    #[test]
+    fn bandwidth_fluctuation_fraction() {
+        let mut w = triangle();
+        let frac = w.apply_event(&LinkEvent::SetBandwidth(0, 1, 5.0));
+        assert!((frac - 0.5).abs() < 1e-9);
+        let e = w.edge_between(0, 1).unwrap();
+        assert_eq!(w.link(e).capacity, 5.0);
+        // Reverse direction untouched.
+        let er = w.edge_between(1, 0).unwrap();
+        assert_eq!(w.link(er).capacity, 10.0);
+    }
+
+    #[test]
+    fn haversine_sane() {
+        // New York (40.7,-74.0) to Los Angeles (34.05,-118.25) ~ 3940 km
+        let d = haversine_km((40.7, -74.0), (34.05, -118.25));
+        assert!((3800.0..4100.0).contains(&d), "d={d}");
+    }
+
+    #[test]
+    fn gravity_scales_and_floors() {
+        let mut w = triangle();
+        w.gravity_capacities(&[1.0, 1.0, 1.0], 100.0, 10.0);
+        for l in w.links() {
+            assert!(l.capacity >= 10.0 && l.capacity <= 100.0);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate logical link")]
+    fn rejects_duplicate_edge() {
+        let mut w = triangle();
+        w.add_edge(0, 1, 1.0, 1.0);
+    }
+}

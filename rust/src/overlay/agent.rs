@@ -1,0 +1,392 @@
+//! Terra agent (§4.1, §5.1): per-datacenter daemon that transfers data on
+//! behalf of jobs over persistent multipath TCP connections at
+//! controller-assigned rates.
+//!
+//! Sender side: each outgoing FlowGroup transfer is striped across the k
+//! persistent connections to the destination agent; a token bucket per
+//! ⟨transfer, path⟩ enforces the controller's rate (the `tc` stand-in).
+//! Receiver side: chunks arrive out of order across paths; the agent
+//! buffers them and advances an in-order frontier, delivering only
+//! contiguous data to the application (§5.1 "Handling WAN Latency
+//! Heterogeneity") and reports FlowGroup completion to the controller.
+
+use super::protocol::{self, DataHeader, CHUNK_BYTES};
+use super::BYTES_PER_GBPS;
+use crate::util::json::Json;
+use std::collections::{BTreeMap, HashMap};
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Sender-side state of one outgoing transfer (one FlowGroup direction).
+struct Outgoing {
+    coflow: u64,
+    remaining: u64,
+    offset: u64,
+    /// Token-bucket budget (bytes) and rate (bytes/s) per path.
+    budget: Vec<f64>,
+    rate: Vec<f64>,
+}
+
+/// Receiver-side reassembly state of one incoming transfer.
+struct Incoming {
+    expected: u64,
+    /// In-order frontier: all bytes < frontier delivered to the app.
+    frontier: u64,
+    /// Out-of-order chunks keyed by offset (the paper buffers to a block
+    /// device; we model it in memory).
+    pending: BTreeMap<u64, u32>,
+    /// Total bytes received (for throughput sampling).
+    received: Arc<AtomicU64>,
+}
+
+/// A Terra agent. Spawn with [`Agent::spawn`]; threads run until
+/// [`Agent::shutdown`].
+pub struct Agent {
+    pub dc: usize,
+    pub data_addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+    out: Arc<Mutex<HashMap<(u64, usize), Outgoing>>>,
+    /// Persistent data connections per destination dc: one per path.
+    conns: Arc<Mutex<HashMap<usize, Vec<TcpStream>>>>,
+    /// Receive counters per (coflow, src_dc) for throughput sampling.
+    rx_counters: Arc<Mutex<HashMap<(u64, usize), Arc<AtomicU64>>>>,
+}
+
+impl Agent {
+    /// Start an agent for datacenter `dc`, registering with the controller
+    /// at `controller_addr`.
+    pub fn spawn(dc: usize, controller_addr: std::net::SocketAddr) -> std::io::Result<Agent> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let data_addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let out: Arc<Mutex<HashMap<(u64, usize), Outgoing>>> = Arc::default();
+        let conns: Arc<Mutex<HashMap<usize, Vec<TcpStream>>>> = Arc::default();
+        let rx_counters: Arc<Mutex<HashMap<(u64, usize), Arc<AtomicU64>>>> = Arc::default();
+        let incoming: Arc<Mutex<HashMap<(u64, usize), Incoming>>> = Arc::default();
+
+        // Control channel.
+        let mut ctrl = TcpStream::connect(controller_addr)?;
+        let mut hello = Json::obj();
+        hello
+            .set("op", "hello".into())
+            .set("dc", dc.into())
+            .set("data_addr", data_addr.to_string().into());
+        protocol::write_msg(&mut ctrl, &hello)?;
+        let ctrl_tx = Arc::new(Mutex::new(ctrl.try_clone()?));
+
+        let mut threads = Vec::new();
+
+        // Data listener: accept persistent connections from peers.
+        {
+            let stop = stop.clone();
+            let incoming = incoming.clone();
+            let rx_counters = rx_counters.clone();
+            let ctrl_tx = ctrl_tx.clone();
+            listener.set_nonblocking(true)?;
+            threads.push(std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((s, _)) => {
+                            s.set_nonblocking(false).ok();
+                            let stop = stop.clone();
+                            let incoming = incoming.clone();
+                            let rx_counters = rx_counters.clone();
+                            let ctrl_tx = ctrl_tx.clone();
+                            std::thread::spawn(move || {
+                                recv_loop(s, dc, stop, incoming, rx_counters, ctrl_tx);
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            }));
+        }
+
+        // Control reader: controller commands.
+        {
+            let stop = stop.clone();
+            let out = out.clone();
+            let conns = conns.clone();
+            let incoming = incoming.clone();
+            let rx_counters = rx_counters.clone();
+            ctrl.set_read_timeout(Some(Duration::from_millis(100)))?;
+            threads.push(std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    let msg = match protocol::read_msg_resumable(&mut ctrl, &stop) {
+                        Ok(Some(m)) => m,
+                        _ => break,
+                    };
+                    handle_ctrl(&msg, &out, &conns, &incoming, &rx_counters);
+                }
+            }));
+        }
+
+        // Sender: token-bucket pacing loop.
+        {
+            let stop = stop.clone();
+            let out = out.clone();
+            let conns = conns.clone();
+            threads.push(std::thread::spawn(move || {
+                let mut last = Instant::now();
+                let payload = vec![0u8; CHUNK_BYTES];
+                while !stop.load(Ordering::Relaxed) {
+                    std::thread::sleep(Duration::from_millis(4));
+                    let now = Instant::now();
+                    let dt = now.duration_since(last).as_secs_f64();
+                    last = now;
+                    send_tick(dc, dt, &payload, &out, &conns);
+                }
+            }));
+        }
+
+        Ok(Agent { dc, data_addr, stop, threads, out, conns, rx_counters })
+    }
+
+    /// Bytes received so far for (coflow, src_dc) — throughput sampling for
+    /// the failure case study (Fig 10).
+    pub fn received_bytes(&self, coflow: u64, src_dc: usize) -> u64 {
+        self.rx_counters
+            .lock()
+            .unwrap()
+            .get(&(coflow, src_dc))
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Outstanding bytes still to send from this agent.
+    pub fn backlog(&self) -> u64 {
+        self.out.lock().unwrap().values().map(|o| o.remaining).sum()
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // Close data connections to unblock readers.
+        self.conns.lock().unwrap().clear();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Apply a controller command.
+fn handle_ctrl(
+    msg: &Json,
+    out: &Arc<Mutex<HashMap<(u64, usize), Outgoing>>>,
+    conns: &Arc<Mutex<HashMap<usize, Vec<TcpStream>>>>,
+    incoming: &Arc<Mutex<HashMap<(u64, usize), Incoming>>>,
+    rx_counters: &Arc<Mutex<HashMap<(u64, usize), Arc<AtomicU64>>>>,
+) {
+    match msg.get("op").and_then(|o| o.as_str()) {
+        // Establish persistent connections: one per path to each peer.
+        Some("peers") => {
+            if let Some(arr) = msg.get("peers").and_then(|p| p.as_arr()) {
+                let mut c = conns.lock().unwrap();
+                for peer in arr {
+                    let (Some(dst), Some(addr), Some(k)) = (
+                        peer.get("dc").and_then(|x| x.as_u64()),
+                        peer.get("addr").and_then(|x| x.as_str()),
+                        peer.get("k").and_then(|x| x.as_u64()),
+                    ) else {
+                        continue;
+                    };
+                    let entry = c.entry(dst as usize).or_default();
+                    while entry.len() < k as usize {
+                        match TcpStream::connect(addr) {
+                            Ok(s) => {
+                                s.set_nodelay(true).ok();
+                                entry.push(s);
+                            }
+                            Err(e) => {
+                                log::warn!("agent: connect {addr}: {e}");
+                                break;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        // Start an outgoing transfer.
+        Some("transfer") => {
+            let (Some(coflow), Some(dst), Some(bytes)) = (
+                msg.get("coflow").and_then(|x| x.as_u64()),
+                msg.get("dst").and_then(|x| x.as_u64()),
+                msg.get("bytes").and_then(|x| x.as_u64()),
+            ) else {
+                return;
+            };
+            let k = conns.lock().unwrap().get(&(dst as usize)).map(|v| v.len()).unwrap_or(0);
+            let mut o = out.lock().unwrap();
+            let e = o.entry((coflow, dst as usize)).or_insert(Outgoing {
+                coflow,
+                remaining: 0,
+                offset: 0,
+                budget: vec![0.0; k],
+                rate: vec![0.0; k],
+            });
+            e.remaining += bytes;
+        }
+        // Expect an incoming transfer (receiver side).
+        Some("expect") => {
+            let (Some(coflow), Some(src), Some(bytes)) = (
+                msg.get("coflow").and_then(|x| x.as_u64()),
+                msg.get("src").and_then(|x| x.as_u64()),
+                msg.get("bytes").and_then(|x| x.as_u64()),
+            ) else {
+                return;
+            };
+            let counter = Arc::new(AtomicU64::new(0));
+            rx_counters.lock().unwrap().insert((coflow, src as usize), counter.clone());
+            let mut inc = incoming.lock().unwrap();
+            let e = inc.entry((coflow, src as usize)).or_insert(Incoming {
+                expected: 0,
+                frontier: 0,
+                pending: BTreeMap::new(),
+                received: counter,
+            });
+            e.expected += bytes;
+        }
+        // Update rates for (coflow, dst): one rate per path, Gbps.
+        Some("rates") => {
+            let (Some(coflow), Some(dst), Some(rates)) = (
+                msg.get("coflow").and_then(|x| x.as_u64()),
+                msg.get("dst").and_then(|x| x.as_u64()),
+                msg.get("rates").and_then(|x| x.as_arr()),
+            ) else {
+                return;
+            };
+            let mut o = out.lock().unwrap();
+            if let Some(e) = o.get_mut(&(coflow, dst as usize)) {
+                let k = conns.lock().unwrap().get(&(dst as usize)).map(|v| v.len()).unwrap_or(0);
+                e.rate = rates.iter().map(|r| r.as_f64().unwrap_or(0.0)).collect();
+                e.rate.resize(k, 0.0);
+                if e.budget.len() != k {
+                    e.budget = vec![0.0; k];
+                }
+            }
+        }
+        _ => {}
+    }
+}
+
+/// One pacing tick: move token-bucket budget into sent chunks.
+fn send_tick(
+    src_dc: usize,
+    dt: f64,
+    payload: &[u8],
+    out: &Arc<Mutex<HashMap<(u64, usize), Outgoing>>>,
+    conns: &Arc<Mutex<HashMap<usize, Vec<TcpStream>>>>,
+) {
+    let mut out = out.lock().unwrap();
+    let mut conns = conns.lock().unwrap();
+    for ((_, dst), o) in out.iter_mut() {
+        if o.remaining == 0 {
+            continue;
+        }
+        let Some(streams) = conns.get_mut(dst) else { continue };
+        for (p, stream) in streams.iter_mut().enumerate() {
+            if o.remaining == 0 {
+                break;
+            }
+            let rate_bps = o.rate.get(p).copied().unwrap_or(0.0) * BYTES_PER_GBPS;
+            // Cap the bucket at one tick's worth plus a chunk to avoid
+            // long-idle bursts defeating the shaper.
+            o.budget[p] = (o.budget[p] + rate_bps * dt).min(rate_bps * 0.1 + CHUNK_BYTES as f64);
+            while o.budget[p] >= 1.0 && o.remaining > 0 {
+                let len = (CHUNK_BYTES as u64).min(o.remaining).min(o.budget[p] as u64);
+                if len == 0 {
+                    break;
+                }
+                let hdr = DataHeader {
+                    coflow: o.coflow,
+                    src_dc: src_dc as u32,
+                    offset: o.offset,
+                    len: len as u32,
+                };
+                if stream.write_all(&hdr.encode()).is_err()
+                    || stream.write_all(&payload[..len as usize]).is_err()
+                {
+                    break;
+                }
+                o.offset += len;
+                o.remaining -= len;
+                o.budget[p] -= len as f64;
+            }
+        }
+    }
+    out.retain(|_, o| o.remaining > 0 || o.offset == 0);
+}
+
+/// Receive loop for one persistent data connection.
+fn recv_loop(
+    mut stream: TcpStream,
+    my_dc: usize,
+    stop: Arc<AtomicBool>,
+    incoming: Arc<Mutex<HashMap<(u64, usize), Incoming>>>,
+    rx_counters: Arc<Mutex<HashMap<(u64, usize), Arc<AtomicU64>>>>,
+    ctrl_tx: Arc<Mutex<TcpStream>>,
+) {
+    let mut hdr_buf = [0u8; DataHeader::SIZE];
+    let mut payload = vec![0u8; CHUNK_BYTES];
+    stream.set_read_timeout(Some(Duration::from_millis(100))).ok();
+    while !stop.load(Ordering::Relaxed) {
+        match protocol::read_full(&mut stream, &mut hdr_buf, &stop) {
+            Ok(true) => {}
+            _ => break,
+        }
+        let Ok(hdr) = DataHeader::decode(&hdr_buf) else { break };
+        match protocol::read_full(&mut stream, &mut payload[..hdr.len as usize], &stop) {
+            Ok(true) => {}
+            _ => break,
+        }
+        let key = (hdr.coflow, hdr.src_dc as usize);
+        let mut done = false;
+        {
+            let mut inc = incoming.lock().unwrap();
+            let entry = inc.entry(key).or_insert_with(|| {
+                let counter = Arc::new(AtomicU64::new(0));
+                rx_counters.lock().unwrap().insert(key, counter.clone());
+                Incoming {
+                    expected: u64::MAX,
+                    frontier: 0,
+                    pending: BTreeMap::new(),
+                    received: counter,
+                }
+            });
+            entry.received.fetch_add(hdr.len as u64, Ordering::Relaxed);
+            // In-order delivery: advance the frontier, buffer the rest.
+            if hdr.offset == entry.frontier {
+                entry.frontier += hdr.len as u64;
+                while let Some((&off, &len)) = entry.pending.first_key_value() {
+                    if off == entry.frontier {
+                        entry.frontier += len as u64;
+                        entry.pending.remove(&off);
+                    } else {
+                        break;
+                    }
+                }
+            } else if hdr.offset > entry.frontier {
+                entry.pending.insert(hdr.offset, hdr.len);
+            } // duplicates below the frontier are dropped
+            if entry.frontier >= entry.expected {
+                done = true;
+                inc.remove(&key);
+            }
+        }
+        if done {
+            let mut msg = Json::obj();
+            msg.set("op", "group_done".into())
+                .set("coflow", hdr.coflow.into())
+                .set("src", (hdr.src_dc as u64).into())
+                .set("dst", my_dc.into());
+            let mut tx = ctrl_tx.lock().unwrap();
+            let _ = protocol::write_msg(&mut tx, &msg);
+        }
+    }
+}

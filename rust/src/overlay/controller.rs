@@ -1,0 +1,592 @@
+//! The Terra controller (§4.1): accepts coflow submissions from job
+//! masters, keeps the global WAN + coflow view, runs the scheduling-routing
+//! policy on every event, and pushes ⟨path, rate⟩ vectors to the agents.
+//!
+//! The same [`crate::scheduler::Policy`] implementations drive both this
+//! controller and the flow-level simulator — the paper's §6.1 methodology.
+
+use super::protocol::{self, CoflowStatus, FlowSpec};
+use super::rules::RuleTable;
+use crate::coflow::{Coflow, Flow, CoflowId};
+use crate::net::paths::PathSet;
+use crate::net::{LinkEvent, Wan};
+use crate::scheduler::{CoflowState, NetView, Policy, RoundTrigger};
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::io::ErrorKind;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Convert testbed bytes to policy-layer Gbit so that an emulated 1 Gbps
+/// link moves 1 "Gbit" per second of wall-clock.
+fn bytes_to_gbit(bytes: u64) -> f64 {
+    bytes as f64 / super::BYTES_PER_GBPS
+}
+
+/// Testbed configuration.
+pub struct TestbedConfig {
+    pub wan: Wan,
+    /// Paths per datacenter pair (persistent connections per agent pair).
+    pub k: usize,
+}
+
+struct AgentConn {
+    ctrl: TcpStream,
+    data_addr: String,
+}
+
+struct CoState {
+    groups: Vec<crate::coflow::FlowGroup>,
+    remaining: Vec<f64>,
+    done: Vec<bool>,
+    rates: Vec<Vec<f64>>,
+    submitted: Instant,
+    finished: Option<Instant>,
+    /// Absolute deadline on the controller clock (epoch seconds).
+    deadline_abs: Option<f64>,
+    admitted: bool,
+    total_bytes: u64,
+    last_update: Instant,
+}
+
+struct State {
+    wan: Wan,
+    k: usize,
+    paths: PathSet,
+    policy: Box<dyn Policy>,
+    agents: HashMap<usize, AgentConn>,
+    coflows: HashMap<CoflowId, CoState>,
+    next_id: CoflowId,
+    rules: RuleTable,
+    peers_sent: bool,
+    epoch: Instant,
+}
+
+/// Handle to a running controller (owns its threads).
+pub struct ControllerHandle {
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+    state: Arc<Mutex<State>>,
+}
+
+/// The controller itself (spawn-only API).
+pub struct Controller;
+
+impl Controller {
+    /// Start a controller for `cfg.wan`, expecting one agent per
+    /// datacenter. Returns once the control socket is listening.
+    pub fn spawn(cfg: TestbedConfig, policy: Box<dyn Policy>) -> std::io::Result<ControllerHandle> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let num_nodes = cfg.wan.num_nodes();
+        let paths = PathSet::compute(&cfg.wan, cfg.k);
+        let mut rules = RuleTable::new(num_nodes);
+        rules.install_paths(&cfg.wan, &paths);
+        let state = Arc::new(Mutex::new(State {
+            wan: cfg.wan,
+            k: cfg.k,
+            paths,
+            policy,
+            agents: HashMap::new(),
+            coflows: HashMap::new(),
+            next_id: 1,
+            rules,
+            peers_sent: false,
+            epoch: Instant::now(),
+        }));
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut threads = Vec::new();
+        {
+            let stop = stop.clone();
+            let state = state.clone();
+            threads.push(std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((s, _)) => {
+                            s.set_nodelay(true).ok();
+                            let state = state.clone();
+                            let stop = stop.clone();
+                            std::thread::spawn(move || serve_conn(s, state, stop));
+                        }
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            }));
+        }
+        Ok(ControllerHandle { addr, stop, threads, state })
+    }
+}
+
+impl ControllerHandle {
+    /// Block until all `n` agents registered and the overlay is wired.
+    pub fn wait_ready(&self, n: usize, timeout: Duration) -> bool {
+        let t0 = Instant::now();
+        while t0.elapsed() < timeout {
+            {
+                let st = self.state.lock().unwrap();
+                if st.agents.len() >= n && st.peers_sent {
+                    return true;
+                }
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        false
+    }
+
+    /// Emulated SDN rule statistics (max rules per switch, total updates).
+    pub fn rule_stats(&self) -> (usize, usize) {
+        let st = self.state.lock().unwrap();
+        (st.rules.max_per_switch(), st.rules.updates)
+    }
+
+    /// Inject a WAN event (link failure / recovery / bandwidth change).
+    pub fn inject_wan_event(&self, ev: LinkEvent) {
+        let mut st = self.state.lock().unwrap();
+        let frac = st.wan.apply_event(&ev);
+        let structural = matches!(ev, LinkEvent::Fail(..) | LinkEvent::Recover(..));
+        if structural {
+            st.paths = PathSet::compute(&st.wan, st.k);
+            let (wan, paths) = (st.wan.clone(), st.paths.clone());
+            st.rules.reinstall(&wan, &paths);
+            resend_peers(&mut st);
+            reallocate(&mut st, RoundTrigger::WanChange);
+        } else if frac >= crate::scheduler::DEFAULT_RHO {
+            reallocate(&mut st, RoundTrigger::WanChange);
+        }
+    }
+
+    /// Current total receive rate estimate per coflow is kept agent-side;
+    /// the controller exposes its scheduled rates instead (Fig 10 uses the
+    /// agent counters).
+    pub fn scheduled_rate(&self, id: CoflowId) -> f64 {
+        let st = self.state.lock().unwrap();
+        st.coflows.get(&id).map(|c| c.rates.iter().flatten().sum()).unwrap_or(0.0)
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // Nudge the acceptor.
+        let _ = TcpStream::connect(self.addr);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Serve one inbound connection: the first message decides whether it is an
+/// agent (`hello`) or a job-master client session.
+fn serve_conn(mut s: TcpStream, state: Arc<Mutex<State>>, stop: Arc<AtomicBool>) {
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        let msg = match protocol::read_msg(&mut s) {
+            Ok(Some(m)) => m,
+            _ => return,
+        };
+        let op = msg.get("op").and_then(|o| o.as_str()).unwrap_or("").to_string();
+        match op.as_str() {
+            "hello" => {
+                let (Some(dc), Some(addr)) = (
+                    msg.get("dc").and_then(|x| x.as_u64()),
+                    msg.get("data_addr").and_then(|x| x.as_str()),
+                ) else {
+                    return;
+                };
+                let dc = dc as usize;
+                {
+                    let mut st = state.lock().unwrap();
+                    let ctrl = match s.try_clone() {
+                        Ok(c) => c,
+                        Err(_) => return,
+                    };
+                    st.agents.insert(dc, AgentConn { ctrl, data_addr: addr.to_string() });
+                    if st.agents.len() == st.wan.num_nodes() {
+                        resend_peers(&mut st);
+                        st.peers_sent = true;
+                    }
+                }
+                // Stay on this connection reading agent events.
+                agent_reader(s, state, stop);
+                return;
+            }
+            "submit" => {
+                let reply = handle_submit(&msg, &state);
+                let _ = protocol::write_msg(&mut s, &reply);
+            }
+            "status" => {
+                let id = msg.get("cid").and_then(|x| x.as_u64()).unwrap_or(0);
+                let st = state.lock().unwrap();
+                let status = coflow_status(&st, id);
+                let _ = protocol::write_msg(&mut s, &status.to_json());
+            }
+            "update" => {
+                let reply = handle_update(&msg, &state);
+                let _ = protocol::write_msg(&mut s, &reply);
+            }
+            "wan_event" => {
+                // Client-initiated WAN event injection (testing).
+                if let Some(ev) = parse_event(&msg) {
+                    drop(msg);
+                    let handle_state = state.clone();
+                    let mut st = handle_state.lock().unwrap();
+                    let frac = st.wan.apply_event(&ev);
+                    let structural = matches!(ev, LinkEvent::Fail(..) | LinkEvent::Recover(..));
+                    if structural {
+                        st.paths = PathSet::compute(&st.wan, st.k);
+                        let (wan, paths) = (st.wan.clone(), st.paths.clone());
+                        st.rules.reinstall(&wan, &paths);
+                        resend_peers(&mut st);
+                        reallocate(&mut st, RoundTrigger::WanChange);
+                    } else if frac >= crate::scheduler::DEFAULT_RHO {
+                        reallocate(&mut st, RoundTrigger::WanChange);
+                    }
+                }
+                let mut ok = Json::obj();
+                ok.set("ok", true.into());
+                let _ = protocol::write_msg(&mut s, &ok);
+            }
+            _ => {
+                let mut err = Json::obj();
+                err.set("error", format!("unknown op {op}").into());
+                let _ = protocol::write_msg(&mut s, &err);
+            }
+        }
+    }
+}
+
+fn parse_event(msg: &Json) -> Option<LinkEvent> {
+    let kind = msg.get("kind")?.as_str()?;
+    let u = msg.get("u")?.as_u64()? as usize;
+    let v = msg.get("v")?.as_u64()? as usize;
+    match kind {
+        "fail" => Some(LinkEvent::Fail(u, v)),
+        "recover" => Some(LinkEvent::Recover(u, v)),
+        "bw" => Some(LinkEvent::SetBandwidth(u, v, msg.get("gbps")?.as_f64()?)),
+        _ => None,
+    }
+}
+
+/// Push the peer table (data addresses + connections per path) to agents.
+fn resend_peers(st: &mut State) {
+    let peers: Vec<Json> = st
+        .agents
+        .iter()
+        .map(|(dc, a)| {
+            let mut o = Json::obj();
+            o.set("dc", (*dc).into())
+                .set("addr", a.data_addr.clone().into())
+                .set("k", st.k.into());
+            o
+        })
+        .collect();
+    let mut msg = Json::obj();
+    msg.set("op", "peers".into()).set("peers", Json::Arr(peers));
+    for a in st.agents.values_mut() {
+        let _ = protocol::write_msg(&mut a.ctrl, &msg);
+    }
+}
+
+/// Reader for agent events (group completions).
+fn agent_reader(mut s: TcpStream, state: Arc<Mutex<State>>, stop: Arc<AtomicBool>) {
+    s.set_read_timeout(Some(Duration::from_millis(100))).ok();
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        let msg = match protocol::read_msg_resumable(&mut s, &stop) {
+            Ok(Some(m)) => m,
+            _ => return,
+        };
+        if msg.get("op").and_then(|o| o.as_str()) == Some("group_done") {
+            let (Some(coflow), Some(src), Some(dst)) = (
+                msg.get("coflow").and_then(|x| x.as_u64()),
+                msg.get("src").and_then(|x| x.as_u64()),
+                msg.get("dst").and_then(|x| x.as_u64()),
+            ) else {
+                continue;
+            };
+            let mut st = state.lock().unwrap();
+            let mut coflow_finished = false;
+            if let Some(co) = st.coflows.get_mut(&coflow) {
+                for (gi, g) in co.groups.iter().enumerate() {
+                    if g.src == src as usize && g.dst == dst as usize {
+                        co.done[gi] = true;
+                        co.remaining[gi] = 0.0;
+                    }
+                }
+                if co.done.iter().all(|&d| d) && co.finished.is_none() {
+                    co.finished = Some(Instant::now());
+                    coflow_finished = true;
+                }
+            }
+            let trigger = if coflow_finished {
+                RoundTrigger::CoflowFinish
+            } else {
+                RoundTrigger::FlowGroupFinish
+            };
+            reallocate(&mut st, trigger);
+        }
+    }
+}
+
+fn coflow_status(st: &State, id: CoflowId) -> CoflowStatus {
+    match st.coflows.get(&id) {
+        None => CoflowStatus::Unknown,
+        Some(co) if !co.admitted => CoflowStatus::Rejected,
+        Some(co) => match co.finished {
+            Some(t) => CoflowStatus::Done { cct_s: t.duration_since(co.submitted).as_secs_f64() },
+            None => {
+                let total = co.total_bytes;
+                let remaining: f64 = co.remaining.iter().sum();
+                let delivered = total.saturating_sub(
+                    (remaining * super::BYTES_PER_GBPS) as u64,
+                );
+                CoflowStatus::Running { delivered, total }
+            }
+        },
+    }
+}
+
+fn handle_submit(msg: &Json, state: &Arc<Mutex<State>>) -> Json {
+    let flows: Vec<FlowSpec> = msg
+        .get("flows")
+        .and_then(|f| f.as_arr())
+        .map(|arr| arr.iter().filter_map(FlowSpec::from_json).collect())
+        .unwrap_or_default();
+    let deadline = msg.get("deadline").and_then(|d| d.as_f64());
+    let mut st = state.lock().unwrap();
+    let id = st.next_id;
+    st.next_id += 1;
+
+    let coflow_flows: Vec<Flow> = flows
+        .iter()
+        .map(|f| Flow {
+            id: f.id,
+            src_dc: f.src_dc,
+            dst_dc: f.dst_dc,
+            volume: bytes_to_gbit(f.bytes),
+        })
+        .collect();
+    let mut spec = Coflow::new(id, coflow_flows);
+    if let Some(d) = deadline {
+        spec = spec.with_deadline(d);
+    }
+    let mut cstate = CoflowState::from_coflow(&spec);
+    // Absolute deadline on the controller's clock.
+    let now_s = st.epoch.elapsed().as_secs_f64();
+    cstate.arrival = now_s;
+    let deadline_abs = deadline.map(|d| now_s + d);
+    cstate.deadline = deadline_abs;
+
+    // Admission control (§3.2/§5.2: returns -1 when the deadline cannot be
+    // met).
+    let mut admitted = true;
+    if cstate.deadline.is_some() {
+        let active: Vec<CoflowState> = active_states(&st);
+        // Split-borrow: the policy is a different field from wan/paths.
+        let State { wan, paths, policy, .. } = &mut *st;
+        let net = NetView { wan, paths };
+        admitted = policy.admit(now_s, &cstate, &active, &net);
+    }
+    if !admitted {
+        st.coflows.insert(
+            id,
+            CoState {
+                groups: cstate.groups,
+                remaining: vec![],
+                done: vec![],
+                rates: vec![],
+                submitted: Instant::now(),
+                finished: None,
+                deadline_abs,
+                admitted: false,
+                total_bytes: flows.iter().map(|f| f.bytes).sum(),
+                last_update: Instant::now(),
+            },
+        );
+        let mut reply = Json::obj();
+        reply.set("cid", (-1i64).into());
+        return reply;
+    }
+
+    let groups = cstate.groups.clone();
+    let remaining = cstate.remaining.clone();
+    st.coflows.insert(
+        id,
+        CoState {
+            done: vec![false; groups.len()],
+            rates: vec![Vec::new(); groups.len()],
+            groups,
+            remaining,
+            submitted: Instant::now(),
+            finished: None,
+            deadline_abs,
+            admitted: true,
+            total_bytes: flows.iter().map(|f| f.bytes).sum(),
+            last_update: Instant::now(),
+        },
+    );
+
+    // Wire transfers: receiver expectations first, then sender starts.
+    send_transfer_msgs(&mut st, id, &flows);
+    reallocate(&mut st, RoundTrigger::CoflowArrival);
+    let mut reply = Json::obj();
+    reply.set("cid", id.into());
+    reply
+}
+
+fn handle_update(msg: &Json, state: &Arc<Mutex<State>>) -> Json {
+    let id = msg.get("cid").and_then(|x| x.as_u64()).unwrap_or(0);
+    let flows: Vec<FlowSpec> = msg
+        .get("flows")
+        .and_then(|f| f.as_arr())
+        .map(|arr| arr.iter().filter_map(FlowSpec::from_json).collect())
+        .unwrap_or_default();
+    let mut st = state.lock().unwrap();
+    if !st.coflows.contains_key(&id) {
+        let mut r = Json::obj();
+        r.set("error", "unknown coflow".into());
+        return r;
+    }
+    // Extend existing groups / add new ones (§5.2 updateCoflow).
+    {
+        let co = st.coflows.get_mut(&id).unwrap();
+        for f in &flows {
+            let gbit = bytes_to_gbit(f.bytes);
+            if let Some(gi) =
+                co.groups.iter().position(|g| g.src == f.src_dc && g.dst == f.dst_dc)
+            {
+                co.groups[gi].volume += gbit;
+                co.groups[gi].num_flows += 1;
+                co.remaining[gi] += gbit;
+                co.done[gi] = false;
+            } else {
+                co.groups.push(crate::coflow::FlowGroup {
+                    src: f.src_dc,
+                    dst: f.dst_dc,
+                    volume: gbit,
+                    num_flows: 1,
+                });
+                co.remaining.push(gbit);
+                co.done.push(false);
+                co.rates.push(Vec::new());
+            }
+            co.total_bytes += f.bytes;
+        }
+        co.finished = None;
+    }
+    send_transfer_msgs(&mut st, id, &flows);
+    reallocate(&mut st, RoundTrigger::CoflowArrival);
+    let mut r = Json::obj();
+    r.set("cid", id.into());
+    r
+}
+
+/// Send `expect` to destination agents and `transfer` to source agents.
+fn send_transfer_msgs(st: &mut State, id: CoflowId, flows: &[FlowSpec]) {
+    // Aggregate by (src, dst) — FlowGroup granularity on the wire too.
+    let mut by_pair: HashMap<(usize, usize), u64> = HashMap::new();
+    for f in flows {
+        if f.src_dc != f.dst_dc && f.bytes > 0 {
+            *by_pair.entry((f.src_dc, f.dst_dc)).or_default() += f.bytes;
+        }
+    }
+    for ((src, dst), bytes) in by_pair {
+        if let Some(a) = st.agents.get_mut(&dst) {
+            let mut m = Json::obj();
+            m.set("op", "expect".into())
+                .set("coflow", id.into())
+                .set("src", src.into())
+                .set("bytes", bytes.into());
+            let _ = protocol::write_msg(&mut a.ctrl, &m);
+        }
+        if let Some(a) = st.agents.get_mut(&src) {
+            let mut m = Json::obj();
+            m.set("op", "transfer".into())
+                .set("coflow", id.into())
+                .set("dst", dst.into())
+                .set("bytes", bytes.into());
+            let _ = protocol::write_msg(&mut a.ctrl, &m);
+        }
+    }
+}
+
+/// Build the policy view of all unfinished, admitted coflows, updating
+/// remaining-volume estimates from elapsed time x current rates (the
+/// controller's feedback-loop approximation, §6.4).
+fn active_states(st: &State) -> Vec<CoflowState> {
+    let now = Instant::now();
+    st.coflows
+        .iter()
+        .filter(|(_, c)| c.admitted && c.finished.is_none())
+        .map(|(&id, c)| {
+            let dt = now.duration_since(c.last_update).as_secs_f64();
+            let remaining: Vec<f64> = c
+                .remaining
+                .iter()
+                .enumerate()
+                .map(|(gi, &r)| {
+                    let rate: f64 = c.rates.get(gi).map(|v| v.iter().sum()).unwrap_or(0.0);
+                    (r - rate * dt).max(if c.done[gi] { 0.0 } else { 1e-6 })
+                })
+                .collect();
+            CoflowState {
+                id,
+                arrival: 0.0,
+                deadline: c.deadline_abs,
+                admitted: true,
+                groups: c.groups.clone(),
+                remaining,
+            }
+        })
+        .collect()
+}
+
+/// One scheduling round: run the policy and push rate vectors to agents.
+fn reallocate(st: &mut State, trigger: RoundTrigger) {
+    let now = Instant::now();
+    let active = active_states(st);
+    // Persist the updated remaining estimates.
+    for cs in &active {
+        if let Some(co) = st.coflows.get_mut(&cs.id) {
+            co.remaining = cs.remaining.clone();
+            co.last_update = now;
+        }
+    }
+    let now_s = st.epoch.elapsed().as_secs_f64();
+    let alloc = {
+        // Split-borrow: the policy is a different field from wan/paths.
+        let State { wan, paths, policy, .. } = st;
+        let net = NetView { wan, paths };
+        policy.allocate(now_s, trigger, &active, &net)
+    };
+    // Push rates to source agents.
+    for cs in &active {
+        let rates = alloc.rates.get(&cs.id).cloned().unwrap_or_default();
+        if let Some(co) = st.coflows.get_mut(&cs.id) {
+            co.rates = rates.clone();
+        }
+        for (gi, g) in cs.groups.iter().enumerate() {
+            let path_rates: Vec<Json> = rates
+                .get(gi)
+                .map(|v| v.iter().map(|&r| Json::Num(r)).collect())
+                .unwrap_or_default();
+            if let Some(a) = st.agents.get_mut(&g.src) {
+                let mut m = Json::obj();
+                m.set("op", "rates".into())
+                    .set("coflow", cs.id.into())
+                    .set("dst", g.dst.into())
+                    .set("rates", Json::Arr(path_rates));
+                let _ = protocol::write_msg(&mut a.ctrl, &m);
+            }
+        }
+    }
+}

@@ -1,0 +1,33 @@
+//! The enforcement plane (§4, §5): a logically centralized Terra controller
+//! plus one Terra agent per datacenter, connected over **persistent TCP
+//! connections** that form an application-layer multipath overlay.
+//!
+//! This is the repo's "testbed": agents move real bytes over loopback TCP,
+//! the controller runs the same [`crate::scheduler::Policy`] logic as the
+//! simulator, and link capacities are enforced by per-(transfer, path)
+//! token buckets at the sending agents (standing in for the paper's
+//! VLAN + `tc` setup). SD-WAN interaction is modelled by
+//! [`rules::RuleTable`], which counts the forwarding rules the controller
+//! would install — rules change only at (re)initialization and on
+//! failures, never per transfer (§4.3).
+//!
+//! Data-plane properties reproduced from §5.1:
+//! - one persistent connection per ⟨agent pair, path⟩, reused by all
+//!   coflows;
+//! - a FlowGroup is striped across its paths at controller-assigned rates;
+//! - out-of-order chunks (different paths, heterogeneous latency) are
+//!   reassembled and delivered **in order** to the application.
+
+pub mod agent;
+pub mod controller;
+pub mod protocol;
+pub mod rules;
+
+pub use agent::Agent;
+pub use controller::{Controller, ControllerHandle, TestbedConfig};
+pub use protocol::{CoflowStatus, FlowSpec};
+
+/// Bytes per second in one emulated "Gbps" (the testbed scales real
+/// loopback throughput; 1 emulated Gbps = 12.5 real MB/s by default so a
+/// 5-node testbed fits comfortably in loopback bandwidth).
+pub const BYTES_PER_GBPS: f64 = 12_500_000.0;

@@ -1,0 +1,264 @@
+//! Wire protocol for the overlay: length-prefixed JSON control messages and
+//! binary data frames.
+//!
+//! Control channel (agent <-> controller, client <-> controller): a 4-byte
+//! little-endian length followed by a JSON document. Data channel (agent ->
+//! agent persistent connections): a fixed 28-byte header followed by the
+//! chunk payload.
+
+use crate::util::json::Json;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+/// Data-frame header magic.
+pub const DATA_MAGIC: u32 = 0x7E44_AA01;
+/// Chunk payload size for striping transfers across paths.
+pub const CHUNK_BYTES: usize = 64 * 1024;
+
+/// A flow in a coflow submission (§5.2 API).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FlowSpec {
+    pub id: u64,
+    pub src_dc: usize,
+    pub dst_dc: usize,
+    /// Bytes to transfer.
+    pub bytes: u64,
+}
+
+impl FlowSpec {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("id", self.id.into())
+            .set("src", self.src_dc.into())
+            .set("dst", self.dst_dc.into())
+            .set("bytes", self.bytes.into());
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Option<FlowSpec> {
+        Some(FlowSpec {
+            id: j.get("id")?.as_u64()?,
+            src_dc: j.get("src")?.as_u64()? as usize,
+            dst_dc: j.get("dst")?.as_u64()? as usize,
+            bytes: j.get("bytes")?.as_u64()?,
+        })
+    }
+}
+
+/// Coflow status reported by `check_status` (§5.2).
+#[derive(Clone, Debug, PartialEq)]
+pub enum CoflowStatus {
+    Pending,
+    Running { delivered: u64, total: u64 },
+    Done { cct_s: f64 },
+    Rejected,
+    Unknown,
+}
+
+impl CoflowStatus {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        match self {
+            CoflowStatus::Pending => o.set("state", "pending".into()),
+            CoflowStatus::Running { delivered, total } => o
+                .set("state", "running".into())
+                .set("delivered", (*delivered).into())
+                .set("total", (*total).into()),
+            CoflowStatus::Done { cct_s } => {
+                o.set("state", "done".into()).set("cct_s", (*cct_s).into())
+            }
+            CoflowStatus::Rejected => o.set("state", "rejected".into()),
+            CoflowStatus::Unknown => o.set("state", "unknown".into()),
+        };
+        o
+    }
+
+    pub fn from_json(j: &Json) -> CoflowStatus {
+        match j.get("state").and_then(|s| s.as_str()) {
+            Some("pending") => CoflowStatus::Pending,
+            Some("running") => CoflowStatus::Running {
+                delivered: j.get("delivered").and_then(|x| x.as_u64()).unwrap_or(0),
+                total: j.get("total").and_then(|x| x.as_u64()).unwrap_or(0),
+            },
+            Some("done") => CoflowStatus::Done {
+                cct_s: j.get("cct_s").and_then(|x| x.as_f64()).unwrap_or(0.0),
+            },
+            Some("rejected") => CoflowStatus::Rejected,
+            _ => CoflowStatus::Unknown,
+        }
+    }
+}
+
+/// Write one length-prefixed JSON message.
+pub fn write_msg(stream: &mut TcpStream, msg: &Json) -> std::io::Result<()> {
+    let body = msg.to_string().into_bytes();
+    let len = (body.len() as u32).to_le_bytes();
+    stream.write_all(&len)?;
+    stream.write_all(&body)?;
+    stream.flush()
+}
+
+/// Read one length-prefixed JSON message (None on clean EOF).
+pub fn read_msg(stream: &mut TcpStream) -> std::io::Result<Option<Json>> {
+    let mut len_buf = [0u8; 4];
+    match stream.read_exact(&mut len_buf) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e),
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > 64 * 1024 * 1024 {
+        return Err(std::io::Error::other("control message too large"));
+    }
+    let mut body = vec![0u8; len];
+    stream.read_exact(&mut body)?;
+    let text = String::from_utf8(body).map_err(std::io::Error::other)?;
+    Json::parse(&text).map(Some).map_err(std::io::Error::other)
+}
+
+/// Fill `buf` completely, tolerating read timeouts (progress is preserved
+/// across `WouldBlock`/`TimedOut`, unlike `read_exact`). Returns false on
+/// clean EOF before any byte, or when `stop` is raised mid-wait.
+pub fn read_full(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    stop: &std::sync::atomic::AtomicBool,
+) -> std::io::Result<bool> {
+    use std::sync::atomic::Ordering;
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(false);
+        }
+        match stream.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return if filled == 0 {
+                    Ok(false)
+                } else {
+                    Err(std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "EOF mid-frame",
+                    ))
+                }
+            }
+            Ok(n) => filled += n,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+/// Read one length-prefixed JSON message with timeout-resumable reads.
+/// Returns `None` on clean EOF or stop.
+pub fn read_msg_resumable(
+    stream: &mut TcpStream,
+    stop: &std::sync::atomic::AtomicBool,
+) -> std::io::Result<Option<Json>> {
+    let mut len_buf = [0u8; 4];
+    if !read_full(stream, &mut len_buf, stop)? {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > 64 * 1024 * 1024 {
+        return Err(std::io::Error::other("control message too large"));
+    }
+    let mut body = vec![0u8; len];
+    if !read_full(stream, &mut body, stop)? {
+        return Ok(None);
+    }
+    let text = String::from_utf8(body).map_err(std::io::Error::other)?;
+    Json::parse(&text).map(Some).map_err(std::io::Error::other)
+}
+
+/// Data frame header: transfer identity + sequencing for reassembly.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DataHeader {
+    pub coflow: u64,
+    pub src_dc: u32,
+    /// Byte offset of this chunk within the transfer (reassembly key).
+    pub offset: u64,
+    pub len: u32,
+}
+
+impl DataHeader {
+    pub const SIZE: usize = 28;
+
+    pub fn encode(&self) -> [u8; Self::SIZE] {
+        let mut b = [0u8; Self::SIZE];
+        b[0..4].copy_from_slice(&DATA_MAGIC.to_le_bytes());
+        b[4..12].copy_from_slice(&self.coflow.to_le_bytes());
+        b[12..16].copy_from_slice(&self.src_dc.to_le_bytes());
+        b[16..24].copy_from_slice(&self.offset.to_le_bytes());
+        b[24..28].copy_from_slice(&self.len.to_le_bytes());
+        b
+    }
+
+    pub fn decode(b: &[u8; Self::SIZE]) -> std::io::Result<DataHeader> {
+        let magic = u32::from_le_bytes(b[0..4].try_into().unwrap());
+        if magic != DATA_MAGIC {
+            return Err(std::io::Error::other("bad data frame magic"));
+        }
+        Ok(DataHeader {
+            coflow: u64::from_le_bytes(b[4..12].try_into().unwrap()),
+            src_dc: u32::from_le_bytes(b[12..16].try_into().unwrap()),
+            offset: u64::from_le_bytes(b[16..24].try_into().unwrap()),
+            len: u32::from_le_bytes(b[24..28].try_into().unwrap()),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::{TcpListener, TcpStream};
+
+    #[test]
+    fn flow_spec_roundtrip() {
+        let f = FlowSpec { id: 3, src_dc: 1, dst_dc: 4, bytes: 123456 };
+        assert_eq!(FlowSpec::from_json(&f.to_json()), Some(f));
+    }
+
+    #[test]
+    fn status_roundtrip() {
+        for s in [
+            CoflowStatus::Pending,
+            CoflowStatus::Running { delivered: 10, total: 100 },
+            CoflowStatus::Done { cct_s: 1.5 },
+            CoflowStatus::Rejected,
+        ] {
+            assert_eq!(CoflowStatus::from_json(&s.to_json()), s);
+        }
+    }
+
+    #[test]
+    fn header_roundtrip() {
+        let h = DataHeader { coflow: 9, src_dc: 2, offset: 1 << 33, len: 65536 };
+        assert_eq!(DataHeader::decode(&h.encode()).unwrap(), h);
+        let mut bad = h.encode();
+        bad[0] = 0;
+        assert!(DataHeader::decode(&bad).is_err());
+    }
+
+    #[test]
+    fn msg_roundtrip_over_tcp() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let msg = read_msg(&mut s).unwrap().unwrap();
+            write_msg(&mut s, &msg).unwrap(); // echo
+            assert!(read_msg(&mut s).unwrap().is_none()); // EOF
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        let mut msg = Json::obj();
+        msg.set("op", "hello".into()).set("dc", 3u64.into());
+        write_msg(&mut c, &msg).unwrap();
+        let echo = read_msg(&mut c).unwrap().unwrap();
+        assert_eq!(echo, msg);
+        drop(c);
+        t.join().unwrap();
+    }
+}

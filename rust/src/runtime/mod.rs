@@ -1,0 +1,207 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas LP solver.
+//!
+//! `make artifacts` lowers the L2 PDHG max-concurrent-flow solver
+//! (`python/compile/model.py`) to HLO **text** per shape variant; this
+//! module loads those artifacts on the PJRT CPU client once at startup and
+//! executes them from the controller's scheduling rounds — Python is never
+//! on the request path.
+//!
+//! The artifact solves the *edge-based* LP (flows may route anywhere); the
+//! controller enforces per-path rates over the overlay, so
+//! [`JaxSolver::solve`] peels the returned edge flows onto the coflow's
+//! k-shortest-path set and re-trims to equal progress — the same
+//! post-processing the native GK solver applies.
+
+pub mod pack;
+
+use crate::lp::{McfInstance, McfSolution};
+use crate::net::Wan;
+use crate::Result;
+use anyhow::{bail, Context};
+use std::path::Path;
+
+/// One loaded artifact variant (padded problem shape).
+struct Variant {
+    name: String,
+    v: usize,
+    e: usize,
+    k: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT-backed Optimization (1) solver.
+pub struct JaxSolver {
+    variants: Vec<Variant>,
+    /// PDHG iterations per solve (runtime input to the artifact).
+    pub iters: i32,
+}
+
+// SAFETY: the wrapped PJRT CPU client and loaded executables are internally
+// synchronized (PJRT's C API is thread-safe for execution); the `xla` crate
+// just doesn't mark its raw-pointer wrappers. We only ever call `execute`
+// and read-only accessors after construction.
+unsafe impl Send for JaxSolver {}
+unsafe impl Sync for JaxSolver {}
+
+impl JaxSolver {
+    /// Load every variant listed in `artifacts/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<JaxSolver> {
+        let dir = dir.as_ref();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?}; run `make artifacts`"))?;
+        let manifest = crate::util::json::Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("bad manifest.json: {e}"))?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut variants = Vec::new();
+        if let crate::util::json::Json::Obj(map) = &manifest {
+            for (name, spec) in map {
+                let file = spec
+                    .get("file")
+                    .and_then(|f| f.as_str())
+                    .context("manifest entry missing `file`")?;
+                let v = spec.get("v").and_then(|x| x.as_u64()).context("missing v")? as usize;
+                let e = spec.get("e").and_then(|x| x.as_u64()).context("missing e")? as usize;
+                let k = spec.get("k").and_then(|x| x.as_u64()).context("missing k")? as usize;
+                let proto = xla::HloModuleProto::from_text_file(
+                    dir.join(file).to_str().context("non-utf8 path")?,
+                )?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client.compile(&comp)?;
+                variants.push(Variant { name: name.clone(), v, e, k, exe });
+            }
+        } else {
+            bail!("manifest.json is not an object");
+        }
+        // Prefer smaller variants (cheaper executions) when they fit.
+        variants.sort_by_key(|va| va.v * va.e * va.k);
+        log::info!(
+            "loaded {} LP artifact variant(s): {:?}",
+            variants.len(),
+            variants.iter().map(|v| v.name.as_str()).collect::<Vec<_>>()
+        );
+        Ok(JaxSolver { variants, iters: 600 })
+    }
+
+    /// Names and shapes `(name, V, E, K)` of the loaded variants.
+    pub fn variants(&self) -> Vec<(String, usize, usize, usize)> {
+        self.variants.iter().map(|v| (v.name.clone(), v.v, v.e, v.k)).collect()
+    }
+
+    /// Solve Optimization (1) for `inst` (FlowGroups with path sets over
+    /// `wan`). Returns `None` when no variant fits or the solve degenerates
+    /// (callers fall back to the native solver).
+    pub fn solve(&self, wan: &Wan, inst: &McfInstance) -> Option<McfSolution> {
+        let groups: Vec<(usize, usize, f64)> = pack::group_endpoints(wan, inst)?;
+        let nv = wan.num_nodes();
+        let ne = wan.num_edges();
+        let nk = groups.len();
+        let variant = self.variants.iter().find(|va| va.v >= nv && va.e >= ne && va.k >= nk)?;
+        let (a, b, c) = pack::pack_instance(wan, inst, &groups, variant.v, variant.e, variant.k);
+
+        let lit_a = xla::Literal::vec1(&a).reshape(&[variant.v as i64, variant.e as i64]).ok()?;
+        let lit_b = xla::Literal::vec1(&b).reshape(&[variant.k as i64, variant.v as i64]).ok()?;
+        let lit_c = xla::Literal::vec1(&c);
+        let lit_iters = xla::Literal::scalar(self.iters);
+        let (f_lit, _lam, _res) = self
+            .exe_run(variant, &[lit_a, lit_b, lit_c, lit_iters])
+            .map_err(|e| log::warn!("jax solve failed: {e}"))
+            .ok()?;
+        let f: Vec<f32> = f_lit.to_vec().ok()?;
+        pack::peel_solution(inst, &groups, &f, variant.e)
+    }
+
+    fn exe_run(
+        &self,
+        variant: &Variant,
+        args: &[xla::Literal],
+    ) -> Result<(xla::Literal, xla::Literal, xla::Literal)> {
+        let out = variant.exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
+        Ok(out.to_tuple3()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coflow::GB;
+    use crate::lp::{self, GroupDemand};
+    use crate::net::paths::PathSet;
+    use crate::net::topologies;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_and_solves_fig1a() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let solver = JaxSolver::load(artifacts_dir()).unwrap();
+        assert!(!solver.variants().is_empty());
+        let wan = topologies::fig1a();
+        let paths = PathSet::compute(&wan, 3);
+        let inst = McfInstance {
+            cap: wan.capacities(),
+            groups: vec![GroupDemand {
+                volume: 5.0 * GB,
+                paths: paths.get(0, 1).iter().map(|p| p.edges.clone()).collect(),
+            }],
+        };
+        let sol = solver.solve(&wan, &inst).expect("jax solve");
+        inst.check(&sol, 1e-3).unwrap();
+        // 40 Gbit over two 10 Gbps paths: Γ = 2 s (λ = 0.5).
+        let native = lp::max_concurrent(&inst, lp::SolverKind::Simplex).unwrap();
+        assert!(
+            (sol.lambda - native.lambda).abs() / native.lambda < 0.08,
+            "jax λ {} vs native λ {}",
+            sol.lambda,
+            native.lambda
+        );
+    }
+
+    #[test]
+    fn agrees_with_native_on_swan_instances() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let solver = JaxSolver::load(artifacts_dir()).unwrap();
+        let wan = topologies::swan();
+        let paths = PathSet::compute(&wan, 15);
+        let mut rng = crate::util::rng::Pcg32::new(31);
+        for trial in 0..5 {
+            let ng = 1 + rng.below(6);
+            let mut groups = Vec::new();
+            for _ in 0..ng {
+                let s = rng.below(wan.num_nodes());
+                let mut d = rng.below(wan.num_nodes());
+                while d == s {
+                    d = rng.below(wan.num_nodes());
+                }
+                groups.push(GroupDemand {
+                    volume: rng.uniform(8.0, 200.0),
+                    paths: paths.get(s, d).iter().map(|p| p.edges.clone()).collect(),
+                });
+            }
+            let inst = McfInstance { cap: wan.capacities(), groups };
+            let jax = solver.solve(&wan, &inst).expect("jax solve");
+            inst.check(&jax, 1e-3).unwrap();
+            let native = lp::max_concurrent(&inst, lp::SolverKind::Simplex).unwrap();
+            // The edge-based artifact can route off the k-path set, and the
+            // peeling is greedy — allow a modest band around the path LP.
+            assert!(
+                jax.lambda >= 0.7 * native.lambda && jax.lambda <= 1.05 * native.lambda,
+                "trial {trial}: jax {} native {}",
+                jax.lambda,
+                native.lambda
+            );
+        }
+    }
+}

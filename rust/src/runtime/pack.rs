@@ -1,0 +1,160 @@
+//! Instance packing/unpacking for the AOT artifact: path-based FlowGroup
+//! instances -> padded edge-based arrays -> peeled per-path rates.
+
+use crate::lp::{McfInstance, McfSolution};
+use crate::net::Wan;
+
+/// Recover each group's `(src, dst, volume)` from its path set (all paths
+/// of a FlowGroup share endpoints). Returns `None` if any active group has
+/// no path (the artifact cannot express it; fall back to native).
+pub fn group_endpoints(wan: &Wan, inst: &McfInstance) -> Option<Vec<(usize, usize, f64)>> {
+    let mut out = Vec::with_capacity(inst.groups.len());
+    for g in &inst.groups {
+        let first = g.paths.iter().find(|p| !p.is_empty())?;
+        let src = wan.link(first[0]).src;
+        let dst = wan.link(*first.last().unwrap()).dst;
+        out.push((src, dst, g.volume));
+    }
+    Some(out)
+}
+
+/// Build the padded `(a, b, c)` f32 arrays (row-major) for a variant of
+/// shape `(pv, pe, pk)`.
+pub fn pack_instance(
+    wan: &Wan,
+    inst: &McfInstance,
+    groups: &[(usize, usize, f64)],
+    pv: usize,
+    pe: usize,
+    pk: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let ne = wan.num_edges();
+    let mut a = vec![0f32; pv * pe];
+    for (e, link) in wan.links().iter().enumerate() {
+        a[link.src * pe + e] = 1.0;
+        a[link.dst * pe + e] = -1.0;
+    }
+    let mut b = vec![0f32; pk * pv];
+    for (k, &(src, dst, vol)) in groups.iter().enumerate() {
+        if vol > 0.0 {
+            b[k * pv + src] = vol as f32;
+            b[k * pv + dst] = -(vol as f32);
+        }
+    }
+    let mut c = vec![0f32; pe];
+    for (e, cap) in inst.cap.iter().enumerate().take(ne) {
+        c[e] = *cap as f32;
+    }
+    (a, b, c)
+}
+
+/// Peel the artifact's per-edge flows onto each group's path set and trim
+/// to an equal-progress [`McfSolution`]. Two greedy passes per group: the
+/// first pass drains bottlenecks, the second picks up remainders.
+pub fn peel_solution(
+    inst: &McfInstance,
+    groups: &[(usize, usize, f64)],
+    f: &[f32],
+    pe: usize,
+) -> Option<McfSolution> {
+    let mut rates: Vec<Vec<f64>> = inst.groups.iter().map(|g| vec![0.0; g.paths.len()]).collect();
+    for (k, g) in inst.groups.iter().enumerate() {
+        let mut w: Vec<f64> = (0..pe).map(|e| f[k * pe + e].max(0.0) as f64).collect();
+        for _pass in 0..2 {
+            for (pi, path) in g.paths.iter().enumerate() {
+                if path.is_empty() {
+                    continue;
+                }
+                let r = path.iter().map(|&e| w[e]).fold(f64::INFINITY, f64::min);
+                if r > 1e-9 {
+                    rates[k][pi] += r;
+                    for &e in path {
+                        w[e] -= r;
+                    }
+                }
+            }
+        }
+    }
+    // λ = worst group's progress; trim everyone to λ·v for equal progress.
+    let mut lambda = f64::INFINITY;
+    for (k, &(_, _, vol)) in groups.iter().enumerate() {
+        if vol > 0.0 {
+            let total: f64 = rates[k].iter().sum();
+            lambda = lambda.min(total / vol);
+        }
+    }
+    if !(lambda.is_finite() && lambda > 1e-12) {
+        return None;
+    }
+    for (k, &(_, _, vol)) in groups.iter().enumerate() {
+        let total: f64 = rates[k].iter().sum();
+        let factor = if vol > 0.0 && total > 0.0 { lambda * vol / total } else { 0.0 };
+        for r in &mut rates[k] {
+            *r *= factor;
+        }
+    }
+    Some(McfSolution { lambda, rates })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lp::GroupDemand;
+    use crate::net::topologies;
+
+    #[test]
+    fn pack_shapes_and_padding() {
+        let wan = topologies::fig1a(); // V=3, E=6
+        let inst = McfInstance {
+            cap: wan.capacities(),
+            groups: vec![GroupDemand { volume: 40.0, paths: vec![vec![0]] }],
+        };
+        let groups = group_endpoints(&wan, &inst).unwrap();
+        assert_eq!(groups, vec![(0, 1, 40.0)]);
+        let (a, b, c) = pack_instance(&wan, &inst, &groups, 8, 16, 4);
+        assert_eq!(a.len(), 8 * 16);
+        assert_eq!(b.len(), 4 * 8);
+        assert_eq!(c.len(), 16);
+        // Incidence of edge 0 (A->B).
+        assert_eq!(a[0 * 16 + 0], 1.0);
+        assert_eq!(a[1 * 16 + 0], -1.0);
+        // Padding columns are zero.
+        assert!(c[6..].iter().all(|&x| x == 0.0));
+        assert_eq!(b[0 * 8 + 0], 40.0);
+        assert_eq!(b[0 * 8 + 1], -40.0);
+        // Padded group rows zero.
+        assert!(b[8..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn peel_extracts_multipath() {
+        let wan = topologies::fig1a();
+        // Group A->B with direct (edge 0) and via-C (edges 4, 3) paths.
+        let inst = McfInstance {
+            cap: wan.capacities(),
+            groups: vec![GroupDemand { volume: 40.0, paths: vec![vec![0], vec![4, 3]] }],
+        };
+        let groups = vec![(0usize, 1usize, 40.0f64)];
+        // Edge flows: 10 on direct, 10 on each leg of the via-C path.
+        let pe = 8;
+        let mut f = vec![0f32; pe];
+        f[0] = 10.0;
+        f[4] = 10.0;
+        f[3] = 10.0;
+        let sol = peel_solution(&inst, &groups, &f, pe).unwrap();
+        assert!((sol.lambda - 0.5).abs() < 1e-9, "lambda={}", sol.lambda);
+        assert!((sol.rates[0][0] - 10.0).abs() < 1e-9);
+        assert!((sol.rates[0][1] - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn peel_handles_zero_flow() {
+        let wan = topologies::fig1a();
+        let inst = McfInstance {
+            cap: wan.capacities(),
+            groups: vec![GroupDemand { volume: 40.0, paths: vec![vec![0]] }],
+        };
+        let groups = vec![(0usize, 1usize, 40.0f64)];
+        assert!(peel_solution(&inst, &groups, &[0f32; 8], 8).is_none());
+    }
+}

@@ -1,0 +1,282 @@
+//! Terra's joint scheduling-routing algorithm (§3) and the policy interface
+//! shared with the baselines (§6.1).
+//!
+//! A **policy** is invoked on every scheduling round — coflow arrival,
+//! FlowGroup/coflow completion, or a significant WAN event (§3.1.3) — and
+//! produces a rate allocation: for every active coflow, for every FlowGroup,
+//! a rate per path of the FlowGroup's k-shortest-path set. The flow-level
+//! simulator ([`crate::sim`]) and the overlay controller
+//! ([`crate::overlay`]) both drive policies through this interface, which
+//! mirrors how the paper runs the same controller logic in testbed and
+//! simulation (§6.1).
+
+pub mod terra;
+
+pub use terra::TerraPolicy;
+
+use crate::coflow::{CoflowId, FlowGroup};
+use crate::lp::{GroupDemand, McfInstance};
+use crate::net::paths::PathSet;
+use crate::net::Wan;
+use std::collections::HashMap;
+
+/// Scheduler-facing view of one active coflow.
+#[derive(Clone, Debug)]
+pub struct CoflowState {
+    pub id: CoflowId,
+    pub arrival: f64,
+    /// Absolute deadline (arrival + D_i), if any.
+    pub deadline: Option<f64>,
+    /// True once admitted by deadline admission control; admitted coflows
+    /// are never preempted (§3.2).
+    pub admitted: bool,
+    /// Coalesced FlowGroups (fixed order; `remaining` is parallel).
+    pub groups: Vec<FlowGroup>,
+    /// Remaining volume per FlowGroup in Gbit.
+    pub remaining: Vec<f64>,
+}
+
+impl CoflowState {
+    pub fn from_coflow(c: &crate::coflow::Coflow) -> CoflowState {
+        let groups = c.flow_groups();
+        let remaining = groups.iter().map(|g| g.volume).collect();
+        CoflowState {
+            id: c.id,
+            arrival: c.arrival,
+            deadline: c.deadline.map(|d| c.arrival + d),
+            admitted: false,
+            groups,
+            remaining,
+        }
+    }
+
+    pub fn total_remaining(&self) -> f64 {
+        self.remaining.iter().sum()
+    }
+
+    pub fn done(&self) -> bool {
+        self.remaining.iter().all(|&r| r <= 1e-9)
+    }
+}
+
+/// Immutable network view handed to policies each round.
+pub struct NetView<'a> {
+    pub wan: &'a Wan,
+    pub paths: &'a PathSet,
+}
+
+/// Rates per coflow: `rates[group_idx][path_idx]` in Gbps, with path indices
+/// aligned to `NetView::paths.get(src, dst)` truncated to the policy's k.
+pub type CoflowRates = Vec<Vec<f64>>;
+
+/// One round's allocation decision.
+#[derive(Clone, Debug, Default)]
+pub struct Allocation {
+    pub rates: HashMap<CoflowId, CoflowRates>,
+}
+
+impl Allocation {
+    /// Aggregate per-edge usage (for utilization metrics and feasibility
+    /// checks).
+    pub fn edge_usage(
+        &self,
+        coflows: &[CoflowState],
+        net: &NetView,
+        num_edges: usize,
+    ) -> Vec<f64> {
+        let mut usage = vec![0.0; num_edges];
+        for cf in coflows {
+            let Some(rates) = self.rates.get(&cf.id) else { continue };
+            for (gi, g) in cf.groups.iter().enumerate() {
+                let paths = net.paths.get(g.src, g.dst);
+                for (pi, &r) in
+                    rates.get(gi).map(|v| v.as_slice()).unwrap_or(&[]).iter().enumerate()
+                {
+                    if r <= 0.0 {
+                        continue;
+                    }
+                    if let Some(p) = paths.get(pi) {
+                        for &e in &p.edges {
+                            usage[e] += r;
+                        }
+                    }
+                }
+            }
+        }
+        usage
+    }
+}
+
+/// Per-round instrumentation (paper §6.6 reports LPs/round and time/round).
+#[derive(Clone, Debug, Default)]
+pub struct RoundStats {
+    pub lp_solves: usize,
+    pub lp_time_s: f64,
+    pub round_time_s: f64,
+}
+
+impl RoundStats {
+    pub fn merge(&mut self, other: &RoundStats) {
+        self.lp_solves += other.lp_solves;
+        self.lp_time_s += other.lp_time_s;
+        self.round_time_s += other.round_time_s;
+    }
+}
+
+/// Why the round was triggered — Terra's online algorithm reacts to event
+/// categories differently (§3.1.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoundTrigger {
+    CoflowArrival,
+    FlowGroupFinish,
+    CoflowFinish,
+    WanChange,
+    Initial,
+}
+
+/// The scheduling-routing policy interface implemented by Terra and all
+/// five baselines.
+pub trait Policy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Compute this round's allocation. `coflows` contains only unfinished
+    /// coflows (deadline-rejected ones never appear).
+    fn allocate(
+        &mut self,
+        now: f64,
+        trigger: RoundTrigger,
+        coflows: &[CoflowState],
+        net: &NetView,
+    ) -> Allocation;
+
+    /// Deadline admission control (§3.2). Default: admit everything.
+    fn admit(
+        &mut self,
+        _now: f64,
+        _candidate: &CoflowState,
+        _admitted: &[CoflowState],
+        _net: &NetView,
+    ) -> bool {
+        true
+    }
+
+    /// Drain instrumentation recorded since the last call.
+    fn take_stats(&mut self) -> RoundStats {
+        RoundStats::default()
+    }
+
+    /// Number of paths per datacenter pair this policy uses (drives PathSet
+    /// precomputation in the driver).
+    fn k_paths(&self) -> usize {
+        DEFAULT_K
+    }
+}
+
+/// Paper defaults (§6.1): k = 15 paths, α = 0.1 starvation share,
+/// ρ = 25 % re-optimization threshold, η = 1.2 deadline relaxation.
+pub const DEFAULT_K: usize = 15;
+pub const DEFAULT_ALPHA: f64 = 0.1;
+pub const DEFAULT_RHO: f64 = 0.25;
+pub const DEFAULT_ETA: f64 = 1.2;
+
+/// Build the Optimization (1) instance for one coflow's unfinished groups on
+/// the given residual capacities. Returns the instance plus the mapping from
+/// instance-group index to `groups` index.
+pub fn build_instance(
+    groups: &[FlowGroup],
+    remaining: &[f64],
+    caps: &[f64],
+    net: &NetView,
+    k: usize,
+) -> (McfInstance, Vec<usize>) {
+    let mut demands = Vec::new();
+    let mut index = Vec::new();
+    for (gi, (g, &rem)) in groups.iter().zip(remaining).enumerate() {
+        if rem <= 1e-9 {
+            continue;
+        }
+        let paths: Vec<Vec<usize>> =
+            net.paths.get(g.src, g.dst).iter().take(k).map(|p| p.edges.clone()).collect();
+        demands.push(GroupDemand { volume: rem, paths });
+        index.push(gi);
+    }
+    (McfInstance { cap: caps.to_vec(), groups: demands }, index)
+}
+
+/// Expand an instance-indexed rate vector back to the coflow's full group
+/// list (unfinished groups get their computed path-rates, finished stay
+/// empty).
+pub fn expand_rates(num_groups: usize, index: &[usize], rates: &[Vec<f64>]) -> CoflowRates {
+    let mut out: CoflowRates = vec![Vec::new(); num_groups];
+    for (ii, &gi) in index.iter().enumerate() {
+        out[gi] = rates[ii].clone();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coflow::{Coflow, Flow};
+    use crate::net::topologies;
+
+    #[test]
+    fn coflow_state_from_coflow() {
+        let c = Coflow::new(
+            7,
+            vec![
+                Flow { id: 0, src_dc: 0, dst_dc: 1, volume: 4.0 },
+                Flow { id: 1, src_dc: 0, dst_dc: 1, volume: 4.0 },
+                Flow { id: 2, src_dc: 2, dst_dc: 1, volume: 8.0 },
+            ],
+        )
+        .with_arrival(10.0)
+        .with_deadline(5.0);
+        let st = CoflowState::from_coflow(&c);
+        assert_eq!(st.groups.len(), 2);
+        assert_eq!(st.deadline, Some(15.0));
+        assert!((st.total_remaining() - 16.0).abs() < 1e-9);
+        assert!(!st.done());
+    }
+
+    #[test]
+    fn build_instance_skips_finished_groups() {
+        let wan = topologies::fig1a();
+        let paths = PathSet::compute(&wan, 3);
+        let net = NetView { wan: &wan, paths: &paths };
+        let groups = vec![
+            FlowGroup { src: 0, dst: 1, volume: 10.0, num_flows: 1 },
+            FlowGroup { src: 2, dst: 1, volume: 10.0, num_flows: 1 },
+        ];
+        let remaining = vec![0.0, 5.0];
+        let (inst, idx) = build_instance(&groups, &remaining, &wan.capacities(), &net, 15);
+        assert_eq!(inst.groups.len(), 1);
+        assert_eq!(idx, vec![1]);
+        assert!((inst.groups[0].volume - 5.0).abs() < 1e-9);
+        assert!(!inst.groups[0].paths.is_empty());
+    }
+
+    #[test]
+    fn expand_rates_roundtrip() {
+        let out = expand_rates(3, &[2], &[vec![0.5]]);
+        assert_eq!(out.len(), 3);
+        assert!(out[0].is_empty() && out[1].is_empty());
+        assert_eq!(out[2], vec![0.5]);
+    }
+
+    #[test]
+    fn edge_usage_aggregates() {
+        let wan = topologies::fig1a();
+        let paths = PathSet::compute(&wan, 3);
+        let net = NetView { wan: &wan, paths: &paths };
+        let c = Coflow::new(1, vec![Flow { id: 0, src_dc: 0, dst_dc: 1, volume: 10.0 }]);
+        let st = CoflowState::from_coflow(&c);
+        let mut alloc = Allocation::default();
+        alloc.rates.insert(1, vec![vec![3.0, 2.0]]); // direct + 2-hop
+        let usage = alloc.edge_usage(&[st], &net, wan.num_edges());
+        let direct = &paths.get(0, 1)[0];
+        assert!((usage[direct.edges[0]] - 3.0).abs() < 1e-9);
+        let total: f64 = usage.iter().sum();
+        assert!((total - (3.0 + 2.0 * 2.0)).abs() < 1e-9); // 2-hop path hits 2 edges
+    }
+}

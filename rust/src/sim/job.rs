@@ -1,0 +1,95 @@
+//! GDA jobs as DAGs of computation stages with coflows in between (§2.1,
+//! §3.2). A stage starts when all its dependencies finish, computes for
+//! `compute_s` seconds, then submits its shuffle coflow; the stage finishes
+//! when the coflow completes. Job completion time (JCT) is the last stage's
+//! finish minus the job's arrival — `JCT = Σ (T_comm + T_comp)` along the
+//! DAG's critical path (§6.7, Fig 14).
+
+use crate::coflow::Flow;
+
+/// One computation stage plus its outgoing shuffle.
+#[derive(Clone, Debug, Default)]
+pub struct Stage {
+    /// Indices of stages that must finish before this one starts.
+    pub deps: Vec<usize>,
+    /// Computation time (seconds) before the shuffle is submitted.
+    pub compute_s: f64,
+    /// The stage's WAN shuffle; empty for stages with no WAN transfer
+    /// (e.g. final aggregation inside one datacenter).
+    pub flows: Vec<Flow>,
+    /// Optional relative deadline for the stage's coflow.
+    pub deadline: Option<f64>,
+}
+
+/// A GDA job: a DAG of stages.
+#[derive(Clone, Debug, Default)]
+pub struct Job {
+    pub id: u64,
+    pub arrival: f64,
+    pub stages: Vec<Stage>,
+}
+
+impl Job {
+    /// Total WAN volume of the job in Gbit.
+    pub fn total_volume(&self) -> f64 {
+        self.stages
+            .iter()
+            .flat_map(|s| s.flows.iter())
+            .filter(|f| f.src_dc != f.dst_dc)
+            .map(|f| f.volume)
+            .sum()
+    }
+
+    /// Number of coflows (stages with at least one WAN flow).
+    pub fn num_coflows(&self) -> usize {
+        self.stages.iter().filter(|s| s.flows.iter().any(|f| f.src_dc != f.dst_dc)).count()
+    }
+
+    /// Validate the DAG: deps in range and acyclic (stages must be listed in
+    /// a valid topological order: deps point backwards).
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, s) in self.stages.iter().enumerate() {
+            for &d in &s.deps {
+                if d >= i {
+                    return Err(format!("stage {i} depends on later/self stage {d}"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Single-stage MapReduce-style job.
+    pub fn map_reduce(id: u64, arrival: f64, compute_s: f64, flows: Vec<Flow>) -> Job {
+        Job { id, arrival, stages: vec![Stage { deps: vec![], compute_s, flows, deadline: None }] }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validates_topological_deps() {
+        let mut j = Job::default();
+        j.stages.push(Stage::default());
+        j.stages.push(Stage { deps: vec![0], ..Default::default() });
+        assert!(j.validate().is_ok());
+        j.stages.push(Stage { deps: vec![3], ..Default::default() });
+        assert!(j.validate().is_err());
+    }
+
+    #[test]
+    fn volume_counts_wan_only() {
+        let j = Job::map_reduce(
+            1,
+            0.0,
+            5.0,
+            vec![
+                Flow { id: 0, src_dc: 0, dst_dc: 1, volume: 4.0 },
+                Flow { id: 1, src_dc: 1, dst_dc: 1, volume: 9.0 },
+            ],
+        );
+        assert!((j.total_volume() - 4.0).abs() < 1e-12);
+        assert_eq!(j.num_coflows(), 1);
+    }
+}

@@ -1,0 +1,641 @@
+//! Flow-level event-driven simulator (§6.1 "Simulator").
+//!
+//! Runs the same policy logic as the controller over a simulated WAN: jobs
+//! arrive, their DAG stages compute and submit coflows, the policy
+//! reallocates rates on every scheduling round (coflow arrival, FlowGroup /
+//! coflow completion, significant WAN events), and FlowGroups drain at the
+//! allocated rates between rounds. As in the paper, controller-agent
+//! communication is instantaneous unless a coordination delay is configured
+//! (used to mimic the testbed's feedback loops).
+
+pub mod job;
+pub mod report;
+
+pub use job::{Job, Stage};
+pub use report::{foi, foi_volume_correlation, CoflowRecord, JobRecord, Report};
+
+use crate::coflow::{Coflow, CoflowId};
+use crate::lp;
+use crate::net::paths::PathSet;
+use crate::net::{LinkEvent, Wan};
+use crate::scheduler::{build_instance, Allocation, CoflowState, NetView, Policy, RoundTrigger};
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, HashMap};
+
+/// Simulator knobs.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    /// Bandwidth-fluctuation threshold ρ for re-optimization (§3.1.3).
+    pub rho: f64,
+    /// Latency between coflow submission and participation in scheduling
+    /// (models the controller feedback loop; 0 = the paper's simulator).
+    pub coordination_delay_s: f64,
+    /// Hard stop (simulated seconds).
+    pub max_time: f64,
+    /// Verify allocation feasibility every round (tests/debug).
+    pub check_feasibility: bool,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            rho: crate::scheduler::DEFAULT_RHO,
+            coordination_delay_s: 0.0,
+            max_time: 1e7,
+            check_feasibility: cfg!(debug_assertions),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+enum EvKind {
+    JobArrival(usize),
+    /// All deps of (job, stage) finished and compute elapsed; submit the
+    /// stage's coflow.
+    CoflowSubmit { job: usize, stage: usize },
+    /// Force-complete a stage (fallback path for rejected coflows and
+    /// WAN-free stages finishing asynchronously).
+    StageDone { job: usize, stage: usize },
+    /// A submitted coflow becomes schedulable after the coordination delay.
+    Activate(Box<CoflowState>),
+    Wan(LinkEvent),
+}
+
+#[derive(Clone, Debug)]
+struct TimedEvent {
+    t: f64,
+    seq: u64,
+    kind: EvKind,
+}
+
+impl PartialEq for TimedEvent {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+impl Eq for TimedEvent {}
+impl Ord for TimedEvent {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap: earliest time first, then insertion order.
+        other.t.partial_cmp(&self.t).unwrap_or(Ordering::Equal).then(other.seq.cmp(&self.seq))
+    }
+}
+impl PartialOrd for TimedEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+struct JobState {
+    deps_remaining: Vec<usize>,
+    stage_done: Vec<bool>,
+}
+
+/// The simulator.
+pub struct Simulation {
+    wan: Wan,
+    policy: Box<dyn Policy>,
+    cfg: SimConfig,
+    paths: PathSet,
+    now: f64,
+    seq: u64,
+    events: BinaryHeap<TimedEvent>,
+    jobs: Vec<Job>,
+    job_states: Vec<JobState>,
+    active: Vec<CoflowState>,
+    /// Coflow id -> (job idx, stage idx).
+    owners: HashMap<CoflowId, (usize, usize)>,
+    alloc: Allocation,
+    next_coflow_id: CoflowId,
+    report: Report,
+    record_idx: HashMap<CoflowId, usize>,
+}
+
+impl Simulation {
+    pub fn new(wan: Wan, policy: Box<dyn Policy>, cfg: SimConfig) -> Simulation {
+        let paths = PathSet::compute(&wan, policy.k_paths());
+        let name = policy.name().to_string();
+        Simulation {
+            wan,
+            policy,
+            cfg,
+            paths,
+            now: 0.0,
+            seq: 0,
+            events: BinaryHeap::new(),
+            jobs: Vec::new(),
+            job_states: Vec::new(),
+            active: Vec::new(),
+            owners: HashMap::new(),
+            alloc: Allocation::default(),
+            next_coflow_id: 1,
+            report: Report { policy: name, ..Default::default() },
+            record_idx: HashMap::new(),
+        }
+    }
+
+    /// Access the WAN (e.g. to inspect capacities in tests).
+    pub fn wan(&self) -> &Wan {
+        &self.wan
+    }
+
+    fn push_event(&mut self, t: f64, kind: EvKind) {
+        self.seq += 1;
+        self.events.push(TimedEvent { t, seq: self.seq, kind });
+    }
+
+    /// Register a job before (or during) the run.
+    pub fn add_job(&mut self, job: Job) {
+        job.validate().expect("invalid job DAG");
+        let idx = self.jobs.len();
+        self.push_event(job.arrival.max(self.now), EvKind::JobArrival(idx));
+        self.job_states.push(JobState {
+            deps_remaining: job.stages.iter().map(|s| s.deps.len()).collect(),
+            stage_done: vec![false; job.stages.len()],
+        });
+        self.report.jobs.push(JobRecord {
+            id: job.id,
+            arrival: job.arrival,
+            finish: None,
+            volume: job.total_volume(),
+        });
+        self.jobs.push(job);
+    }
+
+    /// Schedule a WAN event at absolute time `t`.
+    pub fn add_wan_event(&mut self, t: f64, ev: LinkEvent) {
+        self.push_event(t, EvKind::Wan(ev));
+    }
+
+    /// Convenience: add all jobs and run to completion.
+    pub fn run_jobs(&mut self, jobs: Vec<Job>) -> Report {
+        for j in jobs {
+            self.add_job(j);
+        }
+        self.run()
+    }
+
+    /// Minimum CCT of a coflow alone on the *full* WAN (for slowdown and
+    /// deadline metrics).
+    pub fn standalone_min_cct(&self, st: &CoflowState) -> f64 {
+        let net = NetView { wan: &self.wan, paths: &self.paths };
+        let (inst, _) = build_instance(
+            &st.groups,
+            &st.remaining,
+            &self.wan.capacities(),
+            &net,
+            self.policy.k_paths(),
+        );
+        if inst.groups.is_empty() {
+            return 0.0;
+        }
+        lp::max_concurrent(&inst, lp::SolverKind::Gk).map(|s| s.gamma()).unwrap_or(f64::INFINITY)
+    }
+
+    /// Current total rate (Gbps) of a coflow, for live inspection (used by
+    /// the failure case study, Fig 10).
+    pub fn coflow_rate(&self, id: CoflowId) -> f64 {
+        self.alloc.rates.get(&id).map(|g| g.iter().flatten().sum()).unwrap_or(0.0)
+    }
+
+    /// Drive the simulation until all jobs finish or `max_time`.
+    pub fn run(&mut self) -> Report {
+        self.run_until(f64::INFINITY)
+    }
+
+    /// Run until simulated time `stop` (or completion). Can be called
+    /// repeatedly for timeline inspection (Fig 10 throughput traces).
+    pub fn run_until(&mut self, stop: f64) -> Report {
+        let mut needs_round: Option<RoundTrigger> = None;
+        let mut starving_rounds = 0usize;
+        loop {
+            let completion = self.next_completion();
+            let next_event_t = self.events.peek().map(|e| e.t);
+            let target = match (completion, next_event_t) {
+                (Some(c), Some(e)) => c.min(e),
+                (Some(c), None) => c,
+                (None, Some(e)) => e,
+                (None, None) => {
+                    if self.active.is_empty() || starving_rounds > 0 {
+                        break;
+                    }
+                    // Active coflows, no rates, no events: force one round;
+                    // if still no progress the WAN is partitioned for them.
+                    starving_rounds += 1;
+                    self.round(RoundTrigger::WanChange);
+                    continue;
+                }
+            };
+            if target > stop {
+                self.advance(stop.min(self.cfg.max_time));
+                break;
+            }
+            if target > self.cfg.max_time {
+                log::warn!("hit max_time with {} active coflows", self.active.len());
+                break;
+            }
+            starving_rounds = 0;
+            self.advance(target);
+
+            if self.process_completions() {
+                needs_round = Some(RoundTrigger::CoflowFinish);
+            }
+            while self.events.peek().map(|e| e.t <= self.now + 1e-12).unwrap_or(false) {
+                let ev = self.events.pop().unwrap();
+                match ev.kind {
+                    EvKind::JobArrival(j) => self.on_job_arrival(j),
+                    EvKind::CoflowSubmit { job, stage } => {
+                        if self.on_coflow_submit(job, stage) {
+                            needs_round = Some(RoundTrigger::CoflowArrival);
+                        }
+                    }
+                    EvKind::StageDone { job, stage } => self.complete_stage(job, stage),
+                    EvKind::Activate(state) => {
+                        self.active.push(*state);
+                        needs_round = Some(RoundTrigger::CoflowArrival);
+                    }
+                    EvKind::Wan(wev) => {
+                        let frac = self.wan.apply_event(&wev);
+                        let structural =
+                            matches!(wev, LinkEvent::Fail(..) | LinkEvent::Recover(..));
+                        if structural {
+                            // Recompute viable paths (§4.4).
+                            self.paths = PathSet::compute(&self.wan, self.policy.k_paths());
+                            needs_round = Some(RoundTrigger::WanChange);
+                        } else if frac >= self.cfg.rho {
+                            needs_round = Some(RoundTrigger::WanChange);
+                        } else {
+                            // Below-threshold fluctuation (§3.1.3): clamp the
+                            // current allocation, no re-optimization.
+                            self.clamp_alloc();
+                        }
+                    }
+                }
+            }
+
+            if let Some(trigger) = needs_round.take() {
+                self.round(trigger);
+            }
+        }
+        // Finalize.
+        self.report.makespan = self.now;
+        let st = self.policy.take_stats();
+        self.report.lp_solves += st.lp_solves;
+        self.report.lp_time_s += st.lp_time_s;
+        self.report.round_time_s += st.round_time_s;
+        self.report.clone()
+    }
+
+    /// Earliest time any active FlowGroup empties at current rates.
+    fn next_completion(&self) -> Option<f64> {
+        let mut best: Option<f64> = None;
+        for cf in &self.active {
+            let Some(rates) = self.alloc.rates.get(&cf.id) else { continue };
+            for (gi, &rem) in cf.remaining.iter().enumerate() {
+                if rem <= 1e-9 {
+                    continue;
+                }
+                let rate: f64 = rates.get(gi).map(|r| r.iter().sum()).unwrap_or(0.0);
+                if rate > 1e-12 {
+                    let t = self.now + rem / rate;
+                    best = Some(best.map_or(t, |b: f64| b.min(t)));
+                }
+            }
+        }
+        best
+    }
+
+    /// Advance simulated time, draining FlowGroups and integrating
+    /// utilization over the busy period.
+    fn advance(&mut self, target: f64) {
+        let dt = (target - self.now).max(0.0);
+        if dt > 0.0 && !self.active.is_empty() {
+            let mut moved = 0.0;
+            for cf in &mut self.active {
+                let Some(rates) = self.alloc.rates.get(&cf.id) else { continue };
+                for (gi, rem) in cf.remaining.iter_mut().enumerate() {
+                    if *rem <= 1e-9 {
+                        continue;
+                    }
+                    let rate: f64 = rates.get(gi).map(|r| r.iter().sum()).unwrap_or(0.0);
+                    let delta = (rate * dt).min(*rem);
+                    *rem -= delta;
+                    moved += delta;
+                }
+            }
+            self.report.transferred_gbit += moved;
+            self.report.capacity_gbit += self.wan.total_capacity() * dt;
+        }
+        self.now = target;
+    }
+
+    /// Remove finished coflows; update job DAGs. Returns true if anything
+    /// finished.
+    fn process_completions(&mut self) -> bool {
+        let finished: Vec<CoflowId> =
+            self.active.iter().filter(|c| c.done()).map(|c| c.id).collect();
+        for id in &finished {
+            let idx = self.record_idx[id];
+            self.report.coflows[idx].finish = Some(self.now);
+            self.alloc.rates.remove(id);
+        }
+        self.active.retain(|c| !c.done());
+        for id in &finished {
+            if let Some(&(job, stage)) = self.owners.get(id) {
+                self.complete_stage(job, stage);
+            }
+        }
+        !finished.is_empty()
+    }
+
+    fn on_job_arrival(&mut self, j: usize) {
+        let stages: Vec<usize> = (0..self.jobs[j].stages.len())
+            .filter(|&s| self.jobs[j].stages[s].deps.is_empty())
+            .collect();
+        for s in stages {
+            let t = self.now + self.jobs[j].stages[s].compute_s;
+            self.push_event(t, EvKind::CoflowSubmit { job: j, stage: s });
+        }
+    }
+
+    /// Submit stage (job, stage)'s coflow. Returns true if a schedulable
+    /// coflow entered the system.
+    fn on_coflow_submit(&mut self, job: usize, stage: usize) -> bool {
+        let st = &self.jobs[job].stages[stage];
+        let wan_flows = st.flows.iter().filter(|f| f.src_dc != f.dst_dc).count();
+        if wan_flows == 0 {
+            self.complete_stage(job, stage);
+            return false;
+        }
+        let id = self.next_coflow_id;
+        self.next_coflow_id += 1;
+        let mut coflow =
+            Coflow::new(id, st.flows.clone()).with_arrival(self.now);
+        if let Some(d) = st.deadline {
+            coflow = coflow.with_deadline(d);
+        }
+        let mut state = CoflowState::from_coflow(&coflow);
+        // Coordination delay: the coflow is known to the controller but no
+        // bandwidth flows until the next round after the delay elapses; we
+        // model it as added arrival latency on the record.
+        let min_cct = self.standalone_min_cct(&state);
+
+        let mut admitted = true;
+        if state.deadline.is_some() {
+            let net = NetView { wan: &self.wan, paths: &self.paths };
+            admitted = self.policy.admit(self.now, &state, &self.active, &net);
+        }
+        state.admitted = admitted;
+
+        self.owners.insert(id, (job, stage));
+        self.record_idx.insert(id, self.report.coflows.len());
+        self.report.coflows.push(CoflowRecord {
+            id,
+            job: Some(self.jobs[job].id),
+            arrival: self.now,
+            finish: None,
+            volume: state.total_remaining(),
+            min_cct,
+            deadline: state.deadline,
+            admitted,
+        });
+        if !admitted {
+            // Rejected coflows fall back to the framework's default
+            // transfer (§4.4); the stage completes after the standalone
+            // minimum CCT without occupying Terra-scheduled bandwidth, and
+            // the coflow counts as missing its deadline.
+            let t = (self.now + min_cct.max(0.0)).min(self.cfg.max_time);
+            self.push_event(t, EvKind::StageDone { job, stage });
+            return false;
+        }
+        if self.cfg.coordination_delay_s > 0.0 {
+            // Controller feedback loop: the coflow is recorded now (its CCT
+            // clock is ticking) but receives bandwidth only after the
+            // coordination delay — this is what penalizes sub-second
+            // coflows under centralized scheduling (Fig 7d).
+            let t = self.now + self.cfg.coordination_delay_s;
+            self.push_event(t, EvKind::Activate(Box::new(state)));
+            return false;
+        }
+        self.active.push(state);
+        true
+    }
+
+    fn complete_stage(&mut self, job: usize, stage: usize) {
+        if self.job_states[job].stage_done[stage] {
+            return;
+        }
+        self.job_states[job].stage_done[stage] = true;
+        let num_stages = self.jobs[job].stages.len();
+        for s in 0..num_stages {
+            if self.jobs[job].stages[s].deps.contains(&stage) {
+                self.job_states[job].deps_remaining[s] -= 1;
+                if self.job_states[job].deps_remaining[s] == 0 {
+                    let t = self.now + self.jobs[job].stages[s].compute_s;
+                    self.push_event(t, EvKind::CoflowSubmit { job, stage: s });
+                }
+            }
+        }
+        if self.job_states[job].stage_done.iter().all(|&d| d) {
+            self.report.jobs[job].finish = Some(self.now);
+        }
+    }
+
+    /// Run one scheduling round.
+    fn round(&mut self, trigger: RoundTrigger) {
+        let net = NetView { wan: &self.wan, paths: &self.paths };
+        self.alloc = self.policy.allocate(self.now, trigger, &self.active, &net);
+        self.report.rounds += 1;
+        if self.cfg.check_feasibility {
+            let usage = self.alloc.edge_usage(&self.active, &net, self.wan.num_edges());
+            for (e, (&u, c)) in usage.iter().zip(self.wan.capacities()).enumerate() {
+                assert!(
+                    u <= c * (1.0 + 1e-4) + 1e-6,
+                    "policy {} oversubscribed edge {e}: {u} > {c}",
+                    self.report.policy
+                );
+            }
+        }
+    }
+
+    /// Scale down rates on edges whose capacity dropped below usage
+    /// (sub-threshold fluctuations, no re-optimization).
+    fn clamp_alloc(&mut self) {
+        let net = NetView { wan: &self.wan, paths: &self.paths };
+        let usage = self.alloc.edge_usage(&self.active, &net, self.wan.num_edges());
+        let caps = self.wan.capacities();
+        let mut worst = 1.0f64;
+        for (&u, &c) in usage.iter().zip(&caps) {
+            if u > c && u > 1e-12 {
+                worst = worst.min(c / u);
+            }
+        }
+        if worst < 1.0 {
+            for rates in self.alloc.rates.values_mut() {
+                for g in rates {
+                    for r in g {
+                        *r *= worst;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coflow::{Flow, GB};
+    use crate::net::topologies;
+    use crate::scheduler::terra::{TerraConfig, TerraPolicy};
+
+    fn mk_flow(id: u64, s: usize, d: usize, gb: f64) -> Flow {
+        Flow { id, src_dc: s, dst_dc: d, volume: gb * GB }
+    }
+
+    fn terra0() -> Box<dyn Policy> {
+        Box::new(TerraPolicy::new(TerraConfig { alpha: 0.0, ..Default::default() }))
+    }
+
+    #[test]
+    fn single_coflow_min_cct() {
+        // 5 GB A->B on fig1a: 40 Gbit over 20 Gbps (two paths) = 2 s.
+        let wan = topologies::fig1a();
+        let mut sim = Simulation::new(wan, terra0(), SimConfig::default());
+        let job = Job::map_reduce(1, 0.0, 0.0, vec![mk_flow(0, 0, 1, 5.0)]);
+        let rep = sim.run_jobs(vec![job]);
+        assert_eq!(rep.jobs.len(), 1);
+        let jct = rep.jobs[0].jct().unwrap();
+        assert!((jct - 2.0).abs() < 0.1, "jct={jct}");
+        assert_eq!(rep.unfinished(), 0);
+    }
+
+    #[test]
+    fn fig1_average_cct_near_optimal() {
+        // Paper Fig 1f: joint solution averages 7.15 s for Coflow-1 (5 GB
+        // A->B) and Coflow-2 (5 GB A->B + 25 GB C->B).
+        let wan = topologies::fig1a();
+        let mut sim = Simulation::new(wan, terra0(), SimConfig::default());
+        let j1 = Job::map_reduce(1, 0.0, 0.0, vec![mk_flow(0, 0, 1, 5.0)]);
+        let j2 = Job::map_reduce(
+            2,
+            0.0,
+            0.0,
+            vec![mk_flow(0, 0, 1, 5.0), mk_flow(1, 2, 1, 25.0)],
+        );
+        let rep = sim.run_jobs(vec![j1, j2]);
+        let avg = rep.avg_cct();
+        // Terra should beat flow fair sharing (14 s), multipath (10.6 s) and
+        // coflow-only (12 s); optimum is 7.15 s.
+        assert!(avg < 10.0, "avg CCT {avg}");
+        assert!(avg > 6.9, "cannot beat the offline optimum: {avg}");
+    }
+
+    #[test]
+    fn compute_time_adds_to_jct() {
+        let wan = topologies::fig1a();
+        let mut sim = Simulation::new(wan, terra0(), SimConfig::default());
+        let job = Job::map_reduce(1, 5.0, 3.0, vec![mk_flow(0, 0, 1, 5.0)]);
+        let rep = sim.run_jobs(vec![job]);
+        let jct = rep.jobs[0].jct().unwrap();
+        assert!((jct - 5.0).abs() < 0.1, "jct={jct} (3 compute + 2 transfer)");
+        // Coflow record arrival is after compute.
+        assert!((rep.coflows[0].arrival - 8.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dag_dependencies_sequence() {
+        let wan = topologies::fig1a();
+        let mut sim = Simulation::new(wan, terra0(), SimConfig::default());
+        // Two-stage DAG: stage0 5 GB A->B (2 s), then stage1 5 GB B->C (2 s).
+        let job = Job {
+            id: 1,
+            arrival: 0.0,
+            stages: vec![
+                Stage { deps: vec![], compute_s: 0.0, flows: vec![mk_flow(0, 0, 1, 5.0)], deadline: None },
+                Stage { deps: vec![0], compute_s: 1.0, flows: vec![mk_flow(0, 1, 2, 5.0)], deadline: None },
+            ],
+        };
+        let rep = sim.run_jobs(vec![job]);
+        let jct = rep.jobs[0].jct().unwrap();
+        assert!((jct - 5.0).abs() < 0.2, "jct={jct} (2 + 1 + 2)");
+        assert_eq!(rep.coflows.len(), 2);
+    }
+
+    #[test]
+    fn link_failure_triggers_reroute() {
+        let wan = topologies::fig1a();
+        let mut sim = Simulation::new(wan, terra0(), SimConfig::default());
+        let job = Job::map_reduce(1, 0.0, 0.0, vec![mk_flow(0, 0, 1, 25.0)]); // 200 Gbit
+        sim.add_job(job);
+        // Direct A-B link fails at t=1; Terra must continue via C.
+        sim.add_wan_event(1.0, LinkEvent::Fail(0, 1));
+        let rep = sim.run();
+        assert_eq!(rep.unfinished(), 0);
+        let jct = rep.jobs[0].jct().unwrap();
+        // 20 Gbps for 1 s, then 10 Gbps via C: 1 + 180/10 = 19 s.
+        assert!((jct - 19.0).abs() < 0.5, "jct={jct}");
+    }
+
+    #[test]
+    fn small_fluctuation_ignored_large_reacts() {
+        let wan = topologies::fig1a();
+        let mut sim = Simulation::new(wan, terra0(), SimConfig::default());
+        let job = Job::map_reduce(1, 0.0, 0.0, vec![mk_flow(0, 0, 1, 25.0)]);
+        sim.add_job(job);
+        // 10% drop on A->B at t=1 (< rho): no re-optimization round.
+        sim.add_wan_event(1.0, LinkEvent::SetBandwidth(0, 1, 9.0));
+        let rep = sim.run();
+        assert_eq!(rep.unfinished(), 0);
+        // The clamp still keeps the allocation feasible; JCT grows slightly.
+        let jct = rep.jobs[0].jct().unwrap();
+        assert!(jct > 10.0 && jct < 12.0, "jct={jct}");
+    }
+
+    #[test]
+    fn deadline_admission_and_completion() {
+        let wan = topologies::fig1a();
+        let mut sim = Simulation::new(
+            wan,
+            Box::new(TerraPolicy::new(TerraConfig { alpha: 0.0, ..Default::default() })),
+            SimConfig::default(),
+        );
+        // Feasible deadline: min CCT 2 s, deadline 4 s.
+        let mut j1 = Job::map_reduce(1, 0.0, 0.0, vec![mk_flow(0, 0, 1, 5.0)]);
+        j1.stages[0].deadline = Some(4.0);
+        // Infeasible deadline: min CCT 10 s (25 GB on 20 Gbps), deadline 3 s.
+        let mut j2 = Job::map_reduce(2, 0.0, 0.0, vec![mk_flow(0, 0, 1, 25.0)]);
+        j2.stages[0].deadline = Some(3.0);
+        let rep = sim.run_jobs(vec![j1, j2]);
+        let d1 = rep.coflows.iter().find(|c| c.job == Some(1)).unwrap();
+        let d2 = rep.coflows.iter().find(|c| c.job == Some(2)).unwrap();
+        assert!(d1.admitted && d1.met_deadline(), "{d1:?}");
+        assert!(!d2.admitted && !d2.met_deadline(), "{d2:?}");
+        // Rejected job still completes via fallback.
+        assert!(rep.jobs[1].finish.is_some());
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let wan = topologies::fig1a();
+        let mut sim = Simulation::new(wan, terra0(), SimConfig::default());
+        let job = Job::map_reduce(1, 0.0, 0.0, vec![mk_flow(0, 0, 1, 5.0)]);
+        let rep = sim.run_jobs(vec![job]);
+        let u = rep.utilization();
+        assert!(u > 0.0 && u <= 1.0, "utilization={u}");
+        // 40 Gbit transferred.
+        assert!((rep.transferred_gbit - 40.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn partitioned_wan_starves_gracefully() {
+        let mut wan = topologies::fig1a();
+        wan.apply_event(&LinkEvent::Fail(0, 1));
+        wan.apply_event(&LinkEvent::Fail(0, 2));
+        let mut sim = Simulation::new(wan, terra0(), SimConfig::default());
+        let job = Job::map_reduce(1, 0.0, 0.0, vec![mk_flow(0, 0, 1, 5.0)]);
+        let rep = sim.run_jobs(vec![job]);
+        assert_eq!(rep.unfinished(), 1);
+        assert!(rep.jobs[0].finish.is_none());
+    }
+}

@@ -1,0 +1,219 @@
+//! Simulation outputs: per-coflow and per-job records plus the aggregate
+//! metrics the paper reports (average/95th-percentile JCT and CCT, WAN
+//! utilization, deadline-met fraction, slowdowns).
+
+use crate::coflow::CoflowId;
+use crate::util::stats;
+
+/// Lifecycle record of one coflow.
+#[derive(Clone, Debug)]
+pub struct CoflowRecord {
+    pub id: CoflowId,
+    /// Owning job, if the coflow came from a job DAG.
+    pub job: Option<u64>,
+    pub arrival: f64,
+    pub finish: Option<f64>,
+    /// Total WAN volume (Gbit).
+    pub volume: f64,
+    /// Minimum CCT in an empty WAN (for slowdown + deadline metrics).
+    pub min_cct: f64,
+    /// Absolute deadline if any.
+    pub deadline: Option<f64>,
+    /// False when admission control rejected the coflow.
+    pub admitted: bool,
+}
+
+impl CoflowRecord {
+    pub fn cct(&self) -> Option<f64> {
+        self.finish.map(|f| f - self.arrival)
+    }
+
+    /// CCT / minimum CCT in an empty network (§6.3 "how far from optimal").
+    pub fn slowdown(&self) -> Option<f64> {
+        self.cct().map(|c| if self.min_cct > 0.0 { c / self.min_cct } else { 1.0 })
+    }
+
+    pub fn met_deadline(&self) -> bool {
+        match (self.deadline, self.finish) {
+            (Some(d), Some(f)) => self.admitted && f <= d + 1e-6,
+            _ => false,
+        }
+    }
+}
+
+/// Lifecycle record of one job.
+#[derive(Clone, Debug)]
+pub struct JobRecord {
+    pub id: u64,
+    pub arrival: f64,
+    pub finish: Option<f64>,
+    pub volume: f64,
+}
+
+impl JobRecord {
+    pub fn jct(&self) -> Option<f64> {
+        self.finish.map(|f| f - self.arrival)
+    }
+}
+
+/// Aggregate simulation report.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    pub policy: String,
+    pub coflows: Vec<CoflowRecord>,
+    pub jobs: Vec<JobRecord>,
+    /// Gbit actually transferred over the WAN.
+    pub transferred_gbit: f64,
+    /// Integral of total WAN capacity over the busy period (Gbit).
+    pub capacity_gbit: f64,
+    /// Scheduling rounds executed.
+    pub rounds: usize,
+    /// Total LP solves and solver time across rounds.
+    pub lp_solves: usize,
+    pub lp_time_s: f64,
+    pub round_time_s: f64,
+    /// Simulated makespan.
+    pub makespan: f64,
+}
+
+impl Report {
+    fn jcts(&self) -> Vec<f64> {
+        self.jobs.iter().filter_map(|j| j.jct()).collect()
+    }
+
+    fn ccts(&self) -> Vec<f64> {
+        self.coflows.iter().filter_map(|c| c.cct()).collect()
+    }
+
+    pub fn avg_jct(&self) -> f64 {
+        stats::mean(&self.jcts())
+    }
+
+    pub fn p95_jct(&self) -> f64 {
+        stats::percentile(&self.jcts(), 95.0)
+    }
+
+    pub fn avg_cct(&self) -> f64 {
+        stats::mean(&self.ccts())
+    }
+
+    pub fn p95_cct(&self) -> f64 {
+        stats::percentile(&self.ccts(), 95.0)
+    }
+
+    /// Average WAN utilization over the busy period.
+    pub fn utilization(&self) -> f64 {
+        if self.capacity_gbit > 0.0 {
+            self.transferred_gbit / self.capacity_gbit
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of deadline-bearing coflows that met their deadline.
+    pub fn deadline_met_fraction(&self) -> f64 {
+        let with_d: Vec<&CoflowRecord> =
+            self.coflows.iter().filter(|c| c.deadline.is_some()).collect();
+        if with_d.is_empty() {
+            return 0.0;
+        }
+        with_d.iter().filter(|c| c.met_deadline()).count() as f64 / with_d.len() as f64
+    }
+
+    /// Average coflow slowdown vs an empty WAN.
+    pub fn avg_slowdown(&self) -> f64 {
+        stats::mean(&self.coflows.iter().filter_map(|c| c.slowdown()).collect::<Vec<_>>())
+    }
+
+    /// Number of coflows that never finished (starved / partitioned).
+    pub fn unfinished(&self) -> usize {
+        self.coflows.iter().filter(|c| c.admitted && c.finish.is_none()).count()
+    }
+
+    /// Pearson correlation between per-job total WAN bytes and JCT-based
+    /// factor-of-improvement requires two reports; see
+    /// [`foi_volume_correlation`].
+    pub fn job_jct_map(&self) -> std::collections::HashMap<u64, f64> {
+        self.jobs.iter().filter_map(|j| j.jct().map(|t| (j.id, t))).collect()
+    }
+}
+
+/// Factor of improvement of `ours` w.r.t. `baseline`
+/// (`FoI = T_baseline / T_ours`, > 1 means `ours` wins).
+pub fn foi(baseline: f64, ours: f64) -> f64 {
+    if ours > 0.0 {
+        baseline / ours
+    } else {
+        f64::INFINITY
+    }
+}
+
+/// Pearson r between job volume and per-job FoI (paper §6.3 reports
+/// -0.05..-0.39: smaller jobs benefit more).
+pub fn foi_volume_correlation(ours: &Report, baseline: &Report) -> f64 {
+    let base = baseline.job_jct_map();
+    let mut vols = Vec::new();
+    let mut fois = Vec::new();
+    for j in &ours.jobs {
+        if let (Some(jct), Some(&bjct)) = (j.jct(), base.get(&j.id)) {
+            vols.push(j.volume);
+            fois.push(bjct / jct.max(1e-9));
+        }
+    }
+    stats::pearson(&vols, &fois)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(arrival: f64, finish: f64, min_cct: f64, deadline: Option<f64>) -> CoflowRecord {
+        CoflowRecord {
+            id: 0,
+            job: None,
+            arrival,
+            finish: Some(finish),
+            volume: 1.0,
+            min_cct,
+            deadline,
+            admitted: true,
+        }
+    }
+
+    #[test]
+    fn cct_and_slowdown() {
+        let r = rec(10.0, 18.0, 4.0, None);
+        assert!((r.cct().unwrap() - 8.0).abs() < 1e-12);
+        assert!((r.slowdown().unwrap() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deadline_met() {
+        assert!(rec(0.0, 5.0, 1.0, Some(6.0)).met_deadline());
+        assert!(!rec(0.0, 7.0, 1.0, Some(6.0)).met_deadline());
+        let mut r = rec(0.0, 5.0, 1.0, Some(6.0));
+        r.admitted = false;
+        assert!(!r.met_deadline());
+    }
+
+    #[test]
+    fn report_aggregates() {
+        let mut rep = Report::default();
+        rep.coflows.push(rec(0.0, 4.0, 2.0, Some(10.0)));
+        rep.coflows.push(rec(0.0, 12.0, 2.0, Some(10.0)));
+        rep.jobs.push(JobRecord { id: 1, arrival: 0.0, finish: Some(10.0), volume: 5.0 });
+        rep.transferred_gbit = 50.0;
+        rep.capacity_gbit = 100.0;
+        assert!((rep.avg_cct() - 8.0).abs() < 1e-12);
+        assert!((rep.avg_jct() - 10.0).abs() < 1e-12);
+        assert!((rep.utilization() - 0.5).abs() < 1e-12);
+        assert!((rep.deadline_met_fraction() - 0.5).abs() < 1e-12);
+        assert!((rep.avg_slowdown() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn foi_direction() {
+        assert!((foi(14.0, 7.0) - 2.0).abs() < 1e-12);
+        assert!(foi(7.0, 14.0) < 1.0);
+    }
+}

@@ -1,0 +1,120 @@
+//! Benchmark harness for the `harness = false` benches (the environment has
+//! no `criterion`). Provides warmup + timed iterations with mean/p50/p95
+//! reporting, and a table printer that renders the paper-style rows each
+//! bench regenerates.
+
+use std::time::Instant;
+
+/// Measure a closure: `warmup` untimed runs, then `iters` timed runs.
+/// Returns per-iteration durations in seconds.
+pub fn time_n(warmup: usize, iters: usize, mut f: impl FnMut()) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        out.push(t0.elapsed().as_secs_f64());
+    }
+    out
+}
+
+/// Report a timing series under a label, criterion-style.
+pub fn report(label: &str, secs: &[f64]) {
+    use crate::util::stats;
+    let mean = stats::mean(secs);
+    let p50 = stats::percentile(secs, 50.0);
+    let p95 = stats::percentile(secs, 95.0);
+    println!(
+        "{label:<48} mean {:>10}  p50 {:>10}  p95 {:>10}  (n={})",
+        fmt_dur(mean),
+        fmt_dur(p50),
+        fmt_dur(p95),
+        secs.len()
+    );
+}
+
+/// Human-readable duration.
+pub fn fmt_dur(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}us", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+/// Simple fixed-width table printer for paper-style result tables.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self, title: &str) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n== {title} ==");
+        let hdr: Vec<String> =
+            self.headers.iter().zip(&widths).map(|(h, w)| format!("{h:<w$}")).collect();
+        println!("{}", hdr.join("  "));
+        println!("{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+        for row in &self.rows {
+            let line: Vec<String> =
+                row.iter().zip(&widths).map(|(c, w)| format!("{c:<w$}")).collect();
+            println!("{}", line.join("  "));
+        }
+    }
+}
+
+/// True when the bench should run in scaled-down mode (default for
+/// `cargo bench`); set `TERRA_BENCH_FULL=1` for full paper-scale runs.
+pub fn quick_mode() -> bool {
+    std::env::var("TERRA_BENCH_FULL").map(|v| v != "1").unwrap_or(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_n_counts() {
+        let mut n = 0;
+        let t = time_n(2, 5, || n += 1);
+        assert_eq!(t.len(), 5);
+        assert_eq!(n, 7);
+        assert!(t.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn fmt_dur_ranges() {
+        assert!(fmt_dur(2.5).ends_with('s'));
+        assert!(fmt_dur(2.5e-3).ends_with("ms"));
+        assert!(fmt_dur(2.5e-6).ends_with("us"));
+        assert!(fmt_dur(2.5e-9).ends_with("ns"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["x".to_string()]);
+    }
+}

@@ -1,0 +1,12 @@
+//! Small self-contained substrates the offline build environment lacks:
+//! a seedable RNG, JSON emit/parse, descriptive statistics, a mini
+//! property-testing harness, a CLI argument parser, and a benchmark harness
+//! used by the `harness = false` benches.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logger;
+pub mod prop;
+pub mod rng;
+pub mod stats;

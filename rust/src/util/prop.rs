@@ -1,0 +1,114 @@
+//! A miniature property-based testing harness (the environment has no
+//! `proptest`). Runs a property over many seeded-random cases and, on
+//! failure, retries with a smaller "size" parameter to report a small
+//! counterexample. Used by `rust/tests/prop_invariants.rs` for the
+//! coordinator invariants (capacity feasibility, flow conservation,
+//! Lemma 3.1, scheduler dominance, simulator conservation).
+
+use crate::util::rng::Pcg32;
+
+/// Configuration for a property run.
+pub struct PropConfig {
+    /// Number of random cases.
+    pub cases: usize,
+    /// Base seed; each case forks a child RNG.
+    pub seed: u64,
+    /// Maximum "size" hint passed to the generator (cases sweep 1..=max_size).
+    pub max_size: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 100, seed: 0xC0FFEE, max_size: 24 }
+    }
+}
+
+/// Run `gen` to build a case of the given size, then `check` it.
+/// `check` returns `Err(reason)` to fail. Panics with the counterexample's
+/// seed, size, and Debug rendering on failure (after attempting to find a
+/// smaller failing size).
+pub fn forall<T: std::fmt::Debug>(
+    cfg: PropConfig,
+    gen: impl Fn(&mut Pcg32, usize) -> T,
+    check: impl Fn(&T) -> Result<(), String>,
+) {
+    let mut root = Pcg32::new(cfg.seed);
+    let mut failure: Option<(u64, usize, T, String)> = None;
+    for case in 0..cfg.cases {
+        let child_seed = root.next_u64();
+        let size = 1 + (case * cfg.max_size / cfg.cases.max(1)) % cfg.max_size;
+        let mut rng = Pcg32::new(child_seed);
+        let input = gen(&mut rng, size);
+        if let Err(reason) = check(&input) {
+            // Shrink pass: same seed, smaller sizes.
+            let mut best = (child_seed, size, input, reason);
+            for s in 1..size {
+                let mut rng = Pcg32::new(child_seed);
+                let small = gen(&mut rng, s);
+                if let Err(r) = check(&small) {
+                    best = (child_seed, s, small, r);
+                    break;
+                }
+            }
+            failure = Some(best);
+            break;
+        }
+    }
+    if let Some((seed, size, input, reason)) = failure {
+        panic!(
+            "property failed (seed={seed:#x}, size={size}): {reason}\ncounterexample: {input:#?}"
+        );
+    }
+}
+
+/// Convenience: assert two floats are within a relative-or-absolute epsilon.
+pub fn close(a: f64, b: f64, eps: f64) -> Result<(), String> {
+    let tol = eps * (1.0 + a.abs().max(b.abs()));
+    if (a - b).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!("{a} !~= {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_true_property() {
+        forall(
+            PropConfig { cases: 50, ..Default::default() },
+            |rng, size| (0..size).map(|_| rng.f64()).collect::<Vec<_>>(),
+            |xs| {
+                if xs.iter().all(|x| (0.0..1.0).contains(x)) {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_false_property() {
+        forall(
+            PropConfig { cases: 50, ..Default::default() },
+            |rng, size| (0..size).map(|_| rng.below(10)).collect::<Vec<_>>(),
+            |xs| {
+                if xs.len() < 5 {
+                    Ok(())
+                } else {
+                    Err("too long".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn close_tolerance() {
+        assert!(close(1.0, 1.0 + 1e-9, 1e-6).is_ok());
+        assert!(close(1.0, 1.1, 1e-6).is_err());
+    }
+}

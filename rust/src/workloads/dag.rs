@@ -1,0 +1,197 @@
+//! DAG-shaped benchmark jobs (BigBench / TPC-DS / TPC-H) and task placement.
+//!
+//! Query plans compiled by Calcite and executed by Tez form DAGs whose
+//! shape depends on the benchmark: TPC-H queries are mostly scan→join→agg
+//! chains; TPC-DS adds more multi-way joins; BigBench ("BB") adds the
+//! widest plans (UDF/ML stages over many tables). Volumes scale with the
+//! per-job scale factor drawn from [40, 100] (§6.1).
+
+use super::{WorkloadConfig, WorkloadKind};
+use crate::coflow::{Flow, GB};
+use crate::net::Wan;
+use crate::sim::{Job, Stage};
+use crate::util::rng::Pcg32;
+
+/// Stage-count range per benchmark (inclusive).
+fn stage_range(kind: WorkloadKind) -> (usize, usize) {
+    match kind {
+        WorkloadKind::TpcH => (2, 5),
+        WorkloadKind::TpcDs => (3, 8),
+        WorkloadKind::BigBench => (4, 12),
+        WorkloadKind::Fb => (1, 1),
+    }
+}
+
+/// Probability a non-root stage has two parents (join) instead of one.
+fn join_prob(kind: WorkloadKind) -> f64 {
+    match kind {
+        WorkloadKind::TpcH => 0.25,
+        WorkloadKind::TpcDs => 0.4,
+        WorkloadKind::BigBench => 0.5,
+        WorkloadKind::Fb => 0.0,
+    }
+}
+
+/// Pick the datacenters holding a table: a random subset of size
+/// 1..=(N/2 + 1) (§6.1 input placement).
+pub fn table_placement(wan: &Wan, rng: &mut Pcg32) -> Vec<usize> {
+    let n = wan.num_nodes();
+    let max_span = n / 2 + 1;
+    let span = 1 + rng.below(max_span);
+    rng.sample_indices(n, span)
+}
+
+/// Build the shuffle flows for one stage: every source task in the source
+/// datacenters sends to every destination task (hash partitioning), with
+/// datacenter locality for the tasks themselves.
+#[allow(clippy::too_many_arguments)]
+pub fn shuffle_flows(
+    src_dcs: &[usize],
+    dst_dcs: &[usize],
+    tasks_per_src_dc: usize,
+    tasks_per_dst_dc: usize,
+    total_volume: f64,
+    rng: &mut Pcg32,
+) -> Vec<Flow> {
+    let m = src_dcs.len() * tasks_per_src_dc;
+    let r = dst_dcs.len() * tasks_per_dst_dc;
+    if m == 0 || r == 0 || total_volume <= 0.0 {
+        return Vec::new();
+    }
+    let mut flows = Vec::with_capacity(m * r);
+    let mut id = 0u64;
+    // Mapper outputs are roughly balanced; add ±25% jitter per flow and
+    // renormalize to the stage volume.
+    let mut raw = Vec::with_capacity(m * r);
+    for &s in src_dcs {
+        for _ in 0..tasks_per_src_dc {
+            for &d in dst_dcs {
+                for _ in 0..tasks_per_dst_dc {
+                    raw.push((s, d, rng.uniform(0.75, 1.25)));
+                }
+            }
+        }
+    }
+    let sum: f64 = raw.iter().map(|r| r.2).sum();
+    for (s, d, w) in raw {
+        flows.push(Flow { id, src_dc: s, dst_dc: d, volume: total_volume * w / sum });
+        id += 1;
+    }
+    flows
+}
+
+/// Generate one benchmark job.
+pub fn benchmark_job(
+    id: u64,
+    arrival: f64,
+    wan: &Wan,
+    kind: WorkloadKind,
+    cfg: &WorkloadConfig,
+    rng: &mut Pcg32,
+) -> Job {
+    let (lo, hi) = stage_range(kind);
+    let num_stages = rng.range(lo as i64, hi as i64) as usize;
+    // Scale factor 40..=100 drives volumes (§6.1).
+    let scale = rng.uniform(40.0, 100.0);
+    // Tasks per datacenter: bounded by machines (one task per machine wave).
+    let tasks_per_dc = (cfg.machines_per_dc / 10).clamp(1, 16);
+
+    let mut stages: Vec<Stage> = Vec::with_capacity(num_stages);
+    // Each stage's output lives where its (reduce) tasks ran.
+    let mut out_dcs: Vec<Vec<usize>> = Vec::with_capacity(num_stages);
+    for s in 0..num_stages {
+        let deps: Vec<usize> = if s == 0 {
+            vec![]
+        } else if s >= 2 && rng.chance(join_prob(kind)) {
+            let a = rng.below(s);
+            let mut b = rng.below(s);
+            while b == a {
+                b = rng.below(s);
+            }
+            vec![a.min(b), a.max(b)]
+        } else {
+            vec![rng.below(s)]
+        };
+        // Source datacenters: where the inputs live (tables for roots,
+        // parent outputs otherwise).
+        let src_dcs: Vec<usize> = if deps.is_empty() {
+            table_placement(wan, rng)
+        } else {
+            let mut v: Vec<usize> = deps.iter().flat_map(|&d| out_dcs[d].clone()).collect();
+            v.sort_unstable();
+            v.dedup();
+            v
+        };
+        // Destination: later stages aggregate toward fewer datacenters.
+        let dst_span = if s + 1 == num_stages { 1 } else { 1 + rng.below(2.min(src_dcs.len())) };
+        let dst_dcs = rng.sample_indices(wan.num_nodes(), dst_span);
+
+        // Per-stage shuffle volume: the scale factor sets the base table
+        // size; intermediate data shrinks as the plan aggregates.
+        let depth_shrink = 0.7f64.powi(s as i32);
+        let gb = scale * rng.lognormal(0.0, 0.6) * depth_shrink * cfg.volume_scale;
+        let flows =
+            shuffle_flows(&src_dcs, &dst_dcs, tasks_per_dc, tasks_per_dc, gb * GB, rng);
+
+        // Computation time: total work divided over the machines running
+        // tasks (Fig 14's T_comp).
+        let work_machine_seconds = scale * rng.uniform(1.0, 3.0);
+        let machines = (src_dcs.len() * cfg.machines_per_dc).max(1);
+        let compute_s = work_machine_seconds * 10.0 / machines as f64;
+
+        stages.push(Stage { deps, compute_s, flows, deadline: None });
+        out_dcs.push(dst_dcs);
+    }
+    Job { id, arrival, stages }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::topologies;
+
+    #[test]
+    fn placement_respects_span_limit() {
+        let wan = topologies::swan(); // N=5 -> max span 3
+        let mut rng = Pcg32::new(3);
+        for _ in 0..200 {
+            let p = table_placement(&wan, &mut rng);
+            assert!(!p.is_empty() && p.len() <= 3, "{p:?}");
+            let mut q = p.clone();
+            q.sort_unstable();
+            q.dedup();
+            assert_eq!(q.len(), p.len(), "duplicate DCs");
+        }
+    }
+
+    #[test]
+    fn shuffle_flow_volume_conserved() {
+        let mut rng = Pcg32::new(5);
+        let flows = shuffle_flows(&[0, 1], &[2], 3, 2, 100.0, &mut rng);
+        assert_eq!(flows.len(), 2 * 3 * 2);
+        let total: f64 = flows.iter().map(|f| f.volume).sum();
+        assert!((total - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn benchmark_job_reasonable() {
+        let wan = topologies::swan();
+        let cfg = WorkloadConfig::new(WorkloadKind::BigBench, 1);
+        let mut rng = Pcg32::new(17);
+        for i in 0..30 {
+            let j = benchmark_job(i, 0.0, &wan, WorkloadKind::BigBench, &cfg, &mut rng);
+            j.validate().unwrap();
+            assert!(!j.stages.is_empty());
+            assert!(j.stages.iter().all(|s| s.compute_s >= 0.0));
+            // Jobs should have meaningful WAN traffic most of the time.
+        }
+        // At least some jobs have WAN volume.
+        let total: f64 = (0..20)
+            .map(|i| {
+                benchmark_job(100 + i, 0.0, &wan, WorkloadKind::BigBench, &cfg, &mut rng)
+                    .total_volume()
+            })
+            .sum();
+        assert!(total > 0.0);
+    }
+}

@@ -1,0 +1,68 @@
+//! Deadline assignment for the Fig 8 experiments: each coflow's deadline is
+//! set to `d ×` its minimum CCT in an empty WAN (§6.4), computed with the
+//! same Optimization (1) solver the controller uses.
+
+use crate::lp;
+use crate::net::paths::PathSet;
+use crate::net::Wan;
+use crate::scheduler::{build_instance, CoflowState, NetView, DEFAULT_K};
+use crate::sim::Job;
+
+/// Set `stage.deadline = d * min_cct(stage coflow)` for every WAN stage of
+/// every job. Stages without WAN flows keep no deadline.
+pub fn assign_deadlines(jobs: &mut [Job], wan: &Wan, d: f64) {
+    let paths = PathSet::compute(wan, DEFAULT_K);
+    let net = NetView { wan, paths: &paths };
+    let caps = wan.capacities();
+    for job in jobs.iter_mut() {
+        for stage in job.stages.iter_mut() {
+            let coflow = crate::coflow::Coflow::new(0, stage.flows.clone());
+            let st = CoflowState::from_coflow(&coflow);
+            if st.groups.is_empty() {
+                continue;
+            }
+            let (inst, _) = build_instance(&st.groups, &st.remaining, &caps, &net, DEFAULT_K);
+            if let Some(sol) = lp::max_concurrent(&inst, lp::SolverKind::Gk) {
+                stage.deadline = Some(d * sol.gamma());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coflow::GB;
+    use crate::net::topologies;
+
+    #[test]
+    fn deadlines_scale_with_d() {
+        let wan = topologies::fig1a();
+        let mk = || {
+            vec![Job::map_reduce(
+                1,
+                0.0,
+                0.0,
+                vec![crate::coflow::Flow { id: 0, src_dc: 0, dst_dc: 1, volume: 5.0 * GB }],
+            )]
+        };
+        let mut j2 = mk();
+        assign_deadlines(&mut j2, &wan, 2.0);
+        let mut j4 = mk();
+        assign_deadlines(&mut j4, &wan, 4.0);
+        let d2 = j2[0].stages[0].deadline.unwrap();
+        let d4 = j4[0].stages[0].deadline.unwrap();
+        // min CCT = 2 s on fig1a (two 10 Gbps paths for 40 Gbit); the GK
+        // solver is an ε-approximation, so allow its tolerance band.
+        assert!((d2 - 4.0).abs() < 0.3, "d2={d2}");
+        assert!((d4 / d2 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stages_without_wan_flows_skipped() {
+        let wan = topologies::fig1a();
+        let mut jobs = vec![Job::map_reduce(1, 0.0, 5.0, vec![])];
+        assign_deadlines(&mut jobs, &wan, 3.0);
+        assert!(jobs[0].stages[0].deadline.is_none());
+    }
+}

@@ -1,0 +1,87 @@
+//! Facebook-trace workload: 526 simple MapReduce jobs with the published
+//! coflow benchmark's heavy skew — "most jobs have little to no traffic,
+//! while a few have most of the tasks and account for almost all the
+//! volume" (§6.2.1). We reproduce the skew with a three-band mixture whose
+//! tail is bounded-Pareto, consistent with the SWIM/coflow-benchmark
+//! statistics (>50% of coflows under 10 MB; the top few percent carrying
+//! ~99% of bytes).
+
+use super::WorkloadConfig;
+use crate::coflow::MB;
+use crate::net::Wan;
+use crate::sim::Job;
+use crate::util::rng::Pcg32;
+use crate::workloads::dag::{shuffle_flows, table_placement};
+
+/// Number of jobs in the paper's FB workload.
+pub const FB_NUM_JOBS: usize = 526;
+
+/// Draw a coflow volume (Gbit) with the FB trace's skew.
+pub fn fb_volume(rng: &mut Pcg32) -> f64 {
+    let r = rng.f64();
+    let mb = if r < 0.52 {
+        // Short control/metadata shuffles.
+        rng.uniform(0.5, 10.0)
+    } else if r < 0.90 {
+        // Mid-size shuffles.
+        rng.uniform(10.0, 1_000.0)
+    } else {
+        // Heavy tail: up to ~2 TB, Pareto-shaped.
+        rng.pareto(1_000.0, 2_000_000.0, 0.65)
+    };
+    mb * MB
+}
+
+/// Number of mapper/reducer tasks correlates with volume in the trace.
+fn width_for(volume_gbit: f64, machines_per_dc: usize, rng: &mut Pcg32) -> usize {
+    let base = (volume_gbit / 4.0).sqrt().ceil() as usize;
+    (base + rng.below(3)).clamp(1, machines_per_dc.max(1))
+}
+
+/// One FB MapReduce job: a single shuffle stage, negligible compute.
+pub fn fb_job(id: u64, arrival: f64, wan: &Wan, cfg: &WorkloadConfig, rng: &mut Pcg32) -> Job {
+    let volume = fb_volume(rng) * cfg.volume_scale;
+    let src_dcs = table_placement(wan, rng);
+    let dst_span = 1 + rng.below((wan.num_nodes() / 2).max(1));
+    let dst_dcs = rng.sample_indices(wan.num_nodes(), dst_span);
+    let per_dc_tasks = width_for(volume, cfg.machines_per_dc, rng);
+    let flows = shuffle_flows(&src_dcs, &dst_dcs, per_dc_tasks, per_dc_tasks.min(4), volume, rng);
+    // FB jobs in the trace are communication-dominated; tiny map time.
+    let compute_s = rng.uniform(0.5, 3.0);
+    Job::map_reduce(id, arrival, compute_s, flows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::topologies;
+    use crate::util::stats;
+
+    #[test]
+    fn volume_distribution_is_skewed() {
+        let mut rng = Pcg32::new(99);
+        let vols: Vec<f64> = (0..5_000).map(|_| fb_volume(&mut rng)).collect();
+        let mean = stats::mean(&vols);
+        let med = stats::median(&vols);
+        // Heavy tail: mean far above median.
+        assert!(mean > 8.0 * med, "mean={mean} median={med}");
+        // Top 10% should carry the overwhelming share of bytes.
+        let mut sorted = vols.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let total: f64 = sorted.iter().sum();
+        let top10: f64 = sorted[sorted.len() * 9 / 10..].iter().sum();
+        assert!(top10 / total > 0.85, "top10 share = {}", top10 / total);
+    }
+
+    #[test]
+    fn fb_jobs_single_stage() {
+        let wan = topologies::swan();
+        let cfg = WorkloadConfig::new(super::super::WorkloadKind::Fb, 3);
+        let mut rng = Pcg32::new(5);
+        for i in 0..50 {
+            let j = fb_job(i, 1.0, &wan, &cfg, &mut rng);
+            assert_eq!(j.stages.len(), 1);
+            j.validate().unwrap();
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! Workload generators for the paper's four evaluation workloads (§6.1):
+//! BigBench, TPC-DS, TPC-H (complex DAG jobs with scale factors 40–100,
+//! lasting minutes to tens of minutes) and the Facebook trace (526 simple
+//! MapReduce jobs with heavily-skewed coflow sizes).
+//!
+//! We do not run the SQL engines; what the WAN scheduler sees is the DAG of
+//! stages, task placements, and shuffle byte volumes. The generators
+//! reproduce those statistics:
+//!
+//! - **DAG shapes** per benchmark (chains for TPC-H, bushier join trees for
+//!   TPC-DS, widest for BigBench) as produced by Calcite/Tez query plans;
+//! - **placement**: each input table spans at most `N/2 + 1` of `N`
+//!   datacenters; tasks run datacenter-local (§6.1);
+//! - **volumes**: per-stage shuffles scaled by a per-job scale factor in
+//!   [40, 100]; FB volumes follow the published trace's heavy tail (most
+//!   coflows are tiny, a few carry nearly all bytes);
+//! - **arrivals**: Poisson, matching "an arrival distribution similar to
+//!   that in production traces".
+
+pub mod dag;
+pub mod deadlines;
+pub mod fb;
+
+pub use deadlines::assign_deadlines;
+
+use crate::net::Wan;
+use crate::sim::Job;
+use crate::util::rng::Pcg32;
+
+/// Which workload to generate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkloadKind {
+    BigBench,
+    TpcDs,
+    TpcH,
+    Fb,
+}
+
+impl WorkloadKind {
+    pub fn all() -> [WorkloadKind; 4] {
+        [WorkloadKind::BigBench, WorkloadKind::Fb, WorkloadKind::TpcDs, WorkloadKind::TpcH]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkloadKind::BigBench => "bigbench",
+            WorkloadKind::TpcDs => "tpcds",
+            WorkloadKind::TpcH => "tpch",
+            WorkloadKind::Fb => "fb",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<WorkloadKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "bigbench" | "bb" => Some(WorkloadKind::BigBench),
+            "tpcds" | "tpc-ds" => Some(WorkloadKind::TpcDs),
+            "tpch" | "tpc-h" => Some(WorkloadKind::TpcH),
+            "fb" | "facebook" => Some(WorkloadKind::Fb),
+            _ => None,
+        }
+    }
+}
+
+/// Generation knobs. Defaults follow §6.1.
+#[derive(Clone, Debug)]
+pub struct WorkloadConfig {
+    pub kind: WorkloadKind,
+    pub seed: u64,
+    /// Machines per datacenter (10 on the testbed, 100 in simulations).
+    pub machines_per_dc: usize,
+    /// Multiplier on the Poisson arrival rate (Fig 13 load scaling).
+    pub arrival_scale: f64,
+    /// Multiplier on shuffle volumes ("increasing load by making jobs
+    /// larger", §6.7).
+    pub volume_scale: f64,
+}
+
+impl WorkloadConfig {
+    pub fn new(kind: WorkloadKind, seed: u64) -> WorkloadConfig {
+        WorkloadConfig {
+            kind,
+            seed,
+            machines_per_dc: 100,
+            arrival_scale: 1.0,
+            volume_scale: 1.0,
+        }
+    }
+}
+
+/// The workload generator.
+pub struct WorkloadGen {
+    cfg: WorkloadConfig,
+    rng: Pcg32,
+}
+
+impl WorkloadGen {
+    pub fn new(kind: WorkloadKind, seed: u64) -> WorkloadGen {
+        WorkloadGen::with_config(WorkloadConfig::new(kind, seed))
+    }
+
+    pub fn with_config(cfg: WorkloadConfig) -> WorkloadGen {
+        let rng = Pcg32::new(cfg.seed ^ 0x7E44A);
+        WorkloadGen { cfg, rng }
+    }
+
+    /// Generate `n` jobs over the given WAN with Poisson arrivals.
+    pub fn jobs(&mut self, wan: &Wan, n: usize) -> Vec<Job> {
+        // Mean inter-arrival tuned so a few jobs overlap at any time
+        // (matching the production-trace-like arrival pattern): benchmark
+        // jobs take minutes, FB jobs are shorter and arrive denser.
+        let base_iat = match self.cfg.kind {
+            WorkloadKind::Fb => 12.0,
+            _ => 30.0,
+        };
+        let mut t = 0.0;
+        let mut out = Vec::with_capacity(n);
+        for id in 0..n {
+            t += self.rng.exp(base_iat / self.cfg.arrival_scale);
+            let mut job_rng = self.rng.fork(id as u64);
+            let job = match self.cfg.kind {
+                WorkloadKind::Fb => fb::fb_job(id as u64, t, wan, &self.cfg, &mut job_rng),
+                kind => dag::benchmark_job(id as u64, t, wan, kind, &self.cfg, &mut job_rng),
+            };
+            out.push(job);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::topologies;
+
+    #[test]
+    fn generates_requested_count_deterministically() {
+        let wan = topologies::swan();
+        for kind in WorkloadKind::all() {
+            let a = WorkloadGen::new(kind, 42).jobs(&wan, 20);
+            let b = WorkloadGen::new(kind, 42).jobs(&wan, 20);
+            assert_eq!(a.len(), 20);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.arrival, y.arrival, "{kind:?} not deterministic");
+                assert_eq!(x.total_volume(), y.total_volume());
+            }
+            // All DAGs valid, arrivals increasing.
+            let mut last = 0.0;
+            for j in &a {
+                j.validate().unwrap();
+                assert!(j.arrival >= last);
+                last = j.arrival;
+            }
+        }
+    }
+
+    #[test]
+    fn kinds_have_distinct_shapes() {
+        let wan = topologies::swan();
+        let avg_stages = |kind| {
+            let jobs = WorkloadGen::new(kind, 7).jobs(&wan, 40);
+            jobs.iter().map(|j| j.stages.len()).sum::<usize>() as f64 / 40.0
+        };
+        let fb = avg_stages(WorkloadKind::Fb);
+        let tpch = avg_stages(WorkloadKind::TpcH);
+        let bb = avg_stages(WorkloadKind::BigBench);
+        assert!((fb - 1.0).abs() < 1e-9, "FB jobs are single-stage MapReduce");
+        assert!(tpch > 1.5, "tpch={tpch}");
+        assert!(bb > tpch, "bigbench ({bb}) should be more complex than tpch ({tpch})");
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for kind in WorkloadKind::all() {
+            assert_eq!(WorkloadKind::by_name(kind.name()), Some(kind));
+        }
+    }
+
+    #[test]
+    fn volume_scale_scales() {
+        let wan = topologies::swan();
+        let mut c1 = WorkloadConfig::new(WorkloadKind::BigBench, 5);
+        c1.volume_scale = 1.0;
+        let mut c2 = c1.clone();
+        c2.volume_scale = 3.0;
+        let v1: f64 =
+            WorkloadGen::with_config(c1).jobs(&wan, 20).iter().map(|j| j.total_volume()).sum();
+        let v2: f64 =
+            WorkloadGen::with_config(c2).jobs(&wan, 20).iter().map(|j| j.total_volume()).sum();
+        assert!((v2 / v1 - 3.0).abs() < 0.01, "ratio={}", v2 / v1);
+    }
+
+    #[test]
+    fn arrival_scale_compresses() {
+        let wan = topologies::swan();
+        let mut c1 = WorkloadConfig::new(WorkloadKind::TpcDs, 5);
+        c1.arrival_scale = 1.0;
+        let mut c2 = c1.clone();
+        c2.arrival_scale = 2.0;
+        let last1 = WorkloadGen::with_config(c1).jobs(&wan, 30).last().unwrap().arrival;
+        let last2 = WorkloadGen::with_config(c2).jobs(&wan, 30).last().unwrap().arrival;
+        assert!(last2 < last1, "{last2} < {last1}");
+    }
+}

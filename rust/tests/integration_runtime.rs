@@ -1,0 +1,76 @@
+//! Runtime integration: the whole stack with the AOT JAX/PDHG solver on the
+//! scheduling hot path (rust -> PJRT -> Pallas-lowered HLO), validated
+//! against the native-solver run.
+
+use std::sync::Arc;
+use terra::net::topologies;
+use terra::runtime::JaxSolver;
+use terra::scheduler::terra::TerraPolicy;
+use terra::sim::{SimConfig, Simulation};
+use terra::workloads::{WorkloadConfig, WorkloadGen, WorkloadKind};
+
+fn artifacts() -> Option<Arc<JaxSolver>> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Arc::new(JaxSolver::load("artifacts").expect("load artifacts")))
+}
+
+#[test]
+fn jax_solver_end_to_end_sim() {
+    let Some(solver) = artifacts() else { return };
+    let wan = topologies::swan();
+    let mk_jobs = || {
+        let cfg = WorkloadConfig::new(WorkloadKind::TpcH, 21);
+        WorkloadGen::with_config(cfg).jobs(&wan, 6)
+    };
+    let mut native = Simulation::new(
+        wan.clone(),
+        Box::new(TerraPolicy::default()),
+        SimConfig::default(),
+    );
+    let native_rep = native.run_jobs(mk_jobs());
+
+    let mut jax = Simulation::new(
+        wan.clone(),
+        Box::new(TerraPolicy::default().with_jax(solver)),
+        SimConfig::default(),
+    );
+    let jax_rep = jax.run_jobs(mk_jobs());
+
+    assert_eq!(jax_rep.unfinished(), 0);
+    // Same workload, interchangeable solvers: JCTs agree within the PDHG
+    // approximation band.
+    let ratio = jax_rep.avg_jct() / native_rep.avg_jct();
+    assert!(
+        (0.8..1.25).contains(&ratio),
+        "jax avg JCT {} vs native {} (ratio {ratio})",
+        jax_rep.avg_jct(),
+        native_rep.avg_jct()
+    );
+}
+
+#[test]
+fn jax_solver_handles_all_swan_pairs() {
+    let Some(solver) = artifacts() else { return };
+    let wan = topologies::swan();
+    let paths = terra::net::paths::PathSet::compute(&wan, 15);
+    for s in 0..wan.num_nodes() {
+        for d in 0..wan.num_nodes() {
+            if s == d {
+                continue;
+            }
+            let inst = terra::lp::McfInstance {
+                cap: wan.capacities(),
+                groups: vec![terra::lp::GroupDemand {
+                    volume: 80.0,
+                    paths: paths.get(s, d).iter().map(|p| p.edges.clone()).collect(),
+                }],
+            };
+            let sol = solver.solve(&wan, &inst).expect("solve");
+            inst.check(&sol, 1e-3).unwrap();
+            assert!(sol.lambda > 0.0);
+        }
+    }
+}

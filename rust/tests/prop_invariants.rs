@@ -1,0 +1,275 @@
+//! Property-based tests (via the in-tree `util::prop` harness) for the
+//! coordinator's core invariants: capacity feasibility, equal progress,
+//! Lemma 3.1, solver agreement, scheduler dominance, simulator
+//! conservation, and admission safety.
+
+use terra::coflow::{coalesce, Coflow, Flow};
+use terra::lp::{self, GroupDemand, McfInstance, SolverKind};
+use terra::net::paths::PathSet;
+use terra::net::topologies;
+use terra::scheduler::terra::{TerraConfig, TerraPolicy};
+use terra::scheduler::{CoflowState, NetView, Policy, RoundTrigger};
+use terra::sim::{Job, SimConfig, Simulation};
+use terra::util::prop::{forall, PropConfig};
+use terra::util::rng::Pcg32;
+
+/// Random coflow set on the SWAN topology.
+fn gen_coflows(rng: &mut Pcg32, size: usize) -> Vec<Coflow> {
+    let n = 5;
+    let num = 1 + rng.below(size.max(1));
+    (0..num)
+        .map(|i| {
+            let flows = (0..1 + rng.below(6))
+                .map(|f| {
+                    let s = rng.below(n);
+                    let mut d = rng.below(n);
+                    while d == s {
+                        d = rng.below(n);
+                    }
+                    Flow { id: f as u64, src_dc: s, dst_dc: d, volume: rng.uniform(1.0, 200.0) }
+                })
+                .collect();
+            Coflow::new(i as u64 + 1, flows)
+        })
+        .collect()
+}
+
+#[test]
+fn prop_allocations_always_feasible_and_conserving() {
+    let wan = topologies::swan();
+    let paths = PathSet::compute(&wan, 15);
+    forall(
+        PropConfig { cases: 60, seed: 0xA11, max_size: 8 },
+        gen_coflows,
+        |coflows| {
+            let states: Vec<CoflowState> =
+                coflows.iter().map(CoflowState::from_coflow).collect();
+            let mut policy = TerraPolicy::default();
+            let net = NetView { wan: &wan, paths: &paths };
+            let alloc = policy.allocate(0.0, RoundTrigger::Initial, &states, &net);
+            // Capacity feasibility on every edge.
+            let usage = alloc.edge_usage(&states, &net, wan.num_edges());
+            for (e, (u, c)) in usage.iter().zip(wan.capacities()).enumerate() {
+                if *u > c * (1.0 + 1e-4) + 1e-6 {
+                    return Err(format!("edge {e} oversubscribed: {u} > {c}"));
+                }
+            }
+            // No rate assigned to nonexistent paths; all rates nonnegative.
+            for st in &states {
+                if let Some(rates) = alloc.rates.get(&st.id) {
+                    for (gi, g) in st.groups.iter().enumerate() {
+                        let np = paths.get(g.src, g.dst).len();
+                        if rates[gi].len() > np {
+                            return Err(format!("more rates than paths for {gi}"));
+                        }
+                        if rates[gi].iter().any(|r| *r < -1e-9) {
+                            return Err("negative rate".into());
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_lemma31_grouping_preserves_cct() {
+    // Lemma 3.1: splitting a FlowGroup's volume across its constituent
+    // flows in ANY work-conserving way leaves the group completion time
+    // unchanged — i.e. the LP's λ depends only on the per-pair totals.
+    let wan = topologies::swan();
+    let paths = PathSet::compute(&wan, 15);
+    forall(
+        PropConfig { cases: 40, seed: 0x31, max_size: 6 },
+        |rng, size| {
+            let mut flows = Vec::new();
+            for f in 0..1 + rng.below(size.max(1)) {
+                let s = rng.below(5);
+                let mut d = rng.below(5);
+                while d == s {
+                    d = rng.below(5);
+                }
+                flows.push(Flow {
+                    id: f as u64,
+                    src_dc: s,
+                    dst_dc: d,
+                    volume: rng.uniform(1.0, 100.0),
+                });
+            }
+            // A random re-split of the same totals into more flows.
+            let mut resplit = Vec::new();
+            let mut id = 0;
+            for fl in &flows {
+                let parts = 1 + rng.below(4);
+                for _ in 0..parts {
+                    resplit.push(Flow {
+                        id,
+                        src_dc: fl.src_dc,
+                        dst_dc: fl.dst_dc,
+                        volume: fl.volume / parts as f64,
+                    });
+                    id += 1;
+                }
+            }
+            (flows, resplit)
+        },
+        |(flows, resplit)| {
+            let inst = |fs: &[Flow]| {
+                let groups = coalesce(fs)
+                    .into_iter()
+                    .map(|g| GroupDemand {
+                        volume: g.volume,
+                        paths: paths.get(g.src, g.dst).iter().map(|p| p.edges.clone()).collect(),
+                    })
+                    .collect();
+                McfInstance { cap: wan.capacities(), groups }
+            };
+            let a = lp::max_concurrent(&inst(flows), SolverKind::Simplex)
+                .ok_or("infeasible a")?;
+            let b = lp::max_concurrent(&inst(resplit), SolverKind::Simplex)
+                .ok_or("infeasible b")?;
+            terra::util::prop::close(a.lambda, b.lambda, 1e-6)
+        },
+    );
+}
+
+#[test]
+fn prop_gk_close_to_simplex() {
+    let wan = topologies::swan();
+    let paths = PathSet::compute(&wan, 15);
+    forall(
+        PropConfig { cases: 40, seed: 0x6B, max_size: 6 },
+        gen_coflows,
+        |coflows| {
+            let groups: Vec<GroupDemand> = coflows
+                .iter()
+                .flat_map(|c| c.flow_groups())
+                .map(|g| GroupDemand {
+                    volume: g.volume,
+                    paths: paths.get(g.src, g.dst).iter().map(|p| p.edges.clone()).collect(),
+                })
+                .collect();
+            if groups.is_empty() {
+                return Ok(());
+            }
+            let inst = McfInstance { cap: wan.capacities(), groups };
+            let sx = lp::max_concurrent(&inst, SolverKind::Simplex).ok_or("simplex failed")?;
+            let gk = lp::max_concurrent(&inst, SolverKind::Gk).ok_or("gk failed")?;
+            inst.check(&gk, 1e-6).map_err(|e| e.to_string())?;
+            if gk.lambda < 0.85 * sx.lambda || gk.lambda > sx.lambda * (1.0 + 1e-6) {
+                return Err(format!("gk {} vs simplex {}", gk.lambda, sx.lambda));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_simulator_conserves_bytes() {
+    let wan = topologies::swan();
+    forall(
+        PropConfig { cases: 25, seed: 0x51AD, max_size: 6 },
+        |rng, size| {
+            let coflows = gen_coflows(rng, size);
+            coflows
+                .into_iter()
+                .enumerate()
+                .map(|(i, c)| Job::map_reduce(i as u64, rng.uniform(0.0, 30.0), 0.0, c.flows))
+                .collect::<Vec<_>>()
+        },
+        |jobs| {
+            let expected: f64 = jobs.iter().map(|j| j.total_volume()).sum();
+            let mut sim = Simulation::new(
+                wan.clone(),
+                Box::new(TerraPolicy::default()),
+                SimConfig::default(),
+            );
+            let rep = sim.run_jobs(jobs.clone());
+            if rep.unfinished() > 0 {
+                return Err("unfinished coflows on a healthy WAN".into());
+            }
+            terra::util::prop::close(rep.transferred_gbit, expected, 1e-6)
+        },
+    );
+}
+
+#[test]
+fn prop_terra_no_worse_than_fifo_order() {
+    // SRTF-style ordering should beat (or match) arrival-order scheduling
+    // on average CCT for same-time arrivals.
+    let wan = topologies::swan();
+    forall(
+        PropConfig { cases: 15, seed: 0xF1F0, max_size: 5 },
+        gen_coflows,
+        |coflows| {
+            let jobs: Vec<Job> = coflows
+                .iter()
+                .enumerate()
+                .map(|(i, c)| Job::map_reduce(i as u64, 0.0, 0.0, c.flows.clone()))
+                .collect();
+            let mut terra_sim = Simulation::new(
+                wan.clone(),
+                Box::new(TerraPolicy::new(TerraConfig { alpha: 0.0, ..Default::default() })),
+                SimConfig::default(),
+            );
+            let t = terra_sim.run_jobs(jobs.clone());
+            let mut fair_sim = Simulation::new(
+                wan.clone(),
+                terra::baselines::by_name("per-flow").unwrap(),
+                SimConfig::default(),
+            );
+            let f = fair_sim.run_jobs(jobs);
+            // Allow a small tolerance: per-flow can win tiny instances by
+            // luck of the GK approximation.
+            if t.avg_cct() > f.avg_cct() * 1.12 + 0.5 {
+                return Err(format!("terra {} vs per-flow {}", t.avg_cct(), f.avg_cct()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_admission_is_sound_in_static_network() {
+    // Any coflow admitted alone on an idle WAN must be able to meet its
+    // deadline (η = 1): Γ ≤ D at admission implies completion ≤ D.
+    let wan = topologies::swan();
+    forall(
+        PropConfig { cases: 30, seed: 0xADA, max_size: 5 },
+        |rng, size| {
+            let c = gen_coflows(rng, size).remove(0);
+            let d = rng.uniform(1.0, 120.0);
+            (c, d)
+        },
+        |(c, d)| {
+            let mut job = Job::map_reduce(1, 0.0, 0.0, c.flows.clone());
+            job.stages[0].deadline = Some(*d);
+            let mut sim = Simulation::new(
+                wan.clone(),
+                Box::new(TerraPolicy::default()),
+                SimConfig::default(),
+            );
+            let rep = sim.run_jobs(vec![job]);
+            let rec = &rep.coflows[0];
+            if rec.admitted {
+                if !rec.met_deadline() {
+                    return Err(format!(
+                        "admitted but missed: cct {:?} deadline {:?}",
+                        rec.cct(),
+                        rec.deadline
+                    ));
+                }
+            } else {
+                // Rejected => the deadline was genuinely tight: min CCT > d.
+                if rec.min_cct <= *d * 0.9 {
+                    return Err(format!(
+                        "rejected although min_cct {} << d {}",
+                        rec.min_cct, d
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
