@@ -1,6 +1,19 @@
-//! Bench: regenerate Figure 13 (arrival-rate/load scaling on SWAN).
+//! Bench: regenerate Figure 13 (arrival-rate/load scaling on SWAN), plus a
+//! round-latency microbenchmark of the shared `RoundEngine` that tracks the
+//! incremental re-optimization speedup across PRs: p50/p99 round latency
+//! and LP solves per round at 100/500/2000 active coflows, cold (per-round
+//! re-solve of every standalone Γ) vs Γ-cached. Results are written to
+//! `BENCH_round_latency.json`.
+use terra::engine::{EngineConfig, RoundEngine};
 use terra::experiments::fig13_load;
+use terra::net::{topologies, Wan};
+use terra::scheduler::terra::{TerraConfig, TerraPolicy};
+use terra::scheduler::{CoflowState, RoundTrigger};
 use terra::util::bench::{quick_mode, report, time_n, Table};
+use terra::util::json::Json;
+use terra::util::rng::Pcg32;
+use terra::util::stats;
+use std::time::Instant;
 
 fn main() {
     let jobs = if quick_mode() { 15 } else { 150 };
@@ -12,4 +25,124 @@ fn main() {
         tab.row(&[format!("{:.1}x", r.arrival_scale), format!("{:.2}x", r.foi_avg_jct)]);
     }
     tab.print("Figure 13: FoI grows with load");
+
+    round_latency_bench();
+}
+
+/// Random active coflows over the SWAN sites (1–3 FlowGroups each).
+fn mk_states(wan: &Wan, n: usize, seed: u64) -> Vec<CoflowState> {
+    let mut rng = Pcg32::new(seed);
+    let nodes = wan.num_nodes();
+    (0..n)
+        .map(|i| {
+            let flows = (0..1 + rng.below(3))
+                .map(|f| {
+                    let s = rng.below(nodes);
+                    let mut d = rng.below(nodes);
+                    while d == s {
+                        d = rng.below(nodes);
+                    }
+                    terra::coflow::Flow {
+                        id: f as u64,
+                        src_dc: s,
+                        dst_dc: d,
+                        volume: rng.uniform(10.0, 400.0),
+                    }
+                })
+                .collect();
+            let mut st =
+                CoflowState::from_coflow(&terra::coflow::Coflow::new(i as u64 + 1, flows));
+            st.admitted = true;
+            st
+        })
+        .collect()
+}
+
+struct ModeResult {
+    p50_ms: f64,
+    p99_ms: f64,
+    lp_per_round: f64,
+    gamma_hits_per_round: f64,
+}
+
+/// Time steady-state rounds at `n` active coflows. Both modes get one
+/// untimed populate round first, so "cached" measures warm steady state
+/// and "cold" measures the pre-incremental per-round cost.
+fn bench_mode(n: usize, cold: bool, rounds: usize) -> ModeResult {
+    let wan = topologies::swan();
+    let states = mk_states(&wan, n, 0xF13 + n as u64);
+    let policy = TerraPolicy::new(TerraConfig::default());
+    let mut engine = RoundEngine::new(
+        wan,
+        Box::new(policy),
+        EngineConfig { check_feasibility: false, cold, ..Default::default() },
+    );
+    for st in states {
+        engine.insert(st);
+    }
+    engine.round(0.0, RoundTrigger::Initial);
+    engine.take_stats(); // drop populate-round counters
+    let mut lat = Vec::with_capacity(rounds);
+    let mut now = 0.0;
+    for _ in 0..rounds {
+        engine.drain(0.05, 0.0);
+        now += 0.05;
+        let t0 = Instant::now();
+        engine.round(now, RoundTrigger::CoflowArrival);
+        lat.push(t0.elapsed().as_secs_f64());
+    }
+    let st = engine.take_stats();
+    ModeResult {
+        p50_ms: 1e3 * stats::percentile(&lat, 50.0),
+        p99_ms: 1e3 * stats::percentile(&lat, 99.0),
+        lp_per_round: st.lp_solves as f64 / rounds as f64,
+        gamma_hits_per_round: st.gamma_cache_hits as f64 / rounds as f64,
+    }
+}
+
+fn mode_json(m: &ModeResult) -> Json {
+    let mut o = Json::obj();
+    o.set("p50_ms", m.p50_ms.into())
+        .set("p99_ms", m.p99_ms.into())
+        .set("lp_solves_per_round", m.lp_per_round.into())
+        .set("gamma_cache_hits_per_round", m.gamma_hits_per_round.into());
+    o
+}
+
+fn round_latency_bench() {
+    let rounds = if quick_mode() { 3 } else { 10 };
+    let scales: &[usize] = &[100, 500, 2000];
+    let mut tab = Table::new(&[
+        "active", "cold p50", "cold p99", "cold LPs/rd", "cached p50", "cached p99",
+        "cached LPs/rd",
+    ]);
+    let mut out_scales = Vec::new();
+    for &n in scales {
+        let cold = bench_mode(n, true, rounds);
+        let cached = bench_mode(n, false, rounds);
+        tab.row(&[
+            n.to_string(),
+            format!("{:.1}ms", cold.p50_ms),
+            format!("{:.1}ms", cold.p99_ms),
+            format!("{:.1}", cold.lp_per_round),
+            format!("{:.1}ms", cached.p50_ms),
+            format!("{:.1}ms", cached.p99_ms),
+            format!("{:.1}", cached.lp_per_round),
+        ]);
+        let mut row = Json::obj();
+        row.set("active_coflows", n.into())
+            .set("cold", mode_json(&cold))
+            .set("cached", mode_json(&cached));
+        out_scales.push(row);
+    }
+    tab.print("RoundEngine steady-state round latency (cold vs Γ-cached)");
+    let mut doc = Json::obj();
+    doc.set("topology", "swan".into())
+        .set("rounds_timed", rounds.into())
+        .set("scales", Json::Arr(out_scales));
+    let path = "BENCH_round_latency.json";
+    match std::fs::write(path, format!("{doc}\n")) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
 }

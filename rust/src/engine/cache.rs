@@ -1,0 +1,154 @@
+//! The Γ-cache: memoized standalone minimum-CCT solves keyed by
+//! `(coflow id, WAN capacity epoch)`.
+//!
+//! Terra's round begins by computing every active coflow's standalone Γ (its
+//! min CCT via Optimization (1)) just to *order* coflows — one LP per active
+//! coflow per round, the dominant per-round cost at scale (§6.6, Fig 13–14).
+//! Γ only depends on the coflow's FlowGroup shape and the WAN capacities, so
+//! across rounds it changes in exactly three ways:
+//!
+//! 1. **WAN capacity epoch bump** — a qualifying WAN event (structural
+//!    change, a fluctuation ≥ ρ, or accumulated sub-ρ drift reaching ρ)
+//!    changed the capacities every solve was made against. Entries from
+//!    older epochs are *lazily* invalid: the epoch is stored per entry and
+//!    checked on lookup.
+//! 2. **Dirty coflow** — a FlowGroup completed, the coflow was updated
+//!    (`updateCoflow`, §5.2), or it finished: its group shape changed
+//!    discontinuously, so its entry is dropped eagerly
+//!    ([`GammaCache::invalidate`]).
+//! 3. **Continuous drain** — remaining volume shrinks between rounds. Under
+//!    equal-progress allocations every group of a coflow drains
+//!    proportionally, and Optimization (1) is positively homogeneous in the
+//!    volumes: Γ(c·rem) = c·Γ(rem). Lookups therefore rescale the cached Γ
+//!    by `total_remaining_now / total_remaining_at_solve` instead of
+//!    invalidating. (Work-conservation bonuses bend exact proportionality;
+//!    the rescaled Γ is only used for SRTF *ordering*, where the small error
+//!    is harmless — allocations themselves are always re-solved.)
+
+use crate::coflow::CoflowId;
+use std::collections::HashMap;
+
+#[derive(Clone, Debug)]
+struct Entry {
+    epoch: u64,
+    /// Total remaining volume (Gbit) at solve time, for the homogeneity
+    /// rescale on lookup.
+    total_remaining: f64,
+    gamma: f64,
+}
+
+/// Cache of standalone Γ values, owned by the
+/// [`crate::engine::RoundEngine`] and handed to cache-aware policies via
+/// [`crate::scheduler::RoundCtx`].
+#[derive(Clone, Debug, Default)]
+pub struct GammaCache {
+    epoch: u64,
+    entries: HashMap<CoflowId, Entry>,
+}
+
+impl GammaCache {
+    pub fn new() -> GammaCache {
+        GammaCache::default()
+    }
+
+    /// Current WAN capacity epoch. Entries stored under older epochs never
+    /// hit.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Invalidate every entry by advancing the epoch (qualifying WAN
+    /// event). O(1): staleness is checked lazily on lookup.
+    pub fn bump_epoch(&mut self) {
+        self.epoch += 1;
+    }
+
+    /// Cached Γ for `id` rescaled to `total_remaining`, or `None` on a miss
+    /// (absent, stale epoch, or a degenerate entry).
+    pub fn lookup(&self, id: CoflowId, total_remaining: f64) -> Option<f64> {
+        let e = self.entries.get(&id)?;
+        if e.epoch != self.epoch {
+            return None;
+        }
+        if !e.gamma.is_finite() {
+            // Infeasible stays infeasible within an epoch (same capacities,
+            // same paths): reuse without rescaling.
+            return Some(e.gamma);
+        }
+        if e.total_remaining <= 1e-9 || total_remaining <= 0.0 {
+            return None;
+        }
+        Some(e.gamma * total_remaining / e.total_remaining)
+    }
+
+    /// Record a fresh solve under the current epoch.
+    pub fn store(&mut self, id: CoflowId, total_remaining: f64, gamma: f64) {
+        self.entries.insert(id, Entry { epoch: self.epoch, total_remaining, gamma });
+    }
+
+    /// Drop one coflow's entry (FlowGroup completion, update, finish).
+    pub fn invalidate(&mut self, id: CoflowId) {
+        self.entries.remove(&id);
+    }
+
+    /// Drop everything (e.g. the path set changed structurally).
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+
+    /// Number of live (current-epoch) entries.
+    pub fn len(&self) -> usize {
+        self.entries.values().filter(|e| e.epoch == self.epoch).count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_rescales_by_remaining() {
+        let mut c = GammaCache::new();
+        c.store(1, 100.0, 5.0);
+        assert_eq!(c.lookup(1, 100.0), Some(5.0));
+        // Half the volume remains => half the Γ (homogeneity).
+        assert_eq!(c.lookup(1, 50.0), Some(2.5));
+        assert_eq!(c.lookup(2, 50.0), None);
+    }
+
+    #[test]
+    fn epoch_bump_invalidates_lazily() {
+        let mut c = GammaCache::new();
+        c.store(1, 100.0, 5.0);
+        assert_eq!(c.len(), 1);
+        c.bump_epoch();
+        assert_eq!(c.lookup(1, 100.0), None);
+        assert!(c.is_empty());
+        // Re-store under the new epoch hits again.
+        c.store(1, 80.0, 6.0);
+        assert_eq!(c.lookup(1, 40.0), Some(3.0));
+    }
+
+    #[test]
+    fn invalidate_drops_single_entry() {
+        let mut c = GammaCache::new();
+        c.store(1, 10.0, 1.0);
+        c.store(2, 10.0, 2.0);
+        c.invalidate(1);
+        assert_eq!(c.lookup(1, 10.0), None);
+        assert_eq!(c.lookup(2, 10.0), Some(2.0));
+    }
+
+    #[test]
+    fn infinite_gamma_reused_within_epoch() {
+        let mut c = GammaCache::new();
+        c.store(1, 10.0, f64::INFINITY);
+        assert_eq!(c.lookup(1, 5.0), Some(f64::INFINITY));
+        c.bump_epoch();
+        assert_eq!(c.lookup(1, 5.0), None);
+    }
+}

@@ -1,0 +1,589 @@
+//! The **RoundEngine**: the one shared implementation of Terra's scheduling
+//! round, driven by both the flow-level simulator ([`crate::sim`]) and the
+//! overlay controller ([`crate::overlay`]).
+//!
+//! Terra's online algorithm (§3.1.3) re-runs joint routing + scheduling on
+//! every coflow arrival, FlowGroup/coflow completion, and significant WAN
+//! event. The engine owns everything that decision loop needs:
+//!
+//! - the WAN view and its k-shortest-path sets (recomputed on structural
+//!   events, §4.4),
+//! - the active-coflow table ([`CoflowState`]s, with incremental draining),
+//! - ρ-dampened WAN-event filtering: sub-threshold bandwidth fluctuations
+//!   clamp the current allocation instead of re-optimizing (§3.1.3),
+//! - round triggering and execution through the [`Policy`] interface,
+//! - allocation feasibility checking (debug/tests),
+//! - per-round instrumentation ([`RoundStats`]),
+//! - **incremental re-optimization**: a [`GammaCache`] of standalone
+//!   min-CCT solves keyed by `(coflow, WAN capacity epoch)` with dirty-set
+//!   invalidation, plus warm-starting of the GK solver from the previous
+//!   round's allocation.
+//!
+//! Drivers differ only in how they learn about time and events: the
+//! simulator advances virtual time and feeds completions from its event
+//! heap; the controller drains by wall-clock time and feeds agent reports.
+//! Both call the same [`RoundEngine`] entry points, which is what keeps the
+//! two planes behaviorally identical (the §6.1 methodology) and is enforced
+//! by the `integration_engine` parity test.
+
+pub mod cache;
+
+pub use cache::GammaCache;
+
+use crate::coflow::CoflowId;
+use crate::lp;
+use crate::net::paths::PathSet;
+use crate::net::{LinkEvent, Wan};
+use crate::scheduler::{
+    build_instance, Allocation, CoflowState, NetView, Policy, RoundCtx, RoundStats, RoundTrigger,
+};
+
+/// Engine knobs shared by both drivers.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Bandwidth-fluctuation threshold ρ for re-optimization (§3.1.3);
+    /// events below it clamp instead of re-optimizing.
+    pub rho: f64,
+    /// Assert allocation feasibility after every round (tests/debug).
+    pub check_feasibility: bool,
+    /// Disable the Γ-cache and GK warm starts (cold per-round solves, the
+    /// pre-incremental behavior; used by the round-latency benchmarks).
+    pub cold: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            rho: crate::scheduler::DEFAULT_RHO,
+            check_feasibility: cfg!(debug_assertions),
+            cold: false,
+        }
+    }
+}
+
+/// What [`RoundEngine::handle_wan_event`] did with an event; tells the
+/// driver whether (and why) to run a round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WanReaction {
+    /// Topology changed (fail/recover): paths recomputed, epoch bumped —
+    /// run a round; the controller must also reinstall rules/peers.
+    Structural,
+    /// Capacity fluctuation ≥ ρ: epoch bumped — run a round.
+    Reoptimize,
+    /// Sub-ρ fluctuation: current allocation clamped back to feasibility,
+    /// no round needed (and the Γ-cache stays warm).
+    Clamped,
+}
+
+impl WanReaction {
+    /// The round trigger this reaction implies, if any.
+    pub fn trigger(&self) -> Option<RoundTrigger> {
+        match self {
+            WanReaction::Structural | WanReaction::Reoptimize => Some(RoundTrigger::WanChange),
+            WanReaction::Clamped => None,
+        }
+    }
+}
+
+/// The shared round engine. See the module docs for responsibilities.
+pub struct RoundEngine {
+    wan: Wan,
+    paths: PathSet,
+    policy: Box<dyn Policy>,
+    cfg: EngineConfig,
+    k: usize,
+    active: Vec<CoflowState>,
+    alloc: Allocation,
+    cache: GammaCache,
+    /// False after a structural event until the next round: the previous
+    /// allocation's path indices no longer match the path sets, so it must
+    /// not seed warm starts.
+    warm_valid: bool,
+    /// Cumulative fractional capacity drift from sub-ρ events since the
+    /// last epoch bump. Individually ignorable fluctuations must not be
+    /// collectively ignorable: once they add up to ρ, cached Γ values are
+    /// as stale as after one qualifying event, so the epoch is bumped
+    /// (rounds still trigger per-event, as in the paper).
+    drift: f64,
+    rounds: usize,
+}
+
+impl RoundEngine {
+    /// Build an engine around a WAN and a policy; path sets are computed
+    /// for the policy's k.
+    pub fn new(wan: Wan, policy: Box<dyn Policy>, cfg: EngineConfig) -> RoundEngine {
+        let k = policy.k_paths();
+        RoundEngine::with_k(wan, policy, cfg, k)
+    }
+
+    /// [`RoundEngine::new`] with an explicit path count (the overlay
+    /// testbed wires `k` persistent connections per agent pair, which may
+    /// be fewer than the policy's default).
+    pub fn with_k(
+        wan: Wan,
+        policy: Box<dyn Policy>,
+        cfg: EngineConfig,
+        k: usize,
+    ) -> RoundEngine {
+        let paths = PathSet::compute(&wan, k);
+        RoundEngine {
+            wan,
+            paths,
+            policy,
+            cfg,
+            k,
+            active: Vec::new(),
+            alloc: Allocation::default(),
+            cache: GammaCache::new(),
+            warm_valid: false,
+            drift: 0.0,
+            rounds: 0,
+        }
+    }
+
+    pub fn wan(&self) -> &Wan {
+        &self.wan
+    }
+
+    pub fn paths(&self) -> &PathSet {
+        &self.paths
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    pub fn k_paths(&self) -> usize {
+        self.k
+    }
+
+    /// Current WAN capacity epoch (bumped by qualifying WAN events).
+    pub fn epoch(&self) -> u64 {
+        self.cache.epoch()
+    }
+
+    /// Rounds executed so far.
+    pub fn rounds(&self) -> usize {
+        self.rounds
+    }
+
+    /// The most recent allocation.
+    pub fn alloc(&self) -> &Allocation {
+        &self.alloc
+    }
+
+    /// All active (admitted, unfinished) coflows.
+    pub fn active(&self) -> &[CoflowState] {
+        &self.active
+    }
+
+    pub fn len(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.active.is_empty()
+    }
+
+    pub fn get(&self, id: CoflowId) -> Option<&CoflowState> {
+        self.active.iter().find(|c| c.id == id)
+    }
+
+    /// Mutable access for drivers that extend coflows in place
+    /// (`updateCoflow`, §5.2). Callers that change the group shape must
+    /// [`RoundEngine::mark_dirty`] afterwards.
+    pub fn get_mut(&mut self, id: CoflowId) -> Option<&mut CoflowState> {
+        self.active.iter_mut().find(|c| c.id == id)
+    }
+
+    /// Add a coflow to the active table (does not run a round).
+    pub fn insert(&mut self, st: CoflowState) {
+        self.cache.invalidate(st.id);
+        self.active.push(st);
+    }
+
+    /// Drop a coflow's Γ-cache entry after a discontinuous change to its
+    /// remaining volumes (group completion, update).
+    pub fn mark_dirty(&mut self, id: CoflowId) {
+        self.cache.invalidate(id);
+    }
+
+    /// Deadline admission control against the current active set (§3.2).
+    pub fn admit(&mut self, now: f64, candidate: &CoflowState) -> bool {
+        let RoundEngine { wan, paths, policy, active, .. } = self;
+        let net = NetView { wan, paths };
+        policy.admit(now, candidate, active, &net)
+    }
+
+    /// Minimum CCT of a coflow alone on the *full* WAN (for slowdown and
+    /// deadline metrics). Not counted in policy LP stats, like the
+    /// pre-engine simulator implementation.
+    pub fn standalone_min_cct(&self, st: &CoflowState) -> f64 {
+        let net = NetView { wan: &self.wan, paths: &self.paths };
+        let (inst, _) =
+            build_instance(&st.groups, &st.remaining, &self.wan.capacities(), &net, self.k);
+        if inst.groups.is_empty() {
+            return 0.0;
+        }
+        lp::max_concurrent(&inst, lp::SolverKind::Gk).map(|s| s.gamma()).unwrap_or(f64::INFINITY)
+    }
+
+    /// Apply a WAN event with ρ-dampened filtering (§3.1.3): structural
+    /// events recompute paths and bump the capacity epoch; fluctuations ≥ ρ
+    /// bump the epoch; smaller fluctuations clamp the current allocation.
+    /// The caller runs a round iff [`WanReaction::trigger`] is `Some`.
+    pub fn handle_wan_event(&mut self, ev: &LinkEvent) -> WanReaction {
+        let frac = self.wan.apply_event(ev);
+        let structural = matches!(ev, LinkEvent::Fail(..) | LinkEvent::Recover(..));
+        if structural {
+            // Recompute viable paths (§4.4); previous path indices are
+            // meaningless now, so drop warm-start state too.
+            self.paths = PathSet::compute(&self.wan, self.k);
+            self.cache.bump_epoch();
+            self.drift = 0.0;
+            self.warm_valid = false;
+            WanReaction::Structural
+        } else if frac >= self.cfg.rho {
+            self.cache.bump_epoch();
+            self.drift = 0.0;
+            WanReaction::Reoptimize
+        } else {
+            // Sub-ρ: no round, but cumulative drift must not let cached Γ
+            // values rot forever — once the ignored fluctuations add up to
+            // ρ, invalidate the cache (next round re-solves fresh, which is
+            // exactly the pre-cache behavior).
+            self.drift += frac;
+            if self.drift >= self.cfg.rho {
+                self.cache.bump_epoch();
+                self.drift = 0.0;
+            }
+            self.clamp_alloc();
+            WanReaction::Clamped
+        }
+    }
+
+    /// Run one scheduling round: hand the policy the active set, the
+    /// Γ-cache, and the previous allocation as a warm start.
+    pub fn round(&mut self, now: f64, trigger: RoundTrigger) -> &Allocation {
+        let RoundEngine { wan, paths, policy, cfg, active, alloc, cache, warm_valid, .. } = self;
+        let net = NetView { wan, paths };
+        let new_alloc = if cfg.cold {
+            policy.allocate(now, trigger, active, &net)
+        } else {
+            let warm = if *warm_valid && !alloc.rates.is_empty() { Some(&*alloc) } else { None };
+            let ctx = RoundCtx { trigger, epoch: cache.epoch(), cache, warm };
+            policy.allocate_with(now, ctx, active, &net)
+        };
+        self.alloc = new_alloc;
+        self.warm_valid = true;
+        self.rounds += 1;
+        if self.cfg.check_feasibility {
+            let net = NetView { wan: &self.wan, paths: &self.paths };
+            let usage = self.alloc.edge_usage(&self.active, &net, self.wan.num_edges());
+            for (e, (&u, c)) in usage.iter().zip(self.wan.capacities()).enumerate() {
+                assert!(
+                    u <= c * (1.0 + 1e-4) + 1e-6,
+                    "policy {} oversubscribed edge {e}: {u} > {c}",
+                    self.policy.name()
+                );
+            }
+        }
+        &self.alloc
+    }
+
+    /// Scale down rates on edges whose capacity dropped below usage
+    /// (sub-threshold fluctuations, no re-optimization).
+    pub fn clamp_alloc(&mut self) {
+        let net = NetView { wan: &self.wan, paths: &self.paths };
+        let usage = self.alloc.edge_usage(&self.active, &net, self.wan.num_edges());
+        let caps = self.wan.capacities();
+        let mut worst = 1.0f64;
+        for (&u, &c) in usage.iter().zip(&caps) {
+            if u > c && u > 1e-12 {
+                worst = worst.min(c / u);
+            }
+        }
+        if worst < 1.0 {
+            for rates in self.alloc.rates.values_mut() {
+                for g in rates {
+                    for r in g {
+                        *r *= worst;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Drain every active FlowGroup at the current allocation for `dt`
+    /// seconds. Remaining volumes are floored at `floor` (the controller
+    /// keeps a 1e-6 trickle until the agent confirms completion; the
+    /// simulator floors at 0). Returns the Gbit moved.
+    pub fn drain(&mut self, dt: f64, floor: f64) -> f64 {
+        if dt <= 0.0 {
+            return 0.0;
+        }
+        let mut moved = 0.0;
+        let mut emptied: Vec<CoflowId> = Vec::new();
+        for cf in &mut self.active {
+            let Some(rates) = self.alloc.rates.get(&cf.id) else { continue };
+            for (gi, rem) in cf.remaining.iter_mut().enumerate() {
+                if *rem <= 1e-9 {
+                    continue;
+                }
+                let rate: f64 = rates.get(gi).map(|r| r.iter().sum()).unwrap_or(0.0);
+                if rate <= 0.0 {
+                    continue;
+                }
+                let new = (*rem - rate * dt).max(floor.min(*rem));
+                moved += *rem - new;
+                *rem = new;
+                if new <= 1e-9 {
+                    // A FlowGroup just completed: the coflow's shape changed
+                    // discontinuously, so its cached Γ (which rescales by
+                    // *total* remaining, assuming proportional drain) is no
+                    // longer valid — same dirty rule `complete_group`
+                    // applies on the controller plane.
+                    emptied.push(cf.id);
+                }
+            }
+        }
+        for id in emptied {
+            self.cache.invalidate(id);
+        }
+        moved
+    }
+
+    /// Earliest absolute time any active FlowGroup empties at current
+    /// rates, or `None` when nothing is draining.
+    pub fn next_completion(&self, now: f64) -> Option<f64> {
+        let mut best: Option<f64> = None;
+        for cf in &self.active {
+            let Some(rates) = self.alloc.rates.get(&cf.id) else { continue };
+            for (gi, &rem) in cf.remaining.iter().enumerate() {
+                if rem <= 1e-9 {
+                    continue;
+                }
+                let rate: f64 = rates.get(gi).map(|r| r.iter().sum()).unwrap_or(0.0);
+                if rate > 1e-12 {
+                    let t = now + rem / rate;
+                    best = Some(best.map_or(t, |b: f64| b.min(t)));
+                }
+            }
+        }
+        best
+    }
+
+    /// Record an agent-confirmed FlowGroup completion (controller driver).
+    /// Returns true when the whole coflow is now done.
+    pub fn complete_group(&mut self, id: CoflowId, src: usize, dst: usize) -> bool {
+        let Some(cf) = self.active.iter_mut().find(|c| c.id == id) else { return false };
+        let mut hit = false;
+        for (gi, g) in cf.groups.iter().enumerate() {
+            if g.src == src && g.dst == dst {
+                cf.remaining[gi] = 0.0;
+                hit = true;
+            }
+        }
+        let done = cf.done();
+        if hit {
+            self.cache.invalidate(id);
+        }
+        done
+    }
+
+    /// Remove all finished coflows from the active table (and their
+    /// allocation and Γ-cache entries). Returns their ids.
+    pub fn take_finished(&mut self) -> Vec<CoflowId> {
+        let finished: Vec<CoflowId> =
+            self.active.iter().filter(|c| c.done()).map(|c| c.id).collect();
+        for id in &finished {
+            self.alloc.rates.remove(id);
+            self.cache.invalidate(*id);
+        }
+        self.active.retain(|c| !c.done());
+        finished
+    }
+
+    /// Current total scheduled rate (Gbps) of a coflow.
+    pub fn coflow_rate(&self, id: CoflowId) -> f64 {
+        self.alloc.rates.get(&id).map(|g| g.iter().flatten().sum()).unwrap_or(0.0)
+    }
+
+    /// A coflow's full rate matrix from the last round, if any.
+    pub fn coflow_rates(&self, id: CoflowId) -> Option<crate::scheduler::CoflowRates> {
+        self.alloc.rates.get(&id).cloned()
+    }
+
+    /// Drain the policy's instrumentation counters.
+    pub fn take_stats(&mut self) -> RoundStats {
+        self.policy.take_stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coflow::{Coflow, Flow, GB};
+    use crate::net::topologies;
+    use crate::scheduler::terra::{TerraConfig, TerraPolicy};
+
+    fn engine(cold: bool) -> RoundEngine {
+        let wan = topologies::fig1a();
+        let policy = TerraPolicy::new(TerraConfig { alpha: 0.0, ..Default::default() });
+        RoundEngine::new(
+            wan,
+            Box::new(policy),
+            EngineConfig { check_feasibility: true, cold, ..Default::default() },
+        )
+    }
+
+    fn coflow(id: u64, s: usize, d: usize, gb: f64) -> CoflowState {
+        CoflowState::from_coflow(&Coflow::new(
+            id,
+            vec![Flow { id: 0, src_dc: s, dst_dc: d, volume: gb * GB }],
+        ))
+    }
+
+    #[test]
+    fn round_drain_finish_lifecycle() {
+        let mut e = engine(false);
+        e.insert(coflow(1, 0, 1, 5.0)); // 40 Gbit, 20 Gbps across 2 paths
+        e.round(0.0, RoundTrigger::CoflowArrival);
+        assert_eq!(e.rounds(), 1);
+        let r = e.coflow_rate(1);
+        assert!((r - 20.0).abs() < 0.5, "rate={r}");
+        let done_at = e.next_completion(0.0).unwrap();
+        assert!((done_at - 2.0).abs() < 0.1, "t={done_at}");
+        let moved = e.drain(done_at, 0.0);
+        assert!((moved - 40.0).abs() < 1e-6, "moved={moved}");
+        assert_eq!(e.take_finished(), vec![1]);
+        assert!(e.is_empty());
+        assert_eq!(e.coflow_rate(1), 0.0);
+    }
+
+    #[test]
+    fn sub_rho_clamps_without_epoch_bump() {
+        let mut e = engine(false);
+        e.insert(coflow(1, 0, 1, 5.0));
+        e.round(0.0, RoundTrigger::CoflowArrival);
+        let epoch0 = e.epoch();
+        // 10% drop < rho=0.25: clamp, same epoch, no round required.
+        let reaction = e.handle_wan_event(&LinkEvent::SetBandwidth(0, 1, 9.0));
+        assert_eq!(reaction, WanReaction::Clamped);
+        assert!(reaction.trigger().is_none());
+        assert_eq!(e.epoch(), epoch0);
+        // Clamped allocation is feasible on the shrunk WAN.
+        let net = NetView { wan: e.wan(), paths: e.paths() };
+        let usage = e.alloc().edge_usage(e.active(), &net, e.wan().num_edges());
+        for (u, c) in usage.iter().zip(e.wan().capacities()) {
+            assert!(*u <= c + 1e-6, "{u} > {c}");
+        }
+    }
+
+    #[test]
+    fn accumulated_sub_rho_drift_bumps_epoch() {
+        let mut e = engine(false);
+        e.insert(coflow(1, 0, 1, 5.0));
+        e.round(0.0, RoundTrigger::CoflowArrival);
+        let epoch0 = e.epoch();
+        // Two 20% drops: each is sub-ρ (clamp, no round)...
+        assert_eq!(e.handle_wan_event(&LinkEvent::SetBandwidth(0, 1, 8.0)), WanReaction::Clamped);
+        assert_eq!(e.epoch(), epoch0, "single sub-ρ event must keep the cache");
+        assert_eq!(e.handle_wan_event(&LinkEvent::SetBandwidth(0, 1, 6.4)), WanReaction::Clamped);
+        // ...but together they moved capacity by ≥ ρ, so cached Γ values
+        // are stale and the epoch must have advanced.
+        assert_eq!(e.epoch(), epoch0 + 1, "cumulative drift must invalidate the Γ-cache");
+    }
+
+    #[test]
+    fn super_rho_and_structural_bump_epoch() {
+        let mut e = engine(false);
+        e.insert(coflow(1, 0, 1, 5.0));
+        e.round(0.0, RoundTrigger::CoflowArrival);
+        let epoch0 = e.epoch();
+        let reaction = e.handle_wan_event(&LinkEvent::SetBandwidth(0, 1, 4.0)); // 60% drop
+        assert_eq!(reaction, WanReaction::Reoptimize);
+        assert_eq!(e.epoch(), epoch0 + 1);
+        e.round(0.0, reaction.trigger().unwrap());
+        let reaction = e.handle_wan_event(&LinkEvent::Fail(0, 1));
+        assert_eq!(reaction, WanReaction::Structural);
+        assert_eq!(e.epoch(), epoch0 + 2);
+        e.round(0.0, RoundTrigger::WanChange);
+        // Direct path is gone: everything routes via C at 10 Gbps.
+        let r = e.coflow_rate(1);
+        assert!((r - 10.0).abs() < 0.5, "rate={r}");
+    }
+
+    #[test]
+    fn gamma_cache_cuts_lp_solves() {
+        let run = |cold: bool| -> (usize, usize) {
+            let mut e = engine(cold);
+            for i in 0..6 {
+                e.insert(coflow(i + 1, (i as usize) % 3, ((i as usize) + 1) % 3, 50.0));
+            }
+            e.round(0.0, RoundTrigger::CoflowArrival);
+            let first = e.take_stats().lp_solves;
+            // Re-rounds with no qualifying WAN change in between.
+            e.drain(0.1, 0.0);
+            e.round(0.1, RoundTrigger::CoflowArrival);
+            e.drain(0.1, 0.0);
+            e.round(0.2, RoundTrigger::CoflowArrival);
+            (first, e.take_stats().lp_solves)
+        };
+        let (cold_first, cold_rest) = run(true);
+        let (warm_first, warm_rest) = run(false);
+        // First rounds cost the same (cache is empty).
+        assert_eq!(cold_first, warm_first);
+        // Cached re-rounds skip the per-coflow ordering solves.
+        assert!(
+            warm_rest < cold_rest,
+            "cached rounds should solve fewer LPs: {warm_rest} vs {cold_rest}"
+        );
+    }
+
+    #[test]
+    fn drain_emptying_a_group_invalidates_gamma() {
+        let mut e = engine(false);
+        // Wildly unbalanced groups so one empties long before the other.
+        e.insert(CoflowState::from_coflow(&Coflow::new(
+            9,
+            vec![
+                Flow { id: 0, src_dc: 0, dst_dc: 1, volume: 4.0 },
+                Flow { id: 1, src_dc: 2, dst_dc: 1, volume: 400.0 },
+            ],
+        )));
+        e.round(0.0, RoundTrigger::CoflowArrival);
+        e.take_stats();
+        // No drain: the cached Γ is still valid.
+        e.round(0.1, RoundTrigger::CoflowArrival);
+        assert_eq!(e.take_stats().gamma_cache_hits, 1);
+        // Drain to the first group completion: the coflow's shape changed
+        // discontinuously, so the next round must re-solve Γ.
+        let t = e.next_completion(0.0).expect("something is draining");
+        e.drain(t, 0.0);
+        e.round(t, RoundTrigger::FlowGroupFinish);
+        assert_eq!(
+            e.take_stats().gamma_cache_hits,
+            0,
+            "group completion via drain must invalidate the Γ entry"
+        );
+    }
+
+    #[test]
+    fn complete_group_marks_done_and_dirty() {
+        let mut e = engine(false);
+        let st = CoflowState::from_coflow(&Coflow::new(
+            7,
+            vec![
+                Flow { id: 0, src_dc: 0, dst_dc: 1, volume: 8.0 },
+                Flow { id: 1, src_dc: 2, dst_dc: 1, volume: 8.0 },
+            ],
+        ));
+        e.insert(st);
+        e.round(0.0, RoundTrigger::CoflowArrival);
+        assert!(!e.complete_group(7, 0, 1), "one group left");
+        assert!(e.get(7).unwrap().remaining[0] <= 1e-12);
+        assert!(e.complete_group(7, 2, 1), "now done");
+        assert_eq!(e.take_finished(), vec![7]);
+    }
+}

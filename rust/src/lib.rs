@@ -7,6 +7,8 @@
 //!
 //! - the FlowGroup-coalesced joint scheduling-routing algorithm
 //!   ([`scheduler`], [`lp`]),
+//! - the shared incremental round engine driving it from both planes
+//!   ([`engine`]),
 //! - the WAN substrate with the paper's three topologies ([`net`]),
 //! - the flow-level simulator used for the paper's large-scale evaluation
 //!   ([`sim`]),
@@ -39,6 +41,7 @@
 pub mod api;
 pub mod baselines;
 pub mod coflow;
+pub mod engine;
 pub mod experiments;
 pub mod lp;
 pub mod net;

@@ -24,6 +24,21 @@ pub const DEFAULT_EPSILON: f64 = 0.05;
 /// Solve max concurrent flow. Returns `None` if some active group has no
 /// path with positive capacity.
 pub fn solve(inst: &McfInstance, eps: f64) -> Option<McfSolution> {
+    solve_warm(inst, eps, None)
+}
+
+/// [`solve`] with an optional warm start: `warm[k][p]` is the previous
+/// round's rate for group `k` on path `p` (extra/missing paths tolerated;
+/// rates on now-unusable paths are dropped). The warm rates are rescaled
+/// into an exactly-feasible equal-progress candidate whose λ (a) feeds the
+/// duality-gap early exit — so a near-optimal warm start ends the phase
+/// loop almost immediately — and (b) competes with the accumulated flow at
+/// the end, so the result is never worse than a cold solve.
+pub fn solve_warm(
+    inst: &McfInstance,
+    eps: f64,
+    warm: Option<&[Vec<f64>]>,
+) -> Option<McfSolution> {
     let active: Vec<usize> =
         inst.groups.iter().enumerate().filter(|(_, g)| g.volume > 0.0).map(|(k, _)| k).collect();
     if active.is_empty() {
@@ -62,6 +77,28 @@ pub fn solve(inst: &McfInstance, eps: f64) -> Option<McfSolution> {
     }
     let vols: Vec<f64> = inst.groups.iter().map(|g| g.volume * s).collect();
 
+    // Warm candidate: previous-round rates reshaped to this instance and
+    // rescaled onto the current capacities. `finalize` yields `None` when
+    // any active group lacks warm flow (e.g. a newly arrived coflow), in
+    // which case the warm start is simply unused.
+    let warm_sol: Option<McfSolution> = warm.and_then(|w| {
+        let mut xw: Vec<Vec<f64>> = Vec::with_capacity(inst.groups.len());
+        for (k, g) in inst.groups.iter().enumerate() {
+            let mut v: Vec<f64> = w.get(k).cloned().unwrap_or_default();
+            v.truncate(g.paths.len());
+            v.resize(g.paths.len(), 0.0);
+            for (p, r) in v.iter_mut().enumerate() {
+                let path = &g.paths[p];
+                if path.is_empty() || path.iter().any(|&e| inst.cap[e] <= 1e-12) || *r < 0.0 {
+                    *r = 0.0;
+                }
+            }
+            xw.push(v);
+        }
+        finalize(inst, &vols, xw)
+    });
+    let warm_lambda = warm_sol.as_ref().map(|sol| sol.lambda).unwrap_or(0.0);
+
     // Fleischer's δ with m = number of capacitated edges: guarantees the
     // initial D(l) = m·δ < 1 so at least ~1/ε phases run.
     let m = inst.cap.iter().filter(|&&c| c > 0.0).count().max(1) as f64;
@@ -99,20 +136,6 @@ pub fn solve(inst: &McfInstance, eps: f64) -> Option<McfSolution> {
     // against the dual bound lets us stop exactly when it does.
     while d < 1.0 && phases < max_phases {
         phases += 1;
-        if phases % 8 == 0 {
-            let lam = quick_lambda(inst, &vols, &x);
-            let alpha: f64 = active
-                .iter()
-                .map(|&k| {
-                    let dist =
-                        usable[k].iter().map(|&p| plen[k][p]).fold(f64::INFINITY, f64::min);
-                    vols[k] * dist
-                })
-                .sum();
-            if alpha > 0.0 && lam >= (d / alpha) * (1.0 - 0.75 * eps) {
-                break;
-            }
-        }
         for &k in &active {
             let mut remaining = vols[k];
             while remaining > 1e-12 && d < 1.0 {
@@ -144,9 +167,41 @@ pub fn solve(inst: &McfInstance, eps: f64) -> Option<McfSolution> {
                 }
             }
         }
+        // Duality-gap check *after* this phase's length updates (the bound
+        // is meaningless before any routing). With a warm candidate, check
+        // already at the end of phase 1: one phase usually tightens the
+        // dual enough to certify a near-optimal previous-round solution.
+        if phases % 8 == 0 || (phases == 1 && warm_lambda > 0.0) {
+            let lam = quick_lambda(inst, &vols, &x).max(warm_lambda);
+            let alpha: f64 = active
+                .iter()
+                .map(|&k| {
+                    let dist =
+                        usable[k].iter().map(|&p| plen[k][p]).fold(f64::INFINITY, f64::min);
+                    vols[k] * dist
+                })
+                .sum();
+            if alpha > 0.0 && lam >= (d / alpha) * (1.0 - 0.75 * eps) {
+                break;
+            }
+        }
     }
 
-    let mut sol = finalize(inst, &vols, x)?;
+    // Return the better of the accumulated flow and the warm candidate —
+    // both are exactly-feasible equal-progress allocations.
+    let acc_sol = finalize(inst, &vols, x);
+    let mut sol = match (acc_sol, warm_sol) {
+        (Some(a), Some(w)) => {
+            if w.lambda > a.lambda {
+                w
+            } else {
+                a
+            }
+        }
+        (Some(a), None) => a,
+        (None, Some(w)) => w,
+        (None, None) => return None,
+    };
     // Undo the demand normalization: rates already satisfy
     // Σ_p rate = λ_scaled · (s·v_k), so the real progress rate is λ_scaled·s.
     sol.lambda *= s;
@@ -300,6 +355,39 @@ mod tests {
                 sx.lambda
             );
         }
+    }
+
+    #[test]
+    fn warm_start_never_worse_and_tracks_drain() {
+        let inst = fig1a_inst(&[40.0, 80.0]);
+        let cold = solve(&inst, 0.02).unwrap();
+        // Same instance, warm-started from its own solution: identical or
+        // better λ, still exactly feasible.
+        let warm = solve_warm(&inst, 0.02, Some(&cold.rates)).unwrap();
+        inst.check(&warm, 1e-7).unwrap();
+        assert!(warm.lambda >= cold.lambda * (1.0 - 1e-9), "{} < {}", warm.lambda, cold.lambda);
+        // Proportionally drained volumes (the between-rounds case): the
+        // previous rates remain a valid warm start and quality holds.
+        let mut drained = inst.clone();
+        for g in &mut drained.groups {
+            g.volume *= 0.5;
+        }
+        let cold2 = solve(&drained, 0.02).unwrap();
+        let warm2 = solve_warm(&drained, 0.02, Some(&cold.rates)).unwrap();
+        drained.check(&warm2, 1e-7).unwrap();
+        assert!(warm2.lambda >= cold2.lambda * 0.95, "{} vs {}", warm2.lambda, cold2.lambda);
+    }
+
+    #[test]
+    fn warm_start_ignored_for_new_groups() {
+        // Warm rates cover only group 0; group 1 is new. The candidate
+        // cannot serve group 1, so the solver must fall back to a full
+        // solve and still satisfy both groups.
+        let inst = fig1a_inst(&[40.0, 40.0]);
+        let warm = vec![vec![5.0, 5.0]]; // only group 0
+        let sol = solve_warm(&inst, 0.02, Some(&warm)).unwrap();
+        inst.check(&sol, 1e-7).unwrap();
+        assert!(sol.rates[1].iter().sum::<f64>() > 1e-6);
     }
 
     #[test]

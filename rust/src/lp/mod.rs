@@ -125,6 +125,18 @@ pub enum SolverKind {
 /// Solve Optimization (1) for one coflow. Returns `None` when some group has
 /// no usable path (e.g. partitioned WAN) or all volumes are zero.
 pub fn max_concurrent(inst: &McfInstance, kind: SolverKind) -> Option<McfSolution> {
+    max_concurrent_warm(inst, kind, None)
+}
+
+/// [`max_concurrent`] with an optional warm start: `warm` is the previous
+/// round's per-(group, path) rates for the *same* group order (extra or
+/// missing paths are tolerated). Iterative solvers use it as a feasible
+/// candidate to terminate early; exact solvers ignore it.
+pub fn max_concurrent_warm(
+    inst: &McfInstance,
+    kind: SolverKind,
+    warm: Option<&[Vec<f64>]>,
+) -> Option<McfSolution> {
     // Guard: every active group needs at least one path with positive
     // bottleneck capacity.
     let mut any = false;
@@ -143,7 +155,7 @@ pub fn max_concurrent(inst: &McfInstance, kind: SolverKind) -> Option<McfSolutio
     }
     let sol = match kind {
         SolverKind::Simplex => solve_simplex(inst)?,
-        SolverKind::Gk => gk::solve(inst, gk::DEFAULT_EPSILON)?,
+        SolverKind::Gk => gk::solve_warm(inst, gk::DEFAULT_EPSILON, warm)?,
     };
     debug_assert!(inst.check(&sol, 1e-6).is_ok(), "{:?}", inst.check(&sol, 1e-6));
     Some(sol)

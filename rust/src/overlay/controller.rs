@@ -2,15 +2,19 @@
 //! masters, keeps the global WAN + coflow view, runs the scheduling-routing
 //! policy on every event, and pushes ⟨path, rate⟩ vectors to the agents.
 //!
-//! The same [`crate::scheduler::Policy`] implementations drive both this
-//! controller and the flow-level simulator — the paper's §6.1 methodology.
+//! All round machinery (active table, ρ filtering, clamping, Γ-cache,
+//! feasibility) lives in the shared [`crate::engine::RoundEngine`] — the
+//! exact same engine the flow-level simulator drives, which is the paper's
+//! §6.1 "same controller logic in testbed and simulation" methodology. This
+//! module owns only the testbed concerns: TCP sessions, agent rate pushes,
+//! SDN rule emulation, and wall-clock bookkeeping.
 
 use super::protocol::{self, CoflowStatus, FlowSpec};
 use super::rules::RuleTable;
-use crate::coflow::{Coflow, Flow, CoflowId};
-use crate::net::paths::PathSet;
+use crate::coflow::{Coflow, CoflowId, Flow};
+use crate::engine::{EngineConfig, RoundEngine, WanReaction};
 use crate::net::{LinkEvent, Wan};
-use crate::scheduler::{CoflowState, NetView, Policy, RoundTrigger};
+use crate::scheduler::{CoflowRates, CoflowState, Policy, RoundTrigger};
 use crate::util::json::Json;
 use std::collections::HashMap;
 use std::io::ErrorKind;
@@ -25,6 +29,11 @@ fn bytes_to_gbit(bytes: u64) -> f64 {
     bytes as f64 / super::BYTES_PER_GBPS
 }
 
+/// Remaining-volume floor for groups the agents have not yet confirmed:
+/// keeps the policy allocating a trickle until `group_done` arrives (§6.4
+/// feedback-loop approximation).
+const ESTIMATE_FLOOR_GBIT: f64 = 1e-6;
+
 /// Testbed configuration.
 pub struct TestbedConfig {
     pub wan: Wan,
@@ -37,31 +46,43 @@ struct AgentConn {
     data_addr: String,
 }
 
-struct CoState {
-    groups: Vec<crate::coflow::FlowGroup>,
-    remaining: Vec<f64>,
-    done: Vec<bool>,
-    rates: Vec<Vec<f64>>,
+/// Testbed-side metadata per coflow; scheduling state (groups, remaining,
+/// rates) lives in the engine.
+struct CoMeta {
     submitted: Instant,
     finished: Option<Instant>,
     /// Absolute deadline on the controller clock (epoch seconds).
     deadline_abs: Option<f64>,
     admitted: bool,
     total_bytes: u64,
-    last_update: Instant,
 }
 
 struct State {
-    wan: Wan,
+    engine: RoundEngine,
     k: usize,
-    paths: PathSet,
-    policy: Box<dyn Policy>,
     agents: HashMap<usize, AgentConn>,
-    coflows: HashMap<CoflowId, CoState>,
+    coflows: HashMap<CoflowId, CoMeta>,
     next_id: CoflowId,
     rules: RuleTable,
     peers_sent: bool,
     epoch: Instant,
+    /// Wall-clock instant of the last remaining-volume drain.
+    last_drain: Instant,
+}
+
+impl State {
+    fn now_s(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// Update remaining-volume estimates from elapsed wall time x current
+    /// rates (the controller's feedback-loop approximation, §6.4).
+    fn drain_to_now(&mut self) {
+        let now = Instant::now();
+        let dt = now.duration_since(self.last_drain).as_secs_f64();
+        self.last_drain = now;
+        self.engine.drain(dt, ESTIMATE_FLOOR_GBIT);
+    }
 }
 
 /// Handle to a running controller (owns its threads).
@@ -83,20 +104,25 @@ impl Controller {
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let num_nodes = cfg.wan.num_nodes();
-        let paths = PathSet::compute(&cfg.wan, cfg.k);
-        let mut rules = RuleTable::new(num_nodes);
-        rules.install_paths(&cfg.wan, &paths);
-        let state = Arc::new(Mutex::new(State {
-            wan: cfg.wan,
-            k: cfg.k,
-            paths,
+        let k = cfg.k;
+        let engine = RoundEngine::with_k(
+            cfg.wan,
             policy,
+            EngineConfig { check_feasibility: false, ..Default::default() },
+            cfg.k,
+        );
+        let mut rules = RuleTable::new(num_nodes);
+        rules.install_paths(engine.wan(), engine.paths());
+        let state = Arc::new(Mutex::new(State {
+            engine,
+            k,
             agents: HashMap::new(),
             coflows: HashMap::new(),
             next_id: 1,
             rules,
             peers_sent: false,
             epoch: Instant::now(),
+            last_drain: Instant::now(),
         }));
         let stop = Arc::new(AtomicBool::new(false));
         let mut threads = Vec::new();
@@ -149,17 +175,7 @@ impl ControllerHandle {
     /// Inject a WAN event (link failure / recovery / bandwidth change).
     pub fn inject_wan_event(&self, ev: LinkEvent) {
         let mut st = self.state.lock().unwrap();
-        let frac = st.wan.apply_event(&ev);
-        let structural = matches!(ev, LinkEvent::Fail(..) | LinkEvent::Recover(..));
-        if structural {
-            st.paths = PathSet::compute(&st.wan, st.k);
-            let (wan, paths) = (st.wan.clone(), st.paths.clone());
-            st.rules.reinstall(&wan, &paths);
-            resend_peers(&mut st);
-            reallocate(&mut st, RoundTrigger::WanChange);
-        } else if frac >= crate::scheduler::DEFAULT_RHO {
-            reallocate(&mut st, RoundTrigger::WanChange);
-        }
+        apply_wan_event(&mut st, &ev);
     }
 
     /// Current total receive rate estimate per coflow is kept agent-side;
@@ -167,7 +183,20 @@ impl ControllerHandle {
     /// agent counters).
     pub fn scheduled_rate(&self, id: CoflowId) -> f64 {
         let st = self.state.lock().unwrap();
-        st.coflows.get(&id).map(|c| c.rates.iter().flatten().sum()).unwrap_or(0.0)
+        st.engine.coflow_rate(id)
+    }
+
+    /// The per-(group, path) rates the engine allocated to a coflow in the
+    /// last round (used by the sim↔controller parity tests).
+    pub fn allocation(&self, id: CoflowId) -> Option<CoflowRates> {
+        let st = self.state.lock().unwrap();
+        st.engine.coflow_rates(id)
+    }
+
+    /// Scheduling rounds executed so far.
+    pub fn rounds(&self) -> usize {
+        let st = self.state.lock().unwrap();
+        st.engine.rounds()
     }
 
     pub fn shutdown(mut self) {
@@ -208,7 +237,7 @@ fn serve_conn(mut s: TcpStream, state: Arc<Mutex<State>>, stop: Arc<AtomicBool>)
                         Err(_) => return,
                     };
                     st.agents.insert(dc, AgentConn { ctrl, data_addr: addr.to_string() });
-                    if st.agents.len() == st.wan.num_nodes() {
+                    if st.agents.len() == st.engine.wan().num_nodes() {
                         resend_peers(&mut st);
                         st.peers_sent = true;
                     }
@@ -234,20 +263,8 @@ fn serve_conn(mut s: TcpStream, state: Arc<Mutex<State>>, stop: Arc<AtomicBool>)
             "wan_event" => {
                 // Client-initiated WAN event injection (testing).
                 if let Some(ev) = parse_event(&msg) {
-                    drop(msg);
-                    let handle_state = state.clone();
-                    let mut st = handle_state.lock().unwrap();
-                    let frac = st.wan.apply_event(&ev);
-                    let structural = matches!(ev, LinkEvent::Fail(..) | LinkEvent::Recover(..));
-                    if structural {
-                        st.paths = PathSet::compute(&st.wan, st.k);
-                        let (wan, paths) = (st.wan.clone(), st.paths.clone());
-                        st.rules.reinstall(&wan, &paths);
-                        resend_peers(&mut st);
-                        reallocate(&mut st, RoundTrigger::WanChange);
-                    } else if frac >= crate::scheduler::DEFAULT_RHO {
-                        reallocate(&mut st, RoundTrigger::WanChange);
-                    }
+                    let mut st = state.lock().unwrap();
+                    apply_wan_event(&mut st, &ev);
                 }
                 let mut ok = Json::obj();
                 ok.set("ok", true.into());
@@ -259,6 +276,22 @@ fn serve_conn(mut s: TcpStream, state: Arc<Mutex<State>>, stop: Arc<AtomicBool>)
                 let _ = protocol::write_msg(&mut s, &err);
             }
         }
+    }
+}
+
+/// Route a WAN event through the engine's ρ-dampened filter and react:
+/// structural events reinstall rules and rewire peers before the round;
+/// sub-ρ fluctuations push the clamped rates without re-optimizing.
+fn apply_wan_event(st: &mut State, ev: &LinkEvent) {
+    match st.engine.handle_wan_event(ev) {
+        WanReaction::Structural => {
+            let (wan, paths) = (st.engine.wan().clone(), st.engine.paths().clone());
+            st.rules.reinstall(&wan, &paths);
+            resend_peers(st);
+            reallocate(st, RoundTrigger::WanChange);
+        }
+        WanReaction::Reoptimize => reallocate(st, RoundTrigger::WanChange),
+        WanReaction::Clamped => push_rates(st),
     }
 }
 
@@ -314,18 +347,14 @@ fn agent_reader(mut s: TcpStream, state: Arc<Mutex<State>>, stop: Arc<AtomicBool
                 continue;
             };
             let mut st = state.lock().unwrap();
-            let mut coflow_finished = false;
-            if let Some(co) = st.coflows.get_mut(&coflow) {
-                for (gi, g) in co.groups.iter().enumerate() {
-                    if g.src == src as usize && g.dst == dst as usize {
-                        co.done[gi] = true;
-                        co.remaining[gi] = 0.0;
+            let coflow_finished = st.engine.complete_group(coflow, src as usize, dst as usize);
+            if coflow_finished {
+                if let Some(meta) = st.coflows.get_mut(&coflow) {
+                    if meta.finished.is_none() {
+                        meta.finished = Some(Instant::now());
                     }
                 }
-                if co.done.iter().all(|&d| d) && co.finished.is_none() {
-                    co.finished = Some(Instant::now());
-                    coflow_finished = true;
-                }
+                st.engine.take_finished();
             }
             let trigger = if coflow_finished {
                 RoundTrigger::CoflowFinish
@@ -340,12 +369,15 @@ fn agent_reader(mut s: TcpStream, state: Arc<Mutex<State>>, stop: Arc<AtomicBool
 fn coflow_status(st: &State, id: CoflowId) -> CoflowStatus {
     match st.coflows.get(&id) {
         None => CoflowStatus::Unknown,
-        Some(co) if !co.admitted => CoflowStatus::Rejected,
-        Some(co) => match co.finished {
-            Some(t) => CoflowStatus::Done { cct_s: t.duration_since(co.submitted).as_secs_f64() },
+        Some(meta) if !meta.admitted => CoflowStatus::Rejected,
+        Some(meta) => match meta.finished {
+            Some(t) => {
+                CoflowStatus::Done { cct_s: t.duration_since(meta.submitted).as_secs_f64() }
+            }
             None => {
-                let total = co.total_bytes;
-                let remaining: f64 = co.remaining.iter().sum();
+                let total = meta.total_bytes;
+                let remaining: f64 =
+                    st.engine.get(id).map(|c| c.total_remaining()).unwrap_or(0.0);
                 let delivered = total.saturating_sub(
                     (remaining * super::BYTES_PER_GBPS) as u64,
                 );
@@ -381,59 +413,37 @@ fn handle_submit(msg: &Json, state: &Arc<Mutex<State>>) -> Json {
     }
     let mut cstate = CoflowState::from_coflow(&spec);
     // Absolute deadline on the controller's clock.
-    let now_s = st.epoch.elapsed().as_secs_f64();
+    let now_s = st.now_s();
     cstate.arrival = now_s;
     let deadline_abs = deadline.map(|d| now_s + d);
     cstate.deadline = deadline_abs;
 
     // Admission control (§3.2/§5.2: returns -1 when the deadline cannot be
-    // met).
+    // met) against up-to-date remaining estimates.
     let mut admitted = true;
     if cstate.deadline.is_some() {
-        let active: Vec<CoflowState> = active_states(&st);
-        // Split-borrow: the policy is a different field from wan/paths.
-        let State { wan, paths, policy, .. } = &mut *st;
-        let net = NetView { wan, paths };
-        admitted = policy.admit(now_s, &cstate, &active, &net);
+        st.drain_to_now();
+        admitted = st.engine.admit(now_s, &cstate);
     }
+    let total_bytes: u64 = flows.iter().map(|f| f.bytes).sum();
+    st.coflows.insert(
+        id,
+        CoMeta {
+            submitted: Instant::now(),
+            finished: None,
+            deadline_abs,
+            admitted,
+            total_bytes,
+        },
+    );
     if !admitted {
-        st.coflows.insert(
-            id,
-            CoState {
-                groups: cstate.groups,
-                remaining: vec![],
-                done: vec![],
-                rates: vec![],
-                submitted: Instant::now(),
-                finished: None,
-                deadline_abs,
-                admitted: false,
-                total_bytes: flows.iter().map(|f| f.bytes).sum(),
-                last_update: Instant::now(),
-            },
-        );
         let mut reply = Json::obj();
         reply.set("cid", (-1i64).into());
         return reply;
     }
 
-    let groups = cstate.groups.clone();
-    let remaining = cstate.remaining.clone();
-    st.coflows.insert(
-        id,
-        CoState {
-            done: vec![false; groups.len()],
-            rates: vec![Vec::new(); groups.len()],
-            groups,
-            remaining,
-            submitted: Instant::now(),
-            finished: None,
-            deadline_abs,
-            admitted: true,
-            total_bytes: flows.iter().map(|f| f.bytes).sum(),
-            last_update: Instant::now(),
-        },
-    );
+    cstate.admitted = true;
+    st.engine.insert(cstate);
 
     // Wire transfers: receiver expectations first, then sender starts.
     send_transfer_msgs(&mut st, id, &flows);
@@ -451,23 +461,45 @@ fn handle_update(msg: &Json, state: &Arc<Mutex<State>>) -> Json {
         .map(|arr| arr.iter().filter_map(FlowSpec::from_json).collect())
         .unwrap_or_default();
     let mut st = state.lock().unwrap();
-    if !st.coflows.contains_key(&id) {
-        let mut r = Json::obj();
-        r.set("error", "unknown coflow".into());
-        return r;
+    match st.coflows.get(&id) {
+        None => {
+            let mut r = Json::obj();
+            r.set("error", "unknown coflow".into());
+            return r;
+        }
+        // A deadline-rejected coflow must never re-enter scheduling via
+        // update (§3.2 admission is final; clients were handed cid = -1).
+        Some(meta) if !meta.admitted => {
+            let mut r = Json::obj();
+            r.set("error", "coflow was rejected".into());
+            return r;
+        }
+        Some(_) => {}
     }
-    // Extend existing groups / add new ones (§5.2 updateCoflow).
+    // Extend existing groups / add new ones (§5.2 updateCoflow). A coflow
+    // that already finished gets a fresh engine entry holding only the new
+    // volume (the old groups are fully transferred).
     {
-        let co = st.coflows.get_mut(&id).unwrap();
+        let deadline_abs = st.coflows[&id].deadline_abs;
+        if st.engine.get(id).is_none() {
+            let mut revived = CoflowState::from_coflow(&Coflow::new(id, Vec::new()));
+            revived.arrival = st.now_s();
+            revived.deadline = deadline_abs;
+            revived.admitted = true;
+            st.engine.insert(revived);
+        }
+        let co = st.engine.get_mut(id).unwrap();
         for f in &flows {
             let gbit = bytes_to_gbit(f.bytes);
+            if f.src_dc == f.dst_dc || gbit <= 0.0 {
+                continue;
+            }
             if let Some(gi) =
                 co.groups.iter().position(|g| g.src == f.src_dc && g.dst == f.dst_dc)
             {
                 co.groups[gi].volume += gbit;
                 co.groups[gi].num_flows += 1;
                 co.remaining[gi] += gbit;
-                co.done[gi] = false;
             } else {
                 co.groups.push(crate::coflow::FlowGroup {
                     src: f.src_dc,
@@ -476,12 +508,12 @@ fn handle_update(msg: &Json, state: &Arc<Mutex<State>>) -> Json {
                     num_flows: 1,
                 });
                 co.remaining.push(gbit);
-                co.done.push(false);
-                co.rates.push(Vec::new());
             }
-            co.total_bytes += f.bytes;
         }
-        co.finished = None;
+        st.engine.mark_dirty(id);
+        let meta = st.coflows.get_mut(&id).unwrap();
+        meta.finished = None;
+        meta.total_bytes += flows.iter().map(|f| f.bytes).sum::<u64>();
     }
     send_transfer_msgs(&mut st, id, &flows);
     reallocate(&mut st, RoundTrigger::CoflowArrival);
@@ -519,67 +551,26 @@ fn send_transfer_msgs(st: &mut State, id: CoflowId, flows: &[FlowSpec]) {
     }
 }
 
-/// Build the policy view of all unfinished, admitted coflows, updating
-/// remaining-volume estimates from elapsed time x current rates (the
-/// controller's feedback-loop approximation, §6.4).
-fn active_states(st: &State) -> Vec<CoflowState> {
-    let now = Instant::now();
-    st.coflows
-        .iter()
-        .filter(|(_, c)| c.admitted && c.finished.is_none())
-        .map(|(&id, c)| {
-            let dt = now.duration_since(c.last_update).as_secs_f64();
-            let remaining: Vec<f64> = c
-                .remaining
-                .iter()
-                .enumerate()
-                .map(|(gi, &r)| {
-                    let rate: f64 = c.rates.get(gi).map(|v| v.iter().sum()).unwrap_or(0.0);
-                    (r - rate * dt).max(if c.done[gi] { 0.0 } else { 1e-6 })
-                })
-                .collect();
-            CoflowState {
-                id,
-                arrival: 0.0,
-                deadline: c.deadline_abs,
-                admitted: true,
-                groups: c.groups.clone(),
-                remaining,
-            }
-        })
-        .collect()
+/// One scheduling round: drain remaining-volume estimates, run the engine's
+/// round, and push the new rate vectors to the source agents.
+fn reallocate(st: &mut State, trigger: RoundTrigger) {
+    st.drain_to_now();
+    let now_s = st.now_s();
+    st.engine.round(now_s, trigger);
+    push_rates(st);
 }
 
-/// One scheduling round: run the policy and push rate vectors to agents.
-fn reallocate(st: &mut State, trigger: RoundTrigger) {
-    let now = Instant::now();
-    let active = active_states(st);
-    // Persist the updated remaining estimates.
-    for cs in &active {
-        if let Some(co) = st.coflows.get_mut(&cs.id) {
-            co.remaining = cs.remaining.clone();
-            co.last_update = now;
-        }
-    }
-    let now_s = st.epoch.elapsed().as_secs_f64();
-    let alloc = {
-        // Split-borrow: the policy is a different field from wan/paths.
-        let State { wan, paths, policy, .. } = st;
-        let net = NetView { wan, paths };
-        policy.allocate(now_s, trigger, &active, &net)
-    };
-    // Push rates to source agents.
-    for cs in &active {
-        let rates = alloc.rates.get(&cs.id).cloned().unwrap_or_default();
-        if let Some(co) = st.coflows.get_mut(&cs.id) {
-            co.rates = rates.clone();
-        }
+/// Push the engine's current allocation to the source agents.
+fn push_rates(st: &mut State) {
+    let State { engine, agents, .. } = st;
+    for cs in engine.active() {
+        let rates = engine.alloc().rates.get(&cs.id);
         for (gi, g) in cs.groups.iter().enumerate() {
             let path_rates: Vec<Json> = rates
-                .get(gi)
+                .and_then(|r| r.get(gi))
                 .map(|v| v.iter().map(|&r| Json::Num(r)).collect())
                 .unwrap_or_default();
-            if let Some(a) = st.agents.get_mut(&g.src) {
+            if let Some(a) = agents.get_mut(&g.src) {
                 let mut m = Json::obj();
                 m.set("op", "rates".into())
                     .set("coflow", cs.id.into())

@@ -17,10 +17,48 @@ pub mod pack;
 use crate::lp::{McfInstance, McfSolution};
 use crate::net::Wan;
 use crate::Result;
+#[cfg(feature = "pjrt")]
 use anyhow::{bail, Context};
+#[cfg(not(feature = "pjrt"))]
+use std::marker::PhantomData;
 use std::path::Path;
 
+/// Stub [`JaxSolver`] compiled when the `pjrt` feature (and therefore the
+/// external `xla` crate + XLA shared libraries) is absent: loading reports
+/// a clear error and callers fall back to the native solvers, keeping the
+/// whole stack buildable in the offline image.
+#[cfg(not(feature = "pjrt"))]
+pub struct JaxSolver {
+    /// PDHG iterations per solve (kept for API parity with the real
+    /// solver).
+    pub iters: i32,
+    _no_backend: PhantomData<()>,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl JaxSolver {
+    /// Always fails: the crate was built without the `pjrt` feature.
+    pub fn load(_dir: impl AsRef<Path>) -> Result<JaxSolver> {
+        Err(anyhow::anyhow!(
+            "terra was built without the `pjrt` feature; add the `xla` \
+             crate to Cargo.toml [dependencies] and rebuild with \
+             `--features pjrt` to load AOT LP artifacts"
+        ))
+    }
+
+    /// No variants without a backend.
+    pub fn variants(&self) -> Vec<(String, usize, usize, usize)> {
+        Vec::new()
+    }
+
+    /// No backend: callers fall back to the native solver.
+    pub fn solve(&self, _wan: &Wan, _inst: &McfInstance) -> Option<McfSolution> {
+        None
+    }
+}
+
 /// One loaded artifact variant (padded problem shape).
+#[cfg(feature = "pjrt")]
 struct Variant {
     name: String,
     v: usize,
@@ -30,6 +68,7 @@ struct Variant {
 }
 
 /// The PJRT-backed Optimization (1) solver.
+#[cfg(feature = "pjrt")]
 pub struct JaxSolver {
     variants: Vec<Variant>,
     /// PDHG iterations per solve (runtime input to the artifact).
@@ -40,9 +79,12 @@ pub struct JaxSolver {
 // synchronized (PJRT's C API is thread-safe for execution); the `xla` crate
 // just doesn't mark its raw-pointer wrappers. We only ever call `execute`
 // and read-only accessors after construction.
+#[cfg(feature = "pjrt")]
 unsafe impl Send for JaxSolver {}
+#[cfg(feature = "pjrt")]
 unsafe impl Sync for JaxSolver {}
 
+#[cfg(feature = "pjrt")]
 impl JaxSolver {
     /// Load every variant listed in `artifacts/manifest.json`.
     pub fn load(dir: impl AsRef<Path>) -> Result<JaxSolver> {
@@ -121,7 +163,7 @@ impl JaxSolver {
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
     use crate::coflow::GB;

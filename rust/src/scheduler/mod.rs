@@ -15,6 +15,7 @@ pub mod terra;
 pub use terra::TerraPolicy;
 
 use crate::coflow::{CoflowId, FlowGroup};
+use crate::engine::GammaCache;
 use crate::lp::{GroupDemand, McfInstance};
 use crate::net::paths::PathSet;
 use crate::net::Wan;
@@ -113,6 +114,9 @@ pub struct RoundStats {
     pub lp_solves: usize,
     pub lp_time_s: f64,
     pub round_time_s: f64,
+    /// Standalone-Γ solves answered from the [`GammaCache`] instead of an
+    /// LP solve (incremental re-optimization).
+    pub gamma_cache_hits: usize,
 }
 
 impl RoundStats {
@@ -120,6 +124,7 @@ impl RoundStats {
         self.lp_solves += other.lp_solves;
         self.lp_time_s += other.lp_time_s;
         self.round_time_s += other.round_time_s;
+        self.gamma_cache_hits += other.gamma_cache_hits;
     }
 }
 
@@ -132,6 +137,21 @@ pub enum RoundTrigger {
     CoflowFinish,
     WanChange,
     Initial,
+}
+
+/// Incremental-re-optimization context handed to cache-aware policies by
+/// the [`crate::engine::RoundEngine`] on every round.
+pub struct RoundCtx<'a> {
+    /// Why this round fired.
+    pub trigger: RoundTrigger,
+    /// WAN capacity epoch the round runs under; bumped by qualifying WAN
+    /// events, at which point every cached Γ is stale.
+    pub epoch: u64,
+    /// Cross-round cache of standalone min-CCT solves.
+    pub cache: &'a mut GammaCache,
+    /// Previous round's allocation for warm-starting iterative solvers, or
+    /// `None` right after structural WAN changes (stale path indices).
+    pub warm: Option<&'a Allocation>,
 }
 
 /// The scheduling-routing policy interface implemented by Terra and all
@@ -148,6 +168,20 @@ pub trait Policy: Send {
         coflows: &[CoflowState],
         net: &NetView,
     ) -> Allocation;
+
+    /// Cache-aware entry point used by the [`crate::engine::RoundEngine`].
+    /// Policies that can reuse work across rounds (Γ-cache hits, warm
+    /// starts) override this; the default ignores the context and performs
+    /// a cold [`Policy::allocate`].
+    fn allocate_with(
+        &mut self,
+        now: f64,
+        ctx: RoundCtx<'_>,
+        coflows: &[CoflowState],
+        net: &NetView,
+    ) -> Allocation {
+        self.allocate(now, ctx.trigger, coflows, net)
+    }
 
     /// Deadline admission control (§3.2). Default: admit everything.
     fn admit(

@@ -79,45 +79,47 @@ impl TerraPolicy {
         TerraPolicy::new(TerraConfig { k, ..Default::default() })
     }
 
-    /// Solve Optimization (1) for one coflow on `caps`; instrumented.
+    /// Solve Optimization (1) for one coflow on `caps`; instrumented. A
+    /// `warm` rate matrix (full group-indexed, from the previous round)
+    /// seeds the GK solver's feasible-candidate early exit.
     fn solve_min_cct(
         &mut self,
         cf: &CoflowState,
         caps: &[f64],
         net: &NetView,
+        warm: Option<&CoflowRates>,
     ) -> Option<(lp::McfSolution, Vec<usize>)> {
         let (inst, index) = build_instance(&cf.groups, &cf.remaining, caps, net, self.cfg.k);
         if inst.groups.is_empty() {
             return None;
         }
+        // Project the warm rates from the full group list onto the
+        // instance's unfinished-group subset.
+        let projected: Option<Vec<Vec<f64>>> = warm.map(|w| {
+            index.iter().map(|&gi| w.get(gi).cloned().unwrap_or_default()).collect()
+        });
         let t0 = Instant::now();
         let sol = match &self.jax {
             Some(jax) => jax
                 .solve(net.wan, &inst)
-                .or_else(|| lp::max_concurrent(&inst, self.cfg.solver)),
-            None => lp::max_concurrent(&inst, self.cfg.solver),
+                .or_else(|| lp::max_concurrent_warm(&inst, self.cfg.solver, projected.as_deref())),
+            None => lp::max_concurrent_warm(&inst, self.cfg.solver, projected.as_deref()),
         };
         self.stats.lp_solves += 1;
         self.stats.lp_time_s += t0.elapsed().as_secs_f64();
         sol.map(|s| (s, index))
     }
-}
 
-impl Policy for TerraPolicy {
-    fn name(&self) -> &'static str {
-        "terra"
-    }
-
-    fn k_paths(&self) -> usize {
-        self.cfg.k
-    }
-
-    fn allocate(
+    /// One full round of Pseudocode 1, optionally with the engine's
+    /// incremental context (Γ-cache for the ordering solves, previous
+    /// allocation as warm starts for the per-coflow allocation solves).
+    fn run_round(
         &mut self,
         now: f64,
-        _trigger: RoundTrigger,
         coflows: &[CoflowState],
         net: &NetView,
+        mut cache: Option<&mut crate::engine::GammaCache>,
+        warm: Option<&Allocation>,
     ) -> Allocation {
         let round_start = Instant::now();
         let mut alloc = Allocation::default();
@@ -125,13 +127,30 @@ impl Policy for TerraPolicy {
         // Line 2 of Pseudocode 1: scale down by (1 - α).
         let scaled: Vec<f64> = caps_full.iter().map(|c| c * (1.0 - self.cfg.alpha)).collect();
 
-        // Standalone Γ per coflow (for the SRTF order).
+        // Standalone Γ per coflow (for the SRTF order). With a cache, each
+        // Γ is an LP solve only on a miss — i.e. once per (coflow, WAN
+        // epoch); continuous drain is handled by the cache's homogeneity
+        // rescale and discrete changes by dirty-set invalidation.
         let mut order: Vec<(usize, f64)> = Vec::with_capacity(coflows.len());
         for (i, cf) in coflows.iter().enumerate() {
-            let gamma = self
-                .solve_min_cct(cf, &scaled, net)
-                .map(|(s, _)| s.gamma())
-                .unwrap_or(f64::INFINITY);
+            let total_rem = cf.total_remaining();
+            let cached = cache.as_deref().and_then(|c| c.lookup(cf.id, total_rem));
+            let gamma = match cached {
+                Some(g) => {
+                    self.stats.gamma_cache_hits += 1;
+                    g
+                }
+                None => {
+                    let g = self
+                        .solve_min_cct(cf, &scaled, net, warm.and_then(|a| a.rates.get(&cf.id)))
+                        .map(|(s, _)| s.gamma())
+                        .unwrap_or(f64::INFINITY);
+                    if let Some(c) = cache.as_deref_mut() {
+                        c.store(cf.id, total_rem, g);
+                    }
+                    g
+                }
+            };
             order.push((i, gamma));
         }
         // Pseudocode 2 line 9: decreasing D_i (deadline-admitted first),
@@ -158,7 +177,7 @@ impl Policy for TerraPolicy {
             if cf.done() {
                 continue;
             }
-            match self.solve_min_cct(cf, &residual, net) {
+            match self.solve_min_cct(cf, &residual, net, warm.and_then(|a| a.rates.get(&cf.id))) {
                 Some((mut sol, index)) => {
                     // Deadline dilation (§3.2): completing earlier than D has
                     // no benefit; stretch to the deadline and free bandwidth.
@@ -248,6 +267,38 @@ impl Policy for TerraPolicy {
         self.stats.round_time_s += round_start.elapsed().as_secs_f64();
         alloc
     }
+}
+
+impl Policy for TerraPolicy {
+    fn name(&self) -> &'static str {
+        "terra"
+    }
+
+    fn k_paths(&self) -> usize {
+        self.cfg.k
+    }
+
+    fn allocate(
+        &mut self,
+        now: f64,
+        _trigger: RoundTrigger,
+        coflows: &[CoflowState],
+        net: &NetView,
+    ) -> Allocation {
+        self.run_round(now, coflows, net, None, None)
+    }
+
+    /// Incremental entry point: reuse cached standalone Γ solves within a
+    /// WAN capacity epoch and warm-start GK from the previous allocation.
+    fn allocate_with(
+        &mut self,
+        now: f64,
+        ctx: RoundCtx<'_>,
+        coflows: &[CoflowState],
+        net: &NetView,
+    ) -> Allocation {
+        self.run_round(now, coflows, net, Some(ctx.cache), ctx.warm)
+    }
 
     /// Pseudocode 2: admit a deadline coflow iff its minimum CCT on the
     /// guaranteed-residual WAN stays within η·D.
@@ -270,7 +321,7 @@ impl Policy for TerraPolicy {
             .collect();
         admitted.sort_by(|a, b| b.deadline.partial_cmp(&a.deadline).unwrap());
         for cf in admitted {
-            if let Some((mut sol, index)) = self.solve_min_cct(cf, &residual, net) {
+            if let Some((mut sol, index)) = self.solve_min_cct(cf, &residual, net, None) {
                 let d_rem = cf.deadline.unwrap() - now;
                 let gamma = sol.gamma();
                 if d_rem > gamma {
@@ -284,7 +335,7 @@ impl Policy for TerraPolicy {
                 }
             }
         }
-        match self.solve_min_cct(candidate, &residual, net) {
+        match self.solve_min_cct(candidate, &residual, net, None) {
             Some((sol, _)) => sol.gamma() <= self.cfg.eta * (deadline - now) + 1e-9,
             None => false,
         }

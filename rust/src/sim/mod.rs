@@ -7,6 +7,11 @@
 //! allocated rates between rounds. As in the paper, controller-agent
 //! communication is instantaneous unless a coordination delay is configured
 //! (used to mimic the testbed's feedback loops).
+//!
+//! All round machinery — the active-coflow table, ρ-dampened WAN-event
+//! filtering, allocation clamping, feasibility checks, the Γ-cache — lives
+//! in the shared [`crate::engine::RoundEngine`]; this module only owns the
+//! virtual clock, the job DAGs, and the event heap.
 
 pub mod job;
 pub mod report;
@@ -15,10 +20,9 @@ pub use job::{Job, Stage};
 pub use report::{foi, foi_volume_correlation, CoflowRecord, JobRecord, Report};
 
 use crate::coflow::{Coflow, CoflowId};
-use crate::lp;
-use crate::net::paths::PathSet;
+use crate::engine::{EngineConfig, RoundEngine};
 use crate::net::{LinkEvent, Wan};
-use crate::scheduler::{build_instance, Allocation, CoflowState, NetView, Policy, RoundTrigger};
+use crate::scheduler::{CoflowRates, CoflowState, Policy, RoundTrigger};
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, HashMap};
 
@@ -76,8 +80,10 @@ impl PartialEq for TimedEvent {
 impl Eq for TimedEvent {}
 impl Ord for TimedEvent {
     fn cmp(&self, other: &Self) -> Ordering {
-        // Min-heap: earliest time first, then insertion order.
-        other.t.partial_cmp(&self.t).unwrap_or(Ordering::Equal).then(other.seq.cmp(&self.seq))
+        // Min-heap: earliest time first, then insertion order. `total_cmp`
+        // keeps the heap invariant even for exotic floats (`push_event`
+        // rejects non-finite times before they get here).
+        other.t.total_cmp(&self.t).then(other.seq.cmp(&self.seq))
     }
 }
 impl PartialOrd for TimedEvent {
@@ -93,19 +99,15 @@ struct JobState {
 
 /// The simulator.
 pub struct Simulation {
-    wan: Wan,
-    policy: Box<dyn Policy>,
+    engine: RoundEngine,
     cfg: SimConfig,
-    paths: PathSet,
     now: f64,
     seq: u64,
     events: BinaryHeap<TimedEvent>,
     jobs: Vec<Job>,
     job_states: Vec<JobState>,
-    active: Vec<CoflowState>,
     /// Coflow id -> (job idx, stage idx).
     owners: HashMap<CoflowId, (usize, usize)>,
-    alloc: Allocation,
     next_coflow_id: CoflowId,
     report: Report,
     record_idx: HashMap<CoflowId, usize>,
@@ -113,21 +115,25 @@ pub struct Simulation {
 
 impl Simulation {
     pub fn new(wan: Wan, policy: Box<dyn Policy>, cfg: SimConfig) -> Simulation {
-        let paths = PathSet::compute(&wan, policy.k_paths());
         let name = policy.name().to_string();
-        Simulation {
+        let engine = RoundEngine::new(
             wan,
             policy,
+            EngineConfig {
+                rho: cfg.rho,
+                check_feasibility: cfg.check_feasibility,
+                ..Default::default()
+            },
+        );
+        Simulation {
+            engine,
             cfg,
-            paths,
             now: 0.0,
             seq: 0,
             events: BinaryHeap::new(),
             jobs: Vec::new(),
             job_states: Vec::new(),
-            active: Vec::new(),
             owners: HashMap::new(),
-            alloc: Allocation::default(),
             next_coflow_id: 1,
             report: Report { policy: name, ..Default::default() },
             record_idx: HashMap::new(),
@@ -136,10 +142,16 @@ impl Simulation {
 
     /// Access the WAN (e.g. to inspect capacities in tests).
     pub fn wan(&self) -> &Wan {
-        &self.wan
+        self.engine.wan()
+    }
+
+    /// The shared round engine driving this simulation.
+    pub fn engine(&self) -> &RoundEngine {
+        &self.engine
     }
 
     fn push_event(&mut self, t: f64, kind: EvKind) {
+        assert!(t.is_finite(), "non-finite event time {t} for {kind:?}");
         self.seq += 1;
         self.events.push(TimedEvent { t, seq: self.seq, kind });
     }
@@ -178,24 +190,19 @@ impl Simulation {
     /// Minimum CCT of a coflow alone on the *full* WAN (for slowdown and
     /// deadline metrics).
     pub fn standalone_min_cct(&self, st: &CoflowState) -> f64 {
-        let net = NetView { wan: &self.wan, paths: &self.paths };
-        let (inst, _) = build_instance(
-            &st.groups,
-            &st.remaining,
-            &self.wan.capacities(),
-            &net,
-            self.policy.k_paths(),
-        );
-        if inst.groups.is_empty() {
-            return 0.0;
-        }
-        lp::max_concurrent(&inst, lp::SolverKind::Gk).map(|s| s.gamma()).unwrap_or(f64::INFINITY)
+        self.engine.standalone_min_cct(st)
     }
 
     /// Current total rate (Gbps) of a coflow, for live inspection (used by
     /// the failure case study, Fig 10).
     pub fn coflow_rate(&self, id: CoflowId) -> f64 {
-        self.alloc.rates.get(&id).map(|g| g.iter().flatten().sum()).unwrap_or(0.0)
+        self.engine.coflow_rate(id)
+    }
+
+    /// The per-(group, path) rates allocated to a coflow in the last round
+    /// (used by the sim↔controller parity tests).
+    pub fn allocation(&self, id: CoflowId) -> Option<CoflowRates> {
+        self.engine.coflow_rates(id)
     }
 
     /// Drive the simulation until all jobs finish or `max_time`.
@@ -209,14 +216,14 @@ impl Simulation {
         let mut needs_round: Option<RoundTrigger> = None;
         let mut starving_rounds = 0usize;
         loop {
-            let completion = self.next_completion();
+            let completion = self.engine.next_completion(self.now);
             let next_event_t = self.events.peek().map(|e| e.t);
             let target = match (completion, next_event_t) {
                 (Some(c), Some(e)) => c.min(e),
                 (Some(c), None) => c,
                 (None, Some(e)) => e,
                 (None, None) => {
-                    if self.active.is_empty() || starving_rounds > 0 {
+                    if self.engine.is_empty() || starving_rounds > 0 {
                         break;
                     }
                     // Active coflows, no rates, no events: force one round;
@@ -231,7 +238,7 @@ impl Simulation {
                 break;
             }
             if target > self.cfg.max_time {
-                log::warn!("hit max_time with {} active coflows", self.active.len());
+                log::warn!("hit max_time with {} active coflows", self.engine.len());
                 break;
             }
             starving_rounds = 0;
@@ -251,23 +258,15 @@ impl Simulation {
                     }
                     EvKind::StageDone { job, stage } => self.complete_stage(job, stage),
                     EvKind::Activate(state) => {
-                        self.active.push(*state);
+                        self.engine.insert(*state);
                         needs_round = Some(RoundTrigger::CoflowArrival);
                     }
                     EvKind::Wan(wev) => {
-                        let frac = self.wan.apply_event(&wev);
-                        let structural =
-                            matches!(wev, LinkEvent::Fail(..) | LinkEvent::Recover(..));
-                        if structural {
-                            // Recompute viable paths (§4.4).
-                            self.paths = PathSet::compute(&self.wan, self.policy.k_paths());
-                            needs_round = Some(RoundTrigger::WanChange);
-                        } else if frac >= self.cfg.rho {
-                            needs_round = Some(RoundTrigger::WanChange);
-                        } else {
-                            // Below-threshold fluctuation (§3.1.3): clamp the
-                            // current allocation, no re-optimization.
-                            self.clamp_alloc();
+                        // ρ-dampened filtering (§3.1.3) and path recompute
+                        // (§4.4) happen inside the engine; sub-threshold
+                        // fluctuations clamp without a round.
+                        if let Some(t) = self.engine.handle_wan_event(&wev).trigger() {
+                            needs_round = Some(t);
                         }
                     }
                 }
@@ -279,52 +278,22 @@ impl Simulation {
         }
         // Finalize.
         self.report.makespan = self.now;
-        let st = self.policy.take_stats();
+        let st = self.engine.take_stats();
         self.report.lp_solves += st.lp_solves;
         self.report.lp_time_s += st.lp_time_s;
         self.report.round_time_s += st.round_time_s;
+        self.report.gamma_cache_hits += st.gamma_cache_hits;
         self.report.clone()
-    }
-
-    /// Earliest time any active FlowGroup empties at current rates.
-    fn next_completion(&self) -> Option<f64> {
-        let mut best: Option<f64> = None;
-        for cf in &self.active {
-            let Some(rates) = self.alloc.rates.get(&cf.id) else { continue };
-            for (gi, &rem) in cf.remaining.iter().enumerate() {
-                if rem <= 1e-9 {
-                    continue;
-                }
-                let rate: f64 = rates.get(gi).map(|r| r.iter().sum()).unwrap_or(0.0);
-                if rate > 1e-12 {
-                    let t = self.now + rem / rate;
-                    best = Some(best.map_or(t, |b: f64| b.min(t)));
-                }
-            }
-        }
-        best
     }
 
     /// Advance simulated time, draining FlowGroups and integrating
     /// utilization over the busy period.
     fn advance(&mut self, target: f64) {
         let dt = (target - self.now).max(0.0);
-        if dt > 0.0 && !self.active.is_empty() {
-            let mut moved = 0.0;
-            for cf in &mut self.active {
-                let Some(rates) = self.alloc.rates.get(&cf.id) else { continue };
-                for (gi, rem) in cf.remaining.iter_mut().enumerate() {
-                    if *rem <= 1e-9 {
-                        continue;
-                    }
-                    let rate: f64 = rates.get(gi).map(|r| r.iter().sum()).unwrap_or(0.0);
-                    let delta = (rate * dt).min(*rem);
-                    *rem -= delta;
-                    moved += delta;
-                }
-            }
+        if dt > 0.0 && !self.engine.is_empty() {
+            let moved = self.engine.drain(dt, 0.0);
             self.report.transferred_gbit += moved;
-            self.report.capacity_gbit += self.wan.total_capacity() * dt;
+            self.report.capacity_gbit += self.engine.wan().total_capacity() * dt;
         }
         self.now = target;
     }
@@ -332,14 +301,11 @@ impl Simulation {
     /// Remove finished coflows; update job DAGs. Returns true if anything
     /// finished.
     fn process_completions(&mut self) -> bool {
-        let finished: Vec<CoflowId> =
-            self.active.iter().filter(|c| c.done()).map(|c| c.id).collect();
+        let finished = self.engine.take_finished();
         for id in &finished {
             let idx = self.record_idx[id];
             self.report.coflows[idx].finish = Some(self.now);
-            self.alloc.rates.remove(id);
         }
-        self.active.retain(|c| !c.done());
         for id in &finished {
             if let Some(&(job, stage)) = self.owners.get(id) {
                 self.complete_stage(job, stage);
@@ -378,12 +344,11 @@ impl Simulation {
         // Coordination delay: the coflow is known to the controller but no
         // bandwidth flows until the next round after the delay elapses; we
         // model it as added arrival latency on the record.
-        let min_cct = self.standalone_min_cct(&state);
+        let min_cct = self.engine.standalone_min_cct(&state);
 
         let mut admitted = true;
         if state.deadline.is_some() {
-            let net = NetView { wan: &self.wan, paths: &self.paths };
-            admitted = self.policy.admit(self.now, &state, &self.active, &net);
+            admitted = self.engine.admit(self.now, &state);
         }
         state.admitted = admitted;
 
@@ -417,7 +382,7 @@ impl Simulation {
             self.push_event(t, EvKind::Activate(Box::new(state)));
             return false;
         }
-        self.active.push(state);
+        self.engine.insert(state);
         true
     }
 
@@ -441,44 +406,10 @@ impl Simulation {
         }
     }
 
-    /// Run one scheduling round.
+    /// Run one scheduling round through the shared engine.
     fn round(&mut self, trigger: RoundTrigger) {
-        let net = NetView { wan: &self.wan, paths: &self.paths };
-        self.alloc = self.policy.allocate(self.now, trigger, &self.active, &net);
+        self.engine.round(self.now, trigger);
         self.report.rounds += 1;
-        if self.cfg.check_feasibility {
-            let usage = self.alloc.edge_usage(&self.active, &net, self.wan.num_edges());
-            for (e, (&u, c)) in usage.iter().zip(self.wan.capacities()).enumerate() {
-                assert!(
-                    u <= c * (1.0 + 1e-4) + 1e-6,
-                    "policy {} oversubscribed edge {e}: {u} > {c}",
-                    self.report.policy
-                );
-            }
-        }
-    }
-
-    /// Scale down rates on edges whose capacity dropped below usage
-    /// (sub-threshold fluctuations, no re-optimization).
-    fn clamp_alloc(&mut self) {
-        let net = NetView { wan: &self.wan, paths: &self.paths };
-        let usage = self.alloc.edge_usage(&self.active, &net, self.wan.num_edges());
-        let caps = self.wan.capacities();
-        let mut worst = 1.0f64;
-        for (&u, &c) in usage.iter().zip(&caps) {
-            if u > c && u > 1e-12 {
-                worst = worst.min(c / u);
-            }
-        }
-        if worst < 1.0 {
-            for rates in self.alloc.rates.values_mut() {
-                for g in rates {
-                    for r in g {
-                        *r *= worst;
-                    }
-                }
-            }
-        }
     }
 }
 
@@ -637,5 +568,29 @@ mod tests {
         let rep = sim.run_jobs(vec![job]);
         assert_eq!(rep.unfinished(), 1);
         assert!(rep.jobs[0].finish.is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite event time")]
+    fn rejects_nan_event_times() {
+        let wan = topologies::fig1a();
+        let mut sim = Simulation::new(wan, terra0(), SimConfig::default());
+        sim.add_wan_event(f64::NAN, LinkEvent::Fail(0, 1));
+    }
+
+    #[test]
+    fn repeat_rounds_hit_gamma_cache() {
+        // Several same-pair coflows arriving over time: every arrival round
+        // after the first should reuse cached Γ for already-active coflows.
+        let wan = topologies::fig1a();
+        let mut sim = Simulation::new(wan, terra0(), SimConfig::default());
+        let jobs: Vec<Job> = (0..4)
+            .map(|i| {
+                Job::map_reduce(i + 1, i as f64 * 0.5, 0.0, vec![mk_flow(0, 0, 1, 25.0)])
+            })
+            .collect();
+        let rep = sim.run_jobs(jobs);
+        assert_eq!(rep.unfinished(), 0);
+        assert!(rep.gamma_cache_hits > 0, "no Γ-cache hits recorded");
     }
 }

@@ -72,6 +72,9 @@ pub struct Report {
     pub lp_solves: usize,
     pub lp_time_s: f64,
     pub round_time_s: f64,
+    /// Standalone-Γ solves served from the engine's Γ-cache instead of an
+    /// LP solve (incremental re-optimization).
+    pub gamma_cache_hits: usize,
     /// Simulated makespan.
     pub makespan: f64,
 }

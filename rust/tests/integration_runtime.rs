@@ -10,6 +10,10 @@ use terra::sim::{SimConfig, Simulation};
 use terra::workloads::{WorkloadConfig, WorkloadGen, WorkloadKind};
 
 fn artifacts() -> Option<Arc<JaxSolver>> {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("skipping: built without the `pjrt` feature");
+        return None;
+    }
     if !std::path::Path::new("artifacts/manifest.json").exists() {
         eprintln!("skipping: run `make artifacts` first");
         return None;

@@ -1,0 +1,244 @@
+//! Minimal offline stand-in for the `log` facade crate, covering the subset
+//! `terra` uses: the five level macros, the [`Log`] trait, [`set_logger`] /
+//! [`set_max_level`], and the [`Level`]/[`LevelFilter`] orderings.
+
+use std::fmt;
+use std::sync::atomic::{AtomicPtr, AtomicUsize, Ordering};
+
+/// Log verbosity of one record. Ordered `Error < Warn < Info < Debug <
+/// Trace` (more verbose is "greater"), matching the real crate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Level {
+    Error = 1,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl fmt::Display for Level {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        // `pad` honors width/alignment flags (loggers print `{:5}`).
+        f.pad(s)
+    }
+}
+
+/// Maximum-verbosity filter installed via [`set_max_level`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LevelFilter {
+    Off = 0,
+    Error,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl PartialEq<LevelFilter> for Level {
+    fn eq(&self, other: &LevelFilter) -> bool {
+        *self as usize == *other as usize
+    }
+}
+
+impl PartialOrd<LevelFilter> for Level {
+    fn partial_cmp(&self, other: &LevelFilter) -> Option<std::cmp::Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+impl PartialEq<Level> for LevelFilter {
+    fn eq(&self, other: &Level) -> bool {
+        *self as usize == *other as usize
+    }
+}
+
+impl PartialOrd<Level> for LevelFilter {
+    fn partial_cmp(&self, other: &Level) -> Option<std::cmp::Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+/// Metadata of a record (level + target module path).
+pub struct Metadata<'a> {
+    level: Level,
+    target: &'a str,
+}
+
+impl<'a> Metadata<'a> {
+    pub fn level(&self) -> Level {
+        self.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.target
+    }
+}
+
+/// One log record: metadata plus pre-formatted arguments.
+pub struct Record<'a> {
+    metadata: Metadata<'a>,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    pub fn metadata(&self) -> &Metadata<'a> {
+        &self.metadata
+    }
+
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+
+    pub fn target(&self) -> &'a str {
+        self.metadata.target
+    }
+
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+}
+
+/// Backend trait implemented by loggers.
+pub trait Log: Sync + Send {
+    fn enabled(&self, metadata: &Metadata) -> bool;
+    fn log(&self, record: &Record);
+    fn flush(&self);
+}
+
+/// Returned when a logger is already installed.
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(0);
+static LOGGER: AtomicPtr<()> = AtomicPtr::new(std::ptr::null_mut());
+
+/// Install the global logger. Fails (harmlessly) if one is already set.
+pub fn set_logger(logger: &'static dyn Log) -> Result<(), SetLoggerError> {
+    // Box the wide pointer so it fits one AtomicPtr slot.
+    let boxed: Box<&'static dyn Log> = Box::new(logger);
+    let raw = Box::into_raw(boxed) as *mut ();
+    match LOGGER.compare_exchange(
+        std::ptr::null_mut(),
+        raw,
+        Ordering::SeqCst,
+        Ordering::SeqCst,
+    ) {
+        Ok(_) => Ok(()),
+        Err(_) => {
+            // Lost the race: reclaim the box and report the conflict.
+            unsafe { drop(Box::from_raw(raw as *mut &'static dyn Log)) };
+            Err(SetLoggerError(()))
+        }
+    }
+}
+
+/// Set the global maximum level; records above it are skipped.
+pub fn set_max_level(level: LevelFilter) {
+    MAX_LEVEL.store(level as usize, Ordering::SeqCst);
+}
+
+/// Current global maximum level.
+pub fn max_level() -> LevelFilter {
+    match MAX_LEVEL.load(Ordering::SeqCst) {
+        1 => LevelFilter::Error,
+        2 => LevelFilter::Warn,
+        3 => LevelFilter::Info,
+        4 => LevelFilter::Debug,
+        5 => LevelFilter::Trace,
+        _ => LevelFilter::Off,
+    }
+}
+
+fn logger() -> Option<&'static dyn Log> {
+    let raw = LOGGER.load(Ordering::SeqCst);
+    if raw.is_null() {
+        None
+    } else {
+        Some(*unsafe { &*(raw as *const &'static dyn Log) })
+    }
+}
+
+#[doc(hidden)]
+pub fn __private_log(level: Level, target: &str, args: fmt::Arguments) {
+    if level > max_level() {
+        return;
+    }
+    if let Some(l) = logger() {
+        let record = Record { metadata: Metadata { level, target }, args };
+        if l.enabled(record.metadata()) {
+            l.log(&record);
+        }
+    }
+}
+
+#[macro_export]
+macro_rules! log {
+    ($lvl:expr, $($arg:tt)+) => {
+        $crate::__private_log($lvl, module_path!(), format_args!($($arg)+))
+    };
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Error, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Warn, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Info, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Debug, $($arg)+) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Trace, $($arg)+) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    static HITS: AtomicUsize = AtomicUsize::new(0);
+
+    struct Counter;
+    impl Log for Counter {
+        fn enabled(&self, metadata: &Metadata) -> bool {
+            metadata.level() <= LevelFilter::Info
+        }
+        fn log(&self, record: &Record) {
+            if self.enabled(record.metadata()) {
+                HITS.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        fn flush(&self) {}
+    }
+
+    #[test]
+    fn filters_by_level() {
+        static C: Counter = Counter;
+        let _ = set_logger(&C);
+        set_max_level(LevelFilter::Info);
+        info!("counted {}", 1);
+        debug!("not counted");
+        assert!(HITS.load(Ordering::SeqCst) >= 1);
+        assert!(Level::Warn <= LevelFilter::Info);
+        assert!(Level::Debug > LevelFilter::Info);
+    }
+}
