@@ -101,12 +101,12 @@ fn bench_mode(n: usize, cold: bool, rounds: usize) -> ModeResult {
 }
 
 fn mode_json(m: &ModeResult) -> Json {
-    let mut o = Json::obj();
-    o.set("p50_ms", m.p50_ms.into())
-        .set("p99_ms", m.p99_ms.into())
-        .set("lp_solves_per_round", m.lp_per_round.into())
-        .set("gamma_cache_hits_per_round", m.gamma_hits_per_round.into());
-    o
+    Json::from_pairs([
+        ("p50_ms", Json::from(m.p50_ms)),
+        ("p99_ms", m.p99_ms.into()),
+        ("lp_solves_per_round", m.lp_per_round.into()),
+        ("gamma_cache_hits_per_round", m.gamma_hits_per_round.into()),
+    ])
 }
 
 fn round_latency_bench() {
@@ -129,17 +129,18 @@ fn round_latency_bench() {
             format!("{:.1}ms", cached.p99_ms),
             format!("{:.1}", cached.lp_per_round),
         ]);
-        let mut row = Json::obj();
-        row.set("active_coflows", n.into())
-            .set("cold", mode_json(&cold))
-            .set("cached", mode_json(&cached));
-        out_scales.push(row);
+        out_scales.push(Json::from_pairs([
+            ("active_coflows", Json::from(n)),
+            ("cold", mode_json(&cold)),
+            ("cached", mode_json(&cached)),
+        ]));
     }
     tab.print("RoundEngine steady-state round latency (cold vs Γ-cached)");
-    let mut doc = Json::obj();
-    doc.set("topology", "swan".into())
-        .set("rounds_timed", rounds.into())
-        .set("scales", Json::Arr(out_scales));
+    let doc = Json::from_pairs([
+        ("topology", Json::from("swan")),
+        ("rounds_timed", rounds.into()),
+        ("scales", Json::Arr(out_scales)),
+    ]);
     let path = "BENCH_round_latency.json";
     match std::fs::write(path, format!("{doc}\n")) {
         Ok(()) => println!("wrote {path}"),

@@ -35,9 +35,10 @@ impl TerraClient {
     /// Submit a coflow; returns its id, or [`REJECTED`] if a deadline was
     /// given and cannot be met.
     pub fn submit_coflow(&mut self, flows: &[FlowSpec], deadline_s: Option<f64>) -> Result<i64> {
-        let mut msg = Json::obj();
-        msg.set("op", "submit".into())
-            .set("flows", Json::Arr(flows.iter().map(|f| f.to_json()).collect()));
+        let mut msg = Json::from_pairs([
+            ("op", Json::from("submit")),
+            ("flows", Json::Arr(flows.iter().map(|f| f.to_json()).collect())),
+        ]);
         if let Some(d) = deadline_s {
             msg.set("deadline", d.into());
         }
@@ -53,8 +54,7 @@ impl TerraClient {
 
     /// Check the status of a submitted coflow.
     pub fn check_status(&mut self, cid: CoflowId) -> Result<CoflowStatus> {
-        let mut msg = Json::obj();
-        msg.set("op", "status".into()).set("cid", cid.into());
+        let msg = Json::from_pairs([("op", Json::from("status")), ("cid", cid.into())]);
         protocol::write_msg(&mut self.stream, &msg)?;
         let reply = protocol::read_msg(&mut self.stream)?
             .ok_or_else(|| anyhow::anyhow!("controller closed connection"))?;
@@ -64,10 +64,11 @@ impl TerraClient {
     /// Add flows to an already-submitted coflow (e.g. as more upstream
     /// tasks finish, §3.2 "Supporting DAGs and Pipelined Workloads").
     pub fn update_coflow(&mut self, cid: CoflowId, flows: &[FlowSpec]) -> Result<()> {
-        let mut msg = Json::obj();
-        msg.set("op", "update".into())
-            .set("cid", cid.into())
-            .set("flows", Json::Arr(flows.iter().map(|f| f.to_json()).collect()));
+        let msg = Json::from_pairs([
+            ("op", Json::from("update")),
+            ("cid", cid.into()),
+            ("flows", Json::Arr(flows.iter().map(|f| f.to_json()).collect())),
+        ]);
         protocol::write_msg(&mut self.stream, &msg)?;
         let reply = protocol::read_msg(&mut self.stream)?
             .ok_or_else(|| anyhow::anyhow!("controller closed connection"))?;
@@ -79,22 +80,27 @@ impl TerraClient {
 
     /// Inject a WAN event (operator/testing API).
     pub fn wan_event(&mut self, ev: &LinkEvent) -> Result<()> {
-        let mut msg = Json::obj();
-        msg.set("op", "wan_event".into());
-        match *ev {
-            LinkEvent::Fail(u, v) => {
-                msg.set("kind", "fail".into()).set("u", u.into()).set("v", v.into());
-            }
-            LinkEvent::Recover(u, v) => {
-                msg.set("kind", "recover".into()).set("u", u.into()).set("v", v.into());
-            }
-            LinkEvent::SetBandwidth(u, v, gbps) => {
-                msg.set("kind", "bw".into())
-                    .set("u", u.into())
-                    .set("v", v.into())
-                    .set("gbps", gbps.into());
-            }
-        }
+        let msg = match *ev {
+            LinkEvent::Fail(u, v) => Json::from_pairs([
+                ("op", Json::from("wan_event")),
+                ("kind", "fail".into()),
+                ("u", u.into()),
+                ("v", v.into()),
+            ]),
+            LinkEvent::Recover(u, v) => Json::from_pairs([
+                ("op", Json::from("wan_event")),
+                ("kind", "recover".into()),
+                ("u", u.into()),
+                ("v", v.into()),
+            ]),
+            LinkEvent::SetBandwidth(u, v, gbps) => Json::from_pairs([
+                ("op", Json::from("wan_event")),
+                ("kind", "bw".into()),
+                ("u", u.into()),
+                ("v", v.into()),
+                ("gbps", gbps.into()),
+            ]),
+        };
         protocol::write_msg(&mut self.stream, &msg)?;
         protocol::read_msg(&mut self.stream)?;
         Ok(())

@@ -99,12 +99,13 @@ pub struct RoundEngine {
     /// allocation's path indices no longer match the path sets, so it must
     /// not seed warm starts.
     warm_valid: bool,
-    /// Cumulative fractional capacity drift from sub-ρ events since the
-    /// last epoch bump. Individually ignorable fluctuations must not be
-    /// collectively ignorable: once they add up to ρ, cached Γ values are
-    /// as stale as after one qualifying event, so the epoch is bumped
-    /// (rounds still trigger per-event, as in the paper).
-    drift: f64,
+    /// Per-edge available-capacity snapshot taken at the last epoch bump.
+    /// Individually ignorable fluctuations must not be collectively
+    /// ignorable: once some edge's capacity has slid ≥ ρ away from this
+    /// snapshot through sub-ρ steps, the accumulated drift is treated
+    /// exactly like one qualifying event — epoch bump *and* a
+    /// re-optimization round.
+    epoch_caps: Vec<f64>,
     rounds: usize,
 }
 
@@ -126,6 +127,7 @@ impl RoundEngine {
         k: usize,
     ) -> RoundEngine {
         let paths = PathSet::compute(&wan, k);
+        let epoch_caps = wan.capacities();
         RoundEngine {
             wan,
             paths,
@@ -136,7 +138,7 @@ impl RoundEngine {
             alloc: Allocation::default(),
             cache: GammaCache::new(),
             warm_valid: false,
-            drift: 0.0,
+            epoch_caps,
             rounds: 0,
         }
     }
@@ -230,7 +232,10 @@ impl RoundEngine {
 
     /// Apply a WAN event with ρ-dampened filtering (§3.1.3): structural
     /// events recompute paths and bump the capacity epoch; fluctuations ≥ ρ
-    /// bump the epoch; smaller fluctuations clamp the current allocation.
+    /// bump the epoch; smaller fluctuations clamp the current allocation —
+    /// unless they have *accumulated*: once any edge's capacity has drifted
+    /// ≥ ρ away from the last epoch's snapshot, the sub-ρ step is promoted
+    /// to a re-optimization exactly like a single qualifying event.
     /// The caller runs a round iff [`WanReaction::trigger`] is `Some`.
     pub fn handle_wan_event(&mut self, ev: &LinkEvent) -> WanReaction {
         let frac = self.wan.apply_event(ev);
@@ -239,27 +244,39 @@ impl RoundEngine {
             // Recompute viable paths (§4.4); previous path indices are
             // meaningless now, so drop warm-start state too.
             self.paths = PathSet::compute(&self.wan, self.k);
-            self.cache.bump_epoch();
-            self.drift = 0.0;
+            self.bump_epoch();
             self.warm_valid = false;
             WanReaction::Structural
-        } else if frac >= self.cfg.rho {
-            self.cache.bump_epoch();
-            self.drift = 0.0;
+        } else if frac >= self.cfg.rho || self.epoch_drift(ev) >= self.cfg.rho {
+            // One big step, or many small ones that add up to one: either
+            // way the capacities the last optimization (and every cached Γ)
+            // was computed against are off by ≥ ρ somewhere.
+            self.bump_epoch();
             WanReaction::Reoptimize
         } else {
-            // Sub-ρ: no round, but cumulative drift must not let cached Γ
-            // values rot forever — once the ignored fluctuations add up to
-            // ρ, invalidate the cache (next round re-solves fresh, which is
-            // exactly the pre-cache behavior).
-            self.drift += frac;
-            if self.drift >= self.cfg.rho {
-                self.cache.bump_epoch();
-                self.drift = 0.0;
-            }
             self.clamp_alloc();
             WanReaction::Clamped
         }
+    }
+
+    /// Advance the Γ-cache epoch and re-anchor the drift snapshot on the
+    /// current available capacities.
+    fn bump_epoch(&mut self) {
+        self.cache.bump_epoch();
+        self.epoch_caps = self.wan.capacities();
+    }
+
+    /// Accumulated drift of the edge a fluctuation touched: fractional
+    /// deviation of its current available capacity from the last epoch's
+    /// snapshot. O(1): every *other* edge was verified < ρ when its own
+    /// last event was handled (and epoch bumps re-anchor the snapshot), so
+    /// only the touched edge can newly reach ρ.
+    fn epoch_drift(&self, ev: &LinkEvent) -> f64 {
+        let LinkEvent::SetBandwidth(u, v, _) = *ev else { return 0.0 };
+        let Some(e) = self.wan.edge_between(u, v) else { return 0.0 };
+        let c = self.wan.link(e).avail();
+        let c0 = self.epoch_caps[e];
+        (c - c0).abs() / c0.max(1e-9)
     }
 
     /// Run one scheduling round: hand the policy the active set, the
@@ -481,18 +498,26 @@ mod tests {
     }
 
     #[test]
-    fn accumulated_sub_rho_drift_bumps_epoch() {
+    fn accumulated_sub_rho_drift_reoptimizes() {
         let mut e = engine(false);
         e.insert(coflow(1, 0, 1, 5.0));
         e.round(0.0, RoundTrigger::CoflowArrival);
         let epoch0 = e.epoch();
-        // Two 20% drops: each is sub-ρ (clamp, no round)...
+        // A 20% drop is sub-ρ: clamp, no round, cache stays warm...
         assert_eq!(e.handle_wan_event(&LinkEvent::SetBandwidth(0, 1, 8.0)), WanReaction::Clamped);
         assert_eq!(e.epoch(), epoch0, "single sub-ρ event must keep the cache");
-        assert_eq!(e.handle_wan_event(&LinkEvent::SetBandwidth(0, 1, 6.4)), WanReaction::Clamped);
-        // ...but together they moved capacity by ≥ ρ, so cached Γ values
-        // are stale and the epoch must have advanced.
+        // ...but a second 20% step has slid the edge 36% from the epoch
+        // snapshot: the accumulated drift is a qualifying event — epoch
+        // bump AND a re-optimization round.
+        let reaction = e.handle_wan_event(&LinkEvent::SetBandwidth(0, 1, 6.4));
+        assert_eq!(reaction, WanReaction::Reoptimize, "accumulated drift must trigger a round");
+        assert!(reaction.trigger().is_some());
         assert_eq!(e.epoch(), epoch0 + 1, "cumulative drift must invalidate the Γ-cache");
+        // The snapshot re-anchors at the bump: the next small step is sub-ρ
+        // again relative to the new baseline.
+        e.round(0.1, reaction.trigger().unwrap());
+        assert_eq!(e.handle_wan_event(&LinkEvent::SetBandwidth(0, 1, 6.0)), WanReaction::Clamped);
+        assert_eq!(e.epoch(), epoch0 + 1);
     }
 
     #[test]

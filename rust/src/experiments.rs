@@ -7,10 +7,13 @@
 
 use crate::baselines;
 use crate::coflow::GB;
+use crate::net::dynamics::{self, DynamicsProfile};
 use crate::net::{topologies, LinkEvent, Wan};
 use crate::scheduler::terra::{TerraConfig, TerraPolicy};
 use crate::scheduler::Policy;
 use crate::sim::{foi, foi_volume_correlation, Job, Report, SimConfig, Simulation};
+use crate::util::json::Json;
+use crate::util::rng::splitmix64;
 use crate::workloads::{assign_deadlines, WorkloadConfig, WorkloadGen, WorkloadKind};
 
 /// Topologies in the paper's order.
@@ -281,6 +284,191 @@ pub fn alpha_sensitivity(jobs: usize, seed: u64) -> Vec<(f64, f64)> {
         .collect()
 }
 
+/// Configuration of the workload × topology × policy × dynamics sweep.
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    /// Jobs per scenario (FB is not inflated here, unlike Table 3).
+    pub jobs: usize,
+    /// Root seed: workloads and every scenario's event stream derive from
+    /// it deterministically, so the same seed reproduces identical streams.
+    pub seed: u64,
+    /// Dynamics generation horizon (seconds of simulated time).
+    pub horizon_s: f64,
+    /// Dynamics profiles to sweep ([`DynamicsProfile::by_name`] names).
+    pub profiles: Vec<String>,
+    /// Policies to sweep ([`baselines::by_name`] names).
+    pub policies: Vec<String>,
+    /// Restrict to one topology / workload (sweep all when `None`).
+    pub topology: Option<String>,
+    pub workload: Option<String>,
+    /// When > 0, assign every coflow a deadline of `deadline_d ×` its
+    /// standalone min CCT (Fig 8 style), so the deadlines-met column is
+    /// populated. 0 disables deadlines.
+    pub deadline_d: f64,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            jobs: 6,
+            seed: 7,
+            horizon_s: 420.0,
+            profiles: DynamicsProfile::all().into_iter().map(|p| p.name).collect(),
+            policies: vec![
+                "terra".into(),
+                "per-flow".into(),
+                "varys".into(),
+                "rapier".into(),
+                "swan-mcf".into(),
+            ],
+            topology: None,
+            workload: None,
+            deadline_d: 0.0,
+        }
+    }
+}
+
+/// One scenario outcome: a ⟨topology, workload, policy, dynamics⟩ cell.
+#[derive(Clone, Debug)]
+pub struct ScenarioRow {
+    pub topology: String,
+    pub workload: String,
+    pub policy: String,
+    pub profile: String,
+    pub avg_cct: f64,
+    pub p99_cct: f64,
+    pub avg_jct: f64,
+    /// Fraction of deadline-bearing coflows meeting their deadline (0 when
+    /// the sweep runs without deadlines).
+    pub deadline_met: f64,
+    pub rounds: usize,
+    pub lp_solves: usize,
+    /// WAN events delivered / rounds they triggered (reaction coverage).
+    pub wan_events: usize,
+    pub wan_rounds: usize,
+    /// Mean / worst wall-clock latency of a WAN-triggered round — how fast
+    /// the scheduler reacts after a failure or qualifying fluctuation.
+    pub reaction_ms_avg: f64,
+    pub reaction_ms_max: f64,
+    pub unfinished: usize,
+    pub makespan: f64,
+}
+
+/// Deterministic per-scenario sub-seed (same for every policy of a
+/// scenario, so all policies face the identical workload + event stream).
+fn scenario_seed(root: u64, topo: usize, workload: usize, profile: usize) -> u64 {
+    let mut s = root
+        ^ (topo as u64).wrapping_add(1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (workload as u64).wrapping_add(1).wrapping_mul(0xC2B2_AE3D_27D4_EB4F)
+        ^ (profile as u64).wrapping_add(1).wrapping_mul(0x1656_67B1_9E37_79F9);
+    splitmix64(&mut s)
+}
+
+/// The scenario sweep: run every ⟨topology, workload, policy, dynamics
+/// profile⟩ combination through the simulator (and thus the shared
+/// `RoundEngine`), replaying the profile's generated WAN event stream.
+/// Rows come back in deterministic sweep order.
+pub fn scenario_sweep(cfg: &SweepConfig) -> Vec<ScenarioRow> {
+    let mut rows = Vec::new();
+    for (ti, (tname, wan)) in eval_topologies().into_iter().enumerate() {
+        if let Some(f) = &cfg.topology {
+            if f != tname {
+                continue;
+            }
+        }
+        for (wi, kind) in WorkloadKind::all().into_iter().enumerate() {
+            if let Some(f) = &cfg.workload {
+                if f != kind.name() {
+                    continue;
+                }
+            }
+            // Workload seed is profile-independent: every profile and
+            // every policy schedules the exact same jobs, generated once
+            // per (topology, workload) cell and cloned per run.
+            let wseed = scenario_seed(cfg.seed, ti, wi, usize::MAX);
+            let wcfg = WorkloadConfig::new(kind, wseed); // machines_per_dc: 100 (§6.3 default)
+            let mut jobs = WorkloadGen::with_config(wcfg).jobs(&wan, cfg.jobs);
+            if cfg.deadline_d > 0.0 {
+                assign_deadlines(&mut jobs, &wan, cfg.deadline_d);
+            }
+            for (pi, pname) in cfg.profiles.iter().enumerate() {
+                let Some(profile) = DynamicsProfile::by_name(pname) else {
+                    log::warn!("unknown dynamics profile {pname}; skipping");
+                    continue;
+                };
+                let sseed = scenario_seed(cfg.seed, ti, wi, pi);
+                let events = dynamics::generate(&wan, &profile, cfg.horizon_s, sseed);
+                for policy_name in &cfg.policies {
+                    let Some(policy) = baselines::by_name(policy_name) else {
+                        log::warn!("unknown policy {policy_name}; skipping");
+                        continue;
+                    };
+                    let mut sim = Simulation::new(wan.clone(), policy, SimConfig::default());
+                    for ev in &events {
+                        sim.add_wan_event(ev.t, ev.ev.clone());
+                    }
+                    let rep = sim.run_jobs(jobs.clone());
+                    rows.push(ScenarioRow {
+                        topology: tname.to_string(),
+                        workload: kind.name().to_string(),
+                        policy: policy_name.clone(),
+                        profile: profile.name.clone(),
+                        avg_cct: rep.avg_cct(),
+                        p99_cct: rep.p99_cct(),
+                        avg_jct: rep.avg_jct(),
+                        deadline_met: rep.deadline_met_fraction(),
+                        rounds: rep.rounds,
+                        lp_solves: rep.lp_solves,
+                        wan_events: rep.wan_events,
+                        wan_rounds: rep.wan_rounds,
+                        reaction_ms_avg: rep.avg_reaction_ms(),
+                        reaction_ms_max: 1e3 * rep.max_reaction_s,
+                        unfinished: rep.unfinished(),
+                        makespan: rep.makespan,
+                    });
+                }
+            }
+        }
+    }
+    rows
+}
+
+/// Serialize sweep results for `BENCH_scenarios.json`.
+pub fn scenarios_json(cfg: &SweepConfig, rows: &[ScenarioRow]) -> Json {
+    let rows: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::from_pairs([
+                ("topology", Json::from(r.topology.clone())),
+                ("workload", r.workload.clone().into()),
+                ("policy", r.policy.clone().into()),
+                ("profile", r.profile.clone().into()),
+                ("avg_cct_s", r.avg_cct.into()),
+                ("p99_cct_s", r.p99_cct.into()),
+                ("avg_jct_s", r.avg_jct.into()),
+                ("deadline_met", r.deadline_met.into()),
+                ("rounds", r.rounds.into()),
+                ("lp_solves", r.lp_solves.into()),
+                ("wan_events", r.wan_events.into()),
+                ("wan_rounds", r.wan_rounds.into()),
+                ("reaction_ms_avg", r.reaction_ms_avg.into()),
+                ("reaction_ms_max", r.reaction_ms_max.into()),
+                ("unfinished", r.unfinished.into()),
+                ("makespan_s", r.makespan.into()),
+            ])
+        })
+        .collect();
+    Json::from_pairs([
+        ("seed", Json::from(cfg.seed)),
+        ("jobs", cfg.jobs.into()),
+        ("horizon_s", cfg.horizon_s.into()),
+        ("deadline_d", cfg.deadline_d.into()),
+        ("profiles", cfg.profiles.iter().map(|p| Json::from(p.clone())).collect::<Vec<_>>().into()),
+        ("policies", cfg.policies.iter().map(|p| Json::from(p.clone())).collect::<Vec<_>>().into()),
+        ("rows", Json::Arr(rows)),
+    ])
+}
+
 /// Figure 1: the motivating example — average CCT of the two coflows under
 /// the four policies of Fig 1c–1f. Returns (policy name, avg CCT seconds).
 pub fn fig1_motivation() -> Vec<(String, f64)> {
@@ -401,6 +589,41 @@ mod tests {
         assert_eq!(rows.len(), 20); // 4 workloads x 5 baselines
         let wins = rows.iter().filter(|r| r.foi_avg_jct > 1.0).count();
         assert!(wins * 10 >= rows.len() * 7, "terra should win most cells: {wins}/{}", rows.len());
+    }
+
+    #[test]
+    fn scenario_sweep_is_deterministic_and_covers_the_grid() {
+        let cfg = SweepConfig {
+            jobs: 2,
+            seed: 7,
+            // > one diurnal interval (75 s), so every edge emits at least
+            // one fluctuation and the flaky rows are guaranteed non-empty.
+            horizon_s: 160.0,
+            profiles: vec!["calm".into(), "flaky".into()],
+            policies: vec!["terra".into(), "per-flow".into()],
+            topology: Some("swan".into()),
+            // BigBench jobs run for minutes, so the workload is still busy
+            // when the first dynamics events land (the simulator stops
+            // delivering WAN events once all jobs finish).
+            workload: Some("bigbench".into()),
+            deadline_d: 0.0,
+        };
+        let a = scenario_sweep(&cfg);
+        assert_eq!(a.len(), 4, "1 topo x 1 workload x 2 profiles x 2 policies");
+        let b = scenario_sweep(&cfg);
+        for (x, y) in a.iter().zip(&b) {
+            // Virtual-time metrics are bit-deterministic given the seed
+            // (wall-clock reaction latencies are not compared).
+            assert_eq!(x.avg_cct.to_bits(), y.avg_cct.to_bits(), "{x:?} vs {y:?}");
+            assert_eq!(x.rounds, y.rounds);
+            assert_eq!(x.wan_events, y.wan_events);
+            assert_eq!(x.wan_rounds, y.wan_rounds);
+        }
+        // The calm baseline sees no WAN events; flaky must deliver some.
+        let calm: Vec<&ScenarioRow> = a.iter().filter(|r| r.profile == "calm").collect();
+        let flaky: Vec<&ScenarioRow> = a.iter().filter(|r| r.profile == "flaky").collect();
+        assert!(calm.iter().all(|r| r.wan_events == 0));
+        assert!(flaky.iter().all(|r| r.wan_events > 0), "{flaky:?}");
     }
 
     #[test]

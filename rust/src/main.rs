@@ -4,6 +4,7 @@
 //! ```text
 //! terra simulate  --topology swan --workload bigbench --policy terra --jobs 100
 //! terra reproduce --table3 | --fig6 | --fig8 | --fig11 | --fig12 | --fig13 | --fig14 | --fig1 | --fig2 | --alpha | --all
+//! terra sweep     --seed 7 --jobs 6 [--profiles calm,flaky] [--policies terra,per-flow]
 //! terra testbed   --topology fig1a --gbit 4
 //! terra topology  --name att
 //! ```
@@ -22,17 +23,23 @@ fn main() {
     match args.positional.first().map(|s| s.as_str()) {
         Some("simulate") => simulate(&args),
         Some("reproduce") => reproduce(&args),
+        Some("sweep") => sweep(&args),
         Some("testbed") => testbed(&args),
         Some("topology") => topology_info(&args),
         _ => {
             eprintln!(
-                "usage: terra <simulate|reproduce|testbed|topology> [--options]\n\
+                "usage: terra <simulate|reproduce|sweep|testbed|topology> [--options]\n\
                  \n\
                  simulate  --topology swan|gscale|att --workload bigbench|tpcds|tpch|fb\n\
                  \u{20}          --policy terra|per-flow|multipath|varys|swan-mcf|rapier\n\
                  \u{20}          --jobs N --seed S [--solver jax] [--k K] [--alpha A]\n\
                  reproduce --all | --fig1 --fig2 --fig6 --fig8 --fig11 --fig12 --fig13\n\
                  \u{20}          --fig14 --table3 --alpha [--jobs N] [--seed S]\n\
+                 sweep     [--jobs N] [--seed S] [--horizon SECS] [--deadlines D]\n\
+                 \u{20}          [--topology T] [--workload W] [--profiles a,b] [--policies x,y]\n\
+                 \u{20}          [--out BENCH_scenarios.json]   (workload x topology x policy\n\
+                 \u{20}          x WAN-dynamics scenario sweep; identical seed => identical\n\
+                 \u{20}          event streams)\n\
                  testbed   --topology fig1a --gbit VOLUME   (real TCP overlay demo)\n\
                  topology  --name swan|gscale|att|fig1a"
             );
@@ -209,6 +216,60 @@ fn reproduce(args: &Args) {
             ]);
         }
         t.print("Tables 3+4 / §6.3: Terra vs 5 baselines across <topology, workload>");
+    }
+}
+
+/// The workload × topology × policy × WAN-dynamics scenario sweep. Writes
+/// machine-readable results to `BENCH_scenarios.json` (or `--out`).
+fn sweep(args: &Args) {
+    use terra::experiments as exp;
+    let defaults = exp::SweepConfig::default();
+    let list = |v: &str| -> Vec<String> { v.split(',').map(|s| s.trim().to_string()).collect() };
+    let cfg = exp::SweepConfig {
+        jobs: args.get_usize("jobs", defaults.jobs),
+        seed: args.get_u64("seed", defaults.seed),
+        horizon_s: args.get_f64("horizon", defaults.horizon_s),
+        deadline_d: args.get_f64("deadlines", defaults.deadline_d),
+        topology: args.get("topology").map(|s| s.to_string()),
+        workload: args.get("workload").map(|s| s.to_string()),
+        profiles: args.get("profiles").map(list).unwrap_or(defaults.profiles),
+        policies: args.get("policies").map(list).unwrap_or(defaults.policies),
+    };
+    let rows = exp::scenario_sweep(&cfg);
+    let mut t = Table::new(&[
+        "topology", "workload", "policy", "profile", "avg CCT", "p99 CCT", "met", "rounds",
+        "WAN ev", "WAN rds", "react ms", "unfin",
+    ]);
+    for r in &rows {
+        t.row(&[
+            r.topology.clone(),
+            r.workload.clone(),
+            r.policy.clone(),
+            r.profile.clone(),
+            format!("{:.1}s", r.avg_cct),
+            format!("{:.1}s", r.p99_cct),
+            format!("{:.0}%", r.deadline_met * 100.0),
+            r.rounds.to_string(),
+            r.wan_events.to_string(),
+            r.wan_rounds.to_string(),
+            format!("{:.2}", r.reaction_ms_avg),
+            r.unfinished.to_string(),
+        ]);
+    }
+    t.print(&format!(
+        "Scenario sweep: {} rows (seed {}, {} jobs, horizon {:.0}s)",
+        rows.len(),
+        cfg.seed,
+        cfg.jobs,
+        cfg.horizon_s
+    ));
+    let out = args.get_or("out", "BENCH_scenarios.json");
+    match std::fs::write(out, format!("{}\n", exp::scenarios_json(&cfg, &rows))) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => {
+            eprintln!("failed to write {out}: {e}");
+            std::process::exit(1);
+        }
     }
 }
 

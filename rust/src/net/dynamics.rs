@@ -1,0 +1,460 @@
+//! WAN dynamics: seeded, deterministic generators of [`LinkEvent`] streams.
+//!
+//! Terra's headline claim is fast reaction to WAN uncertainty — "large
+//! bandwidth fluctuations and failures" (§3.1.3, Fig 10) — but hand-injected
+//! single events only exercise one reaction at a time. This module
+//! *generates* realistic event streams from composable models so the
+//! simulator, the overlay controller, and the scenario sweep
+//! ([`crate::experiments::scenario_sweep`]) can replay thousands of
+//! distinct-but-reproducible WAN histories:
+//!
+//! - [`DynamicsModel::Diurnal`] — sinusoidal available-bandwidth swings with
+//!   per-edge random phase and Gaussian jitter (high-priority background
+//!   traffic ramping up and down, §2.2);
+//! - [`DynamicsModel::MarkovFailure`] — per-link alternating-renewal on/off
+//!   process (exponential time-to-failure and time-to-repair);
+//! - [`DynamicsModel::RegionalOutage`] — correlated failures: every link
+//!   touching one site goes down together and recovers together;
+//! - [`DynamicsModel::TraceReplay`] — replay a flat-file trace
+//!   ([`parse_trace`]).
+//!
+//! ## Determinism and ordering guarantees
+//!
+//! Given the same `(wan, profile, horizon, seed)`, [`generate`] returns a
+//! byte-identical event stream. Every model's [`Pcg32`] stream is derived
+//! *purely* from `(seed, model position)` and every per-edge sub-stream
+//! purely from `(model seed, edge id)` — key-derived via SplitMix64, never
+//! by advancing a shared parent stream — so appending a model to a profile
+//! or adding a link to a topology never perturbs the streams of the
+//! existing models/edges. Events are
+//! sorted by timestamp with a *stable* sort, so equal-timestamp events
+//! (deliberate for correlated regional outages) keep their emission order:
+//! models in profile order, then edges in id order, then time order. All
+//! timestamps are finite and non-negative; recovery events may land shortly
+//! past the horizon so the stream never strands a link down forever.
+
+use super::topology::{LinkEvent, NodeId, Wan};
+use crate::util::rng::{splitmix64, Pcg32};
+
+/// Key-derived child seed: a pure function of `(root, tag)`, independent of
+/// any RNG stream position.
+fn child_seed(root: u64, tag: u64) -> u64 {
+    let mut s = root ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    splitmix64(&mut s)
+}
+
+/// A timestamped WAN event, consumable by `sim::Simulation::add_wan_event`
+/// and `overlay::ControllerHandle::inject_wan_event` (both feed the shared
+/// `engine::RoundEngine`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TimedLinkEvent {
+    pub t: f64,
+    pub ev: LinkEvent,
+}
+
+/// One composable dynamics model. Parameters are in seconds / fractions.
+#[derive(Clone, Debug)]
+pub enum DynamicsModel {
+    /// Sinusoidal bandwidth fluctuation: each *directed* edge is sampled
+    /// every `interval_s`, emitting `SetBandwidth(u, v, base · m(t))` with
+    /// `m(t) = 1 − amplitude · (0.5 + 0.5 · sin(2π(t + φ)/period))` plus
+    /// `jitter`-scaled Gaussian noise, clamped to `[0.05, 1.0]`. Each edge
+    /// gets its own phase φ and sample-start offset, so timestamps are
+    /// (almost surely) distinct and both directions fluctuate
+    /// independently.
+    Diurnal { period_s: f64, amplitude: f64, jitter: f64, interval_s: f64 },
+    /// Per-link alternating renewal process: up-time ~ Exp(`mtbf_s`), then
+    /// `Fail(u, v)`, down-time ~ Exp(`mttr_s`), then `Recover(u, v)`.
+    MarkovFailure { mtbf_s: f64, mttr_s: f64 },
+    /// Correlated regional outages: outage arrivals ~ Exp(`mtbo_s`); each
+    /// picks a site uniformly and fails *all* links touching it at the same
+    /// timestamp, recovering them together `outage_s` later.
+    RegionalOutage { mtbo_s: f64, outage_s: f64 },
+    /// Replay a fixed event list (e.g. from [`parse_trace`]) verbatim. The
+    /// horizon does *not* truncate traces: dropping a trailing recovery
+    /// would strand a link down, violating the no-stranding guarantee —
+    /// the trace author controls its extent.
+    TraceReplay { events: Vec<TimedLinkEvent> },
+}
+
+/// A named composition of dynamics models.
+#[derive(Clone, Debug)]
+pub struct DynamicsProfile {
+    pub name: String,
+    pub models: Vec<DynamicsModel>,
+}
+
+impl DynamicsProfile {
+    /// No dynamics at all — the static-WAN baseline.
+    pub fn calm() -> DynamicsProfile {
+        DynamicsProfile { name: "calm".into(), models: Vec::new() }
+    }
+
+    /// Slow sinusoidal bandwidth swings only.
+    pub fn diurnal() -> DynamicsProfile {
+        DynamicsProfile {
+            name: "diurnal".into(),
+            models: vec![DynamicsModel::Diurnal {
+                period_s: 300.0,
+                amplitude: 0.4,
+                jitter: 0.05,
+                interval_s: 75.0,
+            }],
+        }
+    }
+
+    /// Bandwidth swings plus independent per-link failures.
+    pub fn flaky() -> DynamicsProfile {
+        DynamicsProfile {
+            name: "flaky".into(),
+            models: vec![
+                DynamicsModel::Diurnal {
+                    period_s: 300.0,
+                    amplitude: 0.3,
+                    jitter: 0.05,
+                    interval_s: 75.0,
+                },
+                DynamicsModel::MarkovFailure { mtbf_s: 4000.0, mttr_s: 45.0 },
+            ],
+        }
+    }
+
+    /// Mild bandwidth swings plus correlated whole-site outages.
+    pub fn regional() -> DynamicsProfile {
+        DynamicsProfile {
+            name: "regional".into(),
+            models: vec![
+                DynamicsModel::Diurnal {
+                    period_s: 300.0,
+                    amplitude: 0.2,
+                    jitter: 0.03,
+                    interval_s: 90.0,
+                },
+                DynamicsModel::RegionalOutage { mtbo_s: 400.0, outage_s: 30.0 },
+            ],
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<DynamicsProfile> {
+        match name.to_ascii_lowercase().as_str() {
+            "calm" | "none" | "static" => Some(DynamicsProfile::calm()),
+            "diurnal" => Some(DynamicsProfile::diurnal()),
+            "flaky" => Some(DynamicsProfile::flaky()),
+            "regional" => Some(DynamicsProfile::regional()),
+            _ => None,
+        }
+    }
+
+    /// The built-in profiles swept by default (calm baseline included).
+    pub fn all() -> Vec<DynamicsProfile> {
+        vec![
+            DynamicsProfile::calm(),
+            DynamicsProfile::diurnal(),
+            DynamicsProfile::flaky(),
+            DynamicsProfile::regional(),
+        ]
+    }
+}
+
+/// Generate the profile's event stream over `[0, horizon_s)` (recoveries
+/// may trail slightly past the horizon). Deterministic given all arguments;
+/// see the module docs for the ordering guarantees.
+pub fn generate(
+    wan: &Wan,
+    profile: &DynamicsProfile,
+    horizon_s: f64,
+    seed: u64,
+) -> Vec<TimedLinkEvent> {
+    let root = seed ^ 0xD1_4A_11C5;
+    let mut out: Vec<TimedLinkEvent> = Vec::new();
+    for (mi, model) in profile.models.iter().enumerate() {
+        model.emit(wan, horizon_s, child_seed(root, mi as u64 + 1), &mut out);
+    }
+    out.retain(|e| e.t.is_finite() && e.t >= 0.0);
+    // Stable sort: equal timestamps (correlated outages) keep emission order.
+    out.sort_by(|a, b| a.t.total_cmp(&b.t));
+    out
+}
+
+impl DynamicsModel {
+    /// Append this model's events over `[0, horizon_s)` (recoveries may
+    /// trail past the horizon). `mseed` is the model's key-derived seed;
+    /// per-edge streams derive from it by edge id only.
+    fn emit(&self, wan: &Wan, horizon_s: f64, mseed: u64, out: &mut Vec<TimedLinkEvent>) {
+        match self {
+            DynamicsModel::Diurnal { period_s, amplitude, jitter, interval_s } => {
+                let period = period_s.max(1e-6);
+                let interval = interval_s.max(1e-3);
+                for (e, link) in wan.links().iter().enumerate() {
+                    let mut lr = Pcg32::new(child_seed(mseed, e as u64 + 1));
+                    let phase = lr.uniform(0.0, period);
+                    // Per-edge start offset keeps timestamps distinct
+                    // across edges.
+                    let mut t = lr.uniform(0.05 * interval, interval);
+                    let base = link.base_capacity;
+                    while t < horizon_s {
+                        let wave =
+                            0.5 + 0.5 * (std::f64::consts::TAU * (t + phase) / period).sin();
+                        let m = (1.0 - amplitude * wave + jitter * lr.gaussian()).clamp(0.05, 1.0);
+                        out.push(TimedLinkEvent {
+                            t,
+                            ev: LinkEvent::SetBandwidth(link.src, link.dst, base * m),
+                        });
+                        t += interval;
+                    }
+                }
+            }
+            DynamicsModel::MarkovFailure { mtbf_s, mttr_s } => {
+                for (e, link) in wan.links().iter().enumerate() {
+                    // One process per undirected link (Fail/Recover hit
+                    // both directions).
+                    if link.src >= link.dst {
+                        continue;
+                    }
+                    let mut lr = Pcg32::new(child_seed(mseed, e as u64 + 1));
+                    let mut t = lr.exp(mtbf_s.max(1e-3));
+                    while t < horizon_s {
+                        out.push(TimedLinkEvent { t, ev: LinkEvent::Fail(link.src, link.dst) });
+                        // Always emit the recovery, even past the horizon:
+                        // a generated stream must never strand a link down
+                        // forever.
+                        let rec = t + lr.exp(mttr_s.max(1e-3));
+                        out.push(TimedLinkEvent {
+                            t: rec,
+                            ev: LinkEvent::Recover(link.src, link.dst),
+                        });
+                        t = rec + lr.exp(mtbf_s.max(1e-3));
+                    }
+                }
+            }
+            DynamicsModel::RegionalOutage { mtbo_s, outage_s } => {
+                if wan.num_nodes() == 0 {
+                    return;
+                }
+                let mut rng = Pcg32::new(child_seed(mseed, 0));
+                let mut t = rng.exp(mtbo_s.max(1e-3));
+                while t < horizon_s {
+                    let site: NodeId = rng.below(wan.num_nodes());
+                    let rec = t + outage_s.max(1e-3);
+                    for link in wan.links() {
+                        // One Fail/Recover per undirected link touching the
+                        // site, all sharing the outage timestamp (the
+                        // correlation is the point).
+                        if link.src < link.dst && (link.src == site || link.dst == site) {
+                            out.push(TimedLinkEvent {
+                                t,
+                                ev: LinkEvent::Fail(link.src, link.dst),
+                            });
+                            out.push(TimedLinkEvent {
+                                t: rec,
+                                ev: LinkEvent::Recover(link.src, link.dst),
+                            });
+                        }
+                    }
+                    t = rec + rng.exp(mtbo_s.max(1e-3));
+                }
+            }
+            DynamicsModel::TraceReplay { events } => {
+                out.extend(events.iter().cloned());
+            }
+        }
+    }
+}
+
+/// Parse a flat-file WAN trace. One event per line:
+///
+/// ```text
+/// # comments and blank lines are skipped
+/// 12.5 fail 0 1
+/// 30.0 recover 0 1
+/// 45.25 bw 2 3 7.5
+/// ```
+pub fn parse_trace(text: &str) -> Result<Vec<TimedLinkEvent>, String> {
+    let mut out = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = line.split_whitespace().collect();
+        let err = |what: &str| format!("trace line {}: {what}: {line:?}", lineno + 1);
+        if fields.len() < 2 {
+            return Err(err("expected `<t> <kind> ...`"));
+        }
+        let t: f64 = fields[0].parse().map_err(|_| err("bad timestamp"))?;
+        if !t.is_finite() || t < 0.0 {
+            return Err(err("timestamp must be finite and non-negative"));
+        }
+        let node = |i: usize| -> Result<usize, String> {
+            fields.get(i).ok_or_else(|| err("missing node"))?.parse().map_err(|_| err("bad node"))
+        };
+        let ev = match (fields[1], fields.len()) {
+            ("fail", 4) => LinkEvent::Fail(node(2)?, node(3)?),
+            ("recover", 4) => LinkEvent::Recover(node(2)?, node(3)?),
+            ("bw", 5) => {
+                let gbps: f64 = fields[4].parse().map_err(|_| err("bad gbps"))?;
+                if !gbps.is_finite() || gbps < 0.0 {
+                    return Err(err("gbps must be finite and non-negative"));
+                }
+                LinkEvent::SetBandwidth(node(2)?, node(3)?, gbps)
+            }
+            _ => return Err(err("expected `fail u v`, `recover u v`, or `bw u v gbps`")),
+        };
+        out.push(TimedLinkEvent { t, ev });
+    }
+    out.sort_by(|a, b| a.t.total_cmp(&b.t));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::topologies;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let wan = topologies::swan();
+        for profile in DynamicsProfile::all() {
+            let a = generate(&wan, &profile, 200.0, 7);
+            let b = generate(&wan, &profile, 200.0, 7);
+            assert_eq!(a, b, "profile {} not deterministic", profile.name);
+        }
+    }
+
+    #[test]
+    fn distinct_seeds_differ() {
+        let wan = topologies::swan();
+        let a = generate(&wan, &DynamicsProfile::diurnal(), 300.0, 1);
+        let b = generate(&wan, &DynamicsProfile::diurnal(), 300.0, 2);
+        assert!(!a.is_empty());
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn calm_is_empty_and_streams_sorted() {
+        let wan = topologies::swan();
+        assert!(generate(&wan, &DynamicsProfile::calm(), 1000.0, 3).is_empty());
+        for profile in DynamicsProfile::all() {
+            let evs = generate(&wan, &profile, 500.0, 11);
+            for w in evs.windows(2) {
+                assert!(w[0].t <= w[1].t, "unsorted: {w:?}");
+            }
+            for e in &evs {
+                assert!(e.t.is_finite() && e.t >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn diurnal_stays_within_base_capacity() {
+        let wan = topologies::swan();
+        let profile = DynamicsProfile {
+            name: "d".into(),
+            models: vec![DynamicsModel::Diurnal {
+                period_s: 60.0,
+                amplitude: 0.5,
+                jitter: 0.1,
+                interval_s: 5.0,
+            }],
+        };
+        let evs = generate(&wan, &profile, 120.0, 9);
+        assert!(!evs.is_empty());
+        for e in &evs {
+            let LinkEvent::SetBandwidth(u, v, gbps) = &e.ev else {
+                panic!("diurnal must emit only SetBandwidth, got {e:?}");
+            };
+            let eid = wan.edge_between(*u, *v).expect("event on real edge");
+            let base = wan.link(eid).base_capacity;
+            assert!(
+                *gbps >= 0.05 * base - 1e-9 && *gbps <= base + 1e-9,
+                "gbps {gbps} outside [0.05, 1.0] x base {base}"
+            );
+        }
+    }
+
+    #[test]
+    fn markov_alternates_fail_recover_per_link() {
+        let wan = topologies::swan();
+        let profile = DynamicsProfile {
+            name: "m".into(),
+            models: vec![DynamicsModel::MarkovFailure { mtbf_s: 40.0, mttr_s: 10.0 }],
+        };
+        let evs = generate(&wan, &profile, 600.0, 5);
+        assert!(!evs.is_empty(), "mtbf 40s over 600s must fail something");
+        use std::collections::HashMap;
+        let mut down: HashMap<(usize, usize), bool> = HashMap::new();
+        for e in &evs {
+            match e.ev {
+                LinkEvent::Fail(u, v) => {
+                    assert!(!down.get(&(u, v)).copied().unwrap_or(false), "double fail {u}-{v}");
+                    down.insert((u, v), true);
+                }
+                LinkEvent::Recover(u, v) => {
+                    let was_down = down.get(&(u, v)).copied().unwrap_or(false);
+                    assert!(was_down, "recover while up {u}-{v}");
+                    down.insert((u, v), false);
+                }
+                _ => panic!("markov must emit only fail/recover"),
+            }
+        }
+        // Nothing stranded down at stream end.
+        assert!(down.values().all(|d| !d), "link left down: {down:?}");
+    }
+
+    #[test]
+    fn regional_outages_are_correlated() {
+        let wan = topologies::swan();
+        let profile = DynamicsProfile {
+            name: "r".into(),
+            models: vec![DynamicsModel::RegionalOutage { mtbo_s: 50.0, outage_s: 10.0 }],
+        };
+        let evs = generate(&wan, &profile, 600.0, 13);
+        let fails: Vec<&TimedLinkEvent> =
+            evs.iter().filter(|e| matches!(e.ev, LinkEvent::Fail(..))).collect();
+        assert!(!fails.is_empty());
+        // Group fails by timestamp: each group must share a common site.
+        let mut i = 0;
+        while i < fails.len() {
+            let t = fails[i].t;
+            let mut group = Vec::new();
+            while i < fails.len() && fails[i].t == t {
+                if let LinkEvent::Fail(u, v) = fails[i].ev {
+                    group.push((u, v));
+                }
+                i += 1;
+            }
+            let (u0, v0) = group[0];
+            let common = group.iter().all(|&(u, v)| u == u0 || v == u0);
+            let common2 = group.iter().all(|&(u, v)| u == v0 || v == v0);
+            assert!(common || common2, "outage group shares no site: {group:?}");
+        }
+    }
+
+    #[test]
+    fn trace_roundtrip_and_errors() {
+        let text = "# demo\n0.5 fail 0 1\n\n2 bw 1 2 7.5\n10 recover 0 1\n";
+        let evs = parse_trace(text).unwrap();
+        assert_eq!(
+            evs,
+            vec![
+                TimedLinkEvent { t: 0.5, ev: LinkEvent::Fail(0, 1) },
+                TimedLinkEvent { t: 2.0, ev: LinkEvent::SetBandwidth(1, 2, 7.5) },
+                TimedLinkEvent { t: 10.0, ev: LinkEvent::Recover(0, 1) },
+            ]
+        );
+        assert!(parse_trace("abc fail 0 1").is_err());
+        assert!(parse_trace("1.0 explode 0 1").is_err());
+        assert!(parse_trace("1.0 bw 0 1").is_err());
+        assert!(parse_trace("-1 fail 0 1").is_err());
+        // Replay is verbatim — the horizon must NOT truncate a trace (the
+        // recovery at t=10 > horizon=5 must survive, or link 0-1 would be
+        // stranded down).
+        let wan = topologies::fig1a();
+        let profile = DynamicsProfile {
+            name: "t".into(),
+            models: vec![DynamicsModel::TraceReplay { events: evs.clone() }],
+        };
+        let replayed = generate(&wan, &profile, 5.0, 0);
+        assert_eq!(replayed, evs);
+    }
+}

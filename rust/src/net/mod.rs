@@ -5,12 +5,15 @@
 //! between `u` and `v` with their cumulative bandwidth (§3.1). This module
 //! provides the graph type, the three evaluation topologies (SWAN, G-Scale,
 //! AT&T), geographic latencies, gravity-model capacity estimation, k-shortest
-//! path computation (Yen's algorithm), and the WAN event model (link
-//! failures / bandwidth fluctuations).
+//! path computation (Yen's algorithm), the WAN event model (link
+//! failures / bandwidth fluctuations), and seeded generators of realistic
+//! WAN dynamics streams ([`dynamics`]).
 
+pub mod dynamics;
 pub mod paths;
 pub mod topologies;
 pub mod topology;
 
+pub use dynamics::{DynamicsModel, DynamicsProfile, TimedLinkEvent};
 pub use topology::{EdgeId, LinkEvent, NodeId, Wan};
 pub use paths::Path;

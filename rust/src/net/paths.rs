@@ -46,8 +46,12 @@ struct HeapEntry {
 impl Eq for HeapEntry {}
 impl Ord for HeapEntry {
     fn cmp(&self, other: &Self) -> Ordering {
-        // Min-heap on distance.
-        other.dist.partial_cmp(&self.dist).unwrap_or(Ordering::Equal)
+        // Min-heap on distance, then on node id: equal-distance nodes pop
+        // in id order so tie-breaking never depends on heap internals.
+        other
+            .dist
+            .total_cmp(&self.dist)
+            .then_with(|| other.node.cmp(&self.node))
     }
 }
 impl PartialOrd for HeapEntry {
@@ -93,6 +97,15 @@ pub fn dijkstra(
                 dist[v] = nd;
                 prev_edge[v] = Some(e);
                 heap.push(HeapEntry { dist: nd, node: v });
+            } else if (nd - dist[v]).abs() <= 1e-12 {
+                // Equal-cost tie: keep the predecessor with the smaller
+                // node id, so ties resolve to the same (low-node-id) route
+                // in both directions and across runs.
+                if let Some(pe) = prev_edge[v] {
+                    if u < wan.link(pe).src {
+                        prev_edge[v] = Some(e);
+                    }
+                }
             }
         }
     }
@@ -111,7 +124,14 @@ pub fn dijkstra(
 }
 
 /// Yen's algorithm: up to `k` loopless shortest paths from `src` to `dst`
-/// ordered by latency. Returns fewer when the graph has fewer distinct paths.
+/// ordered by `(latency, node-id sequence)`. Returns fewer when the graph
+/// has fewer distinct paths. The ordering is fully deterministic: among
+/// the enumerated paths, equal-latency ties are broken by lexicographic
+/// node sequence, and Dijkstra itself prefers the lower-node-id
+/// predecessor on exact-cost ties (a local rule — it yields the
+/// lexicographically-smallest route when equal-cost alternatives differ in
+/// one intermediate node, as in ring-like topologies, though not for
+/// arbitrarily long equal-cost detours).
 pub fn k_shortest_paths(wan: &Wan, src: NodeId, dst: NodeId, k: usize) -> Vec<Path> {
     if src == dst || k == 0 {
         return Vec::new();
@@ -157,15 +177,27 @@ pub fn k_shortest_paths(wan: &Wan, src: NodeId, dst: NodeId, k: usize) -> Vec<Pa
         if candidates.is_empty() {
             break;
         }
-        // Pop the best candidate.
+        // Pop the best candidate; equal-latency candidates tie-break by
+        // their node sequence, so the k-list order is stable across runs
+        // and independent of spur enumeration order.
         let best = candidates
             .iter()
             .enumerate()
-            .min_by(|a, b| a.1.latency_ms.partial_cmp(&b.1.latency_ms).unwrap())
+            .min_by(|a, b| {
+                a.1.latency_ms
+                    .total_cmp(&b.1.latency_ms)
+                    .then_with(|| a.1.nodes(wan).cmp(&b.1.nodes(wan)))
+            })
             .map(|(i, _)| i)
             .unwrap();
         found.push(candidates.swap_remove(best));
     }
+    // Yen discovers in non-decreasing latency; this stable sort only
+    // normalizes the order *within* equal-latency runs to the node-sequence
+    // order, so the returned list is a pure function of the graph.
+    found.sort_by(|a, b| {
+        a.latency_ms.total_cmp(&b.latency_ms).then_with(|| a.nodes(wan).cmp(&b.nodes(wan)))
+    });
     found
 }
 
@@ -287,6 +319,54 @@ mod tests {
             }
         }
         assert!(ps.get(1, 1).is_empty());
+    }
+
+    /// 4-node ring with uniform latencies: the two 0→2 routes (via 1, via
+    /// 3) are exactly equal-cost, so only the tie-break decides the order.
+    fn uniform_ring() -> Wan {
+        let mut w = Wan::new();
+        for (i, name) in ["A", "B", "C", "D"].iter().enumerate() {
+            w.add_node(name, 0.0, i as f64);
+        }
+        w.add_link(0, 1, 10.0, Some(1.0));
+        w.add_link(1, 2, 10.0, Some(1.0));
+        w.add_link(2, 3, 10.0, Some(1.0));
+        w.add_link(3, 0, 10.0, Some(1.0));
+        w
+    }
+
+    #[test]
+    fn equal_cost_ties_break_by_node_sequence() {
+        let w = uniform_ring();
+        let ps = k_shortest_paths(&w, 0, 2, 5);
+        assert_eq!(ps.len(), 2);
+        // Lexicographically smaller node sequence first: via B (node 1),
+        // then via D (node 3).
+        assert_eq!(ps[0].nodes(&w), vec![0, 1, 2]);
+        assert_eq!(ps[1].nodes(&w), vec![0, 3, 2]);
+    }
+
+    #[test]
+    fn tie_break_is_stable_across_runs_and_directions() {
+        let w = uniform_ring();
+        let forward = k_shortest_paths(&w, 0, 2, 5);
+        for _ in 0..20 {
+            assert_eq!(k_shortest_paths(&w, 0, 2, 5), forward, "run-to-run divergence");
+        }
+        // Reverse direction resolves the same ties: each reverse path is
+        // the mirror of the forward path at the same rank.
+        let reverse = k_shortest_paths(&w, 2, 0, 5);
+        assert_eq!(forward.len(), reverse.len());
+        for (f, r) in forward.iter().zip(&reverse) {
+            let mut mirrored = r.nodes(&w);
+            mirrored.reverse();
+            assert_eq!(f.nodes(&w), mirrored, "directions disagree on a tie");
+            assert!((f.latency_ms - r.latency_ms).abs() < 1e-12);
+        }
+        // Full path sets agree with the pairwise calls (PathSet is just a
+        // cache of them).
+        let ps = PathSet::compute(&w, 5);
+        assert_eq!(ps.get(0, 2), &forward[..]);
     }
 
     #[test]

@@ -198,7 +198,15 @@ impl Wan {
                 if let Some(e) = self.edge_between(u, v) {
                     let old = self.links[e].capacity.max(1e-9);
                     self.links[e].capacity = gbps.max(0.0);
-                    ((gbps - old) / old).abs()
+                    if self.links[e].up {
+                        ((gbps - old) / old).abs()
+                    } else {
+                        // Fluctuation on a failed link: the stored capacity
+                        // is updated, but the optimizer-visible (available)
+                        // capacity stays 0 either way — not a change worth
+                        // reacting to. (Recovery resets to base capacity.)
+                        0.0
+                    }
                 } else {
                     0.0
                 }
@@ -310,6 +318,21 @@ mod tests {
         // Reverse direction untouched.
         let er = w.edge_between(1, 0).unwrap();
         assert_eq!(w.link(er).capacity, 10.0);
+    }
+
+    #[test]
+    fn fluctuation_on_down_link_is_not_a_change() {
+        let mut w = triangle();
+        w.apply_event(&LinkEvent::Fail(0, 1));
+        // Available capacity is 0 before and after: frac must be 0 so the
+        // ρ filter never re-optimizes for an invisible change.
+        let frac = w.apply_event(&LinkEvent::SetBandwidth(0, 1, 2.0));
+        assert_eq!(frac, 0.0);
+        let e = w.edge_between(0, 1).unwrap();
+        assert_eq!(w.link(e).avail(), 0.0);
+        // Recovery discards the fluctuated value and restores base.
+        w.apply_event(&LinkEvent::Recover(0, 1));
+        assert_eq!(w.link(e).avail(), 10.0);
     }
 
     #[test]

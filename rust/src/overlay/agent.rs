@@ -70,11 +70,11 @@ impl Agent {
 
         // Control channel.
         let mut ctrl = TcpStream::connect(controller_addr)?;
-        let mut hello = Json::obj();
-        hello
-            .set("op", "hello".into())
-            .set("dc", dc.into())
-            .set("data_addr", data_addr.to_string().into());
+        let hello = Json::from_pairs([
+            ("op", Json::from("hello")),
+            ("dc", dc.into()),
+            ("data_addr", data_addr.to_string().into()),
+        ]);
         protocol::write_msg(&mut ctrl, &hello)?;
         let ctrl_tx = Arc::new(Mutex::new(ctrl.try_clone()?));
 
@@ -380,11 +380,12 @@ fn recv_loop(
             }
         }
         if done {
-            let mut msg = Json::obj();
-            msg.set("op", "group_done".into())
-                .set("coflow", hdr.coflow.into())
-                .set("src", (hdr.src_dc as u64).into())
-                .set("dst", my_dc.into());
+            let msg = Json::from_pairs([
+                ("op", Json::from("group_done")),
+                ("coflow", hdr.coflow.into()),
+                ("src", (hdr.src_dc as u64).into()),
+                ("dst", my_dc.into()),
+            ]);
             let mut tx = ctrl_tx.lock().unwrap();
             let _ = protocol::write_msg(&mut tx, &msg);
         }

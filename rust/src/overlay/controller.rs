@@ -173,9 +173,18 @@ impl ControllerHandle {
     }
 
     /// Inject a WAN event (link failure / recovery / bandwidth change).
-    pub fn inject_wan_event(&self, ev: LinkEvent) {
+    /// Returns the engine's ρ-dampened classification (parity tests compare
+    /// it against the simulator's reaction to the same stream).
+    pub fn inject_wan_event(&self, ev: LinkEvent) -> WanReaction {
         let mut st = self.state.lock().unwrap();
-        apply_wan_event(&mut st, &ev);
+        apply_wan_event(&mut st, &ev)
+    }
+
+    /// Current WAN capacity epoch of the shared engine (parity/golden
+    /// tests).
+    pub fn epoch(&self) -> u64 {
+        let st = self.state.lock().unwrap();
+        st.engine.epoch()
     }
 
     /// Current total receive rate estimate per coflow is kept agent-side;
@@ -266,13 +275,12 @@ fn serve_conn(mut s: TcpStream, state: Arc<Mutex<State>>, stop: Arc<AtomicBool>)
                     let mut st = state.lock().unwrap();
                     apply_wan_event(&mut st, &ev);
                 }
-                let mut ok = Json::obj();
-                ok.set("ok", true.into());
+                let ok = Json::from_pairs([("ok", Json::from(true))]);
                 let _ = protocol::write_msg(&mut s, &ok);
             }
             _ => {
-                let mut err = Json::obj();
-                err.set("error", format!("unknown op {op}").into());
+                let err =
+                    Json::from_pairs([("error", Json::from(format!("unknown op {op}")))]);
                 let _ = protocol::write_msg(&mut s, &err);
             }
         }
@@ -282,8 +290,9 @@ fn serve_conn(mut s: TcpStream, state: Arc<Mutex<State>>, stop: Arc<AtomicBool>)
 /// Route a WAN event through the engine's ρ-dampened filter and react:
 /// structural events reinstall rules and rewire peers before the round;
 /// sub-ρ fluctuations push the clamped rates without re-optimizing.
-fn apply_wan_event(st: &mut State, ev: &LinkEvent) {
-    match st.engine.handle_wan_event(ev) {
+fn apply_wan_event(st: &mut State, ev: &LinkEvent) -> WanReaction {
+    let reaction = st.engine.handle_wan_event(ev);
+    match reaction {
         WanReaction::Structural => {
             let (wan, paths) = (st.engine.wan().clone(), st.engine.paths().clone());
             st.rules.reinstall(&wan, &paths);
@@ -293,6 +302,7 @@ fn apply_wan_event(st: &mut State, ev: &LinkEvent) {
         WanReaction::Reoptimize => reallocate(st, RoundTrigger::WanChange),
         WanReaction::Clamped => push_rates(st),
     }
+    reaction
 }
 
 fn parse_event(msg: &Json) -> Option<LinkEvent> {
@@ -313,15 +323,14 @@ fn resend_peers(st: &mut State) {
         .agents
         .iter()
         .map(|(dc, a)| {
-            let mut o = Json::obj();
-            o.set("dc", (*dc).into())
-                .set("addr", a.data_addr.clone().into())
-                .set("k", st.k.into());
-            o
+            Json::from_pairs([
+                ("dc", Json::from(*dc)),
+                ("addr", a.data_addr.clone().into()),
+                ("k", st.k.into()),
+            ])
         })
         .collect();
-    let mut msg = Json::obj();
-    msg.set("op", "peers".into()).set("peers", Json::Arr(peers));
+    let msg = Json::from_pairs([("op", Json::from("peers")), ("peers", Json::Arr(peers))]);
     for a in st.agents.values_mut() {
         let _ = protocol::write_msg(&mut a.ctrl, &msg);
     }
@@ -437,9 +446,7 @@ fn handle_submit(msg: &Json, state: &Arc<Mutex<State>>) -> Json {
         },
     );
     if !admitted {
-        let mut reply = Json::obj();
-        reply.set("cid", (-1i64).into());
-        return reply;
+        return Json::from_pairs([("cid", Json::from(-1i64))]);
     }
 
     cstate.admitted = true;
@@ -448,9 +455,7 @@ fn handle_submit(msg: &Json, state: &Arc<Mutex<State>>) -> Json {
     // Wire transfers: receiver expectations first, then sender starts.
     send_transfer_msgs(&mut st, id, &flows);
     reallocate(&mut st, RoundTrigger::CoflowArrival);
-    let mut reply = Json::obj();
-    reply.set("cid", id.into());
-    reply
+    Json::from_pairs([("cid", Json::from(id))])
 }
 
 fn handle_update(msg: &Json, state: &Arc<Mutex<State>>) -> Json {
@@ -463,16 +468,12 @@ fn handle_update(msg: &Json, state: &Arc<Mutex<State>>) -> Json {
     let mut st = state.lock().unwrap();
     match st.coflows.get(&id) {
         None => {
-            let mut r = Json::obj();
-            r.set("error", "unknown coflow".into());
-            return r;
+            return Json::from_pairs([("error", Json::from("unknown coflow"))]);
         }
         // A deadline-rejected coflow must never re-enter scheduling via
         // update (§3.2 admission is final; clients were handed cid = -1).
         Some(meta) if !meta.admitted => {
-            let mut r = Json::obj();
-            r.set("error", "coflow was rejected".into());
-            return r;
+            return Json::from_pairs([("error", Json::from("coflow was rejected"))]);
         }
         Some(_) => {}
     }
@@ -517,9 +518,7 @@ fn handle_update(msg: &Json, state: &Arc<Mutex<State>>) -> Json {
     }
     send_transfer_msgs(&mut st, id, &flows);
     reallocate(&mut st, RoundTrigger::CoflowArrival);
-    let mut r = Json::obj();
-    r.set("cid", id.into());
-    r
+    Json::from_pairs([("cid", Json::from(id))])
 }
 
 /// Send `expect` to destination agents and `transfer` to source agents.
@@ -533,19 +532,21 @@ fn send_transfer_msgs(st: &mut State, id: CoflowId, flows: &[FlowSpec]) {
     }
     for ((src, dst), bytes) in by_pair {
         if let Some(a) = st.agents.get_mut(&dst) {
-            let mut m = Json::obj();
-            m.set("op", "expect".into())
-                .set("coflow", id.into())
-                .set("src", src.into())
-                .set("bytes", bytes.into());
+            let m = Json::from_pairs([
+                ("op", Json::from("expect")),
+                ("coflow", id.into()),
+                ("src", src.into()),
+                ("bytes", bytes.into()),
+            ]);
             let _ = protocol::write_msg(&mut a.ctrl, &m);
         }
         if let Some(a) = st.agents.get_mut(&src) {
-            let mut m = Json::obj();
-            m.set("op", "transfer".into())
-                .set("coflow", id.into())
-                .set("dst", dst.into())
-                .set("bytes", bytes.into());
+            let m = Json::from_pairs([
+                ("op", Json::from("transfer")),
+                ("coflow", id.into()),
+                ("dst", dst.into()),
+                ("bytes", bytes.into()),
+            ]);
             let _ = protocol::write_msg(&mut a.ctrl, &m);
         }
     }
@@ -571,11 +572,12 @@ fn push_rates(st: &mut State) {
                 .map(|v| v.iter().map(|&r| Json::Num(r)).collect())
                 .unwrap_or_default();
             if let Some(a) = agents.get_mut(&g.src) {
-                let mut m = Json::obj();
-                m.set("op", "rates".into())
-                    .set("coflow", cs.id.into())
-                    .set("dst", g.dst.into())
-                    .set("rates", Json::Arr(path_rates));
+                let m = Json::from_pairs([
+                    ("op", Json::from("rates")),
+                    ("coflow", cs.id.into()),
+                    ("dst", g.dst.into()),
+                    ("rates", Json::Arr(path_rates)),
+                ]);
                 let _ = protocol::write_msg(&mut a.ctrl, &m);
             }
         }

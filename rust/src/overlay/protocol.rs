@@ -27,12 +27,12 @@ pub struct FlowSpec {
 
 impl FlowSpec {
     pub fn to_json(&self) -> Json {
-        let mut o = Json::obj();
-        o.set("id", self.id.into())
-            .set("src", self.src_dc.into())
-            .set("dst", self.dst_dc.into())
-            .set("bytes", self.bytes.into());
-        o
+        Json::from_pairs([
+            ("id", Json::from(self.id)),
+            ("src", self.src_dc.into()),
+            ("dst", self.dst_dc.into()),
+            ("bytes", self.bytes.into()),
+        ])
     }
 
     pub fn from_json(j: &Json) -> Option<FlowSpec> {
@@ -57,20 +57,20 @@ pub enum CoflowStatus {
 
 impl CoflowStatus {
     pub fn to_json(&self) -> Json {
-        let mut o = Json::obj();
         match self {
-            CoflowStatus::Pending => o.set("state", "pending".into()),
-            CoflowStatus::Running { delivered, total } => o
-                .set("state", "running".into())
-                .set("delivered", (*delivered).into())
-                .set("total", (*total).into()),
-            CoflowStatus::Done { cct_s } => {
-                o.set("state", "done".into()).set("cct_s", (*cct_s).into())
-            }
-            CoflowStatus::Rejected => o.set("state", "rejected".into()),
-            CoflowStatus::Unknown => o.set("state", "unknown".into()),
-        };
-        o
+            CoflowStatus::Pending => Json::from_pairs([("state", Json::from("pending"))]),
+            CoflowStatus::Running { delivered, total } => Json::from_pairs([
+                ("state", Json::from("running")),
+                ("delivered", (*delivered).into()),
+                ("total", (*total).into()),
+            ]),
+            CoflowStatus::Done { cct_s } => Json::from_pairs([
+                ("state", Json::from("done")),
+                ("cct_s", (*cct_s).into()),
+            ]),
+            CoflowStatus::Rejected => Json::from_pairs([("state", Json::from("rejected"))]),
+            CoflowStatus::Unknown => Json::from_pairs([("state", Json::from("unknown"))]),
+        }
     }
 
     pub fn from_json(j: &Json) -> CoflowStatus {
@@ -253,8 +253,7 @@ mod tests {
             assert!(read_msg(&mut s).unwrap().is_none()); // EOF
         });
         let mut c = TcpStream::connect(addr).unwrap();
-        let mut msg = Json::obj();
-        msg.set("op", "hello".into()).set("dc", 3u64.into());
+        let msg = Json::from_pairs([("op", Json::from("hello")), ("dc", 3u64.into())]);
         write_msg(&mut c, &msg).unwrap();
         let echo = read_msg(&mut c).unwrap().unwrap();
         assert_eq!(echo, msg);

@@ -75,6 +75,15 @@ pub struct Report {
     /// Standalone-Γ solves served from the engine's Γ-cache instead of an
     /// LP solve (incremental re-optimization).
     pub gamma_cache_hits: usize,
+    /// WAN events delivered to the engine (fail / recover / fluctuation).
+    pub wan_events: usize,
+    /// Rounds triggered by WAN changes (structural, ≥ ρ, or accumulated
+    /// drift) — sub-ρ clamps don't count.
+    pub wan_rounds: usize,
+    /// Total / worst wall-clock time of WAN-triggered rounds: how long the
+    /// scheduler takes to react to a failure or qualifying fluctuation.
+    pub reaction_time_s: f64,
+    pub max_reaction_s: f64,
     /// Simulated makespan.
     pub makespan: f64,
 }
@@ -102,6 +111,19 @@ impl Report {
 
     pub fn p95_cct(&self) -> f64 {
         stats::percentile(&self.ccts(), 95.0)
+    }
+
+    pub fn p99_cct(&self) -> f64 {
+        stats::percentile(&self.ccts(), 99.0)
+    }
+
+    /// Mean wall-clock latency (ms) of rounds reacting to WAN changes.
+    pub fn avg_reaction_ms(&self) -> f64 {
+        if self.wan_rounds == 0 {
+            0.0
+        } else {
+            1e3 * self.reaction_time_s / self.wan_rounds as f64
+        }
     }
 
     /// Average WAN utilization over the busy period.

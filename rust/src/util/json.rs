@@ -23,15 +23,23 @@ impl Json {
         Json::Obj(BTreeMap::new())
     }
 
-    /// Insert into an object; panics if `self` is not an object.
-    pub fn set(&mut self, key: &str, val: Json) -> &mut Self {
+    /// Build an object from `(key, value)` pairs.
+    pub fn from_pairs<K: Into<String>>(pairs: impl IntoIterator<Item = (K, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.into(), v)).collect())
+    }
+
+    /// Insert into an object. Returns `Some(self)` for chaining when `self`
+    /// is an object; returns `None` and leaves `self` untouched otherwise
+    /// (it never panics — like `HashMap::insert`, the return value may be
+    /// ignored when the receiver is statically known to be an object).
+    pub fn set(&mut self, key: &str, val: Json) -> Option<&mut Self> {
         match self {
             Json::Obj(m) => {
                 m.insert(key.to_string(), val);
             }
-            _ => panic!("Json::set on non-object"),
+            _ => return None,
         }
-        self
+        Some(self)
     }
 
     pub fn get(&self, key: &str) -> Option<&Json> {
@@ -397,15 +405,33 @@ mod tests {
 
     #[test]
     fn roundtrip_object() {
-        let mut o = Json::obj();
-        o.set("name", "terra".into())
-            .set("pi", 3.25.into())
-            .set("n", 42u64.into())
-            .set("flag", true.into())
-            .set("xs", vec![1.0, 2.0, 3.0].into());
+        let mut o = Json::from_pairs([
+            ("name", Json::from("terra")),
+            ("pi", 3.25.into()),
+            ("n", 42u64.into()),
+            ("flag", true.into()),
+        ]);
+        o.set("xs", vec![1.0, 2.0, 3.0].into());
         let s = o.to_string();
         let back = Json::parse(&s).unwrap();
         assert_eq!(back, o);
+    }
+
+    #[test]
+    fn set_on_non_object_is_a_safe_no_op() {
+        // `set` must not panic on non-objects: it reports failure instead.
+        let non_objects =
+            [Json::Null, Json::Bool(true), Json::Num(3.0), Json::Str("x".into()), Json::Arr(vec![])];
+        for mut v in non_objects {
+            let before = v.clone();
+            assert!(v.set("k", 1u64.into()).is_none());
+            assert_eq!(v, before, "non-object mutated by set");
+        }
+        // Objects chain through the Some branch.
+        let mut o = Json::obj();
+        let _ = o.set("a", 1u64.into()).and_then(|o| o.set("b", 2u64.into()));
+        assert_eq!(o.get("a").and_then(Json::as_u64), Some(1));
+        assert_eq!(o.get("b").and_then(Json::as_u64), Some(2));
     }
 
     #[test]

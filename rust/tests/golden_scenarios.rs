@@ -1,0 +1,287 @@
+//! Golden-trace regression tests: a fixed-seed WAN dynamics scenario on
+//! each evaluation topology is replayed through the simulator and through a
+//! spawned TCP controller, and both planes' round/event logs must be
+//! **byte-identical** (they drive the same `engine::RoundEngine`). The
+//! simulator's log — including the final rate allocation — is additionally
+//! pinned against golden JSON under `tests/golden/`; regenerate with
+//! `TERRA_BLESS=1 cargo test --test golden_scenarios` (missing files are
+//! blessed automatically on first run).
+
+use terra::api::TerraClient;
+use terra::coflow::Flow;
+use terra::net::dynamics::{self, DynamicsModel, DynamicsProfile, TimedLinkEvent};
+use terra::net::{topologies, LinkEvent, Wan};
+use terra::overlay::protocol::FlowSpec;
+use terra::overlay::{Controller, TestbedConfig, BYTES_PER_GBPS};
+use terra::scheduler::terra::{TerraConfig, TerraPolicy};
+use terra::scheduler::{CoflowRates, Policy};
+use terra::sim::{Job, SimConfig, Simulation};
+use terra::util::json::Json;
+
+const K: usize = 3;
+const SEED: u64 = 7;
+const HORIZON_S: f64 = 30.0;
+
+/// (src, dst, Gbit) of the scenario coflows. Volumes are enormous and
+/// well-separated so (a) nothing completes inside the horizon — keeping the
+/// per-event round deltas identical between virtual-time and wall-clock
+/// replays — and (b) the SRTF Γ-ordering has no near-ties that the
+/// controller's wall-clock drain could flip.
+const COFLOWS: [(usize, usize, f64); 3] =
+    [(0, 1, 500_000.0), (1, 2, 300_000.0), (2, 0, 150_000.0)];
+
+fn policy() -> Box<dyn Policy> {
+    Box::new(TerraPolicy::new(TerraConfig { alpha: 0.0, k: K, ..Default::default() }))
+}
+
+/// The scenario's dynamics: gentle diurnal fluctuation with rare random
+/// failures, plus one deterministic fail/recover of the topology's first
+/// link so every topology exercises a structural reaction.
+fn scenario_events(wan: &Wan) -> Vec<TimedLinkEvent> {
+    let profile = DynamicsProfile {
+        name: "golden".into(),
+        models: vec![
+            DynamicsModel::Diurnal {
+                period_s: 120.0,
+                amplitude: 0.3,
+                jitter: 0.02,
+                interval_s: 10.0,
+            },
+            DynamicsModel::MarkovFailure { mtbf_s: 1500.0, mttr_s: 6.0 },
+        ],
+    };
+    let mut events = dynamics::generate(wan, &profile, HORIZON_S, SEED);
+    let l0 = &wan.links()[0];
+    events.push(TimedLinkEvent { t: 13.25, ev: LinkEvent::Fail(l0.src, l0.dst) });
+    events.push(TimedLinkEvent { t: 22.75, ev: LinkEvent::Recover(l0.src, l0.dst) });
+    events.sort_by(|a, b| a.t.total_cmp(&b.t));
+    // The per-event replay attributes rounds to one event per timestamp;
+    // drop (measure-zero) timestamp collisions so the attribution is exact.
+    events.dedup_by(|b, a| (b.t - a.t).abs() < 1e-9);
+    events
+}
+
+/// One per-event log entry: everything both planes can observe about the
+/// engine's reaction, and nothing wall-clock-dependent.
+struct EventRecord {
+    t: f64,
+    ev: LinkEvent,
+    /// Capacity epoch after the event.
+    epoch: u64,
+    /// Engine rounds this event triggered (1 for structural/≥ρ/drift, 0
+    /// for a sub-ρ clamp).
+    rounds_delta: usize,
+}
+
+/// Quantize for stable JSON (also caps golden-file churn from last-ulp
+/// platform differences).
+fn q6(x: f64) -> f64 {
+    (x * 1e6).round() / 1e6
+}
+
+fn records_json(recs: &[EventRecord]) -> Json {
+    Json::Arr(
+        recs.iter()
+            .map(|r| {
+                let (kind, u, v, gbps) = match r.ev {
+                    LinkEvent::Fail(u, v) => ("fail", u, v, None),
+                    LinkEvent::Recover(u, v) => ("recover", u, v, None),
+                    LinkEvent::SetBandwidth(u, v, g) => ("bw", u, v, Some(g)),
+                };
+                let mut o = Json::from_pairs([
+                    ("t", Json::from(q6(r.t))),
+                    ("kind", kind.into()),
+                    ("u", u.into()),
+                    ("v", v.into()),
+                    ("epoch", r.epoch.into()),
+                    ("rounds", r.rounds_delta.into()),
+                ]);
+                if let Some(g) = gbps {
+                    o.set("gbps", q6(g).into());
+                }
+                o
+            })
+            .collect(),
+    )
+}
+
+fn rates_json(rates: &[Option<CoflowRates>]) -> Json {
+    Json::Arr(
+        rates
+            .iter()
+            .map(|r| match r {
+                None => Json::Null,
+                Some(groups) => Json::Arr(
+                    groups
+                        .iter()
+                        .map(|g| Json::Arr(g.iter().map(|&x| Json::Num(q6(x))).collect()))
+                        .collect(),
+                ),
+            })
+            .collect(),
+    )
+}
+
+/// Simulator replay: inject the whole stream up front, then step the
+/// virtual clock just past each event to read the engine's reaction.
+fn sim_replay(wan: Wan, events: &[TimedLinkEvent]) -> (Vec<EventRecord>, Vec<Option<CoflowRates>>) {
+    let mut sim = Simulation::new(wan, policy(), SimConfig::default());
+    for (i, (s, d, gbit)) in COFLOWS.iter().enumerate() {
+        sim.add_job(Job::map_reduce(
+            i as u64 + 1,
+            0.0,
+            0.0,
+            vec![Flow { id: 0, src_dc: *s, dst_dc: *d, volume: *gbit }],
+        ));
+    }
+    for e in events {
+        sim.add_wan_event(e.t, e.ev.clone());
+    }
+    sim.run_until(0.0); // arrivals + initial round
+    let mut recs = Vec::new();
+    let mut last_rounds = sim.engine().rounds();
+    for (i, e) in events.iter().enumerate() {
+        // Stop strictly between this event and the next so exactly one
+        // event (and its round, if any) lands in the window.
+        let stop = match events.get(i + 1) {
+            Some(n) => e.t + (n.t - e.t).min(2e-4) / 2.0,
+            None => e.t + 1e-4,
+        };
+        sim.run_until(stop);
+        let rounds = sim.engine().rounds();
+        recs.push(EventRecord {
+            t: e.t,
+            ev: e.ev.clone(),
+            epoch: sim.engine().epoch(),
+            rounds_delta: rounds - last_rounds,
+        });
+        last_rounds = rounds;
+    }
+    let rates = (1..=COFLOWS.len() as u64).map(|id| sim.allocation(id)).collect();
+    (recs, rates)
+}
+
+/// Controller replay: submit the same coflows over TCP, inject the same
+/// stream event by event, and read the same engine observables.
+fn controller_replay(
+    wan: Wan,
+    events: &[TimedLinkEvent],
+) -> (Vec<EventRecord>, Vec<Option<CoflowRates>>) {
+    let handle = Controller::spawn(TestbedConfig { wan, k: K }, policy()).expect("spawn");
+    let mut client = TerraClient::connect(handle.addr).expect("connect");
+    let mut ids = Vec::new();
+    for (i, (s, d, gbit)) in COFLOWS.iter().enumerate() {
+        let spec = FlowSpec {
+            id: i as u64,
+            src_dc: *s,
+            dst_dc: *d,
+            bytes: (gbit * BYTES_PER_GBPS) as u64,
+        };
+        let cid = client.submit_coflow(&[spec], None).expect("submit");
+        assert!(cid > 0);
+        ids.push(cid as u64);
+    }
+    let mut recs = Vec::new();
+    let mut last_rounds = handle.rounds();
+    for e in events {
+        handle.inject_wan_event(e.ev.clone());
+        let rounds = handle.rounds();
+        recs.push(EventRecord {
+            t: e.t,
+            ev: e.ev.clone(),
+            epoch: handle.epoch(),
+            rounds_delta: rounds - last_rounds,
+        });
+        last_rounds = rounds;
+    }
+    let rates = ids.iter().map(|&id| handle.allocation(id)).collect();
+    handle.shutdown();
+    (recs, rates)
+}
+
+fn assert_rates_close(topo: &str, sim: &[Option<CoflowRates>], ctl: &[Option<CoflowRates>]) {
+    assert_eq!(sim.len(), ctl.len());
+    for (ci, (s, c)) in sim.iter().zip(ctl).enumerate() {
+        let (Some(s), Some(c)) = (s, c) else {
+            assert_eq!(s.is_some(), c.is_some(), "{topo}: coflow {ci} allocation presence");
+            continue;
+        };
+        assert_eq!(s.len(), c.len(), "{topo}: coflow {ci} group count");
+        for (gi, (gs, gc)) in s.iter().zip(c).enumerate() {
+            assert_eq!(gs.len(), gc.len(), "{topo}: coflow {ci} group {gi} path count");
+            for (pi, (rs, rc)) in gs.iter().zip(gc).enumerate() {
+                assert!(
+                    (rs - rc).abs() <= 1e-2 * (1.0 + rs.abs()),
+                    "{topo}: coflow {ci} group {gi} path {pi}: sim {rs} vs controller {rc}"
+                );
+            }
+        }
+    }
+}
+
+fn golden_path(name: &str) -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden")
+        .join(format!("{name}.json"))
+}
+
+fn run_scenario(name: &str, wan: Wan) {
+    let events = scenario_events(&wan);
+    assert!(!events.is_empty(), "{name}: scenario generated no events");
+    assert!(
+        events.iter().any(|e| matches!(e.ev, LinkEvent::Fail(..))),
+        "{name}: scenario must include a structural event"
+    );
+
+    let (sim_recs, sim_rates) = sim_replay(wan.clone(), &events);
+    let (ctl_recs, ctl_rates) = controller_replay(wan, &events);
+
+    // Parity: the two planes' round/event logs must be byte-identical.
+    let sim_log = records_json(&sim_recs).to_string();
+    let ctl_log = records_json(&ctl_recs).to_string();
+    assert_eq!(sim_log, ctl_log, "{name}: sim and controller event logs diverge");
+    assert_rates_close(name, &sim_rates, &ctl_rates);
+
+    // Golden: pin the simulator log (events + reactions + final rates).
+    let doc = Json::from_pairs([
+        ("topology", Json::from(name)),
+        ("seed", SEED.into()),
+        ("k", K.into()),
+        ("horizon_s", HORIZON_S.into()),
+        ("events", records_json(&sim_recs)),
+        ("final_rates", rates_json(&sim_rates)),
+    ]);
+    let current = format!("{doc}\n");
+    let path = golden_path(name);
+    let bless = std::env::var("TERRA_BLESS").map(|v| v == "1").unwrap_or(false);
+    match std::fs::read_to_string(&path) {
+        Ok(golden) if !bless => {
+            assert_eq!(
+                golden,
+                current,
+                "{name}: scenario log changed vs {}; rerun with TERRA_BLESS=1 if intentional",
+                path.display()
+            );
+        }
+        _ => {
+            std::fs::create_dir_all(path.parent().unwrap()).expect("create tests/golden");
+            std::fs::write(&path, &current).expect("write golden");
+            eprintln!("blessed {}", path.display());
+        }
+    }
+}
+
+#[test]
+fn golden_scenario_swan() {
+    run_scenario("swan", topologies::swan());
+}
+
+#[test]
+fn golden_scenario_gscale() {
+    run_scenario("gscale", topologies::gscale());
+}
+
+#[test]
+fn golden_scenario_att() {
+    run_scenario("att", topologies::att());
+}
