@@ -1,0 +1,185 @@
+//! Bench: component-decomposed delta rounds (§6.6 scalability, extended).
+//!
+//! Sweeps the active-coflow count 100 → 10 000 on all three evaluation
+//! topologies with a pod-localized workload — single-group coflows between
+//! adjacent datacenter pairs at k = 1, so every coflow pins to its direct
+//! edge and the active set factors into one component per edge-sharing
+//! class — and times steady-state scheduling rounds (one coflow arrival
+//! between rounds, the canonical trigger) in three modes:
+//!
+//! - **cold**: monolithic per-round re-solve of everything (pre-incremental
+//!   behavior),
+//! - **warm**: Γ-cache + GK warm starts, but still one monolithic solve of
+//!   the full active set per round (PR 1 behavior),
+//! - **component**: the default — only the arrival's component re-solves,
+//!   every other component's allocation is carried forward.
+//!
+//! Emits `BENCH_component_scaling.json` (p50/p99 round latency, LP
+//! solves/round, component solves+reuses/round, and the p99 speedup of
+//! component-cached over cold monolithic per scale).
+
+use std::time::Instant;
+use terra::coflow::{Coflow, Flow};
+use terra::engine::{EngineConfig, RoundEngine};
+use terra::net::{topologies, Wan};
+use terra::scheduler::terra::{TerraConfig, TerraPolicy};
+use terra::scheduler::{CoflowState, RoundTrigger};
+use terra::util::bench::{quick_mode, Table};
+use terra::util::json::Json;
+use terra::util::rng::Pcg32;
+use terra::util::stats;
+
+/// Pod-local coflow between one adjacent (directly linked) pair.
+fn mk_state(id: u64, pairs: &[(usize, usize)], rng: &mut Pcg32) -> CoflowState {
+    let (s, d) = pairs[rng.below(pairs.len())];
+    let mut st = CoflowState::from_coflow(&Coflow::new(
+        id,
+        vec![Flow { id: 0, src_dc: s, dst_dc: d, volume: rng.uniform(50.0, 4000.0) }],
+    ));
+    st.admitted = true;
+    st
+}
+
+#[derive(Clone, Copy)]
+enum Mode {
+    Cold,
+    Warm,
+    Component,
+}
+
+impl Mode {
+    fn config(self) -> EngineConfig {
+        match self {
+            Mode::Cold => {
+                EngineConfig { check_feasibility: false, cold: true, ..Default::default() }
+            }
+            Mode::Warm => {
+                EngineConfig { check_feasibility: false, decompose: false, ..Default::default() }
+            }
+            Mode::Component => EngineConfig { check_feasibility: false, ..Default::default() },
+        }
+    }
+}
+
+struct ModeResult {
+    p50_ms: f64,
+    p99_ms: f64,
+    lp_per_round: f64,
+    gamma_hits_per_round: f64,
+    comp_solves_per_round: f64,
+    comp_reuses_per_round: f64,
+}
+
+/// Time `rounds` steady-state rounds at `n` active coflows, each preceded
+/// by one arrival. The populate round is untimed in every mode.
+fn bench_mode(wan: &Wan, n: usize, mode: Mode, rounds: usize) -> ModeResult {
+    let policy = TerraPolicy::new(TerraConfig { k: 1, ..Default::default() });
+    let mut engine = RoundEngine::new(wan.clone(), Box::new(policy), mode.config());
+    let pairs: Vec<(usize, usize)> = wan.links().iter().map(|l| (l.src, l.dst)).collect();
+    let mut rng = Pcg32::new(0xC0135 + n as u64);
+    for i in 0..n {
+        let st = mk_state(i as u64 + 1, &pairs, &mut rng);
+        engine.insert(st);
+    }
+    engine.round(0.0, RoundTrigger::Initial);
+    engine.take_stats(); // drop populate-round counters
+    let mut lat = Vec::with_capacity(rounds);
+    let mut now = 0.0;
+    for r in 0..rounds {
+        engine.drain(0.05, 0.0);
+        now += 0.05;
+        let st = mk_state((n + r) as u64 + 1, &pairs, &mut rng);
+        engine.insert(st);
+        let t0 = Instant::now();
+        engine.round(now, RoundTrigger::CoflowArrival);
+        lat.push(t0.elapsed().as_secs_f64());
+    }
+    let st = engine.take_stats();
+    let r = rounds as f64;
+    ModeResult {
+        p50_ms: 1e3 * stats::percentile(&lat, 50.0),
+        p99_ms: 1e3 * stats::percentile(&lat, 99.0),
+        lp_per_round: st.lp_solves as f64 / r,
+        gamma_hits_per_round: st.gamma_cache_hits as f64 / r,
+        comp_solves_per_round: st.component_solves as f64 / r,
+        comp_reuses_per_round: st.component_reuses as f64 / r,
+    }
+}
+
+fn mode_json(m: &ModeResult) -> Json {
+    Json::from_pairs([
+        ("p50_ms", Json::from(m.p50_ms)),
+        ("p99_ms", m.p99_ms.into()),
+        ("lp_solves_per_round", m.lp_per_round.into()),
+        ("gamma_cache_hits_per_round", m.gamma_hits_per_round.into()),
+        ("component_solves_per_round", m.comp_solves_per_round.into()),
+        ("component_reuses_per_round", m.comp_reuses_per_round.into()),
+    ])
+}
+
+fn main() {
+    let quick = quick_mode();
+    let scales: Vec<usize> =
+        if quick { vec![100, 500, 2000] } else { vec![100, 500, 2000, 10_000] };
+    let rounds = if quick { 4 } else { 8 };
+    let topos: Vec<(&str, Wan)> = vec![
+        ("swan", topologies::swan()),
+        ("gscale", topologies::gscale()),
+        ("att", topologies::att()),
+    ];
+    let mut topo_docs = Vec::new();
+    for (tname, wan) in &topos {
+        let mut tab = Table::new(&[
+            "active",
+            "cold p99",
+            "warm p99",
+            "comp p99",
+            "p99 speedup vs cold",
+            "comp LPs/rd",
+            "reuses/rd",
+        ]);
+        let mut scale_docs = Vec::new();
+        for &n in &scales {
+            let results: Vec<ModeResult> = [Mode::Cold, Mode::Warm, Mode::Component]
+                .into_iter()
+                .map(|m| bench_mode(wan, n, m, rounds))
+                .collect();
+            let cold_p99 = results[0].p99_ms;
+            let comp = &results[2];
+            let speedup = if comp.p99_ms > 0.0 { cold_p99 / comp.p99_ms } else { f64::INFINITY };
+            tab.row(&[
+                n.to_string(),
+                format!("{cold_p99:.2}ms"),
+                format!("{:.2}ms", results[1].p99_ms),
+                format!("{:.2}ms", comp.p99_ms),
+                format!("{speedup:.1}x"),
+                format!("{:.1}", comp.lp_per_round),
+                format!("{:.1}", comp.comp_reuses_per_round),
+            ]);
+            let doc = Json::from_pairs([
+                ("active_coflows", Json::from(n)),
+                ("p99_speedup_component_vs_cold", speedup.into()),
+                ("cold", mode_json(&results[0])),
+                ("warm", mode_json(&results[1])),
+                ("component", mode_json(&results[2])),
+            ]);
+            scale_docs.push(doc);
+        }
+        tab.print(&format!("{tname}: steady-state round latency by mode"));
+        topo_docs.push(Json::from_pairs([
+            ("topology", Json::from(*tname)),
+            ("scales", Json::Arr(scale_docs)),
+        ]));
+    }
+    let doc = Json::from_pairs([
+        ("workload", Json::from("pod-local single-group coflows on adjacent pairs, k=1")),
+        ("rounds_timed", rounds.into()),
+        ("arrivals_per_round", 1u64.into()),
+        ("topologies", Json::Arr(topo_docs)),
+    ]);
+    let path = "BENCH_component_scaling.json";
+    match std::fs::write(path, format!("{doc}\n")) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
+}

@@ -67,7 +67,10 @@ struct ModeResult {
 
 /// Time steady-state rounds at `n` active coflows. Both modes get one
 /// untimed populate round first, so "cached" measures warm steady state
-/// and "cold" measures the pre-incremental per-round cost.
+/// (which, with nothing changing between rounds, now reuses every
+/// component's allocation outright — see `benches/component_scaling.rs`
+/// for the arrival-churn variant that isolates the decomposition win) and
+/// "cold" measures the pre-incremental per-round cost.
 fn bench_mode(n: usize, cold: bool, rounds: usize) -> ModeResult {
     let wan = topologies::swan();
     let states = mk_states(&wan, n, 0xF13 + n as u64);

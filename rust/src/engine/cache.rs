@@ -26,7 +26,8 @@
 //!    is harmless — allocations themselves are always re-solved.)
 
 use crate::coflow::CoflowId;
-use std::collections::HashMap;
+use crate::net::topology::EdgeId;
+use std::collections::{HashMap, HashSet};
 
 #[derive(Clone, Debug)]
 struct Entry {
@@ -106,6 +107,142 @@ impl GammaCache {
     }
 }
 
+/// Validity cache for per-component allocations — the component-level
+/// extension of the Γ-cache's epoch/dirty machinery.
+///
+/// The [`crate::engine::RoundEngine`] partitions every round into
+/// edge-connected components ([`crate::lp::decompose`]) and re-solves only
+/// the components something actually touched; every other component's
+/// allocation is carried forward from the live [`Allocation`] unchanged
+/// (rates are constant between rounds anyway, and sub-ρ clamping keeps the
+/// live allocation feasible). This cache stores only validity metadata — no
+/// rates — keyed by the component's sorted member ids. A component's
+/// previous solve is reusable iff:
+///
+/// 1. its member set is unchanged (arrivals/departures change the key, so
+///    they miss structurally),
+/// 2. no member is **dirty** — no group completion or `updateCoflow` since
+///    the solve (and a freshly inserted coflow is always dirty, which also
+///    covers finish-then-revive reusing an id),
+/// 3. no **qualifying WAN capacity change** (fluctuation ≥ ρ or promoted
+///    accumulated drift) touched one of the component's edges since the
+///    solve — tracked as a per-edge monotone tick; structural events touch
+///    every edge and drop all entries (the path sets changed under the
+///    decomposition).
+///
+/// Entries are mark-and-swept: anything not reused or re-solved in a round
+/// (i.e. whose component no longer exists) is dropped at round end.
+#[derive(Clone, Debug, Default)]
+pub struct ComponentCache {
+    /// Monotone change counter; bumped per qualifying capacity change.
+    tick: u64,
+    /// Tick of the last qualifying change per edge.
+    edge_ticks: Vec<u64>,
+    /// Coflows whose shape changed discontinuously since their component
+    /// was last solved.
+    dirty: HashSet<CoflowId>,
+    /// Solved components keyed by sorted member ids.
+    entries: HashMap<Vec<CoflowId>, CompEntry>,
+    /// Current round generation (mark-and-sweep eviction).
+    gen: u64,
+}
+
+#[derive(Clone, Debug)]
+struct CompEntry {
+    solve_tick: u64,
+    gen: u64,
+}
+
+impl ComponentCache {
+    pub fn new(num_edges: usize) -> ComponentCache {
+        ComponentCache { edge_ticks: vec![0; num_edges], ..Default::default() }
+    }
+
+    /// A qualifying capacity change on one edge: components containing it
+    /// must re-solve.
+    pub fn touch_edge(&mut self, e: EdgeId) {
+        self.tick += 1;
+        if let Some(t) = self.edge_ticks.get_mut(e) {
+            *t = self.tick;
+        }
+    }
+
+    /// Structural change: paths (and thus the decomposition itself) are
+    /// stale — everything re-solves.
+    pub fn touch_all(&mut self) {
+        self.tick += 1;
+        for t in &mut self.edge_ticks {
+            *t = self.tick;
+        }
+        self.entries.clear();
+    }
+
+    /// Record a discontinuous per-coflow change (arrival, group completion,
+    /// update): the coflow's component must re-solve.
+    pub fn mark_dirty(&mut self, id: CoflowId) {
+        self.dirty.insert(id);
+    }
+
+    /// Drop a departed coflow's dirty flag (its old components' entries are
+    /// swept by key mismatch at the next round).
+    pub fn forget(&mut self, id: CoflowId) {
+        self.dirty.remove(&id);
+    }
+
+    /// Start a round's mark-and-sweep generation.
+    pub fn begin_round(&mut self) {
+        self.gen += 1;
+    }
+
+    /// Is the previous allocation of the component with these **sorted**
+    /// members (touching `edges`) still valid?
+    pub fn is_fresh(&self, members: &[CoflowId], edges: &[EdgeId]) -> bool {
+        let Some(entry) = self.entries.get(members) else { return false };
+        members.iter().all(|id| !self.dirty.contains(id))
+            && edges
+                .iter()
+                .all(|&e| self.edge_ticks.get(e).copied().unwrap_or(u64::MAX) <= entry.solve_tick)
+    }
+
+    /// Keep a fresh (reused) entry alive through this round's sweep.
+    pub fn refresh(&mut self, members: &[CoflowId]) {
+        let gen = self.gen;
+        if let Some(e) = self.entries.get_mut(members) {
+            e.gen = gen;
+        }
+    }
+
+    /// Record that this component was (re)solved in the current round.
+    pub fn record_solved(&mut self, members: Vec<CoflowId>) {
+        for id in &members {
+            self.dirty.remove(id);
+        }
+        let (solve_tick, gen) = (self.tick, self.gen);
+        self.entries.insert(members, CompEntry { solve_tick, gen });
+    }
+
+    /// Sweep entries for components that no longer exist.
+    pub fn end_round(&mut self) {
+        let gen = self.gen;
+        self.entries.retain(|_, e| e.gen == gen);
+    }
+
+    /// Number of live component entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Drop everything (fresh start; keeps the edge-tick clock monotone).
+    pub fn clear(&mut self) {
+        self.entries.clear();
+        self.dirty.clear();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -150,5 +287,65 @@ mod tests {
         assert_eq!(c.lookup(1, 5.0), Some(f64::INFINITY));
         c.bump_epoch();
         assert_eq!(c.lookup(1, 5.0), None);
+    }
+
+    /// One simulated round over the component cache: solve, then verify the
+    /// four invalidation triggers (member change, dirty member, touched
+    /// edge, structural touch-all) each force a re-solve.
+    #[test]
+    fn component_cache_invalidation_triggers() {
+        let mut c = ComponentCache::new(4);
+        c.begin_round();
+        assert!(!c.is_fresh(&[1, 2], &[0, 1]), "nothing solved yet");
+        c.record_solved(vec![1, 2]);
+        c.record_solved(vec![3]);
+        c.end_round();
+        assert_eq!(c.len(), 2);
+        assert!(c.is_fresh(&[1, 2], &[0, 1]));
+        assert!(c.is_fresh(&[3], &[2]));
+
+        // Member-set change misses structurally.
+        assert!(!c.is_fresh(&[1, 2, 4], &[0, 1]));
+        assert!(!c.is_fresh(&[1], &[0]));
+
+        // Dirty member (group completion / update / re-insert).
+        c.mark_dirty(2);
+        assert!(!c.is_fresh(&[1, 2], &[0, 1]));
+        assert!(c.is_fresh(&[3], &[2]), "other components unaffected");
+        c.begin_round();
+        c.record_solved(vec![1, 2]); // re-solve clears the dirty flag
+        c.refresh(&[3]);
+        c.end_round();
+        assert!(c.is_fresh(&[1, 2], &[0, 1]));
+
+        // Qualifying capacity change on one edge dirties only components
+        // containing it.
+        c.touch_edge(1);
+        assert!(!c.is_fresh(&[1, 2], &[0, 1]));
+        assert!(c.is_fresh(&[3], &[2]));
+
+        // Structural: everything goes.
+        c.touch_all();
+        assert!(!c.is_fresh(&[3], &[2]));
+        assert!(c.is_empty());
+    }
+
+    /// Entries not reused or re-solved in a round (departed components) are
+    /// swept; out-of-range edge ids never validate.
+    #[test]
+    fn component_cache_sweeps_and_bounds() {
+        let mut c = ComponentCache::new(2);
+        c.begin_round();
+        c.record_solved(vec![1]);
+        c.record_solved(vec![2]);
+        c.end_round();
+        assert_eq!(c.len(), 2);
+        c.begin_round();
+        c.refresh(&[1]); // coflow 2 departed: its entry is not marked
+        c.end_round();
+        assert_eq!(c.len(), 1);
+        assert!(c.is_fresh(&[1], &[0]));
+        assert!(!c.is_fresh(&[1], &[7]), "unknown edge id must not validate");
+        c.forget(2); // departed coflow's dirty flag cannot accumulate
     }
 }

@@ -17,7 +17,15 @@
 //! - **incremental re-optimization**: a [`GammaCache`] of standalone
 //!   min-CCT solves keyed by `(coflow, WAN capacity epoch)` with dirty-set
 //!   invalidation, plus warm-starting of the GK solver from the previous
-//!   round's allocation.
+//!   round's allocation,
+//! - **component-decomposed rounds**: the active set is partitioned into
+//!   edge-connected components ([`crate::lp::decompose`]) — coflows whose
+//!   k-path sets share no WAN edge are independent commodities — and only
+//!   the components dirtied by an arrival, departure, group completion, or
+//!   a qualifying WAN event on one of *their* edges are re-solved; every
+//!   untouched component's allocation is carried forward from the live
+//!   allocation ([`ComponentCache`]), turning round latency from O(all
+//!   coflows) into O(changed components).
 //!
 //! Drivers differ only in how they learn about time and events: the
 //! simulator advances virtual time and feeds completions from its event
@@ -28,10 +36,11 @@
 
 pub mod cache;
 
-pub use cache::GammaCache;
+pub use cache::{ComponentCache, GammaCache};
 
 use crate::coflow::CoflowId;
 use crate::lp;
+use crate::lp::decompose;
 use crate::net::paths::PathSet;
 use crate::net::{LinkEvent, Wan};
 use crate::scheduler::{
@@ -49,6 +58,12 @@ pub struct EngineConfig {
     /// Disable the Γ-cache and GK warm starts (cold per-round solves, the
     /// pre-incremental behavior; used by the round-latency benchmarks).
     pub cold: bool,
+    /// Partition rounds into edge-connected components and re-solve only
+    /// dirty ones (the default). `false` keeps the incremental caches but
+    /// solves the full active set monolithically every round — used by the
+    /// scaling benchmarks and the decomposition-equivalence property test.
+    /// Ignored when `cold` is set.
+    pub decompose: bool,
 }
 
 impl Default for EngineConfig {
@@ -57,6 +72,7 @@ impl Default for EngineConfig {
             rho: crate::scheduler::DEFAULT_RHO,
             check_feasibility: cfg!(debug_assertions),
             cold: false,
+            decompose: true,
         }
     }
 }
@@ -106,6 +122,11 @@ pub struct RoundEngine {
     /// exactly like one qualifying event — epoch bump *and* a
     /// re-optimization round.
     epoch_caps: Vec<f64>,
+    /// Validity metadata for per-component allocation reuse.
+    comp_cache: ComponentCache,
+    /// Engine-level instrumentation (component solve/reuse counters) merged
+    /// into the policy's stats by [`RoundEngine::take_stats`].
+    engine_stats: RoundStats,
     rounds: usize,
 }
 
@@ -128,6 +149,7 @@ impl RoundEngine {
     ) -> RoundEngine {
         let paths = PathSet::compute(&wan, k);
         let epoch_caps = wan.capacities();
+        let comp_cache = ComponentCache::new(wan.num_edges());
         RoundEngine {
             wan,
             paths,
@@ -139,6 +161,8 @@ impl RoundEngine {
             cache: GammaCache::new(),
             warm_valid: false,
             epoch_caps,
+            comp_cache,
+            engine_stats: RoundStats::default(),
             rounds: 0,
         }
     }
@@ -198,16 +222,20 @@ impl RoundEngine {
         self.active.iter_mut().find(|c| c.id == id)
     }
 
-    /// Add a coflow to the active table (does not run a round).
+    /// Add a coflow to the active table (does not run a round). The coflow
+    /// starts dirty: the component it lands in must re-solve.
     pub fn insert(&mut self, st: CoflowState) {
         self.cache.invalidate(st.id);
+        self.comp_cache.mark_dirty(st.id);
         self.active.push(st);
     }
 
-    /// Drop a coflow's Γ-cache entry after a discontinuous change to its
-    /// remaining volumes (group completion, update).
+    /// Drop a coflow's Γ-cache entry (and dirty its component) after a
+    /// discontinuous change to its remaining volumes (group completion,
+    /// update).
     pub fn mark_dirty(&mut self, id: CoflowId) {
         self.cache.invalidate(id);
+        self.comp_cache.mark_dirty(id);
     }
 
     /// Deadline admission control against the current active set (§3.2).
@@ -242,35 +270,60 @@ impl RoundEngine {
         let structural = matches!(ev, LinkEvent::Fail(..) | LinkEvent::Recover(..));
         if structural {
             // Recompute viable paths (§4.4); previous path indices are
-            // meaningless now, so drop warm-start state too.
+            // meaningless now, so drop warm-start state too. The
+            // decomposition itself is path-derived, so every component
+            // allocation is stale.
             self.paths = PathSet::compute(&self.wan, self.k);
             self.bump_epoch();
+            self.comp_cache.touch_all();
             self.warm_valid = false;
             WanReaction::Structural
         } else if frac >= self.cfg.rho || self.epoch_drift(ev) >= self.cfg.rho {
             // One big step, or many small ones that add up to one: either
-            // way the capacities the last optimization (and every cached Γ)
-            // was computed against are off by ≥ ρ somewhere.
-            self.bump_epoch();
+            // way the capacities the touched edge's components were solved
+            // against are off by ≥ ρ. Only those components re-solve, so
+            // only *this* edge's drift snapshot re-anchors — every other
+            // edge keeps its baseline (its components were not re-solved;
+            // re-anchoring them here would let an untouched edge creep
+            // arbitrarily far in sub-ρ steps without ever reaching the
+            // drift trigger).
+            self.cache.bump_epoch();
+            if self.cfg.cold || !self.cfg.decompose {
+                // Monolithic modes re-solve the *entire* active set at the
+                // follow-up round, so every edge's baseline re-anchors
+                // (the pre-decomposition behavior; keeping others stale
+                // would promote spurious drift rounds later).
+                self.epoch_caps = self.wan.capacities();
+            } else if let LinkEvent::SetBandwidth(u, v, _) = *ev {
+                if let Some(e) = self.wan.edge_between(u, v) {
+                    self.epoch_caps[e] = self.wan.link(e).avail();
+                    self.comp_cache.touch_edge(e);
+                }
+            }
             WanReaction::Reoptimize
         } else {
+            // Sub-ρ: clamp the live allocation back to feasibility — per
+            // coflow, over the edges it actually uses, so carried-forward
+            // components that never touch the dipped edge are unaffected.
             self.clamp_alloc();
             WanReaction::Clamped
         }
     }
 
-    /// Advance the Γ-cache epoch and re-anchor the drift snapshot on the
-    /// current available capacities.
+    /// Advance the Γ-cache epoch and re-anchor **every** edge's drift
+    /// snapshot — structural events only, where paths are recomputed and
+    /// all components re-solve.
     fn bump_epoch(&mut self) {
         self.cache.bump_epoch();
         self.epoch_caps = self.wan.capacities();
     }
 
     /// Accumulated drift of the edge a fluctuation touched: fractional
-    /// deviation of its current available capacity from the last epoch's
-    /// snapshot. O(1): every *other* edge was verified < ρ when its own
-    /// last event was handled (and epoch bumps re-anchor the snapshot), so
-    /// only the touched edge can newly reach ρ.
+    /// deviation of its current available capacity from the edge's last
+    /// re-anchor (its own last qualifying event, or the last structural
+    /// event). O(1): every *other* edge was verified < ρ against its own
+    /// baseline when its own last event was handled and is unchanged
+    /// since, so only the touched edge can newly reach ρ.
     fn epoch_drift(&self, ev: &LinkEvent) -> f64 {
         let LinkEvent::SetBandwidth(u, v, _) = *ev else { return 0.0 };
         let Some(e) = self.wan.edge_between(u, v) else { return 0.0 };
@@ -279,17 +332,23 @@ impl RoundEngine {
         (c - c0).abs() / c0.max(1e-9)
     }
 
-    /// Run one scheduling round: hand the policy the active set, the
-    /// Γ-cache, and the previous allocation as a warm start.
+    /// Run one scheduling round: partition the active set into
+    /// edge-connected components, re-solve the dirty ones through the
+    /// policy (with the Γ-cache and the previous allocation as a warm
+    /// start), and carry every untouched component's allocation forward.
     pub fn round(&mut self, now: f64, trigger: RoundTrigger) -> &Allocation {
-        let RoundEngine { wan, paths, policy, cfg, active, alloc, cache, warm_valid, .. } = self;
-        let net = NetView { wan, paths };
-        let new_alloc = if cfg.cold {
+        let new_alloc = if self.cfg.cold {
+            let RoundEngine { wan, paths, policy, active, .. } = self;
+            let net = NetView { wan, paths };
             policy.allocate(now, trigger, active, &net)
-        } else {
+        } else if !self.cfg.decompose {
+            let RoundEngine { wan, paths, policy, active, alloc, cache, warm_valid, .. } = self;
+            let net = NetView { wan, paths };
             let warm = if *warm_valid && !alloc.rates.is_empty() { Some(&*alloc) } else { None };
             let ctx = RoundCtx { trigger, epoch: cache.epoch(), cache, warm };
             policy.allocate_with(now, ctx, active, &net)
+        } else {
+            self.round_decomposed(now, trigger)
         };
         self.alloc = new_alloc;
         self.warm_valid = true;
@@ -308,25 +367,154 @@ impl RoundEngine {
         &self.alloc
     }
 
-    /// Scale down rates on edges whose capacity dropped below usage
-    /// (sub-threshold fluctuations, no re-optimization).
-    pub fn clamp_alloc(&mut self) {
-        let net = NetView { wan: &self.wan, paths: &self.paths };
-        let usage = self.alloc.edge_usage(&self.active, &net, self.wan.num_edges());
-        let caps = self.wan.capacities();
-        let mut worst = 1.0f64;
-        for (&u, &c) in usage.iter().zip(&caps) {
-            if u > c && u > 1e-12 {
-                worst = worst.min(c / u);
-            }
-        }
-        if worst < 1.0 {
-            for rates in self.alloc.rates.values_mut() {
-                for g in rates {
-                    for r in g {
-                        *r *= worst;
+    /// The decomposed round body: solve only what changed. Solving a
+    /// component hands the policy exactly its member subset (in active-table
+    /// order, so the policy-visible ordering matches the monolithic solve's
+    /// restriction); since components share no edges, the union of the
+    /// per-component allocations equals the monolithic allocation (the
+    /// `prop_component_decomposition_*` property tests pin this).
+    fn round_decomposed(&mut self, now: f64, trigger: RoundTrigger) -> Allocation {
+        // Per-coflow edge sets over unfinished groups' k-truncated paths.
+        // Rebuilt every round: this O(active · k · path-len) scan is
+        // microseconds against the millisecond-scale LP solves it avoids —
+        // the O(changed components) claim is about solver work. If the
+        // scan itself ever shows up at 10⁵+ coflows, maintain the
+        // partition incrementally (union-find survives arrivals cheaply;
+        // departures/structural events need a rebuild or a dynamic-
+        // connectivity structure).
+        let item_edges: Vec<Vec<usize>> = self
+            .active
+            .iter()
+            .map(|cf| {
+                let mut es: Vec<usize> = Vec::new();
+                for (g, &rem) in cf.groups.iter().zip(&cf.remaining) {
+                    if rem <= 1e-9 {
+                        continue;
+                    }
+                    for p in self.paths.get(g.src, g.dst).iter().take(self.k) {
+                        es.extend_from_slice(&p.edges);
                     }
                 }
+                es.sort_unstable();
+                es.dedup();
+                es
+            })
+            .collect();
+        let comps = decompose::decompose(self.wan.num_edges(), &item_edges);
+
+        let mut new_alloc = Allocation::default();
+        self.comp_cache.begin_round();
+        let RoundEngine {
+            wan,
+            paths,
+            policy,
+            active,
+            alloc,
+            cache,
+            comp_cache,
+            warm_valid,
+            engine_stats,
+            ..
+        } = self;
+        let net = NetView { wan, paths };
+        for (ci, members) in comps.members.iter().enumerate() {
+            let mut ids: Vec<CoflowId> = members.iter().map(|&i| active[i].id).collect();
+            ids.sort_unstable();
+            if comp_cache.is_fresh(&ids, &comps.edges[ci]) {
+                // Untouched component: carry the live allocation forward
+                // (clamping keeps it feasible between rounds; rates are
+                // constant between rounds anyway, and equal-progress drain
+                // is proportional, so a re-solve would return the same
+                // Gbps rates).
+                comp_cache.refresh(&ids);
+                for &i in members {
+                    if let Some(r) = alloc.rates.get(&active[i].id) {
+                        new_alloc.rates.insert(active[i].id, r.clone());
+                    }
+                }
+                engine_stats.component_reuses += 1;
+            } else {
+                let warm =
+                    if *warm_valid && !alloc.rates.is_empty() { Some(&*alloc) } else { None };
+                let ctx = RoundCtx { trigger, epoch: cache.epoch(), cache: &mut *cache, warm };
+                // The frequent everything-in-one-component case needs no
+                // member clone — the component IS the active table.
+                let part = if members.len() == active.len() {
+                    policy.allocate_with(now, ctx, active, &net)
+                } else {
+                    let subset: Vec<CoflowState> =
+                        members.iter().map(|&i| active[i].clone()).collect();
+                    policy.allocate_with(now, ctx, &subset, &net)
+                };
+                new_alloc.rates.extend(part.rates);
+                comp_cache.record_solved(ids);
+                engine_stats.component_solves += 1;
+            }
+        }
+        comp_cache.end_round();
+        new_alloc
+    }
+
+    /// Scale down rates on edges whose capacity dropped below usage
+    /// (sub-threshold fluctuations, no re-optimization).
+    ///
+    /// The factor is per **coflow** (min over the over-subscribed edges its
+    /// nonzero rates traverse), not one global minimum: scaling a coflow
+    /// uniformly preserves its equal-progress property, and feasibility
+    /// holds because every coflow contributing to an over-capacity edge
+    /// scales by at most that edge's cap/usage ratio. Crucially, coflows
+    /// that never touch a shrunk edge keep their rates — decomposed rounds
+    /// carry clean components' allocations forward verbatim, so a global
+    /// clamp would otherwise degrade every untouched component a little
+    /// more on each sub-ρ dip, with nothing ever re-solving them.
+    ///
+    /// Every coflow the clamp *did* scale is marked component-dirty: its
+    /// rates no longer match any solve, so the next round re-optimizes its
+    /// component against current capacities (as the monolithic path always
+    /// did) instead of carrying the clamped rates forward forever — a dip
+    /// followed by a sub-ρ recovery must not ratchet a component down to
+    /// its historical capacity minimum.
+    pub fn clamp_alloc(&mut self) {
+        let RoundEngine { wan, paths, active, alloc, comp_cache, .. } = self;
+        let net = NetView { wan, paths };
+        let usage = alloc.edge_usage(active, &net, wan.num_edges());
+        let caps = wan.capacities();
+        let mut factors: Vec<f64> = vec![1.0; caps.len()];
+        let mut any = false;
+        for (e, (&u, &c)) in usage.iter().zip(&caps).enumerate() {
+            if u > c && u > 1e-12 {
+                factors[e] = c / u;
+                any = true;
+            }
+        }
+        if !any {
+            return;
+        }
+        for cf in active.iter() {
+            let Some(rates) = alloc.rates.get_mut(&cf.id) else { continue };
+            let mut f = 1.0f64;
+            for (gi, g) in cf.groups.iter().enumerate() {
+                let pair_paths = paths.get(g.src, g.dst);
+                for (pi, &r) in
+                    rates.get(gi).map(|v| v.as_slice()).unwrap_or(&[]).iter().enumerate()
+                {
+                    if r <= 0.0 {
+                        continue;
+                    }
+                    if let Some(p) = pair_paths.get(pi) {
+                        for &e in &p.edges {
+                            f = f.min(factors[e]);
+                        }
+                    }
+                }
+            }
+            if f < 1.0 {
+                for group in rates.iter_mut() {
+                    for r in group {
+                        *r *= f;
+                    }
+                }
+                comp_cache.mark_dirty(cf.id);
             }
         }
     }
@@ -366,6 +554,7 @@ impl RoundEngine {
         }
         for id in emptied {
             self.cache.invalidate(id);
+            self.comp_cache.mark_dirty(id);
         }
         moved
     }
@@ -404,6 +593,7 @@ impl RoundEngine {
         let done = cf.done();
         if hit {
             self.cache.invalidate(id);
+            self.comp_cache.mark_dirty(id);
         }
         done
     }
@@ -416,6 +606,10 @@ impl RoundEngine {
         for id in &finished {
             self.alloc.rates.remove(id);
             self.cache.invalidate(*id);
+            // A departure shrinks its component's member set, which misses
+            // the component cache structurally; only the dirty flag needs
+            // tidying so it cannot accumulate for dead ids.
+            self.comp_cache.forget(*id);
         }
         self.active.retain(|c| !c.done());
         finished
@@ -431,9 +625,14 @@ impl RoundEngine {
         self.alloc.rates.get(&id).cloned()
     }
 
-    /// Drain the policy's instrumentation counters.
+    /// Drain the policy's instrumentation counters, merged with the
+    /// engine's component solve/reuse counters.
     pub fn take_stats(&mut self) -> RoundStats {
-        self.policy.take_stats()
+        let mut stats = self.policy.take_stats();
+        stats.component_solves += self.engine_stats.component_solves;
+        stats.component_reuses += self.engine_stats.component_reuses;
+        self.engine_stats = RoundStats::default();
+        stats
     }
 }
 
@@ -579,19 +778,118 @@ mod tests {
         )));
         e.round(0.0, RoundTrigger::CoflowArrival);
         e.take_stats();
-        // No drain: the cached Γ is still valid.
+        // No drain event in between: the whole component is untouched — the
+        // engine carries the allocation forward without calling the policy.
         e.round(0.1, RoundTrigger::CoflowArrival);
-        assert_eq!(e.take_stats().gamma_cache_hits, 1);
+        let reused = e.take_stats();
+        assert_eq!(reused.lp_solves, 0, "clean component must not re-solve");
+        assert_eq!(reused.component_reuses, 1);
+        assert_eq!(reused.component_solves, 0);
         // Drain to the first group completion: the coflow's shape changed
-        // discontinuously, so the next round must re-solve Γ.
+        // discontinuously — its component re-solves and the cached Γ is
+        // gone, so the next round pays a fresh Γ solve.
         let t = e.next_completion(0.0).expect("something is draining");
         e.drain(t, 0.0);
         e.round(t, RoundTrigger::FlowGroupFinish);
+        let resolved = e.take_stats();
+        assert_eq!(resolved.component_solves, 1);
+        assert!(resolved.lp_solves > 0, "dirty component must re-solve");
         assert_eq!(
-            e.take_stats().gamma_cache_hits,
+            resolved.gamma_cache_hits,
             0,
             "group completion via drain must invalidate the Γ entry"
         );
+    }
+
+    /// Two edge-disjoint triangles: coflows in different triangles are
+    /// independent commodities — an arrival or a qualifying WAN event in
+    /// one triangle must re-solve only that triangle's component, carrying
+    /// the other's rates forward bit-identically.
+    fn two_triangles() -> Wan {
+        let mut w = Wan::new();
+        for i in 0..6 {
+            w.add_node(&format!("N{i}"), 0.0, i as f64);
+        }
+        w.add_link(0, 1, 10.0, Some(1.0));
+        w.add_link(1, 2, 10.0, Some(1.0));
+        w.add_link(0, 2, 10.0, Some(1.0));
+        w.add_link(3, 4, 10.0, Some(1.0));
+        w.add_link(4, 5, 10.0, Some(1.0));
+        w.add_link(3, 5, 10.0, Some(1.0));
+        w
+    }
+
+    #[test]
+    fn disjoint_components_solve_and_reuse_independently() {
+        let policy = TerraPolicy::new(TerraConfig { alpha: 0.0, ..Default::default() });
+        let mut e = RoundEngine::new(
+            two_triangles(),
+            Box::new(policy),
+            EngineConfig { check_feasibility: true, ..Default::default() },
+        );
+        e.insert(coflow(1, 0, 1, 5.0));
+        e.insert(coflow(2, 3, 4, 5.0));
+        e.round(0.0, RoundTrigger::CoflowArrival);
+        let s = e.take_stats();
+        assert_eq!((s.component_solves, s.component_reuses), (2, 0));
+        let r2 = e.coflow_rates(2).unwrap();
+
+        // An arrival in triangle A dirties only its component.
+        e.insert(coflow(3, 1, 2, 5.0));
+        e.round(0.1, RoundTrigger::CoflowArrival);
+        let s = e.take_stats();
+        assert_eq!((s.component_solves, s.component_reuses), (1, 1), "only triangle A re-solves");
+        assert_eq!(e.coflow_rates(2).unwrap(), r2, "untouched component rates must not change");
+        assert!(e.coflow_rate(3) > 0.0);
+
+        // A qualifying fluctuation on a triangle-B edge re-solves only B.
+        let r1 = e.coflow_rates(1).unwrap();
+        let reaction = e.handle_wan_event(&LinkEvent::SetBandwidth(3, 4, 4.0)); // 60% ≥ ρ
+        assert_eq!(reaction, WanReaction::Reoptimize);
+        e.round(0.2, RoundTrigger::WanChange);
+        let s = e.take_stats();
+        assert_eq!((s.component_solves, s.component_reuses), (1, 1), "only triangle B re-solves");
+        assert_eq!(e.coflow_rates(1).unwrap(), r1, "triangle A rates must carry forward");
+        assert!(e.coflow_rate(2) > 0.0);
+
+        // A sub-ρ dip on a triangle-B edge clamps only the coflows that
+        // actually cross it: triangle A's carried-forward rates must stay
+        // bit-identical (a single global clamp factor would decay every
+        // clean component a little more on each dip, with nothing ever
+        // re-solving them).
+        let r1 = e.coflow_rates(1).unwrap();
+        let r3 = e.coflow_rates(3).unwrap();
+        let b_before = e.coflow_rate(2);
+        assert_eq!(e.handle_wan_event(&LinkEvent::SetBandwidth(3, 5, 9.0)), WanReaction::Clamped);
+        assert_eq!(e.coflow_rates(1).unwrap(), r1, "clamp leaked into an untouched component");
+        assert_eq!(e.coflow_rates(3).unwrap(), r3, "clamp leaked into an untouched component");
+        assert!(e.coflow_rate(2) <= b_before + 1e-9, "dipped component must not gain rate");
+    }
+
+    /// Per-edge drift baselines: a qualifying event on edge X must NOT
+    /// re-anchor edge Y's baseline — Y's components were not re-solved, so
+    /// Y's accumulated sub-ρ drift has to keep counting until it reaches ρ
+    /// and forces a round of its own.
+    #[test]
+    fn drift_baseline_survives_other_edges_reoptimize() {
+        let mut e = engine(false);
+        e.insert(coflow(1, 0, 1, 5.0));
+        e.round(0.0, RoundTrigger::CoflowArrival);
+        // Edge (0,1) drifts 20% — sub-ρ, clamped, baseline stays at 10.
+        assert_eq!(e.handle_wan_event(&LinkEvent::SetBandwidth(0, 1, 8.0)), WanReaction::Clamped);
+        // Edge (0,2) takes a qualifying 50% hit: re-optimizes, but only
+        // (0,2)'s baseline re-anchors.
+        assert_eq!(
+            e.handle_wan_event(&LinkEvent::SetBandwidth(0, 2, 5.0)),
+            WanReaction::Reoptimize
+        );
+        e.round(0.1, RoundTrigger::WanChange);
+        // Edge (0,1) drifts a further sub-ρ step to 6.9: 31% from ITS
+        // baseline of 10 — must promote to a re-optimization. (A global
+        // re-anchor at the (0,2) event would have reset (0,1)'s baseline
+        // to 8.0 and silently clamped this forever.)
+        let reaction = e.handle_wan_event(&LinkEvent::SetBandwidth(0, 1, 6.9));
+        assert_eq!(reaction, WanReaction::Reoptimize, "accumulated drift lost its baseline");
     }
 
     #[test]

@@ -343,6 +343,10 @@ pub struct ScenarioRow {
     pub deadline_met: f64,
     pub rounds: usize,
     pub lp_solves: usize,
+    /// Components re-solved / carried forward across rounds (decomposed
+    /// round accounting: solves + reuses ≈ components per round · rounds).
+    pub component_solves: usize,
+    pub component_reuses: usize,
     /// WAN events delivered / rounds they triggered (reaction coverage).
     pub wan_events: usize,
     pub wan_rounds: usize,
@@ -419,6 +423,8 @@ pub fn scenario_sweep(cfg: &SweepConfig) -> Vec<ScenarioRow> {
                         deadline_met: rep.deadline_met_fraction(),
                         rounds: rep.rounds,
                         lp_solves: rep.lp_solves,
+                        component_solves: rep.component_solves,
+                        component_reuses: rep.component_reuses,
                         wan_events: rep.wan_events,
                         wan_rounds: rep.wan_rounds,
                         reaction_ms_avg: rep.avg_reaction_ms(),
@@ -449,6 +455,8 @@ pub fn scenarios_json(cfg: &SweepConfig, rows: &[ScenarioRow]) -> Json {
                 ("deadline_met", r.deadline_met.into()),
                 ("rounds", r.rounds.into()),
                 ("lp_solves", r.lp_solves.into()),
+                ("component_solves", r.component_solves.into()),
+                ("component_reuses", r.component_reuses.into()),
                 ("wan_events", r.wan_events.into()),
                 ("wan_rounds", r.wan_rounds.into()),
                 ("reaction_ms_avg", r.reaction_ms_avg.into()),

@@ -1,0 +1,169 @@
+//! Edge-connected component decomposition of the active coflow set.
+//!
+//! Coflows whose k-shortest-path sets share no WAN edge are independent
+//! commodities: Optimization (1), the sequential residual allocation, and
+//! the work-conservation max-min all touch only the edges of a coflow's own
+//! restricted path set, so a scheduling round over the whole active set
+//! factors exactly into one sub-round per component. The
+//! [`crate::engine::RoundEngine`] uses this to re-solve only the components
+//! an event actually dirtied and to carry every untouched component's
+//! allocation forward unchanged (see `engine/cache.rs`'s `ComponentCache`).
+//!
+//! The partition rule: union-find over the WAN's directed edge ids, where
+//! each item (coflow) unions all edges appearing in any of its unfinished
+//! FlowGroups' k paths. Two items land in the same component iff their edge
+//! sets are connected through shared edges (directly or transitively).
+//! Items with no usable edges (e.g. a partitioned WAN) become singleton
+//! components.
+
+use crate::net::topology::EdgeId;
+use std::collections::HashMap;
+
+/// Disjoint-set forest over edge ids with path halving. Union keeps the
+/// smaller root id as representative, so component roots (and therefore
+/// component enumeration) are a pure function of the input, independent of
+/// union order.
+#[derive(Clone, Debug)]
+pub struct UnionFind {
+    parent: Vec<u32>,
+}
+
+impl UnionFind {
+    pub fn new(n: usize) -> UnionFind {
+        UnionFind { parent: (0..n as u32).collect() }
+    }
+
+    pub fn find(&mut self, mut x: usize) -> usize {
+        while self.parent[x] as usize != x {
+            let grand = self.parent[self.parent[x] as usize];
+            self.parent[x] = grand;
+            x = grand as usize;
+        }
+        x
+    }
+
+    /// Merge the sets of `a` and `b`; returns the surviving (smaller) root.
+    pub fn union(&mut self, a: usize, b: usize) -> usize {
+        let (ra, rb) = (self.find(a), self.find(b));
+        let (lo, hi) = if ra <= rb { (ra, rb) } else { (rb, ra) };
+        self.parent[hi] = lo as u32;
+        lo
+    }
+}
+
+/// The partition of a set of items (coflows) into edge-connected
+/// components, in deterministic first-member order.
+#[derive(Clone, Debug, Default)]
+pub struct Components {
+    /// Component index per input item.
+    pub comp_of: Vec<usize>,
+    /// Item indices per component, in input order.
+    pub members: Vec<Vec<usize>>,
+    /// Sorted, deduplicated edge ids per component (union over members).
+    pub edges: Vec<Vec<EdgeId>>,
+}
+
+impl Components {
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+}
+
+/// Partition items by edge connectivity. `item_edges[i]` is item `i`'s edge
+/// set (any order, duplicates tolerated); `num_edges` bounds the edge id
+/// space. O(total edges · α) plus the output construction.
+pub fn decompose(num_edges: usize, item_edges: &[Vec<EdgeId>]) -> Components {
+    let mut uf = UnionFind::new(num_edges);
+    for es in item_edges {
+        if let Some((&first, rest)) = es.split_first() {
+            for &e in rest {
+                uf.union(first, e);
+            }
+        }
+    }
+    let mut comp_of = vec![0usize; item_edges.len()];
+    let mut members: Vec<Vec<usize>> = Vec::new();
+    let mut edges: Vec<Vec<EdgeId>> = Vec::new();
+    let mut root_to_comp: HashMap<usize, usize> = HashMap::new();
+    for (i, es) in item_edges.iter().enumerate() {
+        let c = match es.first() {
+            // Edgeless item: its own singleton component.
+            None => {
+                members.push(Vec::new());
+                edges.push(Vec::new());
+                members.len() - 1
+            }
+            Some(&e0) => {
+                let root = uf.find(e0);
+                *root_to_comp.entry(root).or_insert_with(|| {
+                    members.push(Vec::new());
+                    edges.push(Vec::new());
+                    members.len() - 1
+                })
+            }
+        };
+        comp_of[i] = c;
+        members[c].push(i);
+        edges[c].extend_from_slice(es);
+    }
+    for es in &mut edges {
+        es.sort_unstable();
+        es.dedup();
+    }
+    Components { comp_of, members, edges }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disjoint_items_stay_separate() {
+        let c = decompose(6, &[vec![0, 1], vec![2], vec![3, 4, 5]]);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.comp_of, vec![0, 1, 2]);
+        assert_eq!(c.members, vec![vec![0], vec![1], vec![2]]);
+        assert_eq!(c.edges, vec![vec![0, 1], vec![2], vec![3, 4, 5]]);
+    }
+
+    #[test]
+    fn shared_edge_merges_transitively() {
+        // 0-{0,1}, 1-{1,2}, 2-{2,3}: one chain-connected component;
+        // 3-{5} stays apart.
+        let c = decompose(6, &[vec![0, 1], vec![1, 2], vec![2, 3], vec![5]]);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.comp_of, vec![0, 0, 0, 1]);
+        assert_eq!(c.members[0], vec![0, 1, 2]);
+        assert_eq!(c.edges[0], vec![0, 1, 2, 3]);
+        assert_eq!(c.members[1], vec![3]);
+    }
+
+    #[test]
+    fn edgeless_items_are_singletons() {
+        let c = decompose(4, &[vec![], vec![0], vec![], vec![0]]);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.comp_of[0], 0);
+        assert_eq!(c.comp_of[1], c.comp_of[3]);
+        assert_ne!(c.comp_of[0], c.comp_of[2], "each edgeless item is its own component");
+        assert!(c.edges[c.comp_of[0]].is_empty());
+    }
+
+    #[test]
+    fn order_is_deterministic_in_first_member_order() {
+        // Components enumerate in order of their first member, regardless of
+        // edge ids.
+        let c = decompose(10, &[vec![9], vec![1, 2], vec![2], vec![9]]);
+        assert_eq!(c.comp_of, vec![0, 1, 1, 0]);
+        assert_eq!(c.members, vec![vec![0, 3], vec![1, 2]]);
+    }
+
+    #[test]
+    fn duplicates_are_deduped() {
+        let c = decompose(3, &[vec![1, 1, 0, 1]]);
+        assert_eq!(c.edges[0], vec![0, 1]);
+    }
+}

@@ -21,6 +21,15 @@ use super::{McfInstance, McfSolution};
 /// simplex in tests) at a fraction of the cost.
 pub const DEFAULT_EPSILON: f64 = 0.05;
 
+/// Minimum usable edge capacity in Gbps (1 kbps). Edges at or below this are
+/// treated as down everywhere in the solver: a gray-failure residual like
+/// 1e-10 Gbps must not pass the usability filter — routing a demand across
+/// it produces pathological demand normalization (λ scaled by the degenerate
+/// bottleneck) and exponential length updates, while contributing nothing to
+/// real throughput. Applied consistently by `solve_warm` (path usability and
+/// warm-rate sanitization), `quick_lambda`, and `finalize`.
+pub const MIN_CAP: f64 = 1e-6;
+
 /// Solve max concurrent flow. Returns `None` if some active group has no
 /// path with positive capacity.
 pub fn solve(inst: &McfInstance, eps: f64) -> Option<McfSolution> {
@@ -45,11 +54,11 @@ pub fn solve_warm(
         return None;
     }
 
-    // Per-group usable paths (positive bottleneck).
+    // Per-group usable paths (bottleneck above the degeneracy floor).
     let mut usable: Vec<Vec<usize>> = vec![Vec::new(); inst.groups.len()];
     for &k in &active {
         for (p, path) in inst.groups[k].paths.iter().enumerate() {
-            if !path.is_empty() && path.iter().all(|&e| inst.cap[e] > 1e-12) {
+            if !path.is_empty() && path.iter().all(|&e| inst.cap[e] > MIN_CAP) {
                 usable[k].push(p);
             }
         }
@@ -89,7 +98,7 @@ pub fn solve_warm(
             v.resize(g.paths.len(), 0.0);
             for (p, r) in v.iter_mut().enumerate() {
                 let path = &g.paths[p];
-                if path.is_empty() || path.iter().any(|&e| inst.cap[e] <= 1e-12) || *r < 0.0 {
+                if path.is_empty() || path.iter().any(|&e| inst.cap[e] <= MIN_CAP) || *r < 0.0 {
                     *r = 0.0;
                 }
             }
@@ -99,12 +108,32 @@ pub fn solve_warm(
     });
     let warm_lambda = warm_sol.as_ref().map(|sol| sol.lambda).unwrap_or(0.0);
 
-    // Fleischer's δ with m = number of capacitated edges: guarantees the
-    // initial D(l) = m·δ < 1 so at least ~1/ε phases run.
-    let m = inst.cap.iter().filter(|&&c| c > 0.0).count().max(1) as f64;
+    // Edges that actually constrain this instance: those on some usable
+    // path. Lengths, Fleischer's m, and the measure D(l) are restricted to
+    // them, so the solve is a pure function of the instance's own
+    // subnetwork — capacities of unrelated edges (e.g. other components'
+    // residuals) cannot perturb δ or the termination test. This is what
+    // makes the per-component decomposition of a round exactly equivalent
+    // to the monolithic solve (see `lp::decompose`).
+    let mut relevant = vec![false; inst.cap.len()];
+    for &k in &active {
+        for &p in &usable[k] {
+            for &e in &inst.groups[k].paths[p] {
+                relevant[e] = true;
+            }
+        }
+    }
+
+    // Fleischer's δ with m = number of relevant capacitated edges:
+    // guarantees the initial D(l) = m·δ < 1 so at least ~1/ε phases run.
+    let m = relevant.iter().filter(|&&r| r).count().max(1) as f64;
     let delta = (1.0 + eps) * ((1.0 + eps) * m).powf(-1.0 / eps);
-    let mut len: Vec<f64> =
-        inst.cap.iter().map(|&c| if c > 0.0 { delta / c } else { f64::INFINITY }).collect();
+    let mut len: Vec<f64> = inst
+        .cap
+        .iter()
+        .zip(&relevant)
+        .map(|(&c, &r)| if r { delta / c } else { f64::INFINITY })
+        .collect();
     let mut x: Vec<Vec<f64>> = inst.groups.iter().map(|g| vec![0.0; g.paths.len()]).collect();
 
     // Cached path lengths + reverse index edge -> (group, path), so a length
@@ -124,8 +153,14 @@ pub fn solve_warm(
         }
     }
 
-    // D(l) = sum_e l_e c_e starts at delta * |E_used|.
-    let mut d: f64 = len.iter().zip(&inst.cap).filter(|(_, &c)| c > 0.0).map(|(&l, &c)| l * c).sum();
+    // D(l) = sum over relevant edges of l_e c_e, starting at m·δ.
+    let mut d: f64 = len
+        .iter()
+        .zip(&inst.cap)
+        .zip(&relevant)
+        .filter(|(_, &r)| r)
+        .map(|((&l, &c), _)| l * c)
+        .sum();
 
     let mut phases = 0usize;
     let max_phases = (((1.0 + eps) / delta).ln() / (1.0 + eps).ln()).ceil() as usize + 2;
@@ -210,12 +245,14 @@ pub fn solve_warm(
 
 /// Feasible λ extractable from raw accumulated flow `x` (the same
 /// computation `finalize` performs, without building the rate matrix).
+/// Degenerate capacities (≤ [`MIN_CAP`]) count as zero: any usage on them
+/// collapses θ — consistent with `solve_warm` treating them as down.
 fn quick_lambda(inst: &McfInstance, vols: &[f64], x: &[Vec<f64>]) -> f64 {
     let usage = inst.edge_usage(x);
     let mut theta = f64::INFINITY;
     for (&u, &c) in usage.iter().zip(&inst.cap) {
         if u > 1e-12 {
-            theta = theta.min(c / u);
+            theta = theta.min(if c > MIN_CAP { c / u } else { 0.0 });
         }
     }
     if !theta.is_finite() {
@@ -237,16 +274,19 @@ fn quick_lambda(inst: &McfInstance, vols: &[f64], x: &[Vec<f64>]) -> f64 {
 
 /// Rescale raw (possibly capacity-violating) path volumes into a feasible
 /// equal-progress rate allocation (in terms of the working volumes `vols`).
+/// Degenerate capacities (≤ [`MIN_CAP`]) count as zero, mirroring
+/// `solve_warm`'s usability filter: flow routed over such an edge makes the
+/// candidate infeasible rather than near-infinitely slow.
 fn finalize(inst: &McfInstance, vols: &[f64], x: Vec<Vec<f64>>) -> Option<McfSolution> {
     // Scale onto capacities.
     let usage = inst.edge_usage(&x);
     let mut theta = f64::INFINITY;
     for (&u, &c) in usage.iter().zip(&inst.cap) {
         if u > 1e-12 {
-            theta = theta.min(c / u);
+            theta = theta.min(if c > MIN_CAP { c / u } else { 0.0 });
         }
     }
-    if !theta.is_finite() {
+    if !(theta.is_finite() && theta > 0.0) {
         return None;
     }
     // λ = worst group progress after scaling.
@@ -404,5 +444,48 @@ mod tests {
         let mut inst = fig1a_inst(&[40.0]);
         inst.cap = vec![0.0; 6];
         assert!(solve(&inst, 0.05).is_none());
+    }
+
+    /// Regression (gray failures): a 1e-10 Gbps residual capacity used to
+    /// pass the `> 1e-12` usability filter, poisoning the demand
+    /// normalization and the length updates. It must now be treated exactly
+    /// like a down edge.
+    #[test]
+    fn degenerate_capacity_treated_as_down() {
+        // Direct path bottlenecked at 1e-10: route everything via C.
+        let mut inst = fig1a_inst(&[40.0]);
+        inst.cap[0] = 1e-10;
+        let sol = solve(&inst, 0.05).unwrap();
+        assert!(sol.rates[0][0] < 1e-12, "routed over a degenerate edge");
+        assert!((sol.gamma() - 4.0).abs() < 0.4, "gamma={}", sol.gamma());
+        inst.check(&sol, 1e-7).unwrap();
+        // Only degenerate paths left: infeasible, not a near-infinite solve.
+        let mut dead = fig1a_inst(&[40.0]);
+        dead.cap = vec![1e-10; 6];
+        assert!(solve(&dead, 0.05).is_none());
+        // A warm start whose rates ride a now-degenerate edge is sanitized,
+        // not trusted.
+        let mut shrunk = fig1a_inst(&[40.0]);
+        let cold = solve(&shrunk, 0.05).unwrap();
+        shrunk.cap[0] = 1e-10;
+        let warm = solve_warm(&shrunk, 0.05, Some(&cold.rates)).unwrap();
+        assert!(warm.rates[0][0] < 1e-12);
+        shrunk.check(&warm, 1e-7).unwrap();
+    }
+
+    /// The measure D(l) and Fleischer's m are restricted to the instance's
+    /// own (usable-path) edges: capacities of unrelated edges must not
+    /// change the result at all — the decomposition-invariance the
+    /// component solver relies on.
+    #[test]
+    fn solution_independent_of_unrelated_edges() {
+        let inst = fig1a_inst(&[40.0, 80.0]);
+        let base = solve(&inst, 0.05).unwrap();
+        let mut noisy = inst.clone();
+        noisy.cap[1] = 0.0; // B->A: on no path of this instance
+        noisy.cap[2] = 3.7; // B->C: likewise
+        let alt = solve(&noisy, 0.05).unwrap();
+        assert_eq!(base.lambda, alt.lambda, "unrelated edges perturbed λ");
+        assert_eq!(base.rates, alt.rates, "unrelated edges perturbed rates");
     }
 }

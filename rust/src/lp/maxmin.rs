@@ -30,13 +30,16 @@ pub fn max_min_rates(cap: &[f64], groups: &[GroupDemand], weights: &[f64]) -> Ra
     }
     let mut residual = cap.to_vec();
     let mut rates: Rates = groups.iter().map(|g| vec![0.0; g.paths.len()]).collect();
+    // Usability must match the GK solver's degeneracy floor: a group kept
+    // "active" here on a residual the solver treats as down would make the
+    // unit-demand solve infeasible and end filling for everyone.
     let mut active: Vec<usize> = (0..groups.len())
         .filter(|&k| {
             groups[k].volume > 0.0
                 && groups[k]
                     .paths
                     .iter()
-                    .any(|p| !p.is_empty() && p.iter().all(|&e| residual[e] > 1e-9))
+                    .any(|p| !p.is_empty() && p.iter().all(|&e| residual[e] > gk::MIN_CAP))
         })
         .collect();
 
@@ -80,7 +83,10 @@ pub fn max_min_rates(cap: &[f64], groups: &[GroupDemand], weights: &[f64]) -> Ra
         }
         // Freeze groups with no remaining headroom on any path.
         active.retain(|&k| {
-            groups[k].paths.iter().any(|p| !p.is_empty() && p.iter().all(|&e| residual[e] > 1e-6))
+            groups[k]
+                .paths
+                .iter()
+                .any(|p| !p.is_empty() && p.iter().all(|&e| residual[e] > gk::MIN_CAP))
         });
     }
     rates

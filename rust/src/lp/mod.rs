@@ -17,6 +17,7 @@
 //! [`maxmin`] implements max-min fair MCF used for work conservation
 //! (Pseudocode 1) and the SWAN-MCF baseline.
 
+pub mod decompose;
 pub mod gk;
 pub mod maxmin;
 pub mod simplex;
@@ -137,15 +138,15 @@ pub fn max_concurrent_warm(
     kind: SolverKind,
     warm: Option<&[Vec<f64>]>,
 ) -> Option<McfSolution> {
-    // Guard: every active group needs at least one path with positive
-    // bottleneck capacity.
+    // Guard: every active group needs at least one path whose bottleneck
+    // clears the degeneracy floor (gray-failure residuals count as down).
     let mut any = false;
     for (_, g) in inst.active_groups() {
         any = true;
         let ok = g
             .paths
             .iter()
-            .any(|p| !p.is_empty() && p.iter().all(|&e| inst.cap[e] > 1e-12));
+            .any(|p| !p.is_empty() && p.iter().all(|&e| inst.cap[e] > gk::MIN_CAP));
         if !ok {
             return None;
         }

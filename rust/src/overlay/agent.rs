@@ -109,21 +109,55 @@ impl Agent {
             }));
         }
 
-        // Control reader: controller commands.
+        // Control reader: controller commands. Tracks the delta-protocol
+        // sequence number; a gap (lost or reordered push) triggers a
+        // `sync_request`, answered by a `rates_full` that rebaselines.
         {
             let stop = stop.clone();
             let out = out.clone();
             let conns = conns.clone();
             let incoming = incoming.clone();
             let rx_counters = rx_counters.clone();
+            let ctrl_tx = ctrl_tx.clone();
             ctrl.set_read_timeout(Some(Duration::from_millis(100)))?;
             threads.push(std::thread::spawn(move || {
+                // None until the first rates_full lands.
+                let mut last_seq: Option<u64> = None;
                 while !stop.load(Ordering::Relaxed) {
                     let msg = match protocol::read_msg_resumable(&mut ctrl, &stop) {
                         Ok(Some(m)) => m,
                         _ => break,
                     };
-                    handle_ctrl(&msg, &out, &conns, &incoming, &rx_counters);
+                    match msg.get("op").and_then(|o| o.as_str()) {
+                        Some("rates_full") => {
+                            apply_rates_full(&msg, &out);
+                            last_seq = msg.get("seq").and_then(|x| x.as_u64());
+                        }
+                        Some("rates_delta") => {
+                            let seq = msg.get("seq").and_then(|x| x.as_u64());
+                            match (last_seq, seq) {
+                                (Some(prev), Some(s)) if s == prev + 1 => {
+                                    apply_rates_delta(&msg, &out);
+                                    last_seq = Some(s);
+                                }
+                                _ => {
+                                    // Gap or unsynced: drop the delta and
+                                    // ask for the full table.
+                                    log::warn!(
+                                        "agent {dc}: rate-delta gap \
+                                         ({last_seq:?} -> {seq:?}), requesting full sync"
+                                    );
+                                    let req = Json::from_pairs([(
+                                        "op",
+                                        Json::from("sync_request"),
+                                    )]);
+                                    let mut tx = ctrl_tx.lock().unwrap();
+                                    let _ = protocol::write_msg(&mut tx, &req);
+                                }
+                            }
+                        }
+                        _ => handle_ctrl(&msg, &out, &conns, &incoming, &rx_counters),
+                    }
                 }
             }));
         }
@@ -194,8 +228,12 @@ fn handle_ctrl(
                         peer.get("addr").and_then(|x| x.as_str()),
                         peer.get("k").and_then(|x| x.as_u64()),
                     ) else {
+                        log::warn!("agent: malformed peer entry dropped");
                         continue;
                     };
+                    // Sanity-cap k: a corrupt value must not spin this
+                    // thread opening unbounded connections.
+                    let k = k.min(1024);
                     let entry = c.entry(dst as usize).or_default();
                     while entry.len() < k as usize {
                         match TcpStream::connect(addr) {
@@ -252,26 +290,86 @@ fn handle_ctrl(
             });
             e.expected += bytes;
         }
-        // Update rates for (coflow, dst): one rate per path, Gbps.
-        Some("rates") => {
-            let (Some(coflow), Some(dst), Some(rates)) = (
-                msg.get("coflow").and_then(|x| x.as_u64()),
-                msg.get("dst").and_then(|x| x.as_u64()),
-                msg.get("rates").and_then(|x| x.as_arr()),
+        // Update rates for (coflow, dst): one rate per path, Gbps (legacy
+        // single-entry form; delta pushes batch the same payload).
+        Some("rates") => apply_rate_entry(msg, out),
+        _ => {}
+    }
+}
+
+/// Apply one (coflow, dst, rates) entry — shared by the legacy `rates` op,
+/// `rates_delta` updates, and `rates_full` entries. Non-finite or negative
+/// rates from a (possibly corrupt) peer sanitize to 0 rather than feeding
+/// the token buckets garbage.
+///
+/// The vector is stored exactly as sent — **not** truncated to the number
+/// of currently-open peer connections. Deltas are pushed once, so a rate
+/// vector cut down to an early `k = 0` (connections not yet established)
+/// would never be repaired by a rebroadcast the way the legacy per-round
+/// push repaired it; `send_tick` instead pairs rates with whatever
+/// connections exist at each tick.
+fn apply_rate_entry(entry: &Json, out: &Arc<Mutex<HashMap<(u64, usize), Outgoing>>>) {
+    let (Some(coflow), Some(dst), Some(rates)) = (
+        entry.get("coflow").and_then(|x| x.as_u64()),
+        entry.get("dst").and_then(|x| x.as_u64()),
+        entry.get("rates").and_then(|x| x.as_arr()),
+    ) else {
+        log::warn!("agent: malformed rate entry dropped");
+        return;
+    };
+    let mut o = out.lock().unwrap();
+    if let Some(e) = o.get_mut(&(coflow, dst as usize)) {
+        e.rate = rates
+            .iter()
+            .map(|r| r.as_f64().unwrap_or(0.0))
+            .map(|r| if r.is_finite() && r > 0.0 { r } else { 0.0 })
+            .collect();
+        if e.budget.len() < e.rate.len() {
+            e.budget.resize(e.rate.len(), 0.0);
+        }
+    }
+}
+
+/// `rates_delta`: apply the changed entries, zero the revoked ones.
+fn apply_rates_delta(msg: &Json, out: &Arc<Mutex<HashMap<(u64, usize), Outgoing>>>) {
+    if let Some(updates) = msg.get("updates").and_then(|x| x.as_arr()) {
+        for e in updates {
+            apply_rate_entry(e, out);
+        }
+    }
+    if let Some(revoke) = msg.get("revoke").and_then(|x| x.as_arr()) {
+        let mut o = out.lock().unwrap();
+        for r in revoke {
+            let (Some(coflow), Some(dst)) = (
+                r.get("coflow").and_then(|x| x.as_u64()),
+                r.get("dst").and_then(|x| x.as_u64()),
             ) else {
-                return;
+                continue;
             };
-            let mut o = out.lock().unwrap();
             if let Some(e) = o.get_mut(&(coflow, dst as usize)) {
-                let k = conns.lock().unwrap().get(&(dst as usize)).map(|v| v.len()).unwrap_or(0);
-                e.rate = rates.iter().map(|r| r.as_f64().unwrap_or(0.0)).collect();
-                e.rate.resize(k, 0.0);
-                if e.budget.len() != k {
-                    e.budget = vec![0.0; k];
+                for rate in &mut e.rate {
+                    *rate = 0.0;
                 }
             }
         }
-        _ => {}
+    }
+}
+
+/// `rates_full`: rebaseline — zero every held rate, then apply the full
+/// table (entries absent from it stay revoked).
+fn apply_rates_full(msg: &Json, out: &Arc<Mutex<HashMap<(u64, usize), Outgoing>>>) {
+    {
+        let mut o = out.lock().unwrap();
+        for e in o.values_mut() {
+            for rate in &mut e.rate {
+                *rate = 0.0;
+            }
+        }
+    }
+    if let Some(entries) = msg.get("entries").and_then(|x| x.as_arr()) {
+        for e in entries {
+            apply_rate_entry(e, out);
+        }
     }
 }
 
@@ -295,6 +393,14 @@ fn send_tick(
                 break;
             }
             let rate_bps = o.rate.get(p).copied().unwrap_or(0.0) * BYTES_PER_GBPS;
+            if rate_bps <= 0.0 {
+                continue;
+            }
+            // Connections can outnumber the budget vector when peers came
+            // up after the transfer/rates arrived; grow it on demand.
+            if o.budget.len() <= p {
+                o.budget.resize(p + 1, 0.0);
+            }
             // Cap the bucket at one tick's worth plus a chunk to avoid
             // long-idle bursts defeating the shaper.
             o.budget[p] = (o.budget[p] + rate_bps * dt).min(rate_bps * 0.1 + CHUNK_BYTES as f64);
@@ -341,6 +447,13 @@ fn recv_loop(
             _ => break,
         }
         let Ok(hdr) = DataHeader::decode(&hdr_buf) else { break };
+        // A frame claiming more than the chunk size is corrupt (or
+        // malicious): indexing the reassembly buffer with it would panic.
+        // Drop the connection instead.
+        if hdr.len as usize > CHUNK_BYTES {
+            log::warn!("agent {my_dc}: frame len {} exceeds chunk cap, dropping peer", hdr.len);
+            break;
+        }
         match protocol::read_full(&mut stream, &mut payload[..hdr.len as usize], &stop) {
             Ok(true) => {}
             _ => break,

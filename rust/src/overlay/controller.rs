@@ -44,6 +44,26 @@ pub struct TestbedConfig {
 struct AgentConn {
     ctrl: TcpStream,
     data_addr: String,
+    /// Delta-enforcement state (per control connection): monotone sequence
+    /// number stamped on every `rates_delta`/`rates_full` push, and the
+    /// last rate vector pushed per (coflow, dst) FlowGroup. A round pushes
+    /// only the entries whose rates changed plus an explicit revoke list;
+    /// reconnects and sequence gaps fall back to a full-table sync.
+    seq: u64,
+    sent: HashMap<(CoflowId, usize), Vec<f64>>,
+}
+
+/// Control-plane traffic counters for the delta protocol.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DeltaStats {
+    /// Full-table syncs sent (agent (re)connects + explicit requests).
+    pub full_syncs: usize,
+    /// Incremental `rates_delta` messages sent.
+    pub delta_msgs: usize,
+    /// FlowGroup rate entries carried in those deltas.
+    pub delta_entries: usize,
+    /// Revoked (withdrawn) FlowGroup entries.
+    pub delta_revokes: usize,
 }
 
 /// Testbed-side metadata per coflow; scheduling state (groups, remaining,
@@ -65,6 +85,7 @@ struct State {
     next_id: CoflowId,
     rules: RuleTable,
     peers_sent: bool,
+    delta: DeltaStats,
     epoch: Instant,
     /// Wall-clock instant of the last remaining-volume drain.
     last_drain: Instant,
@@ -121,6 +142,7 @@ impl Controller {
             next_id: 1,
             rules,
             peers_sent: false,
+            delta: DeltaStats::default(),
             epoch: Instant::now(),
             last_drain: Instant::now(),
         }));
@@ -208,6 +230,13 @@ impl ControllerHandle {
         st.engine.rounds()
     }
 
+    /// Delta-protocol traffic counters (full syncs, delta messages, delta
+    /// entries, revokes) — what the enforcement plane actually shipped.
+    pub fn delta_stats(&self) -> DeltaStats {
+        let st = self.state.lock().unwrap();
+        st.delta
+    }
+
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::Relaxed);
         // Nudge the acceptor.
@@ -236,23 +265,41 @@ fn serve_conn(mut s: TcpStream, state: Arc<Mutex<State>>, stop: Arc<AtomicBool>)
                     msg.get("dc").and_then(|x| x.as_u64()),
                     msg.get("data_addr").and_then(|x| x.as_str()),
                 ) else {
+                    log::warn!("controller: malformed hello, dropping connection");
                     return;
                 };
                 let dc = dc as usize;
                 {
                     let mut st = state.lock().unwrap();
+                    // A dc outside the WAN would corrupt the agent table
+                    // (and the len == num_nodes readiness check): drop it.
+                    if dc >= st.engine.wan().num_nodes() {
+                        log::warn!("controller: hello from out-of-range dc {dc}, dropping");
+                        return;
+                    }
                     let ctrl = match s.try_clone() {
                         Ok(c) => c,
                         Err(_) => return,
                     };
-                    st.agents.insert(dc, AgentConn { ctrl, data_addr: addr.to_string() });
+                    st.agents.insert(
+                        dc,
+                        AgentConn {
+                            ctrl,
+                            data_addr: addr.to_string(),
+                            seq: 0,
+                            sent: HashMap::new(),
+                        },
+                    );
                     if st.agents.len() == st.engine.wan().num_nodes() {
                         resend_peers(&mut st);
                         st.peers_sent = true;
                     }
+                    // Fresh connection, empty delta baseline: full-table
+                    // sync so a (re)connected agent converges immediately.
+                    full_sync_agent(&mut st, dc);
                 }
                 // Stay on this connection reading agent events.
-                agent_reader(s, state, stop);
+                agent_reader(s, dc, state, stop);
                 return;
             }
             "submit" => {
@@ -336,8 +383,9 @@ fn resend_peers(st: &mut State) {
     }
 }
 
-/// Reader for agent events (group completions).
-fn agent_reader(mut s: TcpStream, state: Arc<Mutex<State>>, stop: Arc<AtomicBool>) {
+/// Reader for agent events (group completions, full-sync requests).
+/// Malformed messages are logged and dropped — never unwrapped.
+fn agent_reader(mut s: TcpStream, dc: usize, state: Arc<Mutex<State>>, stop: Arc<AtomicBool>) {
     s.set_read_timeout(Some(Duration::from_millis(100))).ok();
     loop {
         if stop.load(Ordering::Relaxed) {
@@ -347,30 +395,41 @@ fn agent_reader(mut s: TcpStream, state: Arc<Mutex<State>>, stop: Arc<AtomicBool
             Ok(Some(m)) => m,
             _ => return,
         };
-        if msg.get("op").and_then(|o| o.as_str()) == Some("group_done") {
-            let (Some(coflow), Some(src), Some(dst)) = (
-                msg.get("coflow").and_then(|x| x.as_u64()),
-                msg.get("src").and_then(|x| x.as_u64()),
-                msg.get("dst").and_then(|x| x.as_u64()),
-            ) else {
-                continue;
-            };
-            let mut st = state.lock().unwrap();
-            let coflow_finished = st.engine.complete_group(coflow, src as usize, dst as usize);
-            if coflow_finished {
-                if let Some(meta) = st.coflows.get_mut(&coflow) {
-                    if meta.finished.is_none() {
-                        meta.finished = Some(Instant::now());
+        match msg.get("op").and_then(|o| o.as_str()) {
+            Some("group_done") => {
+                let (Some(coflow), Some(src), Some(dst)) = (
+                    msg.get("coflow").and_then(|x| x.as_u64()),
+                    msg.get("src").and_then(|x| x.as_u64()),
+                    msg.get("dst").and_then(|x| x.as_u64()),
+                ) else {
+                    log::warn!("controller: malformed group_done from dc {dc}, dropped");
+                    continue;
+                };
+                let mut st = state.lock().unwrap();
+                let coflow_finished =
+                    st.engine.complete_group(coflow, src as usize, dst as usize);
+                if coflow_finished {
+                    if let Some(meta) = st.coflows.get_mut(&coflow) {
+                        if meta.finished.is_none() {
+                            meta.finished = Some(Instant::now());
+                        }
                     }
+                    st.engine.take_finished();
                 }
-                st.engine.take_finished();
+                let trigger = if coflow_finished {
+                    RoundTrigger::CoflowFinish
+                } else {
+                    RoundTrigger::FlowGroupFinish
+                };
+                reallocate(&mut st, trigger);
             }
-            let trigger = if coflow_finished {
-                RoundTrigger::CoflowFinish
-            } else {
-                RoundTrigger::FlowGroupFinish
-            };
-            reallocate(&mut st, trigger);
+            // The agent detected a sequence gap (or reconnected behind a
+            // NAT rebinding): resynchronize its full rate table.
+            Some("sync_request") => {
+                let mut st = state.lock().unwrap();
+                full_sync_agent(&mut st, dc);
+            }
+            _ => {}
         }
     }
 }
@@ -404,6 +463,13 @@ fn handle_submit(msg: &Json, state: &Arc<Mutex<State>>) -> Json {
         .unwrap_or_default();
     let deadline = msg.get("deadline").and_then(|d| d.as_f64());
     let mut st = state.lock().unwrap();
+    // A flow endpoint outside the WAN would index out of the path sets in
+    // the next scheduling round: reject the submission instead of panicking
+    // later on network-supplied input.
+    let n = st.engine.wan().num_nodes();
+    if flows.iter().any(|f| f.src_dc >= n || f.dst_dc >= n) {
+        return Json::from_pairs([("error", Json::from("flow endpoint out of range"))]);
+    }
     let id = st.next_id;
     st.next_id += 1;
 
@@ -449,6 +515,16 @@ fn handle_submit(msg: &Json, state: &Arc<Mutex<State>>) -> Json {
         return Json::from_pairs([("cid", Json::from(-1i64))]);
     }
 
+    // All-intra-DC (or zero-byte) submissions coalesce to zero FlowGroups:
+    // done on arrival, never inserted (an empty coflow would otherwise sit
+    // in the active table forever waiting for a group_done).
+    if cstate.done() {
+        if let Some(meta) = st.coflows.get_mut(&id) {
+            meta.finished = Some(Instant::now());
+        }
+        return Json::from_pairs([("cid", Json::from(id))]);
+    }
+
     cstate.admitted = true;
     st.engine.insert(cstate);
 
@@ -466,6 +542,10 @@ fn handle_update(msg: &Json, state: &Arc<Mutex<State>>) -> Json {
         .map(|arr| arr.iter().filter_map(FlowSpec::from_json).collect())
         .unwrap_or_default();
     let mut st = state.lock().unwrap();
+    let n = st.engine.wan().num_nodes();
+    if flows.iter().any(|f| f.src_dc >= n || f.dst_dc >= n) {
+        return Json::from_pairs([("error", Json::from("flow endpoint out of range"))]);
+    }
     match st.coflows.get(&id) {
         None => {
             return Json::from_pairs([("error", Json::from("unknown coflow"))]);
@@ -561,25 +641,93 @@ fn reallocate(st: &mut State, trigger: RoundTrigger) {
     push_rates(st);
 }
 
-/// Push the engine's current allocation to the source agents.
-fn push_rates(st: &mut State) {
-    let State { engine, agents, .. } = st;
-    for cs in engine.active() {
-        let rates = engine.alloc().rates.get(&cs.id);
+/// The rate table each source agent should currently hold:
+/// (coflow, dst) → per-path Gbps from the engine's live allocation.
+fn desired_rate_tables(st: &State) -> HashMap<usize, HashMap<(CoflowId, usize), Vec<f64>>> {
+    let mut desired: HashMap<usize, HashMap<(CoflowId, usize), Vec<f64>>> = HashMap::new();
+    for cs in st.engine.active() {
+        let rates = st.engine.alloc().rates.get(&cs.id);
         for (gi, g) in cs.groups.iter().enumerate() {
-            let path_rates: Vec<Json> = rates
-                .and_then(|r| r.get(gi))
-                .map(|v| v.iter().map(|&r| Json::Num(r)).collect())
-                .unwrap_or_default();
-            if let Some(a) = agents.get_mut(&g.src) {
-                let m = Json::from_pairs([
-                    ("op", Json::from("rates")),
-                    ("coflow", cs.id.into()),
-                    ("dst", g.dst.into()),
-                    ("rates", Json::Arr(path_rates)),
-                ]);
-                let _ = protocol::write_msg(&mut a.ctrl, &m);
-            }
+            let path_rates: Vec<f64> = rates.and_then(|r| r.get(gi)).cloned().unwrap_or_default();
+            desired.entry(g.src).or_default().insert((cs.id, g.dst), path_rates);
         }
     }
+    desired
+}
+
+fn rate_entry_json(key: &(CoflowId, usize), rates: &[f64]) -> Json {
+    Json::from_pairs([
+        ("coflow", Json::from(key.0)),
+        ("dst", key.1.into()),
+        ("rates", Json::Arr(rates.iter().map(|&r| Json::Num(r)).collect())),
+    ])
+}
+
+/// Delta enforcement: push each source agent only the FlowGroup rate
+/// vectors that changed since its last push, plus an explicit revoke list
+/// for withdrawn entries, under a per-agent sequence number. Agents whose
+/// table is unchanged get **no message at all** — with component-decomposed
+/// rounds, a round that re-solved one component touches only that
+/// component's senders, so WAN control traffic is O(changed flows) instead
+/// of O(all flows).
+fn push_rates(st: &mut State) {
+    let mut desired = desired_rate_tables(st);
+    let State { agents, delta, .. } = st;
+    for (&dc, conn) in agents.iter_mut() {
+        // Take (not clone) the agent's table; when nothing changed we drop
+        // it — `conn.sent` is provably identical in that case.
+        let want = desired.remove(&dc).unwrap_or_default();
+        let mut changed: Vec<(CoflowId, usize)> = want
+            .iter()
+            .filter(|(k, v)| conn.sent.get(*k) != Some(*v))
+            .map(|(&k, _)| k)
+            .collect();
+        changed.sort_unstable();
+        let mut revoked: Vec<(CoflowId, usize)> =
+            conn.sent.keys().filter(|k| !want.contains_key(*k)).copied().collect();
+        revoked.sort_unstable();
+        if changed.is_empty() && revoked.is_empty() {
+            continue;
+        }
+        conn.seq += 1;
+        let updates: Vec<Json> =
+            changed.iter().map(|k| rate_entry_json(k, &want[k])).collect();
+        let revoke: Vec<Json> = revoked
+            .iter()
+            .map(|k| Json::from_pairs([("coflow", Json::from(k.0)), ("dst", k.1.into())]))
+            .collect();
+        let m = Json::from_pairs([
+            ("op", Json::from("rates_delta")),
+            ("seq", conn.seq.into()),
+            ("updates", Json::Arr(updates)),
+            ("revoke", Json::Arr(revoke)),
+        ]);
+        delta.delta_msgs += 1;
+        delta.delta_entries += changed.len();
+        delta.delta_revokes += revoked.len();
+        let _ = protocol::write_msg(&mut conn.ctrl, &m);
+        conn.sent = want;
+    }
+}
+
+/// Full-table sync for one agent: everything it should hold, under a fresh
+/// baseline sequence number. Sent on (re)connect and on `sync_request`
+/// (the agent saw a sequence gap).
+fn full_sync_agent(st: &mut State, dc: usize) {
+    let mut desired = desired_rate_tables(st);
+    let State { agents, delta, .. } = st;
+    let Some(conn) = agents.get_mut(&dc) else { return };
+    let want = desired.remove(&dc).unwrap_or_default();
+    let mut keys: Vec<(CoflowId, usize)> = want.keys().copied().collect();
+    keys.sort_unstable();
+    conn.seq += 1;
+    let entries: Vec<Json> = keys.iter().map(|k| rate_entry_json(k, &want[k])).collect();
+    let m = Json::from_pairs([
+        ("op", Json::from("rates_full")),
+        ("seq", conn.seq.into()),
+        ("entries", Json::Arr(entries)),
+    ]);
+    delta.full_syncs += 1;
+    let _ = protocol::write_msg(&mut conn.ctrl, &m);
+    conn.sent = want;
 }

@@ -24,7 +24,7 @@ pub mod protocol;
 pub mod rules;
 
 pub use agent::Agent;
-pub use controller::{Controller, ControllerHandle, TestbedConfig};
+pub use controller::{Controller, ControllerHandle, DeltaStats, TestbedConfig};
 pub use protocol::{CoflowStatus, FlowSpec};
 
 /// Bytes per second in one emulated "Gbps" (the testbed scales real

@@ -14,6 +14,12 @@ use std::net::TcpStream;
 pub const DATA_MAGIC: u32 = 0x7E44_AA01;
 /// Chunk payload size for striping transfers across paths.
 pub const CHUNK_BYTES: usize = 64 * 1024;
+/// Maximum control-message body size, enforced symmetrically: readers
+/// reject larger frames, and [`write_msg`] refuses to emit them — a body
+/// whose length overflows the u32 prefix (or merely exceeds the peer's
+/// cap) would otherwise silently truncate the prefix and desync the frame
+/// stream.
+pub const MAX_MSG_BYTES: usize = 64 * 1024 * 1024;
 
 /// A flow in a coflow submission (§5.2 API).
 #[derive(Clone, Debug, PartialEq)]
@@ -89,9 +95,18 @@ impl CoflowStatus {
     }
 }
 
-/// Write one length-prefixed JSON message.
+/// Write one length-prefixed JSON message. Oversized bodies (anything a
+/// reader would reject, including > 4 GiB bodies whose length prefix would
+/// wrap) fail *before* any byte hits the wire, keeping the frame stream
+/// intact.
 pub fn write_msg(stream: &mut TcpStream, msg: &Json) -> std::io::Result<()> {
     let body = msg.to_string().into_bytes();
+    if body.len() > MAX_MSG_BYTES {
+        return Err(std::io::Error::other(format!(
+            "control message too large to send: {} bytes > cap {MAX_MSG_BYTES}",
+            body.len()
+        )));
+    }
     let len = (body.len() as u32).to_le_bytes();
     stream.write_all(&len)?;
     stream.write_all(&body)?;
@@ -107,7 +122,7 @@ pub fn read_msg(stream: &mut TcpStream) -> std::io::Result<Option<Json>> {
         Err(e) => return Err(e),
     }
     let len = u32::from_le_bytes(len_buf) as usize;
-    if len > 64 * 1024 * 1024 {
+    if len > MAX_MSG_BYTES {
         return Err(std::io::Error::other("control message too large"));
     }
     let mut body = vec![0u8; len];
@@ -162,7 +177,7 @@ pub fn read_msg_resumable(
         return Ok(None);
     }
     let len = u32::from_le_bytes(len_buf) as usize;
-    if len > 64 * 1024 * 1024 {
+    if len > MAX_MSG_BYTES {
         return Err(std::io::Error::other("control message too large"));
     }
     let mut body = vec![0u8; len];
@@ -240,6 +255,28 @@ mod tests {
         let mut bad = h.encode();
         bad[0] = 0;
         assert!(DataHeader::decode(&bad).is_err());
+    }
+
+    /// Regression: `write_msg` used to cast `body.len() as u32` unchecked —
+    /// an oversized body silently truncated the length prefix and desynced
+    /// the stream. It must now fail cleanly with nothing written.
+    #[test]
+    fn write_msg_rejects_oversized_body() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            // The peer must observe a clean EOF — not a garbled frame.
+            assert!(read_msg(&mut s).unwrap().is_none());
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        // The JSON encoding (quotes + key) pushes this just past the cap.
+        let msg = Json::from_pairs([("blob", Json::from("x".repeat(MAX_MSG_BYTES)))]);
+        let err = write_msg(&mut c, &msg).unwrap_err();
+        assert!(err.to_string().contains("too large"), "{err}");
+        // The connection is still usable for well-sized messages.
+        drop(c);
+        t.join().unwrap();
     }
 
     #[test]

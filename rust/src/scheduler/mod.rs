@@ -117,6 +117,12 @@ pub struct RoundStats {
     /// Standalone-Γ solves answered from the [`GammaCache`] instead of an
     /// LP solve (incremental re-optimization).
     pub gamma_cache_hits: usize,
+    /// Edge-connected components the engine re-solved (dirty components).
+    pub component_solves: usize,
+    /// Components whose previous allocation was carried forward unchanged
+    /// (no member arrival/departure/completion, no qualifying WAN change on
+    /// their edges).
+    pub component_reuses: usize,
 }
 
 impl RoundStats {
@@ -125,6 +131,8 @@ impl RoundStats {
         self.lp_time_s += other.lp_time_s;
         self.round_time_s += other.round_time_s;
         self.gamma_cache_hits += other.gamma_cache_hits;
+        self.component_solves += other.component_solves;
+        self.component_reuses += other.component_reuses;
     }
 }
 

@@ -305,6 +305,8 @@ impl Simulation {
         self.report.lp_time_s += st.lp_time_s;
         self.report.round_time_s += st.round_time_s;
         self.report.gamma_cache_hits += st.gamma_cache_hits;
+        self.report.component_solves += st.component_solves;
+        self.report.component_reuses += st.component_reuses;
         self.report.clone()
     }
 

@@ -75,6 +75,10 @@ pub struct Report {
     /// Standalone-Γ solves served from the engine's Γ-cache instead of an
     /// LP solve (incremental re-optimization).
     pub gamma_cache_hits: usize,
+    /// Edge-connected components re-solved across rounds, and components
+    /// whose allocation was carried forward unchanged (decomposed rounds).
+    pub component_solves: usize,
+    pub component_reuses: usize,
     /// WAN events delivered to the engine (fail / recover / fluctuation).
     pub wan_events: usize,
     /// Rounds triggered by WAN changes (structural, ≥ ρ, or accumulated

@@ -113,9 +113,10 @@ fn sim_and_controller_allocations_match() {
     assert!(total > 15.0, "initial allocation too small: {total}");
 }
 
-/// Γ-cache epoch invariants at the engine level: sub-ρ fluctuations must
-/// NOT invalidate cached Γ solves; qualifying events (≥ ρ or structural)
-/// must.
+/// Γ-cache and component-cache invariants at the engine level: sub-ρ
+/// fluctuations must NOT invalidate any cached state (clean components
+/// don't even call the policy); qualifying events (≥ ρ or structural)
+/// must re-solve.
 #[test]
 fn gamma_cache_survives_sub_rho_but_not_epoch_bump() {
     let mut e = RoundEngine::new(
@@ -132,9 +133,13 @@ fn gamma_cache_survives_sub_rho_but_not_epoch_bump() {
     e.round(0.0, RoundTrigger::CoflowArrival);
     let cold = e.take_stats();
     assert_eq!(cold.gamma_cache_hits, 0, "first round cannot hit");
+    assert!(cold.component_solves >= 1);
 
-    // Sub-ρ fluctuation: clamp only, cache stays warm, next round hits for
-    // every active coflow.
+    // Sub-ρ fluctuation: no epoch bump, but the clamp rescaled saturated
+    // coflows, so their component is dirty — the next round re-optimizes
+    // it against current capacities (no ratcheting on stale clamped
+    // rates), with every ordering solve answered by the still-warm
+    // Γ-cache.
     let epoch0 = e.epoch();
     assert_eq!(e.handle_wan_event(&LinkEvent::SetBandwidth(0, 1, 9.0)), WanReaction::Clamped);
     assert_eq!(e.epoch(), epoch0);
@@ -148,7 +153,15 @@ fn gamma_cache_survives_sub_rho_but_not_epoch_bump() {
         cold.lp_solves
     );
 
-    // Super-ρ fluctuation: epoch bump, every cached Γ is stale.
+    // Nothing changed since: the follow-up round carries every component
+    // forward without a single LP solve.
+    e.round(0.15, RoundTrigger::CoflowArrival);
+    let clean = e.take_stats();
+    assert_eq!(clean.lp_solves, 0, "clean components must not re-solve");
+    assert!(clean.component_reuses >= 1);
+
+    // Super-ρ fluctuation: epoch bump + the touched edge dirties its
+    // component — every cached Γ is stale, the round is cold again.
     assert_eq!(
         e.handle_wan_event(&LinkEvent::SetBandwidth(0, 1, 2.0)),
         WanReaction::Reoptimize
