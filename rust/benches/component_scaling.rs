@@ -5,22 +5,28 @@
 //! adjacent datacenter pairs at k = 1, so every coflow pins to its direct
 //! edge and the active set factors into one component per edge-sharing
 //! class — and times steady-state scheduling rounds (one coflow arrival
-//! between rounds, the canonical trigger) in three modes:
+//! between rounds, the canonical trigger) across:
 //!
 //! - **cold**: monolithic per-round re-solve of everything (pre-incremental
 //!   behavior),
 //! - **warm**: Γ-cache + GK warm starts, but still one monolithic solve of
 //!   the full active set per round (PR 1 behavior),
-//! - **component**: the default — only the arrival's component re-solves,
-//!   every other component's allocation is carried forward.
+//! - **component × solver-repr × workers**: decomposed delta rounds (PR 3)
+//!   on the jagged or flat solver representation, with 1 / 2 / all-core
+//!   parallel component solves. `solver_repr = jagged, workers = 1` is the
+//!   PR 3 baseline; `flat` + all cores is the current default. All
+//!   component combos produce bit-identical allocations (property-tested)
+//!   — only latency differs.
 //!
 //! Emits `BENCH_component_scaling.json` (p50/p99 round latency, LP
-//! solves/round, component solves+reuses/round, and the p99 speedup of
-//! component-cached over cold monolithic per scale).
+//! solves/round, component solves+reuses/round per combo, plus the p50/p99
+//! speedups of the default flat+parallel configuration over both the cold
+//! monolithic and the PR 3 jagged-sequential baselines).
 
 use std::time::Instant;
 use terra::coflow::{Coflow, Flow};
-use terra::engine::{EngineConfig, RoundEngine};
+use terra::engine::{default_workers, EngineConfig, RoundEngine};
+use terra::lp::SolverRepr;
 use terra::net::{topologies, Wan};
 use terra::scheduler::terra::{TerraConfig, TerraPolicy};
 use terra::scheduler::{CoflowState, RoundTrigger};
@@ -41,24 +47,13 @@ fn mk_state(id: u64, pairs: &[(usize, usize)], rng: &mut Pcg32) -> CoflowState {
 }
 
 #[derive(Clone, Copy)]
-enum Mode {
-    Cold,
-    Warm,
-    Component,
-}
-
-impl Mode {
-    fn config(self) -> EngineConfig {
-        match self {
-            Mode::Cold => {
-                EngineConfig { check_feasibility: false, cold: true, ..Default::default() }
-            }
-            Mode::Warm => {
-                EngineConfig { check_feasibility: false, decompose: false, ..Default::default() }
-            }
-            Mode::Component => EngineConfig { check_feasibility: false, ..Default::default() },
-        }
-    }
+struct ModeSpec {
+    /// JSON key / table label.
+    name: &'static str,
+    cold: bool,
+    decompose: bool,
+    repr: SolverRepr,
+    workers: usize,
 }
 
 struct ModeResult {
@@ -72,9 +67,16 @@ struct ModeResult {
 
 /// Time `rounds` steady-state rounds at `n` active coflows, each preceded
 /// by one arrival. The populate round is untimed in every mode.
-fn bench_mode(wan: &Wan, n: usize, mode: Mode, rounds: usize) -> ModeResult {
-    let policy = TerraPolicy::new(TerraConfig { k: 1, ..Default::default() });
-    let mut engine = RoundEngine::new(wan.clone(), Box::new(policy), mode.config());
+fn bench_mode(wan: &Wan, n: usize, spec: ModeSpec, rounds: usize) -> ModeResult {
+    let policy = TerraPolicy::new(TerraConfig { k: 1, repr: spec.repr, ..Default::default() });
+    let cfg = EngineConfig {
+        check_feasibility: false,
+        cold: spec.cold,
+        decompose: spec.decompose,
+        workers: spec.workers,
+        ..Default::default()
+    };
+    let mut engine = RoundEngine::new(wan.clone(), Box::new(policy), cfg);
     let pairs: Vec<(usize, usize)> = wan.links().iter().map(|l| (l.src, l.dst)).collect();
     let mut rng = Pcg32::new(0xC0135 + n as u64);
     for i in 0..n {
@@ -106,8 +108,17 @@ fn bench_mode(wan: &Wan, n: usize, mode: Mode, rounds: usize) -> ModeResult {
     }
 }
 
-fn mode_json(m: &ModeResult) -> Json {
+fn mode_json(spec: &ModeSpec, m: &ModeResult) -> Json {
     Json::from_pairs([
+        ("mode", Json::from(spec.name)),
+        (
+            "solver_repr",
+            Json::from(match spec.repr {
+                SolverRepr::Jagged => "jagged",
+                SolverRepr::Flat => "flat",
+            }),
+        ),
+        ("workers", Json::from(spec.workers)),
         ("p50_ms", Json::from(m.p50_ms)),
         ("p99_ms", m.p99_ms.into()),
         ("lp_solves_per_round", m.lp_per_round.into()),
@@ -122,50 +133,117 @@ fn main() {
     let scales: Vec<usize> =
         if quick { vec![100, 500, 2000] } else { vec![100, 500, 2000, 10_000] };
     let rounds = if quick { 4 } else { 8 };
+    let all = default_workers();
+    let mut workers_axis = vec![1usize, 2, all];
+    workers_axis.sort_unstable();
+    workers_axis.dedup();
+    // Widest configuration actually in the matrix — equals `all` except on
+    // 1-core machines (where the axis still includes workers=2 so a
+    // parallel data point exists); labels and speedups use this value so
+    // they always describe the measured config.
+    let w_max = *workers_axis.last().unwrap();
     let topos: Vec<(&str, Wan)> = vec![
         ("swan", topologies::swan()),
         ("gscale", topologies::gscale()),
         ("att", topologies::att()),
     ];
+    // Monolithic baselines + the component repr × workers matrix. The
+    // first component entry (jagged, 1 worker) is exactly the PR 3
+    // configuration; the last (flat, all cores) is the current default.
+    let mut specs: Vec<ModeSpec> = vec![
+        ModeSpec {
+            name: "cold",
+            cold: true,
+            decompose: true,
+            repr: SolverRepr::Flat,
+            workers: 1,
+        },
+        ModeSpec {
+            name: "warm",
+            cold: false,
+            decompose: false,
+            repr: SolverRepr::Flat,
+            workers: 1,
+        },
+    ];
+    for repr in [SolverRepr::Jagged, SolverRepr::Flat] {
+        for &w in &workers_axis {
+            specs.push(ModeSpec {
+                name: match repr {
+                    SolverRepr::Jagged => "component-jagged",
+                    SolverRepr::Flat => "component-flat",
+                },
+                cold: false,
+                decompose: true,
+                repr,
+                workers: w,
+            });
+        }
+    }
+    let pr3_idx = 2; // component-jagged, workers = 1
+    let default_idx = specs.len() - 1; // component-flat, workers = w_max
+
     let mut topo_docs = Vec::new();
     for (tname, wan) in &topos {
         let mut tab = Table::new(&[
             "active",
-            "cold p99",
-            "warm p99",
-            "comp p99",
-            "p99 speedup vs cold",
-            "comp LPs/rd",
+            "cold p50",
+            "jagged×1 p50 (PR3)",
+            "flat×1 p50",
+            &format!("flat×{w_max} p50"),
+            "speedup vs PR3",
+            "speedup vs cold",
             "reuses/rd",
         ]);
         let mut scale_docs = Vec::new();
         for &n in &scales {
-            let results: Vec<ModeResult> = [Mode::Cold, Mode::Warm, Mode::Component]
-                .into_iter()
-                .map(|m| bench_mode(wan, n, m, rounds))
-                .collect();
-            let cold_p99 = results[0].p99_ms;
-            let comp = &results[2];
-            let speedup = if comp.p99_ms > 0.0 { cold_p99 / comp.p99_ms } else { f64::INFINITY };
+            let results: Vec<ModeResult> =
+                specs.iter().map(|&s| bench_mode(wan, n, s, rounds)).collect();
+            let cold = &results[0];
+            let pr3 = &results[pr3_idx];
+            let flat_seq = &results[pr3_idx + workers_axis.len()];
+            let flat_par = &results[default_idx];
+            let sp_pr3 =
+                if flat_par.p50_ms > 0.0 { pr3.p50_ms / flat_par.p50_ms } else { f64::INFINITY };
+            let sp_cold =
+                if flat_par.p50_ms > 0.0 { cold.p50_ms / flat_par.p50_ms } else { f64::INFINITY };
             tab.row(&[
                 n.to_string(),
-                format!("{cold_p99:.2}ms"),
-                format!("{:.2}ms", results[1].p99_ms),
-                format!("{:.2}ms", comp.p99_ms),
-                format!("{speedup:.1}x"),
-                format!("{:.1}", comp.lp_per_round),
-                format!("{:.1}", comp.comp_reuses_per_round),
+                format!("{:.2}ms", cold.p50_ms),
+                format!("{:.2}ms", pr3.p50_ms),
+                format!("{:.2}ms", flat_seq.p50_ms),
+                format!("{:.2}ms", flat_par.p50_ms),
+                format!("{sp_pr3:.2}x"),
+                format!("{sp_cold:.1}x"),
+                format!("{:.1}", flat_par.comp_reuses_per_round),
             ]);
+            let modes: Vec<Json> =
+                specs.iter().zip(&results).map(|(s, m)| mode_json(s, m)).collect();
             let doc = Json::from_pairs([
                 ("active_coflows", Json::from(n)),
-                ("p99_speedup_component_vs_cold", speedup.into()),
-                ("cold", mode_json(&results[0])),
-                ("warm", mode_json(&results[1])),
-                ("component", mode_json(&results[2])),
+                ("p50_speedup_flat_parallel_vs_pr3", sp_pr3.into()),
+                (
+                    "p99_speedup_flat_parallel_vs_pr3",
+                    (if flat_par.p99_ms > 0.0 {
+                        pr3.p99_ms / flat_par.p99_ms
+                    } else {
+                        f64::INFINITY
+                    })
+                    .into(),
+                ),
+                ("p99_speedup_component_vs_cold", {
+                    let comp = flat_par;
+                    (if comp.p99_ms > 0.0 { cold.p99_ms / comp.p99_ms } else { f64::INFINITY })
+                        .into()
+                }),
+                ("cold", mode_json(&specs[0], cold)),
+                ("warm", mode_json(&specs[1], &results[1])),
+                ("component", mode_json(&specs[default_idx], flat_par)),
+                ("component_modes", Json::Arr(modes)),
             ]);
             scale_docs.push(doc);
         }
-        tab.print(&format!("{tname}: steady-state round latency by mode"));
+        tab.print(&format!("{tname}: steady-state round p50 latency by solver repr × workers"));
         topo_docs.push(Json::from_pairs([
             ("topology", Json::from(*tname)),
             ("scales", Json::Arr(scale_docs)),
@@ -175,6 +253,7 @@ fn main() {
         ("workload", Json::from("pod-local single-group coflows on adjacent pairs, k=1")),
         ("rounds_timed", rounds.into()),
         ("arrivals_per_round", 1u64.into()),
+        ("available_workers", all.into()),
         ("topologies", Json::Arr(topo_docs)),
     ]);
     let path = "BENCH_component_scaling.json";

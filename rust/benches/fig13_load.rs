@@ -142,6 +142,12 @@ fn round_latency_bench() {
     let doc = Json::from_pairs([
         ("topology", Json::from("swan")),
         ("rounds_timed", rounds.into()),
+        // Both modes run the default flat-CSR solver; this workload keeps
+        // the whole active set edge-connected (k = 15 on SWAN), so rounds
+        // are one component and the workers axis is a no-op here — see
+        // benches/component_scaling.rs for the repr × workers matrix.
+        ("solver_repr", Json::from("flat")),
+        ("workers", terra::engine::default_workers().into()),
         ("scales", Json::Arr(out_scales)),
     ]);
     let path = "BENCH_round_latency.json";

@@ -92,6 +92,29 @@ impl GammaCache {
         self.entries.remove(&id);
     }
 
+    /// Move the entries for `ids` into a standalone shard at the same
+    /// epoch. Coflow ids partition across edge-connected components, so
+    /// handing each parallel component solve its members' shard (and
+    /// [`GammaCache::absorb`]-ing it back) is observationally identical to
+    /// sequential solves against the whole cache: a component's solves only
+    /// ever look up or store its own members' ids.
+    pub fn extract(&mut self, ids: &[CoflowId]) -> GammaCache {
+        let mut shard = GammaCache { epoch: self.epoch, entries: HashMap::new() };
+        for id in ids {
+            if let Some(e) = self.entries.remove(id) {
+                shard.entries.insert(*id, e);
+            }
+        }
+        shard
+    }
+
+    /// Merge a shard (from [`GammaCache::extract`], updated by a component
+    /// solve) back in.
+    pub fn absorb(&mut self, shard: GammaCache) {
+        debug_assert_eq!(shard.epoch, self.epoch, "shard from a different epoch");
+        self.entries.extend(shard.entries);
+    }
+
     /// Drop everything (e.g. the path set changed structurally).
     pub fn clear(&mut self) {
         self.entries.clear();
@@ -278,6 +301,25 @@ mod tests {
         c.invalidate(1);
         assert_eq!(c.lookup(1, 10.0), None);
         assert_eq!(c.lookup(2, 10.0), Some(2.0));
+    }
+
+    #[test]
+    fn extract_and_absorb_roundtrip() {
+        let mut c = GammaCache::new();
+        c.store(1, 10.0, 1.0);
+        c.store(2, 10.0, 2.0);
+        c.store(3, 10.0, 3.0);
+        let mut shard = c.extract(&[1, 3]);
+        assert_eq!(shard.lookup(1, 10.0), Some(1.0));
+        assert_eq!(shard.lookup(3, 10.0), Some(3.0));
+        assert_eq!(c.lookup(1, 10.0), None, "extracted entries leave the main cache");
+        assert_eq!(c.lookup(2, 10.0), Some(2.0));
+        shard.store(4, 8.0, 4.0); // a solve inside the component
+        shard.invalidate(1);
+        c.absorb(shard);
+        assert_eq!(c.lookup(1, 10.0), None);
+        assert_eq!(c.lookup(3, 10.0), Some(3.0));
+        assert_eq!(c.lookup(4, 8.0), Some(4.0));
     }
 
     #[test]

@@ -25,7 +25,14 @@
 //!   a qualifying WAN event on one of *their* edges are re-solved; every
 //!   untouched component's allocation is carried forward from the live
 //!   allocation ([`ComponentCache`]), turning round latency from O(all
-//!   coflows) into O(changed components).
+//!   coflows) into O(changed components),
+//! - **flat solver workspaces & parallel component solves**: the engine
+//!   owns one [`SolverWorkspace`] per worker (flat CSR block caches + GK
+//!   scratch, see [`crate::lp::flat`]), and — because each component solve
+//!   is a pure function of its own subnetwork — runs dirty components
+//!   concurrently on `EngineConfig::workers` threads with a deterministic
+//!   first-member-order merge: allocations are bit-identical for any
+//!   worker count.
 //!
 //! Drivers differ only in how they learn about time and events: the
 //! simulator advances virtual time and feeds completions from its event
@@ -40,12 +47,19 @@ pub use cache::{ComponentCache, GammaCache};
 
 use crate::coflow::CoflowId;
 use crate::lp;
-use crate::lp::decompose;
+use crate::lp::decompose::{self, DecomposeScratch};
+use crate::lp::SolverWorkspace;
 use crate::net::paths::PathSet;
 use crate::net::{LinkEvent, Wan};
 use crate::scheduler::{
     build_instance, Allocation, CoflowState, NetView, Policy, RoundCtx, RoundStats, RoundTrigger,
 };
+
+/// Default worker-thread count for parallel component solves: one per
+/// available core (the solves are CPU-bound and share nothing).
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
 
 /// Engine knobs shared by both drivers.
 #[derive(Clone, Debug)]
@@ -64,6 +78,15 @@ pub struct EngineConfig {
     /// scaling benchmarks and the decomposition-equivalence property test.
     /// Ignored when `cold` is set.
     pub decompose: bool,
+    /// Worker threads for dirty-component solves within a round. Since PR 3
+    /// made GK decomposition-invariant, each component solve is a pure
+    /// function of its own subnetwork, so components solve concurrently and
+    /// merge in deterministic first-member order: any `workers` value
+    /// produces bit-identical allocations, and `1` reproduces the
+    /// sequential path exactly. Defaults to [`default_workers`]. Only
+    /// applies to decomposed rounds with a forkable policy
+    /// ([`crate::scheduler::Policy::fork`]).
+    pub workers: usize,
 }
 
 impl Default for EngineConfig {
@@ -73,6 +96,7 @@ impl Default for EngineConfig {
             check_feasibility: cfg!(debug_assertions),
             cold: false,
             decompose: true,
+            workers: default_workers(),
         }
     }
 }
@@ -124,6 +148,14 @@ pub struct RoundEngine {
     epoch_caps: Vec<f64>,
     /// Validity metadata for per-component allocation reuse.
     comp_cache: ComponentCache,
+    /// Persistent solver workspaces (flat CSR block caches + GK scratch),
+    /// one per worker; `workspaces[0]` serves sequential and monolithic
+    /// rounds. Swept alongside the component cache when coflows depart.
+    workspaces: Vec<SolverWorkspace>,
+    /// Zero-realloc partition state: the per-coflow edge-set buffers and
+    /// the union-find/components scratch, reused every round.
+    item_edges_buf: Vec<Vec<usize>>,
+    decomp: DecomposeScratch,
     /// Engine-level instrumentation (component solve/reuse counters) merged
     /// into the policy's stats by [`RoundEngine::take_stats`].
     engine_stats: RoundStats,
@@ -150,6 +182,8 @@ impl RoundEngine {
         let paths = PathSet::compute(&wan, k);
         let epoch_caps = wan.capacities();
         let comp_cache = ComponentCache::new(wan.num_edges());
+        let workspaces =
+            (0..cfg.workers.max(1)).map(|_| SolverWorkspace::new()).collect();
         RoundEngine {
             wan,
             paths,
@@ -162,6 +196,9 @@ impl RoundEngine {
             warm_valid: false,
             epoch_caps,
             comp_cache,
+            workspaces,
+            item_edges_buf: Vec::new(),
+            decomp: DecomposeScratch::default(),
             engine_stats: RoundStats::default(),
             rounds: 0,
         }
@@ -342,10 +379,21 @@ impl RoundEngine {
             let net = NetView { wan, paths };
             policy.allocate(now, trigger, active, &net)
         } else if !self.cfg.decompose {
-            let RoundEngine { wan, paths, policy, active, alloc, cache, warm_valid, .. } = self;
+            let RoundEngine {
+                wan,
+                paths,
+                policy,
+                active,
+                alloc,
+                cache,
+                warm_valid,
+                workspaces,
+                ..
+            } = self;
             let net = NetView { wan, paths };
             let warm = if *warm_valid && !alloc.rates.is_empty() { Some(&*alloc) } else { None };
-            let ctx = RoundCtx { trigger, epoch: cache.epoch(), cache, warm };
+            let ctx =
+                RoundCtx { trigger, epoch: cache.epoch(), cache, warm, ws: &mut workspaces[0] };
             policy.allocate_with(now, ctx, active, &net)
         } else {
             self.round_decomposed(now, trigger)
@@ -374,35 +422,6 @@ impl RoundEngine {
     /// per-component allocations equals the monolithic allocation (the
     /// `prop_component_decomposition_*` property tests pin this).
     fn round_decomposed(&mut self, now: f64, trigger: RoundTrigger) -> Allocation {
-        // Per-coflow edge sets over unfinished groups' k-truncated paths.
-        // Rebuilt every round: this O(active · k · path-len) scan is
-        // microseconds against the millisecond-scale LP solves it avoids —
-        // the O(changed components) claim is about solver work. If the
-        // scan itself ever shows up at 10⁵+ coflows, maintain the
-        // partition incrementally (union-find survives arrivals cheaply;
-        // departures/structural events need a rebuild or a dynamic-
-        // connectivity structure).
-        let item_edges: Vec<Vec<usize>> = self
-            .active
-            .iter()
-            .map(|cf| {
-                let mut es: Vec<usize> = Vec::new();
-                for (g, &rem) in cf.groups.iter().zip(&cf.remaining) {
-                    if rem <= 1e-9 {
-                        continue;
-                    }
-                    for p in self.paths.get(g.src, g.dst).iter().take(self.k) {
-                        es.extend_from_slice(&p.edges);
-                    }
-                }
-                es.sort_unstable();
-                es.dedup();
-                es
-            })
-            .collect();
-        let comps = decompose::decompose(self.wan.num_edges(), &item_edges);
-
-        let mut new_alloc = Allocation::default();
         self.comp_cache.begin_round();
         let RoundEngine {
             wan,
@@ -414,9 +433,47 @@ impl RoundEngine {
             comp_cache,
             warm_valid,
             engine_stats,
+            workspaces,
+            item_edges_buf,
+            decomp,
+            cfg,
+            k,
             ..
         } = self;
+        // Per-coflow edge sets over unfinished groups' k-truncated paths.
+        // Rebuilt every round into reused buffers (steady state allocates
+        // nothing): this O(active · k · path-len) scan is microseconds
+        // against the millisecond-scale LP solves it avoids — the
+        // O(changed components) claim is about solver work. If the scan
+        // itself ever shows up at 10⁵+ coflows, maintain the partition
+        // incrementally (union-find survives arrivals cheaply;
+        // departures/structural events need a rebuild or a dynamic-
+        // connectivity structure).
+        let n = active.len();
+        while item_edges_buf.len() < n {
+            item_edges_buf.push(Vec::new());
+        }
+        for (cf, es) in active.iter().zip(item_edges_buf.iter_mut()) {
+            es.clear();
+            for (g, &rem) in cf.groups.iter().zip(&cf.remaining) {
+                if rem <= 1e-9 {
+                    continue;
+                }
+                for p in paths.get(g.src, g.dst).iter().take(*k) {
+                    es.extend_from_slice(&p.edges);
+                }
+            }
+            es.sort_unstable();
+            es.dedup();
+        }
+        let comps = decompose::decompose_into(wan.num_edges(), &item_edges_buf[..n], decomp);
+
+        let mut new_alloc = Allocation::default();
         let net = NetView { wan, paths };
+        // Classify components: carry clean ones forward immediately, queue
+        // dirty ones as solve tasks (in first-member order — the merge
+        // order, whatever solves them).
+        let mut tasks: Vec<(usize, Vec<CoflowId>)> = Vec::new();
         for (ci, members) in comps.members.iter().enumerate() {
             let mut ids: Vec<CoflowId> = members.iter().map(|&i| active[i].id).collect();
             ids.sort_unstable();
@@ -434,9 +491,89 @@ impl RoundEngine {
                 }
                 engine_stats.component_reuses += 1;
             } else {
-                let warm =
-                    if *warm_valid && !alloc.rates.is_empty() { Some(&*alloc) } else { None };
-                let ctx = RoundCtx { trigger, epoch: cache.epoch(), cache: &mut *cache, warm };
+                tasks.push((ci, ids));
+            }
+        }
+
+        let warm = if *warm_valid && !alloc.rates.is_empty() { Some(&*alloc) } else { None };
+        let epoch = cache.epoch();
+        // Parallel eligibility: >1 independent solves, >1 configured
+        // workers, and a forkable policy. Each worker drives its own policy
+        // fork and workspace over a disjoint chunk of tasks; every task
+        // carries its members' Γ-cache shard. Solves are pure functions of
+        // their component's subnetwork (GK is decomposition-invariant since
+        // PR 3), so results are merged in task order below and the outcome
+        // is bit-identical to the sequential path for any worker count.
+        let nworkers = cfg.workers.max(1).min(tasks.len());
+        let forks = if nworkers > 1 {
+            (1..nworkers).map(|_| policy.fork()).collect::<Option<Vec<_>>>()
+        } else {
+            None
+        };
+        if let Some(mut forks) = forks {
+            struct PTask {
+                ids: Vec<CoflowId>,
+                subset: Vec<CoflowState>,
+                shard: GammaCache,
+                result: Option<Allocation>,
+            }
+            let mut ptasks: Vec<PTask> = tasks
+                .into_iter()
+                .map(|(ci, ids)| PTask {
+                    subset: comps.members[ci].iter().map(|&i| active[i].clone()).collect(),
+                    shard: cache.extract(&ids),
+                    ids,
+                    result: None,
+                })
+                .collect();
+            let chunk = ptasks.len().div_ceil(nworkers);
+            std::thread::scope(|s| {
+                let mut worker_policies: Vec<&mut dyn Policy> = Vec::with_capacity(nworkers);
+                worker_policies.push(&mut **policy);
+                for f in forks.iter_mut() {
+                    worker_policies.push(&mut **f);
+                }
+                let net = &net;
+                for ((chunk_tasks, pol), ws) in
+                    ptasks.chunks_mut(chunk).zip(worker_policies).zip(workspaces.iter_mut())
+                {
+                    s.spawn(move || {
+                        for t in chunk_tasks {
+                            let ctx = RoundCtx {
+                                trigger,
+                                epoch,
+                                cache: &mut t.shard,
+                                warm,
+                                ws: &mut *ws,
+                            };
+                            t.result = Some(pol.allocate_with(now, ctx, &t.subset, net));
+                        }
+                    });
+                }
+            });
+            // Deterministic merge in component (first-member) order,
+            // regardless of which worker finished when.
+            for t in ptasks {
+                cache.absorb(t.shard);
+                if let Some(part) = t.result {
+                    new_alloc.rates.extend(part.rates);
+                }
+                comp_cache.record_solved(t.ids);
+                engine_stats.component_solves += 1;
+            }
+            for f in &mut forks {
+                engine_stats.merge(&f.take_stats());
+            }
+        } else {
+            for (ci, ids) in tasks {
+                let members = &comps.members[ci];
+                let ctx = RoundCtx {
+                    trigger,
+                    epoch,
+                    cache: &mut *cache,
+                    warm,
+                    ws: &mut workspaces[0],
+                };
                 // The frequent everything-in-one-component case needs no
                 // member clone — the component IS the active table.
                 let part = if members.len() == active.len() {
@@ -610,6 +747,10 @@ impl RoundEngine {
             // the component cache structurally; only the dirty flag needs
             // tidying so it cannot accumulate for dead ids.
             self.comp_cache.forget(*id);
+            // Likewise the workspaces' cached CSR blocks.
+            for ws in &mut self.workspaces {
+                ws.forget(*id);
+            }
         }
         self.active.retain(|c| !c.done());
         finished
@@ -626,11 +767,13 @@ impl RoundEngine {
     }
 
     /// Drain the policy's instrumentation counters, merged with the
-    /// engine's component solve/reuse counters.
+    /// engine's own: component solve/reuse counters plus everything
+    /// accumulated by forked parallel workers (their LP solves, Γ-cache
+    /// hits, and timings land in `engine_stats` when a round merges them —
+    /// only the main policy's counters flow through `policy.take_stats()`).
     pub fn take_stats(&mut self) -> RoundStats {
         let mut stats = self.policy.take_stats();
-        stats.component_solves += self.engine_stats.component_solves;
-        stats.component_reuses += self.engine_stats.component_reuses;
+        stats.merge(&self.engine_stats);
         self.engine_stats = RoundStats::default();
         stats
     }
@@ -890,6 +1033,58 @@ mod tests {
         // to 8.0 and silently clamped this forever.)
         let reaction = e.handle_wan_event(&LinkEvent::SetBandwidth(0, 1, 6.9));
         assert_eq!(reaction, WanReaction::Reoptimize, "accumulated drift lost its baseline");
+    }
+
+    /// Parallel component solves must be bit-identical to sequential ones:
+    /// same WAN, same arrival schedule, engines differing only in
+    /// `workers`, compared allocation-for-allocation after every round.
+    #[test]
+    fn parallel_workers_bit_identical_to_sequential() {
+        let mk = |workers: usize| {
+            let policy = TerraPolicy::new(TerraConfig { alpha: 0.0, ..Default::default() });
+            RoundEngine::new(
+                two_triangles(),
+                Box::new(policy),
+                EngineConfig { check_feasibility: true, workers, ..Default::default() },
+            )
+        };
+        let mut seq = mk(1);
+        let mut par = mk(4);
+        let arrivals = [(1, 0, 1, 5.0), (2, 3, 4, 7.0), (3, 1, 2, 3.0), (4, 4, 5, 9.0)];
+        let mut now = 0.0;
+        for &(id, s, d, gb) in &arrivals {
+            for e in [&mut seq, &mut par] {
+                e.insert(coflow(id, s, d, gb));
+                e.round(now, RoundTrigger::CoflowArrival);
+            }
+            assert_eq!(
+                seq.alloc().rates,
+                par.alloc().rates,
+                "allocations diverged after arrival {id}"
+            );
+            for e in [&mut seq, &mut par] {
+                e.drain(0.05, 0.0);
+            }
+            now += 0.05;
+        }
+        // A qualifying WAN event dirtying both triangles: both components
+        // re-solve, in parallel on one engine, sequentially on the other.
+        for e in [&mut seq, &mut par] {
+            assert_eq!(
+                e.handle_wan_event(&LinkEvent::SetBandwidth(0, 1, 4.0)),
+                WanReaction::Reoptimize
+            );
+            assert_eq!(
+                e.handle_wan_event(&LinkEvent::SetBandwidth(3, 4, 4.0)),
+                WanReaction::Reoptimize
+            );
+            e.round(now, RoundTrigger::WanChange);
+        }
+        assert_eq!(seq.alloc().rates, par.alloc().rates, "post-WAN-event divergence");
+        let (s1, s2) = (seq.take_stats(), par.take_stats());
+        assert_eq!(s1.lp_solves, s2.lp_solves, "solve counts must match");
+        assert_eq!(s1.component_solves, s2.component_solves);
+        assert_eq!(s1.gamma_cache_hits, s2.gamma_cache_hits);
     }
 
     #[test]

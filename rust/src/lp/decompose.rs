@@ -23,7 +23,7 @@ use std::collections::HashMap;
 /// smaller root id as representative, so component roots (and therefore
 /// component enumeration) are a pure function of the input, independent of
 /// union order.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct UnionFind {
     parent: Vec<u32>,
 }
@@ -31,6 +31,12 @@ pub struct UnionFind {
 impl UnionFind {
     pub fn new(n: usize) -> UnionFind {
         UnionFind { parent: (0..n as u32).collect() }
+    }
+
+    /// Reinitialize for `n` singleton sets, reusing the backing buffer.
+    pub fn reset(&mut self, n: usize) {
+        self.parent.clear();
+        self.parent.extend(0..n as u32);
     }
 
     pub fn find(&mut self, mut x: usize) -> usize {
@@ -73,11 +79,47 @@ impl Components {
     }
 }
 
+/// Reusable scratch for [`decompose_into`]: the union-find forest, the
+/// root→component map, and the output [`Components`] are all recycled
+/// across rounds, so a steady-state round (stable or growing component
+/// count) performs no partition allocations — live slots are cleared and
+/// refilled in place. When the component count *shrinks*, the trailing
+/// slots are truncated away (their inner vectors drop; a later growth
+/// round re-allocates those shells) to keep `Components`' public
+/// `members`/`edges` lengths meaningful to consumers.
+#[derive(Clone, Debug, Default)]
+pub struct DecomposeScratch {
+    uf: UnionFind,
+    root_to_comp: HashMap<usize, usize>,
+    out: Components,
+}
+
+impl DecomposeScratch {
+    /// The partition produced by the last [`decompose_into`] call.
+    pub fn components(&self) -> &Components {
+        &self.out
+    }
+}
+
 /// Partition items by edge connectivity. `item_edges[i]` is item `i`'s edge
 /// set (any order, duplicates tolerated); `num_edges` bounds the edge id
 /// space. O(total edges · α) plus the output construction.
 pub fn decompose(num_edges: usize, item_edges: &[Vec<EdgeId>]) -> Components {
-    let mut uf = UnionFind::new(num_edges);
+    let mut scratch = DecomposeScratch::default();
+    decompose_into(num_edges, item_edges, &mut scratch);
+    scratch.out
+}
+
+/// [`decompose`] into reused buffers: the partition lands in
+/// `scratch.components()`. Identical output to [`decompose`] (which is now
+/// a thin wrapper over this).
+pub fn decompose_into<'a>(
+    num_edges: usize,
+    item_edges: &[Vec<EdgeId>],
+    scratch: &'a mut DecomposeScratch,
+) -> &'a Components {
+    let DecomposeScratch { uf, root_to_comp, out } = scratch;
+    uf.reset(num_edges);
     for es in item_edges {
         if let Some((&first, rest)) = es.split_first() {
             for &e in rest {
@@ -85,36 +127,50 @@ pub fn decompose(num_edges: usize, item_edges: &[Vec<EdgeId>]) -> Components {
             }
         }
     }
-    let mut comp_of = vec![0usize; item_edges.len()];
-    let mut members: Vec<Vec<usize>> = Vec::new();
-    let mut edges: Vec<Vec<EdgeId>> = Vec::new();
-    let mut root_to_comp: HashMap<usize, usize> = HashMap::new();
+    root_to_comp.clear();
+    out.comp_of.clear();
+    out.comp_of.resize(item_edges.len(), 0);
+    // Reuse the previous round's inner vectors: `used` counts live
+    // components, slots past it are cleared on (re)allocation.
+    let mut used = 0usize;
+    let mut alloc_slot = |members: &mut Vec<Vec<usize>>, edges: &mut Vec<Vec<EdgeId>>| -> usize {
+        if used < members.len() {
+            members[used].clear();
+            edges[used].clear();
+        } else {
+            members.push(Vec::new());
+            edges.push(Vec::new());
+        }
+        used += 1;
+        used - 1
+    };
     for (i, es) in item_edges.iter().enumerate() {
         let c = match es.first() {
             // Edgeless item: its own singleton component.
-            None => {
-                members.push(Vec::new());
-                edges.push(Vec::new());
-                members.len() - 1
-            }
+            None => alloc_slot(&mut out.members, &mut out.edges),
             Some(&e0) => {
                 let root = uf.find(e0);
-                *root_to_comp.entry(root).or_insert_with(|| {
-                    members.push(Vec::new());
-                    edges.push(Vec::new());
-                    members.len() - 1
-                })
+                match root_to_comp.entry(root) {
+                    std::collections::hash_map::Entry::Occupied(o) => *o.get(),
+                    std::collections::hash_map::Entry::Vacant(v) => {
+                        let c = alloc_slot(&mut out.members, &mut out.edges);
+                        v.insert(c);
+                        c
+                    }
+                }
             }
         };
-        comp_of[i] = c;
-        members[c].push(i);
-        edges[c].extend_from_slice(es);
+        out.comp_of[i] = c;
+        out.members[c].push(i);
+        out.edges[c].extend_from_slice(es);
     }
-    for es in &mut edges {
+    out.members.truncate(used);
+    out.edges.truncate(used);
+    for es in &mut out.edges {
         es.sort_unstable();
         es.dedup();
     }
-    Components { comp_of, members, edges }
+    out
 }
 
 #[cfg(test)]
@@ -165,5 +221,27 @@ mod tests {
     fn duplicates_are_deduped() {
         let c = decompose(3, &[vec![1, 1, 0, 1]]);
         assert_eq!(c.edges[0], vec![0, 1]);
+    }
+
+    /// A reused scratch yields the same partition as a fresh one, including
+    /// when the component count shrinks and grows between calls (stale
+    /// slots must not leak members or edges).
+    #[test]
+    fn scratch_reuse_matches_fresh() {
+        let inputs: Vec<Vec<Vec<EdgeId>>> = vec![
+            vec![vec![0, 1], vec![2], vec![3, 4, 5]],
+            vec![vec![0, 1], vec![1, 2], vec![2, 3], vec![5]],
+            vec![vec![9], vec![1, 2], vec![2], vec![9], vec![]],
+            vec![vec![7]],
+            vec![],
+        ];
+        let mut scratch = DecomposeScratch::default();
+        for item_edges in &inputs {
+            let fresh = decompose(10, item_edges);
+            let reused = decompose_into(10, item_edges, &mut scratch);
+            assert_eq!(reused.comp_of, fresh.comp_of);
+            assert_eq!(reused.members, fresh.members);
+            assert_eq!(reused.edges, fresh.edges);
+        }
     }
 }

@@ -1,0 +1,479 @@
+//! Flat CSR representation of an MCF instance and the persistent solver
+//! workspaces that make scheduling rounds allocation-free.
+//!
+//! [`McfInstance`] is a jagged `Vec<Vec<Vec<EdgeId>>>`: convenient to build,
+//! hostile to the GK inner loop (every path hop chases two pointers) and
+//! rebuilt from scratch on every solve. [`FlatMcf`] stores the same instance
+//! as three CSR arrays over dense local ids:
+//!
+//! - **group → path**: group `k`'s flat path ids are
+//!   `group_off[k]..group_off[k+1]` (paths are numbered group-major),
+//! - **path → edge**: path `p`'s local edge ids are
+//!   `path_edges[path_off[p]..path_off[p+1]]`, in path order,
+//! - **edge → path** incidence (built once per instance): the flat path ids
+//!   crossing local edge `e` are `inc_path[inc_off[e]..inc_off[e+1]]` — the
+//!   reverse index GK's length updates walk.
+//!
+//! The **local edge universe** is the sorted set of global edge ids that
+//! appear on any path; `cap` is dense over it and refreshed per solve via
+//! [`FlatMcf::set_caps`], so re-solving the same structure against new
+//! residual capacities costs one gather, not a nested rebuild. The ascending
+//! local↔global order matters: the GK measure `D(l)` is an order-sensitive
+//! f64 sum over edges, and keeping locals in global-id order makes the flat
+//! solve bit-identical to the jagged reference (`gk::solve_warm_jagged`),
+//! which the `prop_flat_solver` suite pins.
+//!
+//! [`SolverWorkspace`] owns everything a solver thread reuses across rounds:
+//! the GK scratch buffers ([`GkScratch`]), the CSR [`FlatBuilder`] and its
+//! [`EdgeMap`], scratch instances for work-conservation and one-off solves,
+//! and a per-coflow [`CachedCsr`] block cache keyed by WAN-capacity epoch —
+//! building a coflow's instance inside an epoch is a block copy plus a
+//! capacity gather.
+
+use super::McfInstance;
+use crate::coflow::CoflowId;
+use crate::net::topology::EdgeId;
+use std::collections::HashMap;
+
+/// A max-concurrent-flow instance in flat CSR form. See the module docs for
+/// the layout. All id arrays are `u32` (4 G paths/edges is far beyond any
+/// instance this system builds).
+#[derive(Clone, Debug, Default)]
+pub struct FlatMcf {
+    /// Demand volume per group (Gbit); zero-volume groups are inactive.
+    pub vols: Vec<f64>,
+    /// Group → flat path id range; `len = groups + 1`, `group_off[0] = 0`.
+    pub group_off: Vec<u32>,
+    /// Path → local edge range; `len = paths + 1`, `path_off[0] = 0`.
+    pub path_off: Vec<u32>,
+    /// Local edge ids per path, in path (hop) order.
+    pub path_edges: Vec<u32>,
+    /// Owning group per flat path id.
+    pub group_of_path: Vec<u32>,
+    /// Capacity per local edge (refresh via [`FlatMcf::set_caps`]).
+    pub cap: Vec<f64>,
+    /// Local → global edge id, strictly ascending.
+    pub global_edges: Vec<u32>,
+    /// Edge → path incidence offsets; `len = local edges + 1`.
+    pub inc_off: Vec<u32>,
+    /// Flat path ids per local edge (group-major path order within an edge).
+    pub inc_path: Vec<u32>,
+}
+
+impl FlatMcf {
+    pub fn num_groups(&self) -> usize {
+        self.vols.len()
+    }
+
+    pub fn num_paths(&self) -> usize {
+        self.group_of_path.len()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.global_edges.len()
+    }
+
+    /// Flat path id range of group `k`.
+    #[inline]
+    pub fn paths(&self, k: usize) -> std::ops::Range<usize> {
+        self.group_off[k] as usize..self.group_off[k + 1] as usize
+    }
+
+    /// Local edge ids of flat path `p`, in hop order.
+    #[inline]
+    pub fn edges(&self, p: usize) -> &[u32] {
+        &self.path_edges[self.path_off[p] as usize..self.path_off[p + 1] as usize]
+    }
+
+    /// Flat path ids crossing local edge `e`.
+    #[inline]
+    pub fn incident(&self, e: usize) -> &[u32] {
+        &self.inc_path[self.inc_off[e] as usize..self.inc_off[e + 1] as usize]
+    }
+
+    /// Gather this instance's capacities from a global capacity vector.
+    pub fn set_caps(&mut self, caps: &[f64]) {
+        for (c, &g) in self.cap.iter_mut().zip(&self.global_edges) {
+            *c = caps[g as usize];
+        }
+    }
+
+    /// Overwrite the per-group volumes (same group count).
+    pub fn set_vols(&mut self, vols: impl IntoIterator<Item = f64>) {
+        self.vols.clear();
+        self.vols.extend(vols);
+        debug_assert_eq!(self.vols.len() + 1, self.group_off.len());
+    }
+
+    /// Expand a flat per-path rate vector back to jagged per-group rates
+    /// (the [`super::McfSolution`] layout).
+    pub fn rates_to_jagged(&self, flat_rates: &[f64]) -> Vec<Vec<f64>> {
+        (0..self.num_groups()).map(|k| flat_rates[self.paths(k)].to_vec()).collect()
+    }
+
+    /// Subtract a solution's edge usage from a **global** residual capacity
+    /// vector, flooring at zero — the flat counterpart of the jagged
+    /// `edge_usage` + subtract pattern, without allocating a
+    /// global-edge-count vector. Usage accumulates per local edge in the
+    /// same (group, path, hop) order as `McfInstance::edge_usage`, and each
+    /// global entry is updated exactly once, so results are bit-identical
+    /// to the jagged path (edges with zero usage are untouched, which is
+    /// exact because residuals are non-negative).
+    pub fn subtract_usage(
+        &self,
+        rates: &[Vec<f64>],
+        residual: &mut [f64],
+        usage: &mut Vec<f64>,
+    ) {
+        usage.clear();
+        usage.resize(self.num_edges(), 0.0);
+        for (k, rk) in rates.iter().enumerate() {
+            for (i, p) in self.paths(k).enumerate() {
+                let r = rk.get(i).copied().unwrap_or(0.0);
+                for &e in self.edges(p) {
+                    usage[e as usize] += r;
+                }
+            }
+        }
+        for (l, &g) in self.global_edges.iter().enumerate() {
+            let r = &mut residual[g as usize];
+            *r = (*r - usage[l]).max(0.0);
+        }
+    }
+
+    /// Build from a jagged instance (convenience; allocates fresh scratch).
+    pub fn from_instance(inst: &McfInstance) -> FlatMcf {
+        let mut b = FlatBuilder::default();
+        let mut map = EdgeMap::default();
+        let mut out = FlatMcf::default();
+        b.clear();
+        for g in &inst.groups {
+            b.push_group(g.volume, g.paths.iter().map(|p| p.as_slice()));
+        }
+        b.finish_into(&inst.cap, &mut map, &mut out);
+        out
+    }
+}
+
+/// Generation-stamped dense global→local edge map: interning is O(1) and
+/// resetting between builds is O(1) (no clearing of the dense arrays).
+#[derive(Clone, Debug, Default)]
+pub struct EdgeMap {
+    stamp: Vec<u32>,
+    local: Vec<u32>,
+    gen: u32,
+}
+
+impl EdgeMap {
+    fn begin(&mut self, num_global: usize) {
+        if self.stamp.len() < num_global {
+            self.stamp.resize(num_global, 0);
+            self.local.resize(num_global, 0);
+        }
+        self.gen = self.gen.wrapping_add(1);
+        if self.gen == 0 {
+            // Wrapped: stamps from 2^32 builds ago could alias. Reset once.
+            self.stamp.fill(0);
+            self.gen = 1;
+        }
+    }
+}
+
+/// Incremental builder for [`FlatMcf`]: push groups (from jagged path lists
+/// or whole prebuilt CSR blocks), then `finish_into` interning the edge
+/// universe. All buffers are reused across builds.
+#[derive(Clone, Debug, Default)]
+pub struct FlatBuilder {
+    vols: Vec<f64>,
+    group_off: Vec<u32>,
+    path_off: Vec<u32>,
+    /// Global edge ids during the build; localized at `finish_into`.
+    path_edges_global: Vec<u32>,
+    group_of_path: Vec<u32>,
+    /// Incidence fill cursors (scratch for `finish_into`).
+    cursor: Vec<u32>,
+}
+
+impl FlatBuilder {
+    pub fn clear(&mut self) {
+        self.vols.clear();
+        self.group_off.clear();
+        self.group_off.push(0);
+        self.path_off.clear();
+        self.path_off.push(0);
+        self.path_edges_global.clear();
+        self.group_of_path.clear();
+    }
+
+    /// Number of groups pushed so far.
+    pub fn len(&self) -> usize {
+        self.vols.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vols.is_empty()
+    }
+
+    /// Append one group with `vol` and its paths (global edge ids).
+    pub fn push_group<'a>(&mut self, vol: f64, paths: impl IntoIterator<Item = &'a [EdgeId]>) {
+        let k = self.vols.len() as u32;
+        self.vols.push(vol);
+        for path in paths {
+            self.group_of_path.push(k);
+            self.path_edges_global.extend(path.iter().map(|&e| e as u32));
+            self.path_off.push(self.path_edges_global.len() as u32);
+        }
+        self.group_off.push(self.group_of_path.len() as u32);
+    }
+
+    /// Append every group of a prebuilt CSR block with volumes `vols`
+    /// (block concatenation: local ids are re-expanded to global and
+    /// re-interned at `finish_into`).
+    pub fn push_block(&mut self, block: &FlatMcf, vols: &[f64]) {
+        debug_assert_eq!(vols.len(), block.num_groups());
+        for (k, &vol) in vols.iter().enumerate() {
+            let kk = self.vols.len() as u32;
+            self.vols.push(vol);
+            for p in block.paths(k) {
+                self.group_of_path.push(kk);
+                self.path_edges_global
+                    .extend(block.edges(p).iter().map(|&le| block.global_edges[le as usize]));
+                self.path_off.push(self.path_edges_global.len() as u32);
+            }
+            self.group_off.push(self.group_of_path.len() as u32);
+        }
+    }
+
+    /// Intern the edge universe (ascending global order), gather capacities
+    /// from `caps`, build the edge→path incidence, and write the finished
+    /// instance into `out` (buffers reused).
+    pub fn finish_into(&mut self, caps: &[f64], map: &mut EdgeMap, out: &mut FlatMcf) {
+        map.begin(caps.len());
+        // Unique global edges, then sort ascending and assign local ids.
+        out.global_edges.clear();
+        for &g in &self.path_edges_global {
+            let gi = g as usize;
+            if map.stamp[gi] != map.gen {
+                map.stamp[gi] = map.gen;
+                out.global_edges.push(g);
+            }
+        }
+        out.global_edges.sort_unstable();
+        for (l, &g) in out.global_edges.iter().enumerate() {
+            map.local[g as usize] = l as u32;
+        }
+        // Localize the path→edge array.
+        out.path_edges.clear();
+        out.path_edges.extend(self.path_edges_global.iter().map(|&g| map.local[g as usize]));
+        // Copy the structural arrays.
+        out.vols.clone_from(&self.vols);
+        out.group_off.clone_from(&self.group_off);
+        out.path_off.clone_from(&self.path_off);
+        out.group_of_path.clone_from(&self.group_of_path);
+        // Capacities.
+        let ne = out.global_edges.len();
+        out.cap.clear();
+        out.cap.extend(out.global_edges.iter().map(|&g| caps[g as usize]));
+        // Edge→path incidence: count, prefix-sum, fill (path order within
+        // each edge, so CSR fill is deterministic).
+        out.inc_off.clear();
+        out.inc_off.resize(ne + 1, 0);
+        for &le in &out.path_edges {
+            out.inc_off[le as usize + 1] += 1;
+        }
+        for e in 0..ne {
+            out.inc_off[e + 1] += out.inc_off[e];
+        }
+        self.cursor.clear();
+        self.cursor.extend_from_slice(&out.inc_off[..ne]);
+        out.inc_path.clear();
+        out.inc_path.resize(out.path_edges.len(), 0);
+        for p in 0..out.group_of_path.len() {
+            for &le in
+                &out.path_edges[out.path_off[p] as usize..out.path_off[p + 1] as usize]
+            {
+                let c = &mut self.cursor[le as usize];
+                out.inc_path[*c as usize] = p as u32;
+                *c += 1;
+            }
+        }
+    }
+}
+
+/// Reusable scratch buffers for the flat GK solve ([`super::gk`]): every
+/// per-solve array is `clear()`+refilled here, so a warm workspace performs
+/// no heap allocation in the solver inner loops.
+#[derive(Clone, Debug, Default)]
+pub struct GkScratch {
+    /// Per flat path: usable under the current capacities (active groups
+    /// only; paths of inactive groups stay `false`).
+    pub usable: Vec<bool>,
+    /// Per local edge: lies on some usable path of an active group.
+    pub relevant: Vec<bool>,
+    /// Exponential edge lengths, per local edge.
+    pub len: Vec<f64>,
+    /// Cached path lengths, per flat path.
+    pub plen: Vec<f64>,
+    /// Accumulated (infeasible) flow, per flat path.
+    pub x: Vec<f64>,
+    /// Warm-start candidate rates, per flat path.
+    pub xw: Vec<f64>,
+    /// Edge usage scratch, per local edge.
+    pub usage: Vec<f64>,
+    /// Active (positive-volume) group ids.
+    pub active: Vec<u32>,
+    /// Normalized working volumes, per group.
+    pub vols: Vec<f64>,
+}
+
+/// One coflow's cached CSR block: its unfinished FlowGroups' k-truncated
+/// path structure, valid for one WAN-capacity epoch (paths can only change
+/// across epoch bumps) and one unfinished-group shape.
+#[derive(Clone, Debug, Default)]
+pub struct CachedCsr {
+    /// WAN-capacity epoch the block was built under.
+    pub epoch: u64,
+    /// Instance-group index → coflow group index (the unfinished groups at
+    /// build time; doubles as the shape fingerprint).
+    pub index: Vec<usize>,
+    pub flat: FlatMcf,
+}
+
+/// Everything one solver thread reuses across rounds. Owned by the
+/// [`crate::engine::RoundEngine`] (one per worker) and handed to policies
+/// via [`crate::scheduler::RoundCtx`]; swept alongside the component cache
+/// when coflows depart ([`SolverWorkspace::forget`]).
+#[derive(Debug, Default)]
+pub struct SolverWorkspace {
+    /// GK scratch buffers.
+    pub gk: GkScratch,
+    /// CSR builder + its edge interner.
+    pub builder: FlatBuilder,
+    pub edge_map: EdgeMap,
+    /// Per-coflow CSR block cache.
+    pub csr: HashMap<CoflowId, CachedCsr>,
+    /// Scratch instance for work-conservation max-min solves, and the
+    /// builder that concatenates coflow CSR blocks into it (separate from
+    /// `builder`, which may be rebuilding a block mid-concatenation).
+    pub wc: FlatMcf,
+    pub wc_builder: FlatBuilder,
+}
+
+impl SolverWorkspace {
+    pub fn new() -> SolverWorkspace {
+        SolverWorkspace::default()
+    }
+
+    /// Drop a departed coflow's CSR block. (Epoch-stale blocks need no
+    /// sweep: they are rebuilt in place on next use — the freshness check
+    /// compares the stored epoch — so the map is bounded by the departure
+    /// sweep alone.)
+    pub fn forget(&mut self, id: CoflowId) {
+        self.csr.remove(&id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lp::GroupDemand;
+
+    fn demo_inst() -> McfInstance {
+        McfInstance {
+            cap: vec![10.0, 20.0, 30.0, 40.0, 50.0, 60.0],
+            groups: vec![
+                GroupDemand { volume: 40.0, paths: vec![vec![0], vec![4, 3]] },
+                GroupDemand { volume: 8.0, paths: vec![vec![3]] },
+                GroupDemand { volume: 0.0, paths: vec![] },
+            ],
+        }
+    }
+
+    #[test]
+    fn from_instance_layout() {
+        let f = FlatMcf::from_instance(&demo_inst());
+        assert_eq!(f.num_groups(), 3);
+        assert_eq!(f.num_paths(), 3);
+        // Edge universe = {0, 3, 4} ascending.
+        assert_eq!(f.global_edges, vec![0, 3, 4]);
+        assert_eq!(f.cap, vec![10.0, 40.0, 50.0]);
+        assert_eq!(f.paths(0), 0..2);
+        assert_eq!(f.paths(1), 2..3);
+        assert_eq!(f.paths(2), 3..3);
+        // Path 1 = global [4, 3] = local [2, 1], in hop order.
+        assert_eq!(f.edges(1), &[2, 1]);
+        assert_eq!(f.edges(2), &[1]);
+        assert_eq!(f.group_of_path, vec![0, 0, 1]);
+        // Incidence: local edge 1 (global 3) is crossed by paths 1 and 2.
+        assert_eq!(f.incident(1), &[1, 2]);
+        assert_eq!(f.incident(0), &[0]);
+        assert_eq!(f.incident(2), &[1]);
+    }
+
+    #[test]
+    fn set_caps_gathers() {
+        let mut f = FlatMcf::from_instance(&demo_inst());
+        let caps: Vec<f64> = (0..6).map(|e| 100.0 + e as f64).collect();
+        f.set_caps(&caps);
+        assert_eq!(f.cap, vec![100.0, 103.0, 104.0]);
+    }
+
+    #[test]
+    fn block_concat_equals_direct_build() {
+        let inst = demo_inst();
+        let whole = FlatMcf::from_instance(&inst);
+        // Build each group as its own block, then concatenate.
+        let blocks: Vec<FlatMcf> = inst
+            .groups
+            .iter()
+            .map(|g| {
+                FlatMcf::from_instance(&McfInstance {
+                    cap: inst.cap.clone(),
+                    groups: vec![g.clone()],
+                })
+            })
+            .collect();
+        let mut b = FlatBuilder::default();
+        let mut map = EdgeMap::default();
+        let mut out = FlatMcf::default();
+        b.clear();
+        for (blk, g) in blocks.iter().zip(&inst.groups) {
+            b.push_block(blk, &[g.volume]);
+        }
+        b.finish_into(&inst.cap, &mut map, &mut out);
+        assert_eq!(out.vols, whole.vols);
+        assert_eq!(out.group_off, whole.group_off);
+        assert_eq!(out.path_off, whole.path_off);
+        assert_eq!(out.path_edges, whole.path_edges);
+        assert_eq!(out.global_edges, whole.global_edges);
+        assert_eq!(out.cap, whole.cap);
+        assert_eq!(out.inc_off, whole.inc_off);
+        assert_eq!(out.inc_path, whole.inc_path);
+    }
+
+    #[test]
+    fn builder_reuse_is_clean() {
+        let mut b = FlatBuilder::default();
+        let mut map = EdgeMap::default();
+        let mut out = FlatMcf::default();
+        let inst = demo_inst();
+        for _ in 0..3 {
+            b.clear();
+            for g in &inst.groups {
+                b.push_group(g.volume, g.paths.iter().map(|p| p.as_slice()));
+            }
+            b.finish_into(&inst.cap, &mut map, &mut out);
+            let fresh = FlatMcf::from_instance(&inst);
+            assert_eq!(out.path_edges, fresh.path_edges);
+            assert_eq!(out.inc_path, fresh.inc_path);
+            assert_eq!(out.global_edges, fresh.global_edges);
+        }
+    }
+
+    #[test]
+    fn rates_roundtrip() {
+        let f = FlatMcf::from_instance(&demo_inst());
+        let jag = f.rates_to_jagged(&[1.0, 2.0, 3.0]);
+        assert_eq!(jag, vec![vec![1.0, 2.0], vec![3.0], vec![]]);
+    }
+}

@@ -14,7 +14,23 @@
 //! slack: usage is rescaled onto capacities, λ is set to the worst group's
 //! progress, and every group is trimmed to exactly `λ·v_k` so all groups
 //! finish together (the Optimization (1) equal-progress constraints).
+//!
+//! Two implementations of the identical algorithm live here:
+//!
+//! - [`solve_flat`] — the production core. It iterates a [`FlatMcf`]'s CSR
+//!   arrays with all scratch in a reusable [`GkScratch`]: no per-iteration
+//!   heap traffic, and no per-solve allocation once the workspace is warm
+//!   (beyond the output rate matrix). [`solve`]/[`solve_warm`] wrap it for
+//!   jagged [`McfInstance`] callers.
+//! - [`solve_warm_jagged`] — the original jagged-`Vec` implementation, kept
+//!   as the bit-for-bit reference: the `prop_flat_solver` property suite
+//!   asserts `solve_flat` returns the *identical* λ and rates (f64-exact)
+//!   on random instances, and the scaling bench exposes it as the
+//!   `solver_repr = jagged` axis. Every floating-point operation in the
+//!   flat core happens in the same order as here — local edge ids ascend in
+//!   global-id order precisely so the order-sensitive `D(l)` sums match.
 
+use super::flat::{FlatMcf, GkScratch};
 use super::{McfInstance, McfSolution};
 
 /// Default ε; gives λ within a few percent of optimal (validated against the
@@ -26,9 +42,43 @@ pub const DEFAULT_EPSILON: f64 = 0.05;
 /// 1e-10 Gbps must not pass the usability filter — routing a demand across
 /// it produces pathological demand normalization (λ scaled by the degenerate
 /// bottleneck) and exponential length updates, while contributing nothing to
-/// real throughput. Applied consistently by `solve_warm` (path usability and
-/// warm-rate sanitization), `quick_lambda`, and `finalize`.
+/// real throughput. Applied consistently by the flat core and the jagged
+/// reference (path usability and warm-rate sanitization), `quick_lambda`,
+/// and `finalize`.
 pub const MIN_CAP: f64 = 1e-6;
+
+/// Warm-start source for [`solve_flat`]: the previous round's rates, either
+/// already instance-group-indexed, or full-group-indexed with an
+/// instance→full index map (the policy's layout — referenced in place, so
+/// warm-starting copies no rate vectors).
+#[derive(Clone, Copy, Debug, Default)]
+pub enum Warm<'a> {
+    #[default]
+    None,
+    /// `rates[k]` is instance group `k`'s previous path rates.
+    Direct(&'a [Vec<f64>]),
+    /// `(rates, index)`: instance group `k`'s rates are `rates[index[k]]`.
+    Indexed(&'a [Vec<f64>], &'a [usize]),
+}
+
+impl<'a> Warm<'a> {
+    #[inline]
+    fn get(&self, k: usize) -> &'a [f64] {
+        match self {
+            Warm::None => &[],
+            Warm::Direct(w) => w.get(k).map(|v| v.as_slice()).unwrap_or(&[]),
+            Warm::Indexed(w, idx) => idx
+                .get(k)
+                .and_then(|&gi| w.get(gi))
+                .map(|v| v.as_slice())
+                .unwrap_or(&[]),
+        }
+    }
+
+    fn is_none(&self) -> bool {
+        matches!(self, Warm::None)
+    }
+}
 
 /// Solve max concurrent flow. Returns `None` if some active group has no
 /// path with positive capacity.
@@ -43,7 +93,371 @@ pub fn solve(inst: &McfInstance, eps: f64) -> Option<McfSolution> {
 /// duality-gap early exit — so a near-optimal warm start ends the phase
 /// loop almost immediately — and (b) competes with the accumulated flow at
 /// the end, so the result is never worse than a cold solve.
+///
+/// Convenience wrapper over [`solve_flat`] (flattens the instance and uses
+/// one-shot scratch); hot paths hold a [`crate::lp::flat::SolverWorkspace`]
+/// and call the flat core directly.
 pub fn solve_warm(
+    inst: &McfInstance,
+    eps: f64,
+    warm: Option<&[Vec<f64>]>,
+) -> Option<McfSolution> {
+    let flat = FlatMcf::from_instance(inst);
+    let mut ws = GkScratch::default();
+    let warm = match warm {
+        Some(w) => Warm::Direct(w),
+        None => Warm::None,
+    };
+    solve_flat(&flat, eps, warm, &mut ws)
+}
+
+/// The flat GK core: identical algorithm to [`solve_warm_jagged`], iterating
+/// the instance's CSR arrays with all scratch in `ws`. Bit-identical output
+/// to the jagged reference (pinned by `tests/prop_flat_solver.rs`).
+pub fn solve_flat(
+    flat: &FlatMcf,
+    eps: f64,
+    warm: Warm<'_>,
+    ws: &mut GkScratch,
+) -> Option<McfSolution> {
+    let ng = flat.num_groups();
+    let np = flat.num_paths();
+    let ne = flat.num_edges();
+
+    ws.active.clear();
+    ws.active.extend((0..ng).filter(|&k| flat.vols[k] > 0.0).map(|k| k as u32));
+    if ws.active.is_empty() {
+        return None;
+    }
+
+    // Per-group usable paths (bottleneck above the degeneracy floor);
+    // paths of inactive groups stay unusable.
+    ws.usable.clear();
+    ws.usable.resize(np, false);
+    for &k in &ws.active {
+        let mut any = false;
+        for p in flat.paths(k as usize) {
+            let es = flat.edges(p);
+            if !es.is_empty() && es.iter().all(|&e| flat.cap[e as usize] > MIN_CAP) {
+                ws.usable[p] = true;
+                any = true;
+            }
+        }
+        if !any {
+            return None;
+        }
+    }
+
+    // Demand normalization: GK's phase count scales with the optimal λ, so
+    // solve with volumes scaled such that λ' = O(1): scale by
+    // s = min_k (best path bottleneck / v_k), an upper bound on the rate
+    // each group could get alone on one path. Rates are invariant; the
+    // returned λ is rescaled by s at the end.
+    let mut s = f64::INFINITY;
+    for &k in &ws.active {
+        let k = k as usize;
+        let mut best_bneck = 0.0f64;
+        for p in flat.paths(k) {
+            if !ws.usable[p] {
+                continue;
+            }
+            let bneck =
+                flat.edges(p).iter().map(|&e| flat.cap[e as usize]).fold(f64::INFINITY, f64::min);
+            best_bneck = best_bneck.max(bneck);
+        }
+        s = s.min(best_bneck / flat.vols[k]);
+    }
+    if !(s.is_finite() && s > 0.0) {
+        return None;
+    }
+    ws.vols.clear();
+    ws.vols.extend(flat.vols.iter().map(|&v| v * s));
+
+    // Warm candidate: previous-round rates copied (not cloned per group)
+    // into the flat buffer, sanitized (unusable paths and negative rates
+    // zeroed), and rescaled onto the current capacities. `finalize_flat`
+    // yields `None` when any active group lacks warm flow (e.g. a newly
+    // arrived coflow), in which case the warm start is simply unused.
+    let mut warm_lambda = 0.0f64;
+    let mut have_warm_sol = false;
+    if !warm.is_none() {
+        ws.xw.clear();
+        ws.xw.resize(np, 0.0);
+        for k in 0..ng {
+            let src = warm.get(k);
+            for (i, p) in flat.paths(k).enumerate() {
+                let r = src.get(i).copied().unwrap_or(0.0);
+                let es = flat.edges(p);
+                ws.xw[p] = if es.is_empty()
+                    || es.iter().any(|&e| flat.cap[e as usize] <= MIN_CAP)
+                    || r < 0.0
+                {
+                    0.0
+                } else {
+                    r
+                };
+            }
+        }
+        if let Some(l) = finalize_flat(flat, &ws.vols, &mut ws.xw, &mut ws.usage) {
+            warm_lambda = l;
+            have_warm_sol = true;
+        }
+    }
+
+    // Edges that actually constrain this instance: those on some usable
+    // path. Lengths, Fleischer's m, and the measure D(l) are restricted to
+    // them, so the solve is a pure function of the instance's own
+    // subnetwork — capacities of unrelated edges (e.g. other components'
+    // residuals) cannot perturb δ or the termination test. This is what
+    // makes the per-component decomposition of a round exactly equivalent
+    // to the monolithic solve (see `lp::decompose`).
+    ws.relevant.clear();
+    ws.relevant.resize(ne, false);
+    for &k in &ws.active {
+        for p in flat.paths(k as usize) {
+            if ws.usable[p] {
+                for &e in flat.edges(p) {
+                    ws.relevant[e as usize] = true;
+                }
+            }
+        }
+    }
+
+    // Fleischer's δ with m = number of relevant capacitated edges:
+    // guarantees the initial D(l) = m·δ < 1 so at least ~1/ε phases run.
+    let m = ws.relevant.iter().filter(|&&r| r).count().max(1) as f64;
+    let delta = (1.0 + eps) * ((1.0 + eps) * m).powf(-1.0 / eps);
+    ws.len.clear();
+    ws.len.extend(
+        flat.cap
+            .iter()
+            .zip(&ws.relevant)
+            .map(|(&c, &r)| if r { delta / c } else { f64::INFINITY }),
+    );
+    ws.x.clear();
+    ws.x.resize(np, 0.0);
+
+    // Cached path lengths; the prebuilt edge→path incidence CSR plays the
+    // jagged reference's `edge_paths` role, so a length update touches only
+    // the affected paths. (The incidence covers *all* paths, including
+    // unusable ones — their cached lengths absorb updates but are never
+    // read, so results are unaffected.)
+    ws.plen.clear();
+    ws.plen.extend(
+        (0..np).map(|p| flat.edges(p).iter().map(|&e| ws.len[e as usize]).sum::<f64>()),
+    );
+
+    // D(l) = sum over relevant edges of l_e c_e, starting at m·δ. Local
+    // edges ascend in global-id order, so this sum accumulates in exactly
+    // the jagged reference's order (f64 addition is order-sensitive).
+    let mut d: f64 = ws
+        .len
+        .iter()
+        .zip(&flat.cap)
+        .zip(&ws.relevant)
+        .filter(|(_, &r)| r)
+        .map(|((&l, &c), _)| l * c)
+        .sum();
+
+    let mut phases = 0usize;
+    let max_phases = (((1.0 + eps) / delta).ln() / (1.0 + eps).ln()).ceil() as usize + 2;
+    // Early termination via GK duality: for any length function l,
+    // OPT <= D(l) / α(l) with α(l) = Σ_k d_k · dist_k(l). The theory runs
+    // until D(l) >= 1, but the feasible λ extracted by `finalize` typically
+    // reaches (1-ε)·OPT orders of magnitude sooner; checking the primal
+    // against the dual bound lets us stop exactly when it does.
+    while d < 1.0 && phases < max_phases {
+        phases += 1;
+        for &k in &ws.active {
+            let k = k as usize;
+            let mut remaining = ws.vols[k];
+            while remaining > 1e-12 && d < 1.0 {
+                // Shortest usable path under current (cached) lengths.
+                let mut best_p = usize::MAX;
+                let mut best_l = f64::INFINITY;
+                for p in flat.paths(k) {
+                    if !ws.usable[p] {
+                        continue;
+                    }
+                    if best_p == usize::MAX || ws.plen[p] < best_l {
+                        best_l = ws.plen[p];
+                        best_p = p;
+                    }
+                }
+                let es = flat.edges(best_p);
+                let bottleneck =
+                    es.iter().map(|&e| flat.cap[e as usize]).fold(f64::INFINITY, f64::min);
+                let f = remaining.min(bottleneck);
+                ws.x[best_p] += f;
+                remaining -= f;
+                for &e in es {
+                    let e = e as usize;
+                    let c = flat.cap[e];
+                    let old = ws.len[e];
+                    let new = old * (1.0 + eps * f / c);
+                    ws.len[e] = new;
+                    d += (new - old) * c;
+                    let dl = new - old;
+                    for &pp in flat.incident(e) {
+                        ws.plen[pp as usize] += dl;
+                    }
+                }
+            }
+        }
+        // Duality-gap check *after* this phase's length updates (the bound
+        // is meaningless before any routing). With a warm candidate, check
+        // already at the end of phase 1: one phase usually tightens the
+        // dual enough to certify a near-optimal previous-round solution.
+        if phases % 8 == 0 || (phases == 1 && warm_lambda > 0.0) {
+            let lam = quick_lambda_flat(flat, &ws.vols, &ws.x, &mut ws.usage).max(warm_lambda);
+            let alpha: f64 = ws
+                .active
+                .iter()
+                .map(|&k| {
+                    let k = k as usize;
+                    let mut dist = f64::INFINITY;
+                    for p in flat.paths(k) {
+                        if ws.usable[p] {
+                            dist = dist.min(ws.plen[p]);
+                        }
+                    }
+                    ws.vols[k] * dist
+                })
+                .sum();
+            if alpha > 0.0 && lam >= (d / alpha) * (1.0 - 0.75 * eps) {
+                break;
+            }
+        }
+    }
+
+    // Return the better of the accumulated flow and the warm candidate —
+    // both are exactly-feasible equal-progress allocations.
+    let acc_lambda = finalize_flat(flat, &ws.vols, &mut ws.x, &mut ws.usage);
+    let (lambda_scaled, rates_buf): (f64, &Vec<f64>) = match (acc_lambda, have_warm_sol) {
+        (Some(a), true) => {
+            if warm_lambda > a {
+                (warm_lambda, &ws.xw)
+            } else {
+                (a, &ws.x)
+            }
+        }
+        (Some(a), false) => (a, &ws.x),
+        (None, true) => (warm_lambda, &ws.xw),
+        (None, false) => return None,
+    };
+    // Undo the demand normalization: rates already satisfy
+    // Σ_p rate = λ_scaled · (s·v_k), so the real progress rate is λ_scaled·s.
+    let lambda = lambda_scaled * s;
+    let rates = flat.rates_to_jagged(rates_buf);
+    #[cfg(debug_assertions)]
+    {
+        // Feasibility self-check mirroring `McfInstance::check`, on the
+        // local edge universe (debug builds only — never the release hot
+        // path).
+        let mut usage = vec![0.0; ne];
+        for (p, &r) in rates_buf.iter().enumerate() {
+            for &e in flat.edges(p) {
+                usage[e as usize] += r;
+            }
+        }
+        for (e, (&u, &c)) in usage.iter().zip(&flat.cap).enumerate() {
+            debug_assert!(
+                u <= c + 1e-6 * (1.0 + c),
+                "flat GK oversubscribed local edge {e}: {u} > {c}"
+            );
+        }
+    }
+    Some(McfSolution { lambda, rates })
+}
+
+/// Feasible λ extractable from raw accumulated flow `x` (the same
+/// computation `finalize_flat` performs, without trimming the rates).
+/// Degenerate capacities (≤ [`MIN_CAP`]) count as zero: any usage on them
+/// collapses θ — consistent with the usability filter treating them as down.
+fn quick_lambda_flat(flat: &FlatMcf, vols: &[f64], x: &[f64], usage: &mut Vec<f64>) -> f64 {
+    fill_usage(flat, x, usage);
+    let mut theta = f64::INFINITY;
+    for (&u, &c) in usage.iter().zip(&flat.cap) {
+        if u > 1e-12 {
+            theta = theta.min(if c > MIN_CAP { c / u } else { 0.0 });
+        }
+    }
+    if !theta.is_finite() {
+        return 0.0;
+    }
+    let mut lambda = f64::INFINITY;
+    for (k, &v) in vols.iter().enumerate() {
+        if v > 0.0 {
+            let routed: f64 = x[flat.paths(k)].iter().sum();
+            lambda = lambda.min(theta * routed / v);
+        }
+    }
+    if lambda.is_finite() {
+        lambda
+    } else {
+        0.0
+    }
+}
+
+/// Rescale raw (possibly capacity-violating) flat path volumes `x` in place
+/// into a feasible equal-progress rate allocation (in terms of the working
+/// volumes `vols`), returning its λ. Degenerate capacities (≤ [`MIN_CAP`])
+/// count as zero, mirroring the usability filter: flow routed over such an
+/// edge makes the candidate infeasible rather than near-infinitely slow.
+fn finalize_flat(flat: &FlatMcf, vols: &[f64], x: &mut [f64], usage: &mut Vec<f64>) -> Option<f64> {
+    fill_usage(flat, x, usage);
+    let mut theta = f64::INFINITY;
+    for (&u, &c) in usage.iter().zip(&flat.cap) {
+        if u > 1e-12 {
+            theta = theta.min(if c > MIN_CAP { c / u } else { 0.0 });
+        }
+    }
+    if !(theta.is_finite() && theta > 0.0) {
+        return None;
+    }
+    // λ = worst group progress after scaling.
+    let mut lambda = f64::INFINITY;
+    for (k, &v) in vols.iter().enumerate() {
+        if v > 0.0 {
+            let routed: f64 = x[flat.paths(k)].iter().sum();
+            lambda = lambda.min(theta * routed / v);
+        }
+    }
+    if !(lambda.is_finite() && lambda > 0.0) {
+        return None;
+    }
+    // Trim every group to exactly λ·v_k.
+    for (k, &v) in vols.iter().enumerate() {
+        let pr = flat.paths(k);
+        let routed: f64 = x[pr.clone()].iter().sum();
+        // factor ≤ theta by construction of λ, so capacities hold.
+        let factor = if v > 0.0 && routed > 0.0 { lambda * v / routed } else { 0.0 };
+        for r in &mut x[pr] {
+            *r *= factor;
+        }
+    }
+    Some(lambda)
+}
+
+/// Per-local-edge usage of a flat path rate vector (the flat counterpart of
+/// `McfInstance::edge_usage` — fills a reused buffer instead of allocating a
+/// global-edge-count `Vec` per call).
+#[inline]
+fn fill_usage(flat: &FlatMcf, x: &[f64], usage: &mut Vec<f64>) {
+    usage.clear();
+    usage.resize(flat.num_edges(), 0.0);
+    for (p, &r) in x.iter().enumerate() {
+        for &e in flat.edges(p) {
+            usage[e as usize] += r;
+        }
+    }
+}
+
+/// The original jagged-`Vec` GK implementation, kept as the bit-for-bit
+/// reference for [`solve_flat`] (property-tested equal) and as the
+/// `solver_repr = jagged` axis of the scaling benches. Semantics are
+/// documented on [`solve_warm`].
+pub fn solve_warm_jagged(
     inst: &McfInstance,
     eps: f64,
     warm: Option<&[Vec<f64>]>,
@@ -67,11 +481,7 @@ pub fn solve_warm(
         }
     }
 
-    // Demand normalization: GK's phase count scales with the optimal λ, so
-    // solve with volumes scaled such that λ' = O(1): scale by
-    // s = min_k (best path bottleneck / v_k), an upper bound on the rate
-    // each group could get alone on one path. Rates are invariant; the
-    // returned λ is rescaled by s at the end.
+    // Demand normalization (see solve_flat).
     let mut s = f64::INFINITY;
     for &k in &active {
         let g = &inst.groups[k];
@@ -86,21 +496,23 @@ pub fn solve_warm(
     }
     let vols: Vec<f64> = inst.groups.iter().map(|g| g.volume * s).collect();
 
-    // Warm candidate: previous-round rates reshaped to this instance and
-    // rescaled onto the current capacities. `finalize` yields `None` when
-    // any active group lacks warm flow (e.g. a newly arrived coflow), in
-    // which case the warm start is simply unused.
+    // Warm candidate, copied (not cloned-then-resized) into place.
     let warm_sol: Option<McfSolution> = warm.and_then(|w| {
         let mut xw: Vec<Vec<f64>> = Vec::with_capacity(inst.groups.len());
         for (k, g) in inst.groups.iter().enumerate() {
-            let mut v: Vec<f64> = w.get(k).cloned().unwrap_or_default();
-            v.truncate(g.paths.len());
-            v.resize(g.paths.len(), 0.0);
+            let src = w.get(k).map(|v| v.as_slice()).unwrap_or(&[]);
+            let mut v = vec![0.0; g.paths.len()];
             for (p, r) in v.iter_mut().enumerate() {
                 let path = &g.paths[p];
-                if path.is_empty() || path.iter().any(|&e| inst.cap[e] <= MIN_CAP) || *r < 0.0 {
-                    *r = 0.0;
-                }
+                let warm_r = src.get(p).copied().unwrap_or(0.0);
+                *r = if path.is_empty()
+                    || path.iter().any(|&e| inst.cap[e] <= MIN_CAP)
+                    || warm_r < 0.0
+                {
+                    0.0
+                } else {
+                    warm_r
+                };
             }
             xw.push(v);
         }
@@ -108,13 +520,7 @@ pub fn solve_warm(
     });
     let warm_lambda = warm_sol.as_ref().map(|sol| sol.lambda).unwrap_or(0.0);
 
-    // Edges that actually constrain this instance: those on some usable
-    // path. Lengths, Fleischer's m, and the measure D(l) are restricted to
-    // them, so the solve is a pure function of the instance's own
-    // subnetwork — capacities of unrelated edges (e.g. other components'
-    // residuals) cannot perturb δ or the termination test. This is what
-    // makes the per-component decomposition of a round exactly equivalent
-    // to the monolithic solve (see `lp::decompose`).
+    // Relevant edges, δ, lengths (see solve_flat).
     let mut relevant = vec![false; inst.cap.len()];
     for &k in &active {
         for &p in &usable[k] {
@@ -123,9 +529,6 @@ pub fn solve_warm(
             }
         }
     }
-
-    // Fleischer's δ with m = number of relevant capacitated edges:
-    // guarantees the initial D(l) = m·δ < 1 so at least ~1/ε phases run.
     let m = relevant.iter().filter(|&&r| r).count().max(1) as f64;
     let delta = (1.0 + eps) * ((1.0 + eps) * m).powf(-1.0 / eps);
     let mut len: Vec<f64> = inst
@@ -136,9 +539,7 @@ pub fn solve_warm(
         .collect();
     let mut x: Vec<Vec<f64>> = inst.groups.iter().map(|g| vec![0.0; g.paths.len()]).collect();
 
-    // Cached path lengths + reverse index edge -> (group, path), so a length
-    // update touches only the affected paths instead of recomputing every
-    // argmin from scratch (the scheduling-round hot spot, §6.6).
+    // Cached path lengths + reverse index edge -> (group, path).
     let mut plen: Vec<Vec<f64>> = inst
         .groups
         .iter()
@@ -164,17 +565,11 @@ pub fn solve_warm(
 
     let mut phases = 0usize;
     let max_phases = (((1.0 + eps) / delta).ln() / (1.0 + eps).ln()).ceil() as usize + 2;
-    // Early termination via GK duality: for any length function l,
-    // OPT <= D(l) / α(l) with α(l) = Σ_k d_k · dist_k(l). The theory runs
-    // until D(l) >= 1, but the feasible λ extracted by `finalize` typically
-    // reaches (1-ε)·OPT orders of magnitude sooner; checking the primal
-    // against the dual bound lets us stop exactly when it does.
     while d < 1.0 && phases < max_phases {
         phases += 1;
         for &k in &active {
             let mut remaining = vols[k];
             while remaining > 1e-12 && d < 1.0 {
-                // Shortest usable path under current (cached) lengths.
                 let g = &inst.groups[k];
                 let mut best_p = usable[k][0];
                 let mut best_l = plen[k][best_p];
@@ -202,10 +597,6 @@ pub fn solve_warm(
                 }
             }
         }
-        // Duality-gap check *after* this phase's length updates (the bound
-        // is meaningless before any routing). With a warm candidate, check
-        // already at the end of phase 1: one phase usually tightens the
-        // dual enough to certify a near-optimal previous-round solution.
         if phases % 8 == 0 || (phases == 1 && warm_lambda > 0.0) {
             let lam = quick_lambda(inst, &vols, &x).max(warm_lambda);
             let alpha: f64 = active
@@ -222,8 +613,6 @@ pub fn solve_warm(
         }
     }
 
-    // Return the better of the accumulated flow and the warm candidate —
-    // both are exactly-feasible equal-progress allocations.
     let acc_sol = finalize(inst, &vols, x);
     let mut sol = match (acc_sol, warm_sol) {
         (Some(a), Some(w)) => {
@@ -237,16 +626,11 @@ pub fn solve_warm(
         (None, Some(w)) => w,
         (None, None) => return None,
     };
-    // Undo the demand normalization: rates already satisfy
-    // Σ_p rate = λ_scaled · (s·v_k), so the real progress rate is λ_scaled·s.
     sol.lambda *= s;
     Some(sol)
 }
 
-/// Feasible λ extractable from raw accumulated flow `x` (the same
-/// computation `finalize` performs, without building the rate matrix).
-/// Degenerate capacities (≤ [`MIN_CAP`]) count as zero: any usage on them
-/// collapses θ — consistent with `solve_warm` treating them as down.
+/// Feasible λ extractable from raw accumulated flow `x` (jagged reference).
 fn quick_lambda(inst: &McfInstance, vols: &[f64], x: &[Vec<f64>]) -> f64 {
     let usage = inst.edge_usage(x);
     let mut theta = f64::INFINITY;
@@ -272,13 +656,9 @@ fn quick_lambda(inst: &McfInstance, vols: &[f64], x: &[Vec<f64>]) -> f64 {
     }
 }
 
-/// Rescale raw (possibly capacity-violating) path volumes into a feasible
-/// equal-progress rate allocation (in terms of the working volumes `vols`).
-/// Degenerate capacities (≤ [`MIN_CAP`]) count as zero, mirroring
-/// `solve_warm`'s usability filter: flow routed over such an edge makes the
-/// candidate infeasible rather than near-infinitely slow.
+/// Rescale raw path volumes into a feasible equal-progress rate allocation
+/// (jagged reference; see `finalize_flat`).
 fn finalize(inst: &McfInstance, vols: &[f64], x: Vec<Vec<f64>>) -> Option<McfSolution> {
-    // Scale onto capacities.
     let usage = inst.edge_usage(&x);
     let mut theta = f64::INFINITY;
     for (&u, &c) in usage.iter().zip(&inst.cap) {
@@ -289,7 +669,6 @@ fn finalize(inst: &McfInstance, vols: &[f64], x: Vec<Vec<f64>>) -> Option<McfSol
     if !(theta.is_finite() && theta > 0.0) {
         return None;
     }
-    // λ = worst group progress after scaling.
     let mut lambda = f64::INFINITY;
     for (k, &v) in vols.iter().enumerate() {
         if v > 0.0 {
@@ -300,11 +679,9 @@ fn finalize(inst: &McfInstance, vols: &[f64], x: Vec<Vec<f64>>) -> Option<McfSol
     if !(lambda.is_finite() && lambda > 0.0) {
         return None;
     }
-    // Trim every group to exactly λ·v_k.
     let mut rates = x;
     for (k, &v) in vols.iter().enumerate() {
         let routed: f64 = rates[k].iter().sum();
-        // factor ≤ theta by construction of λ, so capacities hold.
         let factor = if v > 0.0 && routed > 0.0 { lambda * v / routed } else { 0.0 };
         for r in &mut rates[k] {
             *r *= factor;
@@ -394,6 +771,11 @@ mod tests {
                 gk.lambda,
                 sx.lambda
             );
+            // The flat core and the jagged reference are the same algorithm
+            // executed in the same op order: results must be bit-identical.
+            let jag = solve_warm_jagged(&inst, 0.02, None).expect("jagged solves");
+            assert_eq!(gk.lambda.to_bits(), jag.lambda.to_bits(), "trial {trial}: λ diverged");
+            assert_eq!(gk.rates, jag.rates, "trial {trial}: rates diverged");
         }
     }
 
@@ -487,5 +869,39 @@ mod tests {
         let alt = solve(&noisy, 0.05).unwrap();
         assert_eq!(base.lambda, alt.lambda, "unrelated edges perturbed λ");
         assert_eq!(base.rates, alt.rates, "unrelated edges perturbed rates");
+    }
+
+    /// A warm workspace reused across solves yields the same answers as
+    /// one-shot scratch (all per-solve state is cleared, not inherited).
+    #[test]
+    fn scratch_reuse_is_stateless() {
+        let mut ws = GkScratch::default();
+        let insts =
+            [fig1a_inst(&[40.0]), fig1a_inst(&[40.0, 80.0]), fig1a_inst(&[8.0, 3.0, 99.0])];
+        for inst in &insts {
+            let flat = FlatMcf::from_instance(inst);
+            let reused = solve_flat(&flat, 0.05, Warm::None, &mut ws).unwrap();
+            let fresh = solve(inst, 0.05).unwrap();
+            assert_eq!(reused.lambda.to_bits(), fresh.lambda.to_bits());
+            assert_eq!(reused.rates, fresh.rates);
+        }
+    }
+
+    /// The `Warm::Indexed` zero-copy projection is equivalent to manually
+    /// projecting the full-group rate matrix onto the instance subset.
+    #[test]
+    fn warm_indexed_matches_direct() {
+        let inst = fig1a_inst(&[40.0, 80.0]);
+        let cold = solve(&inst, 0.02).unwrap();
+        // Full-group layout: [finished, g0, finished, g1]; instance groups
+        // 0 and 1 map to full indices 1 and 3.
+        let full = vec![Vec::new(), cold.rates[0].clone(), Vec::new(), cold.rates[1].clone()];
+        let index = vec![1usize, 3usize];
+        let flat = FlatMcf::from_instance(&inst);
+        let mut ws = GkScratch::default();
+        let a = solve_flat(&flat, 0.02, Warm::Indexed(&full, &index), &mut ws).unwrap();
+        let b = solve_warm(&inst, 0.02, Some(&cold.rates)).unwrap();
+        assert_eq!(a.lambda.to_bits(), b.lambda.to_bits());
+        assert_eq!(a.rates, b.rates);
     }
 }

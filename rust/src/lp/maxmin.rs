@@ -12,7 +12,9 @@
 //! demands over the residual capacity, freeze groups that can no longer
 //! grow (every usable path crosses a saturated edge), subtract, repeat.
 
-use super::{gk, GroupDemand, McfInstance};
+use super::flat::{FlatMcf, GkScratch};
+use super::gk::Warm;
+use super::{gk, GroupDemand, McfInstance, SolverRepr};
 
 /// Rates per group per path (Gbps) — same layout as the instance's paths.
 pub type Rates = Vec<Vec<f64>>;
@@ -22,6 +24,18 @@ pub type Rates = Vec<Vec<f64>>;
 /// contention); pass 1.0 for plain max-min. Groups with no usable path get
 /// zero rate (not an error — work conservation must be best-effort).
 pub fn max_min_rates(cap: &[f64], groups: &[GroupDemand], weights: &[f64]) -> Rates {
+    max_min_rates_with(cap, groups, weights, SolverRepr::Flat)
+}
+
+/// [`max_min_rates`] with an explicit GK representation for the per-level
+/// solves (results are bit-identical either way; `Jagged` exists so the
+/// scaling benches can measure the full pre-flat pipeline).
+pub fn max_min_rates_with(
+    cap: &[f64],
+    groups: &[GroupDemand],
+    weights: &[f64],
+    repr: SolverRepr,
+) -> Rates {
     // Fast exact path: when every group is pinned to (at most) one path —
     // the per-flow/Varys single-path baselines — classic weighted
     // water-filling is exact and O(E·K) per level.
@@ -62,7 +76,11 @@ pub fn max_min_rates(cap: &[f64], groups: &[GroupDemand], weights: &[f64]) -> Ra
                 .map(|&k| GroupDemand { volume: weights[k], paths: groups[k].paths.clone() })
                 .collect(),
         };
-        let Some(sol) = gk::solve(&inst, 0.05) else { break };
+        let sol = match repr {
+            SolverRepr::Flat => gk::solve(&inst, 0.05),
+            SolverRepr::Jagged => gk::solve_warm_jagged(&inst, 0.05, None),
+        };
+        let Some(sol) = sol else { break };
         if sol.lambda <= 1e-9 {
             break;
         }
@@ -138,6 +156,151 @@ fn water_fill_single_path(cap: &[f64], groups: &[GroupDemand], weights: &[f64]) 
     rates
 }
 
+/// Flat-core progressive filling: the same algorithm as [`max_min_rates`],
+/// executed on a prebuilt [`FlatMcf`] with reusable GK scratch. The instance
+/// is built **once** (block concatenation in the workspace) and every
+/// filling level reuses it — per-level work is zeroing volumes, one flat GK
+/// solve, and in-place residual updates on the local capacity array,
+/// instead of cloning every path list and the global capacity vector into a
+/// fresh `McfInstance` per level.
+///
+/// `flat.vols` carries the demand volumes (activity filter), `flat.cap` the
+/// leftover capacities; both are **consumed** — `cap` becomes the residual
+/// and `vols` is used as the per-level working volume. `weights` biases
+/// fairness exactly as in [`max_min_rates`]. Bit-identical to the jagged
+/// implementation (pinned by `tests/prop_flat_solver.rs`): solving the full
+/// instance with frozen groups' volumes zeroed performs the same
+/// floating-point ops as the jagged per-level sub-instance, because GK
+/// skips zero-volume groups everywhere and their zero rates add exactly
+/// `0.0` to every usage accumulation.
+pub fn max_min_rates_ws(flat: &mut FlatMcf, weights: &[f64], gk_ws: &mut GkScratch) -> Rates {
+    let ng = flat.num_groups();
+    // Fast exact path: when every group is pinned to (at most) one path —
+    // the per-flow/Varys single-path baselines — classic weighted
+    // water-filling is exact and O(E·K) per level.
+    if (0..ng).all(|k| flat.paths(k).len() <= 1) {
+        return water_fill_single_path_flat(flat, weights);
+    }
+    let mut rates: Rates = (0..ng).map(|k| vec![0.0; flat.paths(k).len()]).collect();
+    // Usability must match the GK solver's degeneracy floor (see
+    // `max_min_rates`).
+    let mut active: Vec<usize> = (0..ng)
+        .filter(|&k| {
+            flat.vols[k] > 0.0
+                && flat.paths(k).any(|p| {
+                    let es = flat.edges(p);
+                    !es.is_empty() && es.iter().all(|&e| flat.cap[e as usize] > gk::MIN_CAP)
+                })
+        })
+        .collect();
+
+    const MAX_FILL_ROUNDS: usize = 12;
+    let mut first_lambda: Option<f64> = None;
+    for _round in 0..ng.clamp(1, MAX_FILL_ROUNDS) {
+        if active.is_empty() {
+            break;
+        }
+        // Unit-demand (weighted) concurrent flow on the residual network:
+        // frozen groups solve with zero volume (≡ excluded).
+        for v in flat.vols.iter_mut() {
+            *v = 0.0;
+        }
+        for &k in &active {
+            flat.vols[k] = weights[k];
+        }
+        let Some(sol) = gk::solve_flat(flat, 0.05, Warm::None, gk_ws) else { break };
+        if sol.lambda <= 1e-9 {
+            break;
+        }
+        // Diminishing returns: later levels add tiny increments.
+        match first_lambda {
+            None => first_lambda = Some(sol.lambda),
+            Some(l0) if sol.lambda < 5e-3 * l0 => break,
+            _ => {}
+        }
+        // Apply the increment and update residuals in place (edge ids read
+        // straight from the CSR field so the capacity array can be mutated
+        // alongside — `FlatMcf::edges` would borrow the whole struct).
+        for &k in &active {
+            for (i, p) in flat.paths(k).enumerate() {
+                let r = sol.rates[k][i];
+                rates[k][i] += r;
+                let (lo, hi) = (flat.path_off[p] as usize, flat.path_off[p + 1] as usize);
+                for &e in &flat.path_edges[lo..hi] {
+                    let c = &mut flat.cap[e as usize];
+                    *c = (*c - r).max(0.0);
+                }
+            }
+        }
+        // Freeze groups with no remaining headroom on any path.
+        active.retain(|&k| {
+            flat.paths(k).any(|p| {
+                let es = flat.edges(p);
+                !es.is_empty() && es.iter().all(|&e| flat.cap[e as usize] > gk::MIN_CAP)
+            })
+        });
+    }
+    rates
+}
+
+/// Flat mirror of [`water_fill_single_path`] (identical thresholds and op
+/// order; load accumulation and the increment minimum run over the dense
+/// local edge universe, ascending in global-id order).
+fn water_fill_single_path_flat(flat: &mut FlatMcf, weights: &[f64]) -> Rates {
+    let ng = flat.num_groups();
+    let ne = flat.num_edges();
+    let mut rates: Rates = (0..ng).map(|k| vec![0.0; flat.paths(k).len()]).collect();
+    let mut active: Vec<usize> = (0..ng)
+        .filter(|&k| {
+            flat.vols[k] > 0.0
+                && flat
+                    .paths(k)
+                    .next()
+                    .map(|p| {
+                        let es = flat.edges(p);
+                        !es.is_empty() && es.iter().all(|&e| flat.cap[e as usize] > 1e-9)
+                    })
+                    .unwrap_or(false)
+        })
+        .collect();
+    let mut load = vec![0.0f64; ne];
+    while !active.is_empty() {
+        // Weighted load per edge.
+        load.iter_mut().for_each(|l| *l = 0.0);
+        for &k in &active {
+            let p = flat.paths(k).start;
+            for &e in flat.edges(p) {
+                load[e as usize] += weights[k];
+            }
+        }
+        // Tightest edge determines the next common increment per weight.
+        let mut inc = f64::INFINITY;
+        for (e, &l) in load.iter().enumerate() {
+            if l > 1e-12 {
+                inc = inc.min(flat.cap[e] / l);
+            }
+        }
+        if !inc.is_finite() || inc <= 1e-12 {
+            break;
+        }
+        for &k in &active {
+            rates[k][0] += weights[k] * inc;
+            let p = flat.paths(k).start;
+            let (lo, hi) = (flat.path_off[p] as usize, flat.path_off[p + 1] as usize);
+            for &e in &flat.path_edges[lo..hi] {
+                let c = &mut flat.cap[e as usize];
+                *c = (*c - weights[k] * inc).max(0.0);
+            }
+        }
+        // Freeze groups touching a saturated edge.
+        active.retain(|&k| {
+            let p = flat.paths(k).start;
+            flat.edges(p).iter().all(|&e| flat.cap[e as usize] > 1e-9)
+        });
+    }
+    rates
+}
+
 /// Total rate per group.
 pub fn group_rates(rates: &Rates) -> Vec<f64> {
     rates.iter().map(|g| g.iter().sum()).collect()
@@ -198,6 +361,43 @@ mod tests {
         let g = group_rates(&rates);
         assert_eq!(g[0], 0.0);
         assert!(g[1] > 9.0);
+    }
+
+    /// The flat workspace-backed filling is the same algorithm as the
+    /// jagged one: identical rates, bit for bit, on both the GK path and
+    /// the single-path water-fill fast path.
+    #[test]
+    fn flat_filling_matches_jagged() {
+        let cases: Vec<(Vec<f64>, Vec<GroupDemand>)> = vec![
+            // Multipath (GK levels).
+            (
+                vec![10.0, 10.0, 4.0],
+                vec![
+                    GroupDemand { volume: 3.0, paths: vec![vec![0], vec![1, 2]] },
+                    GroupDemand { volume: 9.0, paths: vec![vec![1]] },
+                    GroupDemand { volume: 0.0, paths: vec![vec![0]] },
+                ],
+            ),
+            // Single-path (water-fill fast path), incl. a pathless group.
+            (
+                vec![9.0, 5.0],
+                vec![
+                    GroupDemand { volume: 1.0, paths: vec![vec![0]] },
+                    GroupDemand { volume: 2.0, paths: vec![vec![0]] },
+                    GroupDemand { volume: 1.0, paths: vec![] },
+                    GroupDemand { volume: 1.0, paths: vec![vec![1]] },
+                ],
+            ),
+        ];
+        for (cap, groups) in cases {
+            let weights: Vec<f64> = groups.iter().map(|g| g.volume.max(0.5)).collect();
+            let jagged = max_min_rates(&cap, &groups, &weights);
+            let inst = McfInstance { cap: cap.clone(), groups: groups.clone() };
+            let mut flat = FlatMcf::from_instance(&inst);
+            let mut ws = GkScratch::default();
+            let flat_rates = max_min_rates_ws(&mut flat, &weights, &mut ws);
+            assert_eq!(flat_rates, jagged);
+        }
     }
 
     #[test]

@@ -18,9 +18,12 @@
 //! (Pseudocode 1) and the SWAN-MCF baseline.
 
 pub mod decompose;
+pub mod flat;
 pub mod gk;
 pub mod maxmin;
 pub mod simplex;
+
+pub use flat::{FlatMcf, SolverWorkspace};
 
 use crate::net::topology::EdgeId;
 
@@ -69,7 +72,11 @@ impl McfInstance {
     }
 
     /// Verify feasibility of a solution within tolerance `tol` and that all
-    /// groups progress at `lambda`. Used by tests and debug assertions.
+    /// groups progress at `lambda`. Scans every (group, path, edge) triple
+    /// plus a full-edge capacity pass — **tests and `debug_assertions`
+    /// only**; release-path callers must stay behind a debug gate (audited:
+    /// [`max_concurrent_warm`] and the runtime/integration tests are the
+    /// only call sites).
     pub fn check(&self, sol: &McfSolution, tol: f64) -> Result<(), String> {
         let usage = self.edge_usage(&sol.rates);
         for (e, (&u, &c)) in usage.iter().zip(&self.cap).enumerate() {
@@ -123,6 +130,22 @@ pub enum SolverKind {
     Gk,
 }
 
+/// Which data representation the GK solver iterates. Both run the identical
+/// algorithm and return bit-identical results (property-tested); they differ
+/// only in constant factors.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum SolverRepr {
+    /// Jagged `Vec<Vec<Vec<EdgeId>>>` instances rebuilt per solve — the
+    /// pre-flat reference, kept for the equivalence suite and as the
+    /// baseline axis of the scaling benches.
+    Jagged,
+    /// Flat CSR instances ([`FlatMcf`]) with persistent
+    /// [`SolverWorkspace`] buffers and per-coflow CSR block caching
+    /// (the default).
+    #[default]
+    Flat,
+}
+
 /// Solve Optimization (1) for one coflow. Returns `None` when some group has
 /// no usable path (e.g. partitioned WAN) or all volumes are zero.
 pub fn max_concurrent(inst: &McfInstance, kind: SolverKind) -> Option<McfSolution> {
@@ -137,6 +160,19 @@ pub fn max_concurrent_warm(
     inst: &McfInstance,
     kind: SolverKind,
     warm: Option<&[Vec<f64>]>,
+) -> Option<McfSolution> {
+    max_concurrent_repr(inst, kind, warm, SolverRepr::Flat)
+}
+
+/// [`max_concurrent_warm`] with an explicit GK data representation. Both
+/// representations return bit-identical solutions (property-tested); the
+/// `Jagged` path exists for the equivalence suite and the benches'
+/// pre-flat baseline axis.
+pub fn max_concurrent_repr(
+    inst: &McfInstance,
+    kind: SolverKind,
+    warm: Option<&[Vec<f64>]>,
+    repr: SolverRepr,
 ) -> Option<McfSolution> {
     // Guard: every active group needs at least one path whose bottleneck
     // clears the degeneracy floor (gray-failure residuals count as down).
@@ -156,9 +192,17 @@ pub fn max_concurrent_warm(
     }
     let sol = match kind {
         SolverKind::Simplex => solve_simplex(inst)?,
-        SolverKind::Gk => gk::solve_warm(inst, gk::DEFAULT_EPSILON, warm)?,
+        SolverKind::Gk => match repr {
+            SolverRepr::Flat => gk::solve_warm(inst, gk::DEFAULT_EPSILON, warm)?,
+            SolverRepr::Jagged => gk::solve_warm_jagged(inst, gk::DEFAULT_EPSILON, warm)?,
+        },
     };
-    debug_assert!(inst.check(&sol, 1e-6).is_ok(), "{:?}", inst.check(&sol, 1e-6));
+    // `McfInstance::check` scans every (group, path, edge) triple — debug
+    // builds and tests only, never the release round hot path.
+    #[cfg(debug_assertions)]
+    if let Err(e) = inst.check(&sol, 1e-6) {
+        panic!("solver returned an invalid solution: {e}");
+    }
     Some(sol)
 }
 

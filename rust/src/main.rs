@@ -85,7 +85,11 @@ fn simulate(args: &Args) {
     cfg.machines_per_dc = args.get_usize("machines", 100);
     cfg.arrival_scale = args.get_f64("arrival-scale", 1.0);
     let jobs = WorkloadGen::with_config(cfg).jobs(&wan, n);
-    let mut sim = Simulation::new(wan, policy, SimConfig::default());
+    let sim_cfg = SimConfig {
+        workers: args.get_usize("workers", terra::engine::default_workers()),
+        ..Default::default()
+    };
+    let mut sim = Simulation::new(wan, policy, sim_cfg);
     let rep = sim.run_jobs(jobs);
     println!(
         "policy={} jobs={} avg_jct={:.1}s p95_jct={:.1}s avg_cct={:.2}s util={:.1}% \
@@ -281,8 +285,9 @@ fn testbed(args: &Args) {
     let wan = topologies::by_name(topo).expect("unknown topology");
     let n = wan.num_nodes();
     let k = args.get_usize("k", 3);
+    let workers = args.get_usize("workers", terra::engine::default_workers());
     let handle = Controller::spawn(
-        TestbedConfig { wan, k },
+        TestbedConfig::new(wan, k).with_workers(workers),
         Box::new(TerraPolicy::default()),
     )
     .expect("controller");

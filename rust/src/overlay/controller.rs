@@ -39,6 +39,20 @@ pub struct TestbedConfig {
     pub wan: Wan,
     /// Paths per datacenter pair (persistent connections per agent pair).
     pub k: usize,
+    /// Worker threads for parallel component solves (see
+    /// [`EngineConfig::workers`]); results are bit-identical for any value.
+    pub workers: usize,
+}
+
+impl TestbedConfig {
+    pub fn new(wan: Wan, k: usize) -> TestbedConfig {
+        TestbedConfig { wan, k, workers: crate::engine::default_workers() }
+    }
+
+    pub fn with_workers(mut self, workers: usize) -> TestbedConfig {
+        self.workers = workers;
+        self
+    }
 }
 
 struct AgentConn {
@@ -129,7 +143,11 @@ impl Controller {
         let engine = RoundEngine::with_k(
             cfg.wan,
             policy,
-            EngineConfig { check_feasibility: false, ..Default::default() },
+            EngineConfig {
+                check_feasibility: false,
+                workers: cfg.workers,
+                ..Default::default()
+            },
             cfg.k,
         );
         let mut rules = RuleTable::new(num_nodes);

@@ -16,7 +16,7 @@ pub use terra::TerraPolicy;
 
 use crate::coflow::{CoflowId, FlowGroup};
 use crate::engine::GammaCache;
-use crate::lp::{GroupDemand, McfInstance};
+use crate::lp::{GroupDemand, McfInstance, SolverWorkspace};
 use crate::net::paths::PathSet;
 use crate::net::Wan;
 use std::collections::HashMap;
@@ -160,6 +160,10 @@ pub struct RoundCtx<'a> {
     /// Previous round's allocation for warm-starting iterative solvers, or
     /// `None` right after structural WAN changes (stale path indices).
     pub warm: Option<&'a Allocation>,
+    /// Persistent solver workspace (flat CSR block cache + GK scratch).
+    /// Engine-owned, one per solver worker; policies reuse it for
+    /// allocation-free solves and cache per-coflow CSR blocks in it.
+    pub ws: &'a mut SolverWorkspace,
 }
 
 /// The scheduling-routing policy interface implemented by Terra and all
@@ -211,6 +215,16 @@ pub trait Policy: Send {
     /// precomputation in the driver).
     fn k_paths(&self) -> usize {
         DEFAULT_K
+    }
+
+    /// Clone this policy for a parallel solver worker. Policies whose
+    /// allocation is a pure function of their configuration (no carried
+    /// per-round state beyond instrumentation) return a fresh instance; the
+    /// engine then solves independent components concurrently, each worker
+    /// driving its own fork. `None` (the default) keeps component solves
+    /// sequential for this policy.
+    fn fork(&self) -> Option<Box<dyn Policy>> {
+        None
     }
 }
 

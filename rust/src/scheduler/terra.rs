@@ -17,7 +17,9 @@
 //!    the α starvation share.
 
 use super::*;
-use crate::lp::{self, maxmin, SolverKind};
+use crate::lp::flat::CachedCsr;
+use crate::lp::gk::Warm;
+use crate::lp::{self, gk, maxmin, SolverKind, SolverRepr};
 use std::time::Instant;
 
 /// Terra configuration knobs (paper defaults, §6.1).
@@ -35,6 +37,10 @@ pub struct TerraConfig {
     pub k: usize,
     /// LP backend for Optimization (1).
     pub solver: SolverKind,
+    /// GK data representation: flat CSR with workspace reuse (default), or
+    /// the jagged reference path (bit-identical results; kept for the
+    /// equivalence suite and the scaling benches' baseline axis).
+    pub repr: SolverRepr,
 }
 
 impl Default for TerraConfig {
@@ -45,6 +51,7 @@ impl Default for TerraConfig {
             rho: DEFAULT_RHO,
             k: DEFAULT_K,
             solver: SolverKind::Gk,
+            repr: SolverRepr::Flat,
         }
     }
 }
@@ -79,16 +86,46 @@ impl TerraPolicy {
         TerraPolicy::new(TerraConfig { k, ..Default::default() })
     }
 
+    /// Whether solves run on the flat CSR path: the flat representation is
+    /// selected, the backend is GK (simplex and the PJRT artifact consume
+    /// jagged instances), and the caller supplied a workspace.
+    fn flat_mode(&self, ws: &Option<&mut SolverWorkspace>) -> bool {
+        self.cfg.repr == SolverRepr::Flat
+            && self.cfg.solver == SolverKind::Gk
+            && self.jax.is_none()
+            && ws.is_some()
+    }
+
     /// Solve Optimization (1) for one coflow on `caps`; instrumented. A
     /// `warm` rate matrix (full group-indexed, from the previous round)
-    /// seeds the GK solver's feasible-candidate early exit.
+    /// seeds the GK solver's feasible-candidate early exit. With a
+    /// workspace, the solve runs on the coflow's cached flat CSR block
+    /// (built at most once per epoch × group-shape) and performs no
+    /// allocations beyond the output rates; without one it falls back to a
+    /// per-call jagged instance (admission control, legacy `allocate`).
     fn solve_min_cct(
         &mut self,
         cf: &CoflowState,
         caps: &[f64],
         net: &NetView,
         warm: Option<&CoflowRates>,
+        ws: Option<&mut SolverWorkspace>,
+        epoch: u64,
     ) -> Option<(lp::McfSolution, Vec<usize>)> {
+        if self.flat_mode(&ws) {
+            let ws = ws.unwrap();
+            let SolverWorkspace { gk: gk_ws, builder, edge_map, csr, .. } = ws;
+            let entry = ensure_csr(csr, builder, edge_map, cf, caps, net, self.cfg.k, epoch)?;
+            let w = match warm {
+                Some(w) => Warm::Indexed(w, &entry.index),
+                None => Warm::None,
+            };
+            let t0 = Instant::now();
+            let sol = gk::solve_flat(&entry.flat, gk::DEFAULT_EPSILON, w, gk_ws);
+            self.stats.lp_solves += 1;
+            self.stats.lp_time_s += t0.elapsed().as_secs_f64();
+            return sol.map(|s| (s, entry.index.clone()));
+        }
         let (inst, index) = build_instance(&cf.groups, &cf.remaining, caps, net, self.cfg.k);
         if inst.groups.is_empty() {
             return None;
@@ -99,11 +136,12 @@ impl TerraPolicy {
             index.iter().map(|&gi| w.get(gi).cloned().unwrap_or_default()).collect()
         });
         let t0 = Instant::now();
+        let repr = self.cfg.repr;
         let sol = match &self.jax {
-            Some(jax) => jax
-                .solve(net.wan, &inst)
-                .or_else(|| lp::max_concurrent_warm(&inst, self.cfg.solver, projected.as_deref())),
-            None => lp::max_concurrent_warm(&inst, self.cfg.solver, projected.as_deref()),
+            Some(jax) => jax.solve(net.wan, &inst).or_else(|| {
+                lp::max_concurrent_repr(&inst, self.cfg.solver, projected.as_deref(), repr)
+            }),
+            None => lp::max_concurrent_repr(&inst, self.cfg.solver, projected.as_deref(), repr),
         };
         self.stats.lp_solves += 1;
         self.stats.lp_time_s += t0.elapsed().as_secs_f64();
@@ -113,6 +151,7 @@ impl TerraPolicy {
     /// One full round of Pseudocode 1, optionally with the engine's
     /// incremental context (Γ-cache for the ordering solves, previous
     /// allocation as warm starts for the per-coflow allocation solves).
+    #[allow(clippy::too_many_arguments)]
     fn run_round(
         &mut self,
         now: f64,
@@ -120,7 +159,10 @@ impl TerraPolicy {
         net: &NetView,
         mut cache: Option<&mut crate::engine::GammaCache>,
         warm: Option<&Allocation>,
+        mut ws: Option<&mut SolverWorkspace>,
+        epoch: u64,
     ) -> Allocation {
+        let flat_mode = self.flat_mode(&ws);
         let round_start = Instant::now();
         let mut alloc = Allocation::default();
         let caps_full = net.wan.capacities();
@@ -142,7 +184,14 @@ impl TerraPolicy {
                 }
                 None => {
                     let g = self
-                        .solve_min_cct(cf, &scaled, net, warm.and_then(|a| a.rates.get(&cf.id)))
+                        .solve_min_cct(
+                            cf,
+                            &scaled,
+                            net,
+                            warm.and_then(|a| a.rates.get(&cf.id)),
+                            ws.as_deref_mut(),
+                            epoch,
+                        )
                         .map(|(s, _)| s.gamma())
                         .unwrap_or(f64::INFINITY);
                     if let Some(c) = cache.as_deref_mut() {
@@ -177,7 +226,15 @@ impl TerraPolicy {
             if cf.done() {
                 continue;
             }
-            match self.solve_min_cct(cf, &residual, net, warm.and_then(|a| a.rates.get(&cf.id))) {
+            let solved = self.solve_min_cct(
+                cf,
+                &residual,
+                net,
+                warm.and_then(|a| a.rates.get(&cf.id)),
+                ws.as_deref_mut(),
+                epoch,
+            );
+            match solved {
                 Some((mut sol, index)) => {
                     // Deadline dilation (§3.2): completing earlier than D has
                     // no benefit; stretch to the deadline and free bandwidth.
@@ -188,16 +245,28 @@ impl TerraPolicy {
                             sol.scale(gamma / d_rem);
                         }
                     }
-                    // Subtract usage.
-                    let (inst, _) = build_instance(
-                        &cf.groups,
-                        &cf.remaining,
-                        &residual,
-                        net,
-                        self.cfg.k,
-                    );
-                    for (u, r) in inst.edge_usage(&sol.rates).iter().zip(residual.iter_mut()) {
-                        *r = (*r - u).max(0.0);
+                    // Subtract usage from the residual.
+                    if flat_mode {
+                        // The coflow's CSR block is in the workspace (the
+                        // solve above just used it); no instance rebuild and
+                        // no global-edge-count allocation.
+                        let w = ws.as_deref_mut().expect("flat_mode implies ws");
+                        let SolverWorkspace { gk: gk_ws, csr, .. } = w;
+                        let block = &csr.get(&cf.id).expect("block built by solve").flat;
+                        block.subtract_usage(&sol.rates, &mut residual, &mut gk_ws.usage);
+                    } else {
+                        let (inst, _) = build_instance(
+                            &cf.groups,
+                            &cf.remaining,
+                            &residual,
+                            net,
+                            self.cfg.k,
+                        );
+                        for (u, r) in
+                            inst.edge_usage(&sol.rates).iter().zip(residual.iter_mut())
+                        {
+                            *r = (*r - u).max(0.0);
+                        }
                     }
                     alloc.rates.insert(cf.id, expand_rates(cf.groups.len(), &index, &sol.rates));
                     scheduled.push(i);
@@ -219,8 +288,66 @@ impl TerraPolicy {
             if members.is_empty() {
                 continue;
             }
-            let mut demands = Vec::new();
             let mut owners = Vec::new(); // (coflow idx, group idx)
+            if flat_mode {
+                // Flat path: the combined instance is a concatenation of the
+                // members' cached CSR blocks (no nested path-list cloning),
+                // and the filling levels reuse it in place.
+                let w = ws.as_deref_mut().expect("flat_mode implies ws");
+                let SolverWorkspace { gk: gk_ws, builder, edge_map, csr, wc, wc_builder } = w;
+                wc_builder.clear();
+                let mut weights: Vec<f64> = Vec::new();
+                for &i in &members {
+                    let cf = &coflows[i];
+                    let Some(entry) =
+                        ensure_csr(csr, builder, edge_map, cf, &leftover, net, self.cfg.k, epoch)
+                    else {
+                        continue;
+                    };
+                    for &gi in &entry.index {
+                        owners.push((i, gi));
+                        weights.push(cf.remaining[gi]);
+                    }
+                    wc_builder.push_block(&entry.flat, &entry.flat.vols);
+                }
+                if wc_builder.is_empty() {
+                    continue;
+                }
+                let t0 = Instant::now();
+                wc_builder.finish_into(&leftover, edge_map, wc);
+                let bonus = maxmin::max_min_rates_ws(wc, &weights, gk_ws);
+                self.stats.lp_solves += 1;
+                self.stats.lp_time_s += t0.elapsed().as_secs_f64();
+                for (di, &(ci, gi)) in owners.iter().enumerate() {
+                    let cf = &coflows[ci];
+                    let entry = alloc
+                        .rates
+                        .entry(cf.id)
+                        .or_insert_with(|| vec![Vec::new(); cf.groups.len()]);
+                    let dst = &mut entry[gi];
+                    let src = &bonus[di];
+                    if dst.len() < src.len() {
+                        dst.resize(src.len(), 0.0);
+                    }
+                    for (d, s) in dst.iter_mut().zip(src) {
+                        *d += *s;
+                    }
+                    // Track usage so the second pass sees the reduced
+                    // leftover (demand `di`'s paths live in the wc CSR).
+                    for (pi, &r) in src.iter().enumerate() {
+                        if r > 0.0 {
+                            let p = wc.paths(di).start + pi;
+                            for &le in wc.edges(p) {
+                                let e = wc.global_edges[le as usize] as usize;
+                                used[e] += r;
+                                leftover[e] = (leftover[e] - r).max(0.0);
+                            }
+                        }
+                    }
+                }
+                continue;
+            }
+            let mut demands = Vec::new();
             for &i in &members {
                 let cf = &coflows[i];
                 let (inst, index) =
@@ -235,7 +362,7 @@ impl TerraPolicy {
             }
             let t0 = Instant::now();
             let weights: Vec<f64> = demands.iter().map(|d| d.volume).collect();
-            let bonus = maxmin::max_min_rates(&leftover, &demands, &weights);
+            let bonus = maxmin::max_min_rates_with(&leftover, &demands, &weights, self.cfg.repr);
             self.stats.lp_solves += 1;
             self.stats.lp_time_s += t0.elapsed().as_secs_f64();
             for (di, &(ci, gi)) in owners.iter().enumerate() {
@@ -285,11 +412,12 @@ impl Policy for TerraPolicy {
         coflows: &[CoflowState],
         net: &NetView,
     ) -> Allocation {
-        self.run_round(now, coflows, net, None, None)
+        self.run_round(now, coflows, net, None, None, None, 0)
     }
 
     /// Incremental entry point: reuse cached standalone Γ solves within a
-    /// WAN capacity epoch and warm-start GK from the previous allocation.
+    /// WAN capacity epoch, warm-start GK from the previous allocation, and
+    /// run every solve on the workspace's cached flat CSR blocks.
     fn allocate_with(
         &mut self,
         now: f64,
@@ -297,7 +425,20 @@ impl Policy for TerraPolicy {
         coflows: &[CoflowState],
         net: &NetView,
     ) -> Allocation {
-        self.run_round(now, coflows, net, Some(ctx.cache), ctx.warm)
+        let epoch = ctx.epoch;
+        self.run_round(now, coflows, net, Some(ctx.cache), ctx.warm, Some(ctx.ws), epoch)
+    }
+
+    /// Terra's allocation is a pure function of its configuration: forks
+    /// share the (stateless) PJRT artifact handle and start with fresh
+    /// instrumentation, so the engine can solve independent components on
+    /// parallel workers with results bit-identical to the sequential order.
+    fn fork(&self) -> Option<Box<dyn Policy>> {
+        Some(Box::new(TerraPolicy {
+            cfg: self.cfg.clone(),
+            jax: self.jax.clone(),
+            stats: RoundStats::default(),
+        }))
     }
 
     /// Pseudocode 2: admit a deadline coflow iff its minimum CCT on the
@@ -321,7 +462,8 @@ impl Policy for TerraPolicy {
             .collect();
         admitted.sort_by(|a, b| b.deadline.partial_cmp(&a.deadline).unwrap());
         for cf in admitted {
-            if let Some((mut sol, index)) = self.solve_min_cct(cf, &residual, net, None) {
+            if let Some((mut sol, index)) = self.solve_min_cct(cf, &residual, net, None, None, 0)
+            {
                 let d_rem = cf.deadline.unwrap() - now;
                 let gamma = sol.gamma();
                 if d_rem > gamma {
@@ -335,7 +477,7 @@ impl Policy for TerraPolicy {
                 }
             }
         }
-        match self.solve_min_cct(candidate, &residual, net, None) {
+        match self.solve_min_cct(candidate, &residual, net, None, None, 0) {
             Some((sol, _)) => sol.gamma() <= self.cfg.eta * (deadline - now) + 1e-9,
             None => false,
         }
@@ -344,6 +486,66 @@ impl Policy for TerraPolicy {
     fn take_stats(&mut self) -> RoundStats {
         std::mem::take(&mut self.stats)
     }
+}
+
+/// Get (or rebuild) `cf`'s cached flat CSR block in the workspace and
+/// refresh its capacities/volumes for a solve on `caps`. A block is fresh
+/// iff it was built under the same WAN-capacity epoch (k-path sets are a
+/// pure function of the epoch's WAN) and the coflow's unfinished-group set
+/// is unchanged; within an epoch, re-preparing a cached block is a capacity
+/// gather plus a volume copy — no path-list traversal, no allocation.
+/// Returns `None` when the coflow has no unfinished groups.
+#[allow(clippy::too_many_arguments)]
+fn ensure_csr<'a>(
+    csr: &'a mut std::collections::HashMap<crate::coflow::CoflowId, CachedCsr>,
+    builder: &mut lp::flat::FlatBuilder,
+    edge_map: &mut lp::flat::EdgeMap,
+    cf: &CoflowState,
+    caps: &[f64],
+    net: &NetView,
+    k: usize,
+    epoch: u64,
+) -> Option<&'a mut CachedCsr> {
+    let entry = csr.entry(cf.id).or_default();
+    let mut fresh = entry.epoch == epoch && !entry.index.is_empty();
+    if fresh {
+        let mut it = entry.index.iter().copied();
+        for (gi, &rem) in cf.remaining.iter().enumerate() {
+            if rem <= 1e-9 {
+                continue;
+            }
+            if it.next() != Some(gi) {
+                fresh = false;
+                break;
+            }
+        }
+        if fresh && it.next().is_some() {
+            fresh = false;
+        }
+    }
+    if fresh {
+        entry.flat.set_caps(caps);
+        entry.flat.set_vols(entry.index.iter().map(|&gi| cf.remaining[gi]));
+    } else {
+        builder.clear();
+        entry.index.clear();
+        for (gi, (g, &rem)) in cf.groups.iter().zip(&cf.remaining).enumerate() {
+            if rem <= 1e-9 {
+                continue;
+            }
+            entry.index.push(gi);
+            builder.push_group(
+                rem,
+                net.paths.get(g.src, g.dst).iter().take(k).map(|p| p.edges.as_slice()),
+            );
+        }
+        if entry.index.is_empty() {
+            return None;
+        }
+        builder.finish_into(caps, edge_map, &mut entry.flat);
+        entry.epoch = epoch;
+    }
+    Some(entry)
 }
 
 /// Edge usage of an allocation (helper; also used by the simulator's

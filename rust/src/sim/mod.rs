@@ -38,6 +38,9 @@ pub struct SimConfig {
     pub max_time: f64,
     /// Verify allocation feasibility every round (tests/debug).
     pub check_feasibility: bool,
+    /// Worker threads for parallel component solves (see
+    /// [`EngineConfig::workers`]); results are bit-identical for any value.
+    pub workers: usize,
 }
 
 impl Default for SimConfig {
@@ -47,6 +50,7 @@ impl Default for SimConfig {
             coordination_delay_s: 0.0,
             max_time: 1e7,
             check_feasibility: cfg!(debug_assertions),
+            workers: crate::engine::default_workers(),
         }
     }
 }
@@ -127,6 +131,7 @@ impl Simulation {
             EngineConfig {
                 rho: cfg.rho,
                 check_feasibility: cfg.check_feasibility,
+                workers: cfg.workers,
                 ..Default::default()
             },
         );

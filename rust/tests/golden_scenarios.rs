@@ -167,7 +167,7 @@ fn controller_replay(
     wan: Wan,
     events: &[TimedLinkEvent],
 ) -> (Vec<EventRecord>, Vec<Option<CoflowRates>>) {
-    let handle = Controller::spawn(TestbedConfig { wan, k: K }, policy()).expect("spawn");
+    let handle = Controller::spawn(TestbedConfig::new(wan, K), policy()).expect("spawn");
     let mut client = TerraClient::connect(handle.addr).expect("connect");
     let mut ids = Vec::new();
     for (i, (s, d, gbit)) in COFLOWS.iter().enumerate() {

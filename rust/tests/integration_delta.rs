@@ -104,7 +104,7 @@ fn delta_keys(msg: &Json, field: &str) -> Vec<(u64, u64)> {
 #[test]
 fn delta_pushes_only_changed_components() {
     let handle =
-        Controller::spawn(TestbedConfig { wan: topologies::fig1a(), k: 1 }, policy(1)).unwrap();
+        Controller::spawn(TestbedConfig::new(topologies::fig1a(), 1), policy(1)).unwrap();
     let mut agents: Vec<FakeAgent> =
         (0..3).map(|dc| FakeAgent::connect(&handle, dc)).collect();
     assert!(handle.wait_ready(3, Duration::from_secs(5)));
@@ -181,7 +181,7 @@ fn delta_pushes_only_changed_components() {
 #[test]
 fn malformed_control_frames_are_survivable() {
     let handle =
-        Controller::spawn(TestbedConfig { wan: topologies::fig1a(), k: 3 }, policy(3)).unwrap();
+        Controller::spawn(TestbedConfig::new(topologies::fig1a(), 3), policy(3)).unwrap();
 
     // Raw byte-level garbage, each on its own connection.
     let raw_payloads: Vec<Vec<u8>> = vec![

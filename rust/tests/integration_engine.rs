@@ -73,7 +73,7 @@ fn sim_and_controller_allocations_match() {
 
     // --- Controller side (wall clock, no agents needed for scheduling). ---
     let handle = Controller::spawn(
-        TestbedConfig { wan: topologies::fig1a(), k: K },
+        TestbedConfig::new(topologies::fig1a(), K),
         policy(),
     )
     .expect("spawn controller");

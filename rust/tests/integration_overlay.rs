@@ -21,7 +21,7 @@ struct Testbed {
 fn start_testbed(wan: terra::net::Wan, k: usize) -> Testbed {
     let n = wan.num_nodes();
     let policy = TerraPolicy::new(TerraConfig { alpha: 0.0, k, ..Default::default() });
-    let handle = Controller::spawn(TestbedConfig { wan, k }, Box::new(policy)).unwrap();
+    let handle = Controller::spawn(TestbedConfig::new(wan, k), Box::new(policy)).unwrap();
     let agents: Vec<Agent> = (0..n).map(|dc| Agent::spawn(dc, handle.addr).unwrap()).collect();
     assert!(handle.wait_ready(n, Duration::from_secs(10)), "agents failed to register");
     Testbed { handle, agents }

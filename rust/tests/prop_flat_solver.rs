@@ -1,0 +1,363 @@
+//! Property tests for the flat-CSR solver core and the parallel component
+//! solves (via the in-tree `util::prop` harness):
+//!
+//! 1. the flat GK core is **bit-identical** to the jagged reference — λ and
+//!    every rate, f64 bit for bit — on random instances drawn from all
+//!    three evaluation topologies, cold and warm-started;
+//! 2. the flat workspace-backed max-min filling is bit-identical to the
+//!    jagged progressive filling;
+//! 3. a `TerraPolicy` on `SolverRepr::Jagged` and one on `SolverRepr::Flat`
+//!    produce bit-identical allocations through whole engine rounds
+//!    (Γ-cache, warm starts, CSR block reuse, work conservation included);
+//! 4. engine rounds with `workers = N` produce bit-identical allocations to
+//!    `workers = 1` for a multi-component workload.
+
+use terra::coflow::{Coflow, Flow};
+use terra::engine::{EngineConfig, RoundEngine};
+use terra::lp::flat::{FlatMcf, GkScratch};
+use terra::lp::{gk, maxmin, GroupDemand, McfInstance, SolverRepr};
+use terra::net::paths::PathSet;
+use terra::net::topologies;
+use terra::net::{LinkEvent, Wan};
+use terra::scheduler::terra::{TerraConfig, TerraPolicy};
+use terra::scheduler::{CoflowState, RoundTrigger};
+use terra::util::prop::{forall, PropConfig};
+use terra::util::rng::Pcg32;
+
+/// Compare two optional solutions f64-bit for f64-bit.
+fn assert_bit_identical(
+    a: &Option<terra::lp::McfSolution>,
+    b: &Option<terra::lp::McfSolution>,
+    what: &str,
+) -> Result<(), String> {
+    match (a, b) {
+        (None, None) => Ok(()),
+        (Some(a), Some(b)) => {
+            if a.lambda.to_bits() != b.lambda.to_bits() {
+                return Err(format!("{what}: λ {} vs {}", a.lambda, b.lambda));
+            }
+            if a.rates.len() != b.rates.len() {
+                return Err(format!("{what}: group count differs"));
+            }
+            for (k, (ra, rb)) in a.rates.iter().zip(&b.rates).enumerate() {
+                if ra.len() != rb.len() {
+                    return Err(format!("{what}: group {k} path count differs"));
+                }
+                for (p, (x, y)) in ra.iter().zip(rb).enumerate() {
+                    if x.to_bits() != y.to_bits() {
+                        return Err(format!("{what}: rate[{k}][{p}] {x} vs {y}"));
+                    }
+                }
+            }
+            Ok(())
+        }
+        (a, b) => Err(format!("{what}: one side None ({} vs {})", a.is_some(), b.is_some())),
+    }
+}
+
+/// Random MCF instance over a topology's k-shortest-path sets, with
+/// per-edge capacity jitter and occasional degenerate (gray-failure)
+/// residuals and zero-volume groups.
+fn gen_instance(wan: &Wan, paths: &PathSet, k: usize, rng: &mut Pcg32, size: usize) -> McfInstance {
+    let n = wan.num_nodes();
+    let mut cap: Vec<f64> = wan.capacities();
+    for c in &mut cap {
+        let roll = rng.below(10);
+        *c *= rng.uniform(0.3, 1.5);
+        if roll == 0 {
+            *c = 1e-10; // gray failure: must behave exactly like down
+        } else if roll == 1 {
+            *c = 0.0;
+        }
+    }
+    let ng = 1 + rng.below(size.clamp(1, 6));
+    let groups = (0..ng)
+        .map(|_| {
+            let s = rng.below(n);
+            let mut d = rng.below(n);
+            while d == s {
+                d = rng.below(n);
+            }
+            let volume = if rng.below(7) == 0 { 0.0 } else { rng.uniform(1.0, 300.0) };
+            GroupDemand {
+                volume,
+                paths: paths.get(s, d).iter().take(k).map(|p| p.edges.clone()).collect(),
+            }
+        })
+        .collect();
+    McfInstance { cap, groups }
+}
+
+fn check_gk_equivalence(inst: &McfInstance) -> Result<(), String> {
+    let eps = gk::DEFAULT_EPSILON;
+    let flat = gk::solve_warm(inst, eps, None);
+    let jagged = gk::solve_warm_jagged(inst, eps, None);
+    assert_bit_identical(&flat, &jagged, "cold")?;
+    // Warm-started from the cold solution (when one exists), and from a
+    // deliberately ragged warm matrix (short / missing groups).
+    if let Some(sol) = &jagged {
+        let wf = gk::solve_warm(inst, eps, Some(&sol.rates));
+        let wj = gk::solve_warm_jagged(inst, eps, Some(&sol.rates));
+        assert_bit_identical(&wf, &wj, "warm")?;
+        let ragged: Vec<Vec<f64>> =
+            sol.rates.iter().take(1).map(|r| r.iter().take(1).copied().collect()).collect();
+        let rf = gk::solve_warm(inst, eps, Some(&ragged));
+        let rj = gk::solve_warm_jagged(inst, eps, Some(&ragged));
+        assert_bit_identical(&rf, &rj, "ragged warm")?;
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_flat_gk_bit_identical_to_jagged_on_swan() {
+    let wan = topologies::swan();
+    let paths = PathSet::compute(&wan, 4);
+    forall(
+        PropConfig { cases: 40, seed: 0xF1A7, max_size: 6 },
+        |rng, size| gen_instance(&wan, &paths, 4, rng, size),
+        check_gk_equivalence,
+    );
+}
+
+#[test]
+fn prop_flat_gk_bit_identical_to_jagged_on_gscale() {
+    let wan = topologies::gscale();
+    let paths = PathSet::compute(&wan, 3);
+    forall(
+        PropConfig { cases: 15, seed: 0x65CA1E, max_size: 5 },
+        |rng, size| gen_instance(&wan, &paths, 3, rng, size),
+        check_gk_equivalence,
+    );
+}
+
+#[test]
+fn prop_flat_gk_bit_identical_to_jagged_on_att() {
+    let wan = topologies::att();
+    let paths = PathSet::compute(&wan, 3);
+    forall(
+        PropConfig { cases: 10, seed: 0xA77, max_size: 4 },
+        |rng, size| gen_instance(&wan, &paths, 3, rng, size),
+        check_gk_equivalence,
+    );
+}
+
+#[test]
+fn prop_flat_maxmin_bit_identical_to_jagged() {
+    let wan = topologies::swan();
+    let paths = PathSet::compute(&wan, 3);
+    forall(
+        PropConfig { cases: 25, seed: 0x3A3, max_size: 6 },
+        |rng, size| {
+            let inst = gen_instance(&wan, &paths, 3, rng, size);
+            // Occasionally pin every group to one path to hit the
+            // water-fill fast path.
+            let single = rng.below(3) == 0;
+            let groups: Vec<GroupDemand> = inst
+                .groups
+                .into_iter()
+                .map(|mut g| {
+                    if single {
+                        g.paths.truncate(1);
+                    }
+                    g
+                })
+                .collect();
+            let weights: Vec<f64> = groups.iter().map(|g| g.volume.max(0.25)).collect();
+            (McfInstance { cap: inst.cap, groups }, weights)
+        },
+        |(inst, weights)| {
+            let jagged = maxmin::max_min_rates(&inst.cap, &inst.groups, weights);
+            let mut flat = FlatMcf::from_instance(inst);
+            let mut ws = GkScratch::default();
+            let flat_rates = maxmin::max_min_rates_ws(&mut flat, weights, &mut ws);
+            if flat_rates.len() != jagged.len() {
+                return Err("group count differs".into());
+            }
+            for (k, (a, b)) in flat_rates.iter().zip(&jagged).enumerate() {
+                if a.len() != b.len() {
+                    return Err(format!("group {k} path count differs"));
+                }
+                for (p, (x, y)) in a.iter().zip(b).enumerate() {
+                    if x.to_bits() != y.to_bits() {
+                        return Err(format!("rate[{k}][{p}]: {x} vs {y}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Random multi-group coflows on SWAN.
+fn gen_coflows(rng: &mut Pcg32, n_nodes: usize, count: usize, first_id: u64) -> Vec<CoflowState> {
+    (0..count)
+        .map(|i| {
+            let flows = (0..1 + rng.below(3))
+                .map(|f| {
+                    let s = rng.below(n_nodes);
+                    let mut d = rng.below(n_nodes);
+                    while d == s {
+                        d = rng.below(n_nodes);
+                    }
+                    Flow {
+                        id: f as u64,
+                        src_dc: s,
+                        dst_dc: d,
+                        volume: rng.uniform(5.0, 400.0),
+                    }
+                })
+                .collect();
+            let mut st = CoflowState::from_coflow(&Coflow::new(first_id + i as u64, flows));
+            st.admitted = true;
+            st
+        })
+        .collect()
+}
+
+/// Drive two engines through the same arrival/drain/WAN-event schedule and
+/// compare allocations bit-for-bit after every round.
+fn lockstep_engines(
+    mut a: RoundEngine,
+    mut b: RoundEngine,
+    seed: u64,
+    what: &str,
+) -> Result<(), String> {
+    let mut rng = Pcg32::new(seed);
+    let n = a.wan().num_nodes();
+    let mut next_id = 1u64;
+    let mut now = 0.0;
+    for step in 0..8 {
+        let count = 1 + rng.below(3);
+        let batch = gen_coflows(&mut rng, n, count, next_id);
+        next_id += batch.len() as u64;
+        for st in &batch {
+            a.insert(st.clone());
+            b.insert(st.clone());
+        }
+        a.round(now, RoundTrigger::CoflowArrival);
+        b.round(now, RoundTrigger::CoflowArrival);
+        if a.alloc().rates != b.alloc().rates {
+            return Err(format!("{what}: allocations diverged at step {step}"));
+        }
+        // Occasional WAN events: a sub-ρ dip, then sometimes a qualifying
+        // drop on a random link.
+        if rng.below(2) == 0 {
+            let links: Vec<(usize, usize, f64)> = {
+                let w = a.wan();
+                w.links().iter().map(|l| (l.src, l.dst, l.base_capacity)).collect()
+            };
+            let (u, v, base) = links[rng.below(links.len())];
+            let frac = if rng.below(2) == 0 { 0.9 } else { 0.4 };
+            let ev = LinkEvent::SetBandwidth(u, v, base * frac);
+            let ra = a.handle_wan_event(&ev);
+            let rb = b.handle_wan_event(&ev);
+            if ra != rb {
+                return Err(format!("{what}: reactions diverged at step {step}"));
+            }
+            if let Some(trigger) = ra.trigger() {
+                a.round(now, trigger);
+                b.round(now, trigger);
+                if a.alloc().rates != b.alloc().rates {
+                    return Err(format!("{what}: post-event divergence at step {step}"));
+                }
+            }
+        }
+        a.drain(0.05, 0.0);
+        b.drain(0.05, 0.0);
+        a.take_finished();
+        b.take_finished();
+        now += 0.05;
+    }
+    let (sa, sb) = (a.take_stats(), b.take_stats());
+    if sa.lp_solves != sb.lp_solves || sa.component_solves != sb.component_solves {
+        return Err(format!(
+            "{what}: stats diverged (lp {} vs {}, comps {} vs {})",
+            sa.lp_solves, sb.lp_solves, sa.component_solves, sb.component_solves
+        ));
+    }
+    Ok(())
+}
+
+fn swan_engine(repr: SolverRepr, workers: usize, k: usize) -> RoundEngine {
+    let policy = TerraPolicy::new(TerraConfig { k, repr, ..Default::default() });
+    RoundEngine::new(
+        topologies::swan(),
+        Box::new(policy),
+        EngineConfig { check_feasibility: true, workers, ..Default::default() },
+    )
+}
+
+/// Whole-pipeline repr equivalence: Γ-cache ordering solves, warm-started
+/// allocation solves, CSR block reuse across rounds and epochs, and the
+/// work-conservation filling must all agree bit-for-bit between the jagged
+/// and flat representations.
+#[test]
+fn prop_repr_flat_equals_jagged_through_engine_rounds() {
+    for seed in [1u64, 7, 42] {
+        lockstep_engines(
+            swan_engine(SolverRepr::Jagged, 1, 5),
+            swan_engine(SolverRepr::Flat, 1, 5),
+            seed,
+            &format!("repr seed {seed}"),
+        )
+        .unwrap();
+    }
+}
+
+/// Parallel component solves must be bit-identical to sequential for any
+/// worker count. k = 1 pod-local coflows keep the active set factored into
+/// many components, so dirty sets regularly span several components and the
+/// parallel path actually executes.
+#[test]
+fn prop_workers_parallel_equals_sequential() {
+    let pod_engine = |workers: usize| {
+        let policy = TerraPolicy::new(TerraConfig { k: 1, ..Default::default() });
+        RoundEngine::new(
+            topologies::swan(),
+            Box::new(policy),
+            EngineConfig { check_feasibility: true, workers, ..Default::default() },
+        )
+    };
+    for (seed, workers) in [(3u64, 2usize), (9, 3), (11, 8)] {
+        let mut seq = pod_engine(1);
+        let mut par = pod_engine(workers);
+        // Pod-local arrivals on adjacent pairs: many independent components.
+        let pairs: Vec<(usize, usize)> = {
+            let w = seq.wan();
+            w.links().iter().map(|l| (l.src, l.dst)).collect()
+        };
+        let mut rng = Pcg32::new(seed);
+        let mut now = 0.0;
+        let mut next_id = 1u64;
+        for step in 0..6 {
+            for _ in 0..2 + rng.below(3) {
+                let (s, d) = pairs[rng.below(pairs.len())];
+                let mut st = CoflowState::from_coflow(&Coflow::new(
+                    next_id,
+                    vec![Flow { id: 0, src_dc: s, dst_dc: d, volume: rng.uniform(20.0, 800.0) }],
+                ));
+                st.admitted = true;
+                next_id += 1;
+                seq.insert(st.clone());
+                par.insert(st);
+            }
+            seq.round(now, RoundTrigger::CoflowArrival);
+            par.round(now, RoundTrigger::CoflowArrival);
+            assert_eq!(
+                seq.alloc().rates,
+                par.alloc().rates,
+                "workers={workers} seed={seed} diverged at step {step}"
+            );
+            seq.drain(0.08, 0.0);
+            par.drain(0.08, 0.0);
+            seq.take_finished();
+            par.take_finished();
+            now += 0.08;
+        }
+        let (s1, s2) = (seq.take_stats(), par.take_stats());
+        assert_eq!(s1.lp_solves, s2.lp_solves);
+        assert_eq!(s1.component_solves, s2.component_solves);
+        assert_eq!(s1.component_reuses, s2.component_reuses);
+        assert_eq!(s1.gamma_cache_hits, s2.gamma_cache_hits);
+    }
+}
