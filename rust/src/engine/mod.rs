@@ -50,10 +50,12 @@ use crate::lp;
 use crate::lp::decompose::{self, DecomposeScratch};
 use crate::lp::SolverWorkspace;
 use crate::net::paths::PathSet;
-use crate::net::{LinkEvent, Wan};
+use crate::net::telemetry::{CapacityEstimator, TelemetryConfig};
+use crate::net::{EdgeId, LinkEvent, NodeId, Wan};
 use crate::scheduler::{
     build_instance, Allocation, CoflowState, NetView, Policy, RoundCtx, RoundStats, RoundTrigger,
 };
+use std::collections::HashMap;
 
 /// Default worker-thread count for parallel component solves: one per
 /// available core (the solves are CPU-bound and share nothing).
@@ -87,6 +89,15 @@ pub struct EngineConfig {
     /// applies to decomposed rounds with a forkable policy
     /// ([`crate::scheduler::Policy::fork`]).
     pub workers: usize,
+    /// WAN telemetry & capacity estimation ([`crate::net::telemetry`]).
+    /// With the default [`TelemetryConfig::oracle`], the engine consumes
+    /// ground-truth capacities exactly as before (bit-identical); any other
+    /// estimator makes the engine's WAN a **belief**: drivers feed
+    /// throughput samples / probes via [`RoundEngine::observe_edge`] and
+    /// friends, and [`RoundEngine::refresh_beliefs`] pushes belief changes
+    /// through the same ρ-dampened gate that ground-truth fluctuations
+    /// used to take.
+    pub telemetry: TelemetryConfig,
 }
 
 impl Default for EngineConfig {
@@ -97,6 +108,7 @@ impl Default for EngineConfig {
             cold: false,
             decompose: true,
             workers: default_workers(),
+            telemetry: TelemetryConfig::default(),
         }
     }
 }
@@ -148,6 +160,10 @@ pub struct RoundEngine {
     epoch_caps: Vec<f64>,
     /// Validity metadata for per-component allocation reuse.
     comp_cache: ComponentCache,
+    /// Per-edge capacity beliefs ([`crate::net::telemetry`]). Inert under
+    /// the oracle default; otherwise `wan` holds `cap_used` beliefs and
+    /// this is their source of truth.
+    estimator: CapacityEstimator,
     /// Persistent solver workspaces (flat CSR block caches + GK scratch),
     /// one per worker; `workspaces[0]` serves sequential and monolithic
     /// rounds. Swept alongside the component cache when coflows depart.
@@ -182,6 +198,7 @@ impl RoundEngine {
         let paths = PathSet::compute(&wan, k);
         let epoch_caps = wan.capacities();
         let comp_cache = ComponentCache::new(wan.num_edges());
+        let estimator = CapacityEstimator::new(&cfg.telemetry, &epoch_caps);
         let workspaces =
             (0..cfg.workers.max(1)).map(|_| SolverWorkspace::new()).collect();
         RoundEngine {
@@ -196,6 +213,7 @@ impl RoundEngine {
             warm_valid: false,
             epoch_caps,
             comp_cache,
+            estimator,
             workspaces,
             item_edges_buf: Vec::new(),
             decomp: DecomposeScratch::default(),
@@ -302,20 +320,72 @@ impl RoundEngine {
     /// ≥ ρ away from the last epoch's snapshot, the sub-ρ step is promoted
     /// to a re-optimization exactly like a single qualifying event.
     /// The caller runs a round iff [`WanReaction::trigger`] is `Some`.
+    ///
+    /// Under a non-oracle estimator, a `SetBandwidth` event is treated as
+    /// an **authoritative measurement** (an operator-fed probe), not truth
+    /// the scheduler may consume directly: it is fused into the belief and
+    /// the resulting belief change — if any — is what flows through the ρ
+    /// gate. Structural events are directly observable (BFD/SDN port
+    /// state), so they apply identically in every mode.
     pub fn handle_wan_event(&mut self, ev: &LinkEvent) -> WanReaction {
-        let frac = self.wan.apply_event(ev);
-        let structural = matches!(ev, LinkEvent::Fail(..) | LinkEvent::Recover(..));
-        if structural {
-            // Recompute viable paths (§4.4); previous path indices are
-            // meaningless now, so drop warm-start state too. The
-            // decomposition itself is path-derived, so every component
-            // allocation is stale.
-            self.paths = PathSet::compute(&self.wan, self.k);
-            self.bump_epoch();
-            self.comp_cache.touch_all();
-            self.warm_valid = false;
-            WanReaction::Structural
-        } else if frac >= self.cfg.rho || self.epoch_drift(ev) >= self.cfg.rho {
+        let t = self.estimator.clock();
+        self.handle_wan_event_at(ev, t)
+    }
+
+    /// [`RoundEngine::handle_wan_event`] with the driver's clock: belief
+    /// updates the event causes (operator priors, recovery re-anchors) are
+    /// stamped `now`, so the edge does not look observation-stale the
+    /// moment it was announced. Drivers with a clock (the controller, the
+    /// simulator) should prefer this; the un-timed wrapper falls back to
+    /// the estimator's latest observation time.
+    pub fn handle_wan_event_at(&mut self, ev: &LinkEvent, now: f64) -> WanReaction {
+        match *ev {
+            LinkEvent::Fail(..) | LinkEvent::Recover(..) => {
+                self.wan.apply_event(ev);
+                if let LinkEvent::Recover(u, v) = *ev {
+                    // Recovery restores base capacity and is observable:
+                    // the belief re-anchors there too (its cap_used then
+                    // matches the WAN, so no spurious refresh follows).
+                    for (a, b) in [(u, v), (v, u)] {
+                        if let Some(e) = self.wan.edge_between(a, b) {
+                            let base = self.wan.link(e).base_capacity;
+                            self.estimator.reset_edge(e, base, now);
+                        }
+                    }
+                }
+                // Recompute viable paths (§4.4); previous path indices are
+                // meaningless now, so drop warm-start state too. The
+                // decomposition itself is path-derived, so every component
+                // allocation is stale.
+                self.paths = PathSet::compute(&self.wan, self.k);
+                self.bump_epoch();
+                self.comp_cache.touch_all();
+                self.warm_valid = false;
+                WanReaction::Structural
+            }
+            LinkEvent::SetBandwidth(u, v, gbps) => {
+                if self.estimator.is_oracle() {
+                    self.apply_capacity(u, v, gbps)
+                } else {
+                    // Authoritative means authoritative: a prior, not a
+                    // probe — a hold-down estimator must not demand three
+                    // confirmations of an event the operator announced.
+                    if let Some(e) = self.wan.edge_between(u, v) {
+                        self.estimator.prior(e, gbps, now);
+                    }
+                    self.refresh_beliefs().unwrap_or(WanReaction::Clamped)
+                }
+            }
+        }
+    }
+
+    /// The ρ-dampened capacity-change path shared by oracle truth events
+    /// and belief refreshes: apply the new capacity to the scheduler's WAN
+    /// and decide whether it warrants a round.
+    fn apply_capacity(&mut self, u: NodeId, v: NodeId, gbps: f64) -> WanReaction {
+        let ev = LinkEvent::SetBandwidth(u, v, gbps);
+        let frac = self.wan.apply_event(&ev);
+        if frac >= self.cfg.rho || self.epoch_drift(&ev) >= self.cfg.rho {
             // One big step, or many small ones that add up to one: either
             // way the capacities the touched edge's components were solved
             // against are off by ≥ ρ. Only those components re-solve, so
@@ -331,11 +401,9 @@ impl RoundEngine {
                 // (the pre-decomposition behavior; keeping others stale
                 // would promote spurious drift rounds later).
                 self.epoch_caps = self.wan.capacities();
-            } else if let LinkEvent::SetBandwidth(u, v, _) = *ev {
-                if let Some(e) = self.wan.edge_between(u, v) {
-                    self.epoch_caps[e] = self.wan.link(e).avail();
-                    self.comp_cache.touch_edge(e);
-                }
+            } else if let Some(e) = self.wan.edge_between(u, v) {
+                self.epoch_caps[e] = self.wan.link(e).avail();
+                self.comp_cache.touch_edge(e);
             }
             WanReaction::Reoptimize
         } else {
@@ -345,6 +413,73 @@ impl RoundEngine {
             self.clamp_alloc();
             WanReaction::Clamped
         }
+    }
+
+    /// The engine's capacity estimator (read-only; feed it through
+    /// [`RoundEngine::observe_edge`] / [`RoundEngine::probe_edge`]).
+    pub fn estimator(&self) -> &CapacityEstimator {
+        &self.estimator
+    }
+
+    /// The engine's telemetry configuration.
+    pub fn telemetry(&self) -> &TelemetryConfig {
+        &self.cfg.telemetry
+    }
+
+    /// Passive throughput sample on edge `e`: `achieved` Gbps with
+    /// `capped = true` when the link limited the sender. No-op under the
+    /// oracle.
+    pub fn observe_edge(&mut self, e: EdgeId, achieved: f64, capped: bool, now: f64) {
+        self.estimator.observe(e, achieved, capped, now);
+    }
+
+    /// Active probe measurement on edge `e`. No-op under the oracle.
+    pub fn probe_edge(&mut self, e: EdgeId, measured: f64, now: f64) {
+        self.estimator.probe(e, measured, now);
+    }
+
+    /// Announced capacity prior (maintenance window) on edge `e`, pinned
+    /// against samples/probes until `hold_until` (pass `now` for an
+    /// unpinned prior). No-op under the oracle.
+    pub fn announce_prior(&mut self, e: EdgeId, gbps: f64, now: f64, hold_until: f64) {
+        self.estimator.prior_hold(e, gbps, now, hold_until);
+    }
+
+    /// Push accumulated belief changes into the scheduler's WAN through
+    /// the same ρ-dampened gate as ground-truth events: each changed
+    /// edge's `cap_used = max(0, mean − k·σ)` is applied in ascending edge
+    /// order, qualifying changes (≥ ρ, or accumulated drift ≥ ρ) bump the
+    /// capacity epoch exactly like an oracle fluctuation would. Returns
+    /// the strongest reaction, or `None` when no belief moved (and always
+    /// `None` under the oracle) — the caller runs a round iff the returned
+    /// reaction's [`WanReaction::trigger`] is `Some`.
+    pub fn refresh_beliefs(&mut self) -> Option<WanReaction> {
+        if self.estimator.is_oracle() {
+            return None;
+        }
+        let dirty = self.estimator.take_dirty();
+        let mut best: Option<WanReaction> = None;
+        for e in dirty {
+            let link = self.wan.link(e);
+            if !link.up {
+                // A failed link is structurally down regardless of belief;
+                // the belief will re-anchor on recovery.
+                continue;
+            }
+            let cap = self.estimator.cap_used(e);
+            if (cap - link.capacity).abs() <= 1e-9 * link.capacity.max(1.0) {
+                continue;
+            }
+            let (u, v) = (link.src, link.dst);
+            let r = self.apply_capacity(u, v, cap);
+            best = Some(match (best, r) {
+                (Some(WanReaction::Reoptimize), _) | (_, WanReaction::Reoptimize) => {
+                    WanReaction::Reoptimize
+                }
+                (_, other) => other,
+            });
+        }
+        best
     }
 
     /// Advance the Γ-cache epoch and re-anchor **every** edge's drift
@@ -612,23 +747,46 @@ impl RoundEngine {
     /// followed by a sub-ρ recovery must not ratchet a component down to
     /// its historical capacity minimum.
     pub fn clamp_alloc(&mut self) {
-        let RoundEngine { wan, paths, active, alloc, comp_cache, .. } = self;
+        let caps = self.wan.capacities();
+        let factors = self.throttle_factors(&caps);
+        for (id, f) in factors {
+            if let Some(rates) = self.alloc.rates.get_mut(&id) {
+                for group in rates.iter_mut() {
+                    for r in group {
+                        *r *= f;
+                    }
+                }
+            }
+            self.comp_cache.mark_dirty(id);
+        }
+    }
+
+    /// Per-coflow scale factors bringing the live allocation within
+    /// `caps`: for every edge whose aggregate usage exceeds its capacity,
+    /// every coflow crossing it scales by the worst cap/usage ratio over
+    /// the edges its nonzero rates traverse. Only coflows that need
+    /// scaling (factor < 1) appear in the result. Shared by the sub-ρ
+    /// clamp (against believed capacities) and the simulator's
+    /// ground-truth drain throttle (against true capacities) — one
+    /// algorithm, two capacity sources.
+    pub fn throttle_factors(&self, caps: &[f64]) -> HashMap<CoflowId, f64> {
+        let RoundEngine { wan, paths, active, alloc, .. } = self;
         let net = NetView { wan, paths };
-        let usage = alloc.edge_usage(active, &net, wan.num_edges());
-        let caps = wan.capacities();
+        let usage = alloc.edge_usage(active, &net, caps.len());
         let mut factors: Vec<f64> = vec![1.0; caps.len()];
         let mut any = false;
-        for (e, (&u, &c)) in usage.iter().zip(&caps).enumerate() {
+        for (e, (&u, &c)) in usage.iter().zip(caps).enumerate() {
             if u > c && u > 1e-12 {
                 factors[e] = c / u;
                 any = true;
             }
         }
+        let mut out = HashMap::new();
         if !any {
-            return;
+            return out;
         }
         for cf in active.iter() {
-            let Some(rates) = alloc.rates.get_mut(&cf.id) else { continue };
+            let Some(rates) = alloc.rates.get(&cf.id) else { continue };
             let mut f = 1.0f64;
             for (gi, g) in cf.groups.iter().enumerate() {
                 let pair_paths = paths.get(g.src, g.dst);
@@ -646,14 +804,10 @@ impl RoundEngine {
                 }
             }
             if f < 1.0 {
-                for group in rates.iter_mut() {
-                    for r in group {
-                        *r *= f;
-                    }
-                }
-                comp_cache.mark_dirty(cf.id);
+                out.insert(cf.id, f);
             }
         }
+        out
     }
 
     /// Drain every active FlowGroup at the current allocation for `dt`
@@ -661,6 +815,21 @@ impl RoundEngine {
     /// keeps a 1e-6 trickle until the agent confirms completion; the
     /// simulator floors at 0). Returns the Gbit moved.
     pub fn drain(&mut self, dt: f64, floor: f64) -> f64 {
+        self.drain_with(dt, floor, None)
+    }
+
+    /// [`RoundEngine::drain`] with optional per-coflow rate throttling:
+    /// when the scheduler's WAN is a *belief*, the simulator caps each
+    /// coflow's effective drain by what the **true** capacities admit
+    /// (achieved = min(allocated, truth) — an over-optimistic belief must
+    /// not move bytes the real network cannot carry). `throttle` maps
+    /// coflow id → a factor in `[0, 1]`; absent ids drain at full rate.
+    pub fn drain_with(
+        &mut self,
+        dt: f64,
+        floor: f64,
+        throttle: Option<&HashMap<CoflowId, f64>>,
+    ) -> f64 {
         if dt <= 0.0 {
             return 0.0;
         }
@@ -668,11 +837,16 @@ impl RoundEngine {
         let mut emptied: Vec<CoflowId> = Vec::new();
         for cf in &mut self.active {
             let Some(rates) = self.alloc.rates.get(&cf.id) else { continue };
+            let scale = throttle
+                .and_then(|t| t.get(&cf.id).copied())
+                .unwrap_or(1.0)
+                .clamp(0.0, 1.0);
             for (gi, rem) in cf.remaining.iter_mut().enumerate() {
                 if *rem <= 1e-9 {
                     continue;
                 }
-                let rate: f64 = rates.get(gi).map(|r| r.iter().sum()).unwrap_or(0.0);
+                let rate: f64 =
+                    rates.get(gi).map(|r| r.iter().sum::<f64>()).unwrap_or(0.0) * scale;
                 if rate <= 0.0 {
                     continue;
                 }
@@ -1085,6 +1259,118 @@ mod tests {
         assert_eq!(s1.lp_solves, s2.lp_solves, "solve counts must match");
         assert_eq!(s1.component_solves, s2.component_solves);
         assert_eq!(s1.gamma_cache_hits, s2.gamma_cache_hits);
+    }
+
+    fn estimating_engine() -> RoundEngine {
+        use crate::net::telemetry::{EstimatorKind, TelemetryConfig};
+        let wan = topologies::fig1a();
+        let policy = TerraPolicy::new(TerraConfig { alpha: 0.0, ..Default::default() });
+        RoundEngine::new(
+            wan,
+            Box::new(policy),
+            EngineConfig {
+                check_feasibility: true,
+                telemetry: TelemetryConfig {
+                    estimator: EstimatorKind::Ewma { alpha: 0.5 },
+                    ..TelemetryConfig::oracle()
+                },
+                ..Default::default()
+            },
+        )
+    }
+
+    /// Oracle telemetry is inert: feeding observations and refreshing
+    /// beliefs must change nothing at all — same epoch, same WAN
+    /// capacities, same allocation.
+    #[test]
+    fn oracle_telemetry_is_inert() {
+        let mut e = engine(false);
+        e.insert(coflow(1, 0, 1, 5.0));
+        e.round(0.0, RoundTrigger::CoflowArrival);
+        let epoch0 = e.epoch();
+        let caps0 = e.wan().capacities();
+        let alloc0 = e.alloc().rates.clone();
+        for edge in 0..e.wan().num_edges() {
+            e.observe_edge(edge, 1.0, true, 1.0);
+            e.probe_edge(edge, 2.0, 1.0);
+            e.announce_prior(edge, 3.0, 1.0, 5.0);
+        }
+        assert_eq!(e.refresh_beliefs(), None);
+        assert_eq!(e.epoch(), epoch0);
+        assert_eq!(e.wan().capacities(), caps0);
+        assert_eq!(e.alloc().rates, alloc0);
+    }
+
+    /// Belief changes flow through the same ρ gate as oracle events: a
+    /// collapsed belief on a used edge re-optimizes (epoch bump), a small
+    /// belief wiggle only clamps, and the scheduler's WAN tracks cap_used.
+    #[test]
+    fn belief_refresh_routes_through_rho_gate() {
+        let mut e = estimating_engine();
+        e.insert(coflow(1, 0, 1, 5.0));
+        e.round(0.0, RoundTrigger::CoflowArrival);
+        let epoch0 = e.epoch();
+        let edge = e.wan().edge_between(0, 1).unwrap();
+        // Repeated capped samples at 3 Gbps collapse the 10 Gbps belief.
+        for i in 0..6 {
+            e.observe_edge(edge, 3.0, true, i as f64);
+        }
+        let reaction = e.refresh_beliefs().expect("belief moved");
+        assert_eq!(reaction, WanReaction::Reoptimize, "≥ρ belief change must re-optimize");
+        assert!(e.epoch() > epoch0, "belief change must bump the capacity epoch");
+        let believed = e.wan().link(edge).capacity;
+        assert!(
+            (believed - e.estimator().cap_used(edge)).abs() < 1e-9,
+            "scheduler WAN must hold cap_used: {believed}"
+        );
+        assert!(believed < 5.0, "belief should have collapsed: {believed}");
+        e.round(1.0, reaction.trigger().unwrap());
+        // A tiny wiggle (within ρ of the new level) only clamps.
+        let epoch1 = e.epoch();
+        let level = e.estimator().mean(edge);
+        e.observe_edge(edge, level * 0.95, true, 10.0);
+        match e.refresh_beliefs() {
+            None | Some(WanReaction::Clamped) => {}
+            other => panic!("sub-ρ belief wiggle must not re-optimize: {other:?}"),
+        }
+        assert_eq!(e.epoch(), epoch1);
+    }
+
+    /// A SetBandwidth event under a non-oracle estimator is an
+    /// authoritative measurement, and structural recovery re-anchors the
+    /// belief at base capacity.
+    #[test]
+    fn belief_mode_events_and_recovery_reanchor() {
+        let mut e = estimating_engine();
+        e.insert(coflow(1, 0, 1, 5.0));
+        e.round(0.0, RoundTrigger::CoflowArrival);
+        let edge = e.wan().edge_between(0, 1).unwrap();
+        // The injected event is authoritative: the belief jumps to it
+        // outright (a prior), regardless of estimator kind.
+        e.handle_wan_event(&LinkEvent::SetBandwidth(0, 1, 2.0));
+        let m = e.estimator().mean(edge);
+        assert!((m - 2.0).abs() < 1e-9, "mean={m}");
+        // Fail + recover: belief back at base, WAN at base.
+        assert_eq!(e.handle_wan_event(&LinkEvent::Fail(0, 1)), WanReaction::Structural);
+        assert_eq!(e.handle_wan_event(&LinkEvent::Recover(0, 1)), WanReaction::Structural);
+        assert_eq!(e.estimator().mean(edge), 10.0);
+        assert_eq!(e.wan().link(edge).capacity, 10.0);
+        assert_eq!(e.refresh_beliefs(), None, "re-anchored belief must not re-fire");
+    }
+
+    /// Truth-throttled drain: a coflow whose edges truly admit less than
+    /// the (believed) allocation drains at the throttled rate.
+    #[test]
+    fn drain_with_throttles_per_coflow() {
+        let mut e = engine(false);
+        e.insert(coflow(1, 0, 1, 5.0)); // 40 Gbit at 20 Gbps believed
+        e.round(0.0, RoundTrigger::CoflowArrival);
+        let mut throttle = HashMap::new();
+        throttle.insert(1u64, 0.5);
+        let moved = e.drain_with(1.0, 0.0, Some(&throttle));
+        assert!((moved - 10.0).abs() < 0.3, "moved={moved} (expected ~20·0.5)");
+        let full = e.drain_with(1.0, 0.0, None);
+        assert!((full - 20.0).abs() < 0.5, "moved={full}");
     }
 
     #[test]

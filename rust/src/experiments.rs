@@ -8,6 +8,7 @@
 use crate::baselines;
 use crate::coflow::GB;
 use crate::net::dynamics::{self, DynamicsProfile};
+use crate::net::telemetry::TelemetryConfig;
 use crate::net::{topologies, LinkEvent, Wan};
 use crate::scheduler::terra::{TerraConfig, TerraPolicy};
 use crate::scheduler::Policy;
@@ -477,6 +478,199 @@ pub fn scenarios_json(cfg: &SweepConfig, rows: &[ScenarioRow]) -> Json {
     ])
 }
 
+/// Configuration of the **estimation sweep**: dynamics profiles ×
+/// capacity estimators on one ⟨topology, workload⟩, with the Terra policy
+/// throughout — the axis under study is how well the scheduler performs
+/// when it must *estimate* WAN capacity instead of reading it from the
+/// dynamics oracle.
+#[derive(Clone, Debug)]
+pub struct EstimationSweepConfig {
+    pub jobs: usize,
+    pub seed: u64,
+    pub horizon_s: f64,
+    pub topology: String,
+    pub workload: String,
+    /// Dynamics profiles ([`DynamicsProfile::by_name`]); must include the
+    /// estimator stress tests.
+    pub profiles: Vec<String>,
+    /// Estimator presets ([`TelemetryConfig::by_name`]).
+    pub estimators: Vec<String>,
+    /// When > 0, every coflow gets a deadline of `deadline_d ×` its
+    /// standalone min CCT, so `deadline_met` is populated per
+    /// (profile, estimator) cell.
+    pub deadline_d: f64,
+}
+
+impl Default for EstimationSweepConfig {
+    fn default() -> Self {
+        EstimationSweepConfig {
+            jobs: 6,
+            seed: 7,
+            horizon_s: 420.0,
+            topology: "swan".into(),
+            workload: "bigbench".into(),
+            profiles: vec![
+                "flaky".into(),
+                "gray".into(),
+                "maintenance".into(),
+                "maintenance-unannounced".into(),
+            ],
+            estimators: TelemetryConfig::preset_names().iter().map(|s| s.to_string()).collect(),
+            deadline_d: 3.0,
+        }
+    }
+}
+
+/// One estimation-sweep cell: a ⟨profile, estimator⟩ outcome.
+#[derive(Clone, Debug)]
+pub struct EstimationRow {
+    pub topology: String,
+    pub workload: String,
+    pub profile: String,
+    pub estimator: String,
+    pub avg_cct: f64,
+    pub p99_cct: f64,
+    /// CCT inflation vs the oracle on the identical scenario (1.0 = no
+    /// cost of estimation; the oracle row is 1.0 by construction).
+    pub cct_vs_oracle: f64,
+    /// Mean per-edge absolute percentage error of believed vs true
+    /// capacity, sampled at telemetry ticks (0 for the oracle).
+    pub est_mape: f64,
+    pub est_samples: usize,
+    pub est_probes: usize,
+    /// Staleness episodes (truth ≥ ρ away from belief) opened / resolved,
+    /// and the mean simulated latency to resolution.
+    pub stale_events: usize,
+    pub stale_resolved: usize,
+    pub stale_reaction_s_avg: f64,
+    pub deadline_met: f64,
+    pub rounds: usize,
+    pub wan_events: usize,
+    pub wan_rounds: usize,
+    pub unfinished: usize,
+    pub makespan: f64,
+}
+
+/// Run the estimation sweep: every profile × estimator cell replays the
+/// *identical* workload and ground-truth event stream; only the
+/// scheduler's view of capacity differs. Rows come back in deterministic
+/// sweep order, oracle baselines computed per profile regardless of the
+/// estimator list (they anchor `cct_vs_oracle`).
+pub fn estimation_sweep(cfg: &EstimationSweepConfig) -> Vec<EstimationRow> {
+    let Some(wan) = topologies::by_name(&cfg.topology) else {
+        log::warn!("unknown topology {}; empty estimation sweep", cfg.topology);
+        return Vec::new();
+    };
+    let Some(kind) = WorkloadKind::by_name(&cfg.workload) else {
+        log::warn!("unknown workload {}; empty estimation sweep", cfg.workload);
+        return Vec::new();
+    };
+    let wseed = scenario_seed(cfg.seed, 0, 0, usize::MAX);
+    let wcfg = WorkloadConfig::new(kind, wseed);
+    let mut jobs = WorkloadGen::with_config(wcfg).jobs(&wan, cfg.jobs);
+    if cfg.deadline_d > 0.0 {
+        assign_deadlines(&mut jobs, &wan, cfg.deadline_d);
+    }
+    let mut rows = Vec::new();
+    for (pi, pname) in cfg.profiles.iter().enumerate() {
+        let Some(profile) = DynamicsProfile::by_name(pname) else {
+            log::warn!("unknown dynamics profile {pname}; skipping");
+            continue;
+        };
+        let sseed = scenario_seed(cfg.seed, 0, 0, pi);
+        let stream = dynamics::generate_stream(&wan, &profile, cfg.horizon_s, sseed);
+        let run = |telemetry: TelemetryConfig| -> Report {
+            let sim_cfg = SimConfig { telemetry, ..Default::default() };
+            let mut sim =
+                Simulation::new(wan.clone(), Box::new(TerraPolicy::default()), sim_cfg);
+            for ev in &stream.events {
+                sim.add_wan_event(ev.t, ev.ev.clone());
+            }
+            for w in &stream.announcements {
+                sim.add_announcement(w);
+            }
+            sim.run_jobs(jobs.clone())
+        };
+        let oracle = run(TelemetryConfig::oracle());
+        for ename in &cfg.estimators {
+            let Some(telemetry) = TelemetryConfig::by_name(ename) else {
+                log::warn!("unknown estimator {ename}; skipping");
+                continue;
+            };
+            let rep = if telemetry.is_oracle() { oracle.clone() } else { run(telemetry) };
+            rows.push(EstimationRow {
+                topology: cfg.topology.clone(),
+                workload: cfg.workload.clone(),
+                profile: profile.name.clone(),
+                estimator: ename.clone(),
+                avg_cct: rep.avg_cct(),
+                p99_cct: rep.p99_cct(),
+                cct_vs_oracle: rep.avg_cct() / oracle.avg_cct().max(1e-9),
+                est_mape: rep.est_mape(),
+                est_samples: rep.est_samples,
+                est_probes: rep.est_probes,
+                stale_events: rep.stale_events,
+                stale_resolved: rep.stale_resolved,
+                stale_reaction_s_avg: rep.avg_stale_reaction_s(),
+                deadline_met: rep.deadline_met_fraction(),
+                rounds: rep.rounds,
+                wan_events: rep.wan_events,
+                wan_rounds: rep.wan_rounds,
+                unfinished: rep.unfinished(),
+                makespan: rep.makespan,
+            });
+        }
+    }
+    rows
+}
+
+/// Serialize estimation-sweep results for `BENCH_estimation.json`.
+pub fn estimation_json(cfg: &EstimationSweepConfig, rows: &[EstimationRow]) -> Json {
+    let rows: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::from_pairs([
+                ("topology", Json::from(r.topology.clone())),
+                ("workload", r.workload.clone().into()),
+                ("profile", r.profile.clone().into()),
+                ("estimator", r.estimator.clone().into()),
+                ("avg_cct_s", r.avg_cct.into()),
+                ("p99_cct_s", r.p99_cct.into()),
+                ("cct_vs_oracle", r.cct_vs_oracle.into()),
+                ("est_mape", r.est_mape.into()),
+                ("est_samples", r.est_samples.into()),
+                ("est_probes", r.est_probes.into()),
+                ("stale_events", r.stale_events.into()),
+                ("stale_resolved", r.stale_resolved.into()),
+                ("stale_reaction_s_avg", r.stale_reaction_s_avg.into()),
+                ("deadline_met", r.deadline_met.into()),
+                ("rounds", r.rounds.into()),
+                ("wan_events", r.wan_events.into()),
+                ("wan_rounds", r.wan_rounds.into()),
+                ("unfinished", r.unfinished.into()),
+                ("makespan_s", r.makespan.into()),
+            ])
+        })
+        .collect();
+    Json::from_pairs([
+        ("seed", Json::from(cfg.seed)),
+        ("jobs", cfg.jobs.into()),
+        ("horizon_s", cfg.horizon_s.into()),
+        ("deadline_d", cfg.deadline_d.into()),
+        ("topology", cfg.topology.clone().into()),
+        ("workload", cfg.workload.clone().into()),
+        (
+            "profiles",
+            cfg.profiles.iter().map(|p| Json::from(p.clone())).collect::<Vec<_>>().into(),
+        ),
+        (
+            "estimators",
+            cfg.estimators.iter().map(|p| Json::from(p.clone())).collect::<Vec<_>>().into(),
+        ),
+        ("rows", Json::Arr(rows)),
+    ])
+}
+
 /// Figure 1: the motivating example — average CCT of the two coflows under
 /// the four policies of Fig 1c–1f. Returns (policy name, avg CCT seconds).
 pub fn fig1_motivation() -> Vec<(String, f64)> {
@@ -632,6 +826,41 @@ mod tests {
         let flaky: Vec<&ScenarioRow> = a.iter().filter(|r| r.profile == "flaky").collect();
         assert!(calm.iter().all(|r| r.wan_events == 0));
         assert!(flaky.iter().all(|r| r.wan_events > 0), "{flaky:?}");
+    }
+
+    #[test]
+    fn estimation_sweep_covers_grid_oracle_anchors_baseline() {
+        let cfg = EstimationSweepConfig {
+            jobs: 2,
+            horizon_s: 160.0,
+            profiles: vec!["gray".into(), "maintenance".into()],
+            estimators: vec!["oracle".into(), "ewma".into()],
+            deadline_d: 3.0,
+            ..Default::default()
+        };
+        let rows = estimation_sweep(&cfg);
+        assert_eq!(rows.len(), 4, "2 profiles x 2 estimators");
+        for r in &rows {
+            assert_eq!(r.unfinished, 0, "{}/{} left work unfinished", r.profile, r.estimator);
+            if r.estimator == "oracle" {
+                assert_eq!(r.est_mape, 0.0, "the oracle has no estimation error");
+                assert!((r.cct_vs_oracle - 1.0).abs() < 1e-12);
+                assert_eq!(r.stale_reaction_s_avg, 0.0);
+                assert_eq!(r.est_samples, 0);
+            } else {
+                assert!(r.est_samples > 0, "{}/{} ingested no samples", r.profile, r.estimator);
+                assert!(r.cct_vs_oracle.is_finite());
+            }
+        }
+        // Deadline-bearing workloads are wired through every cell.
+        assert!(rows.iter().all(|r| r.deadline_met >= 0.0));
+        // Deterministic: virtual-time metrics are bit-reproducible.
+        let again = estimation_sweep(&cfg);
+        for (a, b) in rows.iter().zip(&again) {
+            assert_eq!(a.avg_cct.to_bits(), b.avg_cct.to_bits());
+            assert_eq!(a.est_samples, b.est_samples);
+            assert_eq!(a.stale_events, b.stale_events);
+        }
     }
 
     #[test]

@@ -40,6 +40,10 @@ fn main() {
                  \u{20}          [--out BENCH_scenarios.json]   (workload x topology x policy\n\
                  \u{20}          x WAN-dynamics scenario sweep; identical seed => identical\n\
                  \u{20}          event streams)\n\
+                 \u{20}          --estimation [--estimators oracle,ewma,kalman,holddown]\n\
+                 \u{20}          (capacity-estimation sweep: profiles x estimators, writes\n\
+                 \u{20}          BENCH_estimation.json with MAPE / reaction latency / CCT\n\
+                 \u{20}          inflation vs oracle; deadlines default to 3x min CCT)\n\
                  testbed   --topology fig1a --gbit VOLUME   (real TCP overlay demo)\n\
                  topology  --name swan|gscale|att|fig1a"
             );
@@ -225,8 +229,13 @@ fn reproduce(args: &Args) {
 
 /// The workload × topology × policy × WAN-dynamics scenario sweep. Writes
 /// machine-readable results to `BENCH_scenarios.json` (or `--out`).
+/// `--estimation` switches to the capacity-estimation sweep
+/// (profiles × estimators → `BENCH_estimation.json`).
 fn sweep(args: &Args) {
     use terra::experiments as exp;
+    if args.flag("estimation") || args.get("estimation").is_some() {
+        return estimation_sweep(args);
+    }
     let defaults = exp::SweepConfig::default();
     let list = |v: &str| -> Vec<String> { v.split(',').map(|s| s.trim().to_string()).collect() };
     let cfg = exp::SweepConfig {
@@ -269,6 +278,61 @@ fn sweep(args: &Args) {
     ));
     let out = args.get_or("out", "BENCH_scenarios.json");
     match std::fs::write(out, format!("{}\n", exp::scenarios_json(&cfg, &rows))) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => {
+            eprintln!("failed to write {out}: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// The estimation sweep: dynamics profiles × capacity estimators on one
+/// ⟨topology, workload⟩, writing `BENCH_estimation.json` (or `--out`).
+fn estimation_sweep(args: &Args) {
+    use terra::experiments as exp;
+    let defaults = exp::EstimationSweepConfig::default();
+    let list = |v: &str| -> Vec<String> { v.split(',').map(|s| s.trim().to_string()).collect() };
+    let cfg = exp::EstimationSweepConfig {
+        jobs: args.get_usize("jobs", defaults.jobs),
+        seed: args.get_u64("seed", defaults.seed),
+        horizon_s: args.get_f64("horizon", defaults.horizon_s),
+        deadline_d: args.get_f64("deadlines", defaults.deadline_d),
+        topology: args.get_or("topology", &defaults.topology).to_string(),
+        workload: args.get_or("workload", &defaults.workload).to_string(),
+        profiles: args.get("profiles").map(list).unwrap_or(defaults.profiles),
+        estimators: args.get("estimators").map(list).unwrap_or(defaults.estimators),
+    };
+    let rows = exp::estimation_sweep(&cfg);
+    let mut t = Table::new(&[
+        "profile", "estimator", "avg CCT", "vs oracle", "MAPE", "react s", "stale", "probes",
+        "met", "unfin",
+    ]);
+    for r in &rows {
+        t.row(&[
+            r.profile.clone(),
+            r.estimator.clone(),
+            format!("{:.1}s", r.avg_cct),
+            format!("{:.2}x", r.cct_vs_oracle),
+            format!("{:.1}%", r.est_mape * 100.0),
+            format!("{:.2}", r.stale_reaction_s_avg),
+            format!("{}/{}", r.stale_resolved, r.stale_events),
+            r.est_probes.to_string(),
+            format!("{:.0}%", r.deadline_met * 100.0),
+            r.unfinished.to_string(),
+        ]);
+    }
+    t.print(&format!(
+        "Estimation sweep: {} rows on {}/{} (seed {}, {} jobs, horizon {:.0}s, deadlines {:.1}x)",
+        rows.len(),
+        cfg.topology,
+        cfg.workload,
+        cfg.seed,
+        cfg.jobs,
+        cfg.horizon_s,
+        cfg.deadline_d
+    ));
+    let out = args.get_or("out", "BENCH_estimation.json");
+    match std::fs::write(out, format!("{}\n", exp::estimation_json(&cfg, &rows))) {
         Ok(()) => println!("wrote {out}"),
         Err(e) => {
             eprintln!("failed to write {out}: {e}");

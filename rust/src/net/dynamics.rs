@@ -15,6 +15,12 @@
 //!   process (exponential time-to-failure and time-to-repair);
 //! - [`DynamicsModel::RegionalOutage`] — correlated failures: every link
 //!   touching one site goes down together and recovers together;
+//! - [`DynamicsModel::Maintenance`] — scheduled one-link-at-a-time
+//!   half-capacity drains (SWAN-style planned updates), announced or
+//!   unannounced; announced windows additionally emit
+//!   [`AnnouncedWindow`]s that feed the capacity estimator as priors;
+//! - [`DynamicsModel::GrayFailure`] — a link that stays "up" but
+//!   fluctuates violently around a low mean (the estimator's stress test);
 //! - [`DynamicsModel::TraceReplay`] — replay a flat-file trace
 //!   ([`parse_trace`]).
 //!
@@ -52,6 +58,33 @@ pub struct TimedLinkEvent {
     pub ev: LinkEvent,
 }
 
+/// An announced maintenance window: the operator tells the controller in
+/// advance that the directed edge `(u, v)` will run at `gbps` over
+/// `[start_t, end_t)`. Consumed by the telemetry subsystem as an
+/// authoritative capacity prior; unannounced drains emit only the
+/// [`LinkEvent`]s and must be *discovered* through sampling.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AnnouncedWindow {
+    /// When the announcement lands at the controller.
+    pub announce_t: f64,
+    /// When the drain takes effect.
+    pub start_t: f64,
+    /// When capacity restores to base.
+    pub end_t: f64,
+    pub u: NodeId,
+    pub v: NodeId,
+    /// Capacity (Gbps) of the directed edge during the window.
+    pub gbps: f64,
+}
+
+/// A generated dynamics stream: the WAN truth events plus any maintenance
+/// announcements (empty for profiles without announced windows).
+#[derive(Clone, Debug, Default)]
+pub struct DynamicsStream {
+    pub events: Vec<TimedLinkEvent>,
+    pub announcements: Vec<AnnouncedWindow>,
+}
+
 /// One composable dynamics model. Parameters are in seconds / fractions.
 #[derive(Clone, Debug)]
 pub enum DynamicsModel {
@@ -70,6 +103,31 @@ pub enum DynamicsModel {
     /// picks a site uniformly and fails *all* links touching it at the same
     /// timestamp, recovering them together `outage_s` later.
     RegionalOutage { mtbo_s: f64, outage_s: f64 },
+    /// Scheduled maintenance: one undirected link at a time is drained to
+    /// `frac ×` base capacity (both directions) for `window_s`, then
+    /// restored. Windows start at `period_s / 2` and recur every
+    /// `period_s`, cycling through the links in edge order — `window_s` is
+    /// clamped to `period_s` so drains never overlap (one link at a time,
+    /// SWAN-style planned updates). When `announced`, each window also
+    /// emits an [`AnnouncedWindow`] `lead_s` ahead of the drain, which the
+    /// telemetry subsystem consumes as an authoritative capacity prior;
+    /// unannounced drains must be discovered by sampling. Deterministic:
+    /// the schedule uses no randomness at all.
+    Maintenance { period_s: f64, window_s: f64, frac: f64, announced: bool, lead_s: f64 },
+    /// Gray failure: a directed edge stays *up* but its available
+    /// bandwidth collapses to around `low_frac ×` base and churns
+    /// violently there. Episodes arrive per-edge ~ Exp(`mtbg_s`), last
+    /// `episode_s`, and emit a `SetBandwidth` every `churn_interval_s`
+    /// with multiplier `low_frac · (1 + churn_amp · N(0,1))` clamped to
+    /// `[0.01, 1.0]`; the episode ends with a restore to base. No `Fail`
+    /// is ever emitted — the pathology is that the link *looks* healthy.
+    GrayFailure {
+        mtbg_s: f64,
+        episode_s: f64,
+        low_frac: f64,
+        churn_interval_s: f64,
+        churn_amp: f64,
+    },
     /// Replay a fixed event list (e.g. from [`parse_trace`]) verbatim. The
     /// horizon does *not* truncate traces: dropping a trailing recovery
     /// would strand a link down, violating the no-stranding guarantee —
@@ -135,12 +193,64 @@ impl DynamicsProfile {
         }
     }
 
+    /// Pure gray failures: links stay "up" while their bandwidth churns
+    /// violently around a low mean — the capacity estimator's stress test
+    /// (hold-down exists for exactly this flapping).
+    pub fn gray() -> DynamicsProfile {
+        DynamicsProfile {
+            name: "gray".into(),
+            models: vec![DynamicsModel::GrayFailure {
+                mtbg_s: 240.0,
+                episode_s: 60.0,
+                low_frac: 0.15,
+                churn_interval_s: 4.0,
+                churn_amp: 0.5,
+            }],
+        }
+    }
+
+    /// Announced scheduled maintenance: one link at a time drains to half
+    /// capacity, with the window announced 15 s ahead (the announcement
+    /// feeds the estimator as a prior).
+    pub fn maintenance() -> DynamicsProfile {
+        DynamicsProfile {
+            name: "maintenance".into(),
+            models: vec![DynamicsModel::Maintenance {
+                period_s: 120.0,
+                window_s: 60.0,
+                frac: 0.5,
+                announced: true,
+                lead_s: 15.0,
+            }],
+        }
+    }
+
+    /// The same maintenance schedule with no announcements: the estimator
+    /// has to *discover* each drain through sampling.
+    pub fn maintenance_unannounced() -> DynamicsProfile {
+        DynamicsProfile {
+            name: "maintenance-unannounced".into(),
+            models: vec![DynamicsModel::Maintenance {
+                period_s: 120.0,
+                window_s: 60.0,
+                frac: 0.5,
+                announced: false,
+                lead_s: 0.0,
+            }],
+        }
+    }
+
     pub fn by_name(name: &str) -> Option<DynamicsProfile> {
         match name.to_ascii_lowercase().as_str() {
             "calm" | "none" | "static" => Some(DynamicsProfile::calm()),
             "diurnal" => Some(DynamicsProfile::diurnal()),
             "flaky" => Some(DynamicsProfile::flaky()),
             "regional" => Some(DynamicsProfile::regional()),
+            "gray" | "grey" => Some(DynamicsProfile::gray()),
+            "maintenance" => Some(DynamicsProfile::maintenance()),
+            "maintenance-unannounced" | "maintenance_unannounced" => {
+                Some(DynamicsProfile::maintenance_unannounced())
+            }
             _ => None,
         }
     }
@@ -152,6 +262,8 @@ impl DynamicsProfile {
             DynamicsProfile::diurnal(),
             DynamicsProfile::flaky(),
             DynamicsProfile::regional(),
+            DynamicsProfile::gray(),
+            DynamicsProfile::maintenance(),
         ]
     }
 }
@@ -165,22 +277,46 @@ pub fn generate(
     horizon_s: f64,
     seed: u64,
 ) -> Vec<TimedLinkEvent> {
+    generate_stream(wan, profile, horizon_s, seed).events
+}
+
+/// [`generate`] plus maintenance announcements: the full stream a telemetry
+/// -aware driver consumes. `events` are byte-identical to [`generate`]'s
+/// output for the same arguments; `announcements` is sorted by announce
+/// time and empty unless the profile contains an announced
+/// [`DynamicsModel::Maintenance`].
+pub fn generate_stream(
+    wan: &Wan,
+    profile: &DynamicsProfile,
+    horizon_s: f64,
+    seed: u64,
+) -> DynamicsStream {
     let root = seed ^ 0xD1_4A_11C5;
     let mut out: Vec<TimedLinkEvent> = Vec::new();
+    let mut ann: Vec<AnnouncedWindow> = Vec::new();
     for (mi, model) in profile.models.iter().enumerate() {
-        model.emit(wan, horizon_s, child_seed(root, mi as u64 + 1), &mut out);
+        model.emit(wan, horizon_s, child_seed(root, mi as u64 + 1), &mut out, &mut ann);
     }
     out.retain(|e| e.t.is_finite() && e.t >= 0.0);
     // Stable sort: equal timestamps (correlated outages) keep emission order.
     out.sort_by(|a, b| a.t.total_cmp(&b.t));
-    out
+    ann.sort_by(|a, b| a.announce_t.total_cmp(&b.announce_t));
+    DynamicsStream { events: out, announcements: ann }
 }
 
 impl DynamicsModel {
     /// Append this model's events over `[0, horizon_s)` (recoveries may
     /// trail past the horizon). `mseed` is the model's key-derived seed;
-    /// per-edge streams derive from it by edge id only.
-    fn emit(&self, wan: &Wan, horizon_s: f64, mseed: u64, out: &mut Vec<TimedLinkEvent>) {
+    /// per-edge streams derive from it by edge id only. Announced
+    /// maintenance windows additionally append to `ann`.
+    fn emit(
+        &self,
+        wan: &Wan,
+        horizon_s: f64,
+        mseed: u64,
+        out: &mut Vec<TimedLinkEvent>,
+        ann: &mut Vec<AnnouncedWindow>,
+    ) {
         match self {
             DynamicsModel::Diurnal { period_s, amplitude, jitter, interval_s } => {
                 let period = period_s.max(1e-6);
@@ -252,6 +388,84 @@ impl DynamicsModel {
                         }
                     }
                     t = rec + rng.exp(mtbo_s.max(1e-3));
+                }
+            }
+            DynamicsModel::Maintenance { period_s, window_s, frac, announced, lead_s } => {
+                // Deterministic schedule, no RNG: windows at period/2 +
+                // i·period, cycling through undirected links in edge order.
+                let undirected: Vec<usize> = (0..wan.num_edges())
+                    .filter(|&e| wan.link(e).src < wan.link(e).dst)
+                    .collect();
+                if undirected.is_empty() {
+                    return;
+                }
+                let period = period_s.max(1e-3);
+                let window = window_s.max(1e-3).min(period);
+                let frac = frac.clamp(0.0, 1.0);
+                let mut t = period * 0.5;
+                let mut i = 0usize;
+                while t < horizon_s {
+                    let e = undirected[i % undirected.len()];
+                    let (u, v) = (wan.link(e).src, wan.link(e).dst);
+                    for (a, b) in [(u, v), (v, u)] {
+                        let Some(de) = wan.edge_between(a, b) else { continue };
+                        let base = wan.link(de).base_capacity;
+                        out.push(TimedLinkEvent {
+                            t,
+                            ev: LinkEvent::SetBandwidth(a, b, base * frac),
+                        });
+                        // Always restore, even past the horizon: a stream
+                        // must never strand a link at drained capacity.
+                        out.push(TimedLinkEvent {
+                            t: t + window,
+                            ev: LinkEvent::SetBandwidth(a, b, base),
+                        });
+                        if *announced {
+                            ann.push(AnnouncedWindow {
+                                announce_t: (t - lead_s).max(0.0),
+                                start_t: t,
+                                end_t: t + window,
+                                u: a,
+                                v: b,
+                                gbps: base * frac,
+                            });
+                        }
+                    }
+                    t += period;
+                    i += 1;
+                }
+            }
+            DynamicsModel::GrayFailure {
+                mtbg_s,
+                episode_s,
+                low_frac,
+                churn_interval_s,
+                churn_amp,
+            } => {
+                for (e, link) in wan.links().iter().enumerate() {
+                    let mut lr = Pcg32::new(child_seed(mseed, e as u64 + 1));
+                    let base = link.base_capacity;
+                    let mut t = lr.exp(mtbg_s.max(1e-3));
+                    while t < horizon_s {
+                        let end = t + episode_s.max(1e-3);
+                        let mut s = t;
+                        while s < end {
+                            let m = (low_frac * (1.0 + churn_amp * lr.gaussian()))
+                                .clamp(0.01, 1.0);
+                            out.push(TimedLinkEvent {
+                                t: s,
+                                ev: LinkEvent::SetBandwidth(link.src, link.dst, base * m),
+                            });
+                            s += churn_interval_s.max(1e-3);
+                        }
+                        // The episode ends with a full restore (possibly
+                        // past the horizon — no stranding at the low mean).
+                        out.push(TimedLinkEvent {
+                            t: end,
+                            ev: LinkEvent::SetBandwidth(link.src, link.dst, base),
+                        });
+                        t = end + lr.exp(mtbg_s.max(1e-3));
+                    }
                 }
             }
             DynamicsModel::TraceReplay { events } => {
@@ -427,6 +641,78 @@ mod tests {
             let common = group.iter().all(|&(u, v)| u == u0 || v == u0);
             let common2 = group.iter().all(|&(u, v)| u == v0 || v == v0);
             assert!(common || common2, "outage group shares no site: {group:?}");
+        }
+    }
+
+    #[test]
+    fn maintenance_drains_one_link_at_a_time_and_restores() {
+        let wan = topologies::swan();
+        let stream =
+            generate_stream(&wan, &DynamicsProfile::maintenance(), 600.0, 0 /* unused */);
+        assert!(!stream.events.is_empty());
+        assert!(!stream.announcements.is_empty(), "announced profile must announce");
+        // Track drained undirected links over time: never more than one.
+        use std::collections::HashSet;
+        let mut drained: HashSet<(usize, usize)> = HashSet::new();
+        for e in &stream.events {
+            let LinkEvent::SetBandwidth(u, v, gbps) = e.ev else {
+                panic!("maintenance must emit only SetBandwidth");
+            };
+            let key = (u.min(v), u.max(v));
+            let eid = wan.edge_between(u, v).unwrap();
+            let base = wan.link(eid).base_capacity;
+            if gbps < base - 1e-9 {
+                assert!((gbps - 0.5 * base).abs() < 1e-9, "drain must be half capacity");
+                drained.insert(key);
+                assert!(drained.len() <= 1, "two links drained at once at t={}", e.t);
+            } else {
+                drained.remove(&key);
+            }
+        }
+        assert!(drained.is_empty(), "links left drained: {drained:?}");
+        // Every announcement leads its window and matches the drain level.
+        for a in &stream.announcements {
+            assert!(a.announce_t <= a.start_t && a.start_t < a.end_t);
+            let eid = wan.edge_between(a.u, a.v).unwrap();
+            assert!((a.gbps - 0.5 * wan.link(eid).base_capacity).abs() < 1e-9);
+        }
+        // The unannounced twin has identical events and no announcements.
+        let un = generate_stream(&wan, &DynamicsProfile::maintenance_unannounced(), 600.0, 0);
+        assert_eq!(un.events, stream.events);
+        assert!(un.announcements.is_empty());
+    }
+
+    #[test]
+    fn gray_failure_stays_up_and_churns_low() {
+        let wan = topologies::swan();
+        let stream = generate_stream(&wan, &DynamicsProfile::gray(), 1200.0, 5);
+        assert!(!stream.events.is_empty(), "1200 s must produce gray episodes");
+        assert!(stream.announcements.is_empty());
+        let mut low_samples = 0usize;
+        for e in &stream.events {
+            let LinkEvent::SetBandwidth(u, v, gbps) = e.ev else {
+                panic!("gray failure must never emit Fail/Recover: {e:?}");
+            };
+            let eid = wan.edge_between(u, v).unwrap();
+            let base = wan.link(eid).base_capacity;
+            assert!(gbps >= 0.01 * base - 1e-9 && gbps <= base + 1e-9, "{gbps} vs base {base}");
+            if gbps < 0.5 * base {
+                low_samples += 1;
+            }
+        }
+        assert!(low_samples > 0, "gray episodes must actually collapse bandwidth");
+        // Determinism, like every other model.
+        let again = generate_stream(&wan, &DynamicsProfile::gray(), 1200.0, 5);
+        assert_eq!(stream.events, again.events);
+    }
+
+    #[test]
+    fn generate_matches_generate_stream_events() {
+        let wan = topologies::swan();
+        for profile in DynamicsProfile::all() {
+            let a = generate(&wan, &profile, 300.0, 11);
+            let b = generate_stream(&wan, &profile, 300.0, 11).events;
+            assert_eq!(a, b, "profile {}", profile.name);
         }
     }
 

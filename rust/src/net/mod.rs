@@ -11,9 +11,11 @@
 
 pub mod dynamics;
 pub mod paths;
+pub mod telemetry;
 pub mod topologies;
 pub mod topology;
 
-pub use dynamics::{DynamicsModel, DynamicsProfile, TimedLinkEvent};
+pub use dynamics::{AnnouncedWindow, DynamicsModel, DynamicsProfile, TimedLinkEvent};
+pub use telemetry::{CapacityEstimator, EstimatorKind, TelemetryConfig};
 pub use topology::{EdgeId, LinkEvent, NodeId, Wan};
 pub use paths::Path;

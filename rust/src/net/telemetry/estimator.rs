@@ -1,0 +1,448 @@
+//! Per-edge capacity belief fusion.
+//!
+//! The estimator keeps one belief per directed WAN edge: a capacity mean,
+//! an uncertainty (variance), and the time of the last informative
+//! observation. Observations arrive in three flavors:
+//!
+//! - **capped throughput** (`observe` with `capped = true`): the sender
+//!   asked for more than it achieved — the link limited it, so the achieved
+//!   rate *is* a direct capacity measurement;
+//! - **censored throughput** (`observe` with `capped = false`): the sender
+//!   achieved everything it asked for — the sample is only a *lower bound*
+//!   (capacity ≥ achieved). A lower bound above the current mean raises the
+//!   belief; one below it carries no information and deliberately does
+//!   **not** refresh the observation clock, so the edge ages toward the
+//!   probe threshold (you cannot see capacity you are not using);
+//! - **probes / priors** (`probe`, `prior`): direct measurements from
+//!   active probing or announced maintenance windows.
+//!
+//! [`EstimatorKind::Oracle`] disables all of it: every method is a no-op
+//! and the scheduler keeps consuming ground truth, bit-identical to the
+//! pre-telemetry engine.
+
+use super::TelemetryConfig;
+
+/// Consecutive out-of-band samples a [`EstimatorKind::HoldDown`] belief
+/// requires before committing to a new level.
+const HOLD_COUNT: u32 = 3;
+
+/// How observations fuse into a belief. All parameters are unitless or in
+/// Gbps² as noted.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EstimatorKind {
+    /// Ground truth flows straight through; estimation is inert. The
+    /// default, bit-identical to the pre-telemetry engine.
+    Oracle,
+    /// Exponentially weighted moving average with EW variance tracking.
+    /// Reacts in O(1/α) samples; jittery under gray failures.
+    Ewma { alpha: f64 },
+    /// One-dimensional Kalman filter: `process_var` (Gbps²/s) grows the
+    /// prediction variance between observations, `obs_var` (Gbps²) is the
+    /// measurement noise. Smooths jitter while staying responsive after
+    /// long gaps (stale beliefs have high variance, so the next sample
+    /// moves them a lot).
+    KalmanLite { process_var: f64, obs_var: f64 },
+    /// EWMA with hysteresis: fluctuation within `hysteresis` (fractional)
+    /// of the mean is smoothed; a larger level shift must persist for
+    /// [`HOLD_COUNT`] consecutive samples on the same side before the
+    /// belief jumps. Damps gray-failure flapping at the cost of reaction
+    /// latency.
+    HoldDown { hysteresis: f64, alpha: f64 },
+}
+
+/// One edge's capacity belief.
+#[derive(Clone, Debug)]
+struct Belief {
+    mean: f64,
+    var: f64,
+    /// Time of the last informative observation (censored low samples do
+    /// not count — see the module docs).
+    last_obs_t: f64,
+    /// Hold-down candidate level and its consecutive-sample count.
+    pending: f64,
+    pending_n: u32,
+    /// While `now < pinned_until`, the belief is held by an announced
+    /// prior ([`CapacityEstimator::prior_hold`]): samples and probes are
+    /// ignored — the operator's announcement outranks measurements for
+    /// its stated window (otherwise a pre-drain prior would be "corrected"
+    /// back to base by the first probe of the still-undrained link).
+    pinned_until: f64,
+}
+
+/// Per-edge capacity beliefs with dirty-tracking, sized to a WAN's directed
+/// edge set. See the module docs for the observation model.
+#[derive(Clone, Debug)]
+pub struct CapacityEstimator {
+    kind: EstimatorKind,
+    headroom_k: f64,
+    beliefs: Vec<Belief>,
+    /// Edges whose belief changed since the last [`Self::take_dirty`].
+    dirty: Vec<bool>,
+    any_dirty: bool,
+    /// Latest observation timestamp seen (monotone); lets callers without a
+    /// clock (structural resets) stamp sensibly.
+    clock: f64,
+}
+
+impl CapacityEstimator {
+    /// Build an estimator with `initial_caps` (the WAN's current available
+    /// capacities) as the prior belief, variance 0.
+    pub fn new(cfg: &TelemetryConfig, initial_caps: &[f64]) -> CapacityEstimator {
+        let beliefs = if cfg.is_oracle() {
+            Vec::new()
+        } else {
+            initial_caps
+                .iter()
+                .map(|&c| Belief {
+                    mean: c,
+                    var: 0.0,
+                    last_obs_t: 0.0,
+                    pending: 0.0,
+                    pending_n: 0,
+                    pinned_until: f64::NEG_INFINITY,
+                })
+                .collect()
+        };
+        let dirty = vec![false; beliefs.len()];
+        CapacityEstimator {
+            kind: cfg.estimator.clone(),
+            headroom_k: cfg.headroom_k,
+            beliefs,
+            dirty,
+            any_dirty: false,
+            clock: 0.0,
+        }
+    }
+
+    pub fn is_oracle(&self) -> bool {
+        matches!(self.kind, EstimatorKind::Oracle)
+    }
+
+    pub fn kind(&self) -> &EstimatorKind {
+        &self.kind
+    }
+
+    /// Latest observation timestamp seen.
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    /// Passive throughput sample on edge `e`: `achieved` Gbps, with
+    /// `capped = true` when the link limited the sender (achieved < asked).
+    /// Ignored while the edge is pinned by an announced prior.
+    pub fn observe(&mut self, e: usize, achieved: f64, capped: bool, now: f64) {
+        if self.is_oracle() || e >= self.beliefs.len() || !achieved.is_finite() || achieved < 0.0 {
+            return;
+        }
+        self.clock = self.clock.max(now);
+        if self.is_pinned(e, now) {
+            return;
+        }
+        if capped {
+            self.fuse(e, achieved, now);
+        } else if achieved > self.beliefs[e].mean {
+            // Censored sample above the mean: capacity is at least this.
+            self.fuse(e, achieved, now);
+        }
+        // Censored sample at or below the mean: no information, and no
+        // clock refresh — let the edge age toward the probe threshold.
+    }
+
+    /// Active probe result (or any other direct capacity measurement).
+    /// Ignored while the edge is pinned by an announced prior.
+    pub fn probe(&mut self, e: usize, measured: f64, now: f64) {
+        if self.is_oracle() || e >= self.beliefs.len() || !measured.is_finite() || measured < 0.0 {
+            return;
+        }
+        self.clock = self.clock.max(now);
+        if self.is_pinned(e, now) {
+            return;
+        }
+        self.fuse(e, measured, now);
+    }
+
+    /// Authoritative prior (operator-fed measurement): the belief jumps to
+    /// `gbps` with zero variance — the operator told us.
+    pub fn prior(&mut self, e: usize, gbps: f64, now: f64) {
+        self.prior_hold(e, gbps, now, now);
+    }
+
+    /// [`CapacityEstimator::prior`] that additionally **pins** the belief
+    /// until `hold_until`: samples and probes on the edge are ignored for
+    /// the window's stated duration — an announced pre-drain must not be
+    /// "corrected" back to base by a probe of the not-yet-drained link.
+    pub fn prior_hold(&mut self, e: usize, gbps: f64, now: f64, hold_until: f64) {
+        if self.is_oracle() || e >= self.beliefs.len() || !gbps.is_finite() || gbps < 0.0 {
+            return;
+        }
+        self.clock = self.clock.max(now);
+        let b = &mut self.beliefs[e];
+        b.mean = gbps;
+        b.var = 0.0;
+        b.pending_n = 0;
+        b.last_obs_t = now;
+        b.pinned_until = if hold_until.is_finite() { hold_until } else { now };
+        self.mark_dirty(e);
+    }
+
+    /// True while edge `e`'s belief is held by an announced prior.
+    pub fn is_pinned(&self, e: usize, now: f64) -> bool {
+        self.beliefs.get(e).map(|b| now < b.pinned_until).unwrap_or(false)
+    }
+
+    /// Reset one edge's belief (structural recovery restores base
+    /// capacity; the event itself is observable, so the belief is
+    /// authoritative). Clears any announced-window pin — the window's
+    /// premise died with the failure.
+    pub fn reset_edge(&mut self, e: usize, cap: f64, now: f64) {
+        self.prior(e, cap, now);
+    }
+
+    /// Current belief mean for edge `e` (Gbps).
+    pub fn mean(&self, e: usize) -> f64 {
+        self.beliefs.get(e).map(|b| b.mean).unwrap_or(0.0)
+    }
+
+    /// Current belief standard deviation for edge `e` (Gbps).
+    pub fn sigma(&self, e: usize) -> f64 {
+        self.beliefs.get(e).map(|b| b.var.max(0.0).sqrt()).unwrap_or(0.0)
+    }
+
+    /// The capacity the scheduler should plan against:
+    /// `max(0, mean − k·σ)` — the headroom keeps allocations feasible under
+    /// estimation error.
+    pub fn cap_used(&self, e: usize) -> f64 {
+        (self.mean(e) - self.headroom_k * self.sigma(e)).max(0.0)
+    }
+
+    /// Timestamp of the last informative observation on edge `e`.
+    pub fn last_obs(&self, e: usize) -> f64 {
+        self.beliefs.get(e).map(|b| b.last_obs_t).unwrap_or(0.0)
+    }
+
+    /// Drain the edges whose belief changed since the last call, in
+    /// ascending edge order (deterministic refresh order).
+    pub fn take_dirty(&mut self) -> Vec<usize> {
+        if !self.any_dirty {
+            return Vec::new();
+        }
+        self.any_dirty = false;
+        let mut out = Vec::new();
+        for (e, d) in self.dirty.iter_mut().enumerate() {
+            if *d {
+                *d = false;
+                out.push(e);
+            }
+        }
+        out
+    }
+
+    fn mark_dirty(&mut self, e: usize) {
+        self.dirty[e] = true;
+        self.any_dirty = true;
+    }
+
+    /// Fuse a direct capacity measurement `x` into edge `e`'s belief.
+    fn fuse(&mut self, e: usize, x: f64, now: f64) {
+        let b = &mut self.beliefs[e];
+        match self.kind {
+            EstimatorKind::Oracle => return,
+            EstimatorKind::Ewma { alpha } => {
+                let d = x - b.mean;
+                b.mean += alpha * d;
+                b.var = (1.0 - alpha) * (b.var + alpha * d * d);
+            }
+            EstimatorKind::KalmanLite { process_var, obs_var } => {
+                let dt = (now - b.last_obs_t).max(0.0);
+                let var = b.var + process_var * dt;
+                let gain = var / (var + obs_var.max(1e-12));
+                b.mean += gain * (x - b.mean);
+                b.var = (1.0 - gain) * var;
+            }
+            EstimatorKind::HoldDown { hysteresis, alpha } => {
+                let rel = (x - b.mean).abs() / b.mean.max(1e-9);
+                if rel < hysteresis {
+                    // In-band: smooth, and drop any pending level shift —
+                    // the link came back inside the band.
+                    let d = x - b.mean;
+                    b.mean += alpha * d;
+                    b.var = (1.0 - alpha) * (b.var + alpha * d * d);
+                    b.pending_n = 0;
+                } else {
+                    let same_side = b.pending_n > 0
+                        && (x - b.mean).signum() == (b.pending - b.mean).signum();
+                    if same_side {
+                        b.pending += alpha * (x - b.pending);
+                        b.pending_n += 1;
+                    } else {
+                        b.pending = x;
+                        b.pending_n = 1;
+                    }
+                    if b.pending_n >= HOLD_COUNT {
+                        let d = b.pending - b.mean;
+                        b.mean = b.pending;
+                        b.var = (1.0 - alpha) * (b.var + alpha * d * d);
+                        b.pending_n = 0;
+                    } else {
+                        // Out-of-band but unconfirmed: belief unchanged.
+                        b.last_obs_t = now;
+                        return;
+                    }
+                }
+            }
+        }
+        b.mean = b.mean.max(0.0);
+        b.last_obs_t = now;
+        self.mark_dirty(e);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(kind: EstimatorKind, k: f64) -> TelemetryConfig {
+        TelemetryConfig { estimator: kind, headroom_k: k, ..TelemetryConfig::oracle() }
+    }
+
+    #[test]
+    fn oracle_is_inert() {
+        let mut est = CapacityEstimator::new(&TelemetryConfig::oracle(), &[10.0, 10.0]);
+        est.observe(0, 3.0, true, 1.0);
+        est.probe(1, 3.0, 1.0);
+        est.prior(0, 3.0, 1.0);
+        assert!(est.take_dirty().is_empty());
+        assert_eq!(est.mean(0), 0.0); // no beliefs held at all
+    }
+
+    /// EWMA convergence bound: after n direct samples of a step to `target`,
+    /// the residual error is (1-α)^n of the step.
+    #[test]
+    fn ewma_converges_within_geometric_bound() {
+        let alpha = 0.3;
+        let mut est = CapacityEstimator::new(&cfg(EstimatorKind::Ewma { alpha }, 0.0), &[10.0]);
+        let target = 4.0;
+        for i in 0..12 {
+            est.observe(0, target, true, i as f64);
+            let bound = (10.0 - target) * (1.0f64 - alpha).powi(i as i32 + 1) + 1e-9;
+            assert!(
+                (est.mean(0) - target).abs() <= bound,
+                "sample {i}: mean {} bound {bound}",
+                est.mean(0)
+            );
+        }
+        // Variance collapses once samples agree, so cap_used approaches the
+        // mean.
+        for i in 12..40 {
+            est.observe(0, target, true, i as f64);
+        }
+        assert!(est.sigma(0) < 0.2, "sigma={}", est.sigma(0));
+    }
+
+    /// Kalman convergence: repeated samples of a step pull the mean within
+    /// 5% in a handful of observations, and a long observation gap inflates
+    /// variance so the next sample moves the belief sharply.
+    #[test]
+    fn kalman_converges_and_gap_inflates_variance() {
+        let kind = EstimatorKind::KalmanLite { process_var: 0.5, obs_var: 1.0 };
+        let mut est = CapacityEstimator::new(&cfg(kind, 0.0), &[10.0]);
+        for i in 0..10 {
+            est.observe(0, 4.0, true, 1.0 + i as f64);
+        }
+        assert!((est.mean(0) - 4.0).abs() < 0.2, "mean={}", est.mean(0));
+        let sigma_settled = est.sigma(0);
+        // 60 s of silence, then one wildly different sample: the stale
+        // belief must move most of the way in a single update.
+        est.probe(0, 9.0, 71.0);
+        assert!((est.mean(0) - 9.0).abs() < 1.0, "stale belief too sticky: {}", est.mean(0));
+        assert!(est.sigma(0) > sigma_settled, "variance must grow over the gap");
+    }
+
+    /// Hold-down hysteresis under a step change: in-band jitter never moves
+    /// the belief out of band, an out-of-band step commits only after
+    /// HOLD_COUNT consecutive confirmations, and alternating spikes
+    /// (gray-failure flapping) never commit.
+    #[test]
+    fn holddown_hysteresis_under_step_and_flap() {
+        let kind = EstimatorKind::HoldDown { hysteresis: 0.3, alpha: 0.5 };
+        let mut est = CapacityEstimator::new(&cfg(kind.clone(), 0.0), &[10.0]);
+        // In-band jitter (±10%) smooths gently.
+        for (i, x) in [9.5, 10.4, 9.7, 10.2].iter().enumerate() {
+            est.observe(0, *x, true, i as f64);
+        }
+        assert!((est.mean(0) - 10.0).abs() < 0.6, "mean={}", est.mean(0));
+        // A 60% drop must NOT commit on the first or second sample...
+        est.observe(0, 4.0, true, 10.0);
+        est.observe(0, 4.0, true, 11.0);
+        assert!(est.mean(0) > 8.0, "committed too early: {}", est.mean(0));
+        // ...but must commit on the third consecutive confirmation.
+        est.observe(0, 4.0, true, 12.0);
+        assert!((est.mean(0) - 4.0).abs() < 0.5, "did not commit: {}", est.mean(0));
+
+        // Flapping: alternating far-high / far-low samples switch sides
+        // every observation, so the pending count never reaches HOLD_COUNT
+        // and the belief holds its level.
+        let mut est = CapacityEstimator::new(&cfg(kind, 0.0), &[10.0]);
+        for i in 0..12 {
+            let x = if i % 2 == 0 { 2.0 } else { 18.0 };
+            est.observe(0, x, true, i as f64);
+        }
+        assert!((est.mean(0) - 10.0).abs() < 1e-9, "flapping moved the belief: {}", est.mean(0));
+    }
+
+    #[test]
+    fn censored_samples_only_raise_and_do_not_refresh_clock() {
+        let mut est =
+            CapacityEstimator::new(&cfg(EstimatorKind::Ewma { alpha: 0.5 }, 0.0), &[10.0]);
+        // Uncapped achieved 3 Gbps on a believed-10 link: no information.
+        est.observe(0, 3.0, false, 5.0);
+        assert_eq!(est.mean(0), 10.0);
+        assert_eq!(est.last_obs(0), 0.0, "censored low sample must not look fresh");
+        // Uncapped achieved 14 Gbps: capacity is at least that — raise.
+        est.observe(0, 14.0, false, 6.0);
+        assert!(est.mean(0) > 10.0);
+        assert_eq!(est.last_obs(0), 6.0);
+    }
+
+    /// A held prior (announced maintenance) outranks measurements for its
+    /// window: samples and probes are ignored until the pin expires, then
+    /// fusion resumes.
+    #[test]
+    fn held_prior_pins_belief_against_samples_and_probes() {
+        let mut est =
+            CapacityEstimator::new(&cfg(EstimatorKind::Ewma { alpha: 0.5 }, 0.0), &[10.0]);
+        est.prior_hold(0, 5.0, 10.0, 20.0);
+        assert!(est.is_pinned(0, 15.0));
+        // A probe of the not-yet-drained link must NOT "correct" the
+        // announced pre-drain back to base.
+        est.probe(0, 10.0, 15.0);
+        est.observe(0, 9.0, true, 16.0);
+        assert_eq!(est.mean(0), 5.0, "pinned belief moved");
+        // After the window the pin expires and fusion resumes.
+        assert!(!est.is_pinned(0, 20.0));
+        est.probe(0, 10.0, 21.0);
+        assert!(est.mean(0) > 5.0);
+        // Plain priors don't pin.
+        est.prior(0, 4.0, 30.0);
+        assert!(!est.is_pinned(0, 30.0));
+        est.probe(0, 8.0, 31.0);
+        assert!(est.mean(0) > 4.0);
+    }
+
+    #[test]
+    fn headroom_subtracts_sigma_and_floors_at_zero() {
+        let mut est =
+            CapacityEstimator::new(&cfg(EstimatorKind::Ewma { alpha: 0.5 }, 2.0), &[10.0]);
+        // Noisy samples create variance; cap_used must sit below the mean.
+        for (i, x) in [6.0, 12.0, 5.0, 13.0].iter().enumerate() {
+            est.observe(0, *x, true, i as f64);
+        }
+        assert!(est.sigma(0) > 0.5);
+        assert!(est.cap_used(0) < est.mean(0));
+        assert!(est.cap_used(0) >= 0.0);
+        // A prior collapses the band.
+        est.prior(0, 5.0, 10.0);
+        assert_eq!(est.cap_used(0), 5.0);
+        assert!(est.take_dirty().contains(&0));
+    }
+}

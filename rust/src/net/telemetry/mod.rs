@@ -1,0 +1,113 @@
+//! WAN telemetry & capacity estimation: schedule on **beliefs**, not
+//! oracles.
+//!
+//! Every earlier revision of this repo cheated on the paper's hardest
+//! operational problem: `net/dynamics` handed the scheduler the *true* new
+//! capacity of every link, so ρ-dampening and re-optimization were evaluated
+//! against an oracle no real deployment has. Gauging runtime WAN bandwidth
+//! is itself the hard problem in GDA (WANify), and allocation quality
+//! degrades sharply when the controller's bandwidth view lags reality
+//! (Aljoby et al.). This module closes that gap:
+//!
+//! - agents (and the simulator standing in for them) **passively sample**
+//!   achieved per-path throughput — which is capped by their own allocation,
+//!   the classic *you cannot see capacity you are not using* problem;
+//! - controllers optionally issue **active probes** for edges whose belief
+//!   has gone stale (the probe path exists precisely to see past the
+//!   allocation cap on idle links);
+//! - a per-edge [`CapacityEstimator`] fuses those samples into a capacity
+//!   *belief* — a mean with an uncertainty band — under a pluggable
+//!   [`EstimatorKind`] (`Oracle`, `Ewma`, `KalmanLite`, `HoldDown`);
+//! - the scheduler consumes `cap_used = max(0, mean − k·σ)`: the
+//!   **headroom factor** `k` trades utilization for feasibility under
+//!   estimation error (allocations computed against an optimistic belief
+//!   oversubscribe the real link and stall).
+//!
+//! [`EstimatorKind::Oracle`] is the default and is **bit-identical** to the
+//! pre-telemetry behavior: every observation is a no-op, belief refreshes
+//! report nothing, and WAN events flow straight into the engine's WAN
+//! exactly as before — all committed golden traces survive un-re-blessed.
+
+pub mod estimator;
+pub mod probe;
+
+pub use estimator::{CapacityEstimator, EstimatorKind};
+pub use probe::stale_edges;
+
+/// Telemetry / estimation knobs shared by the simulator, the overlay
+/// controller, and the engine.
+#[derive(Clone, Debug)]
+pub struct TelemetryConfig {
+    /// How observations fuse into capacity beliefs.
+    pub estimator: EstimatorKind,
+    /// Headroom factor `k`: the scheduler uses `max(0, mean − k·σ)` as an
+    /// edge's capacity, keeping allocations feasible under estimation
+    /// error. 0 schedules on the raw mean.
+    pub headroom_k: f64,
+    /// Passive-sampling period (simulated seconds on the sim plane, wall
+    /// seconds on the testbed plane).
+    pub sample_interval_s: f64,
+    /// Probe an edge when its belief has had no observation for this long
+    /// (idle edges are invisible to passive sampling). `0` disables active
+    /// probing.
+    pub probe_after_s: f64,
+}
+
+impl TelemetryConfig {
+    /// The oracle default: truth flows straight through, estimation is
+    /// inert, behavior is bit-identical to the pre-telemetry engine.
+    pub fn oracle() -> TelemetryConfig {
+        TelemetryConfig {
+            estimator: EstimatorKind::Oracle,
+            headroom_k: 0.0,
+            sample_interval_s: 1.0,
+            probe_after_s: 5.0,
+        }
+    }
+
+    /// Named estimator presets for sweeps and the CLI: `oracle`, `ewma`,
+    /// `kalman`, `holddown`.
+    pub fn by_name(name: &str) -> Option<TelemetryConfig> {
+        let estimator = match name.to_ascii_lowercase().as_str() {
+            "oracle" | "none" | "truth" => EstimatorKind::Oracle,
+            "ewma" => EstimatorKind::Ewma { alpha: 0.3 },
+            "kalman" | "kalmanlite" | "kalman-lite" => {
+                EstimatorKind::KalmanLite { process_var: 0.5, obs_var: 1.0 }
+            }
+            "holddown" | "hold-down" => EstimatorKind::HoldDown { hysteresis: 0.3, alpha: 0.3 },
+            _ => return None,
+        };
+        let headroom_k = if matches!(estimator, EstimatorKind::Oracle) { 0.0 } else { 1.0 };
+        Some(TelemetryConfig { estimator, headroom_k, ..TelemetryConfig::oracle() })
+    }
+
+    /// All preset names, in sweep order.
+    pub fn preset_names() -> [&'static str; 4] {
+        ["oracle", "ewma", "kalman", "holddown"]
+    }
+
+    pub fn is_oracle(&self) -> bool {
+        matches!(self.estimator, EstimatorKind::Oracle)
+    }
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig::oracle()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve_and_default_is_oracle() {
+        assert!(TelemetryConfig::default().is_oracle());
+        for name in TelemetryConfig::preset_names() {
+            let cfg = TelemetryConfig::by_name(name).unwrap();
+            assert_eq!(cfg.is_oracle(), name == "oracle", "{name}");
+        }
+        assert!(TelemetryConfig::by_name("nope").is_none());
+    }
+}

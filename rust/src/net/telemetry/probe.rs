@@ -1,0 +1,83 @@
+//! Active-probe planning: which edges deserve a probe *now*.
+//!
+//! Passive sampling only sees edges that carry traffic, and even there the
+//! observation is censored by the sender's own allocation. Edges that are
+//! idle — or whose senders are allocated far below capacity — age without
+//! informative observations; once an edge's belief is older than the
+//! configured staleness threshold, the controller should spend a probe on
+//! it. The planner is shared by the simulator (which "probes" by reading
+//! ground truth) and the overlay controller (which asks the source agent to
+//! burst probe chunks on the edge's direct path).
+
+use super::CapacityEstimator;
+use crate::net::{EdgeId, Wan};
+
+/// Edges whose belief has had no informative observation for at least
+/// `probe_after_s`, restricted to up links (a failed link is structurally
+/// known to be down — probing it is wasted work). Ascending edge order, so
+/// probe issue order is deterministic. Returns nothing for oracle
+/// estimators or a non-positive threshold.
+pub fn stale_edges(
+    est: &CapacityEstimator,
+    wan: &Wan,
+    now: f64,
+    probe_after_s: f64,
+) -> Vec<EdgeId> {
+    if est.is_oracle() || probe_after_s <= 0.0 {
+        return Vec::new();
+    }
+    (0..wan.num_edges())
+        .filter(|&e| {
+            wan.link(e).up
+                && !est.is_pinned(e, now)
+                && now - est.last_obs(e) >= probe_after_s
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::telemetry::{EstimatorKind, TelemetryConfig};
+    use crate::net::{topologies, LinkEvent};
+
+    #[test]
+    fn stale_edges_age_and_reset_on_observation() {
+        let wan = topologies::fig1a();
+        let cfg = TelemetryConfig {
+            estimator: EstimatorKind::Ewma { alpha: 0.3 },
+            ..TelemetryConfig::oracle()
+        };
+        let mut est = CapacityEstimator::new(&cfg, &wan.capacities());
+        // At t=10 with threshold 5, everything is stale.
+        let stale = stale_edges(&est, &wan, 10.0, 5.0);
+        assert_eq!(stale.len(), wan.num_edges());
+        assert!(stale.windows(2).all(|w| w[0] < w[1]), "must be ascending");
+        // Observing edge 0 freshens it.
+        est.probe(0, 9.0, 10.0);
+        assert!(!stale_edges(&est, &wan, 11.0, 5.0).contains(&0));
+        // Down links are never probed.
+        let mut wan2 = wan.clone();
+        wan2.apply_event(&LinkEvent::Fail(0, 1));
+        let e = wan2.edge_between(0, 1).unwrap();
+        assert!(!stale_edges(&est, &wan2, 100.0, 5.0).contains(&e));
+        // Nor are edges pinned by an announced prior — probing them would
+        // be wasted (the estimator ignores the result anyway).
+        est.prior_hold(1, 5.0, 10.0, 200.0);
+        assert!(!stale_edges(&est, &wan, 100.0, 5.0).contains(&1));
+        assert!(stale_edges(&est, &wan, 300.0, 5.0).contains(&1), "pin must expire");
+    }
+
+    #[test]
+    fn oracle_and_disabled_probing_return_nothing() {
+        let wan = topologies::fig1a();
+        let est = CapacityEstimator::new(&TelemetryConfig::oracle(), &wan.capacities());
+        assert!(stale_edges(&est, &wan, 100.0, 5.0).is_empty());
+        let cfg = TelemetryConfig {
+            estimator: EstimatorKind::Ewma { alpha: 0.3 },
+            ..TelemetryConfig::oracle()
+        };
+        let est = CapacityEstimator::new(&cfg, &wan.capacities());
+        assert!(stale_edges(&est, &wan, 100.0, 0.0).is_empty());
+    }
+}

@@ -10,7 +10,7 @@
 //! contiguous data to the application (§5.1 "Handling WAN Latency
 //! Heterogeneity") and reports FlowGroup completion to the controller.
 
-use super::protocol::{self, DataHeader, CHUNK_BYTES};
+use super::protocol::{self, DataHeader, TelemetrySample, CHUNK_BYTES, PROBE_COFLOW};
 use super::BYTES_PER_GBPS;
 use crate::util::json::Json;
 use std::collections::{BTreeMap, HashMap};
@@ -20,6 +20,12 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+/// How often the sender flushes achieved-throughput samples to the
+/// controller (`telemetry_report`).
+const TELEMETRY_INTERVAL: Duration = Duration::from_millis(250);
+/// Probe burst size (chunks) when the controller issues a `probe_request`.
+const PROBE_CHUNKS: usize = 4;
+
 /// Sender-side state of one outgoing transfer (one FlowGroup direction).
 struct Outgoing {
     coflow: u64,
@@ -28,6 +34,14 @@ struct Outgoing {
     /// Token-bucket budget (bytes) and rate (bytes/s) per path.
     budget: Vec<f64>,
     rate: Vec<f64>,
+    /// Bytes actually written per path since the last telemetry flush —
+    /// the *achieved* throughput the controller's estimator feeds on.
+    window: Vec<f64>,
+    /// Full telemetry windows elapsed since the last rate change. A
+    /// sample from a window the current rate did not span entirely
+    /// (transfer or rate arrived mid-window) must not be compared against
+    /// the allocation — the shortfall is startup, not the link.
+    rate_windows: u32,
 }
 
 /// Receiver-side reassembly state of one incoming transfer.
@@ -156,19 +170,23 @@ impl Agent {
                                 }
                             }
                         }
+                        Some("probe_request") => handle_probe(dc, &msg, &conns, &ctrl_tx),
                         _ => handle_ctrl(&msg, &out, &conns, &incoming, &rx_counters),
                     }
                 }
             }));
         }
 
-        // Sender: token-bucket pacing loop.
+        // Sender: token-bucket pacing loop, plus periodic telemetry
+        // flushes (achieved bytes per ⟨transfer, path⟩ → `telemetry_report`).
         {
             let stop = stop.clone();
             let out = out.clone();
             let conns = conns.clone();
+            let ctrl_tx = ctrl_tx.clone();
             threads.push(std::thread::spawn(move || {
                 let mut last = Instant::now();
+                let mut last_report = Instant::now();
                 let payload = vec![0u8; CHUNK_BYTES];
                 while !stop.load(Ordering::Relaxed) {
                     std::thread::sleep(Duration::from_millis(4));
@@ -176,6 +194,11 @@ impl Agent {
                     let dt = now.duration_since(last).as_secs_f64();
                     last = now;
                     send_tick(dc, dt, &payload, &out, &conns);
+                    let window = now.duration_since(last_report);
+                    if window >= TELEMETRY_INTERVAL {
+                        last_report = now;
+                        flush_telemetry(window.as_secs_f64(), &out, &ctrl_tx);
+                    }
                 }
             }));
         }
@@ -267,6 +290,8 @@ fn handle_ctrl(
                 offset: 0,
                 budget: vec![0.0; k],
                 rate: vec![0.0; k],
+                window: vec![0.0; k],
+                rate_windows: 0,
             });
             e.remaining += bytes;
         }
@@ -319,13 +344,23 @@ fn apply_rate_entry(entry: &Json, out: &Arc<Mutex<HashMap<(u64, usize), Outgoing
     };
     let mut o = out.lock().unwrap();
     if let Some(e) = o.get_mut(&(coflow, dst as usize)) {
-        e.rate = rates
+        let new_rate: Vec<f64> = rates
             .iter()
             .map(|r| r.as_f64().unwrap_or(0.0))
             .map(|r| if r.is_finite() && r > 0.0 { r } else { 0.0 })
             .collect();
+        // The sample-stability clock restarts only on a genuine rate
+        // change; a redundant re-push (full sync after reconnect) must
+        // not suppress another window of capacity-capped evidence.
+        if new_rate != e.rate {
+            e.rate_windows = 0;
+            e.rate = new_rate;
+        }
         if e.budget.len() < e.rate.len() {
             e.budget.resize(e.rate.len(), 0.0);
+        }
+        if e.window.len() < e.rate.len() {
+            e.window.resize(e.rate.len(), 0.0);
         }
     }
 }
@@ -401,6 +436,9 @@ fn send_tick(
             if o.budget.len() <= p {
                 o.budget.resize(p + 1, 0.0);
             }
+            if o.window.len() <= p {
+                o.window.resize(p + 1, 0.0);
+            }
             // Cap the bucket at one tick's worth plus a chunk to avoid
             // long-idle bursts defeating the shaper.
             o.budget[p] = (o.budget[p] + rate_bps * dt).min(rate_bps * 0.1 + CHUNK_BYTES as f64);
@@ -423,10 +461,130 @@ fn send_tick(
                 o.offset += len;
                 o.remaining -= len;
                 o.budget[p] -= len as f64;
+                o.window[p] += len as f64;
             }
         }
     }
     out.retain(|_, o| o.remaining > 0 || o.offset == 0);
+}
+
+/// Flush the achieved-bytes windows as a `telemetry_report`: one sample
+/// per ⟨transfer, path⟩ that was allocated a rate or moved bytes this
+/// window. Rates are already in emulated Gbps, so achieved bytes convert
+/// through [`BYTES_PER_GBPS`] for apples-to-apples comparison. A report
+/// goes out every interval even with zero samples — the heartbeat is what
+/// drives the controller's staleness scan, so an idle agent must keep
+/// reporting or its edges could never be probed.
+fn flush_telemetry(
+    window_s: f64,
+    out: &Arc<Mutex<HashMap<(u64, usize), Outgoing>>>,
+    ctrl_tx: &Arc<Mutex<TcpStream>>,
+) {
+    if window_s <= 0.0 {
+        return;
+    }
+    let mut samples: Vec<Json> = Vec::new();
+    {
+        let mut o = out.lock().unwrap();
+        for ((coflow, dst), e) in o.iter_mut() {
+            // Only a window the current rate spanned entirely may be
+            // compared against the allocation; otherwise the sample is a
+            // lower bound only (alloc = 0 → the controller cannot read a
+            // startup shortfall as link capacity).
+            let stable = e.rate_windows > 0;
+            e.rate_windows = e.rate_windows.saturating_add(1);
+            for p in 0..e.window.len() {
+                let achieved = e.window[p];
+                let alloc = e.rate.get(p).copied().unwrap_or(0.0);
+                e.window[p] = 0.0;
+                if achieved <= 0.0 && alloc <= 0.0 {
+                    continue;
+                }
+                samples.push(
+                    TelemetrySample {
+                        coflow: *coflow,
+                        dst_dc: *dst,
+                        path: p,
+                        gbps: achieved / window_s / BYTES_PER_GBPS,
+                        alloc_gbps: if stable { alloc } else { 0.0 },
+                        probe: false,
+                    }
+                    .to_json(),
+                );
+            }
+        }
+    }
+    let msg = Json::from_pairs([
+        ("op", Json::from("telemetry_report")),
+        ("samples", Json::Arr(samples)),
+    ]);
+    let mut tx = ctrl_tx.lock().unwrap();
+    let _ = protocol::write_msg(&mut tx, &msg);
+}
+
+/// Controller-requested active probe: burst a few probe chunks (reserved
+/// coflow id [`PROBE_COFLOW`], dropped by the receiver) on one persistent
+/// connection and report the measured drain rate. On loopback this is an
+/// optimistic upper bound (the kernel buffers absorb the burst); the
+/// controller clamps probe readings to the edge's provisioned base
+/// capacity before fusing them.
+fn handle_probe(
+    src_dc: usize,
+    msg: &Json,
+    conns: &Arc<Mutex<HashMap<usize, Vec<TcpStream>>>>,
+    ctrl_tx: &Arc<Mutex<TcpStream>>,
+) {
+    let (Some(dst), Some(path)) = (
+        msg.get("dst").and_then(|x| x.as_u64()),
+        msg.get("path").and_then(|x| x.as_u64()),
+    ) else {
+        log::warn!("agent {src_dc}: malformed probe_request dropped");
+        return;
+    };
+    let chunks =
+        msg.get("chunks").and_then(|x| x.as_u64()).unwrap_or(PROBE_CHUNKS as u64).clamp(1, 64);
+    let payload = vec![0u8; CHUNK_BYTES];
+    let gbps = {
+        let mut c = conns.lock().unwrap();
+        let Some(stream) =
+            c.get_mut(&(dst as usize)).and_then(|v| v.get_mut(path as usize))
+        else {
+            return; // no such connection (yet); the edge stays stale
+        };
+        let t0 = Instant::now();
+        for i in 0..chunks {
+            let hdr = DataHeader {
+                coflow: PROBE_COFLOW,
+                src_dc: src_dc as u32,
+                offset: i * CHUNK_BYTES as u64,
+                len: CHUNK_BYTES as u32,
+            };
+            if stream.write_all(&hdr.encode()).is_err()
+                || stream.write_all(&payload).is_err()
+            {
+                return;
+            }
+        }
+        if stream.flush().is_err() {
+            return;
+        }
+        let dt = t0.elapsed().as_secs_f64().max(1e-9);
+        (chunks as f64 * CHUNK_BYTES as f64) / dt / BYTES_PER_GBPS
+    };
+    let sample = TelemetrySample {
+        coflow: PROBE_COFLOW,
+        dst_dc: dst as usize,
+        path: path as usize,
+        gbps,
+        alloc_gbps: 0.0,
+        probe: true,
+    };
+    let msg = Json::from_pairs([
+        ("op", Json::from("telemetry_report")),
+        ("samples", Json::Arr(vec![sample.to_json()])),
+    ]);
+    let mut tx = ctrl_tx.lock().unwrap();
+    let _ = protocol::write_msg(&mut tx, &msg);
 }
 
 /// Receive loop for one persistent data connection.
@@ -457,6 +615,11 @@ fn recv_loop(
         match protocol::read_full(&mut stream, &mut payload[..hdr.len as usize], &stop) {
             Ok(true) => {}
             _ => break,
+        }
+        // Probe chunks exist only to be measured by the sender: no
+        // reassembly, no counters, no completion accounting.
+        if hdr.coflow == PROBE_COFLOW {
+            continue;
         }
         let key = (hdr.coflow, hdr.src_dc as usize);
         let mut done = false;

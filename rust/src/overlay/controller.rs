@@ -9,10 +9,11 @@
 //! module owns only the testbed concerns: TCP sessions, agent rate pushes,
 //! SDN rule emulation, and wall-clock bookkeeping.
 
-use super::protocol::{self, CoflowStatus, FlowSpec};
+use super::protocol::{self, CoflowStatus, FlowSpec, TelemetrySample, PROBE_COFLOW};
 use super::rules::RuleTable;
 use crate::coflow::{Coflow, CoflowId, Flow};
 use crate::engine::{EngineConfig, RoundEngine, WanReaction};
+use crate::net::telemetry::{self, TelemetryConfig};
 use crate::net::{LinkEvent, Wan};
 use crate::scheduler::{CoflowRates, CoflowState, Policy, RoundTrigger};
 use crate::util::json::Json;
@@ -42,15 +43,30 @@ pub struct TestbedConfig {
     /// Worker threads for parallel component solves (see
     /// [`EngineConfig::workers`]); results are bit-identical for any value.
     pub workers: usize,
+    /// WAN telemetry & capacity estimation. The oracle default keeps the
+    /// controller scheduling on injected truth exactly as before; any
+    /// other estimator makes it fuse agents' `telemetry_report` samples
+    /// (and its own `probe_request` results) into capacity beliefs.
+    pub telemetry: TelemetryConfig,
 }
 
 impl TestbedConfig {
     pub fn new(wan: Wan, k: usize) -> TestbedConfig {
-        TestbedConfig { wan, k, workers: crate::engine::default_workers() }
+        TestbedConfig {
+            wan,
+            k,
+            workers: crate::engine::default_workers(),
+            telemetry: TelemetryConfig::default(),
+        }
     }
 
     pub fn with_workers(mut self, workers: usize) -> TestbedConfig {
         self.workers = workers;
+        self
+    }
+
+    pub fn with_telemetry(mut self, telemetry: TelemetryConfig) -> TestbedConfig {
+        self.telemetry = telemetry;
         self
     }
 }
@@ -80,6 +96,18 @@ pub struct DeltaStats {
     pub delta_revokes: usize,
 }
 
+/// Telemetry-plane traffic counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TelemetryStats {
+    /// `telemetry_report` messages received from agents.
+    pub reports: usize,
+    /// Individual samples fused into the estimator (0 under the oracle,
+    /// which ignores reports).
+    pub samples: usize,
+    /// `probe_request`s issued for stale edges.
+    pub probes_sent: usize,
+}
+
 /// Testbed-side metadata per coflow; scheduling state (groups, remaining,
 /// rates) lives in the engine.
 struct CoMeta {
@@ -100,6 +128,16 @@ struct State {
     rules: RuleTable,
     peers_sent: bool,
     delta: DeltaStats,
+    telemetry: TelemetryStats,
+    /// Per-edge wall-clock time of the last probe_request, so a stale edge
+    /// is probed once per staleness window rather than on every report.
+    last_probe_req: Vec<f64>,
+    /// The *emulated* ground-truth capacity per edge: base capacity,
+    /// overridden by injected WAN events. Loopback has no real link
+    /// capacity, so measurements (probe bursts especially) are clamped to
+    /// this — a probe must not "measure" kernel-buffer drain rates and
+    /// erase an injected degradation.
+    truth_caps: Vec<f64>,
     epoch: Instant,
     /// Wall-clock instant of the last remaining-volume drain.
     last_drain: Instant,
@@ -146,10 +184,14 @@ impl Controller {
             EngineConfig {
                 check_feasibility: false,
                 workers: cfg.workers,
+                telemetry: cfg.telemetry,
                 ..Default::default()
             },
             cfg.k,
         );
+        let num_edges = engine.wan().num_edges();
+        let truth_caps: Vec<f64> =
+            engine.wan().links().iter().map(|l| l.base_capacity).collect();
         let mut rules = RuleTable::new(num_nodes);
         rules.install_paths(engine.wan(), engine.paths());
         let state = Arc::new(Mutex::new(State {
@@ -161,6 +203,9 @@ impl Controller {
             rules,
             peers_sent: false,
             delta: DeltaStats::default(),
+            telemetry: TelemetryStats::default(),
+            last_probe_req: vec![f64::NEG_INFINITY; num_edges],
+            truth_caps,
             epoch: Instant::now(),
             last_drain: Instant::now(),
         }));
@@ -253,6 +298,22 @@ impl ControllerHandle {
     pub fn delta_stats(&self) -> DeltaStats {
         let st = self.state.lock().unwrap();
         st.delta
+    }
+
+    /// Telemetry-plane counters: reports received, samples fused, probes
+    /// issued.
+    pub fn telemetry_stats(&self) -> TelemetryStats {
+        let st = self.state.lock().unwrap();
+        st.telemetry
+    }
+
+    /// The engine's believed capacity of the directed edge `(u, v)` — what
+    /// the scheduler currently plans against (equals truth under the
+    /// oracle).
+    pub fn believed_capacity(&self, u: usize, v: usize) -> Option<f64> {
+        let st = self.state.lock().unwrap();
+        let e = st.engine.wan().edge_between(u, v)?;
+        Some(st.engine.wan().link(e).avail())
     }
 
     pub fn shutdown(mut self) {
@@ -356,7 +417,31 @@ fn serve_conn(mut s: TcpStream, state: Arc<Mutex<State>>, stop: Arc<AtomicBool>)
 /// structural events reinstall rules and rewire peers before the round;
 /// sub-ρ fluctuations push the clamped rates without re-optimizing.
 fn apply_wan_event(st: &mut State, ev: &LinkEvent) -> WanReaction {
-    let reaction = st.engine.handle_wan_event(ev);
+    // Record the emulated ground truth this event establishes (telemetry
+    // readings are clamped to it — see `State::truth_caps`).
+    match *ev {
+        LinkEvent::Fail(u, v) => {
+            for (a, b) in [(u, v), (v, u)] {
+                if let Some(e) = st.engine.wan().edge_between(a, b) {
+                    st.truth_caps[e] = 0.0;
+                }
+            }
+        }
+        LinkEvent::Recover(u, v) => {
+            for (a, b) in [(u, v), (v, u)] {
+                if let Some(e) = st.engine.wan().edge_between(a, b) {
+                    st.truth_caps[e] = st.engine.wan().link(e).base_capacity;
+                }
+            }
+        }
+        LinkEvent::SetBandwidth(u, v, gbps) => {
+            if let Some(e) = st.engine.wan().edge_between(u, v) {
+                st.truth_caps[e] = gbps.max(0.0).min(st.engine.wan().link(e).base_capacity);
+            }
+        }
+    }
+    let now = st.now_s();
+    let reaction = st.engine.handle_wan_event_at(ev, now);
     match reaction {
         WanReaction::Structural => {
             let (wan, paths) = (st.engine.wan().clone(), st.engine.paths().clone());
@@ -447,7 +532,141 @@ fn agent_reader(mut s: TcpStream, dc: usize, state: Arc<Mutex<State>>, stop: Arc
                 let mut st = state.lock().unwrap();
                 full_sync_agent(&mut st, dc);
             }
+            Some("telemetry_report") => {
+                let mut st = state.lock().unwrap();
+                handle_telemetry_report(&mut st, dc, &msg);
+            }
             _ => {}
+        }
+    }
+}
+
+/// Fuse one agent's achieved-throughput report into the capacity
+/// estimator, issue probes for edges gone stale, and push any resulting
+/// belief change through the engine's ρ gate (re-optimizing or re-clamping
+/// exactly like an oracle WAN event would). Reports are counted but
+/// otherwise ignored under the oracle.
+fn handle_telemetry_report(st: &mut State, dc: usize, msg: &Json) {
+    st.telemetry.reports += 1;
+    if st.engine.telemetry().is_oracle() {
+        return;
+    }
+    let now = st.now_s();
+    if let Some(samples) = msg.get("samples").and_then(|s| s.as_arr()) {
+        // Aggregate the report per edge before fusing: one agent commonly
+        // drives several transfers over the same out-edge, and the edge's
+        // capacity evidence is their *sum* — fusing each transfer's share
+        // individually would read a fairly-split healthy link as a
+        // collapsed one. (Edges shared by *different* source agents are
+        // still fused per report — a known approximation; the simulator
+        // aggregates globally.)
+        let mut passive: HashMap<usize, (f64, f64)> = HashMap::new(); // edge -> (achieved, alloc)
+        let mut probes: HashMap<usize, f64> = HashMap::new(); // edge -> best measurement
+        for sj in samples {
+            let Some(s) = TelemetrySample::from_json(sj) else {
+                log::warn!("controller: malformed telemetry sample from dc {dc}, dropped");
+                continue;
+            };
+            // Network-supplied indices: an out-of-range dst would panic
+            // the path lookup (same hardening rule as hello/submit).
+            if s.dst_dc >= st.engine.wan().num_nodes() || s.dst_dc == dc {
+                continue;
+            }
+            if !s.gbps.is_finite()
+                || s.gbps < 0.0
+                || !s.alloc_gbps.is_finite()
+                || (!s.probe && s.coflow == PROBE_COFLOW)
+            {
+                continue;
+            }
+            // Map the agent's ⟨dst, path⟩ onto WAN edges. A path sample
+            // bounds every edge on the path (simple tomography: the
+            // bottleneck is not attributable from one sample, so the
+            // observation applies path-wide; repeated samples sort the
+            // edges out as allocations shift).
+            let Some(p) = st.engine.paths().get(dc, s.dst_dc).get(s.path) else { continue };
+            st.telemetry.samples += 1;
+            for &e in &p.edges {
+                if s.probe {
+                    let best = probes.entry(e).or_insert(0.0);
+                    *best = best.max(s.gbps);
+                } else {
+                    let (ach, alloc) = passive.entry(e).or_insert((0.0, 0.0));
+                    *ach += s.gbps;
+                    *alloc += s.alloc_gbps.max(0.0);
+                }
+            }
+        }
+        let mut edges: Vec<usize> = passive.keys().chain(probes.keys()).copied().collect();
+        edges.sort_unstable();
+        edges.dedup();
+        for e in edges {
+            // Emulated ground truth is a hard ceiling (base capacity,
+            // lowered by injected events): loopback probe bursts drain
+            // into kernel buffers at absurd rates, and a probe must not
+            // "measure" past the capacity the testbed is emulating.
+            let ceiling = st.truth_caps.get(e).copied().unwrap_or(f64::INFINITY);
+            if let Some((ach, alloc)) = passive.get(&e) {
+                // Capped only when the edge's *total* achieved rate fell
+                // well short of a nonzero total allocation that spanned
+                // the window (startup windows report alloc 0), and some
+                // bytes actually moved — an unopened connection says
+                // nothing about the link.
+                let capped = *alloc > 0.0 && *ach > 0.0 && *ach < alloc * 0.9;
+                st.engine.observe_edge(e, ach.min(ceiling), capped, now);
+            }
+            if let Some(m) = probes.get(&e) {
+                st.engine.probe_edge(e, m.min(ceiling), now);
+            }
+        }
+    }
+    request_probes(st, now);
+    match st.engine.refresh_beliefs() {
+        Some(WanReaction::Structural) | Some(WanReaction::Reoptimize) => {
+            reallocate(st, RoundTrigger::WanChange);
+        }
+        Some(WanReaction::Clamped) => push_rates(st),
+        None => {}
+    }
+}
+
+/// Ask source agents to probe edges whose belief has gone stale (idle or
+/// censored links age without informative samples). Each stale edge is
+/// probed on its *direct* path — the only path whose measurement
+/// attributes to the edge alone — at most once per staleness window.
+fn request_probes(st: &mut State, now: f64) {
+    let probe_after = st.engine.telemetry().probe_after_s;
+    if probe_after <= 0.0 {
+        return;
+    }
+    let stale =
+        telemetry::stale_edges(st.engine.estimator(), st.engine.wan(), now, probe_after);
+    for e in stale {
+        if now - st.last_probe_req.get(e).copied().unwrap_or(f64::NEG_INFINITY) < probe_after {
+            continue;
+        }
+        let (src, dst) = {
+            let l = st.engine.wan().link(e);
+            (l.src, l.dst)
+        };
+        let Some(pi) = st
+            .engine
+            .paths()
+            .get(src, dst)
+            .iter()
+            .position(|p| p.edges.len() == 1 && p.edges[0] == e)
+        else {
+            continue; // no direct path survives (e.g. after failures)
+        };
+        let Some(a) = st.agents.get_mut(&src) else { continue };
+        let m = Json::from_pairs([
+            ("op", Json::from("probe_request")),
+            ("dst", dst.into()),
+            ("path", pi.into()),
+        ]);
+        if protocol::write_msg(&mut a.ctrl, &m).is_ok() {
+            st.telemetry.probes_sent += 1;
+            st.last_probe_req[e] = now;
         }
     }
 }

@@ -16,7 +16,13 @@
 //!   coflows;
 //! - a FlowGroup is striped across its paths at controller-assigned rates;
 //! - out-of-order chunks (different paths, heterogeneous latency) are
-//!   reassembled and delivered **in order** to the application.
+//!   reassembled and delivered **in order** to the application;
+//! - agents passively sample achieved per-path throughput and report it
+//!   (`telemetry_report`); under a non-oracle
+//!   [`crate::net::telemetry::TelemetryConfig`] the controller fuses the
+//!   samples into per-edge capacity *beliefs* and issues `probe_request`
+//!   bursts for edges gone stale — scheduling on estimates rather than an
+//!   oracle's truth.
 
 pub mod agent;
 pub mod controller;
@@ -24,8 +30,8 @@ pub mod protocol;
 pub mod rules;
 
 pub use agent::Agent;
-pub use controller::{Controller, ControllerHandle, DeltaStats, TestbedConfig};
-pub use protocol::{CoflowStatus, FlowSpec};
+pub use controller::{Controller, ControllerHandle, DeltaStats, TelemetryStats, TestbedConfig};
+pub use protocol::{CoflowStatus, FlowSpec, TelemetrySample};
 
 /// Bytes per second in one emulated "Gbps" (the testbed scales real
 /// loopback throughput; 1 emulated Gbps = 12.5 real MB/s by default so a

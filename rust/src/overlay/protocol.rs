@@ -14,6 +14,10 @@ use std::net::TcpStream;
 pub const DATA_MAGIC: u32 = 0x7E44_AA01;
 /// Chunk payload size for striping transfers across paths.
 pub const CHUNK_BYTES: usize = 64 * 1024;
+/// Reserved coflow id for active-probe data frames: receivers drop probe
+/// chunks without reassembly or completion accounting (real coflow ids
+/// start at 1).
+pub const PROBE_COFLOW: u64 = 0;
 /// Maximum control-message body size, enforced symmetrically: readers
 /// reject larger frames, and [`write_msg`] refuses to emit them — a body
 /// whose length overflows the u32 prefix (or merely exceeds the peer's
@@ -92,6 +96,52 @@ impl CoflowStatus {
             Some("rejected") => CoflowStatus::Rejected,
             _ => CoflowStatus::Unknown,
         }
+    }
+}
+
+/// One achieved-throughput sample in a `telemetry_report` (agent →
+/// controller): what the source agent measured on one ⟨transfer, path⟩
+/// over the last reporting window, plus the rate it was *allocated* there
+/// — the controller needs both to tell a capacity-capped sample (achieved
+/// well below allocated: the path limited us, a direct capacity reading)
+/// from a censored one (achieved ≈ allocated: capacity is merely ≥
+/// achieved). Probe samples (`probe = true`, `coflow = PROBE_COFLOW`)
+/// come from controller-requested `probe_request` bursts on idle paths.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TelemetrySample {
+    pub coflow: u64,
+    pub dst_dc: usize,
+    /// Path index within the source agent's connection set to `dst_dc`.
+    pub path: usize,
+    /// Achieved throughput over the window, in emulated Gbps.
+    pub gbps: f64,
+    /// Rate the controller had allocated on that path (Gbps); 0 for
+    /// probes.
+    pub alloc_gbps: f64,
+    pub probe: bool,
+}
+
+impl TelemetrySample {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs([
+            ("coflow", Json::from(self.coflow)),
+            ("dst", self.dst_dc.into()),
+            ("path", self.path.into()),
+            ("gbps", self.gbps.into()),
+            ("alloc", self.alloc_gbps.into()),
+            ("probe", self.probe.into()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<TelemetrySample> {
+        Some(TelemetrySample {
+            coflow: j.get("coflow")?.as_u64()?,
+            dst_dc: j.get("dst")?.as_u64()? as usize,
+            path: j.get("path")?.as_u64()? as usize,
+            gbps: j.get("gbps")?.as_f64()?,
+            alloc_gbps: j.get("alloc").and_then(|x| x.as_f64()).unwrap_or(0.0),
+            probe: j.get("probe").and_then(|x| x.as_bool()).unwrap_or(false),
+        })
     }
 }
 
@@ -246,6 +296,29 @@ mod tests {
         ] {
             assert_eq!(CoflowStatus::from_json(&s.to_json()), s);
         }
+    }
+
+    #[test]
+    fn telemetry_sample_roundtrip() {
+        let s = TelemetrySample {
+            coflow: 7,
+            dst_dc: 2,
+            path: 1,
+            gbps: 3.25,
+            alloc_gbps: 5.0,
+            probe: false,
+        };
+        assert_eq!(TelemetrySample::from_json(&s.to_json()), Some(s));
+        let p = TelemetrySample {
+            coflow: PROBE_COFLOW,
+            dst_dc: 0,
+            path: 0,
+            gbps: 12.0,
+            alloc_gbps: 0.0,
+            probe: true,
+        };
+        assert_eq!(TelemetrySample::from_json(&p.to_json()), Some(p));
+        assert_eq!(TelemetrySample::from_json(&Json::obj()), None);
     }
 
     #[test]

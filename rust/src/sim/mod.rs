@@ -21,8 +21,10 @@ pub use report::{foi, foi_volume_correlation, CoflowRecord, JobRecord, Report};
 
 use crate::coflow::{Coflow, CoflowId};
 use crate::engine::{EngineConfig, RoundEngine};
+use crate::net::dynamics::AnnouncedWindow;
+use crate::net::telemetry::{self, TelemetryConfig};
 use crate::net::{LinkEvent, Wan};
-use crate::scheduler::{CoflowRates, CoflowState, Policy, RoundTrigger};
+use crate::scheduler::{CoflowRates, CoflowState, NetView, Policy, RoundTrigger};
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, HashMap};
 
@@ -41,6 +43,14 @@ pub struct SimConfig {
     /// Worker threads for parallel component solves (see
     /// [`EngineConfig::workers`]); results are bit-identical for any value.
     pub workers: usize,
+    /// WAN telemetry & capacity estimation ([`crate::net::telemetry`]).
+    /// Under the oracle default the simulator behaves exactly as before:
+    /// the scheduler sees ground-truth capacities. Any other estimator
+    /// splits the planes: ground truth stays in the simulator (fed by
+    /// `net/dynamics`), the scheduler sees only capacity *beliefs* fused
+    /// from what agents could actually observe — throughput capped by
+    /// their own allocation — plus active probes on stale edges.
+    pub telemetry: TelemetryConfig,
 }
 
 impl Default for SimConfig {
@@ -51,6 +61,7 @@ impl Default for SimConfig {
             max_time: 1e7,
             check_feasibility: cfg!(debug_assertions),
             workers: crate::engine::default_workers(),
+            telemetry: TelemetryConfig::default(),
         }
     }
 }
@@ -67,6 +78,15 @@ enum EvKind {
     /// A submitted coflow becomes schedulable after the coordination delay.
     Activate(Box<CoflowState>),
     Wan(LinkEvent),
+    /// Telemetry sampling tick (belief mode only): agents report achieved
+    /// per-edge throughput, stale edges get probed, belief changes flow
+    /// through the engine's ρ gate. Self-rescheduling while the workload
+    /// is live.
+    Telemetry,
+    /// Announced-maintenance capacity prior on directed edge (u, v) taking
+    /// effect now, pinned against samples/probes until `until`;
+    /// `gbps = None` restores the base-capacity prior at the window end.
+    Prior { u: usize, v: usize, gbps: Option<f64>, until: f64 },
 }
 
 #[derive(Clone, Debug)]
@@ -105,6 +125,15 @@ struct JobState {
 pub struct Simulation {
     engine: RoundEngine,
     cfg: SimConfig,
+    /// Ground-truth WAN, present only in belief mode (non-oracle
+    /// estimator): `net/dynamics` events apply here, and the engine's WAN
+    /// becomes a belief fed through telemetry sampling. `None` under the
+    /// oracle — the engine's WAN *is* the truth, exactly as before.
+    truth: Option<Wan>,
+    /// Edges whose true capacity has drifted ≥ ρ from the scheduler's
+    /// believed capacity, keyed to the episode start time — resolved (and
+    /// its reaction latency booked) once the belief closes back within ρ.
+    pending_stale: HashMap<usize, f64>,
     now: f64,
     seq: u64,
     events: BinaryHeap<TimedEvent>,
@@ -113,6 +142,9 @@ pub struct Simulation {
     /// workload can never make progress again and the run ends — trailing
     /// WAN events are not replayed against an idle network.
     pending_app_events: usize,
+    /// Ground-truth WAN events still in the heap (belief mode uses this to
+    /// decide whether telemetry ticks can still learn anything).
+    pending_wan_events: usize,
     jobs: Vec<Job>,
     job_states: Vec<JobState>,
     /// Coflow id -> (job idx, stage idx).
@@ -125,6 +157,7 @@ pub struct Simulation {
 impl Simulation {
     pub fn new(wan: Wan, policy: Box<dyn Policy>, cfg: SimConfig) -> Simulation {
         let name = policy.name().to_string();
+        let truth = if cfg.telemetry.is_oracle() { None } else { Some(wan.clone()) };
         let engine = RoundEngine::new(
             wan,
             policy,
@@ -132,23 +165,32 @@ impl Simulation {
                 rho: cfg.rho,
                 check_feasibility: cfg.check_feasibility,
                 workers: cfg.workers,
+                telemetry: cfg.telemetry.clone(),
                 ..Default::default()
             },
         );
-        Simulation {
+        let mut sim = Simulation {
             engine,
             cfg,
+            truth,
+            pending_stale: HashMap::new(),
             now: 0.0,
             seq: 0,
             events: BinaryHeap::new(),
             pending_app_events: 0,
+            pending_wan_events: 0,
             jobs: Vec::new(),
             job_states: Vec::new(),
             owners: HashMap::new(),
             next_coflow_id: 1,
             report: Report { policy: name, ..Default::default() },
             record_idx: HashMap::new(),
+        };
+        if sim.truth.is_some() {
+            let t = sim.cfg.telemetry.sample_interval_s.max(1e-3);
+            sim.push_event(t, EvKind::Telemetry);
         }
+        sim
     }
 
     /// Access the WAN (e.g. to inspect capacities in tests).
@@ -163,8 +205,10 @@ impl Simulation {
 
     fn push_event(&mut self, t: f64, kind: EvKind) {
         assert!(t.is_finite(), "non-finite event time {t} for {kind:?}");
-        if !matches!(kind, EvKind::Wan(_)) {
-            self.pending_app_events += 1;
+        match kind {
+            EvKind::Wan(_) => self.pending_wan_events += 1,
+            EvKind::Telemetry | EvKind::Prior { .. } => {}
+            _ => self.pending_app_events += 1,
         }
         self.seq += 1;
         self.events.push(TimedEvent { t, seq: self.seq, kind });
@@ -188,9 +232,34 @@ impl Simulation {
         self.jobs.push(job);
     }
 
-    /// Schedule a WAN event at absolute time `t`.
+    /// Schedule a WAN event at absolute time `t`. In belief mode this is a
+    /// **ground-truth** change: structural events are observable and reach
+    /// the scheduler immediately, bandwidth changes only reach it through
+    /// telemetry sampling.
     pub fn add_wan_event(&mut self, t: f64, ev: LinkEvent) {
         self.push_event(t, EvKind::Wan(ev));
+    }
+
+    /// Register an announced maintenance window
+    /// ([`crate::net::dynamics::AnnouncedWindow`]): the announced capacity
+    /// lands as an authoritative estimator prior at **announce time** —
+    /// the scheduler proactively drains the link `lead_s` ahead of the
+    /// window, SWAN planned-update style, so the drain itself causes zero
+    /// discovery latency (at the cost of under-using the link during the
+    /// lead). The base-capacity prior lands at the window end. Inert under
+    /// the oracle (the truth events already carry everything).
+    pub fn add_announcement(&mut self, w: &AnnouncedWindow) {
+        if self.truth.is_none() {
+            return;
+        }
+        self.push_event(
+            w.announce_t.min(w.start_t).max(self.now),
+            EvKind::Prior { u: w.u, v: w.v, gbps: Some(w.gbps), until: w.end_t },
+        );
+        self.push_event(
+            w.end_t.max(self.now),
+            EvKind::Prior { u: w.u, v: w.v, gbps: None, until: 0.0 },
+        );
     }
 
     /// Convenience: add all jobs and run to completion.
@@ -272,8 +341,10 @@ impl Simulation {
             }
             while self.events.peek().map(|e| e.t <= self.now + 1e-12).unwrap_or(false) {
                 let ev = self.events.pop().unwrap();
-                if !matches!(ev.kind, EvKind::Wan(_)) {
-                    self.pending_app_events -= 1;
+                match ev.kind {
+                    EvKind::Wan(_) => self.pending_wan_events -= 1,
+                    EvKind::Telemetry | EvKind::Prior { .. } => {}
+                    _ => self.pending_app_events -= 1,
                 }
                 match ev.kind {
                     EvKind::JobArrival(j) => self.on_job_arrival(j),
@@ -290,9 +361,57 @@ impl Simulation {
                     EvKind::Wan(wev) => {
                         // ρ-dampened filtering (§3.1.3) and path recompute
                         // (§4.4) happen inside the engine; sub-threshold
-                        // fluctuations clamp without a round.
+                        // fluctuations clamp without a round. In belief
+                        // mode only structural events reach the engine —
+                        // bandwidth truth must be *estimated*.
                         self.report.wan_events += 1;
-                        if let Some(t) = self.engine.handle_wan_event(&wev).trigger() {
+                        if self.truth.is_some() {
+                            if let Some(t) = self.on_truth_event(&wev) {
+                                needs_round = Some(t);
+                            }
+                        } else {
+                            let now = self.now;
+                            let reaction = self.engine.handle_wan_event_at(&wev, now);
+                            if matches!(wev, LinkEvent::SetBandwidth(..))
+                                && reaction == crate::engine::WanReaction::Reoptimize
+                            {
+                                // The oracle reacts to a qualifying
+                                // capacity change at the instant it
+                                // happens: a zero-latency staleness
+                                // episode, for comparability with the
+                                // estimators' reaction-latency metric.
+                                self.report.stale_events += 1;
+                                self.report.stale_resolved += 1;
+                            }
+                            if let Some(t) = reaction.trigger() {
+                                needs_round = Some(t);
+                            }
+                        }
+                    }
+                    EvKind::Telemetry => {
+                        if let Some(t) = self.telemetry_tick() {
+                            needs_round = Some(t);
+                        }
+                        // Reschedule only while the workload is live AND a
+                        // tick can still learn or drain something: truth
+                        // events remain, something is draining, or probing
+                        // can close a belief/truth gap. Without this gate
+                        // a genuinely starved coflow (partitioned WAN)
+                        // would keep the heap non-empty and spin the loop
+                        // to max_time one tick at a time.
+                        let live = self.pending_app_events > 0 || !self.engine.is_empty();
+                        let useful = self.pending_app_events > 0
+                            || self.pending_wan_events > 0
+                            || self.engine.next_completion(self.now).is_some()
+                            || (self.cfg.telemetry.probe_after_s > 0.0
+                                && self.beliefs_diverge_from_truth());
+                        if self.truth.is_some() && live && useful {
+                            let dt = self.cfg.telemetry.sample_interval_s.max(1e-3);
+                            self.push_event(self.now + dt, EvKind::Telemetry);
+                        }
+                    }
+                    EvKind::Prior { u, v, gbps, until } => {
+                        if let Some(t) = self.apply_prior(u, v, gbps, until) {
                             needs_round = Some(t);
                         }
                     }
@@ -316,15 +435,191 @@ impl Simulation {
     }
 
     /// Advance simulated time, draining FlowGroups and integrating
-    /// utilization over the busy period.
+    /// utilization over the busy period. In belief mode the drain is
+    /// throttled by ground truth: a coflow achieves
+    /// `min(allocated, what its true edges admit)` — an over-optimistic
+    /// belief cannot move bytes the real network will not carry.
     fn advance(&mut self, target: f64) {
         let dt = (target - self.now).max(0.0);
         if dt > 0.0 && !self.engine.is_empty() {
-            let moved = self.engine.drain(dt, 0.0);
+            let throttle = self.truth_throttle();
+            let moved = self.engine.drain_with(dt, 0.0, throttle.as_ref());
             self.report.transferred_gbit += moved;
-            self.report.capacity_gbit += self.engine.wan().total_capacity() * dt;
+            let cap = self
+                .truth
+                .as_ref()
+                .map(|t| t.total_capacity())
+                .unwrap_or_else(|| self.engine.wan().total_capacity());
+            self.report.capacity_gbit += cap * dt;
         }
         self.now = target;
+    }
+
+    /// Per-coflow throttle factors against ground truth
+    /// ([`RoundEngine::throttle_factors`] over the *true* capacities —
+    /// the same per-coflow-min algorithm the engine's sub-ρ clamp uses
+    /// over believed ones). `None` when truth admits the full allocation
+    /// (the common case) or under the oracle.
+    fn truth_throttle(&self) -> Option<HashMap<CoflowId, f64>> {
+        let truth = self.truth.as_ref()?;
+        // O(E) precheck before the O(active · paths · hops) usage scan:
+        // feasibility keeps usage within *believed* capacities, so
+        // throttling is only possible while some edge's truth sits below
+        // its belief — which is false in the steady state (beliefs
+        // converge) and on every loop step between truth changes.
+        let possible = (0..truth.num_edges())
+            .any(|e| truth.link(e).avail() < self.engine.wan().link(e).avail());
+        if !possible {
+            return None;
+        }
+        let factors = self.engine.throttle_factors(&truth.capacities());
+        if factors.is_empty() {
+            None
+        } else {
+            Some(factors)
+        }
+    }
+
+    /// Apply a ground-truth WAN event in belief mode: structural events
+    /// are observable (port state) and forward to the scheduler; bandwidth
+    /// changes stay in the truth plane — the scheduler has to *discover*
+    /// them — and open a staleness episode when truth drifts ≥ ρ from the
+    /// believed capacity.
+    fn on_truth_event(&mut self, ev: &LinkEvent) -> Option<RoundTrigger> {
+        self.truth.as_mut().unwrap().apply_event(ev);
+        match *ev {
+            LinkEvent::Fail(..) | LinkEvent::Recover(..) => {
+                let now = self.now;
+                self.engine.handle_wan_event_at(ev, now).trigger()
+            }
+            LinkEvent::SetBandwidth(u, v, _) => {
+                let truth = self.truth.as_ref().unwrap();
+                if let Some(e) = truth.edge_between(u, v) {
+                    let believed = self.engine.wan().link(e).avail();
+                    let tru = truth.link(e).avail();
+                    let dev = (tru - believed).abs() / believed.max(1e-9);
+                    if dev >= self.cfg.rho {
+                        if let std::collections::hash_map::Entry::Vacant(slot) =
+                            self.pending_stale.entry(e)
+                        {
+                            slot.insert(self.now);
+                            self.report.stale_events += 1;
+                        }
+                    } else if let Some(t0) = self.pending_stale.remove(&e) {
+                        // Truth wandered back inside the band on its own:
+                        // the episode ended without scheduler action.
+                        self.report.stale_resolved += 1;
+                        self.report.stale_reaction_s_sum += self.now - t0;
+                    }
+                }
+                None
+            }
+        }
+    }
+
+    /// One telemetry sampling tick (belief mode): ingest per-edge achieved
+    /// throughput (capped by the sender's own allocation — the censoring
+    /// that makes estimation hard), probe stale edges, sample the
+    /// estimation error, push belief changes through the engine's ρ gate,
+    /// and settle staleness episodes the refreshed belief has closed.
+    fn telemetry_tick(&mut self) -> Option<RoundTrigger> {
+        let now = self.now;
+        let rho = self.cfg.rho;
+        let probe_after = self.cfg.telemetry.probe_after_s;
+        let Simulation { truth, engine, report, pending_stale, .. } = self;
+        let truth = truth.as_ref()?;
+        let num_edges = truth.num_edges();
+        let usage = {
+            let net = NetView { wan: engine.wan(), paths: engine.paths() };
+            engine.alloc().edge_usage(engine.active(), &net, num_edges)
+        };
+        for (e, &used) in usage.iter().enumerate() {
+            let tl = truth.link(e);
+            if !tl.up || used <= 1e-9 {
+                continue;
+            }
+            let tru = tl.avail();
+            let achieved = used.min(tru);
+            let capped = used > tru + 1e-9;
+            engine.observe_edge(e, achieved, capped, now);
+            report.est_samples += 1;
+        }
+        if probe_after > 0.0 {
+            for e in telemetry::stale_edges(engine.estimator(), engine.wan(), now, probe_after) {
+                // A probe sees the true available capacity (burst past the
+                // allocation cap); measurement noise is the estimator's
+                // obs-noise model's job.
+                engine.probe_edge(e, truth.link(e).avail(), now);
+                report.est_probes += 1;
+            }
+        }
+        // Estimation error of the capacity the scheduler actually consumes.
+        for e in 0..num_edges {
+            let tl = truth.link(e);
+            if tl.up && tl.avail() > 1e-9 {
+                let believed = engine.wan().link(e).avail();
+                report.est_mape_sum += (believed - tl.avail()).abs() / tl.avail();
+                report.est_mape_samples += 1;
+            }
+        }
+        let trigger = engine.refresh_beliefs().and_then(|r| r.trigger());
+        pending_stale.retain(|&e, t0| {
+            let believed = engine.wan().link(e).avail();
+            let tru = truth.link(e).avail();
+            if (tru - believed).abs() / believed.max(1e-9) < rho {
+                report.stale_resolved += 1;
+                report.stale_reaction_s_sum += now - *t0;
+                false
+            } else {
+                true
+            }
+        });
+        trigger
+    }
+
+    /// True while some up edge's believed capacity is measurably away
+    /// from ground truth — probing can still improve the schedule, so
+    /// telemetry ticks stay worth their while.
+    fn beliefs_diverge_from_truth(&self) -> bool {
+        let Some(truth) = self.truth.as_ref() else { return false };
+        (0..truth.num_edges()).any(|e| {
+            let tl = truth.link(e);
+            tl.up && {
+                let believed = self.engine.wan().link(e).avail();
+                (believed - tl.avail()).abs() > 1e-6 * tl.avail().max(1.0)
+            }
+        })
+    }
+
+    /// Apply an announced-maintenance capacity prior (window start or
+    /// end); the belief jumps with zero discovery latency and stays
+    /// pinned against samples/probes until the window closes.
+    fn apply_prior(
+        &mut self,
+        u: usize,
+        v: usize,
+        gbps: Option<f64>,
+        until: f64,
+    ) -> Option<RoundTrigger> {
+        let e = self.engine.wan().edge_between(u, v)?;
+        let val = gbps.unwrap_or_else(|| self.engine.wan().link(e).base_capacity);
+        let now = self.now;
+        self.engine.announce_prior(e, val, now, until.max(now));
+        let trigger = self.engine.refresh_beliefs().and_then(|r| r.trigger());
+        // Settle any staleness episode the prior just closed (e.g. the
+        // same-timestamp truth restore at a window's end was processed
+        // before this prior): the announcement reacted at latency ~0.
+        if let Some(truth) = self.truth.as_ref() {
+            let believed = self.engine.wan().link(e).avail();
+            let tru = truth.link(e).avail();
+            if (tru - believed).abs() / believed.max(1e-9) < self.cfg.rho {
+                if let Some(t0) = self.pending_stale.remove(&e) {
+                    self.report.stale_resolved += 1;
+                    self.report.stale_reaction_s_sum += now - t0;
+                }
+            }
+        }
+        trigger
     }
 
     /// Remove finished coflows; update job DAGs. Returns true if anything
@@ -618,6 +913,84 @@ mod tests {
         let wan = topologies::fig1a();
         let mut sim = Simulation::new(wan, terra0(), SimConfig::default());
         sim.add_wan_event(f64::NAN, LinkEvent::Fail(0, 1));
+    }
+
+    #[test]
+    fn oracle_mode_runs_no_telemetry() {
+        let wan = topologies::fig1a();
+        let mut sim = Simulation::new(wan, terra0(), SimConfig::default());
+        sim.add_wan_event(1.0, LinkEvent::SetBandwidth(0, 1, 4.0));
+        let job = Job::map_reduce(1, 0.0, 0.0, vec![mk_flow(0, 0, 1, 25.0)]);
+        let rep = sim.run_jobs(vec![job]);
+        assert_eq!(rep.unfinished(), 0);
+        assert_eq!(rep.est_samples, 0);
+        assert_eq!(rep.est_probes, 0);
+        assert_eq!(rep.est_mape(), 0.0);
+        // The oracle's staleness episodes resolve instantly.
+        assert_eq!(rep.stale_events, 1);
+        assert_eq!(rep.avg_stale_reaction_s(), 0.0);
+    }
+
+    /// The headline scenario estimation exists for: ground truth collapses
+    /// a link the scheduler is using, the scheduler is NOT told, and it
+    /// must discover the change from capped achieved-throughput samples —
+    /// with a measurable (non-zero) reaction latency — then still finish
+    /// the workload.
+    #[test]
+    fn belief_mode_discovers_withheld_capacity_drop() {
+        let wan = topologies::fig1a();
+        let cfg = SimConfig {
+            telemetry: crate::net::TelemetryConfig {
+                sample_interval_s: 0.25,
+                probe_after_s: 2.0,
+                ..crate::net::TelemetryConfig::by_name("ewma").unwrap()
+            },
+            ..Default::default()
+        };
+        let mut sim = Simulation::new(wan, terra0(), cfg);
+        // 200 Gbit A->B; at t=1 the direct link truly drops to 2 Gbps.
+        sim.add_job(Job::map_reduce(1, 0.0, 0.0, vec![mk_flow(0, 0, 1, 25.0)]));
+        sim.add_wan_event(1.0, LinkEvent::SetBandwidth(0, 1, 2.0));
+        let rep = sim.run();
+        assert_eq!(rep.unfinished(), 0, "workload must survive estimation");
+        assert!(rep.est_samples > 0, "no passive samples ingested");
+        assert_eq!(rep.stale_events, 1, "the withheld drop must open a staleness episode");
+        assert_eq!(rep.stale_resolved, 1, "sampling must eventually discover the drop");
+        assert!(
+            rep.avg_stale_reaction_s() > 0.0,
+            "estimated discovery cannot be instantaneous"
+        );
+        assert!(rep.est_mape() > 0.0, "estimation error must be visible in the metric");
+        assert!(rep.wan_rounds > 0, "the discovered drop must have re-optimized");
+        // Discovery is bounded: a few sampling intervals, not the horizon.
+        assert!(
+            rep.avg_stale_reaction_s() < 10.0,
+            "took {}s to notice an 80% drop",
+            rep.avg_stale_reaction_s()
+        );
+    }
+
+    /// Belief-mode runs are deterministic: telemetry is driven entirely by
+    /// the virtual clock and the seeded event stream.
+    #[test]
+    fn belief_mode_is_deterministic() {
+        let run = || {
+            let wan = topologies::fig1a();
+            let cfg = SimConfig {
+                telemetry: crate::net::TelemetryConfig::by_name("kalman").unwrap(),
+                ..Default::default()
+            };
+            let mut sim = Simulation::new(wan, terra0(), cfg);
+            sim.add_job(Job::map_reduce(1, 0.0, 0.0, vec![mk_flow(0, 0, 1, 25.0)]));
+            sim.add_wan_event(1.0, LinkEvent::SetBandwidth(0, 1, 3.0));
+            sim.add_wan_event(4.0, LinkEvent::SetBandwidth(0, 1, 9.0));
+            sim.run()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        assert_eq!(a.rounds, b.rounds);
+        assert_eq!(a.est_samples, b.est_samples);
+        assert_eq!(a.est_mape_sum.to_bits(), b.est_mape_sum.to_bits());
     }
 
     #[test]

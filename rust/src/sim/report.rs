@@ -88,6 +88,24 @@ pub struct Report {
     /// scheduler takes to react to a failure or qualifying fluctuation.
     pub reaction_time_s: f64,
     pub max_reaction_s: f64,
+    /// Telemetry (belief mode): passive throughput samples and active
+    /// probes ingested by the capacity estimator.
+    pub est_samples: usize,
+    pub est_probes: usize,
+    /// Estimation error: sum / count of per-edge absolute percentage
+    /// error `|believed − truth| / truth`, sampled at telemetry ticks over
+    /// up edges. Zero under the oracle (the belief *is* the truth).
+    pub est_mape_sum: f64,
+    pub est_mape_samples: usize,
+    /// Capacity staleness episodes: a ground-truth bandwidth change left
+    /// the scheduler's believed capacity ≥ ρ away from reality
+    /// (`stale_events`), and how many of those episodes closed
+    /// (`stale_resolved`) after accumulating `stale_reaction_s_sum`
+    /// **simulated** seconds of staleness. The oracle resolves every
+    /// episode at latency 0 by construction.
+    pub stale_events: usize,
+    pub stale_resolved: usize,
+    pub stale_reaction_s_sum: f64,
     /// Simulated makespan.
     pub makespan: f64,
 }
@@ -127,6 +145,28 @@ impl Report {
             0.0
         } else {
             1e3 * self.reaction_time_s / self.wan_rounds as f64
+        }
+    }
+
+    /// Mean absolute percentage error of the scheduler's believed edge
+    /// capacities vs ground truth (0 when nothing was sampled — e.g. the
+    /// oracle, whose belief is the truth).
+    pub fn est_mape(&self) -> f64 {
+        if self.est_mape_samples == 0 {
+            0.0
+        } else {
+            self.est_mape_sum / self.est_mape_samples as f64
+        }
+    }
+
+    /// Mean simulated latency (s) from a ground-truth capacity change
+    /// drifting ≥ ρ out of the scheduler's view to the belief closing back
+    /// within ρ. 0 for the oracle by construction.
+    pub fn avg_stale_reaction_s(&self) -> f64 {
+        if self.stale_resolved == 0 {
+            0.0
+        } else {
+            self.stale_reaction_s_sum / self.stale_resolved as f64
         }
     }
 

@@ -54,6 +54,28 @@ fn scenario_events(wan: &Wan) -> Vec<TimedLinkEvent> {
     let l0 = &wan.links()[0];
     events.push(TimedLinkEvent { t: 13.25, ev: LinkEvent::Fail(l0.src, l0.dst) });
     events.push(TimedLinkEvent { t: 22.75, ev: LinkEvent::Recover(l0.src, l0.dst) });
+    finalize_events(events)
+}
+
+/// The gray-failure scenario: links stay "up" but churn violently around a
+/// low mean — the ρ-dampening / drift-promotion stress test (and, on the
+/// estimation axis, the capacity estimator's). Dense parameters so the
+/// 30 s horizon reliably produces episodes on every topology.
+fn gray_events(wan: &Wan) -> Vec<TimedLinkEvent> {
+    let profile = DynamicsProfile {
+        name: "golden-gray".into(),
+        models: vec![DynamicsModel::GrayFailure {
+            mtbg_s: 40.0,
+            episode_s: 12.0,
+            low_frac: 0.15,
+            churn_interval_s: 2.5,
+            churn_amp: 0.5,
+        }],
+    };
+    finalize_events(dynamics::generate(wan, &profile, HORIZON_S, SEED))
+}
+
+fn finalize_events(mut events: Vec<TimedLinkEvent>) -> Vec<TimedLinkEvent> {
     events.sort_by(|a, b| a.t.total_cmp(&b.t));
     // The per-event replay attributes rounds to one event per timestamp;
     // drop (measure-zero) timestamp collisions so the attribution is exact.
@@ -227,11 +249,15 @@ fn golden_path(name: &str) -> std::path::PathBuf {
 
 fn run_scenario(name: &str, wan: Wan) {
     let events = scenario_events(&wan);
-    assert!(!events.is_empty(), "{name}: scenario generated no events");
     assert!(
         events.iter().any(|e| matches!(e.ev, LinkEvent::Fail(..))),
         "{name}: scenario must include a structural event"
     );
+    run_scenario_events(name, wan, events);
+}
+
+fn run_scenario_events(name: &str, wan: Wan, events: Vec<TimedLinkEvent>) {
+    assert!(!events.is_empty(), "{name}: scenario generated no events");
 
     let (sim_recs, sim_rates) = sim_replay(wan.clone(), &events);
     let (ctl_recs, ctl_rates) = controller_replay(wan, &events);
@@ -284,4 +310,19 @@ fn golden_scenario_gscale() {
 #[test]
 fn golden_scenario_att() {
     run_scenario("att", topologies::att());
+}
+
+/// Gray failures on SWAN: a pure never-down churn stream, pinned like the
+/// other goldens (the CI bless-guard fails the job if this file
+/// re-blesses). No structural events by design — the pathology is that
+/// every link looks healthy.
+#[test]
+fn golden_scenario_swan_gray() {
+    let wan = topologies::swan();
+    let events = gray_events(&wan);
+    assert!(
+        events.iter().all(|e| matches!(e.ev, LinkEvent::SetBandwidth(..))),
+        "gray scenario must stay structurally healthy"
+    );
+    run_scenario_events("swan_gray", wan, events);
 }

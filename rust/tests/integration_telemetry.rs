@@ -1,0 +1,129 @@
+//! End-to-end telemetry over the real overlay: agents report achieved
+//! per-path throughput, the controller fuses it into capacity beliefs and
+//! probes stale edges — while an oracle-configured controller keeps
+//! ignoring all of it.
+
+use std::time::{Duration, Instant};
+use terra::api::TerraClient;
+use terra::net::telemetry::{EstimatorKind, TelemetryConfig};
+use terra::net::topologies;
+use terra::overlay::protocol::FlowSpec;
+use terra::overlay::{Agent, Controller, TestbedConfig, BYTES_PER_GBPS};
+use terra::scheduler::terra::{TerraConfig, TerraPolicy};
+
+struct Testbed {
+    handle: terra::overlay::ControllerHandle,
+    agents: Vec<Agent>,
+}
+
+fn start_testbed(wan: terra::net::Wan, k: usize, telemetry: TelemetryConfig) -> Testbed {
+    let n = wan.num_nodes();
+    let policy = TerraPolicy::new(TerraConfig { alpha: 0.0, k, ..Default::default() });
+    let handle = Controller::spawn(
+        TestbedConfig::new(wan, k).with_telemetry(telemetry),
+        Box::new(policy),
+    )
+    .unwrap();
+    let agents: Vec<Agent> = (0..n).map(|dc| Agent::spawn(dc, handle.addr).unwrap()).collect();
+    assert!(handle.wait_ready(n, Duration::from_secs(10)), "agents failed to register");
+    Testbed { handle, agents }
+}
+
+impl Testbed {
+    fn stop(self) {
+        for a in self.agents {
+            a.shutdown();
+        }
+        self.handle.shutdown();
+    }
+}
+
+fn gbit(x: f64) -> u64 {
+    (x * BYTES_PER_GBPS) as u64
+}
+
+/// Wait until `cond` holds or the deadline passes; returns whether it
+/// held.
+fn eventually(timeout: Duration, mut cond: impl FnMut() -> bool) -> bool {
+    let t0 = Instant::now();
+    while t0.elapsed() < timeout {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    cond()
+}
+
+/// Belief mode on a real testbed: a transfer produces passive samples,
+/// idle edges get probed, and beliefs stay physical (finite, within the
+/// provisioned base capacity) despite loopback's absurd burst rates.
+#[test]
+fn telemetry_reports_flow_and_beliefs_stay_physical() {
+    let telemetry = TelemetryConfig {
+        estimator: EstimatorKind::Ewma { alpha: 0.3 },
+        headroom_k: 0.0,
+        sample_interval_s: 0.25,
+        probe_after_s: 0.5,
+    };
+    let tb = start_testbed(topologies::fig1a(), 3, telemetry);
+    let mut client = TerraClient::connect(tb.handle.addr).unwrap();
+    // Long enough (≈1 s at full believed rate) that several 250 ms
+    // telemetry windows catch the transfer in flight.
+    let flows = [FlowSpec { id: 0, src_dc: 0, dst_dc: 1, bytes: gbit(20.0) }];
+    let cid = client.submit_coflow(&flows, None).unwrap();
+    assert!(cid > 0);
+    let cct = client.wait_done(cid as u64, 60.0).unwrap();
+    assert!(cct > 0.0);
+
+    // Passive samples from the transfer, probes for the edges it never
+    // touched.
+    assert!(
+        eventually(Duration::from_secs(10), || {
+            let s = tb.handle.telemetry_stats();
+            s.reports > 0 && s.samples > 0 && s.probes_sent > 0
+        }),
+        "telemetry never flowed: {:?}",
+        tb.handle.telemetry_stats()
+    );
+
+    // Beliefs must stay within the physically provisioned envelope even
+    // though loopback probe bursts "measure" hundreds of Gbps.
+    let wan = topologies::fig1a();
+    for l in wan.links() {
+        let believed = tb.handle.believed_capacity(l.src, l.dst).unwrap();
+        assert!(
+            believed.is_finite() && believed >= 0.0 && believed <= l.base_capacity + 1e-6,
+            "belief for {}->{} escaped the physical envelope: {believed}",
+            l.src,
+            l.dst
+        );
+    }
+    tb.stop();
+}
+
+/// Oracle controllers count reports but fuse nothing and probe nothing —
+/// the pre-telemetry behavior, bit for bit.
+#[test]
+fn oracle_controller_ignores_telemetry() {
+    let tb = start_testbed(topologies::fig1a(), 3, TelemetryConfig::oracle());
+    let mut client = TerraClient::connect(tb.handle.addr).unwrap();
+    let flows = [FlowSpec { id: 0, src_dc: 0, dst_dc: 1, bytes: gbit(2.0) }];
+    let cid = client.submit_coflow(&flows, None).unwrap();
+    client.wait_done(cid as u64, 60.0).unwrap();
+    // Give the agents time to flush at least one report.
+    assert!(
+        eventually(Duration::from_secs(5), || tb.handle.telemetry_stats().reports > 0),
+        "agents never reported"
+    );
+    let s = tb.handle.telemetry_stats();
+    assert_eq!(s.samples, 0, "oracle must not fuse samples");
+    assert_eq!(s.probes_sent, 0, "oracle must not probe");
+    // Beliefs (= truth) untouched at base capacity.
+    let wan = topologies::fig1a();
+    for l in wan.links() {
+        let believed = tb.handle.believed_capacity(l.src, l.dst).unwrap();
+        assert!((believed - l.base_capacity).abs() < 1e-9);
+    }
+    tb.stop();
+}

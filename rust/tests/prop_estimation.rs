@@ -1,0 +1,233 @@
+//! Property tests for the telemetry / capacity-estimation subsystem.
+//!
+//! The load-bearing invariant: **`Estimator::Oracle` is bit-identical to
+//! the pre-telemetry engine** — same rounds, same allocations, same
+//! epochs — on random dynamics streams over all three evaluation
+//! topologies, even while the telemetry entry points are being spammed
+//! (observations, probes, priors, and belief refreshes must all be inert
+//! no-ops under the oracle). The committed golden traces pin the absolute
+//! behavior; these properties pin the equivalence under churn.
+
+use terra::coflow::{Coflow, Flow};
+use terra::engine::{EngineConfig, RoundEngine};
+use terra::net::dynamics::{self, DynamicsModel, DynamicsProfile};
+use terra::net::telemetry::{EstimatorKind, TelemetryConfig};
+use terra::net::{topologies, Wan};
+use terra::scheduler::terra::{TerraConfig, TerraPolicy};
+use terra::scheduler::{CoflowState, RoundTrigger};
+use terra::sim::{Job, SimConfig, Simulation};
+use terra::util::rng::Pcg32;
+
+fn eval_topologies() -> Vec<(&'static str, Wan)> {
+    vec![("swan", topologies::swan()), ("gscale", topologies::gscale()), ("att", topologies::att())]
+}
+
+/// A dynamics mix that exercises every reaction class: diurnal sub-/super-ρ
+/// fluctuations, structural fail/recover, and gray-failure churn.
+fn mixed_profile() -> DynamicsProfile {
+    DynamicsProfile {
+        name: "mix".into(),
+        models: vec![
+            DynamicsModel::Diurnal { period_s: 60.0, amplitude: 0.5, jitter: 0.1, interval_s: 7.0 },
+            DynamicsModel::MarkovFailure { mtbf_s: 120.0, mttr_s: 9.0 },
+            DynamicsModel::GrayFailure {
+                mtbg_s: 90.0,
+                episode_s: 20.0,
+                low_frac: 0.2,
+                churn_interval_s: 5.0,
+                churn_amp: 0.4,
+            },
+        ],
+    }
+}
+
+fn mk_engine(wan: Wan, telemetry: TelemetryConfig) -> RoundEngine {
+    let policy = TerraPolicy::new(TerraConfig { alpha: 0.0, k: 3, ..Default::default() });
+    RoundEngine::new(
+        wan,
+        Box::new(policy),
+        EngineConfig { check_feasibility: true, telemetry, ..Default::default() },
+    )
+}
+
+fn random_coflow(id: u64, nodes: usize, rng: &mut Pcg32) -> CoflowState {
+    let s = rng.below(nodes);
+    let mut d = rng.below(nodes);
+    while d == s {
+        d = rng.below(nodes);
+    }
+    let mut st = CoflowState::from_coflow(&Coflow::new(
+        id,
+        vec![Flow { id: 0, src_dc: s, dst_dc: d, volume: rng.uniform(50.0, 400.0) }],
+    ));
+    st.admitted = true;
+    st
+}
+
+/// Oracle engines stepped in lockstep over random event streams, one of
+/// them spammed with telemetry between every event: rounds, epochs, and
+/// allocations must stay bit-identical throughout.
+#[test]
+fn prop_oracle_bit_identical_under_telemetry_spam() {
+    for (tname, wan) in eval_topologies() {
+        for seed in 0..3u64 {
+            let events = dynamics::generate(&wan, &mixed_profile(), 90.0, seed);
+            assert!(!events.is_empty(), "{tname}: empty stream");
+            let plain = TelemetryConfig::oracle();
+            // Oracle with aggressive telemetry knobs: all of it must be
+            // inert.
+            let noisy = TelemetryConfig {
+                estimator: EstimatorKind::Oracle,
+                headroom_k: 3.0,
+                sample_interval_s: 0.05,
+                probe_after_s: 0.1,
+            };
+            let mut a = mk_engine(wan.clone(), plain);
+            let mut b = mk_engine(wan.clone(), noisy);
+            let mut rng = Pcg32::new(seed ^ 0x7E11E);
+            let mut next_id = 1u64;
+            let num_edges = wan.num_edges();
+            for (i, ev) in events.iter().enumerate().take(60) {
+                if i % 6 == 0 {
+                    let st = random_coflow(next_id, wan.num_nodes(), &mut rng);
+                    next_id += 1;
+                    for e in [&mut a, &mut b] {
+                        e.insert(st.clone());
+                        e.round(ev.t, RoundTrigger::CoflowArrival);
+                    }
+                }
+                // Spam engine B's telemetry surface before the event...
+                b.observe_edge(i % num_edges, rng.uniform(0.1, 50.0), i % 2 == 0, ev.t);
+                b.probe_edge((i * 3) % num_edges, rng.uniform(0.1, 50.0), ev.t);
+                b.announce_prior((i * 5) % num_edges, rng.uniform(0.1, 50.0), ev.t, ev.t + 1.0);
+                assert_eq!(b.refresh_beliefs(), None, "{tname}: oracle refresh must be None");
+                // ...then deliver the same truth event to both.
+                let (ra, rb) = (a.handle_wan_event(&ev.ev), b.handle_wan_event(&ev.ev));
+                assert_eq!(ra, rb, "{tname} seed {seed} event {i}: reactions diverged");
+                if let Some(t) = ra.trigger() {
+                    a.round(ev.t, t);
+                    b.round(ev.t, t);
+                }
+                assert_eq!(a.epoch(), b.epoch(), "{tname} seed {seed} event {i}: epochs");
+                assert_eq!(
+                    a.alloc().rates,
+                    b.alloc().rates,
+                    "{tname} seed {seed} event {i}: allocations diverged"
+                );
+                for e in [&mut a, &mut b] {
+                    e.drain(0.05, 0.0);
+                    e.take_finished();
+                }
+            }
+            assert_eq!(a.rounds(), b.rounds(), "{tname} seed {seed}: round counts");
+        }
+    }
+}
+
+/// Whole-simulation equivalence: a default sim and an explicit-oracle sim
+/// (with telemetry knobs set) over random dynamics streams produce
+/// bit-identical reports — rounds, LP solves, CCTs, epochs.
+#[test]
+fn prop_oracle_sim_reports_bit_identical() {
+    for (tname, wan) in eval_topologies() {
+        for seed in 0..2u64 {
+            let events = dynamics::generate(&wan, &mixed_profile(), 60.0, seed ^ 0xA5);
+            let run = |telemetry: TelemetryConfig| {
+                let policy = TerraPolicy::new(TerraConfig { alpha: 0.0, ..Default::default() });
+                let mut sim = Simulation::new(
+                    wan.clone(),
+                    Box::new(policy),
+                    SimConfig { telemetry, ..Default::default() },
+                );
+                let mut rng = Pcg32::new(seed ^ 0xBEEF);
+                for id in 0..4u64 {
+                    let nodes = wan.num_nodes();
+                    let s = rng.below(nodes);
+                    let mut d = rng.below(nodes);
+                    while d == s {
+                        d = rng.below(nodes);
+                    }
+                    sim.add_job(Job::map_reduce(
+                        id + 1,
+                        rng.uniform(0.0, 5.0),
+                        0.0,
+                        vec![Flow { id: 0, src_dc: s, dst_dc: d, volume: rng.uniform(20.0, 120.0) }],
+                    ));
+                }
+                for ev in &events {
+                    sim.add_wan_event(ev.t, ev.ev.clone());
+                }
+                sim.run()
+            };
+            let a = run(TelemetryConfig::oracle());
+            let b = run(TelemetryConfig {
+                estimator: EstimatorKind::Oracle,
+                headroom_k: 2.0,
+                sample_interval_s: 0.1,
+                probe_after_s: 0.5,
+            });
+            assert_eq!(a.rounds, b.rounds, "{tname} seed {seed}");
+            assert_eq!(a.lp_solves, b.lp_solves, "{tname} seed {seed}");
+            assert_eq!(a.wan_rounds, b.wan_rounds, "{tname} seed {seed}");
+            assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{tname} seed {seed}");
+            assert_eq!(a.est_samples, 0);
+            assert_eq!(b.est_samples, 0, "oracle sims must not sample");
+            for (ca, cb) in a.coflows.iter().zip(&b.coflows) {
+                assert_eq!(
+                    ca.finish.map(f64::to_bits),
+                    cb.finish.map(f64::to_bits),
+                    "{tname} seed {seed}: CCT diverged"
+                );
+            }
+        }
+    }
+}
+
+/// Feasibility under estimation: whatever the estimator believes, the
+/// engine's allocation is always feasible on the *believed* WAN, and the
+/// truth-throttled drain keeps goodput within true capacity. Run a
+/// belief-mode sim over an adversarial gray stream and check it converges
+/// and completes.
+#[test]
+fn prop_belief_mode_survives_gray_stream() {
+    let wan = topologies::swan();
+    for (ename, seed) in
+        [("ewma", 1u64), ("kalman", 2), ("holddown", 3), ("ewma", 4), ("kalman", 5)]
+    {
+        let events = dynamics::generate(&wan, &DynamicsProfile::gray(), 120.0, seed);
+        let telemetry = TelemetryConfig {
+            sample_interval_s: 0.5,
+            probe_after_s: 3.0,
+            ..TelemetryConfig::by_name(ename).unwrap()
+        };
+        let policy = TerraPolicy::new(TerraConfig { alpha: 0.0, ..Default::default() });
+        let mut sim = Simulation::new(
+            wan.clone(),
+            Box::new(policy),
+            SimConfig { telemetry, ..Default::default() },
+        );
+        sim.add_job(Job::map_reduce(
+            1,
+            0.0,
+            0.0,
+            vec![Flow { id: 0, src_dc: 0, dst_dc: 1, volume: 200.0 }],
+        ));
+        sim.add_job(Job::map_reduce(
+            2,
+            1.0,
+            0.0,
+            vec![Flow { id: 0, src_dc: 2, dst_dc: 3, volume: 150.0 }],
+        ));
+        for ev in &events {
+            sim.add_wan_event(ev.t, ev.ev.clone());
+        }
+        let rep = sim.run();
+        assert_eq!(rep.unfinished(), 0, "{ename} seed {seed}: starved under gray churn");
+        assert!(rep.est_mape().is_finite(), "{ename} seed {seed}");
+        assert!(
+            rep.makespan < 5000.0,
+            "{ename} seed {seed}: estimation stalled the workload ({}s)",
+            rep.makespan
+        );
+    }
+}
