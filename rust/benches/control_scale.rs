@@ -1,0 +1,192 @@
+//! Bench: sharded, pipelined control plane at 10k → 1M active coflows.
+//!
+//! Sweeps the active-coflow count on all three evaluation topologies with
+//! the pod-localized workload (single-group coflows between adjacent
+//! pairs, k = 1, no deadlines — admission is O(1) and every coflow pins to
+//! its direct edge), comparing `shards = 1` (the PR 4/5 engine, the
+//! property-pinned baseline) against multi-shard front-ends that pipeline
+//! partition → solve → enforce across shards:
+//!
+//! - **admitted/s**: batched-admission throughput — routing + adoption for
+//!   the whole population,
+//! - **rounds/s and p50/p99 decision latency**: steady-state scheduling
+//!   rounds, each triggered by one arrival (insert + round timed
+//!   together: the arrival-to-rates decision path).
+//!
+//! All shard counts produce bit-identical allocations (property-pinned by
+//! `tests/prop_sharded.rs`); only throughput and latency differ. Emits
+//! `BENCH_control_scale.json`. Quick mode stops at 100k active coflows;
+//! `TERRA_BENCH_FULL=1` extends the sweep to 1M.
+
+use std::time::Instant;
+use terra::coflow::{Coflow, Flow};
+use terra::engine::{default_workers, EngineConfig, ShardedEngine};
+use terra::net::{topologies, Wan};
+use terra::scheduler::terra::{TerraConfig, TerraPolicy};
+use terra::scheduler::{CoflowState, RoundTrigger};
+use terra::util::bench::{quick_mode, Table};
+use terra::util::json::Json;
+use terra::util::rng::Pcg32;
+use terra::util::stats;
+
+/// Pod-local coflow between one adjacent (directly linked) pair.
+fn mk_state(id: u64, pairs: &[(usize, usize)], rng: &mut Pcg32) -> CoflowState {
+    let (s, d) = pairs[rng.below(pairs.len())];
+    let mut st = CoflowState::from_coflow(&Coflow::new(
+        id,
+        vec![Flow { id: 0, src_dc: s, dst_dc: d, volume: rng.uniform(50.0, 4000.0) }],
+    ));
+    st.admitted = true;
+    st
+}
+
+struct ComboResult {
+    admitted_per_s: f64,
+    rounds_per_s: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    lp_per_round: f64,
+    shard_migrations: usize,
+    parked: usize,
+}
+
+/// Admit `n` coflows in one batch, then time `rounds` steady-state
+/// decision cycles (one arrival each). The populate round is untimed.
+fn bench_combo(wan: &Wan, n: usize, shards: usize, rounds: usize) -> ComboResult {
+    let policy = TerraPolicy::new(TerraConfig { k: 1, ..Default::default() });
+    let cfg = EngineConfig { check_feasibility: false, shards, ..Default::default() };
+    let mut engine = ShardedEngine::new(wan.clone(), Box::new(policy), cfg);
+    let pairs: Vec<(usize, usize)> = wan.links().iter().map(|l| (l.src, l.dst)).collect();
+    let mut rng = Pcg32::new(0x5CA1E + n as u64 + shards as u64);
+
+    let t0 = Instant::now();
+    for i in 0..n {
+        engine.insert(mk_state(i as u64 + 1, &pairs, &mut rng));
+    }
+    let admit_s = t0.elapsed().as_secs_f64();
+    engine.round(0.0, RoundTrigger::Initial);
+    engine.take_stats(); // drop populate-round counters
+
+    let mut lat = Vec::with_capacity(rounds);
+    let mut now = 0.0;
+    for r in 0..rounds {
+        engine.drain(0.05, 0.0);
+        now += 0.05;
+        let st = mk_state((n + r) as u64 + 1, &pairs, &mut rng);
+        let t0 = Instant::now();
+        engine.insert(st);
+        engine.round(now, RoundTrigger::CoflowArrival);
+        lat.push(t0.elapsed().as_secs_f64());
+    }
+    let st = engine.take_stats();
+    let total: f64 = lat.iter().sum();
+    ComboResult {
+        admitted_per_s: if admit_s > 0.0 { n as f64 / admit_s } else { f64::INFINITY },
+        rounds_per_s: if total > 0.0 { rounds as f64 / total } else { f64::INFINITY },
+        p50_ms: 1e3 * stats::percentile(&lat, 50.0),
+        p99_ms: 1e3 * stats::percentile(&lat, 99.0),
+        lp_per_round: st.lp_solves as f64 / rounds as f64,
+        shard_migrations: st.shard_migrations,
+        parked: engine.parked(),
+    }
+}
+
+fn combo_json(shards: usize, c: &ComboResult) -> Json {
+    Json::from_pairs([
+        ("shards", Json::from(shards)),
+        ("admitted_per_s", c.admitted_per_s.into()),
+        ("rounds_per_s", c.rounds_per_s.into()),
+        ("p50_decision_ms", c.p50_ms.into()),
+        ("p99_decision_ms", c.p99_ms.into()),
+        ("lp_solves_per_round", c.lp_per_round.into()),
+        ("shard_migrations", c.shard_migrations.into()),
+        ("parked", c.parked.into()),
+    ])
+}
+
+fn main() {
+    let quick = quick_mode();
+    let scales: Vec<usize> =
+        if quick { vec![10_000, 100_000] } else { vec![10_000, 100_000, 1_000_000] };
+    let rounds = if quick { 6 } else { 8 };
+    let all = default_workers();
+    let mut shard_axis = vec![1usize, 2, all];
+    shard_axis.sort_unstable();
+    shard_axis.dedup();
+    let s_max = *shard_axis.last().unwrap();
+    let topos: Vec<(&str, Wan)> = vec![
+        ("swan", topologies::swan()),
+        ("gscale", topologies::gscale()),
+        ("att", topologies::att()),
+    ];
+
+    let mut topo_docs = Vec::new();
+    for (tname, wan) in &topos {
+        let mut tab = Table::new(&[
+            "active",
+            "1-shard p50",
+            &format!("{s_max}-shard p50"),
+            "p50 speedup",
+            "p99 speedup",
+            "1-shard adm/s",
+            &format!("{s_max}-shard adm/s"),
+            "rounds/s",
+        ]);
+        let mut scale_docs = Vec::new();
+        for &n in &scales {
+            let results: Vec<ComboResult> =
+                shard_axis.iter().map(|&s| bench_combo(wan, n, s, rounds)).collect();
+            let base = &results[0];
+            let wide = results.last().unwrap();
+            let sp50 = if wide.p50_ms > 0.0 { base.p50_ms / wide.p50_ms } else { f64::INFINITY };
+            let sp99 = if wide.p99_ms > 0.0 { base.p99_ms / wide.p99_ms } else { f64::INFINITY };
+            tab.row(&[
+                n.to_string(),
+                format!("{:.2}ms", base.p50_ms),
+                format!("{:.2}ms", wide.p50_ms),
+                format!("{sp50:.2}x"),
+                format!("{sp99:.2}x"),
+                format!("{:.0}", base.admitted_per_s),
+                format!("{:.0}", wide.admitted_per_s),
+                format!("{:.1}", wide.rounds_per_s),
+            ]);
+            let combos: Vec<Json> =
+                shard_axis.iter().zip(&results).map(|(&s, c)| combo_json(s, c)).collect();
+            scale_docs.push(Json::from_pairs([
+                ("active_coflows", Json::from(n)),
+                ("p50_decision_speedup_vs_single_shard", sp50.into()),
+                ("p99_decision_speedup_vs_single_shard", sp99.into()),
+                (
+                    "admission_speedup_vs_single_shard",
+                    (if base.admitted_per_s > 0.0 {
+                        wide.admitted_per_s / base.admitted_per_s
+                    } else {
+                        f64::INFINITY
+                    })
+                    .into(),
+                ),
+                ("single_shard", combo_json(1, base)),
+                ("sharded", combo_json(s_max, wide)),
+                ("shard_counts", Json::Arr(combos)),
+            ]));
+        }
+        tab.print(&format!("{tname}: decision latency and throughput by shard count"));
+        topo_docs.push(Json::from_pairs([
+            ("topology", Json::from(*tname)),
+            ("scales", Json::Arr(scale_docs)),
+        ]));
+    }
+    let doc = Json::from_pairs([
+        ("workload", Json::from("pod-local single-group coflows on adjacent pairs, k=1")),
+        ("rounds_timed", rounds.into()),
+        ("arrivals_per_round", 1u64.into()),
+        ("available_workers", all.into()),
+        ("shard_axis", Json::Arr(shard_axis.iter().map(|&s| Json::from(s)).collect())),
+        ("topologies", Json::Arr(topo_docs)),
+    ]);
+    let path = "BENCH_control_scale.json";
+    match std::fs::write(path, format!("{doc}\n")) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
+}

@@ -115,6 +115,49 @@ impl GammaCache {
         self.entries.extend(shard.entries);
     }
 
+    /// [`GammaCache::extract`] into a caller-owned shard, reusing its map
+    /// storage. The shard is cleared (capacity preserved) and refilled, so
+    /// steady-state rounds that recycle the same shard buffers do not
+    /// allocate.
+    pub fn extract_into(&mut self, ids: &[CoflowId], shard: &mut GammaCache) {
+        shard.entries.clear();
+        shard.epoch = self.epoch;
+        for id in ids {
+            if let Some(e) = self.entries.remove(id) {
+                shard.entries.insert(*id, e);
+            }
+        }
+    }
+
+    /// [`GammaCache::absorb`] by draining — the shard keeps its map
+    /// capacity for reuse next round.
+    pub fn absorb_from(&mut self, shard: &mut GammaCache) {
+        debug_assert_eq!(shard.epoch, self.epoch, "shard from a different epoch");
+        for (id, e) in shard.entries.drain() {
+            self.entries.insert(id, e);
+        }
+    }
+
+    /// Take one coflow's entry out for migration to another engine shard.
+    /// The entry travels opaquely (epoch included); under the lockstep
+    /// epoch discipline every shard shares one epoch sequence, so the entry
+    /// is exactly as (in)valid at the destination as it was here.
+    pub fn export(&mut self, id: CoflowId) -> Option<GammaExport> {
+        self.entries.remove(&id).map(|e| GammaExport {
+            epoch: e.epoch,
+            total_remaining: e.total_remaining,
+            gamma: e.gamma,
+        })
+    }
+
+    /// Install an entry exported from another shard.
+    pub fn import(&mut self, id: CoflowId, e: GammaExport) {
+        self.entries.insert(
+            id,
+            Entry { epoch: e.epoch, total_remaining: e.total_remaining, gamma: e.gamma },
+        );
+    }
+
     /// Drop everything (e.g. the path set changed structurally).
     pub fn clear(&mut self) {
         self.entries.clear();
@@ -128,6 +171,15 @@ impl GammaCache {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+}
+
+/// A Γ-cache entry in transit between engine shards (coflow ownership
+/// migration). Opaque outside this module.
+#[derive(Clone, Debug)]
+pub struct GammaExport {
+    epoch: u64,
+    total_remaining: f64,
+    gamma: f64,
 }
 
 /// Validity cache for per-component allocations — the component-level
@@ -210,6 +262,13 @@ impl ComponentCache {
     /// swept by key mismatch at the next round).
     pub fn forget(&mut self, id: CoflowId) {
         self.dirty.remove(&id);
+    }
+
+    /// Is this coflow's discontinuous-change flag set? Used when migrating
+    /// a coflow between engine shards: the flag must travel with it so the
+    /// destination re-solves exactly when a single-shard engine would.
+    pub fn is_dirty(&self, id: CoflowId) -> bool {
+        self.dirty.contains(&id)
     }
 
     /// Start a round's mark-and-sweep generation.
@@ -322,6 +381,35 @@ mod tests {
         assert_eq!(c.lookup(4, 8.0), Some(4.0));
     }
 
+    /// Buffer-reusing extract/absorb behave exactly like the allocating
+    /// pair, and export/import round-trips an entry across "shards".
+    #[test]
+    fn extract_into_and_export_roundtrip() {
+        let mut c = GammaCache::new();
+        c.store(1, 10.0, 1.0);
+        c.store(2, 10.0, 2.0);
+        let mut shard = GammaCache::new();
+        c.extract_into(&[1], &mut shard);
+        assert_eq!(shard.lookup(1, 10.0), Some(1.0));
+        assert_eq!(c.lookup(1, 10.0), None);
+        shard.store(1, 5.0, 0.5);
+        c.absorb_from(&mut shard);
+        assert!(shard.entries.is_empty(), "absorb_from drains the shard");
+        assert_eq!(c.lookup(1, 5.0), Some(0.5));
+        // Reuse the same shard buffer for a different member set.
+        c.extract_into(&[2], &mut shard);
+        assert_eq!(shard.lookup(2, 10.0), Some(2.0));
+        assert_eq!(shard.lookup(1, 5.0), None, "stale entries cleared on reuse");
+        c.absorb_from(&mut shard);
+
+        let mut other = GammaCache::new();
+        let e = c.export(2).expect("entry present");
+        assert_eq!(c.lookup(2, 10.0), None, "export removes the entry");
+        other.import(2, e);
+        assert_eq!(other.lookup(2, 10.0), Some(2.0));
+        assert!(c.export(99).is_none());
+    }
+
     #[test]
     fn infinite_gamma_reused_within_epoch() {
         let mut c = GammaCache::new();
@@ -352,6 +440,8 @@ mod tests {
 
         // Dirty member (group completion / update / re-insert).
         c.mark_dirty(2);
+        assert!(c.is_dirty(2));
+        assert!(!c.is_dirty(1));
         assert!(!c.is_fresh(&[1, 2], &[0, 1]));
         assert!(c.is_fresh(&[3], &[2]), "other components unaffected");
         c.begin_round();

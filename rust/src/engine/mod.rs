@@ -42,8 +42,10 @@
 //! by the `integration_engine` parity test.
 
 pub mod cache;
+pub mod sharded;
 
 pub use cache::{ComponentCache, GammaCache};
+pub use sharded::ShardedEngine;
 
 use crate::coflow::CoflowId;
 use crate::lp;
@@ -98,6 +100,18 @@ pub struct EngineConfig {
     /// through the same ρ-dampened gate that ground-truth fluctuations
     /// used to take.
     pub telemetry: TelemetryConfig,
+    /// Control-plane shards for the scale-out front-end
+    /// ([`ShardedEngine`]): `> 1` splits the active set across that many
+    /// engine shards by edge ownership, each running its round
+    /// concurrently. `1` (the default) is the plain single-engine loop —
+    /// `ShardedEngine` then delegates every call verbatim, bit-identical
+    /// to previous behavior. Direct [`RoundEngine`] users ignore it.
+    pub shards: usize,
+    /// A cross-shard arrival migrates the coflows needed to merge its
+    /// edge-component into one owning shard; an arrival that would migrate
+    /// more than this many coflows is parked in the front-end's spill
+    /// engine and served by the two-level residual solve instead.
+    pub migrate_cap: usize,
 }
 
 impl Default for EngineConfig {
@@ -109,6 +123,8 @@ impl Default for EngineConfig {
             decompose: true,
             workers: default_workers(),
             telemetry: TelemetryConfig::default(),
+            shards: 1,
+            migrate_cap: usize::MAX,
         }
     }
 }
@@ -172,6 +188,22 @@ pub struct RoundEngine {
     /// the union-find/components scratch, reused every round.
     item_edges_buf: Vec<Vec<usize>>,
     decomp: DecomposeScratch,
+    /// True when `decomp` no longer mirrors the active table: membership
+    /// changed (insert / departure / migration), some coflow's edge set
+    /// changed (group completion, update, dirty mark), or a structural
+    /// event recomputed paths. Decomposed rounds rebuild the partition only
+    /// then; steady-state rounds (pure drains, sub-ρ clamps, capacity
+    /// fluctuations) reuse the standing partition as-is.
+    partition_stale: bool,
+    /// Classification scratch (member-id list and reused-component list),
+    /// cleared and refilled each decomposed round.
+    ids_scratch: Vec<CoflowId>,
+    fresh_scratch: Vec<usize>,
+    /// Pooled per-task Γ-cache shards for parallel component solves:
+    /// entries are moved out via [`GammaCache::extract_into`] and back via
+    /// [`GammaCache::absorb_from`], so steady-state parallel rounds
+    /// allocate no fresh cache maps.
+    shard_bufs: Vec<GammaCache>,
     /// Engine-level instrumentation (component solve/reuse counters) merged
     /// into the policy's stats by [`RoundEngine::take_stats`].
     engine_stats: RoundStats,
@@ -217,6 +249,10 @@ impl RoundEngine {
             workspaces,
             item_edges_buf: Vec::new(),
             decomp: DecomposeScratch::default(),
+            partition_stale: true,
+            ids_scratch: Vec::new(),
+            fresh_scratch: Vec::new(),
+            shard_bufs: Vec::new(),
             engine_stats: RoundStats::default(),
             rounds: 0,
         }
@@ -282,15 +318,18 @@ impl RoundEngine {
     pub fn insert(&mut self, st: CoflowState) {
         self.cache.invalidate(st.id);
         self.comp_cache.mark_dirty(st.id);
+        self.partition_stale = true;
         self.active.push(st);
     }
 
     /// Drop a coflow's Γ-cache entry (and dirty its component) after a
     /// discontinuous change to its remaining volumes (group completion,
-    /// update).
+    /// update). Also invalidates the standing partition: the coflow's edge
+    /// set may have changed shape.
     pub fn mark_dirty(&mut self, id: CoflowId) {
         self.cache.invalidate(id);
         self.comp_cache.mark_dirty(id);
+        self.partition_stale = true;
     }
 
     /// Deadline admission control against the current active set (§3.2).
@@ -361,6 +400,7 @@ impl RoundEngine {
                 self.bump_epoch();
                 self.comp_cache.touch_all();
                 self.warm_valid = false;
+                self.partition_stale = true;
                 WanReaction::Structural
             }
             LinkEvent::SetBandwidth(u, v, gbps) => {
@@ -531,7 +571,12 @@ impl RoundEngine {
                 RoundCtx { trigger, epoch: cache.epoch(), cache, warm, ws: &mut workspaces[0] };
             policy.allocate_with(now, ctx, active, &net)
         } else {
-            self.round_decomposed(now, trigger)
+            // `None` means every component carried forward: the live
+            // allocation already IS this round's allocation.
+            match self.round_decomposed(now, trigger) {
+                Some(a) => a,
+                None => std::mem::take(&mut self.alloc),
+            }
         };
         self.alloc = new_alloc;
         self.warm_valid = true;
@@ -556,7 +601,11 @@ impl RoundEngine {
     /// restriction); since components share no edges, the union of the
     /// per-component allocations equals the monolithic allocation (the
     /// `prop_component_decomposition_*` property tests pin this).
-    fn round_decomposed(&mut self, now: f64, trigger: RoundTrigger) -> Allocation {
+    ///
+    /// Returns `None` when every component was carried forward — the live
+    /// allocation is already this round's answer, so the caller keeps it
+    /// without rebuilding the rate table.
+    fn round_decomposed(&mut self, now: f64, trigger: RoundTrigger) -> Option<Allocation> {
         self.comp_cache.begin_round();
         let RoundEngine {
             wan,
@@ -571,62 +620,85 @@ impl RoundEngine {
             workspaces,
             item_edges_buf,
             decomp,
+            partition_stale,
+            ids_scratch,
+            fresh_scratch,
+            shard_bufs,
             cfg,
             k,
             ..
         } = self;
-        // Per-coflow edge sets over unfinished groups' k-truncated paths.
-        // Rebuilt every round into reused buffers (steady state allocates
-        // nothing): this O(active · k · path-len) scan is microseconds
-        // against the millisecond-scale LP solves it avoids — the
-        // O(changed components) claim is about solver work. If the scan
-        // itself ever shows up at 10⁵+ coflows, maintain the partition
-        // incrementally (union-find survives arrivals cheaply;
-        // departures/structural events need a rebuild or a dynamic-
-        // connectivity structure).
         let n = active.len();
-        while item_edges_buf.len() < n {
-            item_edges_buf.push(Vec::new());
-        }
-        for (cf, es) in active.iter().zip(item_edges_buf.iter_mut()) {
-            es.clear();
-            for (g, &rem) in cf.groups.iter().zip(&cf.remaining) {
-                if rem <= 1e-9 {
-                    continue;
-                }
-                for p in paths.get(g.src, g.dst).iter().take(*k) {
-                    es.extend_from_slice(&p.edges);
-                }
+        // Per-coflow edge sets over unfinished groups' k-truncated paths,
+        // rebuilt into reused buffers — but only when the standing
+        // partition is stale. Every mutation that can change a coflow's
+        // edge set or the table's membership (insert, departure, group
+        // completion, dirty mark, structural event, migration) raises
+        // `partition_stale`; steady-state rounds (drains, clamps, capacity
+        // fluctuations) reuse the previous round's components outright, so
+        // the O(active · k · path-len) scan and the union-find rebuild are
+        // paid only on rounds that actually changed shape (property-pinned
+        // against the full rebuild by `prop_incremental_partition`).
+        if *partition_stale {
+            while item_edges_buf.len() < n {
+                item_edges_buf.push(Vec::new());
             }
-            es.sort_unstable();
-            es.dedup();
+            for (cf, es) in active.iter().zip(item_edges_buf.iter_mut()) {
+                es.clear();
+                for (g, &rem) in cf.groups.iter().zip(&cf.remaining) {
+                    if rem <= 1e-9 {
+                        continue;
+                    }
+                    for p in paths.get(g.src, g.dst).iter().take(*k) {
+                        es.extend_from_slice(&p.edges);
+                    }
+                }
+                es.sort_unstable();
+                es.dedup();
+            }
+            decompose::decompose_into(wan.num_edges(), &item_edges_buf[..n], decomp);
+            *partition_stale = false;
         }
-        let comps = decompose::decompose_into(wan.num_edges(), &item_edges_buf[..n], decomp);
+        let comps = decomp.components();
+        debug_assert_eq!(comps.comp_of.len(), n, "partition out of step with active table");
 
-        let mut new_alloc = Allocation::default();
-        let net = NetView { wan, paths };
-        // Classify components: carry clean ones forward immediately, queue
-        // dirty ones as solve tasks (in first-member order — the merge
-        // order, whatever solves them).
+        // Classify components: refresh clean ones, queue dirty ones as
+        // solve tasks (in first-member order — the merge order, whatever
+        // solves them). Carrying rates forward is deferred until we know
+        // whether anything solves at all.
+        fresh_scratch.clear();
         let mut tasks: Vec<(usize, Vec<CoflowId>)> = Vec::new();
         for (ci, members) in comps.members.iter().enumerate() {
-            let mut ids: Vec<CoflowId> = members.iter().map(|&i| active[i].id).collect();
-            ids.sort_unstable();
-            if comp_cache.is_fresh(&ids, &comps.edges[ci]) {
+            ids_scratch.clear();
+            ids_scratch.extend(members.iter().map(|&i| active[i].id));
+            ids_scratch.sort_unstable();
+            if comp_cache.is_fresh(ids_scratch, &comps.edges[ci]) {
                 // Untouched component: carry the live allocation forward
                 // (clamping keeps it feasible between rounds; rates are
                 // constant between rounds anyway, and equal-progress drain
                 // is proportional, so a re-solve would return the same
                 // Gbps rates).
-                comp_cache.refresh(&ids);
-                for &i in members {
-                    if let Some(r) = alloc.rates.get(&active[i].id) {
-                        new_alloc.rates.insert(active[i].id, r.clone());
-                    }
-                }
+                comp_cache.refresh(ids_scratch);
+                fresh_scratch.push(ci);
                 engine_stats.component_reuses += 1;
             } else {
-                tasks.push((ci, ids));
+                tasks.push((ci, ids_scratch.clone()));
+            }
+        }
+        if tasks.is_empty() {
+            // Nothing dirty: every component's rates carry forward, i.e.
+            // the allocation is unchanged.
+            comp_cache.end_round();
+            return None;
+        }
+
+        let mut new_alloc = Allocation::default();
+        let net = NetView { wan, paths };
+        for &ci in fresh_scratch.iter() {
+            for &i in &comps.members[ci] {
+                if let Some(r) = alloc.rates.get(&active[i].id) {
+                    new_alloc.rates.insert(active[i].id, r.clone());
+                }
             }
         }
 
@@ -646,19 +718,29 @@ impl RoundEngine {
             None
         };
         if let Some(mut forks) = forks {
-            struct PTask {
+            struct PTask<'a> {
                 ids: Vec<CoflowId>,
                 subset: Vec<CoflowState>,
-                shard: GammaCache,
+                shard: &'a mut GammaCache,
                 result: Option<Allocation>,
+            }
+            // Pooled Γ-cache shards: entries move out into a generation-
+            // stamped reusable buffer and back, so steady-state parallel
+            // rounds allocate no fresh cache maps.
+            while shard_bufs.len() < tasks.len() {
+                shard_bufs.push(GammaCache::new());
             }
             let mut ptasks: Vec<PTask> = tasks
                 .into_iter()
-                .map(|(ci, ids)| PTask {
-                    subset: comps.members[ci].iter().map(|&i| active[i].clone()).collect(),
-                    shard: cache.extract(&ids),
-                    ids,
-                    result: None,
+                .zip(shard_bufs.iter_mut())
+                .map(|((ci, ids), shard)| {
+                    cache.extract_into(&ids, shard);
+                    PTask {
+                        subset: comps.members[ci].iter().map(|&i| active[i].clone()).collect(),
+                        shard,
+                        ids,
+                        result: None,
+                    }
                 })
                 .collect();
             let chunk = ptasks.len().div_ceil(nworkers);
@@ -677,7 +759,7 @@ impl RoundEngine {
                             let ctx = RoundCtx {
                                 trigger,
                                 epoch,
-                                cache: &mut t.shard,
+                                cache: &mut *t.shard,
                                 warm,
                                 ws: &mut *ws,
                             };
@@ -689,7 +771,7 @@ impl RoundEngine {
             // Deterministic merge in component (first-member) order,
             // regardless of which worker finished when.
             for t in ptasks {
-                cache.absorb(t.shard);
+                cache.absorb_from(t.shard);
                 if let Some(part) = t.result {
                     new_alloc.rates.extend(part.rates);
                 }
@@ -724,7 +806,7 @@ impl RoundEngine {
             }
         }
         comp_cache.end_round();
-        new_alloc
+        Some(new_alloc)
     }
 
     /// Scale down rates on edges whose capacity dropped below usage
@@ -785,28 +867,7 @@ impl RoundEngine {
         if !any {
             return out;
         }
-        for cf in active.iter() {
-            let Some(rates) = alloc.rates.get(&cf.id) else { continue };
-            let mut f = 1.0f64;
-            for (gi, g) in cf.groups.iter().enumerate() {
-                let pair_paths = paths.get(g.src, g.dst);
-                for (pi, &r) in
-                    rates.get(gi).map(|v| v.as_slice()).unwrap_or(&[]).iter().enumerate()
-                {
-                    if r <= 0.0 {
-                        continue;
-                    }
-                    if let Some(p) = pair_paths.get(pi) {
-                        for &e in &p.edges {
-                            f = f.min(factors[e]);
-                        }
-                    }
-                }
-            }
-            if f < 1.0 {
-                out.insert(cf.id, f);
-            }
-        }
+        collect_throttle_factors(active, alloc, paths, &factors, &mut out);
         out
     }
 
@@ -864,8 +925,11 @@ impl RoundEngine {
             }
         }
         for id in emptied {
+            // Group emptied: shape changed, so the standing partition no
+            // longer reflects this coflow's edge set either.
             self.cache.invalidate(id);
             self.comp_cache.mark_dirty(id);
+            self.partition_stale = true;
         }
         moved
     }
@@ -905,6 +969,7 @@ impl RoundEngine {
         if hit {
             self.cache.invalidate(id);
             self.comp_cache.mark_dirty(id);
+            self.partition_stale = true;
         }
         done
     }
@@ -925,6 +990,9 @@ impl RoundEngine {
             for ws in &mut self.workspaces {
                 ws.forget(*id);
             }
+        }
+        if !finished.is_empty() {
+            self.partition_stale = true;
         }
         self.active.retain(|c| !c.done());
         finished
@@ -950,6 +1018,103 @@ impl RoundEngine {
         stats.merge(&self.engine_stats);
         self.engine_stats = RoundStats::default();
         stats
+    }
+
+    /// The standing edge-connected partition of the active table, as of
+    /// the last decomposed round (meaningless under `cold` or
+    /// `decompose = false`). Exposed for the incremental-partition
+    /// equivalence property test.
+    pub fn partition(&self) -> &decompose::Components {
+        self.decomp.components()
+    }
+
+    /// Whether the standing partition will be rebuilt at the next
+    /// decomposed round (membership / edge-set / structural change since).
+    pub fn partition_is_stale(&self) -> bool {
+        self.partition_stale
+    }
+
+    /// Pull a coflow out of this engine for ownership migration to another
+    /// shard: its state, live rates, Γ-cache entry, and component-dirty
+    /// flag travel together so the receiving engine behaves exactly as if
+    /// the coflow had always lived there.
+    pub(crate) fn extract_coflow(&mut self, id: CoflowId) -> Option<MigratedCoflow> {
+        let idx = self.active.iter().position(|c| c.id == id)?;
+        let state = self.active.remove(idx);
+        let rates = self.alloc.rates.remove(&id);
+        let gamma = self.cache.export(id);
+        let dirty = self.comp_cache.is_dirty(id);
+        self.comp_cache.forget(id);
+        for ws in &mut self.workspaces {
+            ws.forget(id);
+        }
+        self.partition_stale = true;
+        Some(MigratedCoflow { state, rates, gamma, dirty })
+    }
+
+    /// Adopt a migrated coflow at `pos` in the active table (the front-end
+    /// computes `pos` so every shard's table stays a subsequence of the
+    /// global arrival order — the determinism invariant; see
+    /// [`sharded::ShardedEngine`]).
+    pub(crate) fn adopt_coflow(&mut self, m: MigratedCoflow, pos: usize) {
+        let id = m.state.id;
+        self.cache.invalidate(id);
+        if let Some(g) = m.gamma {
+            self.cache.import(id, g);
+        }
+        if let Some(r) = m.rates {
+            self.alloc.rates.insert(id, r);
+        }
+        if m.dirty {
+            self.comp_cache.mark_dirty(id);
+        }
+        self.partition_stale = true;
+        let pos = pos.min(self.active.len());
+        self.active.insert(pos, m.state);
+    }
+}
+
+/// A coflow in transit between engine shards: everything the receiving
+/// engine needs to continue scheduling it as if it had arrived there.
+pub(crate) struct MigratedCoflow {
+    pub(crate) state: CoflowState,
+    pub(crate) rates: Option<crate::scheduler::CoflowRates>,
+    pub(crate) gamma: Option<cache::GammaExport>,
+    pub(crate) dirty: bool,
+}
+
+/// Per-coflow min scale factor over the edges its nonzero rates traverse,
+/// given per-edge factors (`< 1` on over-subscribed edges). Inserts only
+/// coflows that need scaling. Shared by [`RoundEngine::throttle_factors`]
+/// and the sharded front-end, which computes the edge factors from
+/// *aggregate* usage across all shards.
+fn collect_throttle_factors(
+    active: &[CoflowState],
+    alloc: &Allocation,
+    paths: &PathSet,
+    factors: &[f64],
+    out: &mut HashMap<CoflowId, f64>,
+) {
+    for cf in active.iter() {
+        let Some(rates) = alloc.rates.get(&cf.id) else { continue };
+        let mut f = 1.0f64;
+        for (gi, g) in cf.groups.iter().enumerate() {
+            let pair_paths = paths.get(g.src, g.dst);
+            for (pi, &r) in rates.get(gi).map(|v| v.as_slice()).unwrap_or(&[]).iter().enumerate()
+            {
+                if r <= 0.0 {
+                    continue;
+                }
+                if let Some(p) = pair_paths.get(pi) {
+                    for &e in &p.edges {
+                        f = f.min(factors[e]);
+                    }
+                }
+            }
+        }
+        if f < 1.0 {
+            out.insert(cf.id, f);
+        }
     }
 }
 

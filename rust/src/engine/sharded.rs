@@ -1,0 +1,1007 @@
+//! **ShardedEngine**: the scale-out control plane. A thin routing
+//! front-end over `shards` independent [`RoundEngine`]s, each owning a
+//! disjoint set of WAN edges and every active coflow whose k-path edge set
+//! falls inside it — plus a *spill* engine for coflows the router declines
+//! to merge (two-level solve fallback).
+//!
+//! ## Ownership model
+//!
+//! Edges are claimed lazily: an arrival whose edge set touches no owned
+//! edge lands on the least-loaded shard and claims its edges; an arrival
+//! inside one shard's territory joins that shard. An arrival whose edges
+//! span *several* shards merges them: the shard owning most of the
+//! arrival's edges becomes primary, and every coflow on the other owning
+//! shards that is (transitively) edge-connected to the arrival migrates
+//! there — state, live rates, Γ-cache entry, and dirty flag travel
+//! together ([`RoundEngine::extract_coflow`] / `adopt_coflow`), so the
+//! receiving engine behaves exactly as if the coflow had always lived
+//! there. When one arrival would migrate more than
+//! `EngineConfig::migrate_cap` coflows, it is **parked** in the spill
+//! engine instead and served by a greedy residual solve (level 2) against
+//! whatever capacity the shard solves (level 1) left behind.
+//!
+//! ## Pipeline phases
+//!
+//! [`ShardedEngine::round_with`] runs every shard's partition→solve round
+//! concurrently on scoped threads and invokes the caller's enforcement
+//! callback *per shard as it finishes* — solve and enforcement fan-out
+//! overlap across shards instead of barriering globally. The spill solve
+//! runs last (it consumes the shards' residual capacity).
+//!
+//! ## Determinism
+//!
+//! `shards = 1` (the default) delegates every call verbatim to the single
+//! inner engine — bit-identical to the unsharded control plane by
+//! construction (and property-pinned by `prop_sharded`). For `shards = N`:
+//! every WAN event, telemetry observation, and belief refresh is broadcast
+//! to all engines, so all WAN views, path sets, estimators, and capacity
+//! epochs stay in lockstep; each shard's active table is kept a
+//! subsequence of the global arrival order (adoption positions are
+//! computed from per-coflow arrival sequence numbers), so the stable
+//! tie-breaks inside the policy see the same relative order a single
+//! engine would; and since components never span shards (the router merges
+//! or parks), the union of the per-shard partitions *is* the global
+//! partition — allocations and solve counts match the single-shard engine
+//! exactly.
+
+use super::{
+    collect_throttle_factors, EngineConfig, MigratedCoflow, RoundEngine, WanReaction,
+};
+use crate::coflow::CoflowId;
+use crate::lp;
+use crate::lp::decompose;
+use crate::net::paths::PathSet;
+use crate::net::telemetry::{CapacityEstimator, TelemetryConfig};
+use crate::net::{EdgeId, LinkEvent, Wan};
+use crate::scheduler::{
+    build_instance, expand_rates, CoflowRates, CoflowState, NetView, Policy, RoundStats,
+    RoundTrigger,
+};
+use std::collections::{HashMap, HashSet};
+
+/// Owner sentinel for parked (spill-engine) coflows.
+const SPILL: u32 = u32::MAX;
+
+#[derive(Clone, Copy, Debug)]
+struct Owner {
+    /// Owning shard index, or [`SPILL`].
+    shard: u32,
+    /// Global arrival sequence number — the position every shard-local
+    /// active table is kept consistent with.
+    seq: u64,
+}
+
+/// The sharded control-plane front-end. See the module docs.
+pub struct ShardedEngine {
+    shards: Vec<RoundEngine>,
+    /// Parked cross-shard coflows (present only when `shards > 1`). Its
+    /// `round()` is never called: rates are written by the two-level
+    /// residual solve; drain / completion / finish mechanics are the
+    /// engine's own.
+    spill: Option<RoundEngine>,
+    /// Edge → owning shard, claimed lazily by arrivals.
+    edge_owner: Vec<Option<u32>>,
+    owners: HashMap<CoflowId, Owner>,
+    next_seq: u64,
+    migrate_cap: usize,
+    rounds: usize,
+    /// Front-end instrumentation (migration counts, spill LP solves),
+    /// merged into [`ShardedEngine::take_stats`].
+    front_stats: RoundStats,
+}
+
+impl ShardedEngine {
+    /// Build a front-end around `cfg.shards` engine shards; path sets are
+    /// computed for the policy's k.
+    pub fn new(wan: Wan, policy: Box<dyn Policy>, cfg: EngineConfig) -> ShardedEngine {
+        let k = policy.k_paths();
+        ShardedEngine::with_k(wan, policy, cfg, k)
+    }
+
+    /// [`ShardedEngine::new`] with an explicit path count. Sharding needs
+    /// a forkable policy (each shard and the spill engine drive their own
+    /// instance); a non-forkable policy falls back to one shard.
+    pub fn with_k(
+        wan: Wan,
+        policy: Box<dyn Policy>,
+        cfg: EngineConfig,
+        k: usize,
+    ) -> ShardedEngine {
+        let want = cfg.shards.max(1);
+        let mut forks: Vec<Box<dyn Policy>> = Vec::new();
+        let mut spill_policy: Option<Box<dyn Policy>> = None;
+        if want > 1 {
+            for _ in 1..want {
+                match policy.fork() {
+                    Some(f) => forks.push(f),
+                    None => break,
+                }
+            }
+            if forks.len() == want - 1 {
+                spill_policy = policy.fork();
+            }
+            if spill_policy.is_none() {
+                log::warn!(
+                    "policy {} is not forkable; falling back to shards=1",
+                    policy.name()
+                );
+                forks.clear();
+            }
+        }
+        // Split the intra-round worker budget across the concurrent shard
+        // rounds (workers never change results — PR 4's invariant).
+        let n = forks.len() + 1;
+        let migrate_cap = cfg.migrate_cap;
+        let shard_cfg = EngineConfig {
+            workers: if n > 1 { (cfg.workers / n).max(1) } else { cfg.workers },
+            shards: 1,
+            ..cfg
+        };
+        let num_edges = wan.num_edges();
+        let spill =
+            spill_policy.map(|p| RoundEngine::with_k(wan.clone(), p, shard_cfg.clone(), k));
+        let mut shards = Vec::with_capacity(n);
+        for f in forks {
+            shards.push(RoundEngine::with_k(wan.clone(), f, shard_cfg.clone(), k));
+        }
+        shards.insert(0, RoundEngine::with_k(wan, policy, shard_cfg, k));
+        ShardedEngine {
+            shards,
+            spill,
+            edge_owner: vec![None; num_edges],
+            owners: HashMap::new(),
+            next_seq: 0,
+            migrate_cap,
+            rounds: 0,
+            front_stats: RoundStats::default(),
+        }
+    }
+
+    fn sharded(&self) -> bool {
+        self.shards.len() > 1
+    }
+
+    /// All engines holding coflows: the shards, then the spill engine.
+    fn engines(&self) -> impl Iterator<Item = &RoundEngine> {
+        self.shards.iter().chain(self.spill.as_ref())
+    }
+
+    fn engines_mut(&mut self) -> impl Iterator<Item = &mut RoundEngine> {
+        self.shards.iter_mut().chain(self.spill.as_mut())
+    }
+
+    /// The engine owning coflow `id`, if any.
+    fn engine_of(&self, id: CoflowId) -> Option<&RoundEngine> {
+        if !self.sharded() {
+            return self.shards.first();
+        }
+        let o = self.owners.get(&id)?;
+        if o.shard == SPILL {
+            self.spill.as_ref()
+        } else {
+            self.shards.get(o.shard as usize)
+        }
+    }
+
+    fn engine_of_mut(&mut self, id: CoflowId) -> Option<&mut RoundEngine> {
+        if !self.sharded() {
+            return self.shards.first_mut();
+        }
+        let o = *self.owners.get(&id)?;
+        if o.shard == SPILL {
+            self.spill.as_mut()
+        } else {
+            self.shards.get_mut(o.shard as usize)
+        }
+    }
+
+    /// A coflow's candidate edge set: the union of its unfinished groups'
+    /// k-truncated path edges (the same set the decomposed round scans).
+    fn coflow_edges(&self, cf: &CoflowState) -> Vec<EdgeId> {
+        let eng = &self.shards[0];
+        let mut es: Vec<EdgeId> = Vec::new();
+        for (g, &rem) in cf.groups.iter().zip(&cf.remaining) {
+            if rem <= 1e-9 {
+                continue;
+            }
+            for p in eng.paths.get(g.src, g.dst).iter().take(eng.k) {
+                es.extend_from_slice(&p.edges);
+            }
+        }
+        es.sort_unstable();
+        es.dedup();
+        es
+    }
+
+    fn least_loaded(&self) -> usize {
+        let mut best = 0;
+        for (i, s) in self.shards.iter().enumerate() {
+            if s.active.len() < self.shards[best].active.len() {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Insertion index keeping `shard`'s active table sorted by global
+    /// arrival sequence. Fresh arrivals carry the maximum sequence number,
+    /// so the common case is an O(1) append; the linear scan only runs for
+    /// mid-table migrations.
+    fn adopt_position(&self, shard: usize, seq: u64) -> usize {
+        let active = &self.shards[shard].active;
+        match active.last() {
+            None => return 0,
+            Some(c) if self.owners.get(&c.id).is_some_and(|o| o.seq < seq) => {
+                return active.len();
+            }
+            _ => {}
+        }
+        active
+            .iter()
+            .take_while(|c| self.owners.get(&c.id).is_some_and(|o| o.seq < seq))
+            .count()
+    }
+
+    /// Add a coflow (does not run a round). Routes to the owning shard,
+    /// merging or parking cross-shard arrivals — see the module docs.
+    pub fn insert(&mut self, st: CoflowState) {
+        if !self.sharded() {
+            self.shards[0].insert(st);
+            return;
+        }
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let m = MigratedCoflow { state: st, rates: None, gamma: None, dirty: true };
+        self.route_in(m, seq);
+    }
+
+    fn route_in(&mut self, m: MigratedCoflow, seq: u64) {
+        let id = m.state.id;
+        let edges = self.coflow_edges(&m.state);
+        let mut owner_set: Vec<u32> = edges.iter().filter_map(|&e| self.edge_owner[e]).collect();
+        owner_set.sort_unstable();
+        owner_set.dedup();
+        let target = match owner_set.len() {
+            0 => self.least_loaded(),
+            1 => owner_set[0] as usize,
+            _ => match self.merge_components(&owner_set, &edges) {
+                Some(primary) => primary,
+                None => {
+                    // Merging would exceed migrate_cap: park it instead.
+                    self.park(m, seq);
+                    return;
+                }
+            },
+        };
+        for &e in &edges {
+            self.edge_owner[e] = Some(target as u32);
+        }
+        let pos = self.adopt_position(target, seq);
+        self.owners.insert(id, Owner { shard: target as u32, seq });
+        self.shards[target].adopt_coflow(m, pos);
+    }
+
+    /// Merge the shard components a cross-shard arrival touches into one
+    /// owning shard: primary = the owner of most of the arrival's edges
+    /// (ties to the lowest shard id); every coflow on the other owning
+    /// shards that is transitively edge-connected to the arrival migrates
+    /// to it, in arrival order. Returns `None` — without mutating anything
+    /// — when that would move more than `migrate_cap` coflows.
+    fn merge_components(&mut self, owner_set: &[u32], cand_edges: &[EdgeId]) -> Option<usize> {
+        let mut best = owner_set[0] as usize;
+        let mut best_count = 0usize;
+        for &s in owner_set {
+            let count =
+                cand_edges.iter().filter(|&&e| self.edge_owner[e] == Some(s)).count();
+            if count > best_count {
+                best = s as usize;
+                best_count = count;
+            }
+        }
+        // Transitive edge-connected closure of the candidate within each
+        // secondary shard (a migrating coflow's edges can connect further
+        // coflows of the same shard).
+        let mut seen: HashSet<EdgeId> = cand_edges.iter().copied().collect();
+        let mut moves: Vec<(u64, u32, CoflowId)> = Vec::new();
+        for &s in owner_set {
+            if s as usize == best {
+                continue;
+            }
+            let mut taken: HashSet<CoflowId> = HashSet::new();
+            let mut changed = true;
+            while changed {
+                changed = false;
+                for cf in &self.shards[s as usize].active {
+                    if taken.contains(&cf.id) {
+                        continue;
+                    }
+                    let ces = self.coflow_edges(cf);
+                    if ces.iter().any(|e| seen.contains(e)) {
+                        taken.insert(cf.id);
+                        seen.extend(ces);
+                        changed = true;
+                    }
+                }
+            }
+            for cf in &self.shards[s as usize].active {
+                if taken.contains(&cf.id) {
+                    let seq = self.owners.get(&cf.id).map(|o| o.seq).unwrap_or(0);
+                    moves.push((seq, s, cf.id));
+                }
+            }
+        }
+        if moves.len() > self.migrate_cap {
+            return None;
+        }
+        moves.sort_unstable_by_key(|&(seq, _, _)| seq);
+        for (seq, s, id) in moves {
+            let m = self.shards[s as usize].extract_coflow(id).expect("closure member active");
+            let pos = self.adopt_position(best, seq);
+            self.owners.insert(id, Owner { shard: best as u32, seq });
+            self.shards[best].adopt_coflow(m, pos);
+            self.front_stats.shard_migrations += 1;
+        }
+        // Every touched edge that had an owner belongs to the primary now.
+        for &e in &seen {
+            if self.edge_owner[e].is_some() {
+                self.edge_owner[e] = Some(best as u32);
+            }
+        }
+        Some(best)
+    }
+
+    fn park(&mut self, m: MigratedCoflow, seq: u64) {
+        let id = m.state.id;
+        let pos = {
+            let spill = self.spill.as_ref().expect("spill engine exists when sharded");
+            let owners = &self.owners;
+            match spill.active.last() {
+                None => 0,
+                Some(c) if owners.get(&c.id).is_some_and(|o| o.seq < seq) => spill.active.len(),
+                _ => spill
+                    .active
+                    .iter()
+                    .take_while(|c| owners.get(&c.id).is_some_and(|o| o.seq < seq))
+                    .count(),
+            }
+        };
+        self.owners.insert(id, Owner { shard: SPILL, seq });
+        self.spill.as_mut().expect("spill engine exists when sharded").adopt_coflow(m, pos);
+    }
+
+    /// Coflows currently parked in the spill engine.
+    pub fn parked(&self) -> usize {
+        self.spill.as_ref().map(|s| s.active.len()).unwrap_or(0)
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Run one scheduling round on every shard (concurrently when
+    /// sharded), then the spill's two-level residual solve.
+    pub fn round(&mut self, now: f64, trigger: RoundTrigger) {
+        self.round_with(now, trigger, |_, _| {});
+    }
+
+    /// [`ShardedEngine::round`] with a per-shard completion callback: the
+    /// pipelined enforcement hook. `on_shard_done(i, shard)` runs on the
+    /// caller's thread as shard `i` finishes its solve — while the other
+    /// shards are still solving — so enforcement fan-out (e.g. the
+    /// controller's delta pushes) overlaps the remaining solves instead of
+    /// waiting for a global barrier. Callback order across shards is
+    /// completion order; per-shard state is final when it fires.
+    pub fn round_with<F>(&mut self, now: f64, trigger: RoundTrigger, mut on_shard_done: F)
+    where
+        F: FnMut(usize, &RoundEngine),
+    {
+        if !self.sharded() {
+            self.shards[0].round(now, trigger);
+            on_shard_done(0, &self.shards[0]);
+        } else {
+            let (tx, rx) = std::sync::mpsc::channel();
+            std::thread::scope(|s| {
+                for (i, eng) in self.shards.iter_mut().enumerate() {
+                    let tx = tx.clone();
+                    s.spawn(move || {
+                        eng.round(now, trigger);
+                        let eng: &RoundEngine = eng;
+                        let _ = tx.send((i, eng));
+                    });
+                }
+                drop(tx);
+                for (i, eng) in rx {
+                    on_shard_done(i, eng);
+                }
+            });
+            self.solve_spill();
+        }
+        self.rounds += 1;
+    }
+
+    /// Level-2 solve for parked coflows: greedy per-coflow max-concurrent
+    /// solves (in arrival order) against the residual capacity the shard
+    /// allocations left behind. Parked coflows get best-effort service —
+    /// they never preempt shard-owned coflows, and their rates are
+    /// feasible by construction (each solve subtracts its usage from the
+    /// residual).
+    fn solve_spill(&mut self) {
+        let Some(spill) = self.spill.as_mut() else { return };
+        spill.alloc.rates.clear();
+        if spill.active.is_empty() {
+            return;
+        }
+        let num_edges = spill.wan.num_edges();
+        let mut residual = spill.wan.capacities();
+        for eng in &self.shards {
+            let net = NetView { wan: &eng.wan, paths: &eng.paths };
+            let usage = eng.alloc.edge_usage(&eng.active, &net, num_edges);
+            for (r, u) in residual.iter_mut().zip(&usage) {
+                *r = (*r - u).max(0.0);
+            }
+        }
+        let k = spill.k;
+        for cf in &spill.active {
+            let net = NetView { wan: &spill.wan, paths: &spill.paths };
+            let (inst, index) = build_instance(&cf.groups, &cf.remaining, &residual, &net, k);
+            if inst.groups.is_empty() {
+                continue;
+            }
+            self.front_stats.lp_solves += 1;
+            let Some(sol) = lp::max_concurrent(&inst, lp::SolverKind::Gk) else { continue };
+            for (u, r) in inst.edge_usage(&sol.rates).iter().zip(residual.iter_mut()) {
+                *r = (*r - u).max(0.0);
+            }
+            let id = cf.id;
+            let ngroups = cf.groups.len();
+            let rates = expand_rates(ngroups, &index, &sol.rates);
+            spill.alloc.rates.insert(id, rates);
+        }
+    }
+
+    /// Apply a WAN event to every engine (lockstep broadcast — all WAN
+    /// views and epochs stay identical). A structural event additionally
+    /// redistributes every coflow: paths changed, so the ownership map is
+    /// rebuilt from a global decomposition.
+    pub fn handle_wan_event_at(&mut self, ev: &LinkEvent, now: f64) -> WanReaction {
+        let mut reaction = WanReaction::Clamped;
+        for eng in self.engines_mut() {
+            reaction = eng.handle_wan_event_at(ev, now);
+        }
+        if reaction == WanReaction::Structural && self.sharded() {
+            self.redistribute();
+        }
+        reaction
+    }
+
+    /// [`ShardedEngine::handle_wan_event_at`] at the estimator's clock.
+    pub fn handle_wan_event(&mut self, ev: &LinkEvent) -> WanReaction {
+        let t = self.shards[0].estimator.clock();
+        self.handle_wan_event_at(ev, t)
+    }
+
+    /// Rebuild edge ownership from scratch after a structural event: pull
+    /// every coflow (shards and spill) in arrival order, decompose the
+    /// whole set on the new path set, and assign each component to the
+    /// shard that previously owned most of its members (spill members
+    /// don't vote; ties to the lowest shard). `migrate_cap` does not apply
+    /// — a structural event re-solves everything anyway, and this is also
+    /// the moment parked coflows get re-homed onto real shards.
+    fn redistribute(&mut self) {
+        let owners = std::mem::take(&mut self.owners);
+        let mut all: Vec<(u64, u32, MigratedCoflow)> = Vec::new();
+        for (si, eng) in self.shards.iter_mut().enumerate() {
+            let ids: Vec<CoflowId> = eng.active.iter().map(|c| c.id).collect();
+            for id in ids {
+                let seq = owners.get(&id).map(|o| o.seq).unwrap_or(0);
+                let m = eng.extract_coflow(id).expect("listed id is active");
+                all.push((seq, si as u32, m));
+            }
+        }
+        if let Some(sp) = self.spill.as_mut() {
+            let ids: Vec<CoflowId> = sp.active.iter().map(|c| c.id).collect();
+            for id in ids {
+                let seq = owners.get(&id).map(|o| o.seq).unwrap_or(0);
+                let m = sp.extract_coflow(id).expect("listed id is active");
+                all.push((seq, SPILL, m));
+            }
+        }
+        for o in self.edge_owner.iter_mut() {
+            *o = None;
+        }
+        if all.is_empty() {
+            return;
+        }
+        all.sort_by_key(|&(seq, _, _)| seq);
+        let items: Vec<Vec<EdgeId>> =
+            all.iter().map(|(_, _, m)| self.coflow_edges(&m.state)).collect();
+        let comps = decompose::decompose(self.edge_owner.len(), &items);
+        let mut assign: Vec<u32> = Vec::with_capacity(comps.len());
+        for members in &comps.members {
+            let mut counts = vec![0usize; self.shards.len()];
+            for &i in members {
+                let prev = all[i].1;
+                if (prev as usize) < counts.len() {
+                    counts[prev as usize] += 1;
+                }
+            }
+            let mut best = 0usize;
+            for (s, &c) in counts.iter().enumerate() {
+                if c > counts[best] {
+                    best = s;
+                }
+            }
+            assign.push(best as u32);
+        }
+        for (i, (seq, prev, m)) in all.into_iter().enumerate() {
+            let shard = assign[comps.comp_of[i]];
+            for &e in &items[i] {
+                self.edge_owner[e] = Some(shard);
+            }
+            if prev != shard {
+                self.front_stats.shard_migrations += 1;
+            }
+            let pos = self.shards[shard as usize].active.len();
+            self.owners.insert(m.state.id, Owner { shard, seq });
+            self.shards[shard as usize].adopt_coflow(m, pos);
+        }
+    }
+
+    /// Broadcast a belief refresh; returns the strongest reaction (all
+    /// engines react identically — lockstep beliefs).
+    pub fn refresh_beliefs(&mut self) -> Option<WanReaction> {
+        let mut out = None;
+        for eng in self.engines_mut() {
+            let r = eng.refresh_beliefs();
+            if out.is_none() {
+                out = r;
+            }
+        }
+        out
+    }
+
+    /// Broadcast a passive throughput sample (lockstep estimators).
+    pub fn observe_edge(&mut self, e: EdgeId, achieved: f64, capped: bool, now: f64) {
+        for eng in self.engines_mut() {
+            eng.observe_edge(e, achieved, capped, now);
+        }
+    }
+
+    /// Broadcast an active probe measurement.
+    pub fn probe_edge(&mut self, e: EdgeId, measured: f64, now: f64) {
+        for eng in self.engines_mut() {
+            eng.probe_edge(e, measured, now);
+        }
+    }
+
+    /// Broadcast an announced capacity prior.
+    pub fn announce_prior(&mut self, e: EdgeId, gbps: f64, now: f64, hold_until: f64) {
+        for eng in self.engines_mut() {
+            eng.announce_prior(e, gbps, now, hold_until);
+        }
+    }
+
+    /// Deadline admission against the *global* active set: the policy's
+    /// admission math (reserved-rate subtraction over deadline-bearing
+    /// coflows, stable-sorted) needs the same view a single engine would
+    /// have, so the front-end assembles the arrival-ordered union of all
+    /// shards' (and the spill's) deadline-bearing actives and asks shard
+    /// 0's policy. Deadline-less candidates skip the union (every policy
+    /// admits them unconditionally).
+    pub fn admit(&mut self, now: f64, candidate: &CoflowState) -> bool {
+        if !self.sharded() {
+            return self.shards[0].admit(now, candidate);
+        }
+        let mut merged: Vec<(u64, CoflowState)> = Vec::new();
+        if candidate.deadline.is_some() {
+            for eng in self.engines() {
+                for c in &eng.active {
+                    if c.deadline.is_some() {
+                        let seq = self.owners.get(&c.id).map(|o| o.seq).unwrap_or(0);
+                        merged.push((seq, c.clone()));
+                    }
+                }
+            }
+            merged.sort_by_key(|&(seq, _)| seq);
+        }
+        let coflows: Vec<CoflowState> = merged.into_iter().map(|(_, c)| c).collect();
+        let RoundEngine { wan, paths, policy, .. } = &mut self.shards[0];
+        let net = NetView { wan, paths };
+        policy.admit(now, candidate, &coflows, &net)
+    }
+
+    /// Aggregate per-edge usage of all live allocations (shards + spill).
+    pub fn edge_usage(&self, num_edges: usize) -> Vec<f64> {
+        if !self.sharded() {
+            let eng = &self.shards[0];
+            let net = NetView { wan: &eng.wan, paths: &eng.paths };
+            return eng.alloc.edge_usage(&eng.active, &net, num_edges);
+        }
+        let mut usage = vec![0.0; num_edges];
+        for eng in self.engines() {
+            let net = NetView { wan: &eng.wan, paths: &eng.paths };
+            let u = eng.alloc.edge_usage(&eng.active, &net, num_edges);
+            for (a, b) in usage.iter_mut().zip(&u) {
+                *a += *b;
+            }
+        }
+        usage
+    }
+
+    /// Per-coflow scale factors bringing the *aggregate* live allocation
+    /// within `caps` — the sharded analogue of
+    /// [`RoundEngine::throttle_factors`] (per-edge factors come from total
+    /// usage across every engine; shard-disjointness makes the two
+    /// identical when `shards = 1`).
+    pub fn throttle_factors(&self, caps: &[f64]) -> HashMap<CoflowId, f64> {
+        if !self.sharded() {
+            return self.shards[0].throttle_factors(caps);
+        }
+        let usage = self.edge_usage(caps.len());
+        let mut factors: Vec<f64> = vec![1.0; caps.len()];
+        let mut any = false;
+        for (e, (&u, &c)) in usage.iter().zip(caps).enumerate() {
+            if u > c && u > 1e-12 {
+                factors[e] = c / u;
+                any = true;
+            }
+        }
+        let mut out = HashMap::new();
+        if any {
+            for eng in self.engines() {
+                collect_throttle_factors(&eng.active, &eng.alloc, &eng.paths, &factors, &mut out);
+            }
+        }
+        out
+    }
+
+    /// Drain every engine at the current allocations for `dt` seconds.
+    pub fn drain(&mut self, dt: f64, floor: f64) -> f64 {
+        self.drain_with(dt, floor, None)
+    }
+
+    /// [`ShardedEngine::drain`] with per-coflow throttling.
+    pub fn drain_with(
+        &mut self,
+        dt: f64,
+        floor: f64,
+        throttle: Option<&HashMap<CoflowId, f64>>,
+    ) -> f64 {
+        let mut moved = 0.0;
+        for eng in self.engines_mut() {
+            moved += eng.drain_with(dt, floor, throttle);
+        }
+        moved
+    }
+
+    /// Earliest absolute time any active FlowGroup empties, across all
+    /// engines.
+    pub fn next_completion(&self, now: f64) -> Option<f64> {
+        let mut best: Option<f64> = None;
+        for eng in self.engines() {
+            if let Some(t) = eng.next_completion(now) {
+                best = Some(best.map_or(t, |b: f64| b.min(t)));
+            }
+        }
+        best
+    }
+
+    /// Record an agent-confirmed FlowGroup completion. Returns true when
+    /// the whole coflow is done.
+    pub fn complete_group(&mut self, id: CoflowId, src: usize, dst: usize) -> bool {
+        self.engine_of_mut(id).map(|e| e.complete_group(id, src, dst)).unwrap_or(false)
+    }
+
+    /// Remove all finished coflows everywhere; returns their ids in
+    /// arrival order.
+    pub fn take_finished(&mut self) -> Vec<CoflowId> {
+        if !self.sharded() {
+            return self.shards[0].take_finished();
+        }
+        let mut done: Vec<(u64, CoflowId)> = Vec::new();
+        for eng in self.shards.iter_mut().chain(self.spill.as_mut()) {
+            for id in eng.take_finished() {
+                let seq = self.owners.remove(&id).map(|o| o.seq).unwrap_or(0);
+                done.push((seq, id));
+            }
+        }
+        done.sort_unstable_by_key(|&(seq, _)| seq);
+        // An idle control plane owns nothing: reset edge claims so
+        // ownership cannot drift arbitrarily far from current load.
+        if self.owners.is_empty() {
+            for o in self.edge_owner.iter_mut() {
+                *o = None;
+            }
+        }
+        done.into_iter().map(|(_, id)| id).collect()
+    }
+
+    /// Drop a coflow's caches after a discontinuous change, and re-route
+    /// it if its edge set now crosses shard boundaries (`updateCoflow` can
+    /// grow the edge set). Parked coflows stay parked until the next
+    /// structural redistribute.
+    pub fn mark_dirty(&mut self, id: CoflowId) {
+        if !self.sharded() {
+            self.shards[0].mark_dirty(id);
+            return;
+        }
+        let Some(o) = self.owners.get(&id).copied() else { return };
+        if o.shard == SPILL {
+            if let Some(sp) = self.spill.as_mut() {
+                sp.mark_dirty(id);
+            }
+            return;
+        }
+        let shard = o.shard as usize;
+        self.shards[shard].mark_dirty(id);
+        let Some(cf) = self.shards[shard].get(id) else { return };
+        let edges = self.coflow_edges(cf);
+        let crosses = edges
+            .iter()
+            .any(|&e| self.edge_owner[e].is_some_and(|s| s != o.shard));
+        if !crosses {
+            for &e in &edges {
+                if self.edge_owner[e].is_none() {
+                    self.edge_owner[e] = Some(o.shard);
+                }
+            }
+            return;
+        }
+        // The grown edge set spans shards: re-route exactly like a fresh
+        // cross-shard arrival, keeping the original arrival position.
+        let m = self.shards[shard].extract_coflow(id).expect("owner table said so");
+        self.owners.remove(&id);
+        self.front_stats.shard_migrations += 1;
+        self.route_in(m, o.seq);
+    }
+
+    pub fn get(&self, id: CoflowId) -> Option<&CoflowState> {
+        self.engine_of(id).and_then(|e| e.get(id))
+    }
+
+    /// Mutable access for drivers that extend coflows in place; callers
+    /// that change the group shape must [`ShardedEngine::mark_dirty`].
+    pub fn get_mut(&mut self, id: CoflowId) -> Option<&mut CoflowState> {
+        self.engine_of_mut(id).and_then(|e| e.get_mut(id))
+    }
+
+    /// Current total scheduled rate (Gbps) of a coflow.
+    pub fn coflow_rate(&self, id: CoflowId) -> f64 {
+        self.engine_of(id).map(|e| e.coflow_rate(id)).unwrap_or(0.0)
+    }
+
+    /// A coflow's full rate matrix from the last round, if any.
+    pub fn coflow_rates(&self, id: CoflowId) -> Option<CoflowRates> {
+        self.engine_of(id).and_then(|e| e.coflow_rates(id))
+    }
+
+    /// Visit every active coflow with its live rate matrix (if any), across
+    /// all engines — the enforcement plane's sweep over the allocation.
+    pub fn visit_allocations<F>(&self, mut f: F)
+    where
+        F: FnMut(&CoflowState, Option<&CoflowRates>),
+    {
+        for eng in self.engines() {
+            for cs in &eng.active {
+                f(cs, eng.alloc.rates.get(&cs.id));
+            }
+        }
+    }
+
+    /// The union of every engine's live rate table (built fresh; the
+    /// sharded plane has no single `Allocation`).
+    pub fn rates_snapshot(&self) -> HashMap<CoflowId, CoflowRates> {
+        let mut out = HashMap::new();
+        for eng in self.engines() {
+            for (id, r) in &eng.alloc.rates {
+                out.insert(*id, r.clone());
+            }
+        }
+        out
+    }
+
+    /// Minimum CCT of a coflow alone on the full WAN.
+    pub fn standalone_min_cct(&self, st: &CoflowState) -> f64 {
+        self.shards[0].standalone_min_cct(st)
+    }
+
+    pub fn len(&self) -> usize {
+        self.engines().map(|e| e.active.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.engines().all(|e| e.active.is_empty())
+    }
+
+    /// All lockstep-replicated read state comes from shard 0.
+    pub fn wan(&self) -> &Wan {
+        self.shards[0].wan()
+    }
+
+    pub fn paths(&self) -> &PathSet {
+        self.shards[0].paths()
+    }
+
+    pub fn estimator(&self) -> &CapacityEstimator {
+        self.shards[0].estimator()
+    }
+
+    pub fn telemetry(&self) -> &TelemetryConfig {
+        self.shards[0].telemetry()
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.shards[0].epoch()
+    }
+
+    pub fn k_paths(&self) -> usize {
+        self.shards[0].k_paths()
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.shards[0].policy_name()
+    }
+
+    /// Logical front-end rounds (each may span many concurrent shard
+    /// rounds).
+    pub fn rounds(&self) -> usize {
+        if !self.sharded() {
+            return self.shards[0].rounds();
+        }
+        self.rounds
+    }
+
+    /// Drain instrumentation from every engine plus the front-end's own
+    /// counters (migrations, spill solves).
+    pub fn take_stats(&mut self) -> RoundStats {
+        let mut stats = RoundStats::default();
+        for eng in self.shards.iter_mut().chain(self.spill.as_mut()) {
+            stats.merge(&eng.take_stats());
+        }
+        stats.merge(&self.front_stats);
+        self.front_stats = RoundStats::default();
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coflow::{Coflow, Flow, GB};
+    use crate::scheduler::terra::{TerraConfig, TerraPolicy};
+
+    /// A 4-node line: 0—1—2—3, one path per pair, so edge ownership is
+    /// fully determined by which pairs a coflow uses.
+    fn line4() -> Wan {
+        let mut w = Wan::new();
+        for i in 0..4 {
+            w.add_node(&format!("N{i}"), 0.0, i as f64);
+        }
+        w.add_link(0, 1, 10.0, Some(1.0));
+        w.add_link(1, 2, 10.0, Some(1.0));
+        w.add_link(2, 3, 10.0, Some(1.0));
+        w
+    }
+
+    fn mk(shards: usize, migrate_cap: usize) -> ShardedEngine {
+        let policy = TerraPolicy::new(TerraConfig { alpha: 0.0, ..Default::default() });
+        ShardedEngine::new(
+            line4(),
+            Box::new(policy),
+            EngineConfig { check_feasibility: true, shards, migrate_cap, ..Default::default() },
+        )
+    }
+
+    fn coflow(id: u64, s: usize, d: usize, gb: f64) -> CoflowState {
+        CoflowState::from_coflow(&Coflow::new(
+            id,
+            vec![Flow { id: 0, src_dc: s, dst_dc: d, volume: gb * GB }],
+        ))
+    }
+
+    /// Drive to completion: round / drain / sweep until empty.
+    fn run_to_empty(e: &mut ShardedEngine, mut now: f64) -> f64 {
+        for _ in 0..64 {
+            if e.is_empty() {
+                return now;
+            }
+            let Some(t) = e.next_completion(now) else { break };
+            e.drain(t - now, 0.0);
+            now = t;
+            e.take_finished();
+            if !e.is_empty() {
+                e.round(now, RoundTrigger::FlowGroupFinish);
+            }
+        }
+        assert!(e.is_empty(), "{} coflows never finished", e.len());
+        now
+    }
+
+    /// A cross-shard arrival (edges spanning two shards) migrates the
+    /// connected coflows onto one shard, keeps scheduling all of them, and
+    /// everything completes.
+    #[test]
+    fn cross_shard_arrival_migrates_and_completes() {
+        let mut e = mk(2, usize::MAX);
+        assert_eq!(e.num_shards(), 2);
+        e.insert(coflow(1, 0, 1, 1.0)); // claims edge 0 on one shard
+        e.insert(coflow(2, 2, 3, 1.0)); // claims edge 2 on the other
+        e.round(0.0, RoundTrigger::CoflowArrival);
+        assert!(e.coflow_rate(1) > 0.0);
+        assert!(e.coflow_rate(2) > 0.0);
+        let o1 = e.owners[&1].shard;
+        let o2 = e.owners[&2].shard;
+        assert_ne!(o1, o2, "disjoint coflows should spread across shards");
+
+        // 0 → 3 uses edges {0, 1, 2}: touches both shards → merge.
+        e.insert(coflow(3, 0, 3, 2.0));
+        e.round(0.0, RoundTrigger::CoflowArrival);
+        let owners: Vec<u32> = [1u64, 2, 3].iter().map(|id| e.owners[id].shard).collect();
+        assert_eq!(owners[0], owners[1], "merge must unify ownership");
+        assert_eq!(owners[0], owners[2]);
+        assert_eq!(e.parked(), 0);
+        let s = e.take_stats();
+        assert_eq!(s.shard_migrations, 1, "exactly the secondary shard's coflow moves");
+        // The merged component keeps scheduling (SRTF may hold coflow 3
+        // behind the shorter two, but routing must still resolve it).
+        assert!(e.get(3).is_some());
+        assert!(e.coflow_rate(1) > 0.0);
+        run_to_empty(&mut e, 0.0);
+    }
+
+    /// With `migrate_cap = 0` the cross-shard arrival is parked and served
+    /// by the two-level residual solve: nothing while the line is busy,
+    /// full line rate once the shard-owned coflows finish.
+    #[test]
+    fn capped_migration_parks_and_residual_solves() {
+        let mut e = mk(2, 0);
+        e.insert(coflow(1, 0, 1, 1.0));
+        e.insert(coflow(2, 2, 3, 1.0));
+        e.round(0.0, RoundTrigger::CoflowArrival);
+        e.insert(coflow(3, 0, 3, 2.0));
+        assert_eq!(e.parked(), 1, "over-cap merge must park");
+        e.round(0.0, RoundTrigger::CoflowArrival);
+        let s = e.take_stats();
+        assert_eq!(s.shard_migrations, 0);
+        // Edges 0 and 2 are fully used by the shard coflows; the parked
+        // coflow's path needs them, so the residual solve yields 0.
+        assert_eq!(e.coflow_rate(3), 0.0);
+
+        // 8 Gbit at 10 Gbps: both shard coflows finish at t = 0.8.
+        let t = e.next_completion(0.0).expect("draining");
+        e.drain(t, 0.0);
+        assert_eq!(e.take_finished(), vec![1, 2]);
+        e.round(t, RoundTrigger::FlowGroupFinish);
+        // The line is free: the parked coflow now gets the full 10 Gbps
+        // from the residual solve (and completes through normal drains).
+        let r = e.coflow_rate(3);
+        assert!((r - 10.0).abs() < 0.5, "residual solve rate = {r}");
+        assert!(e.take_stats().lp_solves > 0, "spill solves must be counted");
+        let end = run_to_empty(&mut e, t);
+        assert!(end > t);
+        assert_eq!(e.parked(), 0);
+    }
+
+    /// A structural event rebuilds ownership globally and re-homes parked
+    /// coflows onto real shards.
+    #[test]
+    fn structural_event_redistributes_and_unparks() {
+        let mut e = mk(2, 0);
+        e.insert(coflow(1, 0, 1, 1.0));
+        e.insert(coflow(2, 2, 3, 1.0));
+        e.round(0.0, RoundTrigger::CoflowArrival);
+        e.insert(coflow(3, 0, 3, 2.0));
+        assert_eq!(e.parked(), 1);
+        // Any structural event triggers the global redistribute; coflow 3
+        // connects everything, so all three land on one shard.
+        let r = e.handle_wan_event_at(&LinkEvent::Fail(1, 2), 0.1);
+        assert_eq!(r, WanReaction::Structural);
+        assert_eq!(e.parked(), 0, "redistribute must re-home parked coflows");
+        e.round(0.1, RoundTrigger::WanChange);
+        // Coflow 3 lost its only path (the line is cut), but 1 and 2 keep
+        // their ends.
+        assert!(e.coflow_rate(1) > 0.0);
+        assert!(e.coflow_rate(2) > 0.0);
+        assert_eq!(e.len(), 3);
+    }
+}

@@ -306,6 +306,10 @@ pub struct SweepConfig {
     /// standalone min CCT (Fig 8 style), so the deadlines-met column is
     /// populated. 0 disables deadlines.
     pub deadline_d: f64,
+    /// Control-plane shard count for every scheduled run. Sharding is
+    /// bit-identical to `shards = 1` by construction (property-pinned),
+    /// so results only differ in control-plane latency, never in CCTs.
+    pub shards: usize,
 }
 
 impl Default for SweepConfig {
@@ -325,6 +329,7 @@ impl Default for SweepConfig {
             topology: None,
             workload: None,
             deadline_d: 0.0,
+            shards: 1,
         }
     }
 }
@@ -408,7 +413,8 @@ pub fn scenario_sweep(cfg: &SweepConfig) -> Vec<ScenarioRow> {
                         log::warn!("unknown policy {policy_name}; skipping");
                         continue;
                     };
-                    let mut sim = Simulation::new(wan.clone(), policy, SimConfig::default());
+                    let sim_cfg = SimConfig { shards: cfg.shards.max(1), ..Default::default() };
+                    let mut sim = Simulation::new(wan.clone(), policy, sim_cfg);
                     for ev in &events {
                         sim.add_wan_event(ev.t, ev.ev.clone());
                     }
@@ -472,6 +478,7 @@ pub fn scenarios_json(cfg: &SweepConfig, rows: &[ScenarioRow]) -> Json {
         ("jobs", cfg.jobs.into()),
         ("horizon_s", cfg.horizon_s.into()),
         ("deadline_d", cfg.deadline_d.into()),
+        ("shards", cfg.shards.into()),
         ("profiles", cfg.profiles.iter().map(|p| Json::from(p.clone())).collect::<Vec<_>>().into()),
         ("policies", cfg.policies.iter().map(|p| Json::from(p.clone())).collect::<Vec<_>>().into()),
         ("rows", Json::Arr(rows)),
@@ -809,6 +816,7 @@ mod tests {
             // delivering WAN events once all jobs finish).
             workload: Some("bigbench".into()),
             deadline_d: 0.0,
+            shards: 1,
         };
         let a = scenario_sweep(&cfg);
         assert_eq!(a.len(), 4, "1 topo x 1 workload x 2 profiles x 2 policies");

@@ -33,6 +33,7 @@ fn main() {
                  simulate  --topology swan|gscale|att --workload bigbench|tpcds|tpch|fb\n\
                  \u{20}          --policy terra|per-flow|multipath|varys|swan-mcf|rapier\n\
                  \u{20}          --jobs N --seed S [--solver jax] [--k K] [--alpha A]\n\
+                 \u{20}          [--workers W] [--shards S]\n\
                  reproduce --all | --fig1 --fig2 --fig6 --fig8 --fig11 --fig12 --fig13\n\
                  \u{20}          --fig14 --table3 --alpha [--jobs N] [--seed S]\n\
                  sweep     [--jobs N] [--seed S] [--horizon SECS] [--deadlines D]\n\
@@ -44,7 +45,8 @@ fn main() {
                  \u{20}          (capacity-estimation sweep: profiles x estimators, writes\n\
                  \u{20}          BENCH_estimation.json with MAPE / reaction latency / CCT\n\
                  \u{20}          inflation vs oracle; deadlines default to 3x min CCT)\n\
-                 testbed   --topology fig1a --gbit VOLUME   (real TCP overlay demo)\n\
+                 testbed   --topology fig1a --gbit VOLUME [--shards S]\n\
+                 \u{20}          (real TCP overlay demo)\n\
                  topology  --name swan|gscale|att|fig1a"
             );
             std::process::exit(2);
@@ -91,6 +93,7 @@ fn simulate(args: &Args) {
     let jobs = WorkloadGen::with_config(cfg).jobs(&wan, n);
     let sim_cfg = SimConfig {
         workers: args.get_usize("workers", terra::engine::default_workers()),
+        shards: args.get_usize("shards", 1),
         ..Default::default()
     };
     let mut sim = Simulation::new(wan, policy, sim_cfg);
@@ -247,6 +250,7 @@ fn sweep(args: &Args) {
         workload: args.get("workload").map(|s| s.to_string()),
         profiles: args.get("profiles").map(list).unwrap_or(defaults.profiles),
         policies: args.get("policies").map(list).unwrap_or(defaults.policies),
+        shards: args.get_usize("shards", defaults.shards),
     };
     let rows = exp::scenario_sweep(&cfg);
     let mut t = Table::new(&[
@@ -350,8 +354,9 @@ fn testbed(args: &Args) {
     let n = wan.num_nodes();
     let k = args.get_usize("k", 3);
     let workers = args.get_usize("workers", terra::engine::default_workers());
+    let shards = args.get_usize("shards", 1);
     let handle = Controller::spawn(
-        TestbedConfig::new(wan, k).with_workers(workers),
+        TestbedConfig::new(wan, k).with_workers(workers).with_shards(shards),
         Box::new(TerraPolicy::default()),
     )
     .expect("controller");

@@ -313,7 +313,10 @@ fn handle_ctrl(
                 pending: BTreeMap::new(),
                 received: counter,
             });
-            e.expected += bytes;
+            // Saturating: if data raced ahead of the expectation the entry
+            // already exists with the unsolicited u64::MAX sentinel, and a
+            // plain add would overflow.
+            e.expected = e.expected.saturating_add(bytes);
         }
         // Update rates for (coflow, dst): one rate per path, Gbps (legacy
         // single-entry form; delta pushes batch the same payload).

@@ -12,16 +12,16 @@
 use super::protocol::{self, CoflowStatus, FlowSpec, TelemetrySample, PROBE_COFLOW};
 use super::rules::RuleTable;
 use crate::coflow::{Coflow, CoflowId, Flow};
-use crate::engine::{EngineConfig, RoundEngine, WanReaction};
+use crate::engine::{EngineConfig, RoundEngine, ShardedEngine, WanReaction};
 use crate::net::telemetry::{self, TelemetryConfig};
 use crate::net::{LinkEvent, Wan};
 use crate::scheduler::{CoflowRates, CoflowState, Policy, RoundTrigger};
 use crate::util::json::Json;
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io::ErrorKind;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Convert testbed bytes to policy-layer Gbit so that an emulated 1 Gbps
@@ -48,6 +48,11 @@ pub struct TestbedConfig {
     /// other estimator makes it fuse agents' `telemetry_report` samples
     /// (and its own `probe_request` results) into capacity beliefs.
     pub telemetry: TelemetryConfig,
+    /// Control-plane shards ([`EngineConfig::shards`]): `1` (default) is
+    /// the single-engine loop, bit-identical to previous behavior; `> 1`
+    /// runs shard rounds concurrently and pushes each shard's rates as its
+    /// solve completes (pipelined enforcement).
+    pub shards: usize,
 }
 
 impl TestbedConfig {
@@ -57,6 +62,7 @@ impl TestbedConfig {
             k,
             workers: crate::engine::default_workers(),
             telemetry: TelemetryConfig::default(),
+            shards: 1,
         }
     }
 
@@ -69,10 +75,158 @@ impl TestbedConfig {
         self.telemetry = telemetry;
         self
     }
+
+    pub fn with_shards(mut self, shards: usize) -> TestbedConfig {
+        self.shards = shards;
+        self
+    }
+}
+
+/// Outbound-queue capacity per agent; an agent that falls this far behind
+/// is not draining its control channel, so the queue is dropped wholesale
+/// and the agent flagged for a full-table resync.
+const AGENT_TX_CAP: usize = 1024;
+
+struct TxQueue {
+    buf: VecDeque<Json>,
+    /// True while the writer thread holds a popped frame it has not yet
+    /// finished writing (so `flush` doesn't report an empty-but-in-flight
+    /// queue as drained).
+    writing: bool,
+    /// Set on writer exit (socket error) or owner drop; sends are refused.
+    closed: bool,
+}
+
+struct TxShared {
+    q: Mutex<TxQueue>,
+    cv: Condvar,
+    /// The agent's delta baseline can no longer be trusted (a write failed
+    /// or the queue overflowed): the next rate push must be a full-table
+    /// sync instead of a delta.
+    needs_full_sync: AtomicBool,
+    cap: usize,
+}
+
+/// Bounded asynchronous writer for one agent's control channel: round
+/// enforcement enqueues frames and returns immediately; a per-agent thread
+/// drains the queue to the socket off the round path. A write error closes
+/// the queue, counts in [`DeltaStats::write_errors`], and flags the agent
+/// for a full sync on next contact instead of being silently swallowed.
+struct AgentTx {
+    shared: Arc<TxShared>,
+}
+
+impl AgentTx {
+    fn new(cap: usize) -> AgentTx {
+        AgentTx {
+            shared: Arc::new(TxShared {
+                q: Mutex::new(TxQueue {
+                    buf: VecDeque::new(),
+                    writing: false,
+                    closed: false,
+                }),
+                cv: Condvar::new(),
+                needs_full_sync: AtomicBool::new(false),
+                cap,
+            }),
+        }
+    }
+
+    /// Start the drain thread over the agent's (cloned) control stream.
+    fn start_writer(&self, stream: TcpStream, dc: usize, write_errors: Arc<AtomicUsize>) {
+        let shared = self.shared.clone();
+        std::thread::spawn(move || writer_loop(stream, dc, shared, write_errors));
+    }
+
+    /// Enqueue a frame; returns false when the channel is closed or the
+    /// frame was dropped. An overflow drops the whole queue (everything in
+    /// it is stale relative to the full sync the flag now forces).
+    fn send(&self, msg: Json) -> bool {
+        let mut q = self.shared.q.lock().unwrap();
+        if q.closed {
+            return false;
+        }
+        if q.buf.len() >= self.shared.cap {
+            q.buf.clear();
+            self.shared.needs_full_sync.store(true, Ordering::Relaxed);
+            return false;
+        }
+        q.buf.push_back(msg);
+        self.shared.cv.notify_all();
+        true
+    }
+
+    /// Wait (bounded) until every queued frame has been written. Used to
+    /// order cross-agent dependencies — a receiver's `expect` must be on
+    /// the wire before the sender's `transfer` starts data flowing.
+    fn flush(&self, timeout: Duration) -> bool {
+        let t0 = Instant::now();
+        let mut q = self.shared.q.lock().unwrap();
+        while (!q.buf.is_empty() || q.writing) && !q.closed {
+            let Some(rem) = timeout.checked_sub(t0.elapsed()) else { return false };
+            let (g, _) = self.shared.cv.wait_timeout(q, rem).unwrap();
+            q = g;
+        }
+        q.buf.is_empty() && !q.writing
+    }
+
+    /// Consume the pending-full-sync flag.
+    fn take_full_sync_flag(&self) -> bool {
+        self.shared.needs_full_sync.swap(false, Ordering::Relaxed)
+    }
+}
+
+impl Drop for AgentTx {
+    fn drop(&mut self) {
+        let mut q = self.shared.q.lock().unwrap();
+        q.closed = true;
+        self.shared.cv.notify_all();
+    }
+}
+
+fn writer_loop(
+    mut stream: TcpStream,
+    dc: usize,
+    shared: Arc<TxShared>,
+    write_errors: Arc<AtomicUsize>,
+) {
+    loop {
+        let msg = {
+            let mut q = shared.q.lock().unwrap();
+            loop {
+                if let Some(m) = q.buf.pop_front() {
+                    q.writing = true;
+                    break Some(m);
+                }
+                if q.closed {
+                    break None;
+                }
+                q = shared.cv.wait(q).unwrap();
+            }
+        };
+        let Some(msg) = msg else { return };
+        let res = protocol::write_msg(&mut stream, &msg);
+        let mut q = shared.q.lock().unwrap();
+        q.writing = false;
+        if let Err(e) = res {
+            // The control channel is broken: everything queued behind the
+            // failed frame is undeliverable. Close the queue and force a
+            // full sync when the agent next contacts us (sync_request or
+            // reconnect) — never silently drop enforcement state.
+            log::warn!("controller: rate push to agent {dc} failed ({e}); will full-sync");
+            q.buf.clear();
+            q.closed = true;
+            shared.needs_full_sync.store(true, Ordering::Relaxed);
+            write_errors.fetch_add(1, Ordering::Relaxed);
+            shared.cv.notify_all();
+            return;
+        }
+        shared.cv.notify_all();
+    }
 }
 
 struct AgentConn {
-    ctrl: TcpStream,
+    tx: AgentTx,
     data_addr: String,
     /// Delta-enforcement state (per control connection): monotone sequence
     /// number stamped on every `rates_delta`/`rates_full` push, and the
@@ -94,6 +248,9 @@ pub struct DeltaStats {
     pub delta_entries: usize,
     /// Revoked (withdrawn) FlowGroup entries.
     pub delta_revokes: usize,
+    /// Control-channel write failures (agent writer threads). Each one
+    /// closed an agent's outbound queue and flagged it for a full sync.
+    pub write_errors: usize,
 }
 
 /// Telemetry-plane traffic counters.
@@ -120,7 +277,7 @@ struct CoMeta {
 }
 
 struct State {
-    engine: RoundEngine,
+    engine: ShardedEngine,
     k: usize,
     agents: HashMap<usize, AgentConn>,
     coflows: HashMap<CoflowId, CoMeta>,
@@ -141,6 +298,9 @@ struct State {
     epoch: Instant,
     /// Wall-clock instant of the last remaining-volume drain.
     last_drain: Instant,
+    /// Total agent control-channel write failures (shared with the agent
+    /// writer threads, surfaced via [`DeltaStats::write_errors`]).
+    write_errors: Arc<AtomicUsize>,
 }
 
 impl State {
@@ -178,13 +338,14 @@ impl Controller {
         listener.set_nonblocking(true)?;
         let num_nodes = cfg.wan.num_nodes();
         let k = cfg.k;
-        let engine = RoundEngine::with_k(
+        let engine = ShardedEngine::with_k(
             cfg.wan,
             policy,
             EngineConfig {
                 check_feasibility: false,
                 workers: cfg.workers,
                 telemetry: cfg.telemetry,
+                shards: cfg.shards,
                 ..Default::default()
             },
             cfg.k,
@@ -208,6 +369,7 @@ impl Controller {
             truth_caps,
             epoch: Instant::now(),
             last_drain: Instant::now(),
+            write_errors: Arc::new(AtomicUsize::new(0)),
         }));
         let stop = Arc::new(AtomicBool::new(false));
         let mut threads = Vec::new();
@@ -294,10 +456,13 @@ impl ControllerHandle {
     }
 
     /// Delta-protocol traffic counters (full syncs, delta messages, delta
-    /// entries, revokes) — what the enforcement plane actually shipped.
+    /// entries, revokes, write errors) — what the enforcement plane
+    /// actually shipped.
     pub fn delta_stats(&self) -> DeltaStats {
         let st = self.state.lock().unwrap();
-        st.delta
+        let mut d = st.delta;
+        d.write_errors = st.write_errors.load(Ordering::Relaxed);
+        d
     }
 
     /// Telemetry-plane counters: reports received, samples fused, probes
@@ -360,10 +525,12 @@ fn serve_conn(mut s: TcpStream, state: Arc<Mutex<State>>, stop: Arc<AtomicBool>)
                         Ok(c) => c,
                         Err(_) => return,
                     };
+                    let tx = AgentTx::new(AGENT_TX_CAP);
+                    tx.start_writer(ctrl, dc, st.write_errors.clone());
                     st.agents.insert(
                         dc,
                         AgentConn {
-                            ctrl,
+                            tx,
                             data_addr: addr.to_string(),
                             seq: 0,
                             sent: HashMap::new(),
@@ -482,7 +649,7 @@ fn resend_peers(st: &mut State) {
         .collect();
     let msg = Json::from_pairs([("op", Json::from("peers")), ("peers", Json::Arr(peers))]);
     for a in st.agents.values_mut() {
-        let _ = protocol::write_msg(&mut a.ctrl, &msg);
+        a.tx.send(msg.clone());
     }
 }
 
@@ -664,7 +831,7 @@ fn request_probes(st: &mut State, now: f64) {
             ("dst", dst.into()),
             ("path", pi.into()),
         ]);
-        if protocol::write_msg(&mut a.ctrl, &m).is_ok() {
+        if a.tx.send(m) {
             st.telemetry.probes_sent += 1;
             st.last_probe_req[e] = now;
         }
@@ -839,6 +1006,10 @@ fn handle_update(msg: &Json, state: &Arc<Mutex<State>>) -> Json {
 }
 
 /// Send `expect` to destination agents and `transfer` to source agents.
+/// Receiver expectations must be on the wire before any sender starts
+/// (unsolicited data chunks have no byte target to complete against), so
+/// with asynchronous writers the destination queues are flushed between
+/// the two waves.
 fn send_transfer_msgs(st: &mut State, id: CoflowId, flows: &[FlowSpec]) {
     // Aggregate by (src, dst) — FlowGroup granularity on the wire too.
     let mut by_pair: HashMap<(usize, usize), u64> = HashMap::new();
@@ -847,7 +1018,7 @@ fn send_transfer_msgs(st: &mut State, id: CoflowId, flows: &[FlowSpec]) {
             *by_pair.entry((f.src_dc, f.dst_dc)).or_default() += f.bytes;
         }
     }
-    for ((src, dst), bytes) in by_pair {
+    for (&(src, dst), &bytes) in &by_pair {
         if let Some(a) = st.agents.get_mut(&dst) {
             let m = Json::from_pairs([
                 ("op", Json::from("expect")),
@@ -855,8 +1026,20 @@ fn send_transfer_msgs(st: &mut State, id: CoflowId, flows: &[FlowSpec]) {
                 ("src", src.into()),
                 ("bytes", bytes.into()),
             ]);
-            let _ = protocol::write_msg(&mut a.ctrl, &m);
+            a.tx.send(m);
         }
+    }
+    let mut dsts: Vec<usize> = by_pair.keys().map(|&(_, d)| d).collect();
+    dsts.sort_unstable();
+    dsts.dedup();
+    for dst in dsts {
+        if let Some(a) = st.agents.get(&dst) {
+            // Bounded: a dead receiver socket fails over to the
+            // write-error full-sync path regardless.
+            a.tx.flush(Duration::from_secs(2));
+        }
+    }
+    for (&(src, dst), &bytes) in &by_pair {
         if let Some(a) = st.agents.get_mut(&src) {
             let m = Json::from_pairs([
                 ("op", Json::from("transfer")),
@@ -864,17 +1047,28 @@ fn send_transfer_msgs(st: &mut State, id: CoflowId, flows: &[FlowSpec]) {
                 ("dst", dst.into()),
                 ("bytes", bytes.into()),
             ]);
-            let _ = protocol::write_msg(&mut a.ctrl, &m);
+            a.tx.send(m);
         }
     }
 }
 
 /// One scheduling round: drain remaining-volume estimates, run the engine's
-/// round, and push the new rate vectors to the source agents.
+/// round, and push the new rate vectors to the source agents. With a
+/// sharded engine the enforcement is pipelined: each shard's changed rates
+/// are pushed the moment its solve completes (while other shards are still
+/// solving); the trailing [`push_rates`] sweep then ships only what the
+/// per-shard pushes could not know — revocations and spill-engine rates.
 fn reallocate(st: &mut State, trigger: RoundTrigger) {
     st.drain_to_now();
     let now_s = st.now_s();
-    st.engine.round(now_s, trigger);
+    if st.engine.num_shards() > 1 {
+        let State { engine, agents, delta, .. } = st;
+        engine.round_with(now_s, trigger, |_, shard| {
+            push_shard_rates(agents, delta, shard);
+        });
+    } else {
+        st.engine.round(now_s, trigger);
+    }
     push_rates(st);
 }
 
@@ -882,14 +1076,60 @@ fn reallocate(st: &mut State, trigger: RoundTrigger) {
 /// (coflow, dst) → per-path Gbps from the engine's live allocation.
 fn desired_rate_tables(st: &State) -> HashMap<usize, HashMap<(CoflowId, usize), Vec<f64>>> {
     let mut desired: HashMap<usize, HashMap<(CoflowId, usize), Vec<f64>>> = HashMap::new();
-    for cs in st.engine.active() {
-        let rates = st.engine.alloc().rates.get(&cs.id);
+    st.engine.visit_allocations(|cs, rates| {
+        for (gi, g) in cs.groups.iter().enumerate() {
+            let path_rates: Vec<f64> = rates.and_then(|r| r.get(gi)).cloned().unwrap_or_default();
+            desired.entry(g.src).or_default().insert((cs.id, g.dst), path_rates);
+        }
+    });
+    desired
+}
+
+/// Pipelined per-shard enforcement: push the FlowGroup rate vectors this
+/// shard's just-finished solve changed, updating each agent's delta
+/// baseline in place. Revocations are deliberately left to the trailing
+/// global sweep — a single shard cannot know whether a (coflow, dst) entry
+/// vanished or merely lives on another shard now.
+fn push_shard_rates(
+    agents: &mut HashMap<usize, AgentConn>,
+    delta: &mut DeltaStats,
+    shard: &RoundEngine,
+) {
+    let mut desired: HashMap<usize, HashMap<(CoflowId, usize), Vec<f64>>> = HashMap::new();
+    for cs in shard.active() {
+        let rates = shard.alloc().rates.get(&cs.id);
         for (gi, g) in cs.groups.iter().enumerate() {
             let path_rates: Vec<f64> = rates.and_then(|r| r.get(gi)).cloned().unwrap_or_default();
             desired.entry(g.src).or_default().insert((cs.id, g.dst), path_rates);
         }
     }
-    desired
+    for (dc, want) in desired {
+        let Some(conn) = agents.get_mut(&dc) else { continue };
+        let mut changed: Vec<(CoflowId, usize)> = want
+            .iter()
+            .filter(|(k, v)| conn.sent.get(*k) != Some(*v))
+            .map(|(&k, _)| k)
+            .collect();
+        changed.sort_unstable();
+        if changed.is_empty() {
+            continue;
+        }
+        conn.seq += 1;
+        let updates: Vec<Json> =
+            changed.iter().map(|k| rate_entry_json(k, &want[k])).collect();
+        let m = Json::from_pairs([
+            ("op", Json::from("rates_delta")),
+            ("seq", conn.seq.into()),
+            ("updates", Json::Arr(updates)),
+            ("revoke", Json::Arr(Vec::new())),
+        ]);
+        delta.delta_msgs += 1;
+        delta.delta_entries += changed.len();
+        conn.tx.send(m);
+        for k in changed {
+            conn.sent.insert(k, want[&k].clone());
+        }
+    }
 }
 
 fn rate_entry_json(key: &(CoflowId, usize), rates: &[f64]) -> Json {
@@ -914,6 +1154,13 @@ fn push_rates(st: &mut State) {
         // Take (not clone) the agent's table; when nothing changed we drop
         // it — `conn.sent` is provably identical in that case.
         let want = desired.remove(&dc).unwrap_or_default();
+        // A failed write or queue overflow invalidated this agent's delta
+        // baseline: resynchronize the full table instead of diffing
+        // against state it may never have received.
+        if conn.tx.take_full_sync_flag() {
+            send_full_table(conn, delta, want);
+            continue;
+        }
         let mut changed: Vec<(CoflowId, usize)> = want
             .iter()
             .filter(|(k, v)| conn.sent.get(*k) != Some(*v))
@@ -942,19 +1189,18 @@ fn push_rates(st: &mut State) {
         delta.delta_msgs += 1;
         delta.delta_entries += changed.len();
         delta.delta_revokes += revoked.len();
-        let _ = protocol::write_msg(&mut conn.ctrl, &m);
+        conn.tx.send(m);
         conn.sent = want;
     }
 }
 
-/// Full-table sync for one agent: everything it should hold, under a fresh
-/// baseline sequence number. Sent on (re)connect and on `sync_request`
-/// (the agent saw a sequence gap).
-fn full_sync_agent(st: &mut State, dc: usize) {
-    let mut desired = desired_rate_tables(st);
-    let State { agents, delta, .. } = st;
-    let Some(conn) = agents.get_mut(&dc) else { return };
-    let want = desired.remove(&dc).unwrap_or_default();
+/// Ship an agent's complete rate table under a fresh sequence number and
+/// reset its delta baseline to it.
+fn send_full_table(
+    conn: &mut AgentConn,
+    delta: &mut DeltaStats,
+    want: HashMap<(CoflowId, usize), Vec<f64>>,
+) {
     let mut keys: Vec<(CoflowId, usize)> = want.keys().copied().collect();
     keys.sort_unstable();
     conn.seq += 1;
@@ -965,6 +1211,80 @@ fn full_sync_agent(st: &mut State, dc: usize) {
         ("entries", Json::Arr(entries)),
     ]);
     delta.full_syncs += 1;
-    let _ = protocol::write_msg(&mut conn.ctrl, &m);
+    conn.tx.send(m);
     conn.sent = want;
+}
+
+/// Full-table sync for one agent: everything it should hold, under a fresh
+/// baseline sequence number. Sent on (re)connect and on `sync_request`
+/// (the agent saw a sequence gap).
+fn full_sync_agent(st: &mut State, dc: usize) {
+    let mut desired = desired_rate_tables(st);
+    let State { agents, delta, .. } = st;
+    let Some(conn) = agents.get_mut(&dc) else { return };
+    let want = desired.remove(&dc).unwrap_or_default();
+    // The sync supersedes any pending invalidation.
+    conn.tx.take_full_sync_flag();
+    send_full_table(conn, delta, want);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn json_frame(i: usize) -> Json {
+        let mut o = Json::obj();
+        o.set("i", Json::from(i));
+        o
+    }
+
+    #[test]
+    fn tx_overflow_drops_queue_and_flags_full_sync() {
+        // No writer thread: nothing drains, so the cap is hit exactly.
+        let tx = AgentTx::new(2);
+        assert!(tx.send(json_frame(0)));
+        assert!(tx.send(json_frame(1)));
+        // Third frame overflows: the whole queue is dropped (it is stale
+        // relative to the full sync the flag now forces).
+        assert!(!tx.send(json_frame(2)));
+        assert!(tx.shared.q.lock().unwrap().buf.is_empty());
+        assert!(tx.take_full_sync_flag());
+        // The flag is consumed by the read.
+        assert!(!tx.take_full_sync_flag());
+        // The queue stays usable after an overflow (not closed).
+        assert!(tx.send(json_frame(3)));
+    }
+
+    #[test]
+    fn tx_closed_queue_refuses_sends() {
+        let tx = AgentTx::new(8);
+        tx.shared.q.lock().unwrap().closed = true;
+        assert!(!tx.send(json_frame(0)));
+        assert!(tx.shared.q.lock().unwrap().buf.is_empty());
+        // A closed queue never set the full-sync flag by itself; the
+        // writer that closed it is responsible for that.
+        assert!(!tx.take_full_sync_flag());
+    }
+
+    #[test]
+    fn tx_flush_semantics() {
+        let tx = AgentTx::new(8);
+        // Empty queue: flush succeeds immediately.
+        assert!(tx.flush(Duration::from_millis(10)));
+        // Queued frame with no writer: flush times out unsatisfied.
+        assert!(tx.send(json_frame(0)));
+        assert!(!tx.flush(Duration::from_millis(10)));
+        // Closed with a frame still queued: flush wakes but reports the
+        // queue undrained.
+        tx.shared.q.lock().unwrap().closed = true;
+        assert!(!tx.flush(Duration::from_millis(10)));
+    }
+
+    #[test]
+    fn tx_drop_closes_queue_for_writer() {
+        let tx = AgentTx::new(8);
+        let shared = tx.shared.clone();
+        drop(tx);
+        assert!(shared.q.lock().unwrap().closed);
+    }
 }

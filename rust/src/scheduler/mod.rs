@@ -123,6 +123,9 @@ pub struct RoundStats {
     /// (no member arrival/departure/completion, no qualifying WAN change on
     /// their edges).
     pub component_reuses: usize,
+    /// Coflows moved between engine shards by the sharded front-end
+    /// (cross-shard arrivals / edge-set changes). Always 0 single-shard.
+    pub shard_migrations: usize,
 }
 
 impl RoundStats {
@@ -133,6 +136,7 @@ impl RoundStats {
         self.gamma_cache_hits += other.gamma_cache_hits;
         self.component_solves += other.component_solves;
         self.component_reuses += other.component_reuses;
+        self.shard_migrations += other.shard_migrations;
     }
 }
 
@@ -168,7 +172,11 @@ pub struct RoundCtx<'a> {
 
 /// The scheduling-routing policy interface implemented by Terra and all
 /// five baselines.
-pub trait Policy: Send {
+// `Send + Sync`: engine shards holding forked policies run on scoped
+// threads and hand shared `&RoundEngine` views back to the enforcement
+// pipeline; every implementation is plain owned data (mutation only via
+// `&mut self`), so the bound costs nothing.
+pub trait Policy: Send + Sync {
     fn name(&self) -> &'static str;
 
     /// Compute this round's allocation. `coflows` contains only unfinished

@@ -20,11 +20,11 @@ pub use job::{Job, Stage};
 pub use report::{foi, foi_volume_correlation, CoflowRecord, JobRecord, Report};
 
 use crate::coflow::{Coflow, CoflowId};
-use crate::engine::{EngineConfig, RoundEngine};
+use crate::engine::{EngineConfig, ShardedEngine};
 use crate::net::dynamics::AnnouncedWindow;
 use crate::net::telemetry::{self, TelemetryConfig};
 use crate::net::{LinkEvent, Wan};
-use crate::scheduler::{CoflowRates, CoflowState, NetView, Policy, RoundTrigger};
+use crate::scheduler::{CoflowRates, CoflowState, Policy, RoundTrigger};
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, HashMap};
 
@@ -51,6 +51,11 @@ pub struct SimConfig {
     /// from what agents could actually observe — throughput capped by
     /// their own allocation — plus active probes on stale edges.
     pub telemetry: TelemetryConfig,
+    /// Control-plane shards ([`EngineConfig::shards`]). `1` (default) is
+    /// the plain single-engine control plane, bit-identical to previous
+    /// behavior; `> 1` splits the active set across engine shards that
+    /// round concurrently (allocations stay identical — property-pinned).
+    pub shards: usize,
 }
 
 impl Default for SimConfig {
@@ -62,6 +67,7 @@ impl Default for SimConfig {
             check_feasibility: cfg!(debug_assertions),
             workers: crate::engine::default_workers(),
             telemetry: TelemetryConfig::default(),
+            shards: 1,
         }
     }
 }
@@ -123,7 +129,7 @@ struct JobState {
 
 /// The simulator.
 pub struct Simulation {
-    engine: RoundEngine,
+    engine: ShardedEngine,
     cfg: SimConfig,
     /// Ground-truth WAN, present only in belief mode (non-oracle
     /// estimator): `net/dynamics` events apply here, and the engine's WAN
@@ -158,7 +164,7 @@ impl Simulation {
     pub fn new(wan: Wan, policy: Box<dyn Policy>, cfg: SimConfig) -> Simulation {
         let name = policy.name().to_string();
         let truth = if cfg.telemetry.is_oracle() { None } else { Some(wan.clone()) };
-        let engine = RoundEngine::new(
+        let engine = ShardedEngine::new(
             wan,
             policy,
             EngineConfig {
@@ -166,6 +172,7 @@ impl Simulation {
                 check_feasibility: cfg.check_feasibility,
                 workers: cfg.workers,
                 telemetry: cfg.telemetry.clone(),
+                shards: cfg.shards,
                 ..Default::default()
             },
         );
@@ -198,8 +205,8 @@ impl Simulation {
         self.engine.wan()
     }
 
-    /// The shared round engine driving this simulation.
-    pub fn engine(&self) -> &RoundEngine {
+    /// The (sharded) control-plane front-end driving this simulation.
+    pub fn engine(&self) -> &ShardedEngine {
         &self.engine
     }
 
@@ -431,6 +438,7 @@ impl Simulation {
         self.report.gamma_cache_hits += st.gamma_cache_hits;
         self.report.component_solves += st.component_solves;
         self.report.component_reuses += st.component_reuses;
+        self.report.shard_migrations += st.shard_migrations;
         self.report.clone()
     }
 
@@ -529,10 +537,7 @@ impl Simulation {
         let Simulation { truth, engine, report, pending_stale, .. } = self;
         let truth = truth.as_ref()?;
         let num_edges = truth.num_edges();
-        let usage = {
-            let net = NetView { wan: engine.wan(), paths: engine.paths() };
-            engine.alloc().edge_usage(engine.active(), &net, num_edges)
-        };
+        let usage = engine.edge_usage(num_edges);
         for (e, &used) in usage.iter().enumerate() {
             let tl = truth.link(e);
             if !tl.up || used <= 1e-9 {

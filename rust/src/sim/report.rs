@@ -79,6 +79,8 @@ pub struct Report {
     /// whose allocation was carried forward unchanged (decomposed rounds).
     pub component_solves: usize,
     pub component_reuses: usize,
+    /// Coflows moved between engine shards (sharded front-end only).
+    pub shard_migrations: usize,
     /// WAN events delivered to the engine (fail / recover / fluctuation).
     pub wan_events: usize,
     /// Rounds triggered by WAN changes (structural, ≥ ρ, or accumulated

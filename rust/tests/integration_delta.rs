@@ -250,3 +250,57 @@ fn malformed_control_frames_are_survivable() {
     assert!(handle.rounds() >= 1);
     handle.shutdown();
 }
+
+/// Regression: a failed rate push must not be silently swallowed. When an
+/// agent's control socket dies without the controller noticing (no clean
+/// reconnect yet), the async writer hits a write error; the controller must
+/// count it, close that agent's queue, and serve a complete full-table sync
+/// to the replacement connection.
+#[test]
+fn write_error_is_counted_and_recovered_by_full_sync() {
+    let handle =
+        Controller::spawn(TestbedConfig::new(topologies::fig1a(), 1), policy(1)).unwrap();
+    let mut agent = FakeAgent::connect(&handle, 0);
+    assert!(handle.wait_ready(1, Duration::from_secs(5)));
+    let long = Duration::from_secs(5);
+    assert!(agent.read_op("rates_full", long).is_some(), "baseline sync");
+
+    // Kill the agent's socket out from under the controller. The stale
+    // AgentConn stays registered, so rate pushes keep targeting the dead
+    // stream until the writer thread reports the failure.
+    drop(agent);
+
+    let mut client = TerraClient::connect(handle.addr).unwrap();
+    let mut last = 0u64;
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while handle.delta_stats().write_errors == 0 {
+        assert!(
+            Instant::now() < deadline,
+            "write error never surfaced: {:?}",
+            handle.delta_stats()
+        );
+        // Each submission re-solves and pushes rates at the dead agent;
+        // TCP buffering can absorb the first few frames before the RST.
+        last = client
+            .submit_coflow(
+                &[FlowSpec { id: 0, src_dc: 0, dst_dc: 1, bytes: gbit(4000.0) }],
+                None,
+            )
+            .unwrap() as u64;
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(handle.delta_stats().write_errors >= 1);
+
+    // A replacement agent converges from a clean full sync: fresh seq,
+    // complete table (all live coflows' groups, nothing lost with the
+    // frames that died in the closed queue).
+    let mut replacement = FakeAgent::connect(&handle, 0);
+    let full = replacement.read_op("rates_full", long).expect("full sync on reconnect");
+    assert_eq!(full.get("seq").and_then(|s| s.as_u64()), Some(1), "fresh connection, fresh seq");
+    let keys = delta_keys(&full, "entries");
+    assert!(
+        keys.contains(&(last, 1)),
+        "replacement sync missing live coflow {last}: {keys:?}"
+    );
+    handle.shutdown();
+}

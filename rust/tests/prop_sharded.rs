@@ -1,0 +1,247 @@
+//! Determinism properties of the sharded control plane:
+//!
+//! 1. `shards = N` is bit-identical to `shards = 1` — same allocations,
+//!    same solve counts — through multi-round runs with arrivals, drains,
+//!    bandwidth changes, and structural link failures (which force a full
+//!    cross-shard redistribution). Sharding is an execution strategy, not
+//!    a policy change.
+//! 2. The incrementally maintained edge-connected partition is equivalent
+//!    to a from-scratch decomposition after every round, including rounds
+//!    that reused it unchanged.
+
+use terra::coflow::{Coflow, CoflowId, Flow, GB};
+use terra::engine::{EngineConfig, RoundEngine, ShardedEngine, WanReaction};
+use terra::lp::decompose;
+use terra::net::{EdgeId, LinkEvent, Wan};
+use terra::scheduler::terra::{TerraConfig, TerraPolicy};
+use terra::scheduler::{CoflowState, RoundTrigger};
+
+/// Two edge-disjoint triangles (N0–N2, N3–N5): the natural two-component
+/// topology, so a multi-shard engine actually spreads work.
+fn two_triangles() -> Wan {
+    let mut w = Wan::new();
+    for i in 0..6 {
+        w.add_node(&format!("N{i}"), 0.0, i as f64);
+    }
+    w.add_link(0, 1, 10.0, Some(1.0));
+    w.add_link(1, 2, 10.0, Some(1.0));
+    w.add_link(0, 2, 10.0, Some(1.0));
+    w.add_link(3, 4, 10.0, Some(1.0));
+    w.add_link(4, 5, 10.0, Some(1.0));
+    w.add_link(3, 5, 10.0, Some(1.0));
+    w
+}
+
+fn coflow(id: u64, s: usize, d: usize, gb: f64) -> CoflowState {
+    CoflowState::from_coflow(&Coflow::new(
+        id,
+        vec![Flow { id: 0, src_dc: s, dst_dc: d, volume: gb * GB }],
+    ))
+}
+
+fn sharded(shards: usize) -> ShardedEngine {
+    let policy = TerraPolicy::new(TerraConfig { alpha: 0.0, ..Default::default() });
+    ShardedEngine::new(
+        two_triangles(),
+        Box::new(policy),
+        EngineConfig { check_feasibility: true, shards, ..Default::default() },
+    )
+}
+
+fn assert_same_rates(a: &ShardedEngine, b: &ShardedEngine, what: &str) {
+    assert_eq!(
+        a.rates_snapshot(),
+        b.rates_snapshot(),
+        "allocations diverged ({what}): {} shards vs {} shards",
+        a.num_shards(),
+        b.num_shards()
+    );
+}
+
+#[test]
+fn sharded_bit_identical_to_single_shard() {
+    let mut engines = [sharded(1), sharded(2), sharded(4)];
+    let arrivals = [(1, 0, 1, 5.0), (2, 3, 4, 7.0), (3, 1, 2, 3.0), (4, 4, 5, 9.0)];
+    let mut now = 0.0;
+    for &(id, s, d, gb) in &arrivals {
+        for e in engines.iter_mut() {
+            e.insert(coflow(id, s, d, gb));
+            e.round(now, RoundTrigger::CoflowArrival);
+            e.drain(0.05, 0.0);
+        }
+        let (base, rest) = engines.split_first().unwrap();
+        for e in rest {
+            assert_same_rates(base, e, &format!("after arrival {id}"));
+        }
+        now += 0.05;
+    }
+
+    // Bandwidth changes dirty both triangles: every shard re-solves its
+    // component, the single-shard engine re-solves both sequentially.
+    for e in engines.iter_mut() {
+        assert_eq!(
+            e.handle_wan_event_at(&LinkEvent::SetBandwidth(0, 1, 4.0), now),
+            WanReaction::Reoptimize
+        );
+        assert_eq!(
+            e.handle_wan_event_at(&LinkEvent::SetBandwidth(3, 4, 4.0), now),
+            WanReaction::Reoptimize
+        );
+        e.round(now, RoundTrigger::WanChange);
+    }
+    {
+        let (base, rest) = engines.split_first().unwrap();
+        for e in rest {
+            assert_same_rates(base, e, "after bandwidth change");
+        }
+    }
+
+    // A structural failure: paths recompute, edge sets shift, and the
+    // sharded front-ends redistribute ownership from scratch. Still
+    // bit-identical afterwards.
+    for e in engines.iter_mut() {
+        assert_eq!(
+            e.handle_wan_event_at(&LinkEvent::Fail(1, 2), now),
+            WanReaction::Structural
+        );
+        e.round(now, RoundTrigger::WanChange);
+    }
+    {
+        let (base, rest) = engines.split_first().unwrap();
+        for e in rest {
+            assert_same_rates(base, e, "after structural failure");
+        }
+    }
+
+    // Run everything to completion, comparing at every completion round.
+    for step in 0..64 {
+        if engines.iter().all(|e| e.is_empty()) {
+            break;
+        }
+        let dt = engines[0]
+            .next_completion(now)
+            .map(|t| (t - now).max(1e-6))
+            .unwrap_or(0.05);
+        let mut finished: Vec<Vec<CoflowId>> = Vec::new();
+        for e in engines.iter_mut() {
+            e.drain(dt, 0.0);
+            let mut f = e.take_finished();
+            f.sort_unstable();
+            finished.push(f);
+            if !e.is_empty() {
+                e.round(now + dt, RoundTrigger::CoflowFinish);
+            }
+        }
+        assert!(
+            finished.iter().all(|f| *f == finished[0]),
+            "completion sets diverged at step {step}: {finished:?}"
+        );
+        let (base, rest) = engines.split_first().unwrap();
+        for e in rest {
+            assert_same_rates(base, e, &format!("completion step {step}"));
+        }
+        now += dt;
+    }
+    assert!(engines.iter().all(|e| e.is_empty()), "runs did not complete");
+
+    // Same work done, not just the same answers: LP solve counts, dirty
+    // component counts, and Γ-cache hits all match exactly.
+    let stats: Vec<_> = engines.iter_mut().map(|e| e.take_stats()).collect();
+    for s in &stats[1..] {
+        assert_eq!(s.lp_solves, stats[0].lp_solves, "solve counts must match");
+        assert_eq!(s.component_solves, stats[0].component_solves);
+        assert_eq!(s.gamma_cache_hits, stats[0].gamma_cache_hits);
+    }
+}
+
+/// Recompute the active table's per-coflow candidate edge sets exactly the
+/// way the engine defines them (unfinished groups, k-truncated paths) and
+/// decompose from scratch.
+fn fresh_partition(e: &RoundEngine) -> decompose::Components {
+    let k = e.k_paths();
+    let items: Vec<Vec<EdgeId>> = e
+        .active()
+        .iter()
+        .map(|cf| {
+            let mut es: Vec<EdgeId> = Vec::new();
+            for (g, &rem) in cf.groups.iter().zip(&cf.remaining) {
+                if rem <= 1e-9 {
+                    continue;
+                }
+                for p in e.paths().get(g.src, g.dst).iter().take(k) {
+                    es.extend_from_slice(&p.edges);
+                }
+            }
+            es.sort_unstable();
+            es.dedup();
+            es
+        })
+        .collect();
+    decompose::decompose(e.wan().num_edges(), &items)
+}
+
+fn assert_partition_fresh(e: &RoundEngine, what: &str) {
+    assert!(!e.partition_is_stale(), "partition still stale after round ({what})");
+    let fresh = fresh_partition(e);
+    let live = e.partition();
+    assert_eq!(live.comp_of, fresh.comp_of, "comp_of diverged ({what})");
+    assert_eq!(live.members, fresh.members, "members diverged ({what})");
+    assert_eq!(live.edges, fresh.edges, "edge unions diverged ({what})");
+}
+
+#[test]
+fn prop_incremental_partition() {
+    let policy = TerraPolicy::new(TerraConfig { alpha: 0.0, ..Default::default() });
+    let mut e = RoundEngine::new(
+        two_triangles(),
+        Box::new(policy),
+        EngineConfig { check_feasibility: true, ..Default::default() },
+    );
+    let mut now = 0.0;
+
+    // Arrivals (membership events: every one invalidates the partition).
+    for &(id, s, d, gb) in
+        &[(1, 0, 1, 5.0), (2, 3, 4, 7.0), (3, 1, 2, 3.0), (4, 4, 5, 9.0), (5, 0, 2, 2.0)]
+    {
+        e.insert(coflow(id, s, d, gb));
+        assert!(e.partition_is_stale(), "insert must invalidate the partition");
+        e.round(now, RoundTrigger::CoflowArrival);
+        assert_partition_fresh(&e, &format!("arrival {id}"));
+    }
+
+    // Steady-state rounds (drain + capacity fluctuation): the partition is
+    // NOT stale — the reuse path must still equal a full rebuild.
+    e.drain(0.05, 0.0);
+    now += 0.05;
+    assert_eq!(
+        e.handle_wan_event_at(&LinkEvent::SetBandwidth(0, 1, 6.0), now),
+        WanReaction::Reoptimize
+    );
+    assert!(!e.partition_is_stale(), "bandwidth change must not force a rebuild");
+    e.round(now, RoundTrigger::WanChange);
+    assert_partition_fresh(&e, "bandwidth change");
+
+    // Structural change: paths recompute, edge sets change shape.
+    assert_eq!(e.handle_wan_event_at(&LinkEvent::Fail(1, 2), now), WanReaction::Structural);
+    assert!(e.partition_is_stale(), "structural event must invalidate the partition");
+    e.round(now, RoundTrigger::WanChange);
+    assert_partition_fresh(&e, "link failure");
+    assert_eq!(e.handle_wan_event_at(&LinkEvent::Recover(1, 2), now), WanReaction::Structural);
+    e.round(now, RoundTrigger::WanChange);
+    assert_partition_fresh(&e, "link recovery");
+
+    // Departures: run to empty, checking after every completion round.
+    let mut guard = 0;
+    while !e.is_empty() {
+        guard += 1;
+        assert!(guard < 64, "run did not converge");
+        let dt = e.next_completion(now).map(|t| (t - now).max(1e-6)).unwrap_or(0.05);
+        e.drain(dt, 0.0);
+        now += dt;
+        let finished = e.take_finished();
+        if !e.is_empty() {
+            e.round(now, RoundTrigger::CoflowFinish);
+            assert_partition_fresh(&e, &format!("after completions {finished:?}"));
+        }
+    }
+}
