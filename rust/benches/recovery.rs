@@ -1,0 +1,46 @@
+//! Bench: the controller-chaos recovery sweep — dynamics profiles
+//! (calm / regional outages / gray failures) × controller availability
+//! modes (always-up / resync reconstruction / restart-from-zero) on
+//! SWAN + BigBench, reporting the in-flight fraction preserved across
+//! the restart, the degraded-mode drain, the reconstruction-round cost,
+//! and CCT inflation vs the always-up controller. Results are written to
+//! `BENCH_recovery.json` (same schema as `terra sweep --recovery`).
+
+use terra::experiments::{recovery_json, recovery_sweep, RecoverySweepConfig};
+use terra::util::bench::{quick_mode, report, time_n, Table};
+
+fn main() {
+    let cfg = RecoverySweepConfig {
+        jobs: if quick_mode() { 2 } else { 4 },
+        horizon_s: if quick_mode() { 160.0 } else { 240.0 },
+        kill_t: 20.0,
+        restart_t: 25.0,
+        ..Default::default()
+    };
+    let mut rows = Vec::new();
+    let t = time_n(0, 1, || rows = recovery_sweep(&cfg));
+    report("recovery_sweep", &t);
+
+    let mut tab = Table::new(&[
+        "profile", "mode", "avg CCT", "vs up", "preserved", "degraded Gbit", "down s",
+        "recover ms", "unfin",
+    ]);
+    for r in &rows {
+        tab.row(&[
+            r.profile.clone(),
+            r.mode.clone(),
+            format!("{:.1}s", r.avg_cct),
+            format!("{:.2}x", r.cct_vs_always_up),
+            format!("{:.0}%", r.preserved_fraction * 100.0),
+            format!("{:.1}", r.drained_degraded_gbit),
+            format!("{:.1}", r.downtime_s),
+            format!("{:.2}", r.recovery_round_ms),
+            r.unfinished.to_string(),
+        ]);
+    }
+    tab.print("Recovery sweep: surviving the controller crash");
+
+    let json = format!("{}\n", recovery_json(&cfg, &rows));
+    std::fs::write("BENCH_recovery.json", json).expect("write BENCH_recovery.json");
+    println!("wrote BENCH_recovery.json ({} rows)", rows.len());
+}

@@ -461,6 +461,47 @@ impl RoundEngine {
         &self.estimator
     }
 
+    /// Simulate a controller crash/restart over this engine's coflow set:
+    /// drop everything a restarted process loses — the live allocation,
+    /// the Γ- and component caches, solver workspaces, warm-start state,
+    /// and (under a non-oracle estimator) the learned capacity beliefs,
+    /// which re-anchor at base capacity exactly as a fresh estimator
+    /// starts. The active table itself survives: in recovery the agents
+    /// re-report their transfers, and remaining volumes are the
+    /// reconstruction's input. Structurally-down links stay down (link
+    /// state is observable; beliefs are not). Used by the simulator's
+    /// `controller_chaos` axis.
+    pub fn crash_reset(&mut self, now: f64) {
+        self.alloc = Allocation::default();
+        self.cache = GammaCache::new();
+        self.comp_cache = ComponentCache::new(self.wan.num_edges());
+        self.workspaces =
+            (0..self.cfg.workers.max(1)).map(|_| SolverWorkspace::new()).collect();
+        self.warm_valid = false;
+        self.partition_stale = true;
+        let ids: Vec<CoflowId> = self.active.iter().map(|c| c.id).collect();
+        for id in ids {
+            self.comp_cache.mark_dirty(id);
+        }
+        if !self.estimator.is_oracle() {
+            let edges: Vec<(usize, NodeId, NodeId, f64, bool)> = self
+                .wan
+                .links()
+                .iter()
+                .enumerate()
+                .map(|(e, l)| (e, l.src, l.dst, l.base_capacity, l.up))
+                .collect();
+            for (e, u, v, base, up) in edges {
+                self.estimator.reset_edge(e, base, now);
+                if up {
+                    self.wan.apply_event(&LinkEvent::SetBandwidth(u, v, base));
+                }
+            }
+        }
+        self.bump_epoch();
+        self.comp_cache.touch_all();
+    }
+
     /// The engine's telemetry configuration.
     pub fn telemetry(&self) -> &TelemetryConfig {
         &self.cfg.telemetry

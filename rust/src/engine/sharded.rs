@@ -547,6 +547,50 @@ impl ShardedEngine {
         }
     }
 
+    /// Broadcast [`RoundEngine::crash_reset`] to every engine (lockstep
+    /// beliefs stay lockstep), then rebuild shard ownership from the
+    /// surviving coflow set exactly as reconstruction would.
+    pub fn crash_reset(&mut self, now: f64) {
+        for eng in self.engines_mut() {
+            eng.crash_reset(now);
+        }
+        self.readmit_in_id_order();
+    }
+
+    /// Crash-recovery re-admission: rebuild shard ownership
+    /// deterministically from the current coflow set alone. Extracts every
+    /// coflow (shards + spill), clears edge claims, resets the
+    /// arrival-sequence counter, and routes everything back in ascending
+    /// coflow-id order — ids are assigned monotonically at submission, so
+    /// id order *is* arrival order. A restarted controller reconstructing
+    /// its world from agent `resync_state` reports calls this after each
+    /// report: regardless of which agent happened to reconnect first, the
+    /// final ownership map is a pure function of the reconstructed coflow
+    /// set. No-op when unsharded (a single engine has no ownership).
+    pub fn readmit_in_id_order(&mut self) {
+        if !self.sharded() {
+            return;
+        }
+        let mut all: Vec<MigratedCoflow> = Vec::new();
+        for eng in self.shards.iter_mut().chain(self.spill.as_mut()) {
+            let ids: Vec<CoflowId> = eng.active.iter().map(|c| c.id).collect();
+            for id in ids {
+                all.push(eng.extract_coflow(id).expect("listed id is active"));
+            }
+        }
+        self.owners.clear();
+        for o in self.edge_owner.iter_mut() {
+            *o = None;
+        }
+        self.next_seq = 0;
+        all.sort_by_key(|m| m.state.id);
+        for m in all {
+            let seq = self.next_seq;
+            self.next_seq += 1;
+            self.route_in(m, seq);
+        }
+    }
+
     /// Broadcast a belief refresh; returns the strongest reaction (all
     /// engines react identically — lockstep beliefs).
     pub fn refresh_beliefs(&mut self) -> Option<WanReaction> {
@@ -980,6 +1024,33 @@ mod tests {
         let end = run_to_empty(&mut e, t);
         assert!(end > t);
         assert_eq!(e.parked(), 0);
+    }
+
+    /// Crash reconstruction re-admission is deterministic: whatever order
+    /// agents resynced coflows in, `readmit_in_id_order` rebuilds the same
+    /// ownership map (and hence the same allocations).
+    #[test]
+    fn readmit_in_id_order_is_order_independent() {
+        let mut a = mk(2, usize::MAX);
+        let mut b = mk(2, usize::MAX);
+        // Same coflow set, opposite insertion order — simulating agents
+        // reconnecting in different orders after a controller crash.
+        a.insert(coflow(1, 0, 1, 1.0));
+        a.insert(coflow(2, 2, 3, 1.0));
+        b.insert(coflow(2, 2, 3, 1.0));
+        b.insert(coflow(1, 0, 1, 1.0));
+        a.readmit_in_id_order();
+        b.readmit_in_id_order();
+        for id in [1u64, 2] {
+            assert_eq!(a.owners[&id].shard, b.owners[&id].shard, "coflow {id} shard");
+            assert_eq!(a.owners[&id].seq, b.owners[&id].seq, "coflow {id} seq");
+        }
+        a.round(0.0, RoundTrigger::CoflowArrival);
+        b.round(0.0, RoundTrigger::CoflowArrival);
+        assert_eq!(a.coflow_rate(1), b.coflow_rate(1));
+        assert_eq!(a.coflow_rate(2), b.coflow_rate(2));
+        run_to_empty(&mut a, 0.0);
+        run_to_empty(&mut b, 0.0);
     }
 
     /// A structural event rebuilds ownership globally and re-homes parked

@@ -678,6 +678,194 @@ pub fn estimation_json(cfg: &EstimationSweepConfig, rows: &[EstimationRow]) -> J
     ])
 }
 
+/// Configuration of the **recovery sweep** (the `controller_chaos` axis):
+/// a controller kill/restart injected while WAN dynamics are active,
+/// comparing resync state reconstruction against an always-up controller
+/// and a restart-from-zero strawman. Terra policy throughout — the axis
+/// under study is what a controller crash costs, not which policy wins.
+#[derive(Clone, Debug)]
+pub struct RecoverySweepConfig {
+    pub jobs: usize,
+    pub seed: u64,
+    /// Dynamics generation horizon (seconds of simulated time).
+    pub horizon_s: f64,
+    pub topology: String,
+    pub workload: String,
+    /// Dynamics profiles active while the controller dies. Defaults to the
+    /// paper's failure cases: calm anchor, regional outages, gray failures
+    /// — the crash lands *during* the network trouble.
+    pub profiles: Vec<String>,
+    /// Controller kill / restart instants (simulated seconds). Defaults
+    /// land mid-workload: BigBench jobs run for minutes.
+    pub kill_t: f64,
+    pub restart_t: f64,
+}
+
+impl Default for RecoverySweepConfig {
+    fn default() -> Self {
+        RecoverySweepConfig {
+            jobs: 6,
+            seed: 7,
+            horizon_s: 420.0,
+            topology: "swan".into(),
+            workload: "bigbench".into(),
+            profiles: vec!["calm".into(), "regional".into(), "gray".into()],
+            kill_t: 30.0,
+            restart_t: 35.0,
+        }
+    }
+}
+
+/// The controller-availability modes the recovery sweep compares.
+pub const RECOVERY_MODES: [&str; 3] = ["always-up", "resync", "from-zero"];
+
+fn chaos_for_mode(mode: &str, cfg: &RecoverySweepConfig) -> Option<crate::sim::ChaosConfig> {
+    use crate::sim::{ChaosConfig, RecoveryMode};
+    match mode {
+        "always-up" => None,
+        "resync" => Some(ChaosConfig::new(cfg.kill_t, cfg.restart_t, RecoveryMode::Resync)),
+        "from-zero" => Some(ChaosConfig::new(cfg.kill_t, cfg.restart_t, RecoveryMode::FromZero)),
+        other => panic!("unknown recovery mode {other}"),
+    }
+}
+
+/// One recovery-sweep cell: a ⟨profile, availability mode⟩ outcome.
+#[derive(Clone, Debug)]
+pub struct RecoveryRow {
+    pub topology: String,
+    pub workload: String,
+    pub profile: String,
+    /// One of [`RECOVERY_MODES`].
+    pub mode: String,
+    pub avg_cct: f64,
+    pub p99_cct: f64,
+    /// CCT inflation vs the always-up controller on the identical
+    /// scenario (1.0 = the crash cost nothing; always-up is 1.0 by
+    /// construction).
+    pub cct_vs_always_up: f64,
+    /// In-flight volume preserved across the restart
+    /// ([`Report::preserved_fraction`]): 1.0 for resync, < 1.0 for
+    /// from-zero by exactly the progress thrown away.
+    pub preserved_fraction: f64,
+    pub inflight_at_kill_gbit: f64,
+    /// Gbit agents kept draining in degraded mode during the outage.
+    pub drained_degraded_gbit: f64,
+    pub downtime_s: f64,
+    /// Wall-clock cost (ms) of the restarted controller's reconstruction
+    /// round — the recovery-time metric.
+    pub recovery_round_ms: f64,
+    pub rounds: usize,
+    pub unfinished: usize,
+    pub makespan: f64,
+}
+
+/// Run the recovery sweep: every ⟨profile, mode⟩ cell replays the
+/// *identical* workload and ground-truth event stream; only controller
+/// availability differs. Rows come back in deterministic sweep order,
+/// the always-up baseline computed per profile to anchor
+/// `cct_vs_always_up`.
+pub fn recovery_sweep(cfg: &RecoverySweepConfig) -> Vec<RecoveryRow> {
+    let Some(wan) = topologies::by_name(&cfg.topology) else {
+        log::warn!("unknown topology {}; empty recovery sweep", cfg.topology);
+        return Vec::new();
+    };
+    let Some(kind) = WorkloadKind::by_name(&cfg.workload) else {
+        log::warn!("unknown workload {}; empty recovery sweep", cfg.workload);
+        return Vec::new();
+    };
+    let wseed = scenario_seed(cfg.seed, 0, 0, usize::MAX);
+    let wcfg = WorkloadConfig::new(kind, wseed);
+    let jobs = WorkloadGen::with_config(wcfg).jobs(&wan, cfg.jobs);
+    let mut rows = Vec::new();
+    for (pi, pname) in cfg.profiles.iter().enumerate() {
+        let Some(profile) = DynamicsProfile::by_name(pname) else {
+            log::warn!("unknown dynamics profile {pname}; skipping");
+            continue;
+        };
+        let sseed = scenario_seed(cfg.seed, 0, 0, pi);
+        let events = dynamics::generate(&wan, &profile, cfg.horizon_s, sseed);
+        let run = |chaos: Option<crate::sim::ChaosConfig>| -> Report {
+            let sim_cfg = SimConfig { chaos, ..Default::default() };
+            let mut sim =
+                Simulation::new(wan.clone(), Box::new(TerraPolicy::default()), sim_cfg);
+            for ev in &events {
+                sim.add_wan_event(ev.t, ev.ev.clone());
+            }
+            sim.run_jobs(jobs.clone())
+        };
+        let always_up = run(None);
+        for mode in RECOVERY_MODES {
+            let rep = if mode == "always-up" {
+                always_up.clone()
+            } else {
+                run(chaos_for_mode(mode, cfg))
+            };
+            rows.push(RecoveryRow {
+                topology: cfg.topology.clone(),
+                workload: cfg.workload.clone(),
+                profile: profile.name.clone(),
+                mode: mode.to_string(),
+                avg_cct: rep.avg_cct(),
+                p99_cct: rep.p99_cct(),
+                cct_vs_always_up: rep.avg_cct() / always_up.avg_cct().max(1e-9),
+                preserved_fraction: rep.preserved_fraction(),
+                inflight_at_kill_gbit: rep.inflight_at_kill_gbit,
+                drained_degraded_gbit: rep.drained_degraded_gbit,
+                downtime_s: rep.chaos_downtime_s,
+                recovery_round_ms: 1e3 * rep.recovery_round_s,
+                rounds: rep.rounds,
+                unfinished: rep.unfinished(),
+                makespan: rep.makespan,
+            });
+        }
+    }
+    rows
+}
+
+/// Serialize recovery-sweep results for `BENCH_recovery.json`.
+pub fn recovery_json(cfg: &RecoverySweepConfig, rows: &[RecoveryRow]) -> Json {
+    let rows: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::from_pairs([
+                ("topology", Json::from(r.topology.clone())),
+                ("workload", r.workload.clone().into()),
+                ("profile", r.profile.clone().into()),
+                ("mode", r.mode.clone().into()),
+                ("avg_cct_s", r.avg_cct.into()),
+                ("p99_cct_s", r.p99_cct.into()),
+                ("cct_vs_always_up", r.cct_vs_always_up.into()),
+                ("preserved_fraction", r.preserved_fraction.into()),
+                ("inflight_at_kill_gbit", r.inflight_at_kill_gbit.into()),
+                ("drained_degraded_gbit", r.drained_degraded_gbit.into()),
+                ("downtime_s", r.downtime_s.into()),
+                ("recovery_round_ms", r.recovery_round_ms.into()),
+                ("rounds", r.rounds.into()),
+                ("unfinished", r.unfinished.into()),
+                ("makespan_s", r.makespan.into()),
+            ])
+        })
+        .collect();
+    Json::from_pairs([
+        ("seed", Json::from(cfg.seed)),
+        ("jobs", cfg.jobs.into()),
+        ("horizon_s", cfg.horizon_s.into()),
+        ("topology", cfg.topology.clone().into()),
+        ("workload", cfg.workload.clone().into()),
+        ("kill_t", cfg.kill_t.into()),
+        ("restart_t", cfg.restart_t.into()),
+        (
+            "profiles",
+            cfg.profiles.iter().map(|p| Json::from(p.clone())).collect::<Vec<_>>().into(),
+        ),
+        (
+            "modes",
+            RECOVERY_MODES.iter().map(|m| Json::from(m.to_string())).collect::<Vec<_>>().into(),
+        ),
+        ("rows", Json::Arr(rows)),
+    ])
+}
+
 /// Figure 1: the motivating example — average CCT of the two coflows under
 /// the four policies of Fig 1c–1f. Returns (policy name, avg CCT seconds).
 pub fn fig1_motivation() -> Vec<(String, f64)> {
@@ -868,6 +1056,42 @@ mod tests {
             assert_eq!(a.avg_cct.to_bits(), b.avg_cct.to_bits());
             assert_eq!(a.est_samples, b.est_samples);
             assert_eq!(a.stale_events, b.stale_events);
+        }
+    }
+
+    #[test]
+    fn recovery_sweep_covers_grid_resync_beats_from_zero() {
+        let cfg = RecoverySweepConfig {
+            jobs: 2,
+            horizon_s: 160.0,
+            profiles: vec!["calm".into()],
+            kill_t: 20.0,
+            restart_t: 24.0,
+            ..Default::default()
+        };
+        let rows = recovery_sweep(&cfg);
+        assert_eq!(rows.len(), 3, "1 profile x 3 availability modes");
+        let get = |m: &str| rows.iter().find(|r| r.mode == m).unwrap();
+        let (up, resync, zero) = (get("always-up"), get("resync"), get("from-zero"));
+        assert!((up.cct_vs_always_up - 1.0).abs() < 1e-12);
+        assert_eq!(up.downtime_s, 0.0);
+        assert_eq!(up.preserved_fraction, 1.0);
+        // The crash landed mid-workload: both chaos modes saw the outage.
+        assert!((resync.downtime_s - 4.0).abs() < 1e-9, "{resync:?}");
+        assert!(resync.drained_degraded_gbit > 0.0, "{resync:?}");
+        assert!(resync.inflight_at_kill_gbit > 0.0, "{resync:?}");
+        // Resync preserves progress; from-zero throws it away.
+        assert!((resync.preserved_fraction - 1.0).abs() < 1e-9, "{resync:?}");
+        assert!(zero.preserved_fraction < 1.0, "{zero:?}");
+        // CCT cost orders: always-up ≤ resync ≤ from-zero.
+        assert!(up.avg_cct <= resync.avg_cct + 1e-6, "{up:?} vs {resync:?}");
+        assert!(resync.avg_cct <= zero.avg_cct + 1e-6, "{resync:?} vs {zero:?}");
+        // Everything still finishes and the sweep is deterministic.
+        assert!(rows.iter().all(|r| r.unfinished == 0), "{rows:?}");
+        let again = recovery_sweep(&cfg);
+        for (a, b) in rows.iter().zip(&again) {
+            assert_eq!(a.avg_cct.to_bits(), b.avg_cct.to_bits());
+            assert_eq!(a.preserved_fraction.to_bits(), b.preserved_fraction.to_bits());
         }
     }
 

@@ -45,6 +45,10 @@ fn main() {
                  \u{20}          (capacity-estimation sweep: profiles x estimators, writes\n\
                  \u{20}          BENCH_estimation.json with MAPE / reaction latency / CCT\n\
                  \u{20}          inflation vs oracle; deadlines default to 3x min CCT)\n\
+                 \u{20}          --recovery [--kill T] [--restart T]\n\
+                 \u{20}          (controller-chaos sweep: profiles x {{always-up, resync,\n\
+                 \u{20}          from-zero}}, writes BENCH_recovery.json with preserved\n\
+                 \u{20}          in-flight fraction / degraded drain / CCT inflation)\n\
                  testbed   --topology fig1a --gbit VOLUME [--shards S]\n\
                  \u{20}          (real TCP overlay demo)\n\
                  topology  --name swan|gscale|att|fig1a"
@@ -239,6 +243,9 @@ fn sweep(args: &Args) {
     if args.flag("estimation") || args.get("estimation").is_some() {
         return estimation_sweep(args);
     }
+    if args.flag("recovery") || args.get("recovery").is_some() {
+        return recovery_sweep(args);
+    }
     let defaults = exp::SweepConfig::default();
     let list = |v: &str| -> Vec<String> { v.split(',').map(|s| s.trim().to_string()).collect() };
     let cfg = exp::SweepConfig {
@@ -337,6 +344,61 @@ fn estimation_sweep(args: &Args) {
     ));
     let out = args.get_or("out", "BENCH_estimation.json");
     match std::fs::write(out, format!("{}\n", exp::estimation_json(&cfg, &rows))) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => {
+            eprintln!("failed to write {out}: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// The controller-chaos recovery sweep: dynamics profiles × controller
+/// availability modes (always-up, resync, from-zero) on one
+/// ⟨topology, workload⟩, writing `BENCH_recovery.json` (or `--out`).
+fn recovery_sweep(args: &Args) {
+    use terra::experiments as exp;
+    let defaults = exp::RecoverySweepConfig::default();
+    let list = |v: &str| -> Vec<String> { v.split(',').map(|s| s.trim().to_string()).collect() };
+    let cfg = exp::RecoverySweepConfig {
+        jobs: args.get_usize("jobs", defaults.jobs),
+        seed: args.get_u64("seed", defaults.seed),
+        horizon_s: args.get_f64("horizon", defaults.horizon_s),
+        topology: args.get_or("topology", &defaults.topology).to_string(),
+        workload: args.get_or("workload", &defaults.workload).to_string(),
+        profiles: args.get("profiles").map(list).unwrap_or(defaults.profiles),
+        kill_t: args.get_f64("kill", defaults.kill_t),
+        restart_t: args.get_f64("restart", defaults.restart_t),
+    };
+    let rows = exp::recovery_sweep(&cfg);
+    let mut t = Table::new(&[
+        "profile", "mode", "avg CCT", "vs up", "preserved", "degraded Gbit", "down s",
+        "recover ms", "unfin",
+    ]);
+    for r in &rows {
+        t.row(&[
+            r.profile.clone(),
+            r.mode.clone(),
+            format!("{:.1}s", r.avg_cct),
+            format!("{:.2}x", r.cct_vs_always_up),
+            format!("{:.0}%", r.preserved_fraction * 100.0),
+            format!("{:.1}", r.drained_degraded_gbit),
+            format!("{:.1}", r.downtime_s),
+            format!("{:.2}", r.recovery_round_ms),
+            r.unfinished.to_string(),
+        ]);
+    }
+    t.print(&format!(
+        "Recovery sweep: {} rows on {}/{} (seed {}, {} jobs, kill {:.0}s, restart {:.0}s)",
+        rows.len(),
+        cfg.topology,
+        cfg.workload,
+        cfg.seed,
+        cfg.jobs,
+        cfg.kill_t,
+        cfg.restart_t
+    ));
+    let out = args.get_or("out", "BENCH_recovery.json");
+    match std::fs::write(out, format!("{}\n", exp::recovery_json(&cfg, &rows))) {
         Ok(()) => println!("wrote {out}"),
         Err(e) => {
             eprintln!("failed to write {out}: {e}");

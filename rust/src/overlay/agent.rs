@@ -9,15 +9,26 @@
 //! buffers them and advances an in-order frontier, delivering only
 //! contiguous data to the application (§5.1 "Handling WAN Latency
 //! Heterogeneity") and reports FlowGroup completion to the controller.
+//!
+//! Fault tolerance: the agent survives the controller. When the control
+//! channel goes silent past [`HEARTBEAT_DEADLINE`] the agent enters
+//! *degraded mode* — a conservative local fair-share of the last-known
+//! allocation envelope per destination — and keeps draining. Meanwhile a
+//! session loop retries the controller address; on reconnect it sends a
+//! `resync_state` report (live transfers with achieved/remaining bytes,
+//! last-assigned rates, and telemetry samples buffered while down) so a
+//! restarted controller can rebuild its world without restarting any
+//! transfer from zero. Degraded mode ends when the new session's
+//! `rates_full` baseline lands.
 
-use super::protocol::{self, DataHeader, TelemetrySample, CHUNK_BYTES, PROBE_COFLOW};
+use super::protocol::{self, DataHeader, ResyncEntry, TelemetrySample, CHUNK_BYTES, PROBE_COFLOW};
 use super::BYTES_PER_GBPS;
 use crate::util::json::Json;
 use std::collections::{BTreeMap, HashMap};
 use std::io::Write;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 /// How often the sender flushes achieved-throughput samples to the
@@ -25,15 +36,91 @@ use std::time::{Duration, Instant};
 const TELEMETRY_INTERVAL: Duration = Duration::from_millis(250);
 /// Probe burst size (chunks) when the controller issues a `probe_request`.
 const PROBE_CHUNKS: usize = 4;
+/// Control-channel silence (no frame of any kind — the controller
+/// heartbeats every ~500 ms even when idle) after which the agent assumes
+/// the controller is gone and enters degraded mode.
+const HEARTBEAT_DEADLINE: Duration = Duration::from_secs(2);
+/// Fraction of the last-known per-destination allocation envelope that
+/// degraded mode spends. Deliberately conservative: the envelope was
+/// feasible when assigned, but the WAN may have degraded since, and
+/// without the controller nobody re-checks feasibility.
+const DEGRADED_SCALE: f64 = 0.5;
+/// Pause between reconnect attempts while the controller is unreachable.
+const RECONNECT_DELAY: Duration = Duration::from_millis(200);
+/// Cap on telemetry samples buffered while disconnected (oldest dropped);
+/// they ship inside the `resync_state` report on reconnect.
+const MAX_BUFFERED_SAMPLES: usize = 4096;
+
+/// Process-wide count of poisoned-lock recoveries (see [`lock_recover`]).
+static POISON_RECOVERIES: AtomicU64 = AtomicU64::new(0);
+
+/// Lock a mutex, recovering from poisoning instead of propagating it. A
+/// panicking helper thread used to poison `out`/`conns`/`ctrl_tx` and take
+/// the whole agent down with it — precisely when degraded mode should be
+/// engaging. The guarded maps are plain collections whose invariants hold
+/// between statements, so the data is usable after a recovery; the event
+/// is logged and counted rather than silently absorbed.
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| {
+        let n = POISON_RECOVERIES.fetch_add(1, Ordering::Relaxed) + 1;
+        log::warn!("agent: recovered a poisoned lock (process-wide total {n})");
+        e.into_inner()
+    })
+}
+
+/// Process-wide count of locks recovered from poisoning (a panicked thread
+/// died while holding one). Nonzero means a thread was lost to a panic but
+/// the agent kept running.
+pub fn lock_poison_recoveries() -> u64 {
+    POISON_RECOVERIES.load(Ordering::Relaxed)
+}
+
+/// Writable half of the control channel; `None` while disconnected (sends
+/// fail fast instead of writing into a dead socket).
+type CtrlTx = Arc<Mutex<Option<TcpStream>>>;
+
+/// Send one control frame if connected. Returns false when disconnected or
+/// the write failed (the session loop will reconnect; callers buffer or
+/// drop as appropriate).
+fn ctrl_send(ctrl_tx: &CtrlTx, msg: &Json) -> bool {
+    let mut guard = lock_recover(ctrl_tx);
+    let Some(s) = guard.as_mut() else { return false };
+    match protocol::write_msg(s, msg) {
+        Ok(()) => true,
+        Err(e) => {
+            log::warn!("agent: control write failed ({e}); awaiting reconnect");
+            *guard = None;
+            false
+        }
+    }
+}
+
+/// Control traffic that could not be delivered while disconnected.
+#[derive(Default)]
+struct PendingCtrl {
+    /// Telemetry samples captured while down (capped, oldest dropped);
+    /// shipped inside the next `resync_state`.
+    samples: Vec<Json>,
+    /// Undeliverable event messages (`group_done`) replayed after resync —
+    /// a completion observed during an outage must still reach the
+    /// restarted controller or the coflow would never be marked done.
+    msgs: Vec<Json>,
+}
 
 /// Sender-side state of one outgoing transfer (one FlowGroup direction).
 struct Outgoing {
     coflow: u64,
     remaining: u64,
     offset: u64,
-    /// Token-bucket budget (bytes) and rate (bytes/s) per path.
+    /// Token-bucket budget (bytes) and *enforced* rate (Gbps) per path.
+    /// Normally `rate == alloc`; degraded mode overwrites `rate` with a
+    /// local fair-share while `alloc` keeps the controller's envelope.
     budget: Vec<f64>,
     rate: Vec<f64>,
+    /// Last controller-assigned per-path rates (Gbps): the allocation
+    /// envelope degraded mode must stay within, and what `resync_state`
+    /// reports to a restarted controller.
+    alloc: Vec<f64>,
     /// Bytes actually written per path since the last telemetry flush —
     /// the *achieved* throughput the controller's estimator feeds on.
     window: Vec<f64>,
@@ -68,6 +155,13 @@ pub struct Agent {
     conns: Arc<Mutex<HashMap<usize, Vec<TcpStream>>>>,
     /// Receive counters per (coflow, src_dc) for throughput sampling.
     rx_counters: Arc<Mutex<HashMap<(u64, usize), Arc<AtomicU64>>>>,
+    /// True while draining on local fair-share rates without a controller.
+    degraded: Arc<AtomicBool>,
+    /// Where reconnect attempts go — re-read on every attempt, so a
+    /// restarted controller on a new address is reachable once
+    /// [`Agent::redirect_controller`] updates it (the DNS/VIP re-resolution
+    /// stand-in; production agents would re-resolve a name).
+    controller_addr: Arc<Mutex<std::net::SocketAddr>>,
 }
 
 impl Agent {
@@ -81,16 +175,18 @@ impl Agent {
         let conns: Arc<Mutex<HashMap<usize, Vec<TcpStream>>>> = Arc::default();
         let rx_counters: Arc<Mutex<HashMap<(u64, usize), Arc<AtomicU64>>>> = Arc::default();
         let incoming: Arc<Mutex<HashMap<(u64, usize), Incoming>>> = Arc::default();
+        let pending: Arc<Mutex<PendingCtrl>> = Arc::default();
+        let degraded = Arc::new(AtomicBool::new(false));
+        let ctrl_addr = Arc::new(Mutex::new(controller_addr));
 
-        // Control channel.
+        // Control channel: the first connection is made synchronously so
+        // spawn fails fast when no controller is listening; later
+        // reconnects happen inside the session loop.
         let mut ctrl = TcpStream::connect(controller_addr)?;
-        let hello = Json::from_pairs([
-            ("op", Json::from("hello")),
-            ("dc", dc.into()),
-            ("data_addr", data_addr.to_string().into()),
-        ]);
-        protocol::write_msg(&mut ctrl, &hello)?;
-        let ctrl_tx = Arc::new(Mutex::new(ctrl.try_clone()?));
+        protocol::write_msg(&mut ctrl, &hello_msg(dc, data_addr))?;
+        ctrl.set_read_timeout(Some(Duration::from_millis(100)))?;
+        let ctrl_tx: CtrlTx = Arc::new(Mutex::new(Some(ctrl.try_clone()?)));
+        let last_rx = Arc::new(Mutex::new(Instant::now()));
 
         let mut threads = Vec::new();
 
@@ -100,6 +196,7 @@ impl Agent {
             let incoming = incoming.clone();
             let rx_counters = rx_counters.clone();
             let ctrl_tx = ctrl_tx.clone();
+            let pending = pending.clone();
             listener.set_nonblocking(true)?;
             threads.push(std::thread::spawn(move || {
                 while !stop.load(Ordering::Relaxed) {
@@ -110,8 +207,9 @@ impl Agent {
                             let incoming = incoming.clone();
                             let rx_counters = rx_counters.clone();
                             let ctrl_tx = ctrl_tx.clone();
+                            let pending = pending.clone();
                             std::thread::spawn(move || {
-                                recv_loop(s, dc, stop, incoming, rx_counters, ctrl_tx);
+                                recv_loop(s, dc, stop, incoming, rx_counters, ctrl_tx, pending);
                             });
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -123,9 +221,10 @@ impl Agent {
             }));
         }
 
-        // Control reader: controller commands. Tracks the delta-protocol
-        // sequence number; a gap (lost or reordered push) triggers a
-        // `sync_request`, answered by a `rates_full` that rebaselines.
+        // Control session loop: run the reader until the socket dies, then
+        // reconnect (hello + resync_state) and run the next session. The
+        // loop — not any single connection — is the agent's lifetime tie
+        // to the controller.
         {
             let stop = stop.clone();
             let out = out.clone();
@@ -133,57 +232,46 @@ impl Agent {
             let incoming = incoming.clone();
             let rx_counters = rx_counters.clone();
             let ctrl_tx = ctrl_tx.clone();
-            ctrl.set_read_timeout(Some(Duration::from_millis(100)))?;
+            let last_rx = last_rx.clone();
+            let degraded = degraded.clone();
+            let pending = pending.clone();
+            let ctrl_addr = ctrl_addr.clone();
             threads.push(std::thread::spawn(move || {
-                // None until the first rates_full lands.
-                let mut last_seq: Option<u64> = None;
+                let mut stream = Some(ctrl);
                 while !stop.load(Ordering::Relaxed) {
-                    let msg = match protocol::read_msg_resumable(&mut ctrl, &stop) {
-                        Ok(Some(m)) => m,
-                        _ => break,
+                    let s = match stream.take() {
+                        Some(s) => s,
+                        None => {
+                            let Some(s) = reconnect(dc, data_addr, &ctrl_addr, &stop) else {
+                                break; // stop raised while down
+                            };
+                            let Ok(tx_half) = s.try_clone() else { continue };
+                            *lock_recover(&ctrl_tx) = Some(tx_half);
+                            send_resync(dc, &out, &pending, &ctrl_tx);
+                            s
+                        }
                     };
-                    match msg.get("op").and_then(|o| o.as_str()) {
-                        Some("rates_full") => {
-                            apply_rates_full(&msg, &out);
-                            last_seq = msg.get("seq").and_then(|x| x.as_u64());
-                        }
-                        Some("rates_delta") => {
-                            let seq = msg.get("seq").and_then(|x| x.as_u64());
-                            match (last_seq, seq) {
-                                (Some(prev), Some(s)) if s == prev + 1 => {
-                                    apply_rates_delta(&msg, &out);
-                                    last_seq = Some(s);
-                                }
-                                _ => {
-                                    // Gap or unsynced: drop the delta and
-                                    // ask for the full table.
-                                    log::warn!(
-                                        "agent {dc}: rate-delta gap \
-                                         ({last_seq:?} -> {seq:?}), requesting full sync"
-                                    );
-                                    let req = Json::from_pairs([(
-                                        "op",
-                                        Json::from("sync_request"),
-                                    )]);
-                                    let mut tx = ctrl_tx.lock().unwrap();
-                                    let _ = protocol::write_msg(&mut tx, &req);
-                                }
-                            }
-                        }
-                        Some("probe_request") => handle_probe(dc, &msg, &conns, &ctrl_tx),
-                        _ => handle_ctrl(&msg, &out, &conns, &incoming, &rx_counters),
-                    }
+                    *lock_recover(&last_rx) = Instant::now();
+                    ctrl_session(
+                        s, dc, &stop, &out, &conns, &incoming, &rx_counters, &ctrl_tx,
+                        &last_rx, &degraded,
+                    );
+                    *lock_recover(&ctrl_tx) = None;
                 }
             }));
         }
 
-        // Sender: token-bucket pacing loop, plus periodic telemetry
-        // flushes (achieved bytes per ⟨transfer, path⟩ → `telemetry_report`).
+        // Sender: token-bucket pacing loop, periodic telemetry flushes
+        // (achieved bytes per ⟨transfer, path⟩ → `telemetry_report`), and
+        // the degraded-mode watchdog.
         {
             let stop = stop.clone();
             let out = out.clone();
             let conns = conns.clone();
             let ctrl_tx = ctrl_tx.clone();
+            let last_rx = last_rx.clone();
+            let degraded = degraded.clone();
+            let pending = pending.clone();
             threads.push(std::thread::spawn(move || {
                 let mut last = Instant::now();
                 let mut last_report = Instant::now();
@@ -194,24 +282,40 @@ impl Agent {
                     let dt = now.duration_since(last).as_secs_f64();
                     last = now;
                     send_tick(dc, dt, &payload, &out, &conns);
+                    // Watchdog: controller silent past the deadline (it
+                    // heartbeats when idle, so silence means it is gone).
+                    if !degraded.load(Ordering::Relaxed)
+                        && lock_recover(&last_rx).elapsed() >= HEARTBEAT_DEADLINE
+                    {
+                        degraded.store(true, Ordering::Relaxed);
+                        enter_degraded(dc, &out);
+                    }
                     let window = now.duration_since(last_report);
                     if window >= TELEMETRY_INTERVAL {
                         last_report = now;
-                        flush_telemetry(window.as_secs_f64(), &out, &ctrl_tx);
+                        flush_telemetry(window.as_secs_f64(), &out, &ctrl_tx, &pending);
                     }
                 }
             }));
         }
 
-        Ok(Agent { dc, data_addr, stop, threads, out, conns, rx_counters })
+        Ok(Agent {
+            dc,
+            data_addr,
+            stop,
+            threads,
+            out,
+            conns,
+            rx_counters,
+            degraded,
+            controller_addr: ctrl_addr,
+        })
     }
 
     /// Bytes received so far for (coflow, src_dc) — throughput sampling for
     /// the failure case study (Fig 10).
     pub fn received_bytes(&self, coflow: u64, src_dc: usize) -> u64 {
-        self.rx_counters
-            .lock()
-            .unwrap()
+        lock_recover(&self.rx_counters)
             .get(&(coflow, src_dc))
             .map(|c| c.load(Ordering::Relaxed))
             .unwrap_or(0)
@@ -219,17 +323,239 @@ impl Agent {
 
     /// Outstanding bytes still to send from this agent.
     pub fn backlog(&self) -> u64 {
-        self.out.lock().unwrap().values().map(|o| o.remaining).sum()
+        lock_recover(&self.out).values().map(|o| o.remaining).sum()
+    }
+
+    /// True while the agent is draining on local fair-share rates because
+    /// the controller went silent past the heartbeat deadline.
+    pub fn is_degraded(&self) -> bool {
+        self.degraded.load(Ordering::Relaxed)
+    }
+
+    /// Point reconnect attempts at a new controller address (the DNS/VIP
+    /// re-resolution stand-in: a restarted controller may listen
+    /// elsewhere). Takes effect on the next attempt; an established
+    /// session is not torn down.
+    pub fn redirect_controller(&self, addr: std::net::SocketAddr) {
+        *lock_recover(&self.controller_addr) = addr;
+    }
+
+    /// The (allocation envelope, enforced rate) vectors currently held for
+    /// one outgoing transfer — the chaos tests use this to check that
+    /// degraded-mode rates stay within the last-known envelope.
+    pub fn outgoing_rates(&self, coflow: u64, dst: usize) -> Option<(Vec<f64>, Vec<f64>)> {
+        lock_recover(&self.out).get(&(coflow, dst)).map(|o| (o.alloc.clone(), o.rate.clone()))
     }
 
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::Relaxed);
         // Close data connections to unblock readers.
-        self.conns.lock().unwrap().clear();
+        lock_recover(&self.conns).clear();
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
     }
+}
+
+fn hello_msg(dc: usize, data_addr: std::net::SocketAddr) -> Json {
+    Json::from_pairs([
+        ("op", Json::from("hello")),
+        ("dc", dc.into()),
+        ("data_addr", data_addr.to_string().into()),
+    ])
+}
+
+/// Retry the controller address until a connection with a delivered
+/// `hello` exists (returned with the read timeout set) or stop is raised.
+fn reconnect(
+    dc: usize,
+    data_addr: std::net::SocketAddr,
+    ctrl_addr: &Arc<Mutex<std::net::SocketAddr>>,
+    stop: &AtomicBool,
+) -> Option<TcpStream> {
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return None;
+        }
+        let addr = *lock_recover(ctrl_addr);
+        if let Ok(mut s) = TcpStream::connect(addr) {
+            s.set_nodelay(true).ok();
+            if protocol::write_msg(&mut s, &hello_msg(dc, data_addr)).is_ok()
+                && s.set_read_timeout(Some(Duration::from_millis(100))).is_ok()
+            {
+                log::info!("agent {dc}: reconnected to controller at {addr}");
+                return Some(s);
+            }
+        }
+        std::thread::sleep(RECONNECT_DELAY);
+    }
+}
+
+/// Ship the agent's live world to a freshly (re)connected controller: one
+/// `resync_state` with every in-flight outgoing transfer (achieved and
+/// remaining bytes plus the last-assigned rates, sorted by (coflow, dst)
+/// for determinism) and the telemetry buffered while down, followed by any
+/// undeliverable completions observed during the outage.
+fn send_resync(
+    dc: usize,
+    out: &Arc<Mutex<HashMap<(u64, usize), Outgoing>>>,
+    pending: &Arc<Mutex<PendingCtrl>>,
+    ctrl_tx: &CtrlTx,
+) {
+    let entries: Vec<Json> = {
+        let o = lock_recover(out);
+        let mut keys: Vec<(u64, usize)> = o.keys().copied().collect();
+        keys.sort_unstable();
+        keys.iter()
+            .filter_map(|k| {
+                let e = o.get(k)?;
+                if e.remaining == 0 {
+                    return None;
+                }
+                Some(
+                    ResyncEntry {
+                        coflow: k.0,
+                        dst_dc: k.1,
+                        remaining_bytes: e.remaining,
+                        achieved_bytes: e.offset,
+                        rates: e.alloc.clone(),
+                    }
+                    .to_json(),
+                )
+            })
+            .collect()
+    };
+    let (samples, msgs) = {
+        let mut p = lock_recover(pending);
+        (std::mem::take(&mut p.samples), std::mem::take(&mut p.msgs))
+    };
+    let msg = Json::from_pairs([
+        ("op", Json::from("resync_state")),
+        ("dc", dc.into()),
+        ("entries", Json::Arr(entries)),
+        ("samples", Json::Arr(samples)),
+    ]);
+    if !ctrl_send(ctrl_tx, &msg) {
+        // Session died under us; completions must survive to the next try.
+        lock_recover(pending).msgs = msgs;
+        return;
+    }
+    for (i, m) in msgs.iter().enumerate() {
+        if !ctrl_send(ctrl_tx, m) {
+            lock_recover(pending).msgs = msgs[i..].to_vec();
+            return;
+        }
+    }
+}
+
+/// One control session: read controller frames until the socket dies or
+/// stop is raised. Tracks the delta-protocol sequence number; a gap (lost
+/// or reordered push) triggers a `sync_request`, answered by a
+/// `rates_full` that rebaselines. Every inbound frame — heartbeats
+/// included — feeds the degraded-mode watchdog via `last_rx`.
+#[allow(clippy::too_many_arguments)]
+fn ctrl_session(
+    mut ctrl: TcpStream,
+    dc: usize,
+    stop: &Arc<AtomicBool>,
+    out: &Arc<Mutex<HashMap<(u64, usize), Outgoing>>>,
+    conns: &Arc<Mutex<HashMap<usize, Vec<TcpStream>>>>,
+    incoming: &Arc<Mutex<HashMap<(u64, usize), Incoming>>>,
+    rx_counters: &Arc<Mutex<HashMap<(u64, usize), Arc<AtomicU64>>>>,
+    ctrl_tx: &CtrlTx,
+    last_rx: &Arc<Mutex<Instant>>,
+    degraded: &Arc<AtomicBool>,
+) {
+    // None until the first rates_full lands.
+    let mut last_seq: Option<u64> = None;
+    while !stop.load(Ordering::Relaxed) {
+        let msg = match protocol::read_msg_resumable(&mut ctrl, stop) {
+            Ok(Some(m)) => m,
+            _ => return,
+        };
+        *lock_recover(last_rx) = Instant::now();
+        match msg.get("op").and_then(|o| o.as_str()) {
+            Some("rates_full") => {
+                apply_rates_full(&msg, out, conns);
+                last_seq = msg.get("seq").and_then(|x| x.as_u64());
+                // The baseline re-anchors enforcement to the controller:
+                // degraded fair-share ends here.
+                if degraded.swap(false, Ordering::Relaxed) {
+                    log::info!("agent {dc}: rates_full received, leaving degraded mode");
+                }
+            }
+            Some("rates_delta") => {
+                let seq = msg.get("seq").and_then(|x| x.as_u64());
+                match (last_seq, seq) {
+                    (Some(prev), Some(s)) if s == prev + 1 => {
+                        apply_rates_delta(&msg, out, conns);
+                        last_seq = Some(s);
+                    }
+                    _ => {
+                        // Gap or unsynced: drop the delta and ask for the
+                        // full table.
+                        log::warn!(
+                            "agent {dc}: rate-delta gap \
+                             ({last_seq:?} -> {seq:?}), requesting full sync"
+                        );
+                        let req = Json::from_pairs([("op", Json::from("sync_request"))]);
+                        ctrl_send(ctrl_tx, &req);
+                    }
+                }
+            }
+            Some("probe_request") => handle_probe(dc, &msg, conns, ctrl_tx),
+            Some("hb") => {} // heartbeat: last_rx update above is the point
+            _ => handle_ctrl(&msg, out, conns, incoming, rx_counters),
+        }
+    }
+}
+
+/// Enter degraded mode: replace every active transfer's enforced rates
+/// with a local fair-share of the last-known per-destination allocation
+/// envelope. For each destination, the envelope is the per-path sum of
+/// the controller-assigned rates across this agent's active transfers;
+/// each transfer gets an equal split scaled by [`DEGRADED_SCALE`], so the
+/// per-path total is at most `DEGRADED_SCALE` × envelope — strictly inside
+/// what the controller last proved feasible. Transfers the controller
+/// never rated stay at zero (nothing is known to be safe for them).
+fn enter_degraded(dc: usize, out: &Arc<Mutex<HashMap<(u64, usize), Outgoing>>>) {
+    let mut o = lock_recover(out);
+    let mut envelope: HashMap<usize, (Vec<f64>, usize)> = HashMap::new();
+    for ((_, dst), e) in o.iter() {
+        if e.remaining == 0 {
+            continue;
+        }
+        let (env, n) = envelope.entry(*dst).or_insert_with(|| (Vec::new(), 0));
+        if env.len() < e.alloc.len() {
+            env.resize(e.alloc.len(), 0.0);
+        }
+        for (p, r) in e.alloc.iter().enumerate() {
+            env[p] += r.max(0.0);
+        }
+        *n += 1;
+    }
+    let mut active = 0usize;
+    for ((_, dst), e) in o.iter_mut() {
+        if e.remaining == 0 {
+            continue;
+        }
+        let Some((env, n)) = envelope.get(dst) else { continue };
+        let share: Vec<f64> =
+            env.iter().map(|c| c / (*n).max(1) as f64 * DEGRADED_SCALE).collect();
+        if e.budget.len() < share.len() {
+            e.budget.resize(share.len(), 0.0);
+        }
+        if e.window.len() < share.len() {
+            e.window.resize(share.len(), 0.0);
+        }
+        e.rate = share;
+        e.rate_windows = 0;
+        active += 1;
+    }
+    log::warn!(
+        "agent {dc}: controller silent for {HEARTBEAT_DEADLINE:?}, degraded fair-share \
+         engaged for {active} active transfers"
+    );
 }
 
 /// Apply a controller command.
@@ -244,7 +570,7 @@ fn handle_ctrl(
         // Establish persistent connections: one per path to each peer.
         Some("peers") => {
             if let Some(arr) = msg.get("peers").and_then(|p| p.as_arr()) {
-                let mut c = conns.lock().unwrap();
+                let mut c = lock_recover(conns);
                 for peer in arr {
                     let (Some(dst), Some(addr), Some(k)) = (
                         peer.get("dc").and_then(|x| x.as_u64()),
@@ -256,9 +582,9 @@ fn handle_ctrl(
                     };
                     // Sanity-cap k: a corrupt value must not spin this
                     // thread opening unbounded connections.
-                    let k = k.min(1024);
+                    let k = k.min(1024) as usize;
                     let entry = c.entry(dst as usize).or_default();
-                    while entry.len() < k as usize {
+                    while entry.len() < k {
                         match TcpStream::connect(addr) {
                             Ok(s) => {
                                 s.set_nodelay(true).ok();
@@ -270,6 +596,10 @@ fn handle_ctrl(
                             }
                         }
                     }
+                    // The pool must also shrink when the peer's path
+                    // count went down, or idle sockets leak and
+                    // `send_tick` keeps addressing stale path indices.
+                    entry.truncate(k);
                 }
             }
         }
@@ -282,14 +612,15 @@ fn handle_ctrl(
             ) else {
                 return;
             };
-            let k = conns.lock().unwrap().get(&(dst as usize)).map(|v| v.len()).unwrap_or(0);
-            let mut o = out.lock().unwrap();
+            let k = lock_recover(conns).get(&(dst as usize)).map(|v| v.len()).unwrap_or(0);
+            let mut o = lock_recover(out);
             let e = o.entry((coflow, dst as usize)).or_insert(Outgoing {
                 coflow,
                 remaining: 0,
                 offset: 0,
                 budget: vec![0.0; k],
                 rate: vec![0.0; k],
+                alloc: vec![0.0; k],
                 window: vec![0.0; k],
                 rate_windows: 0,
             });
@@ -305,8 +636,8 @@ fn handle_ctrl(
                 return;
             };
             let counter = Arc::new(AtomicU64::new(0));
-            rx_counters.lock().unwrap().insert((coflow, src as usize), counter.clone());
-            let mut inc = incoming.lock().unwrap();
+            lock_recover(rx_counters).insert((coflow, src as usize), counter.clone());
+            let mut inc = lock_recover(incoming);
             let e = inc.entry((coflow, src as usize)).or_insert(Incoming {
                 expected: 0,
                 frontier: 0,
@@ -320,7 +651,10 @@ fn handle_ctrl(
         }
         // Update rates for (coflow, dst): one rate per path, Gbps (legacy
         // single-entry form; delta pushes batch the same payload).
-        Some("rates") => apply_rate_entry(msg, out),
+        Some("rates") => {
+            apply_rate_entry(msg, out);
+            trim_conns(out, conns);
+        }
         _ => {}
     }
 }
@@ -345,7 +679,7 @@ fn apply_rate_entry(entry: &Json, out: &Arc<Mutex<HashMap<(u64, usize), Outgoing
         log::warn!("agent: malformed rate entry dropped");
         return;
     };
-    let mut o = out.lock().unwrap();
+    let mut o = lock_recover(out);
     if let Some(e) = o.get_mut(&(coflow, dst as usize)) {
         let new_rate: Vec<f64> = rates
             .iter()
@@ -357,8 +691,10 @@ fn apply_rate_entry(entry: &Json, out: &Arc<Mutex<HashMap<(u64, usize), Outgoing
         // not suppress another window of capacity-capped evidence.
         if new_rate != e.rate {
             e.rate_windows = 0;
-            e.rate = new_rate;
+            e.rate = new_rate.clone();
         }
+        // A controller push is by definition the new allocation envelope.
+        e.alloc = new_rate;
         if e.budget.len() < e.rate.len() {
             e.budget.resize(e.rate.len(), 0.0);
         }
@@ -368,15 +704,57 @@ fn apply_rate_entry(entry: &Json, out: &Arc<Mutex<HashMap<(u64, usize), Outgoing
     }
 }
 
+/// Shrink per-destination connection pools a structural path change left
+/// oversized: the pool trims to the longest rate vector any transfer to
+/// that destination currently holds (the controller sizes rate vectors to
+/// the live path count). Destinations with no rated transfer are left
+/// alone — their pools may still carry probes.
+fn trim_conns(
+    out: &Arc<Mutex<HashMap<(u64, usize), Outgoing>>>,
+    conns: &Arc<Mutex<HashMap<usize, Vec<TcpStream>>>>,
+) {
+    let wants: HashMap<usize, usize> = {
+        let o = lock_recover(out);
+        let mut w: HashMap<usize, usize> = HashMap::new();
+        for ((_, dst), e) in o.iter() {
+            if e.rate.is_empty() {
+                continue;
+            }
+            let want = w.entry(*dst).or_insert(0);
+            *want = (*want).max(e.rate.len());
+        }
+        w
+    };
+    let mut c = lock_recover(conns);
+    for (dst, want) in wants {
+        if want == 0 {
+            continue;
+        }
+        if let Some(streams) = c.get_mut(&dst) {
+            if streams.len() > want {
+                log::info!(
+                    "agent: trimming pool to dc {dst} from {} to {want} paths",
+                    streams.len()
+                );
+                streams.truncate(want);
+            }
+        }
+    }
+}
+
 /// `rates_delta`: apply the changed entries, zero the revoked ones.
-fn apply_rates_delta(msg: &Json, out: &Arc<Mutex<HashMap<(u64, usize), Outgoing>>>) {
+fn apply_rates_delta(
+    msg: &Json,
+    out: &Arc<Mutex<HashMap<(u64, usize), Outgoing>>>,
+    conns: &Arc<Mutex<HashMap<usize, Vec<TcpStream>>>>,
+) {
     if let Some(updates) = msg.get("updates").and_then(|x| x.as_arr()) {
         for e in updates {
             apply_rate_entry(e, out);
         }
     }
     if let Some(revoke) = msg.get("revoke").and_then(|x| x.as_arr()) {
-        let mut o = out.lock().unwrap();
+        let mut o = lock_recover(out);
         for r in revoke {
             let (Some(coflow), Some(dst)) = (
                 r.get("coflow").and_then(|x| x.as_u64()),
@@ -388,18 +766,29 @@ fn apply_rates_delta(msg: &Json, out: &Arc<Mutex<HashMap<(u64, usize), Outgoing>
                 for rate in &mut e.rate {
                     *rate = 0.0;
                 }
+                for rate in &mut e.alloc {
+                    *rate = 0.0;
+                }
             }
         }
     }
+    trim_conns(out, conns);
 }
 
 /// `rates_full`: rebaseline — zero every held rate, then apply the full
 /// table (entries absent from it stay revoked).
-fn apply_rates_full(msg: &Json, out: &Arc<Mutex<HashMap<(u64, usize), Outgoing>>>) {
+fn apply_rates_full(
+    msg: &Json,
+    out: &Arc<Mutex<HashMap<(u64, usize), Outgoing>>>,
+    conns: &Arc<Mutex<HashMap<usize, Vec<TcpStream>>>>,
+) {
     {
-        let mut o = out.lock().unwrap();
+        let mut o = lock_recover(out);
         for e in o.values_mut() {
             for rate in &mut e.rate {
+                *rate = 0.0;
+            }
+            for rate in &mut e.alloc {
                 *rate = 0.0;
             }
         }
@@ -409,6 +798,7 @@ fn apply_rates_full(msg: &Json, out: &Arc<Mutex<HashMap<(u64, usize), Outgoing>>
             apply_rate_entry(e, out);
         }
     }
+    trim_conns(out, conns);
 }
 
 /// One pacing tick: move token-bucket budget into sent chunks.
@@ -419,8 +809,8 @@ fn send_tick(
     out: &Arc<Mutex<HashMap<(u64, usize), Outgoing>>>,
     conns: &Arc<Mutex<HashMap<usize, Vec<TcpStream>>>>,
 ) {
-    let mut out = out.lock().unwrap();
-    let mut conns = conns.lock().unwrap();
+    let mut out = lock_recover(out);
+    let mut conns = lock_recover(conns);
     for ((_, dst), o) in out.iter_mut() {
         if o.remaining == 0 {
             continue;
@@ -477,18 +867,22 @@ fn send_tick(
 /// through [`BYTES_PER_GBPS`] for apples-to-apples comparison. A report
 /// goes out every interval even with zero samples — the heartbeat is what
 /// drives the controller's staleness scan, so an idle agent must keep
-/// reporting or its edges could never be probed.
+/// reporting or its edges could never be probed. While disconnected the
+/// samples are buffered (capped) and ship inside the next `resync_state`,
+/// so a restarted controller inherits the evidence gathered during its
+/// outage.
 fn flush_telemetry(
     window_s: f64,
     out: &Arc<Mutex<HashMap<(u64, usize), Outgoing>>>,
-    ctrl_tx: &Arc<Mutex<TcpStream>>,
+    ctrl_tx: &CtrlTx,
+    pending: &Arc<Mutex<PendingCtrl>>,
 ) {
     if window_s <= 0.0 {
         return;
     }
     let mut samples: Vec<Json> = Vec::new();
     {
-        let mut o = out.lock().unwrap();
+        let mut o = lock_recover(out);
         for ((coflow, dst), e) in o.iter_mut() {
             // Only a window the current rate spanned entirely may be
             // compared against the allocation; otherwise the sample is a
@@ -519,10 +913,16 @@ fn flush_telemetry(
     }
     let msg = Json::from_pairs([
         ("op", Json::from("telemetry_report")),
-        ("samples", Json::Arr(samples)),
+        ("samples", Json::Arr(samples.clone())),
     ]);
-    let mut tx = ctrl_tx.lock().unwrap();
-    let _ = protocol::write_msg(&mut tx, &msg);
+    if !ctrl_send(ctrl_tx, &msg) && !samples.is_empty() {
+        let mut p = lock_recover(pending);
+        p.samples.extend(samples);
+        if p.samples.len() > MAX_BUFFERED_SAMPLES {
+            let excess = p.samples.len() - MAX_BUFFERED_SAMPLES;
+            p.samples.drain(..excess);
+        }
+    }
 }
 
 /// Controller-requested active probe: burst a few probe chunks (reserved
@@ -535,7 +935,7 @@ fn handle_probe(
     src_dc: usize,
     msg: &Json,
     conns: &Arc<Mutex<HashMap<usize, Vec<TcpStream>>>>,
-    ctrl_tx: &Arc<Mutex<TcpStream>>,
+    ctrl_tx: &CtrlTx,
 ) {
     let (Some(dst), Some(path)) = (
         msg.get("dst").and_then(|x| x.as_u64()),
@@ -548,7 +948,7 @@ fn handle_probe(
         msg.get("chunks").and_then(|x| x.as_u64()).unwrap_or(PROBE_CHUNKS as u64).clamp(1, 64);
     let payload = vec![0u8; CHUNK_BYTES];
     let gbps = {
-        let mut c = conns.lock().unwrap();
+        let mut c = lock_recover(conns);
         let Some(stream) =
             c.get_mut(&(dst as usize)).and_then(|v| v.get_mut(path as usize))
         else {
@@ -586,8 +986,8 @@ fn handle_probe(
         ("op", Json::from("telemetry_report")),
         ("samples", Json::Arr(vec![sample.to_json()])),
     ]);
-    let mut tx = ctrl_tx.lock().unwrap();
-    let _ = protocol::write_msg(&mut tx, &msg);
+    // Probe readings are transient; if disconnected they are simply lost.
+    ctrl_send(ctrl_tx, &msg);
 }
 
 /// Receive loop for one persistent data connection.
@@ -597,7 +997,8 @@ fn recv_loop(
     stop: Arc<AtomicBool>,
     incoming: Arc<Mutex<HashMap<(u64, usize), Incoming>>>,
     rx_counters: Arc<Mutex<HashMap<(u64, usize), Arc<AtomicU64>>>>,
-    ctrl_tx: Arc<Mutex<TcpStream>>,
+    ctrl_tx: CtrlTx,
+    pending: Arc<Mutex<PendingCtrl>>,
 ) {
     let mut hdr_buf = [0u8; DataHeader::SIZE];
     let mut payload = vec![0u8; CHUNK_BYTES];
@@ -627,10 +1028,10 @@ fn recv_loop(
         let key = (hdr.coflow, hdr.src_dc as usize);
         let mut done = false;
         {
-            let mut inc = incoming.lock().unwrap();
+            let mut inc = lock_recover(&incoming);
             let entry = inc.entry(key).or_insert_with(|| {
                 let counter = Arc::new(AtomicU64::new(0));
-                rx_counters.lock().unwrap().insert(key, counter.clone());
+                lock_recover(&rx_counters).insert(key, counter.clone());
                 Incoming {
                     expected: u64::MAX,
                     frontier: 0,
@@ -665,8 +1066,177 @@ fn recv_loop(
                 ("src", (hdr.src_dc as u64).into()),
                 ("dst", my_dc.into()),
             ]);
-            let mut tx = ctrl_tx.lock().unwrap();
-            let _ = protocol::write_msg(&mut tx, &msg);
+            // A completion during a controller outage must not vanish: it
+            // is buffered and replayed right after the resync report.
+            if !ctrl_send(&ctrl_tx, &msg) {
+                lock_recover(&pending).msgs.push(msg);
+            }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_outgoing(remaining: u64, alloc: Vec<f64>) -> Outgoing {
+        let k = alloc.len();
+        Outgoing {
+            coflow: 1,
+            remaining,
+            offset: 0,
+            budget: vec![0.0; k],
+            rate: alloc.clone(),
+            alloc,
+            window: vec![0.0; k],
+            rate_windows: 0,
+        }
+    }
+
+    /// Regression (satellite of the crash-recovery issue): a helper thread
+    /// panicking while holding `out` used to poison the lock and kill every
+    /// subsequent accessor — exactly when degraded mode should engage. The
+    /// drain path must survive and the recovery must be counted.
+    #[test]
+    fn poisoned_lock_is_recovered_not_fatal() {
+        let out: Arc<Mutex<HashMap<(u64, usize), Outgoing>>> = Arc::default();
+        out.lock().unwrap().insert((1, 1), mk_outgoing(1 << 20, vec![1.0]));
+        let before = lock_poison_recoveries();
+        let poisoner = out.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = poisoner.lock().unwrap();
+            panic!("simulated sender-thread panic while holding the out lock");
+        })
+        .join();
+        assert!(out.lock().is_err(), "lock should be poisoned by the panicked thread");
+        // The drain loop's tick path must keep working on the same data.
+        let conns: Arc<Mutex<HashMap<usize, Vec<TcpStream>>>> = Arc::default();
+        let payload = vec![0u8; CHUNK_BYTES];
+        send_tick(0, 0.004, &payload, &out, &conns);
+        assert_eq!(lock_recover(&out).len(), 1, "transfer state survived the poison");
+        assert!(
+            lock_poison_recoveries() > before,
+            "recovery must be observable via the counter"
+        );
+    }
+
+    /// Degraded fair-share stays strictly within the last-known allocation
+    /// envelope: per path, the sum of enforced rates across transfers to a
+    /// destination is DEGRADED_SCALE × the summed controller allocation.
+    #[test]
+    fn degraded_rates_are_fair_share_within_envelope() {
+        let out: Arc<Mutex<HashMap<(u64, usize), Outgoing>>> = Arc::default();
+        {
+            let mut o = out.lock().unwrap();
+            o.insert((1, 2), mk_outgoing(1 << 20, vec![4.0, 2.0]));
+            o.insert((7, 2), mk_outgoing(1 << 20, vec![2.0, 0.0]));
+            // Finished transfer: must not receive degraded rate.
+            o.insert((9, 2), mk_outgoing(0, vec![8.0, 8.0]));
+            // Other destination, never rated: stays at zero.
+            o.insert((1, 3), mk_outgoing(1 << 20, vec![0.0]));
+        }
+        enter_degraded(0, &out);
+        let o = out.lock().unwrap();
+        // Envelope to dc 2 is [6, 2] over 2 active transfers: each gets
+        // [6/2, 2/2] × 0.5 = [1.5, 0.5].
+        for key in [(1u64, 2usize), (7, 2)] {
+            assert_eq!(o[&key].rate, vec![1.5, 0.5], "fair share for {key:?}");
+            // Envelope itself is untouched (needed for resync reporting).
+            assert!(o[&key].alloc.iter().sum::<f64>() > 0.0);
+        }
+        let total: f64 = [(1u64, 2usize), (7, 2)].iter().map(|k| o[k].rate[0]).sum();
+        assert!(total <= 6.0 * DEGRADED_SCALE + 1e-12, "within envelope: {total}");
+        assert_eq!(o[&(9, 2)].rate, vec![8.0, 8.0], "finished transfer untouched");
+        assert_eq!(o[&(1, 3)].rate, vec![0.0], "unrated transfer stays silent");
+    }
+
+    /// Satellite: the data-connection pool must shrink when a rate push
+    /// shows the path count went down (it previously only ever grew).
+    #[test]
+    fn rate_push_trims_oversized_connection_pool() {
+        // Four real loopback connections to a scratch listener.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let conns: Arc<Mutex<HashMap<usize, Vec<TcpStream>>>> = Arc::default();
+        {
+            let mut c = conns.lock().unwrap();
+            let pool: Vec<TcpStream> =
+                (0..4).map(|_| TcpStream::connect(addr).unwrap()).collect();
+            c.insert(2, pool);
+            c.insert(5, vec![TcpStream::connect(addr).unwrap()]);
+        }
+        let out: Arc<Mutex<HashMap<(u64, usize), Outgoing>>> = Arc::default();
+        out.lock().unwrap().insert((1, 2), mk_outgoing(1 << 20, vec![0.0; 4]));
+        // Rate push sized for 2 paths: the pool to dc 2 must trim to 2.
+        let entry = Json::from_pairs([
+            ("coflow", Json::from(1u64)),
+            ("dst", 2usize.into()),
+            ("rates", Json::Arr(vec![Json::Num(1.0), Json::Num(1.0)])),
+        ]);
+        apply_rate_entry(&entry, &out);
+        trim_conns(&out, &conns);
+        let c = conns.lock().unwrap();
+        assert_eq!(c[&2].len(), 2, "pool trimmed to the pushed path count");
+        assert_eq!(c[&5].len(), 1, "unrated destination untouched");
+    }
+
+    /// The resync report covers exactly the live transfers, sorted, with
+    /// the allocation envelope (not the degraded enforcement rate).
+    #[test]
+    fn resync_report_carries_live_transfers_and_buffered_state() {
+        let out: Arc<Mutex<HashMap<(u64, usize), Outgoing>>> = Arc::default();
+        {
+            let mut o = out.lock().unwrap();
+            let mut t = mk_outgoing(500_000, vec![3.0, 1.0]);
+            t.offset = 250_000;
+            t.rate = vec![0.75, 0.25]; // degraded enforcement
+            o.insert((4, 1), t);
+            o.insert((2, 3), mk_outgoing(1_000_000, vec![2.0]));
+            o.insert((9, 0), mk_outgoing(0, vec![5.0])); // finished: excluded
+        }
+        let pending: Arc<Mutex<PendingCtrl>> = Arc::default();
+        pending.lock().unwrap().samples.push(Json::obj());
+        // Disconnected ctrl_tx: send fails, completions must be retained.
+        let ctrl_tx: CtrlTx = Arc::new(Mutex::new(None));
+        pending.lock().unwrap().msgs.push(Json::obj());
+        send_resync(0, &out, &pending, &ctrl_tx);
+        assert_eq!(
+            pending.lock().unwrap().msgs.len(),
+            1,
+            "undelivered completions survive a failed resync"
+        );
+        // Now capture what a live socket would have received.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let reader = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut msgs = Vec::new();
+            while let Ok(Some(m)) = protocol::read_msg(&mut s) {
+                msgs.push(m);
+            }
+            msgs
+        });
+        let sock = TcpStream::connect(addr).unwrap();
+        *ctrl_tx.lock().unwrap() = Some(sock);
+        send_resync(0, &out, &pending, &ctrl_tx);
+        *ctrl_tx.lock().unwrap() = None; // closes the write half
+        let msgs = reader.join().unwrap();
+        assert!(!msgs.is_empty());
+        let resync = &msgs[0];
+        assert_eq!(resync.get("op").and_then(|o| o.as_str()), Some("resync_state"));
+        let entries: Vec<ResyncEntry> = resync
+            .get("entries")
+            .and_then(|e| e.as_arr())
+            .unwrap()
+            .iter()
+            .filter_map(ResyncEntry::from_json)
+            .collect();
+        assert_eq!(entries.len(), 2, "finished transfer excluded");
+        assert_eq!((entries[0].coflow, entries[0].dst_dc), (2, 3), "sorted by (coflow, dst)");
+        assert_eq!((entries[1].coflow, entries[1].dst_dc), (4, 1));
+        assert_eq!(entries[1].achieved_bytes, 250_000);
+        assert_eq!(entries[1].remaining_bytes, 500_000);
+        assert_eq!(entries[1].rates, vec![3.0, 1.0], "envelope, not degraded rate");
+        assert_eq!(msgs.len(), 2, "buffered completion replayed after the report");
     }
 }

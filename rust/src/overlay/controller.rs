@@ -9,7 +9,7 @@
 //! module owns only the testbed concerns: TCP sessions, agent rate pushes,
 //! SDN rule emulation, and wall-clock bookkeeping.
 
-use super::protocol::{self, CoflowStatus, FlowSpec, TelemetrySample, PROBE_COFLOW};
+use super::protocol::{self, CoflowStatus, FlowSpec, ResyncEntry, TelemetrySample, PROBE_COFLOW};
 use super::rules::RuleTable;
 use crate::coflow::{Coflow, CoflowId, Flow};
 use crate::engine::{EngineConfig, RoundEngine, ShardedEngine, WanReaction};
@@ -87,6 +87,11 @@ impl TestbedConfig {
 /// and the agent flagged for a full-table resync.
 const AGENT_TX_CAP: usize = 1024;
 
+/// Idle-channel heartbeat period. Agents treat control-channel silence
+/// past their deadline (~4× this) as controller death and enter degraded
+/// mode, so the controller must emit *something* even when no rounds run.
+const HEARTBEAT_INTERVAL: Duration = Duration::from_millis(500);
+
 struct TxQueue {
     buf: VecDeque<Json>,
     /// True while the writer thread holds a popped frame it has not yet
@@ -114,6 +119,12 @@ struct TxShared {
 /// for a full sync on next contact instead of being silently swallowed.
 struct AgentTx {
     shared: Arc<TxShared>,
+    /// Writer thread handle plus a socket clone, kept so [`AgentTx::retire`]
+    /// can break a blocked write (socket shutdown) and then join the
+    /// writer — guaranteeing no frame from a superseded connection is
+    /// still in flight when its successor's baseline goes out.
+    writer: Option<std::thread::JoinHandle<()>>,
+    stream: Option<TcpStream>,
 }
 
 impl AgentTx {
@@ -129,13 +140,37 @@ impl AgentTx {
                 needs_full_sync: AtomicBool::new(false),
                 cap,
             }),
+            writer: None,
+            stream: None,
         }
     }
 
     /// Start the drain thread over the agent's (cloned) control stream.
-    fn start_writer(&self, stream: TcpStream, dc: usize, write_errors: Arc<AtomicUsize>) {
+    fn start_writer(&mut self, stream: TcpStream, dc: usize, write_errors: Arc<AtomicUsize>) {
+        self.stream = stream.try_clone().ok();
         let shared = self.shared.clone();
-        std::thread::spawn(move || writer_loop(stream, dc, shared, write_errors));
+        self.writer =
+            Some(std::thread::spawn(move || writer_loop(stream, dc, shared, write_errors)));
+    }
+
+    /// Retire a superseded connection's queue atomically: close it, drop
+    /// every pending frame (all stale relative to the successor's full
+    /// sync), shut the socket down to break a writer blocked mid-write,
+    /// and join the writer. After this returns, nothing from this
+    /// connection can interleave with frames on the new socket.
+    fn retire(&mut self) {
+        {
+            let mut q = self.shared.q.lock().unwrap();
+            q.buf.clear();
+            q.closed = true;
+        }
+        self.shared.cv.notify_all();
+        if let Some(s) = self.stream.take() {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+        if let Some(h) = self.writer.take() {
+            let _ = h.join();
+        }
     }
 
     /// Enqueue a frame; returns false when the channel is closed or the
@@ -235,6 +270,10 @@ struct AgentConn {
     /// reconnects and sequence gaps fall back to a full-table sync.
     seq: u64,
     sent: HashMap<(CoflowId, usize), Vec<f64>>,
+    /// Connection generation: bumped on every (re)`hello` for the dc.
+    /// Readers and rate pushes check it against [`State::agent_gen`] so a
+    /// superseded connection can neither mutate state nor receive frames.
+    gen: u64,
 }
 
 /// Control-plane traffic counters for the delta protocol.
@@ -280,6 +319,9 @@ struct State {
     engine: ShardedEngine,
     k: usize,
     agents: HashMap<usize, AgentConn>,
+    /// Latest live connection generation per dc (see [`AgentConn::gen`]).
+    agent_gen: HashMap<usize, u64>,
+    next_gen: u64,
     coflows: HashMap<CoflowId, CoMeta>,
     next_id: CoflowId,
     rules: RuleTable,
@@ -359,6 +401,8 @@ impl Controller {
             engine,
             k,
             agents: HashMap::new(),
+            agent_gen: HashMap::new(),
+            next_gen: 1,
             coflows: HashMap::new(),
             next_id: 1,
             rules,
@@ -393,18 +437,46 @@ impl Controller {
                 }
             }));
         }
+        // Heartbeat: keep every agent's control channel audibly alive even
+        // when no scheduling rounds run, so agents can tell "idle
+        // controller" from "dead controller" (their degraded-mode watchdog
+        // fires on silence, not on socket errors alone).
+        {
+            let stop = stop.clone();
+            let state = state.clone();
+            threads.push(std::thread::spawn(move || {
+                let hb = Json::from_pairs([("op", Json::from("hb"))]);
+                let mut last = Instant::now();
+                while !stop.load(Ordering::Relaxed) {
+                    std::thread::sleep(Duration::from_millis(50));
+                    if last.elapsed() < HEARTBEAT_INTERVAL {
+                        continue;
+                    }
+                    last = Instant::now();
+                    let mut st = state.lock().unwrap();
+                    for a in st.agents.values_mut() {
+                        a.tx.send(hb.clone());
+                    }
+                }
+            }));
+        }
         Ok(ControllerHandle { addr, stop, threads, state })
     }
 }
 
 impl ControllerHandle {
-    /// Block until all `n` agents registered and the overlay is wired.
+    /// Block until `n` agents registered and the overlay is wired. Peer
+    /// wiring only ever happens once *every* datacenter has an agent, so
+    /// it is required only when the caller waits for the full fleet —
+    /// partial testbeds (fake-agent protocol tests) would otherwise spin
+    /// the whole timeout on a condition that cannot become true.
     pub fn wait_ready(&self, n: usize, timeout: Duration) -> bool {
         let t0 = Instant::now();
         while t0.elapsed() < timeout {
             {
                 let st = self.state.lock().unwrap();
-                if st.agents.len() >= n && st.peers_sent {
+                let wired = st.peers_sent || n < st.engine.wan().num_nodes();
+                if st.agents.len() >= n && wired {
                     return true;
                 }
             }
@@ -472,6 +544,16 @@ impl ControllerHandle {
         st.telemetry
     }
 
+    /// Total remaining volume (Gbit) the engine currently holds for a
+    /// coflow — `None` once it finished (or was never admitted). The chaos
+    /// tests use this to prove crash reconstruction preserved progress:
+    /// after a kill/restart, remaining must reflect the bytes the agents
+    /// actually achieved, not the original volume.
+    pub fn coflow_remaining_gbit(&self, id: CoflowId) -> Option<f64> {
+        let st = self.state.lock().unwrap();
+        st.engine.get(id).map(|c| c.total_remaining())
+    }
+
     /// The engine's believed capacity of the directed edge `(u, v)` — what
     /// the scheduler currently plans against (equals truth under the
     /// oracle).
@@ -513,6 +595,7 @@ fn serve_conn(mut s: TcpStream, state: Arc<Mutex<State>>, stop: Arc<AtomicBool>)
                     return;
                 };
                 let dc = dc as usize;
+                let gen;
                 {
                     let mut st = state.lock().unwrap();
                     // A dc outside the WAN would corrupt the agent table
@@ -525,8 +608,19 @@ fn serve_conn(mut s: TcpStream, state: Arc<Mutex<State>>, stop: Arc<AtomicBool>)
                         Ok(c) => c,
                         Err(_) => return,
                     };
-                    let tx = AgentTx::new(AGENT_TX_CAP);
+                    let mut tx = AgentTx::new(AGENT_TX_CAP);
                     tx.start_writer(ctrl, dc, st.write_errors.clone());
+                    // Atomically retire any predecessor connection before
+                    // the new baseline goes out: close + drain-drop its
+                    // queue, break a blocked writer, join it. Without
+                    // this, frames queued for the old socket could
+                    // interleave with (or outrun) the new `rates_full`.
+                    if let Some(mut old) = st.agents.remove(&dc) {
+                        old.tx.retire();
+                    }
+                    gen = st.next_gen;
+                    st.next_gen += 1;
+                    st.agent_gen.insert(dc, gen);
                     st.agents.insert(
                         dc,
                         AgentConn {
@@ -534,18 +628,20 @@ fn serve_conn(mut s: TcpStream, state: Arc<Mutex<State>>, stop: Arc<AtomicBool>)
                             data_addr: addr.to_string(),
                             seq: 0,
                             sent: HashMap::new(),
+                            gen,
                         },
                     );
+                    // Fresh connection, empty delta baseline: the very
+                    // first frame on the new socket is a full-table sync
+                    // so a (re)connected agent converges immediately.
+                    full_sync_agent(&mut st, dc);
                     if st.agents.len() == st.engine.wan().num_nodes() {
                         resend_peers(&mut st);
                         st.peers_sent = true;
                     }
-                    // Fresh connection, empty delta baseline: full-table
-                    // sync so a (re)connected agent converges immediately.
-                    full_sync_agent(&mut st, dc);
                 }
                 // Stay on this connection reading agent events.
-                agent_reader(s, dc, state, stop);
+                agent_reader(s, dc, gen, state, stop);
                 return;
             }
             "submit" => {
@@ -653,9 +749,18 @@ fn resend_peers(st: &mut State) {
     }
 }
 
-/// Reader for agent events (group completions, full-sync requests).
-/// Malformed messages are logged and dropped — never unwrapped.
-fn agent_reader(mut s: TcpStream, dc: usize, state: Arc<Mutex<State>>, stop: Arc<AtomicBool>) {
+/// Reader for agent events (group completions, full-sync requests,
+/// resync-state reports). Malformed messages are logged and dropped —
+/// never unwrapped. Each message is processed under the state lock only
+/// after confirming this connection is still the dc's live generation; a
+/// superseded reader exits instead of mutating state a successor owns.
+fn agent_reader(
+    mut s: TcpStream,
+    dc: usize,
+    my_gen: u64,
+    state: Arc<Mutex<State>>,
+    stop: Arc<AtomicBool>,
+) {
     s.set_read_timeout(Some(Duration::from_millis(100))).ok();
     loop {
         if stop.load(Ordering::Relaxed) {
@@ -665,6 +770,11 @@ fn agent_reader(mut s: TcpStream, dc: usize, state: Arc<Mutex<State>>, stop: Arc
             Ok(Some(m)) => m,
             _ => return,
         };
+        let mut st = state.lock().unwrap();
+        if st.agent_gen.get(&dc) != Some(&my_gen) {
+            log::info!("controller: superseded connection reader for dc {dc} exiting");
+            return;
+        }
         match msg.get("op").and_then(|o| o.as_str()) {
             Some("group_done") => {
                 let (Some(coflow), Some(src), Some(dst)) = (
@@ -675,7 +785,6 @@ fn agent_reader(mut s: TcpStream, dc: usize, state: Arc<Mutex<State>>, stop: Arc
                     log::warn!("controller: malformed group_done from dc {dc}, dropped");
                     continue;
                 };
-                let mut st = state.lock().unwrap();
                 let coflow_finished =
                     st.engine.complete_group(coflow, src as usize, dst as usize);
                 if coflow_finished {
@@ -695,16 +804,129 @@ fn agent_reader(mut s: TcpStream, dc: usize, state: Arc<Mutex<State>>, stop: Arc
             }
             // The agent detected a sequence gap (or reconnected behind a
             // NAT rebinding): resynchronize its full rate table.
-            Some("sync_request") => {
-                let mut st = state.lock().unwrap();
-                full_sync_agent(&mut st, dc);
-            }
-            Some("telemetry_report") => {
-                let mut st = state.lock().unwrap();
-                handle_telemetry_report(&mut st, dc, &msg);
-            }
+            Some("sync_request") => full_sync_agent(&mut st, dc),
+            Some("telemetry_report") => handle_telemetry_report(&mut st, dc, &msg),
+            // The agent reconnected with live transfer state — possibly
+            // to a restarted controller that has to rebuild its world.
+            Some("resync_state") => handle_resync_state(&mut st, dc, &msg),
             _ => {}
         }
+    }
+}
+
+/// Rebuild scheduling state from one agent's `resync_state` report. For
+/// every live (coflow, dst) transfer the agent holds, either reconcile the
+/// engine's remaining-volume estimate to the agent's byte counters (the
+/// sender is ground truth) or — after a controller crash — re-create the
+/// coflow entirely from the report, with volume = achieved + remaining so
+/// progress is preserved and nothing restarts from zero. Entries are
+/// processed sorted by (coflow, dst), and shard ownership is rebuilt in
+/// coflow-id order afterwards (ids are assigned monotonically at
+/// submission, so id order *is* arrival order): the post-recovery sharding
+/// is a function of the reconstructed coflow set alone, not of the order
+/// in which agents happened to reconnect. Buffered telemetry samples are
+/// fused afterwards so the recovered controller also inherits the capacity
+/// evidence gathered during its outage.
+///
+/// Known limitation (documented in DESIGN.md): deadlines and in-flight
+/// rate deltas at crash time are not replayed — allocations are re-derived
+/// by a fresh round over the reconstructed state, and a recovered coflow's
+/// deadline is lost (it is scheduled as a regular coflow).
+fn handle_resync_state(st: &mut State, dc: usize, msg: &Json) {
+    let n = st.engine.wan().num_nodes();
+    let now_s = st.now_s();
+    let mut entries: Vec<ResyncEntry> = msg
+        .get("entries")
+        .and_then(|e| e.as_arr())
+        .map(|arr| arr.iter().filter_map(ResyncEntry::from_json).collect())
+        .unwrap_or_default();
+    entries.sort_by_key(|e| (e.coflow, e.dst_dc));
+    let mut touched: Vec<CoflowId> = Vec::new();
+    for e in &entries {
+        if e.dst_dc >= n || e.dst_dc == dc || e.remaining_bytes == 0 {
+            continue;
+        }
+        let rem_gbit = bytes_to_gbit(e.remaining_bytes).max(ESTIMATE_FLOOR_GBIT);
+        let vol_gbit = bytes_to_gbit(e.achieved_bytes + e.remaining_bytes).max(rem_gbit);
+        st.next_id = st.next_id.max(e.coflow + 1);
+        touched.push(e.coflow);
+        if st.engine.get(e.coflow).is_some() {
+            let co = st.engine.get_mut(e.coflow).unwrap();
+            if let Some(gi) =
+                co.groups.iter().position(|g| g.src == dc && g.dst == e.dst_dc)
+            {
+                co.groups[gi].volume = co.groups[gi].volume.max(vol_gbit);
+                co.remaining[gi] = rem_gbit;
+            } else {
+                co.groups.push(crate::coflow::FlowGroup {
+                    src: dc,
+                    dst: e.dst_dc,
+                    volume: vol_gbit,
+                    num_flows: 1,
+                });
+                co.remaining.push(rem_gbit);
+            }
+            st.engine.mark_dirty(e.coflow);
+        } else {
+            let spec = Coflow::new(
+                e.coflow,
+                vec![Flow { id: 0, src_dc: dc, dst_dc: e.dst_dc, volume: vol_gbit }],
+            );
+            let mut cs = CoflowState::from_coflow(&spec);
+            cs.arrival = now_s;
+            cs.admitted = true;
+            cs.remaining[0] = rem_gbit;
+            st.engine.insert(cs);
+        }
+        // Testbed metadata: re-created when the crash lost it. The
+        // deadline is gone (known limitation); total volume is recomputed
+        // from the engine below once every group is in.
+        st.coflows.entry(e.coflow).or_insert_with(|| CoMeta {
+            submitted: Instant::now(),
+            finished: None,
+            deadline_abs: None,
+            admitted: true,
+            total_bytes: 0,
+        });
+    }
+    touched.sort_unstable();
+    touched.dedup();
+    for &id in &touched {
+        let vol_bytes = st
+            .engine
+            .get(id)
+            .map(|c| {
+                c.groups.iter().map(|g| (g.volume * super::BYTES_PER_GBPS) as u64).sum::<u64>()
+            })
+            .unwrap_or(0);
+        if let Some(meta) = st.coflows.get_mut(&id) {
+            meta.finished = None;
+            meta.total_bytes = meta.total_bytes.max(vol_bytes);
+        }
+    }
+    let changed = !touched.is_empty();
+    if changed {
+        // Deterministic shard re-formation: re-admit in arrival (= id)
+        // order regardless of which agent resynced first.
+        st.engine.readmit_in_id_order();
+    }
+    // Telemetry the agent buffered while we were gone: fuse it, then let
+    // the belief refresh and/or the reconstruction trigger one round.
+    let mut need_round = changed;
+    if !st.engine.telemetry().is_oracle() {
+        if let Some(samples) = msg.get("samples").and_then(|s| s.as_arr()) {
+            if !samples.is_empty() {
+                fuse_telemetry_samples(st, dc, samples);
+            }
+        }
+        match st.engine.refresh_beliefs() {
+            Some(WanReaction::Structural) | Some(WanReaction::Reoptimize) => need_round = true,
+            Some(WanReaction::Clamped) if !need_round => push_rates(st),
+            _ => {}
+        }
+    }
+    if need_round {
+        reallocate(st, RoundTrigger::CoflowArrival);
     }
 }
 
@@ -718,8 +940,26 @@ fn handle_telemetry_report(st: &mut State, dc: usize, msg: &Json) {
     if st.engine.telemetry().is_oracle() {
         return;
     }
-    let now = st.now_s();
     if let Some(samples) = msg.get("samples").and_then(|s| s.as_arr()) {
+        fuse_telemetry_samples(st, dc, samples);
+    }
+    let now = st.now_s();
+    request_probes(st, now);
+    match st.engine.refresh_beliefs() {
+        Some(WanReaction::Structural) | Some(WanReaction::Reoptimize) => {
+            reallocate(st, RoundTrigger::WanChange);
+        }
+        Some(WanReaction::Clamped) => push_rates(st),
+        None => {}
+    }
+}
+
+/// Fuse one batch of agent samples into the capacity estimator. Shared by
+/// live `telemetry_report` handling and crash-recovery `resync_state`
+/// replay (agents buffer samples while the controller is down).
+fn fuse_telemetry_samples(st: &mut State, dc: usize, samples: &[Json]) {
+    let now = st.now_s();
+    {
         // Aggregate the report per edge before fusing: one agent commonly
         // drives several transfers over the same out-edge, and the edge's
         // capacity evidence is their *sum* — fusing each transfer's share
@@ -786,14 +1026,6 @@ fn handle_telemetry_report(st: &mut State, dc: usize, msg: &Json) {
                 st.engine.probe_edge(e, m.min(ceiling), now);
             }
         }
-    }
-    request_probes(st, now);
-    match st.engine.refresh_beliefs() {
-        Some(WanReaction::Structural) | Some(WanReaction::Reoptimize) => {
-            reallocate(st, RoundTrigger::WanChange);
-        }
-        Some(WanReaction::Clamped) => push_rates(st),
-        None => {}
     }
 }
 
@@ -1062,9 +1294,9 @@ fn reallocate(st: &mut State, trigger: RoundTrigger) {
     st.drain_to_now();
     let now_s = st.now_s();
     if st.engine.num_shards() > 1 {
-        let State { engine, agents, delta, .. } = st;
+        let State { engine, agents, agent_gen, delta, .. } = st;
         engine.round_with(now_s, trigger, |_, shard| {
-            push_shard_rates(agents, delta, shard);
+            push_shard_rates(agents, agent_gen, delta, shard);
         });
     } else {
         st.engine.round(now_s, trigger);
@@ -1092,6 +1324,7 @@ fn desired_rate_tables(st: &State) -> HashMap<usize, HashMap<(CoflowId, usize), 
 /// vanished or merely lives on another shard now.
 fn push_shard_rates(
     agents: &mut HashMap<usize, AgentConn>,
+    agent_gen: &HashMap<usize, u64>,
     delta: &mut DeltaStats,
     shard: &RoundEngine,
 ) {
@@ -1105,6 +1338,12 @@ fn push_shard_rates(
     }
     for (dc, want) in desired {
         let Some(conn) = agents.get_mut(&dc) else { continue };
+        // Never address a superseded connection: a conn whose generation
+        // no longer matches the dc's live generation is being replaced
+        // (its successor's hello holds the baseline).
+        if agent_gen.get(&dc) != Some(&conn.gen) {
+            continue;
+        }
         let mut changed: Vec<(CoflowId, usize)> = want
             .iter()
             .filter(|(k, v)| conn.sent.get(*k) != Some(*v))
@@ -1149,8 +1388,11 @@ fn rate_entry_json(key: &(CoflowId, usize), rates: &[f64]) -> Json {
 /// of O(all flows).
 fn push_rates(st: &mut State) {
     let mut desired = desired_rate_tables(st);
-    let State { agents, delta, .. } = st;
+    let State { agents, agent_gen, delta, .. } = st;
     for (&dc, conn) in agents.iter_mut() {
+        if agent_gen.get(&dc) != Some(&conn.gen) {
+            continue;
+        }
         // Take (not clone) the agent's table; when nothing changed we drop
         // it — `conn.sent` is provably identical in that case.
         let want = desired.remove(&dc).unwrap_or_default();

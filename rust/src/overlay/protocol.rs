@@ -145,6 +145,51 @@ impl TelemetrySample {
     }
 }
 
+/// One sender-side transfer in an agent's `resync_state` report: what the
+/// agent knows about a live outgoing FlowGroup when it reconnects to a
+/// (possibly restarted) controller. `achieved_bytes`/`remaining_bytes` let
+/// the controller rebuild remaining-volume state without restarting the
+/// transfer from zero; `rates` is the last controller-assigned per-path
+/// allocation (the envelope the agent's degraded mode stayed within).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResyncEntry {
+    pub coflow: u64,
+    pub dst_dc: usize,
+    /// Bytes still to send for this (coflow, dst) FlowGroup.
+    pub remaining_bytes: u64,
+    /// Bytes already written to the data connections (the send offset).
+    pub achieved_bytes: u64,
+    /// Last controller-assigned per-path rates, in emulated Gbps.
+    pub rates: Vec<f64>,
+}
+
+impl ResyncEntry {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs([
+            ("coflow", Json::from(self.coflow)),
+            ("dst", self.dst_dc.into()),
+            ("remaining", self.remaining_bytes.into()),
+            ("achieved", self.achieved_bytes.into()),
+            ("rates", Json::Arr(self.rates.iter().map(|&r| Json::Num(r)).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<ResyncEntry> {
+        Some(ResyncEntry {
+            coflow: j.get("coflow")?.as_u64()?,
+            dst_dc: j.get("dst")?.as_u64()? as usize,
+            remaining_bytes: j.get("remaining")?.as_u64()?,
+            achieved_bytes: j.get("achieved")?.as_u64()?,
+            rates: j
+                .get("rates")?
+                .as_arr()?
+                .iter()
+                .map(|r| r.as_f64().unwrap_or(0.0))
+                .collect(),
+        })
+    }
+}
+
 /// Write one length-prefixed JSON message. Oversized bodies (anything a
 /// reader would reject, including > 4 GiB bodies whose length prefix would
 /// wrap) fail *before* any byte hits the wire, keeping the frame stream
@@ -319,6 +364,19 @@ mod tests {
         };
         assert_eq!(TelemetrySample::from_json(&p.to_json()), Some(p));
         assert_eq!(TelemetrySample::from_json(&Json::obj()), None);
+    }
+
+    #[test]
+    fn resync_entry_roundtrip() {
+        let e = ResyncEntry {
+            coflow: 11,
+            dst_dc: 3,
+            remaining_bytes: 1_000_000,
+            achieved_bytes: 250_000,
+            rates: vec![2.5, 0.0, 1.0],
+        };
+        assert_eq!(ResyncEntry::from_json(&e.to_json()), Some(e));
+        assert_eq!(ResyncEntry::from_json(&Json::obj()), None);
     }
 
     #[test]

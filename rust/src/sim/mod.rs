@@ -56,6 +56,44 @@ pub struct SimConfig {
     /// behavior; `> 1` splits the active set across engine shards that
     /// round concurrently (allocations stay identical — property-pinned).
     pub shards: usize,
+    /// Controller crash/restart injection (the `controller_chaos` axis).
+    /// `None` (default) is the always-up control plane — bit-identical to
+    /// previous behavior.
+    pub chaos: Option<ChaosConfig>,
+}
+
+/// One controller crash/restart cycle for the simulator: the controller
+/// dies at `kill_t` (no scheduling rounds; agents keep draining their
+/// last-known allocation scaled by `degraded_scale`; submissions defer)
+/// and is back — state recovered per `mode` — at `restart_t`.
+#[derive(Clone, Debug)]
+pub struct ChaosConfig {
+    pub kill_t: f64,
+    pub restart_t: f64,
+    pub mode: RecoveryMode,
+    /// Degraded-mode drain factor in `[0, 1]`: the conservative fair-share
+    /// fallback agents enforce while the controller is unreachable (the
+    /// testbed agents use 0.5 of the last-known envelope).
+    pub degraded_scale: f64,
+}
+
+impl ChaosConfig {
+    pub fn new(kill_t: f64, restart_t: f64, mode: RecoveryMode) -> ChaosConfig {
+        assert!(kill_t.is_finite() && restart_t.is_finite() && kill_t < restart_t);
+        ChaosConfig { kill_t, restart_t, mode, degraded_scale: 0.5 }
+    }
+}
+
+/// What the restarted controller recovers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecoveryMode {
+    /// State reconstructed from agent resync reports: remaining volumes
+    /// survive (no transfer restarts from zero); capacity beliefs and
+    /// solver caches are process state and reset.
+    Resync,
+    /// Strawman baseline with no resync protocol: every unfinished
+    /// transfer restarts from its full volume.
+    FromZero,
 }
 
 impl Default for SimConfig {
@@ -68,6 +106,7 @@ impl Default for SimConfig {
             workers: crate::engine::default_workers(),
             telemetry: TelemetryConfig::default(),
             shards: 1,
+            chaos: None,
         }
     }
 }
@@ -93,6 +132,10 @@ enum EvKind {
     /// effect now, pinned against samples/probes until `until`;
     /// `gbps = None` restores the base-capacity prior at the window end.
     Prior { u: usize, v: usize, gbps: Option<f64>, until: f64 },
+    /// Controller dies (chaos axis): rounds stop, drains degrade.
+    ChaosKill,
+    /// Controller restarts and recovers per [`ChaosConfig::mode`].
+    ChaosRestart,
 }
 
 #[derive(Clone, Debug)]
@@ -158,6 +201,13 @@ pub struct Simulation {
     next_coflow_id: CoflowId,
     report: Report,
     record_idx: HashMap<CoflowId, usize>,
+    /// Controller-chaos state: true between `ChaosKill` and
+    /// `ChaosRestart`. No rounds run, submissions defer, telemetry is
+    /// lost, and agents drain degraded-scaled last-known allocations.
+    down: bool,
+    /// The next round is the restarted controller's reconstruction round;
+    /// its wall-clock cost books as [`Report::recovery_round_s`].
+    pending_recovery: bool,
 }
 
 impl Simulation {
@@ -192,10 +242,26 @@ impl Simulation {
             next_coflow_id: 1,
             report: Report { policy: name, ..Default::default() },
             record_idx: HashMap::new(),
+            down: false,
+            pending_recovery: false,
         };
         if sim.truth.is_some() {
             let t = sim.cfg.telemetry.sample_interval_s.max(1e-3);
             sim.push_event(t, EvKind::Telemetry);
+        }
+        if let Some(chaos) = sim.cfg.chaos.clone() {
+            assert!(
+                chaos.kill_t.is_finite()
+                    && chaos.restart_t.is_finite()
+                    && chaos.kill_t < chaos.restart_t,
+                "chaos kill must precede restart"
+            );
+            assert!(
+                (0.0..=1.0).contains(&chaos.degraded_scale),
+                "degraded_scale must be in [0, 1]"
+            );
+            sim.push_event(chaos.kill_t, EvKind::ChaosKill);
+            sim.push_event(chaos.restart_t, EvKind::ChaosRestart);
         }
         sim
     }
@@ -214,7 +280,10 @@ impl Simulation {
         assert!(t.is_finite(), "non-finite event time {t} for {kind:?}");
         match kind {
             EvKind::Wan(_) => self.pending_wan_events += 1,
-            EvKind::Telemetry | EvKind::Prior { .. } => {}
+            EvKind::Telemetry
+            | EvKind::Prior { .. }
+            | EvKind::ChaosKill
+            | EvKind::ChaosRestart => {}
             _ => self.pending_app_events += 1,
         }
         self.seq += 1;
@@ -350,20 +419,33 @@ impl Simulation {
                 let ev = self.events.pop().unwrap();
                 match ev.kind {
                     EvKind::Wan(_) => self.pending_wan_events -= 1,
-                    EvKind::Telemetry | EvKind::Prior { .. } => {}
+                    EvKind::Telemetry
+                    | EvKind::Prior { .. }
+                    | EvKind::ChaosKill
+                    | EvKind::ChaosRestart => {}
                     _ => self.pending_app_events -= 1,
                 }
                 match ev.kind {
                     EvKind::JobArrival(j) => self.on_job_arrival(j),
                     EvKind::CoflowSubmit { job, stage } => {
-                        if self.on_coflow_submit(job, stage) {
+                        if self.down {
+                            // Controller unreachable: the framework's
+                            // submit RPC retries until the restart.
+                            let t = self.cfg.chaos.as_ref().unwrap().restart_t;
+                            self.push_event(t, EvKind::CoflowSubmit { job, stage });
+                        } else if self.on_coflow_submit(job, stage) {
                             needs_round = Some(RoundTrigger::CoflowArrival);
                         }
                     }
                     EvKind::StageDone { job, stage } => self.complete_stage(job, stage),
                     EvKind::Activate(state) => {
-                        self.engine.insert(*state);
-                        needs_round = Some(RoundTrigger::CoflowArrival);
+                        if self.down {
+                            let t = self.cfg.chaos.as_ref().unwrap().restart_t;
+                            self.push_event(t, EvKind::Activate(state));
+                        } else {
+                            self.engine.insert(*state);
+                            needs_round = Some(RoundTrigger::CoflowArrival);
+                        }
                     }
                     EvKind::Wan(wev) => {
                         // ρ-dampened filtering (§3.1.3) and path recompute
@@ -396,8 +478,14 @@ impl Simulation {
                         }
                     }
                     EvKind::Telemetry => {
-                        if let Some(t) = self.telemetry_tick() {
-                            needs_round = Some(t);
+                        // While the controller is down no agent reports
+                        // arrive; the tick is lost, not queued — beliefs
+                        // are re-derived after the restart, not replayed
+                        // (matching the testbed's crash_reset).
+                        if !self.down {
+                            if let Some(t) = self.telemetry_tick() {
+                                needs_round = Some(t);
+                            }
                         }
                         // Reschedule only while the workload is live AND a
                         // tick can still learn or drain something: truth
@@ -422,9 +510,55 @@ impl Simulation {
                             needs_round = Some(t);
                         }
                     }
+                    EvKind::ChaosKill => {
+                        self.down = true;
+                        self.report.chaos_kills += 1;
+                        let mut inflight = 0.0;
+                        self.engine
+                            .visit_allocations(|cs, _| inflight += cs.total_remaining());
+                        self.report.inflight_at_kill_gbit += inflight;
+                    }
+                    EvKind::ChaosRestart => {
+                        let chaos =
+                            self.cfg.chaos.clone().expect("restart without chaos config");
+                        self.report.chaos_downtime_s += chaos.restart_t - chaos.kill_t;
+                        if chaos.mode == RecoveryMode::FromZero {
+                            // Strawman: no resync protocol. The rebuilt
+                            // controller only knows each transfer's
+                            // requested volume, so every unfinished
+                            // transfer restarts from zero.
+                            let mut ids: Vec<CoflowId> = Vec::new();
+                            self.engine.visit_allocations(|cs, _| ids.push(cs.id));
+                            for id in ids {
+                                if let Some(cs) = self.engine.get_mut(id) {
+                                    for gi in 0..cs.groups.len() {
+                                        cs.remaining[gi] = cs.groups[gi].volume;
+                                    }
+                                }
+                                self.engine.mark_dirty(id);
+                            }
+                        }
+                        // What the restarted controller believes is still
+                        // in flight (after any from-zero re-inflation):
+                        // the denominator of the preserved fraction.
+                        let mut inflight = 0.0;
+                        self.engine
+                            .visit_allocations(|cs, _| inflight += cs.total_remaining());
+                        self.report.inflight_at_restart_gbit += inflight;
+                        self.engine.crash_reset(self.now);
+                        self.down = false;
+                        self.pending_recovery = true;
+                        needs_round = Some(RoundTrigger::CoflowArrival);
+                    }
                 }
             }
 
+            if self.down {
+                // No controller, no rounds: completions and WAN changes
+                // during the outage are reacted to by the restarted
+                // controller's reconstruction round.
+                needs_round = None;
+            }
             if let Some(trigger) = needs_round.take() {
                 self.round(trigger);
             }
@@ -450,9 +584,28 @@ impl Simulation {
     fn advance(&mut self, target: f64) {
         let dt = (target - self.now).max(0.0);
         if dt > 0.0 && !self.engine.is_empty() {
-            let throttle = self.truth_throttle();
+            let mut throttle = self.truth_throttle();
+            if self.down {
+                // Controller down: agents keep draining their last-known
+                // allocation, scaled to the conservative degraded-mode
+                // fair share (and still capped by ground truth).
+                let scale = self
+                    .cfg
+                    .chaos
+                    .as_ref()
+                    .map(|c| c.degraded_scale)
+                    .unwrap_or(1.0);
+                let mut factors = throttle.take().unwrap_or_default();
+                self.engine.visit_allocations(|cs, _| {
+                    *factors.entry(cs.id).or_insert(1.0) *= scale;
+                });
+                throttle = Some(factors);
+            }
             let moved = self.engine.drain_with(dt, 0.0, throttle.as_ref());
             self.report.transferred_gbit += moved;
+            if self.down {
+                self.report.drained_degraded_gbit += moved;
+            }
             let cap = self
                 .truth
                 .as_ref()
@@ -746,6 +899,12 @@ impl Simulation {
         let t0 = std::time::Instant::now();
         self.engine.round(self.now, trigger);
         self.report.rounds += 1;
+        if self.pending_recovery {
+            // First round of the restarted controller: reconstruction
+            // from resync'd state back to a full allocation.
+            self.report.recovery_round_s += t0.elapsed().as_secs_f64();
+            self.pending_recovery = false;
+        }
         if count_reaction {
             let dt = t0.elapsed().as_secs_f64();
             self.report.wan_rounds += 1;
@@ -1012,5 +1171,145 @@ mod tests {
         let rep = sim.run_jobs(jobs);
         assert_eq!(rep.unfinished(), 0);
         assert!(rep.gamma_cache_hits > 0, "no Γ-cache hits recorded");
+    }
+
+    /// `chaos: None` is inert: runs are deterministic and every chaos
+    /// metric stays at its zero default (the always-up path emits none).
+    #[test]
+    fn chaos_none_is_inert_and_deterministic() {
+        let run = || {
+            let wan = topologies::fig1a();
+            let mut sim = Simulation::new(wan, terra0(), SimConfig::default());
+            sim.add_job(Job::map_reduce(1, 0.0, 0.0, vec![mk_flow(0, 0, 1, 25.0)]));
+            sim.add_wan_event(1.0, LinkEvent::SetBandwidth(0, 1, 9.0));
+            sim.run()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        assert_eq!(a.rounds, b.rounds);
+        assert_eq!(a.chaos_kills, 0);
+        assert_eq!(a.chaos_downtime_s, 0.0);
+        assert_eq!(a.drained_degraded_gbit, 0.0);
+        assert_eq!(a.recovery_round_s, 0.0);
+        assert_eq!(a.preserved_fraction(), 1.0);
+    }
+
+    /// The headline recovery comparison: resync reconstruction preserves
+    /// every achieved byte across the crash, the from-zero strawman throws
+    /// them away, and CCTs order accordingly
+    /// (always-up ≤ resync < from-zero).
+    #[test]
+    fn resync_preserves_progress_from_zero_does_not() {
+        // 200 Gbit A->B over 20 Gbps: 10 s always-up. Kill at t=2 (40 Gbit
+        // done, 160 in flight), restart at t=4 (20 more Gbit drained at the
+        // 0.5-degraded rate).
+        let run = |chaos: Option<ChaosConfig>| {
+            let wan = topologies::fig1a();
+            let cfg = SimConfig { chaos, ..Default::default() };
+            let mut sim = Simulation::new(wan, terra0(), cfg);
+            sim.add_job(Job::map_reduce(1, 0.0, 0.0, vec![mk_flow(0, 0, 1, 25.0)]));
+            sim.run()
+        };
+        let up = run(None);
+        let resync = run(Some(ChaosConfig::new(2.0, 4.0, RecoveryMode::Resync)));
+        let zero = run(Some(ChaosConfig::new(2.0, 4.0, RecoveryMode::FromZero)));
+        assert_eq!(up.unfinished(), 0);
+        assert_eq!(resync.unfinished(), 0);
+        assert_eq!(zero.unfinished(), 0);
+
+        assert_eq!(resync.chaos_kills, 1);
+        assert!((resync.chaos_downtime_s - 2.0).abs() < 1e-9);
+        assert!(
+            resync.drained_degraded_gbit > 1.0,
+            "degraded agents must keep draining: {}",
+            resync.drained_degraded_gbit
+        );
+        // Resync keeps (indeed shrinks, via degraded drains) the in-flight
+        // volume across the restart.
+        assert!(
+            (resync.preserved_fraction() - 1.0).abs() < 1e-9,
+            "pf={}",
+            resync.preserved_fraction()
+        );
+        // From-zero re-inflates 160 in-flight Gbit back to the full 200:
+        // preserved fraction 0.8.
+        let pf = zero.preserved_fraction();
+        assert!(pf > 0.7 && pf < 0.9, "pf={pf}");
+        assert!(resync.recovery_round_s > 0.0, "recovery round must be timed");
+
+        let (u, r, z) = (up.avg_cct(), resync.avg_cct(), zero.avg_cct());
+        assert!(u <= r + 1e-6, "always-up {u} must not lose to chaos {r}");
+        assert!(r < z, "resync {r} must beat from-zero {z}");
+    }
+
+    /// Submissions landing while the controller is down defer to the
+    /// restart — the controller only learns of the coflow once it is back.
+    #[test]
+    fn submissions_defer_while_controller_down() {
+        let wan = topologies::fig1a();
+        let cfg = SimConfig {
+            chaos: Some(ChaosConfig::new(1.0, 3.0, RecoveryMode::Resync)),
+            ..Default::default()
+        };
+        let mut sim = Simulation::new(wan, terra0(), cfg);
+        // Client submits at t=2, mid-outage.
+        sim.add_job(Job::map_reduce(1, 2.0, 0.0, vec![mk_flow(0, 0, 1, 5.0)]));
+        let rep = sim.run();
+        assert_eq!(rep.unfinished(), 0);
+        assert!(
+            (rep.coflows[0].arrival - 3.0).abs() < 1e-6,
+            "controller-side arrival must be at the restart: {}",
+            rep.coflows[0].arrival
+        );
+        // 1 s waiting out the outage + 2 s transfer.
+        let jct = rep.jobs[0].jct().unwrap();
+        assert!((jct - 3.0).abs() < 0.1, "jct={jct}");
+    }
+
+    /// Chaos composes with belief mode: the crash wipes capacity beliefs
+    /// (crash_reset), telemetry re-derives them after the restart, and the
+    /// workload still finishes.
+    #[test]
+    fn chaos_with_belief_estimation_completes() {
+        let wan = topologies::fig1a();
+        let cfg = SimConfig {
+            telemetry: crate::net::TelemetryConfig {
+                sample_interval_s: 0.25,
+                probe_after_s: 2.0,
+                ..crate::net::TelemetryConfig::by_name("ewma").unwrap()
+            },
+            chaos: Some(ChaosConfig::new(2.0, 3.0, RecoveryMode::Resync)),
+            ..Default::default()
+        };
+        let mut sim = Simulation::new(wan, terra0(), cfg);
+        sim.add_job(Job::map_reduce(1, 0.0, 0.0, vec![mk_flow(0, 0, 1, 25.0)]));
+        sim.add_wan_event(1.0, LinkEvent::SetBandwidth(0, 1, 5.0));
+        let rep = sim.run();
+        assert_eq!(rep.unfinished(), 0);
+        assert_eq!(rep.chaos_kills, 1);
+        assert!(rep.est_samples > 0);
+        assert!((rep.preserved_fraction() - 1.0).abs() < 1e-9);
+    }
+
+    /// Chaos on the sharded control plane: the restarted controller
+    /// re-admits in arrival order and still finishes everything.
+    #[test]
+    fn chaos_on_sharded_control_plane_completes() {
+        let wan = topologies::fig1a();
+        let cfg = SimConfig {
+            shards: 2,
+            chaos: Some(ChaosConfig::new(1.0, 2.0, RecoveryMode::Resync)),
+            ..Default::default()
+        };
+        let mut sim = Simulation::new(wan, terra0(), cfg);
+        let jobs: Vec<Job> = (0..4)
+            .map(|i| {
+                Job::map_reduce(i + 1, i as f64 * 0.25, 0.0, vec![mk_flow(0, 0, 1, 10.0)])
+            })
+            .collect();
+        let rep = sim.run_jobs(jobs);
+        assert_eq!(rep.unfinished(), 0);
+        assert_eq!(rep.chaos_kills, 1);
+        assert!((rep.preserved_fraction() - 1.0).abs() < 1e-9);
     }
 }

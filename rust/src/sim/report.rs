@@ -108,6 +108,19 @@ pub struct Report {
     pub stale_events: usize,
     pub stale_resolved: usize,
     pub stale_reaction_s_sum: f64,
+    /// Controller chaos (`controller_chaos` axis): injected crash/restart
+    /// cycles, total simulated downtime, Gbit the agents kept draining in
+    /// degraded mode while the controller was down, bytes-in-flight at the
+    /// kill and at the restart (their ratio is the preserved fraction —
+    /// 1.0 under resync reconstruction, collapsing toward 0 under a
+    /// restart-from-zero strawman), and the wall-clock cost of the first
+    /// post-restart reconstruction round.
+    pub chaos_kills: usize,
+    pub chaos_downtime_s: f64,
+    pub drained_degraded_gbit: f64,
+    pub inflight_at_kill_gbit: f64,
+    pub inflight_at_restart_gbit: f64,
+    pub recovery_round_s: f64,
     /// Simulated makespan.
     pub makespan: f64,
 }
@@ -199,6 +212,20 @@ impl Report {
     /// Number of coflows that never finished (starved / partitioned).
     pub fn unfinished(&self) -> usize {
         self.coflows.iter().filter(|c| c.admitted && c.finish.is_none()).count()
+    }
+
+    /// How much transfer progress survived the controller restart, as
+    /// `min(1, remaining_at_kill / remaining_at_restart)`. Resync
+    /// reconstruction keeps (or shrinks, via degraded drains) the
+    /// remaining volume, so this is 1.0; a restart-from-zero strawman
+    /// re-inflates remaining back to full volume and the fraction drops
+    /// by exactly the progress thrown away. 1.0 when no kill was
+    /// injected.
+    pub fn preserved_fraction(&self) -> f64 {
+        if self.chaos_kills == 0 || self.inflight_at_restart_gbit <= 0.0 {
+            return 1.0;
+        }
+        (self.inflight_at_kill_gbit / self.inflight_at_restart_gbit).min(1.0)
     }
 
     /// Pearson correlation between per-job total WAN bytes and JCT-based

@@ -135,10 +135,21 @@ fn delta_pushes_only_changed_components() {
         .unwrap() as u64;
     let d = agents[2].read_op("rates_delta", long).expect("delta for coflow 2");
     assert_eq!(delta_keys(&d, "updates"), vec![(c2, 1)]);
-    assert!(
-        agents[0].read_msg(Duration::from_millis(300)).is_none(),
-        "agent 0 must not be pushed an unchanged table"
-    );
+    // Agent 0's table is untouched, so no *rate* frame may arrive — only
+    // liveness heartbeats, which the controller ships even on quiet wires
+    // (they feed the agents' degraded-mode watchdog).
+    let quiet = Instant::now() + Duration::from_millis(600);
+    while Instant::now() < quiet {
+        let Some(msg) = agents[0].read_msg(quiet.saturating_duration_since(Instant::now()))
+        else {
+            break;
+        };
+        assert_eq!(
+            msg.get("op").and_then(|o| o.as_str()),
+            Some("hb"),
+            "agent 0 must not be pushed an unchanged table: got {msg}"
+        );
+    }
 
     // Coflow 3 shares coflow 1's component (same pair, much smaller):
     // SRTF flips the pair's rates, so agent 0 gets ONE delta carrying both
@@ -248,6 +259,77 @@ fn malformed_control_frames_are_survivable() {
     assert!(cid > 0);
     assert!(handle.scheduled_rate(cid as u64) > 0.0, "engine stopped allocating");
     assert!(handle.rounds() >= 1);
+    handle.shutdown();
+}
+
+/// Regression (reconnect/resync ordering race): when a replacement
+/// connection for a dc arrives while the old one is still up, the
+/// controller must atomically retire the old sender queue *before* the new
+/// baseline goes out. The observable contract on the new socket: the very
+/// first frame is a `rates_full` baseline (seq 1) — no delta queued for the
+/// predecessor may leak ahead of it — and every subsequent rate frame is
+/// sequence-contiguous with that baseline.
+#[test]
+fn reconnect_baseline_precedes_any_delta_on_new_socket() {
+    let handle =
+        Controller::spawn(TestbedConfig::new(topologies::fig1a(), 1), policy(1)).unwrap();
+    let mut old = FakeAgent::connect(&handle, 0);
+    let long = Duration::from_secs(5);
+    assert!(old.read_op("rates_full", long).is_some(), "baseline sync");
+
+    // Build a live table and keep deltas streaming at the old connection
+    // (descending volumes so SRTF reshuffles rates on every arrival).
+    let mut client = TerraClient::connect(handle.addr).unwrap();
+    for i in 0..6u64 {
+        let bytes = gbit(4000.0 / (i + 1) as f64);
+        client
+            .submit_coflow(&[FlowSpec { id: 0, src_dc: 0, dst_dc: 1, bytes }], None)
+            .unwrap();
+    }
+
+    // The race window: reconnect while the old connection is still open and
+    // its queue possibly non-empty.
+    let mut new = FakeAgent::connect(&handle, 0);
+    let first = new.read_msg(long).expect("first frame on the new socket");
+    assert_eq!(
+        first.get("op").and_then(|o| o.as_str()),
+        Some("rates_full"),
+        "first frame on a replacement connection must be the full baseline, got {first}"
+    );
+    let mut last_seq =
+        first.get("seq").and_then(|s| s.as_u64()).expect("baseline carries a seq");
+    assert_eq!(last_seq, 1, "fresh connection starts a fresh sequence");
+
+    // Everything after the baseline is a gapless per-connection stream.
+    for i in 0..3u64 {
+        client
+            .submit_coflow(
+                &[FlowSpec { id: 0, src_dc: 0, dst_dc: 1, bytes: gbit(0.5 + i as f64) }],
+                None,
+            )
+            .unwrap();
+        let d = new.read_op("rates_delta", long).expect("post-baseline delta");
+        let seq = d.get("seq").and_then(|s| s.as_u64()).unwrap();
+        assert_eq!(seq, last_seq + 1, "gap in the replacement connection's seq stream");
+        last_seq = seq;
+    }
+
+    // The superseded connection was retired, not left to race: it winds
+    // down to EOF instead of receiving frames addressed to its successor.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        assert!(Instant::now() < deadline, "old connection never closed");
+        match old.read_msg(Duration::from_millis(500)) {
+            Some(msg) => {
+                // Frames already queued before retirement may still drain,
+                // but nothing sequenced after the successor's baseline.
+                if let Some(seq) = msg.get("seq").and_then(|s| s.as_u64()) {
+                    assert!(seq <= 7, "stale connection received a successor frame: {msg}");
+                }
+            }
+            None => break, // timeout or EOF; either way the wire is quiet
+        }
+    }
     handle.shutdown();
 }
 
