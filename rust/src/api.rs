@@ -8,7 +8,7 @@
 //! updateCoflow(cId, Flows)
 //! ```
 
-use crate::coflow::CoflowId;
+use crate::coflow::{CoflowId, ServiceClass};
 use crate::net::LinkEvent;
 use crate::overlay::protocol::{self, CoflowStatus, FlowSpec};
 use crate::util::json::Json;
@@ -35,12 +35,29 @@ impl TerraClient {
     /// Submit a coflow; returns its id, or [`REJECTED`] if a deadline was
     /// given and cannot be met.
     pub fn submit_coflow(&mut self, flows: &[FlowSpec], deadline_s: Option<f64>) -> Result<i64> {
+        self.submit_coflow_class(flows, deadline_s, &ServiceClass::Batch)
+    }
+
+    /// Submit a coflow with an explicit service class; returns its id, or
+    /// [`REJECTED`] when admission fails (a deadline that cannot be met, or
+    /// a stream floor the believed headroom cannot cover). `Batch` puts no
+    /// `class` key on the wire, so this is byte-identical to
+    /// [`submit_coflow`] for the default class.
+    pub fn submit_coflow_class(
+        &mut self,
+        flows: &[FlowSpec],
+        deadline_s: Option<f64>,
+        class: &ServiceClass,
+    ) -> Result<i64> {
         let mut msg = Json::from_pairs([
             ("op", Json::from("submit")),
             ("flows", Json::Arr(flows.iter().map(|f| f.to_json()).collect())),
         ]);
         if let Some(d) = deadline_s {
             msg.set("deadline", d.into());
+        }
+        if let Some(c) = protocol::class_to_json(class) {
+            msg.set("class", c);
         }
         protocol::write_msg(&mut self.stream, &msg)?;
         let reply = protocol::read_msg(&mut self.stream)?

@@ -16,6 +16,90 @@ use std::collections::BTreeMap;
 /// Unique coflow identifier handed back by `submit_coflow` (§5.2).
 pub type CoflowId = u64;
 
+/// A geo-ML aggregation tree (Li et al., PAPERS.md): each participating
+/// datacenter pushes its gradient shard to a parent, up to the root. One
+/// synchronization iteration is a coflow with one flow per tree edge.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AggTree {
+    /// The aggregating root datacenter.
+    pub root: NodeId,
+    /// `(child, parent)` directed edges; every participant except the root
+    /// appears exactly once as a child.
+    pub edges: Vec<(NodeId, NodeId)>,
+}
+
+impl AggTree {
+    /// All participating datacenters (root + children), deduplicated, in
+    /// ascending order.
+    pub fn participants(&self) -> Vec<NodeId> {
+        let mut p: Vec<NodeId> = std::iter::once(self.root)
+            .chain(self.edges.iter().flat_map(|&(c, pa)| [c, pa]))
+            .collect();
+        p.sort_unstable();
+        p.dedup();
+        p
+    }
+}
+
+/// The traffic class a coflow belongs to. The scheduler was built for
+/// `Batch` (finite volume, minimize CCT); the other classes change what
+/// admission, ordering, and filling optimize for:
+///
+/// - `Deadline`: batch semantics plus the §3.2 admission/dilation machinery
+///   (tagged automatically when a deadline is set).
+/// - `Stream`: a long-running analytics coflow with a minimum-rate
+///   requirement (Aljoby et al.) — its floor is reserved *before* batch
+///   max-min filling, it never enters Γ/SRTF ordering, and the metric that
+///   matters is violation-seconds, not CCT. The floor applies to **each**
+///   of the coflow's FlowGroups (generators emit single-group streams).
+/// - `MlSync`: one iteration of geo-distributed ML synchronization over an
+///   aggregation tree (Li et al.) — recurring, finite, CCT ≡ iteration
+///   time; the tree can be reshaped between iterations when a link
+///   degrades.
+///
+/// `Batch` is the **structural default**: every constructor that does not
+/// explicitly set a class produces `Batch`, so class-free configurations
+/// are bit-identical to the pre-class scheduler (golden-pinned).
+#[derive(Clone, Debug, PartialEq, Default)]
+pub enum ServiceClass {
+    #[default]
+    Batch,
+    Deadline,
+    Stream {
+        /// Minimum sustained rate (Gbps) required per FlowGroup.
+        rate_floor_gbps: f64,
+    },
+    MlSync {
+        /// The aggregation tree this iteration's flows follow.
+        tree: AggTree,
+        /// Gradient-shard volume pushed over each tree edge per iteration,
+        /// in Gbit.
+        iteration_gbit: f64,
+    },
+}
+
+impl ServiceClass {
+    /// Stable short name used in reports, wire messages, and sweep rows.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServiceClass::Batch => "batch",
+            ServiceClass::Deadline => "deadline",
+            ServiceClass::Stream { .. } => "stream",
+            ServiceClass::MlSync { .. } => "ml-sync",
+        }
+    }
+
+    /// The per-FlowGroup minimum-rate requirement, if this class has one.
+    pub fn rate_floor(&self) -> Option<f64> {
+        match self {
+            ServiceClass::Stream { rate_floor_gbps } if *rate_floor_gbps > 0.0 => {
+                Some(*rate_floor_gbps)
+            }
+            _ => None,
+        }
+    }
+}
+
 /// Gigabytes to Gbit.
 pub const GB: f64 = 8.0;
 /// Megabytes to Gbit.
@@ -53,16 +137,31 @@ pub struct Coflow {
     pub arrival: f64,
     /// Optional relative deadline `D_i` in seconds (§3.2).
     pub deadline: Option<f64>,
+    /// Traffic class ([`ServiceClass::Batch`] unless set explicitly).
+    pub class: ServiceClass,
     pub flows: Vec<Flow>,
 }
 
 impl Coflow {
     pub fn new(id: CoflowId, flows: Vec<Flow>) -> Coflow {
-        Coflow { id, arrival: 0.0, deadline: None, flows }
+        Coflow { id, arrival: 0.0, deadline: None, class: ServiceClass::Batch, flows }
     }
 
+    /// Set a relative deadline. A non-positive or non-finite `d` is
+    /// **rejected** (logged, left as "no deadline") — propagating it would
+    /// poison Γ-ordering and the §3.2 admission arithmetic downstream.
     pub fn with_deadline(mut self, d: f64) -> Coflow {
+        if !d.is_finite() || d <= 0.0 {
+            log::warn!("coflow {}: ignoring invalid deadline {d} (must be finite and > 0)", self.id);
+            self.deadline = None;
+            return self;
+        }
         self.deadline = Some(d);
+        self
+    }
+
+    pub fn with_class(mut self, class: ServiceClass) -> Coflow {
+        self.class = class;
         self
     }
 
@@ -171,5 +270,41 @@ mod tests {
     fn total_volume_sums() {
         let c = Coflow::new(1, vec![flow(0, 0, 1, 2.0), flow(1, 1, 0, 3.0)]);
         assert!((c.total_volume() - 5.0).abs() < 1e-12);
+    }
+
+    /// Regression: a non-positive or non-finite deadline used to be stored
+    /// as-is and fed into Γ-ordering / admission arithmetic. It must now be
+    /// treated as "no deadline".
+    #[test]
+    fn invalid_deadlines_are_rejected() {
+        for bad in [0.0, -5.0, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let c = Coflow::new(1, vec![flow(0, 0, 1, 2.0)]).with_deadline(bad);
+            assert_eq!(c.deadline, None, "deadline {bad} should have been rejected");
+        }
+        let c = Coflow::new(1, vec![flow(0, 0, 1, 2.0)]).with_deadline(3.5);
+        assert_eq!(c.deadline, Some(3.5));
+        // An invalid deadline must not clobber semantics either way: a
+        // valid one followed by an invalid one ends at "no deadline".
+        let c = c.with_deadline(f64::NAN);
+        assert_eq!(c.deadline, None);
+    }
+
+    #[test]
+    fn batch_is_the_structural_default() {
+        assert_eq!(ServiceClass::default(), ServiceClass::Batch);
+        assert_eq!(Coflow::new(1, Vec::new()).class, ServiceClass::Batch);
+        assert_eq!(Coflow::default().class, ServiceClass::Batch);
+        assert_eq!(ServiceClass::Batch.rate_floor(), None);
+        assert_eq!(ServiceClass::Stream { rate_floor_gbps: 1.5 }.rate_floor(), Some(1.5));
+        // A degenerate zero floor is no floor.
+        assert_eq!(ServiceClass::Stream { rate_floor_gbps: 0.0 }.rate_floor(), None);
+    }
+
+    #[test]
+    fn agg_tree_participants() {
+        let t = AggTree { root: 2, edges: vec![(0, 2), (1, 2), (3, 1)] };
+        assert_eq!(t.participants(), vec![0, 1, 2, 3]);
+        assert_eq!(t.participants().len(), 4);
+        assert_eq!(ServiceClass::MlSync { tree: t, iteration_gbit: 4.0 }.name(), "ml-sync");
     }
 }

@@ -333,8 +333,25 @@ impl RoundEngine {
     }
 
     /// Deadline admission control against the current active set (§3.2).
+    ///
+    /// Under a non-oracle estimator the scheduler's WAN holds the last
+    /// ρ-gated belief refresh, which can sit *above* the current
+    /// `mean − k·σ` headroom (a dip too small to pass the gate, or a
+    /// stale-optimistic belief whose variance has since grown). Admission
+    /// is a promise, so it runs against the fresh headroom instead:
+    /// per edge, `min(gated avail, cap_used)`. Oracle mode takes the
+    /// original path untouched.
     pub fn admit(&mut self, now: f64, candidate: &CoflowState) -> bool {
-        let RoundEngine { wan, paths, policy, active, .. } = self;
+        let RoundEngine { wan, paths, policy, active, estimator, .. } = self;
+        if !estimator.is_oracle() {
+            let mut headroom = wan.clone();
+            for e in 0..headroom.num_edges() {
+                let cap = headroom.link(e).avail().min(estimator.cap_used(e));
+                headroom.set_capacity(e, cap);
+            }
+            let net = NetView { wan: &headroom, paths };
+            return policy.admit(now, candidate, active, &net);
+        }
         let net = NetView { wan, paths };
         policy.admit(now, candidate, active, &net)
     }
@@ -1562,6 +1579,41 @@ mod tests {
         assert_eq!(e.estimator().mean(edge), 10.0);
         assert_eq!(e.wan().link(edge).capacity, 10.0);
         assert_eq!(e.refresh_beliefs(), None, "re-anchored belief must not re-fire");
+    }
+
+    /// Deadline admission must run against the *fresh* `mean − k·σ`
+    /// headroom, not the scheduler's ρ-gated WAN view: when capped
+    /// samples collapse the belief but no refresh has run yet, the WAN is
+    /// stale-optimistic and must no longer over-admit.
+    #[test]
+    fn stale_optimistic_belief_does_not_over_admit() {
+        let mut e = estimating_engine();
+        let candidate = CoflowState::from_coflow(
+            &Coflow::new(9, vec![Flow { id: 0, src_dc: 0, dst_dc: 1, volume: 16.0 }])
+                .with_deadline(1.0),
+        );
+        // Fresh beliefs sit at base capacity: 16 Gbit over ~20 Gbps of
+        // headroom makes the 1 s deadline comfortably.
+        assert!(e.admit(0.0, &candidate), "full-capacity headroom must admit");
+        // Capped samples collapse every edge's belief, but refresh_beliefs
+        // never runs: the scheduler's WAN still holds base capacity.
+        for edge in 0..e.wan().num_edges() {
+            for i in 0..6 {
+                e.observe_edge(edge, 2.0, true, i as f64);
+            }
+        }
+        assert_eq!(
+            e.wan().capacities(),
+            topologies::fig1a().capacities(),
+            "precondition: the gated WAN view must still be stale-optimistic"
+        );
+        assert!(!e.admit(0.0, &candidate), "stale-optimistic belief over-admitted");
+        // An oracle engine is untouched by the same (ignored) samples.
+        let mut oracle = engine(false);
+        for edge in 0..oracle.wan().num_edges() {
+            oracle.observe_edge(edge, 2.0, true, 1.0);
+        }
+        assert!(oracle.admit(0.0, &candidate), "oracle admission must be unchanged");
     }
 
     /// Truth-throttled drain: a coflow whose edges truly admit less than

@@ -625,22 +625,23 @@ impl ShardedEngine {
         }
     }
 
-    /// Deadline admission against the *global* active set: the policy's
-    /// admission math (reserved-rate subtraction over deadline-bearing
-    /// coflows, stable-sorted) needs the same view a single engine would
-    /// have, so the front-end assembles the arrival-ordered union of all
-    /// shards' (and the spill's) deadline-bearing actives and asks shard
-    /// 0's policy. Deadline-less candidates skip the union (every policy
+    /// Deadline/stream admission against the *global* active set: the
+    /// policy's admission math (reserved-rate subtraction over
+    /// deadline-bearing coflows, floor reservation over admitted streams,
+    /// stable-sorted) needs the same view a single engine would have, so
+    /// the front-end assembles the arrival-ordered union of all shards'
+    /// (and the spill's) deadline- or floor-bearing actives and asks shard
+    /// 0's policy. Unconstrained candidates skip the union (every policy
     /// admits them unconditionally).
     pub fn admit(&mut self, now: f64, candidate: &CoflowState) -> bool {
         if !self.sharded() {
             return self.shards[0].admit(now, candidate);
         }
         let mut merged: Vec<(u64, CoflowState)> = Vec::new();
-        if candidate.deadline.is_some() {
+        if candidate.deadline.is_some() || candidate.rate_floor().is_some() {
             for eng in self.engines() {
                 for c in &eng.active {
-                    if c.deadline.is_some() {
+                    if c.deadline.is_some() || c.rate_floor().is_some() {
                         let seq = self.owners.get(&c.id).map(|o| o.seq).unwrap_or(0);
                         merged.push((seq, c.clone()));
                     }
@@ -649,7 +650,19 @@ impl ShardedEngine {
             merged.sort_by_key(|&(seq, _)| seq);
         }
         let coflows: Vec<CoflowState> = merged.into_iter().map(|(_, c)| c).collect();
-        let RoundEngine { wan, paths, policy, .. } = &mut self.shards[0];
+        let RoundEngine { wan, paths, policy, estimator, .. } = &mut self.shards[0];
+        if !estimator.is_oracle() {
+            // Same fresh `mean − k·σ` headroom view as the single-engine
+            // path (see [`RoundEngine::admit`]); estimators run in
+            // lockstep across shards, so shard 0's belief is the belief.
+            let mut headroom = wan.clone();
+            for e in 0..headroom.num_edges() {
+                let cap = headroom.link(e).avail().min(estimator.cap_used(e));
+                headroom.set_capacity(e, cap);
+            }
+            let net = NetView { wan: &headroom, paths };
+            return policy.admit(now, candidate, &coflows, &net);
+        }
         let net = NetView { wan, paths };
         policy.admit(now, candidate, &coflows, &net)
     }

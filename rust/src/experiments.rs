@@ -15,7 +15,9 @@ use crate::scheduler::Policy;
 use crate::sim::{foi, foi_volume_correlation, Job, Report, SimConfig, Simulation};
 use crate::util::json::Json;
 use crate::util::rng::splitmix64;
-use crate::workloads::{assign_deadlines, WorkloadConfig, WorkloadGen, WorkloadKind};
+use crate::workloads::{
+    assign_deadlines, ml_sync_jobs, stream_jobs, WorkloadConfig, WorkloadGen, WorkloadKind,
+};
 
 /// Topologies in the paper's order.
 pub fn eval_topologies() -> Vec<(&'static str, Wan)> {
@@ -866,6 +868,183 @@ pub fn recovery_json(cfg: &RecoverySweepConfig, rows: &[RecoveryRow]) -> Json {
     ])
 }
 
+/// Configuration of the **multi-tenant sweep** (the service-class axis):
+/// batch GDA jobs, streaming rate-floor coflows, and recurring geo-ML
+/// aggregation-tree jobs sharing one WAN while dynamics profiles inject
+/// gray failures and regional outages. Terra policy throughout — the axis
+/// under study is per-class outcomes (batch CCT, stream
+/// violation-seconds, ML iteration time) under cross-class contention.
+#[derive(Clone, Debug)]
+pub struct MultitenantSweepConfig {
+    /// Batch jobs generated from `workload`.
+    pub jobs: usize,
+    /// Streaming coflows ([`stream_jobs`]).
+    pub streams: usize,
+    /// Geo-ML jobs and synchronization iterations per job
+    /// ([`ml_sync_jobs`]).
+    pub ml_jobs: usize,
+    pub ml_iters: usize,
+    pub seed: u64,
+    /// Dynamics generation horizon (seconds of simulated time).
+    pub horizon_s: f64,
+    pub topology: String,
+    pub workload: String,
+    /// Dynamics profiles to sweep; ≥ 2 so per-class behavior is observed
+    /// both at rest and under gray failure pressure.
+    pub profiles: Vec<String>,
+}
+
+impl Default for MultitenantSweepConfig {
+    fn default() -> Self {
+        MultitenantSweepConfig {
+            jobs: 6,
+            streams: 8,
+            ml_jobs: 3,
+            ml_iters: 4,
+            seed: 7,
+            horizon_s: 420.0,
+            topology: "swan".into(),
+            workload: "bigbench".into(),
+            profiles: vec!["calm".into(), "gray".into(), "regional".into()],
+        }
+    }
+}
+
+/// The service classes the multitenant sweep reports on (one row per
+/// ⟨profile, class⟩ cell).
+pub const MULTITENANT_CLASSES: [&str; 3] = ["batch", "stream", "ml-sync"];
+
+/// One multitenant-sweep cell: a ⟨profile, class⟩ outcome.
+#[derive(Clone, Debug)]
+pub struct MultitenantRow {
+    pub topology: String,
+    pub workload: String,
+    pub profile: String,
+    /// One of [`MULTITENANT_CLASSES`].
+    pub class: String,
+    /// Coflows of this class (every stream and every ML iteration counts
+    /// once), including rejected ones.
+    pub coflows: usize,
+    /// Admission-rejected coflows of this class.
+    pub rejected: usize,
+    pub unfinished: usize,
+    /// Average CCT of this class; for `ml-sync` this *is* the average
+    /// synchronization iteration time.
+    pub avg_cct: f64,
+    /// Stream rows: total violation-seconds (seconds × streams spent below
+    /// the rate floor). 0 elsewhere.
+    pub violation_s: f64,
+    /// ml-sync rows: tree edges re-parented to the root because their link
+    /// had degraded when the iteration was submitted. 0 elsewhere.
+    pub tree_reshapes: usize,
+    /// Stream rows: integral of unreservable floor demand over rounds
+    /// (Gbps·rounds). 0 elsewhere.
+    pub floor_shortfall_gbps: f64,
+    pub makespan: f64,
+}
+
+/// Run the multitenant sweep: one mixed workload (batch + streams + ML
+/// sync), generated once and replayed per profile so every profile
+/// schedules the identical job mix against its own event stream. Rows come
+/// back in deterministic sweep order, [`MULTITENANT_CLASSES`] per profile.
+pub fn multitenant_sweep(cfg: &MultitenantSweepConfig) -> Vec<MultitenantRow> {
+    let Some(wan) = topologies::by_name(&cfg.topology) else {
+        log::warn!("unknown topology {}; empty multitenant sweep", cfg.topology);
+        return Vec::new();
+    };
+    let Some(kind) = WorkloadKind::by_name(&cfg.workload) else {
+        log::warn!("unknown workload {}; empty multitenant sweep", cfg.workload);
+        return Vec::new();
+    };
+    let wseed = scenario_seed(cfg.seed, 0, 0, usize::MAX);
+    let mut jobs = WorkloadGen::with_config(WorkloadConfig::new(kind, wseed)).jobs(&wan, cfg.jobs);
+    // Id bases keep the three generators' job ids disjoint.
+    jobs.extend(stream_jobs(&wan, cfg.streams, 10_000, wseed));
+    jobs.extend(ml_sync_jobs(&wan, cfg.ml_jobs, cfg.ml_iters, 20_000, wseed));
+    let mut rows = Vec::new();
+    for (pi, pname) in cfg.profiles.iter().enumerate() {
+        let Some(profile) = DynamicsProfile::by_name(pname) else {
+            log::warn!("unknown dynamics profile {pname}; skipping");
+            continue;
+        };
+        let sseed = scenario_seed(cfg.seed, 0, 0, pi);
+        let events = dynamics::generate(&wan, &profile, cfg.horizon_s, sseed);
+        let mut sim =
+            Simulation::new(wan.clone(), Box::new(TerraPolicy::default()), SimConfig::default());
+        for ev in &events {
+            sim.add_wan_event(ev.t, ev.ev.clone());
+        }
+        let rep = sim.run_jobs(jobs.clone());
+        for class in MULTITENANT_CLASSES {
+            rows.push(MultitenantRow {
+                topology: cfg.topology.clone(),
+                workload: cfg.workload.clone(),
+                profile: profile.name.clone(),
+                class: class.to_string(),
+                coflows: rep.class_count(class),
+                rejected: rep.coflows.iter().filter(|c| c.class == class && !c.admitted).count(),
+                unfinished: rep
+                    .coflows
+                    .iter()
+                    .filter(|c| c.class == class && c.admitted && c.finish.is_none())
+                    .count(),
+                avg_cct: rep.avg_cct_class(class),
+                violation_s: if class == "stream" { rep.stream_violation_s } else { 0.0 },
+                tree_reshapes: if class == "ml-sync" { rep.tree_reshapes } else { 0 },
+                floor_shortfall_gbps: if class == "stream" {
+                    rep.floor_shortfall_gbps
+                } else {
+                    0.0
+                },
+                makespan: rep.makespan,
+            });
+        }
+    }
+    rows
+}
+
+/// Serialize multitenant-sweep results for `BENCH_multitenant.json`.
+pub fn multitenant_json(cfg: &MultitenantSweepConfig, rows: &[MultitenantRow]) -> Json {
+    let rows: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::from_pairs([
+                ("topology", Json::from(r.topology.clone())),
+                ("workload", r.workload.clone().into()),
+                ("profile", r.profile.clone().into()),
+                ("class", r.class.clone().into()),
+                ("coflows", r.coflows.into()),
+                ("rejected", r.rejected.into()),
+                ("unfinished", r.unfinished.into()),
+                ("avg_cct_s", r.avg_cct.into()),
+                ("violation_s", r.violation_s.into()),
+                ("tree_reshapes", r.tree_reshapes.into()),
+                ("floor_shortfall_gbps", r.floor_shortfall_gbps.into()),
+                ("makespan_s", r.makespan.into()),
+            ])
+        })
+        .collect();
+    Json::from_pairs([
+        ("seed", Json::from(cfg.seed)),
+        ("jobs", cfg.jobs.into()),
+        ("streams", cfg.streams.into()),
+        ("ml_jobs", cfg.ml_jobs.into()),
+        ("ml_iters", cfg.ml_iters.into()),
+        ("horizon_s", cfg.horizon_s.into()),
+        ("topology", cfg.topology.clone().into()),
+        ("workload", cfg.workload.clone().into()),
+        (
+            "profiles",
+            cfg.profiles.iter().map(|p| Json::from(p.clone())).collect::<Vec<_>>().into(),
+        ),
+        (
+            "classes",
+            MULTITENANT_CLASSES.iter().map(|c| Json::from(c.to_string())).collect::<Vec<_>>().into(),
+        ),
+        ("rows", Json::Arr(rows)),
+    ])
+}
+
 /// Figure 1: the motivating example — average CCT of the two coflows under
 /// the four policies of Fig 1c–1f. Returns (policy name, avg CCT seconds).
 pub fn fig1_motivation() -> Vec<(String, f64)> {
@@ -1092,6 +1271,48 @@ mod tests {
         for (a, b) in rows.iter().zip(&again) {
             assert_eq!(a.avg_cct.to_bits(), b.avg_cct.to_bits());
             assert_eq!(a.preserved_fraction.to_bits(), b.preserved_fraction.to_bits());
+        }
+    }
+
+    #[test]
+    fn multitenant_sweep_covers_classes_and_is_deterministic() {
+        let cfg = MultitenantSweepConfig {
+            jobs: 2,
+            streams: 3,
+            ml_jobs: 2,
+            ml_iters: 2,
+            horizon_s: 160.0,
+            profiles: vec!["calm".into(), "gray".into()],
+            ..Default::default()
+        };
+        let rows = multitenant_sweep(&cfg);
+        assert_eq!(rows.len(), 6, "2 profiles x 3 classes");
+        for class in MULTITENANT_CLASSES {
+            let of_class: Vec<&MultitenantRow> =
+                rows.iter().filter(|r| r.class == class).collect();
+            assert_eq!(of_class.len(), 2, "one {class} row per profile");
+            assert!(of_class.iter().all(|r| r.coflows > 0), "{class} rows are empty");
+        }
+        // Every ML iteration is one coflow; each finished class reports a
+        // positive average CCT.
+        let ml = rows.iter().find(|r| r.class == "ml-sync").unwrap();
+        assert_eq!(ml.coflows, 4, "2 jobs x 2 iterations");
+        for r in &rows {
+            if r.coflows > r.rejected + r.unfinished {
+                assert!(r.avg_cct > 0.0, "{}/{} has no CCT", r.profile, r.class);
+            }
+            if r.class != "stream" {
+                assert_eq!(r.violation_s, 0.0);
+                assert_eq!(r.floor_shortfall_gbps, 0.0);
+            }
+        }
+        // Deterministic: virtual-time metrics are bit-reproducible.
+        let again = multitenant_sweep(&cfg);
+        for (a, b) in rows.iter().zip(&again) {
+            assert_eq!(a.avg_cct.to_bits(), b.avg_cct.to_bits());
+            assert_eq!(a.violation_s.to_bits(), b.violation_s.to_bits());
+            assert_eq!(a.coflows, b.coflows);
+            assert_eq!(a.tree_reshapes, b.tree_reshapes);
         }
     }
 

@@ -306,6 +306,67 @@ pub fn group_rates(rates: &Rates) -> Vec<f64> {
     rates.iter().map(|g| g.iter().sum()).collect()
 }
 
+/// Level 1 of **two-level floor filling** for rate-floor service classes
+/// (streaming coflows with minimum-rate requirements): reserve each
+/// group's floor against `cap` *before* batch max-min filling distributes
+/// the surplus (level 2 = the existing [`max_min_rates`] family on the
+/// residual).
+///
+/// For each group in order, the floor is water-filled across its paths in
+/// path order (greedy: each path takes as much of the outstanding floor as
+/// its bottleneck residual allows) and subtracted from `cap` in place.
+/// **Infeasible floors are not silently clamped**: whatever part of a
+/// floor did not fit is returned as that group's shortfall (Gbps), so the
+/// caller can surface it as an SLO violation while the reservation still
+/// takes everything that *was* available.
+///
+/// Groups with `floor <= 0` are untouched and `cap` is not written for
+/// them, so an all-zero floor vector leaves `cap` bit-identical — the
+/// structural-inertness guarantee the class-free path relies on.
+///
+/// Returns `(reserved, shortfall)`: per-group per-path reserved Gbps
+/// (same layout as [`Rates`]) and per-group unmet floor Gbps.
+pub fn reserve_floors(
+    cap: &mut [f64],
+    groups: &[GroupDemand],
+    floors: &[f64],
+) -> (Rates, Vec<f64>) {
+    let mut reserved: Rates = groups.iter().map(|g| vec![0.0; g.paths.len()]).collect();
+    let mut shortfall = vec![0.0; groups.len()];
+    for (k, g) in groups.iter().enumerate() {
+        let floor = floors.get(k).copied().unwrap_or(0.0);
+        if floor <= 0.0 || g.volume <= 0.0 {
+            continue;
+        }
+        let mut need = floor;
+        for (pi, p) in g.paths.iter().enumerate() {
+            if need <= 1e-12 {
+                break;
+            }
+            if p.is_empty() {
+                continue;
+            }
+            // Bottleneck residual along this path; MIN_CAP-aligned with the
+            // GK solver's degeneracy floor so a reservation never leaves an
+            // edge the level-2 solve would treat as up but we drained dry.
+            let avail = p.iter().map(|&e| cap[e]).fold(f64::INFINITY, f64::min);
+            let take = need.min((avail - gk::MIN_CAP).max(0.0));
+            if take <= 0.0 {
+                continue;
+            }
+            reserved[k][pi] = take;
+            for &e in p {
+                cap[e] = (cap[e] - take).max(0.0);
+            }
+            need -= take;
+        }
+        if need > 1e-9 {
+            shortfall[k] = need;
+        }
+    }
+    (reserved, shortfall)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -398,6 +459,48 @@ mod tests {
             let flat_rates = max_min_rates_ws(&mut flat, &weights, &mut ws);
             assert_eq!(flat_rates, jagged);
         }
+    }
+
+    /// Two-level filling, level 1: floors are reserved in group order,
+    /// infeasible remainders come back as shortfalls instead of clamping.
+    #[test]
+    fn floor_reservation_and_shortfall() {
+        let groups = vec![
+            GroupDemand { volume: 10.0, paths: vec![vec![0]] },
+            GroupDemand { volume: 10.0, paths: vec![vec![0], vec![1, 2]] },
+        ];
+        let mut cap = vec![4.0, 10.0, 10.0];
+        let (res, short) = reserve_floors(&mut cap, &groups, &[3.0, 5.0]);
+        // Group 0 takes 3 of edge 0; group 1 gets what's left there
+        // (~1 minus the MIN_CAP guard) and spills the rest onto [1,2].
+        assert!((res[0][0] - 3.0).abs() < 1e-6, "res={res:?}");
+        let g1: f64 = res[1].iter().sum();
+        assert!((g1 - 5.0).abs() < 1e-6, "res={res:?}");
+        assert!(short[0] == 0.0 && short[1] == 0.0, "short={short:?}");
+        assert!(cap.iter().all(|&c| c >= 0.0));
+
+        // Floors beyond total capacity surface as shortfall, not a clamp.
+        let mut tight = vec![2.0];
+        let one = vec![GroupDemand { volume: 1.0, paths: vec![vec![0]] }];
+        let (res, short) = reserve_floors(&mut tight, &one, &[5.0]);
+        assert!(res[0][0] < 2.0 + 1e-9);
+        assert!((short[0] - (5.0 - res[0][0])).abs() < 1e-9, "short={short:?} res={res:?}");
+    }
+
+    /// Structural inertness: zero floors must not perturb capacities at
+    /// all (bit-identical), so the class-free path is unchanged.
+    #[test]
+    fn zero_floors_leave_caps_bit_identical() {
+        let groups = vec![
+            GroupDemand { volume: 3.0, paths: vec![vec![0], vec![1, 2]] },
+            GroupDemand { volume: 9.0, paths: vec![vec![1]] },
+        ];
+        let cap0 = vec![10.0, 7.5, 4.0 + 1e-13];
+        let mut cap = cap0.clone();
+        let (res, short) = reserve_floors(&mut cap, &groups, &[0.0, 0.0]);
+        assert!(cap.iter().zip(&cap0).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert!(res.iter().flatten().all(|&r| r == 0.0));
+        assert!(short.iter().all(|&s| s == 0.0));
     }
 
     #[test]

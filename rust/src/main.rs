@@ -49,6 +49,10 @@ fn main() {
                  \u{20}          (controller-chaos sweep: profiles x {{always-up, resync,\n\
                  \u{20}          from-zero}}, writes BENCH_recovery.json with preserved\n\
                  \u{20}          in-flight fraction / degraded drain / CCT inflation)\n\
+                 \u{20}          --multitenant [--streams N] [--ml-jobs N] [--ml-iters N]\n\
+                 \u{20}          (service-class sweep: batch + streams + geo-ML sync sharing\n\
+                 \u{20}          one WAN per dynamics profile, writes BENCH_multitenant.json\n\
+                 \u{20}          with per-class CCT / violation-seconds / iteration time)\n\
                  testbed   --topology fig1a --gbit VOLUME [--shards S]\n\
                  \u{20}          (real TCP overlay demo)\n\
                  topology  --name swan|gscale|att|fig1a"
@@ -246,6 +250,9 @@ fn sweep(args: &Args) {
     if args.flag("recovery") || args.get("recovery").is_some() {
         return recovery_sweep(args);
     }
+    if args.flag("multitenant") || args.get("multitenant").is_some() {
+        return multitenant_sweep(args);
+    }
     let defaults = exp::SweepConfig::default();
     let list = |v: &str| -> Vec<String> { v.split(',').map(|s| s.trim().to_string()).collect() };
     let cfg = exp::SweepConfig {
@@ -399,6 +406,63 @@ fn recovery_sweep(args: &Args) {
     ));
     let out = args.get_or("out", "BENCH_recovery.json");
     match std::fs::write(out, format!("{}\n", exp::recovery_json(&cfg, &rows))) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => {
+            eprintln!("failed to write {out}: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// The multi-tenant service-class sweep: batch + streaming + geo-ML jobs
+/// sharing one ⟨topology, workload⟩ per dynamics profile, writing
+/// `BENCH_multitenant.json` (or `--out`).
+fn multitenant_sweep(args: &Args) {
+    use terra::experiments as exp;
+    let defaults = exp::MultitenantSweepConfig::default();
+    let list = |v: &str| -> Vec<String> { v.split(',').map(|s| s.trim().to_string()).collect() };
+    let cfg = exp::MultitenantSweepConfig {
+        jobs: args.get_usize("jobs", defaults.jobs),
+        streams: args.get_usize("streams", defaults.streams),
+        ml_jobs: args.get_usize("ml-jobs", defaults.ml_jobs),
+        ml_iters: args.get_usize("ml-iters", defaults.ml_iters),
+        seed: args.get_u64("seed", defaults.seed),
+        horizon_s: args.get_f64("horizon", defaults.horizon_s),
+        topology: args.get_or("topology", &defaults.topology).to_string(),
+        workload: args.get_or("workload", &defaults.workload).to_string(),
+        profiles: args.get("profiles").map(list).unwrap_or(defaults.profiles),
+    };
+    let rows = exp::multitenant_sweep(&cfg);
+    let mut t = Table::new(&[
+        "profile", "class", "coflows", "rejected", "avg CCT", "violation s", "reshapes",
+        "shortfall", "unfin",
+    ]);
+    for r in &rows {
+        t.row(&[
+            r.profile.clone(),
+            r.class.clone(),
+            r.coflows.to_string(),
+            r.rejected.to_string(),
+            format!("{:.1}s", r.avg_cct),
+            format!("{:.1}", r.violation_s),
+            r.tree_reshapes.to_string(),
+            format!("{:.1}", r.floor_shortfall_gbps),
+            r.unfinished.to_string(),
+        ]);
+    }
+    t.print(&format!(
+        "Multitenant sweep: {} rows on {}/{} (seed {}, {} batch + {} streams + {}x{} ML iters)",
+        rows.len(),
+        cfg.topology,
+        cfg.workload,
+        cfg.seed,
+        cfg.jobs,
+        cfg.streams,
+        cfg.ml_jobs,
+        cfg.ml_iters
+    ));
+    let out = args.get_or("out", "BENCH_multitenant.json");
+    match std::fs::write(out, format!("{}\n", exp::multitenant_json(&cfg, &rows))) {
         Ok(()) => println!("wrote {out}"),
         Err(e) => {
             eprintln!("failed to write {out}: {e}");

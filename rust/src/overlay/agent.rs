@@ -129,6 +129,11 @@ struct Outgoing {
     /// (transfer or rate arrived mid-window) must not be compared against
     /// the allocation — the shortfall is startup, not the link.
     rate_windows: u32,
+    /// Minimum-rate floor (Gbps) for stream-class transfers, 0 for every
+    /// other class. Carried on the `transfer` op so degraded mode can keep
+    /// honoring the guarantee locally: floors are reserved off the top of
+    /// the degraded envelope before the batch fair-share.
+    floor_gbps: f64,
 }
 
 /// Receiver-side reassembly state of one incoming transfer.
@@ -511,37 +516,78 @@ fn ctrl_session(
 }
 
 /// Enter degraded mode: replace every active transfer's enforced rates
-/// with a local fair-share of the last-known per-destination allocation
+/// with a local allocation carved from the last-known per-destination
 /// envelope. For each destination, the envelope is the per-path sum of
-/// the controller-assigned rates across this agent's active transfers;
-/// each transfer gets an equal split scaled by [`DEGRADED_SCALE`], so the
-/// per-path total is at most `DEGRADED_SCALE` × envelope — strictly inside
-/// what the controller last proved feasible. Transfers the controller
-/// never rated stay at zero (nothing is known to be safe for them).
+/// the controller-assigned rates across this agent's active transfers,
+/// and the degraded budget is [`DEGRADED_SCALE`] × its total — strictly
+/// inside what the controller last proved feasible. Stream floors are
+/// reserved off the top of that budget first (each floored transfer gets
+/// its floor, spread across paths proportionally to the envelope); the
+/// remaining budget is fair-shared among the floorless transfers. When
+/// the budget cannot cover the floors, they all scale down by the same
+/// factor (logged) — the guarantee degrades gracefully instead of one
+/// stream starving another. Transfers the controller never rated stay at
+/// zero (nothing is known to be safe for them).
 fn enter_degraded(dc: usize, out: &Arc<Mutex<HashMap<(u64, usize), Outgoing>>>) {
+    #[derive(Default)]
+    struct DstEnv {
+        /// Per-path summed controller allocation.
+        env: Vec<f64>,
+        /// Active transfers without a rate floor.
+        unfloored: usize,
+        /// Summed rate floors of active floored transfers.
+        floors: f64,
+    }
     let mut o = lock_recover(out);
-    let mut envelope: HashMap<usize, (Vec<f64>, usize)> = HashMap::new();
+    let mut envelope: HashMap<usize, DstEnv> = HashMap::new();
     for ((_, dst), e) in o.iter() {
         if e.remaining == 0 {
             continue;
         }
-        let (env, n) = envelope.entry(*dst).or_insert_with(|| (Vec::new(), 0));
-        if env.len() < e.alloc.len() {
-            env.resize(e.alloc.len(), 0.0);
+        let d = envelope.entry(*dst).or_default();
+        if d.env.len() < e.alloc.len() {
+            d.env.resize(e.alloc.len(), 0.0);
         }
         for (p, r) in e.alloc.iter().enumerate() {
-            env[p] += r.max(0.0);
+            d.env[p] += r.max(0.0);
         }
-        *n += 1;
+        if e.floor_gbps > 0.0 {
+            d.floors += e.floor_gbps;
+        } else {
+            d.unfloored += 1;
+        }
+    }
+    for (dst, d) in envelope.iter() {
+        let budget: f64 = d.env.iter().sum::<f64>() * DEGRADED_SCALE;
+        if d.floors > budget + 1e-12 {
+            log::warn!(
+                "agent {dc}: degraded budget to dc {dst} ({budget:.3} Gbps) cannot cover \
+                 stream floors ({:.3} Gbps); floors scaled down proportionally",
+                d.floors
+            );
+        }
     }
     let mut active = 0usize;
     for ((_, dst), e) in o.iter_mut() {
         if e.remaining == 0 {
             continue;
         }
-        let Some((env, n)) = envelope.get(dst) else { continue };
-        let share: Vec<f64> =
-            env.iter().map(|c| c / (*n).max(1) as f64 * DEGRADED_SCALE).collect();
+        let Some(d) = envelope.get(dst) else { continue };
+        let env_total: f64 = d.env.iter().sum();
+        let share: Vec<f64> = if env_total <= 0.0 {
+            vec![0.0; d.env.len()]
+        } else {
+            let budget = env_total * DEGRADED_SCALE;
+            let floor_scale = if d.floors > budget { budget / d.floors } else { 1.0 };
+            // This transfer's total degraded rate: its (possibly scaled)
+            // floor, or an equal share of whatever the floors left over.
+            let total = if e.floor_gbps > 0.0 {
+                e.floor_gbps * floor_scale
+            } else {
+                (budget - d.floors * floor_scale).max(0.0) / d.unfloored.max(1) as f64
+            };
+            d.env.iter().map(|c| c / env_total * total).collect()
+        };
         if e.budget.len() < share.len() {
             e.budget.resize(share.len(), 0.0);
         }
@@ -623,8 +669,15 @@ fn handle_ctrl(
                 alloc: vec![0.0; k],
                 window: vec![0.0; k],
                 rate_windows: 0,
+                floor_gbps: 0.0,
             });
             e.remaining += bytes;
+            // Stream-class transfers carry their rate floor; sanitize
+            // network-supplied values the same way rates are.
+            let floor = msg.get("floor_gbps").and_then(|x| x.as_f64()).unwrap_or(0.0);
+            if floor.is_finite() && floor > 0.0 {
+                e.floor_gbps = floor;
+            }
         }
         // Expect an incoming transfer (receiver side).
         Some("expect") => {
@@ -1090,6 +1143,7 @@ mod tests {
             alloc,
             window: vec![0.0; k],
             rate_windows: 0,
+            floor_gbps: 0.0,
         }
     }
 
@@ -1148,6 +1202,55 @@ mod tests {
         assert!(total <= 6.0 * DEGRADED_SCALE + 1e-12, "within envelope: {total}");
         assert_eq!(o[&(9, 2)].rate, vec![8.0, 8.0], "finished transfer untouched");
         assert_eq!(o[&(1, 3)].rate, vec![0.0], "unrated transfer stays silent");
+    }
+
+    /// Degraded mode honors stream floors locally: the floor comes off the
+    /// top of the degraded budget, the batch transfer splits the surplus,
+    /// and everything stays inside DEGRADED_SCALE × envelope.
+    #[test]
+    fn degraded_floors_reserved_before_fair_share() {
+        let out: Arc<Mutex<HashMap<(u64, usize), Outgoing>>> = Arc::default();
+        {
+            let mut o = out.lock().unwrap();
+            let mut stream = mk_outgoing(1 << 20, vec![4.0, 2.0]);
+            stream.floor_gbps = 2.5;
+            o.insert((1, 2), stream);
+            o.insert((7, 2), mk_outgoing(1 << 20, vec![2.0, 0.0]));
+        }
+        enter_degraded(0, &out);
+        let o = out.lock().unwrap();
+        // Envelope to dc 2 sums to 8 Gbps → degraded budget 4. The
+        // stream's 2.5 floor is reserved first, spread ∝ [6, 2]/8; the
+        // batch transfer gets the 1.5 surplus.
+        let s: f64 = o[&(1, 2)].rate.iter().sum();
+        assert!((s - 2.5).abs() < 1e-9, "stream floor honored: {s}");
+        assert!((o[&(1, 2)].rate[0] - 2.5 * 0.75).abs() < 1e-9);
+        let b: f64 = o[&(7, 2)].rate.iter().sum();
+        assert!((b - 1.5).abs() < 1e-9, "batch gets the surplus: {b}");
+        assert!(s + b <= 8.0 * DEGRADED_SCALE + 1e-9, "within the degraded budget");
+    }
+
+    /// When the degraded budget cannot cover the floors, they all scale
+    /// down by the same factor instead of one stream starving another.
+    #[test]
+    fn degraded_infeasible_floors_scale_down_together() {
+        let out: Arc<Mutex<HashMap<(u64, usize), Outgoing>>> = Arc::default();
+        {
+            let mut o = out.lock().unwrap();
+            for (id, floor) in [(1u64, 6.0), (2, 2.0)] {
+                let mut s = mk_outgoing(1 << 20, vec![2.0, 2.0]);
+                s.floor_gbps = floor;
+                o.insert((id, 3), s);
+            }
+        }
+        enter_degraded(0, &out);
+        let o = out.lock().unwrap();
+        // Envelope sums to 8 → budget 4, floors sum to 8 → scale ×0.5.
+        let a: f64 = o[&(1, 3)].rate.iter().sum();
+        let b: f64 = o[&(2, 3)].rate.iter().sum();
+        assert!((a - 3.0).abs() < 1e-9, "{a}");
+        assert!((b - 1.0).abs() < 1e-9, "{b}");
+        assert!(a + b <= 8.0 * DEGRADED_SCALE + 1e-9, "within the degraded budget");
     }
 
     /// Satellite: the data-connection pool must shrink when a rate push

@@ -11,7 +11,7 @@
 
 use super::protocol::{self, CoflowStatus, FlowSpec, ResyncEntry, TelemetrySample, PROBE_COFLOW};
 use super::rules::RuleTable;
-use crate::coflow::{Coflow, CoflowId, Flow};
+use crate::coflow::{Coflow, CoflowId, Flow, ServiceClass};
 use crate::engine::{EngineConfig, RoundEngine, ShardedEngine, WanReaction};
 use crate::net::telemetry::{self, TelemetryConfig};
 use crate::net::{LinkEvent, Wan};
@@ -1098,6 +1098,11 @@ fn handle_submit(msg: &Json, state: &Arc<Mutex<State>>) -> Json {
         .map(|arr| arr.iter().filter_map(FlowSpec::from_json).collect())
         .unwrap_or_default();
     let deadline = msg.get("deadline").and_then(|d| d.as_f64());
+    // Malformed classes are rejected outright — silently downgrading a
+    // stream to batch would drop its rate floor on the floor.
+    let Some(class) = protocol::class_from_json(msg.get("class")) else {
+        return Json::from_pairs([("error", Json::from("malformed service class"))]);
+    };
     let mut st = state.lock().unwrap();
     // A flow endpoint outside the WAN would index out of the path sets in
     // the next scheduling round: reject the submission instead of panicking
@@ -1105,6 +1110,11 @@ fn handle_submit(msg: &Json, state: &Arc<Mutex<State>>) -> Json {
     let n = st.engine.wan().num_nodes();
     if flows.iter().any(|f| f.src_dc >= n || f.dst_dc >= n) {
         return Json::from_pairs([("error", Json::from("flow endpoint out of range"))]);
+    }
+    if let ServiceClass::MlSync { tree, .. } = &class {
+        if tree.participants().iter().any(|&p| p >= n) {
+            return Json::from_pairs([("error", Json::from("tree node out of range"))]);
+        }
     }
     let id = st.next_id;
     st.next_id += 1;
@@ -1118,7 +1128,7 @@ fn handle_submit(msg: &Json, state: &Arc<Mutex<State>>) -> Json {
             volume: bytes_to_gbit(f.bytes),
         })
         .collect();
-    let mut spec = Coflow::new(id, coflow_flows);
+    let mut spec = Coflow::new(id, coflow_flows).with_class(class);
     if let Some(d) = deadline {
         spec = spec.with_deadline(d);
     }
@@ -1129,10 +1139,12 @@ fn handle_submit(msg: &Json, state: &Arc<Mutex<State>>) -> Json {
     let deadline_abs = deadline.map(|d| now_s + d);
     cstate.deadline = deadline_abs;
 
-    // Admission control (§3.2/§5.2: returns -1 when the deadline cannot be
-    // met) against up-to-date remaining estimates.
+    // Admission control against up-to-date remaining estimates: deadline
+    // coflows per §3.2/§5.2 (returns -1 when the deadline cannot be met),
+    // streams against the believed headroom left by already-admitted
+    // floors.
     let mut admitted = true;
-    if cstate.deadline.is_some() {
+    if cstate.deadline.is_some() || cstate.rate_floor().is_some() {
         st.drain_to_now();
         admitted = st.engine.admit(now_s, &cstate);
     }
@@ -1271,14 +1283,20 @@ fn send_transfer_msgs(st: &mut State, id: CoflowId, flows: &[FlowSpec]) {
             a.tx.flush(Duration::from_secs(2));
         }
     }
+    // Streams carry their per-FlowGroup floor to the source agent so it
+    // can keep honoring the guarantee locally in degraded mode.
+    let floor = st.engine.get(id).and_then(|c| c.rate_floor());
     for (&(src, dst), &bytes) in &by_pair {
         if let Some(a) = st.agents.get_mut(&src) {
-            let m = Json::from_pairs([
+            let mut m = Json::from_pairs([
                 ("op", Json::from("transfer")),
                 ("coflow", id.into()),
                 ("dst", dst.into()),
                 ("bytes", bytes.into()),
             ]);
+            if let Some(f) = floor {
+                m.set("floor_gbps", f.into());
+            }
             a.tx.send(m);
         }
     }

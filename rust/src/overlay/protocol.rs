@@ -6,6 +6,7 @@
 //! agent persistent connections): a fixed 28-byte header followed by the
 //! chunk payload.
 
+use crate::coflow::{AggTree, ServiceClass};
 use crate::util::json::Json;
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -52,6 +53,72 @@ impl FlowSpec {
             dst_dc: j.get("dst")?.as_u64()? as usize,
             bytes: j.get("bytes")?.as_u64()?,
         })
+    }
+}
+
+/// Serialize a coflow's service class for the `submit_coflow` message.
+/// `Batch` (and `Deadline`, which is a tag derived from the separate
+/// `deadline` field rather than independent wire state) returns `None` —
+/// the `class` key is simply absent, so class-free clients and the
+/// pre-class controller interoperate byte-identically.
+pub fn class_to_json(class: &ServiceClass) -> Option<Json> {
+    match class {
+        ServiceClass::Batch | ServiceClass::Deadline => None,
+        ServiceClass::Stream { rate_floor_gbps } => Some(Json::from_pairs([
+            ("kind", Json::from("stream")),
+            ("floor_gbps", (*rate_floor_gbps).into()),
+        ])),
+        ServiceClass::MlSync { tree, iteration_gbit } => Some(Json::from_pairs([
+            ("kind", Json::from("ml-sync")),
+            ("root", Json::from(tree.root as u64)),
+            (
+                "edges",
+                Json::Arr(
+                    tree.edges
+                        .iter()
+                        .map(|&(c, p)| {
+                            Json::Arr(vec![Json::from(c as u64), Json::from(p as u64)])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("iter_gbit", (*iteration_gbit).into()),
+        ])),
+    }
+}
+
+/// Parse the optional `class` field of a `submit_coflow` message. A missing
+/// field is `Batch`; a present-but-malformed one (unknown kind, bad floor,
+/// malformed edge list) is `None` so the controller rejects the submission
+/// instead of silently downgrading a stream to batch.
+pub fn class_from_json(j: Option<&Json>) -> Option<ServiceClass> {
+    let Some(j) = j else { return Some(ServiceClass::Batch) };
+    match j.get("kind")?.as_str()? {
+        "stream" => {
+            let floor = j.get("floor_gbps")?.as_f64()?;
+            if !floor.is_finite() || floor <= 0.0 {
+                return None;
+            }
+            Some(ServiceClass::Stream { rate_floor_gbps: floor })
+        }
+        "ml-sync" => {
+            let root = j.get("root")?.as_u64()? as usize;
+            let edges = j
+                .get("edges")?
+                .as_arr()?
+                .iter()
+                .map(|e| {
+                    let pair = e.as_arr()?;
+                    if pair.len() != 2 {
+                        return None;
+                    }
+                    Some((pair[0].as_u64()? as usize, pair[1].as_u64()? as usize))
+                })
+                .collect::<Option<Vec<_>>>()?;
+            let iteration_gbit = j.get("iter_gbit").and_then(|x| x.as_f64()).unwrap_or(0.0);
+            Some(ServiceClass::MlSync { tree: AggTree { root, edges }, iteration_gbit })
+        }
+        _ => None,
     }
 }
 
@@ -341,6 +408,44 @@ mod tests {
         ] {
             assert_eq!(CoflowStatus::from_json(&s.to_json()), s);
         }
+    }
+
+    #[test]
+    fn service_class_roundtrip() {
+        // Batch and Deadline put nothing on the wire; an absent key parses
+        // back to Batch (Deadline is re-derived from the deadline field).
+        assert_eq!(class_to_json(&ServiceClass::Batch), None);
+        assert_eq!(class_to_json(&ServiceClass::Deadline), None);
+        assert_eq!(class_from_json(None), Some(ServiceClass::Batch));
+
+        let stream = ServiceClass::Stream { rate_floor_gbps: 1.25 };
+        let j = class_to_json(&stream).unwrap();
+        assert_eq!(class_from_json(Some(&j)), Some(stream));
+
+        let ml = ServiceClass::MlSync {
+            tree: AggTree { root: 2, edges: vec![(0, 2), (1, 2), (3, 1)] },
+            iteration_gbit: 12.5,
+        };
+        let j = class_to_json(&ml).unwrap();
+        assert_eq!(class_from_json(Some(&j)), Some(ml));
+
+        // Malformed classes must be rejected, not downgraded to Batch.
+        assert_eq!(class_from_json(Some(&Json::obj())), None);
+        let bad_kind = Json::from_pairs([("kind", Json::from("bulk"))]);
+        assert_eq!(class_from_json(Some(&bad_kind)), None);
+        for bad_floor in [0.0, -1.0, f64::NAN] {
+            let j = Json::from_pairs([
+                ("kind", Json::from("stream")),
+                ("floor_gbps", bad_floor.into()),
+            ]);
+            assert_eq!(class_from_json(Some(&j)), None, "floor {bad_floor}");
+        }
+        let bad_edges = Json::from_pairs([
+            ("kind", Json::from("ml-sync")),
+            ("root", Json::from(0u64)),
+            ("edges", Json::Arr(vec![Json::Arr(vec![Json::from(1u64)])])),
+        ]);
+        assert_eq!(class_from_json(Some(&bad_edges)), None);
     }
 
     #[test]

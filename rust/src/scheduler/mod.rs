@@ -14,7 +14,7 @@ pub mod terra;
 
 pub use terra::TerraPolicy;
 
-use crate::coflow::{CoflowId, FlowGroup};
+use crate::coflow::{CoflowId, FlowGroup, ServiceClass};
 use crate::engine::GammaCache;
 use crate::lp::{GroupDemand, McfInstance, SolverWorkspace};
 use crate::net::paths::PathSet;
@@ -35,12 +35,21 @@ pub struct CoflowState {
     pub groups: Vec<FlowGroup>,
     /// Remaining volume per FlowGroup in Gbit.
     pub remaining: Vec<f64>,
+    /// Traffic class driving admission, ordering, and floor reservation.
+    /// `Batch` for everything class-free (structural default).
+    pub class: ServiceClass,
 }
 
 impl CoflowState {
     pub fn from_coflow(c: &crate::coflow::Coflow) -> CoflowState {
         let groups = c.flow_groups();
         let remaining = groups.iter().map(|g| g.volume).collect();
+        // Deadline-bearing batch coflows are the Deadline class; the tag is
+        // derived so pre-class call sites need no change.
+        let class = match (&c.class, c.deadline) {
+            (ServiceClass::Batch, Some(_)) => ServiceClass::Deadline,
+            (cls, _) => cls.clone(),
+        };
         CoflowState {
             id: c.id,
             arrival: c.arrival,
@@ -48,6 +57,7 @@ impl CoflowState {
             admitted: false,
             groups,
             remaining,
+            class,
         }
     }
 
@@ -57,6 +67,12 @@ impl CoflowState {
 
     pub fn done(&self) -> bool {
         self.remaining.iter().all(|&r| r <= 1e-9)
+    }
+
+    /// The per-FlowGroup rate floor this coflow must sustain, if its class
+    /// has one.
+    pub fn rate_floor(&self) -> Option<f64> {
+        self.class.rate_floor()
     }
 }
 
@@ -126,6 +142,10 @@ pub struct RoundStats {
     /// Coflows moved between engine shards by the sharded front-end
     /// (cross-shard arrivals / edge-set changes). Always 0 single-shard.
     pub shard_migrations: usize,
+    /// Stream rate-floor Gbps the two-level filling could **not** reserve
+    /// this round (summed over rounds and violating groups). Infeasible
+    /// floors surface here instead of being silently clamped.
+    pub floor_shortfall_gbps: f64,
 }
 
 impl RoundStats {
@@ -137,6 +157,7 @@ impl RoundStats {
         self.component_solves += other.component_solves;
         self.component_reuses += other.component_reuses;
         self.shard_migrations += other.shard_migrations;
+        self.floor_shortfall_gbps += other.floor_shortfall_gbps;
     }
 }
 

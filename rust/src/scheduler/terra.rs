@@ -167,7 +167,33 @@ impl TerraPolicy {
         let mut alloc = Allocation::default();
         let caps_full = net.wan.capacities();
         // Line 2 of Pseudocode 1: scale down by (1 - α).
-        let scaled: Vec<f64> = caps_full.iter().map(|c| c * (1.0 - self.cfg.alpha)).collect();
+        let mut scaled: Vec<f64> = caps_full.iter().map(|c| c * (1.0 - self.cfg.alpha)).collect();
+
+        // Two-level floor filling, level 1 (stream service class): reserve
+        // every stream's per-group rate floor *before* the batch machinery
+        // sees the WAN, so Γ-ordering and max-min filling distribute only
+        // the surplus. Floors that don't fit surface as shortfall Gbps in
+        // the round stats — never as a silent clamp. Class-free rounds skip
+        // this entirely (`scaled` untouched, bit-identical path).
+        let mut streams: Vec<usize> = Vec::new();
+        if coflows.iter().any(|c| c.rate_floor().is_some() && !c.done()) {
+            let (demands, floors, owners) = stream_floor_demands(
+                coflows.iter().enumerate().map(|(i, c)| (i, c)),
+                net,
+                self.cfg.k,
+            );
+            let (reserved, shortfall) = maxmin::reserve_floors(&mut scaled, &demands, &floors);
+            for (di, &(i, gi)) in owners.iter().enumerate() {
+                let cf = &coflows[i];
+                let entry =
+                    alloc.rates.entry(cf.id).or_insert_with(|| vec![Vec::new(); cf.groups.len()]);
+                entry[gi] = reserved[di].clone();
+                if !streams.contains(&i) {
+                    streams.push(i);
+                }
+            }
+            self.stats.floor_shortfall_gbps += shortfall.iter().sum::<f64>();
+        }
 
         // Standalone Γ per coflow (for the SRTF order). With a cache, each
         // Γ is an LP solve only on a miss — i.e. once per (coflow, WAN
@@ -175,6 +201,12 @@ impl TerraPolicy {
         // rescale and discrete changes by dirty-set invalidation.
         let mut order: Vec<(usize, f64)> = Vec::with_capacity(coflows.len());
         for (i, cf) in coflows.iter().enumerate() {
+            // Streams never enter Γ/SRTF ordering: they are not racing to
+            // complete, their floor is already reserved, and their huge
+            // lifetime volumes would distort SRTF for everyone else.
+            if cf.rate_floor().is_some() {
+                continue;
+            }
             let total_rem = cf.total_remaining();
             let cached = cache.as_deref().and_then(|c| c.lookup(cf.id, total_rem));
             let gamma = match cached {
@@ -276,7 +308,10 @@ impl TerraPolicy {
         }
 
         // Work conservation (Pseudocode 1 lines 14–15) on everything left,
-        // including the α starvation share. C_Failed gets priority.
+        // including the α starvation share. C_Failed gets priority. Streams
+        // participate too (appended after the batch coflows): their floor
+        // is a minimum, not a cap, so they may burst into the surplus.
+        scheduled.extend(streams);
         let mut used = alloc_usage(&alloc, coflows, net, caps_full.len());
         let mut leftover: Vec<f64> =
             caps_full.iter().zip(&used).map(|(c, u)| (c - u).max(0.0)).collect();
@@ -441,8 +476,12 @@ impl Policy for TerraPolicy {
         }))
     }
 
-    /// Pseudocode 2: admit a deadline coflow iff its minimum CCT on the
-    /// guaranteed-residual WAN stays within η·D.
+    /// Class-aware admission. Deadline coflows follow Pseudocode 2: admit
+    /// iff the minimum CCT on the guaranteed-residual WAN stays within η·D.
+    /// Stream coflows admit iff their full rate floor fits the residual
+    /// headroom after the α reservation and the floors already promised to
+    /// admitted streams — an admitted stream's floor is a guarantee, so
+    /// over-admitting floors would manufacture violations by construction.
     fn admit(
         &mut self,
         now: f64,
@@ -450,7 +489,34 @@ impl Policy for TerraPolicy {
         coflows: &[CoflowState],
         net: &NetView,
     ) -> bool {
+        if candidate.rate_floor().is_some() {
+            let mut residual: Vec<f64> =
+                net.wan.capacities().iter().map(|c| c * (1.0 - self.cfg.alpha)).collect();
+            let (demands, floors, _) = stream_floor_demands(
+                coflows
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, c)| c.admitted && !c.done()),
+                net,
+                self.cfg.k,
+            );
+            let _ = maxmin::reserve_floors(&mut residual, &demands, &floors);
+            let (cand_demands, cand_floors, _) =
+                stream_floor_demands(std::iter::once((0, candidate)), net, self.cfg.k);
+            let (_, shortfall) = maxmin::reserve_floors(&mut residual, &cand_demands, &cand_floors);
+            return shortfall.iter().all(|&s| s <= 1e-9);
+        }
         let Some(deadline) = candidate.deadline else { return true };
+        // Defense in depth for the invalid-deadline fix: a non-finite
+        // absolute deadline reaching admission (e.g. straight off the wire,
+        // bypassing `Coflow::with_deadline`) is treated as "no deadline".
+        if !deadline.is_finite() {
+            log::warn!(
+                "coflow {}: non-finite deadline reached admission; treating as none",
+                candidate.id
+            );
+            return true;
+        }
         let caps_full = net.wan.capacities();
         let mut residual: Vec<f64> =
             caps_full.iter().map(|c| c * (1.0 - self.cfg.alpha)).collect();
@@ -486,6 +552,34 @@ impl Policy for TerraPolicy {
     fn take_stats(&mut self) -> RoundStats {
         std::mem::take(&mut self.stats)
     }
+}
+
+/// Collect the floor-bearing (stream) coflows' unfinished FlowGroups as
+/// `GroupDemand`s with parallel per-group floors and `(coflow idx, group
+/// idx)` owners, in slice (= arrival) order — the deterministic reservation
+/// order for two-level filling and stream admission.
+fn stream_floor_demands<'a>(
+    coflows: impl Iterator<Item = (usize, &'a CoflowState)>,
+    net: &NetView,
+    k: usize,
+) -> (Vec<lp::GroupDemand>, Vec<f64>, Vec<(usize, usize)>) {
+    let mut demands = Vec::new();
+    let mut floors = Vec::new();
+    let mut owners = Vec::new();
+    for (i, cf) in coflows {
+        let Some(floor) = cf.rate_floor() else { continue };
+        for (gi, (g, &rem)) in cf.groups.iter().zip(&cf.remaining).enumerate() {
+            if rem <= 1e-9 {
+                continue;
+            }
+            let paths: Vec<Vec<usize>> =
+                net.paths.get(g.src, g.dst).iter().take(k).map(|p| p.edges.clone()).collect();
+            demands.push(lp::GroupDemand { volume: rem, paths });
+            floors.push(floor);
+            owners.push((i, gi));
+        }
+    }
+    (demands, floors, owners)
 }
 
 /// Get (or rebuild) `cf`'s cached flat CSR block in the workspace and
@@ -670,6 +764,86 @@ mod tests {
         // With work conservation the single coflow still gets the full WAN.
         let r: f64 = alloc.rates[&1][0].iter().sum();
         assert!(r > 15.0, "work conservation should fill alpha share, r={r}");
+    }
+
+    fn stream_state(id: u64, flows: Vec<(usize, usize, f64)>, floor: f64) -> CoflowState {
+        let flows = flows
+            .into_iter()
+            .enumerate()
+            .map(|(i, (s, d, v))| Flow { id: i as u64, src_dc: s, dst_dc: d, volume: v })
+            .collect();
+        CoflowState::from_coflow(
+            &Coflow::new(id, flows)
+                .with_class(crate::coflow::ServiceClass::Stream { rate_floor_gbps: floor }),
+        )
+    }
+
+    /// A stream's floor is reserved before batch filling: the batch coflow
+    /// loses exactly the floor, the stream gets at least it, and the whole
+    /// allocation stays feasible.
+    #[test]
+    fn stream_floor_reserved_before_batch() {
+        let wan = topologies::fig1a();
+        let paths = PathSet::compute(&wan, 3);
+        let net = NetView { wan: &wan, paths: &paths };
+        let batch = state(1, vec![(0, 1, 50.0 * GB)]);
+        let stream = stream_state(2, vec![(0, 1, 100.0 * GB)], 4.0);
+        let mut terra = TerraPolicy::new(TerraConfig { alpha: 0.0, ..Default::default() });
+        let all = [batch.clone(), stream.clone()];
+        let alloc = terra.allocate(0.0, RoundTrigger::Initial, &all, &net);
+        let stream_rate: f64 = alloc.rates[&2].iter().flatten().sum();
+        assert!(stream_rate >= 4.0 - 1e-6, "floor not honored: {stream_rate}");
+        let usage = alloc.edge_usage(&all, &net, wan.num_edges());
+        for (u, c) in usage.iter().zip(wan.capacities()) {
+            assert!(*u <= c + 1e-6, "over capacity");
+        }
+        // Work conservation still fills the WAN for the batch coflow.
+        let batch_rate: f64 = alloc.rates[&1].iter().flatten().sum();
+        assert!(batch_rate > 0.0);
+        assert_eq!(terra.take_stats().floor_shortfall_gbps, 0.0);
+    }
+
+    /// An infeasible floor surfaces as shortfall in the round stats rather
+    /// than being silently clamped away.
+    #[test]
+    fn infeasible_floor_surfaces_as_shortfall() {
+        let wan = topologies::fig1a();
+        let paths = PathSet::compute(&wan, 3);
+        let net = NetView { wan: &wan, paths: &paths };
+        // fig1a links are 10 Gbps; a 500 Gbps floor cannot fit anywhere.
+        let stream = stream_state(1, vec![(0, 1, 100.0 * GB)], 500.0);
+        let mut terra = TerraPolicy::new(TerraConfig { alpha: 0.0, ..Default::default() });
+        let alloc = terra.allocate(0.0, RoundTrigger::Initial, &[stream.clone()], &net);
+        let st = terra.take_stats();
+        assert!(st.floor_shortfall_gbps > 0.0, "shortfall={}", st.floor_shortfall_gbps);
+        // What capacity there was *is* still reserved (best effort).
+        let got: f64 = alloc.rates[&1].iter().flatten().sum();
+        assert!(got > 0.0);
+        let usage = alloc.edge_usage(&[stream], &net, wan.num_edges());
+        for (u, c) in usage.iter().zip(wan.capacities()) {
+            assert!(*u <= c + 1e-6);
+        }
+    }
+
+    /// Stream admission: floors admit while they fit the headroom and are
+    /// rejected once admitted streams have claimed it.
+    #[test]
+    fn stream_admission_respects_headroom() {
+        let wan = topologies::fig1a();
+        let paths = PathSet::compute(&wan, 3);
+        let net = NetView { wan: &wan, paths: &paths };
+        let mut terra = TerraPolicy::default();
+        // 0->1 offers 20 Gbps across both paths; α=0.1 leaves 18.
+        let s1 = stream_state(1, vec![(0, 1, 100.0 * GB)], 8.0);
+        assert!(terra.admit(0.0, &s1, &[], &net));
+        let mut admitted = s1.clone();
+        admitted.admitted = true;
+        // A second 12 Gbps floor no longer fits next to the admitted 8.
+        let s2 = stream_state(2, vec![(0, 1, 100.0 * GB)], 12.0);
+        assert!(!terra.admit(0.0, &s2, &[admitted.clone()], &net));
+        // A modest floor still fits.
+        let s3 = stream_state(3, vec![(0, 1, 100.0 * GB)], 2.0);
+        assert!(terra.admit(0.0, &s3, &[admitted], &net));
     }
 
     #[test]

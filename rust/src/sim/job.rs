@@ -5,7 +5,7 @@
 //! finish minus the job's arrival — `JCT = Σ (T_comm + T_comp)` along the
 //! DAG's critical path (§6.7, Fig 14).
 
-use crate::coflow::Flow;
+use crate::coflow::{Flow, ServiceClass};
 
 /// One computation stage plus its outgoing shuffle.
 #[derive(Clone, Debug, Default)]
@@ -19,6 +19,9 @@ pub struct Stage {
     pub flows: Vec<Flow>,
     /// Optional relative deadline for the stage's coflow.
     pub deadline: Option<f64>,
+    /// Service class of the stage's coflow ([`ServiceClass::Batch`] by
+    /// default — the classic GDA shuffle).
+    pub class: ServiceClass,
 }
 
 /// A GDA job: a DAG of stages.
@@ -60,7 +63,11 @@ impl Job {
 
     /// Single-stage MapReduce-style job.
     pub fn map_reduce(id: u64, arrival: f64, compute_s: f64, flows: Vec<Flow>) -> Job {
-        Job { id, arrival, stages: vec![Stage { deps: vec![], compute_s, flows, deadline: None }] }
+        Job {
+            id,
+            arrival,
+            stages: vec![Stage { deps: vec![], compute_s, flows, ..Default::default() }],
+        }
     }
 }
 

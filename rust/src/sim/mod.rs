@@ -19,7 +19,7 @@ pub mod report;
 pub use job::{Job, Stage};
 pub use report::{foi, foi_volume_correlation, CoflowRecord, JobRecord, Report};
 
-use crate::coflow::{Coflow, CoflowId};
+use crate::coflow::{Coflow, CoflowId, ServiceClass};
 use crate::engine::{EngineConfig, ShardedEngine};
 use crate::net::dynamics::AnnouncedWindow;
 use crate::net::telemetry::{self, TelemetryConfig};
@@ -208,6 +208,9 @@ pub struct Simulation {
     /// The next round is the restarted controller's reconstruction round;
     /// its wall-clock cost books as [`Report::recovery_round_s`].
     pending_recovery: bool,
+    /// True once any stream (rate-floor) coflow was admitted — gates the
+    /// per-advance violation-seconds scan so class-free runs pay nothing.
+    has_streams: bool,
 }
 
 impl Simulation {
@@ -244,6 +247,7 @@ impl Simulation {
             record_idx: HashMap::new(),
             down: false,
             pending_recovery: false,
+            has_streams: false,
         };
         if sim.truth.is_some() {
             let t = sim.cfg.telemetry.sample_interval_s.max(1e-3);
@@ -573,6 +577,7 @@ impl Simulation {
         self.report.component_solves += st.component_solves;
         self.report.component_reuses += st.component_reuses;
         self.report.shard_migrations += st.shard_migrations;
+        self.report.floor_shortfall_gbps += st.floor_shortfall_gbps;
         self.report.clone()
     }
 
@@ -600,6 +605,37 @@ impl Simulation {
                     *factors.entry(cs.id).or_insert(1.0) *= scale;
                 });
                 throttle = Some(factors);
+            }
+            if self.has_streams {
+                // Violation-seconds: an admitted stream whose achieved
+                // rate (allocation after truth throttling and degraded
+                // scaling) sits below its floor on any unfinished group
+                // accrues `dt`.
+                let Simulation { engine, report, record_idx, .. } = &mut *self;
+                engine.visit_allocations(|cs, rates| {
+                    let Some(floor) = cs.rate_floor() else { return };
+                    if !cs.admitted || cs.done() {
+                        return;
+                    }
+                    let factor =
+                        throttle.as_ref().and_then(|m| m.get(&cs.id)).copied().unwrap_or(1.0);
+                    let violated = (0..cs.groups.len()).any(|gi| {
+                        if cs.remaining[gi] <= 1e-9 {
+                            return false;
+                        }
+                        let rate: f64 = rates
+                            .and_then(|r| r.get(gi))
+                            .map(|r| r.iter().sum())
+                            .unwrap_or(0.0);
+                        rate * factor < floor - 1e-9
+                    });
+                    if violated {
+                        if let Some(&idx) = record_idx.get(&cs.id) {
+                            report.coflows[idx].violation_s += dt;
+                        }
+                        report.stream_violation_s += dt;
+                    }
+                });
             }
             let moved = self.engine.drain_with(dt, 0.0, throttle.as_ref());
             self.report.transferred_gbit += moved;
@@ -815,11 +851,22 @@ impl Simulation {
             self.complete_stage(job, stage);
             return false;
         }
+        let mut flows = st.flows.clone();
+        let mut class = st.class.clone();
+        let st_deadline = st.deadline;
+        if let ServiceClass::MlSync { tree, .. } = &mut class {
+            // Network-aware tree adaptation: each iteration re-arrives as
+            // its own coflow, so reshaping is a per-submit decision against
+            // the scheduler's *believed* WAN — a degraded tree link makes
+            // the child bypass its parent and ship straight to the root
+            // (the auxiliary route) for this iteration.
+            let reshapes = reshape_degraded_tree(tree, &mut flows, self.engine.wan());
+            self.report.tree_reshapes += reshapes;
+        }
         let id = self.next_coflow_id;
         self.next_coflow_id += 1;
-        let mut coflow =
-            Coflow::new(id, st.flows.clone()).with_arrival(self.now);
-        if let Some(d) = st.deadline {
+        let mut coflow = Coflow::new(id, flows).with_arrival(self.now).with_class(class);
+        if let Some(d) = st_deadline {
             coflow = coflow.with_deadline(d);
         }
         let mut state = CoflowState::from_coflow(&coflow);
@@ -829,10 +876,13 @@ impl Simulation {
         let min_cct = self.engine.standalone_min_cct(&state);
 
         let mut admitted = true;
-        if state.deadline.is_some() {
+        if state.deadline.is_some() || state.rate_floor().is_some() {
             admitted = self.engine.admit(self.now, &state);
         }
         state.admitted = admitted;
+        if admitted && state.rate_floor().is_some() {
+            self.has_streams = true;
+        }
 
         self.owners.insert(id, (job, stage));
         self.record_idx.insert(id, self.report.coflows.len());
@@ -845,6 +895,8 @@ impl Simulation {
             min_cct,
             deadline: state.deadline,
             admitted,
+            class: state.class.name(),
+            violation_s: 0.0,
         });
         if !admitted {
             // Rejected coflows fall back to the framework's default
@@ -895,6 +947,10 @@ impl Simulation {
         self.round_inner(trigger, trigger == RoundTrigger::WanChange);
     }
 
+    /// Fraction of base capacity below which a believed tree link counts
+    /// as degraded and triggers an MlSync aggregation-tree reshape.
+    pub const TREE_RESHAPE_FRACTION: f64 = 0.5;
+
     fn round_inner(&mut self, trigger: RoundTrigger, count_reaction: bool) {
         let t0 = std::time::Instant::now();
         self.engine.round(self.now, trigger);
@@ -912,6 +968,44 @@ impl Simulation {
             self.report.max_reaction_s = self.report.max_reaction_s.max(dt);
         }
     }
+}
+
+/// Reshape an MlSync aggregation tree against the scheduler's believed
+/// WAN: any non-root tree edge (child → parent) whose direct link is
+/// missing, down, or believed below
+/// [`Simulation::TREE_RESHAPE_FRACTION`] of base capacity is replaced by
+/// an auxiliary child → root route, and the iteration's matching flows
+/// move with it. Returns the number of re-parented edges.
+fn reshape_degraded_tree(
+    tree: &mut crate::coflow::AggTree,
+    flows: &mut [crate::coflow::Flow],
+    wan: &Wan,
+) -> usize {
+    let root = tree.root;
+    let mut reshapes = 0;
+    for (child, parent) in tree.edges.iter_mut() {
+        if *parent == root || *child == root {
+            continue;
+        }
+        let degraded = match wan.edge_between(*child, *parent) {
+            None => true,
+            Some(e) => {
+                let l = wan.link(e);
+                !l.up || l.avail() < Simulation::TREE_RESHAPE_FRACTION * l.base_capacity
+            }
+        };
+        if !degraded {
+            continue;
+        }
+        for f in flows.iter_mut() {
+            if f.src_dc == *child && f.dst_dc == *parent {
+                f.dst_dc = root;
+            }
+        }
+        *parent = root;
+        reshapes += 1;
+    }
+    reshapes
 }
 
 #[cfg(test)]
@@ -984,8 +1078,18 @@ mod tests {
             id: 1,
             arrival: 0.0,
             stages: vec![
-                Stage { deps: vec![], compute_s: 0.0, flows: vec![mk_flow(0, 0, 1, 5.0)], deadline: None },
-                Stage { deps: vec![0], compute_s: 1.0, flows: vec![mk_flow(0, 1, 2, 5.0)], deadline: None },
+                Stage {
+                    deps: vec![],
+                    compute_s: 0.0,
+                    flows: vec![mk_flow(0, 0, 1, 5.0)],
+                    ..Default::default()
+                },
+                Stage {
+                    deps: vec![0],
+                    compute_s: 1.0,
+                    flows: vec![mk_flow(0, 1, 2, 5.0)],
+                    ..Default::default()
+                },
             ],
         };
         let rep = sim.run_jobs(vec![job]);
@@ -1289,6 +1393,83 @@ mod tests {
         assert_eq!(rep.chaos_kills, 1);
         assert!(rep.est_samples > 0);
         assert!((rep.preserved_fraction() - 1.0).abs() < 1e-9);
+    }
+
+    /// A stream with a feasible floor accrues no violation-seconds while
+    /// capacity lasts; once the WAN collapses below the floor, every
+    /// simulated second below the floor books as a violation and the
+    /// round-level shortfall surfaces in the report.
+    #[test]
+    fn stream_violation_seconds_accrue_under_collapse() {
+        let wan = topologies::fig1a();
+        let mut sim = Simulation::new(wan, terra0(), SimConfig::default());
+        let mut job = Job::map_reduce(1, 0.0, 0.0, vec![mk_flow(0, 0, 1, 2.5)]); // 20 Gbit
+        job.stages[0].class = ServiceClass::Stream { rate_floor_gbps: 4.0 };
+        sim.add_job(job);
+        // Both 0→1 paths collapse to 1 Gbps at t=0.5: 2 Gbps total < 4.
+        sim.add_wan_event(0.5, LinkEvent::SetBandwidth(0, 1, 1.0));
+        sim.add_wan_event(0.5, LinkEvent::SetBandwidth(0, 2, 1.0));
+        let rep = sim.run();
+        assert_eq!(rep.unfinished(), 0);
+        let rec = &rep.coflows[0];
+        assert_eq!(rec.class, "stream");
+        assert!(rec.admitted, "feasible floor must admit");
+        assert!(
+            rep.stream_violation_s > 2.0,
+            "collapse below the floor must accrue violation-seconds: {}",
+            rep.stream_violation_s
+        );
+        assert!((rec.violation_s - rep.stream_violation_s).abs() < 1e-9);
+        assert!(
+            rep.floor_shortfall_gbps > 0.0,
+            "infeasible floors must surface as round-level shortfall"
+        );
+    }
+
+    /// A stream alone on a healthy WAN: floor honored throughout, zero
+    /// violation-seconds, zero shortfall.
+    #[test]
+    fn stream_with_headroom_has_no_violations() {
+        let wan = topologies::fig1a();
+        let mut sim = Simulation::new(wan, terra0(), SimConfig::default());
+        let mut job = Job::map_reduce(1, 0.0, 0.0, vec![mk_flow(0, 0, 1, 5.0)]);
+        job.stages[0].class = ServiceClass::Stream { rate_floor_gbps: 4.0 };
+        let rep = sim.run_jobs(vec![job]);
+        assert_eq!(rep.unfinished(), 0);
+        assert_eq!(rep.stream_violation_s, 0.0);
+        assert_eq!(rep.floor_shortfall_gbps, 0.0);
+        assert_eq!(rep.class_count("stream"), 1);
+    }
+
+    /// MlSync iterations re-arrive as separate coflows and reshape their
+    /// aggregation tree when a tree link degrades: after 0→2 collapses,
+    /// the second iteration routes node 0's update straight to the root.
+    #[test]
+    fn mlsync_reshapes_tree_on_degraded_link() {
+        use crate::coflow::AggTree;
+        let wan = topologies::fig1a();
+        let mut sim = Simulation::new(wan, terra0(), SimConfig::default());
+        let tree = AggTree { root: 1, edges: vec![(0, 2), (2, 1)] };
+        let iter_flows =
+            vec![mk_flow(0, 0, 2, 1.0), mk_flow(1, 2, 1, 1.0)]; // 8 Gbit per edge
+        let mk_stage = |deps: Vec<usize>| Stage {
+            deps,
+            compute_s: 2.0,
+            flows: iter_flows.clone(),
+            deadline: None,
+            class: ServiceClass::MlSync { tree: tree.clone(), iteration_gbit: 8.0 },
+        };
+        let job = Job { id: 1, arrival: 0.0, stages: vec![mk_stage(vec![]), mk_stage(vec![0])] };
+        sim.add_job(job);
+        // Tree link 0→2 degrades to 2 Gbps (< half of base 10) between
+        // iteration 1 (done ~2.4 s) and iteration 2's submit (~4.4 s);
+        // iteration 2 must re-parent node 0 straight to the root.
+        sim.add_wan_event(2.5, LinkEvent::SetBandwidth(0, 2, 2.0));
+        let rep = sim.run();
+        assert_eq!(rep.unfinished(), 0);
+        assert_eq!(rep.class_count("ml-sync"), 2, "one coflow per iteration");
+        assert_eq!(rep.tree_reshapes, 1, "exactly the degraded edge reshapes");
+        assert!(rep.avg_iteration_s() > 0.0);
     }
 
     /// Chaos on the sharded control plane: the restarted controller

@@ -21,6 +21,11 @@ pub struct CoflowRecord {
     pub deadline: Option<f64>,
     /// False when admission control rejected the coflow.
     pub admitted: bool,
+    /// Service class name ("batch" / "deadline" / "stream" / "ml-sync").
+    pub class: &'static str,
+    /// Seconds the coflow's achieved rate spent below its rate floor
+    /// (streams only; 0 for every other class).
+    pub violation_s: f64,
 }
 
 impl CoflowRecord {
@@ -121,6 +126,15 @@ pub struct Report {
     pub inflight_at_kill_gbit: f64,
     pub inflight_at_restart_gbit: f64,
     pub recovery_round_s: f64,
+    /// Service classes: total seconds × coflows that streams spent below
+    /// their rate floor (violation-seconds), and how many times an MlSync
+    /// iteration re-shaped its aggregation tree because a tree link had
+    /// degraded below the reshape threshold.
+    pub stream_violation_s: f64,
+    pub tree_reshapes: usize,
+    /// Integral over rounds of unreservable floor demand (Gbps·rounds):
+    /// > 0 means some round could not fit every admitted floor.
+    pub floor_shortfall_gbps: f64,
     /// Simulated makespan.
     pub makespan: f64,
 }
@@ -204,6 +218,25 @@ impl Report {
         with_d.iter().filter(|c| c.met_deadline()).count() as f64 / with_d.len() as f64
     }
 
+    /// Average CCT restricted to one service class (0 when the class has
+    /// no finished coflows).
+    pub fn avg_cct_class(&self, class: &str) -> f64 {
+        let ccts: Vec<f64> =
+            self.coflows.iter().filter(|c| c.class == class).filter_map(|c| c.cct()).collect();
+        stats::mean(&ccts)
+    }
+
+    /// Average ML synchronization iteration time: each MlSync iteration is
+    /// one coflow, so this is the mean CCT over "ml-sync" records.
+    pub fn avg_iteration_s(&self) -> f64 {
+        self.avg_cct_class("ml-sync")
+    }
+
+    /// Number of coflows of a given service class.
+    pub fn class_count(&self, class: &str) -> usize {
+        self.coflows.iter().filter(|c| c.class == class).count()
+    }
+
     /// Average coflow slowdown vs an empty WAN.
     pub fn avg_slowdown(&self) -> f64 {
         stats::mean(&self.coflows.iter().filter_map(|c| c.slowdown()).collect::<Vec<_>>())
@@ -275,6 +308,8 @@ mod tests {
             min_cct,
             deadline,
             admitted: true,
+            class: "batch",
+            violation_s: 0.0,
         }
     }
 

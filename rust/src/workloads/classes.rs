@@ -1,0 +1,184 @@
+//! Generators for the non-batch service classes: long-running streaming
+//! coflows with minimum-rate floors (SDN-allocated stream analytics over
+//! the WAN) and recurring geo-distributed ML synchronization jobs
+//! structured as aggregation trees.
+//!
+//! Both follow the crate's generator idiom — a `Pcg32` root stream seeded
+//! from the caller's seed, one forked child stream per job — so the output
+//! is a deterministic function of `(wan, n, seed)` alone.
+
+use crate::coflow::{AggTree, Flow, ServiceClass};
+use crate::net::Wan;
+use crate::sim::{Job, Stage};
+use crate::util::rng::Pcg32;
+
+/// Generate `n` streaming jobs with Poisson arrivals: each is one
+/// long-lived single-pair coflow with a rate floor in `[0.5, 2.0]` Gbps
+/// and a nominal duration in `[60, 180]` s. The volume is
+/// `floor × duration` — the stream that receives exactly its floor "keeps
+/// up" for its whole duration; work-conservation surplus finishes it
+/// early. Job ids start at `base_id`.
+pub fn stream_jobs(wan: &Wan, n: usize, base_id: u64, seed: u64) -> Vec<Job> {
+    let mut rng = Pcg32::new(seed ^ 0x7E44A);
+    let num = wan.num_nodes();
+    assert!(num >= 2, "streams need at least two datacenters");
+    let mut t = 0.0;
+    (0..n)
+        .map(|i| {
+            t += rng.exp(5.0);
+            let mut r = rng.fork(i as u64);
+            let src = r.below(num);
+            let mut dst = r.below(num - 1);
+            if dst >= src {
+                dst += 1;
+            }
+            let floor = r.uniform(0.5, 2.0);
+            let duration_s = r.uniform(60.0, 180.0);
+            let flow = Flow { id: 0, src_dc: src, dst_dc: dst, volume: floor * duration_s };
+            let mut job = Job::map_reduce(base_id + i as u64, t, 0.0, vec![flow]);
+            job.stages[0].class = ServiceClass::Stream { rate_floor_gbps: floor };
+            job
+        })
+        .collect()
+}
+
+/// Generate `n` geo-ML synchronization jobs with Poisson arrivals: each
+/// samples 3–6 participating datacenters (fewer on tiny WANs), builds a
+/// random recursive aggregation tree rooted at the first, and runs
+/// `iters` chained iterations — each iteration is one stage whose coflow
+/// ships `iteration_gbit` up every tree edge (child → parent), gated on
+/// the previous iteration plus a per-job compute time. Job ids start at
+/// `base_id`.
+pub fn ml_sync_jobs(wan: &Wan, n: usize, iters: usize, base_id: u64, seed: u64) -> Vec<Job> {
+    // Salted so the same seed gives streams and ML jobs independent draws.
+    let mut rng = Pcg32::new(seed ^ 0x7E44A ^ 0x4D5359);
+    let num = wan.num_nodes();
+    assert!(num >= 2, "aggregation trees need at least two datacenters");
+    assert!(iters >= 1, "ml_sync_jobs needs at least one iteration");
+    let mut t = 0.0;
+    (0..n)
+        .map(|i| {
+            t += rng.exp(20.0);
+            let mut r = rng.fork(i as u64);
+            let k = (r.range(3, 6) as usize).min(num);
+            let members = r.sample_indices(num, k);
+            let root = members[0];
+            let mut edges: Vec<(usize, usize)> = Vec::with_capacity(members.len() - 1);
+            for (mi, &node) in members.iter().enumerate().skip(1) {
+                // Random recursive tree: parent uniformly among the
+                // already-placed members, so depth grows logarithmically.
+                let parent = members[r.below(mi)];
+                edges.push((node, parent));
+            }
+            let tree = AggTree { root, edges: edges.clone() };
+            let iteration_gbit = r.uniform(4.0, 16.0);
+            let compute_s = r.uniform(1.0, 5.0);
+            let flows: Vec<Flow> = edges
+                .iter()
+                .enumerate()
+                .map(|(fi, &(child, parent))| Flow {
+                    id: fi as u64,
+                    src_dc: child,
+                    dst_dc: parent,
+                    volume: iteration_gbit,
+                })
+                .collect();
+            let stages: Vec<Stage> = (0..iters)
+                .map(|s| Stage {
+                    deps: if s == 0 { vec![] } else { vec![s - 1] },
+                    compute_s,
+                    flows: flows.clone(),
+                    deadline: None,
+                    class: ServiceClass::MlSync { tree: tree.clone(), iteration_gbit },
+                })
+                .collect();
+            Job { id: base_id + i as u64, arrival: t, stages }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::topologies;
+
+    #[test]
+    fn stream_jobs_deterministic_and_plumbed() {
+        let wan = topologies::swan();
+        let a = stream_jobs(&wan, 12, 100, 7);
+        let b = stream_jobs(&wan, 12, 100, 7);
+        assert_eq!(a.len(), 12);
+        let mut last = 0.0;
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival.to_bits(), y.arrival.to_bits(), "not deterministic");
+            assert_eq!(x.total_volume().to_bits(), y.total_volume().to_bits());
+            assert!(x.arrival >= last);
+            last = x.arrival;
+            x.validate().unwrap();
+            assert_eq!(x.stages.len(), 1);
+            let st = &x.stages[0];
+            let ServiceClass::Stream { rate_floor_gbps } = st.class else {
+                panic!("stream stage must carry the Stream class: {:?}", st.class);
+            };
+            assert!((0.5..2.0).contains(&rate_floor_gbps));
+            assert_eq!(st.class.rate_floor(), Some(rate_floor_gbps));
+            assert_eq!(st.flows.len(), 1);
+            assert_ne!(st.flows[0].src_dc, st.flows[0].dst_dc);
+            // volume = floor × duration, duration ∈ [60, 180].
+            let dur = st.flows[0].volume / rate_floor_gbps;
+            assert!((60.0..180.0).contains(&dur), "duration={dur}");
+        }
+        let c = stream_jobs(&wan, 12, 100, 8);
+        assert!(
+            a.iter().zip(&c).any(|(x, y)| x.arrival != y.arrival),
+            "different seeds must differ"
+        );
+        assert_eq!(a[0].id, 100, "base_id must offset job ids");
+    }
+
+    #[test]
+    fn ml_sync_jobs_deterministic_tree_structure() {
+        let wan = topologies::swan();
+        let a = ml_sync_jobs(&wan, 8, 3, 500, 7);
+        let b = ml_sync_jobs(&wan, 8, 3, 500, 7);
+        assert_eq!(a.len(), 8);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival.to_bits(), y.arrival.to_bits());
+            x.validate().unwrap();
+            assert_eq!(x.stages.len(), 3, "one stage per iteration");
+            for (si, st) in x.stages.iter().enumerate() {
+                let ServiceClass::MlSync { tree, iteration_gbit } = &st.class else {
+                    panic!("ml stage must carry the MlSync class: {:?}", st.class);
+                };
+                let yt = match &y.stages[si].class {
+                    ServiceClass::MlSync { tree, .. } => tree,
+                    _ => unreachable!(),
+                };
+                assert_eq!(tree, yt, "tree must be seed-deterministic");
+                // Iterations chain: stage s depends exactly on s-1.
+                if si == 0 {
+                    assert!(st.deps.is_empty());
+                } else {
+                    assert_eq!(st.deps, vec![si - 1]);
+                }
+                // One flow per tree edge, child → parent, volume =
+                // iteration_gbit.
+                assert_eq!(st.flows.len(), tree.edges.len());
+                for (f, &(c, p)) in st.flows.iter().zip(&tree.edges) {
+                    assert_eq!((f.src_dc, f.dst_dc), (c, p));
+                    assert!((f.volume - iteration_gbit).abs() < 1e-12);
+                }
+                // Tree is rooted and connected: every participant except
+                // the root appears exactly once as a child.
+                let parts = tree.participants();
+                assert!(parts.contains(&tree.root));
+                let mut children: Vec<usize> = tree.edges.iter().map(|&(c, _)| c).collect();
+                children.sort_unstable();
+                children.dedup();
+                assert_eq!(children.len(), tree.edges.len(), "each child parented once");
+                assert!(!children.contains(&tree.root), "root is nobody's child");
+            }
+        }
+        assert_eq!(a[0].id, 500);
+    }
+}

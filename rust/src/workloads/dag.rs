@@ -139,7 +139,7 @@ pub fn benchmark_job(
         let machines = (src_dcs.len() * cfg.machines_per_dc).max(1);
         let compute_s = work_machine_seconds * 10.0 / machines as f64;
 
-        stages.push(Stage { deps, compute_s, flows, deadline: None });
+        stages.push(Stage { deps, compute_s, flows, ..Default::default() });
         out_dcs.push(dst_dcs);
     }
     Job { id, arrival, stages }

@@ -65,4 +65,54 @@ mod tests {
         assign_deadlines(&mut jobs, &wan, 3.0);
         assert!(jobs[0].stages[0].deadline.is_none());
     }
+
+    /// Every WAN stage of a generated workload gets a finite, strictly
+    /// positive deadline (the values `Coflow::with_deadline` accepts), and
+    /// assignment is deterministic for a fixed workload.
+    #[test]
+    fn generated_workload_deadlines_valid_and_deterministic() {
+        let wan = topologies::swan();
+        let mk = || crate::workloads::WorkloadGen::new(crate::workloads::WorkloadKind::TpcDs, 11)
+            .jobs(&wan, 10);
+        let mut a = mk();
+        assign_deadlines(&mut a, &wan, 2.5);
+        let mut b = mk();
+        assign_deadlines(&mut b, &wan, 2.5);
+        let mut assigned = 0;
+        for (ja, jb) in a.iter().zip(&b) {
+            for (sa, sb) in ja.stages.iter().zip(&jb.stages) {
+                let wan_flows = sa.flows.iter().any(|f| f.src_dc != f.dst_dc);
+                match sa.deadline {
+                    Some(d) => {
+                        assert!(wan_flows, "deadline on a WAN-free stage");
+                        assert!(d.is_finite() && d > 0.0, "invalid deadline {d}");
+                        assert_eq!(Some(d).map(f64::to_bits), sb.deadline.map(f64::to_bits));
+                        assigned += 1;
+                    }
+                    None => assert_eq!(sb.deadline, None),
+                }
+            }
+        }
+        assert!(assigned > 0, "no deadlines assigned at all");
+    }
+
+    /// Doubling `d` doubles every assigned deadline across a whole
+    /// multi-stage workload, not just a single synthetic job.
+    #[test]
+    fn scale_factor_is_linear_across_workload() {
+        let wan = topologies::swan();
+        let mk = || crate::workloads::WorkloadGen::new(crate::workloads::WorkloadKind::TpcH, 3)
+            .jobs(&wan, 6);
+        let mut j1 = mk();
+        assign_deadlines(&mut j1, &wan, 1.5);
+        let mut j3 = mk();
+        assign_deadlines(&mut j3, &wan, 3.0);
+        for (a, b) in j1.iter().zip(&j3) {
+            for (sa, sb) in a.stages.iter().zip(&b.stages) {
+                if let (Some(da), Some(db)) = (sa.deadline, sb.deadline) {
+                    assert!((db / da - 2.0).abs() < 1e-9, "da={da} db={db}");
+                }
+            }
+        }
+    }
 }

@@ -17,10 +17,12 @@
 //! - **arrivals**: Poisson, matching "an arrival distribution similar to
 //!   that in production traces".
 
+pub mod classes;
 pub mod dag;
 pub mod deadlines;
 pub mod fb;
 
+pub use classes::{ml_sync_jobs, stream_jobs};
 pub use deadlines::assign_deadlines;
 
 use crate::net::Wan;

@@ -8,6 +8,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 use terra::api::{TerraClient, REJECTED};
+use terra::coflow::ServiceClass;
 use terra::net::{topologies, LinkEvent};
 use terra::overlay::protocol::{DataHeader, FlowSpec};
 use terra::overlay::{Agent, Controller, TestbedConfig, BYTES_PER_GBPS};
@@ -109,6 +110,29 @@ fn deadline_rejection_via_api() {
     let cct = client.wait_done(cid as u64, 10.0).unwrap();
     assert!(cct <= 3.0 * 1.1 + 0.2, "admitted coflow missed deadline: {cct}");
     assert!(cct >= 2.0, "dilation should stretch the transfer: {cct}");
+    tb.stop();
+}
+
+/// Service-class plumbing end-to-end: a stream submission carries its
+/// floor over the wire, is admitted against headroom, and completes; a
+/// floor the WAN cannot possibly cover is rejected at submission with the
+/// same -1 sentinel deadlines use.
+#[test]
+fn stream_class_admission_via_api() {
+    let tb = start_testbed(topologies::fig1a(), 3);
+    let mut client = TerraClient::connect(tb.handle.addr).unwrap();
+    let flows = [FlowSpec { id: 0, src_dc: 0, dst_dc: 1, bytes: gbit(2.0) }];
+    let cid = client
+        .submit_coflow_class(&flows, None, &ServiceClass::Stream { rate_floor_gbps: 2.0 })
+        .unwrap();
+    assert!(cid > 0, "feasible stream must be admitted");
+    let cct = client.wait_done(cid as u64, 15.0).unwrap();
+    assert!(cct > 0.0);
+    // No amount of multipathing gets 1000 Gbps out of fig1a: rejected.
+    let cid = client
+        .submit_coflow_class(&flows, None, &ServiceClass::Stream { rate_floor_gbps: 1000.0 })
+        .unwrap();
+    assert_eq!(cid, REJECTED);
     tb.stop();
 }
 

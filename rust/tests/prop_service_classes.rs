@@ -1,0 +1,235 @@
+//! Property tests for the service-class refactor's structural-inertness
+//! guarantee: the default `ServiceClass::Batch` must leave every class-free
+//! code path bit-identical (goldens stay blessed), and the level-1 floor
+//! reservation must be exactly inert when no floors are present and
+//! account for every reserved Gbps when they are.
+
+use terra::coflow::ServiceClass;
+use terra::lp::{maxmin, GroupDemand};
+use terra::net::dynamics::{self, DynamicsModel, DynamicsProfile};
+use terra::net::topologies;
+use terra::scheduler::terra::TerraPolicy;
+use terra::sim::{Job, SimConfig, Simulation};
+use terra::util::prop::{forall, PropConfig};
+use terra::util::rng::Pcg32;
+use terra::workloads::{WorkloadGen, WorkloadKind};
+
+/// Random batch job set (no explicit classes anywhere) plus a dynamics
+/// stream seed for the SWAN topology.
+fn gen_batch_case(rng: &mut Pcg32, size: usize) -> (Vec<Job>, u64) {
+    let kind = WorkloadKind::all()[rng.below(4)];
+    let mut wl = WorkloadGen::new(kind, rng.next_u64());
+    let jobs = wl.jobs(&topologies::swan(), 1 + rng.below(size.max(1)));
+    (jobs, rng.next_u64())
+}
+
+/// The tentpole inertness property: a simulation where every stage carries
+/// the *structural default* class is bit-for-bit identical to one where
+/// `ServiceClass::Batch` is written out explicitly, and none of the new
+/// per-class metrics move off zero. This is the proof that un-re-blessed
+/// golden traces remain valid: the class refactor added state, not
+/// behavior, to the batch path.
+#[test]
+fn prop_batch_default_identical() {
+    forall(
+        PropConfig { cases: 8, seed: 0xC1A55, max_size: 4 },
+        gen_batch_case,
+        |(jobs, dseed)| {
+            let wan = topologies::swan();
+            let profile = DynamicsProfile {
+                name: "prop".into(),
+                models: vec![DynamicsModel::MarkovFailure { mtbf_s: 120.0, mttr_s: 6.0 }],
+            };
+            let events = dynamics::generate(&wan, &profile, 60.0, *dseed);
+            let run = |jobs: Vec<Job>| {
+                let mut sim = Simulation::new(
+                    wan.clone(),
+                    Box::new(TerraPolicy::default()),
+                    SimConfig::default(),
+                );
+                for ev in &events {
+                    sim.add_wan_event(ev.t, ev.ev.clone());
+                }
+                sim.run_jobs(jobs)
+            };
+            let implicit = run(jobs.clone());
+            let explicit = run(
+                jobs.iter()
+                    .cloned()
+                    .map(|mut j| {
+                        for s in &mut j.stages {
+                            s.class = ServiceClass::Batch;
+                        }
+                        j
+                    })
+                    .collect(),
+            );
+            if implicit.coflows.len() != explicit.coflows.len() {
+                return Err(format!(
+                    "coflow count diverged: {} vs {}",
+                    implicit.coflows.len(),
+                    explicit.coflows.len()
+                ));
+            }
+            for (a, b) in implicit.coflows.iter().zip(&explicit.coflows) {
+                if a.class != "batch" {
+                    return Err(format!("coflow {} classed {:?}, not batch", a.id, a.class));
+                }
+                if a.finish.map(f64::to_bits) != b.finish.map(f64::to_bits) {
+                    return Err(format!(
+                        "coflow {} finish diverged: {:?} vs {:?}",
+                        a.id, a.finish, b.finish
+                    ));
+                }
+                if a.violation_s != 0.0 {
+                    return Err(format!("batch coflow {} has violation_s {}", a.id, a.violation_s));
+                }
+            }
+            if implicit.makespan.to_bits() != explicit.makespan.to_bits() {
+                return Err(format!(
+                    "makespan diverged: {} vs {}",
+                    implicit.makespan, explicit.makespan
+                ));
+            }
+            if implicit.rounds != explicit.rounds || implicit.lp_solves != explicit.lp_solves {
+                return Err("round/solve counts diverged".into());
+            }
+            for rep in [&implicit, &explicit] {
+                if rep.stream_violation_s != 0.0
+                    || rep.tree_reshapes != 0
+                    || rep.floor_shortfall_gbps != 0.0
+                {
+                    return Err(format!(
+                        "class metrics nonzero on a batch-only run: {} / {} / {}",
+                        rep.stream_violation_s, rep.tree_reshapes, rep.floor_shortfall_gbps
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Random MCF-shaped instance: capacities plus groups with random path
+/// sets over those edges, and a floor vector where roughly half the groups
+/// carry a floor.
+#[allow(clippy::type_complexity)]
+fn gen_floor_case(rng: &mut Pcg32, size: usize) -> (Vec<f64>, Vec<GroupDemand>, Vec<f64>) {
+    let ne = 2 + rng.below(6);
+    let cap: Vec<f64> = (0..ne).map(|_| rng.uniform(1.0, 20.0)).collect();
+    let ng = 1 + rng.below(size.max(1) * 2);
+    let groups: Vec<GroupDemand> = (0..ng)
+        .map(|_| {
+            let np = 1 + rng.below(3);
+            let paths = (0..np)
+                .map(|_| {
+                    // Distinct edges per path (real paths are simple).
+                    let len = 1 + rng.below(3.min(ne));
+                    let mut es: Vec<usize> = (0..len).map(|_| rng.below(ne)).collect();
+                    es.sort_unstable();
+                    es.dedup();
+                    es
+                })
+                .collect();
+            GroupDemand { volume: rng.uniform(0.5, 50.0), paths }
+        })
+        .collect();
+    let floors: Vec<f64> =
+        (0..ng).map(|_| if rng.below(2) == 0 { 0.0 } else { rng.uniform(0.1, 8.0) }).collect();
+    (cap, groups, floors)
+}
+
+/// Level-1 inertness: an all-zero floor vector must not move a single
+/// capacity bit or produce any reservation, and the level-2 solve on the
+/// "residual" must equal the plain solve exactly.
+#[test]
+fn prop_reserve_floors_zero_floor_inert() {
+    forall(
+        PropConfig { cases: 60, seed: 0xF100, max_size: 6 },
+        gen_floor_case,
+        |(cap, groups, _)| {
+            let mut residual = cap.clone();
+            let zeros = vec![0.0; groups.len()];
+            let (reserved, shortfall) = maxmin::reserve_floors(&mut residual, groups, &zeros);
+            for (e, (a, b)) in cap.iter().zip(&residual).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("edge {e} capacity moved: {a} -> {b}"));
+                }
+            }
+            if reserved.iter().flatten().any(|&r| r != 0.0) {
+                return Err("zero floors produced a reservation".into());
+            }
+            if shortfall.iter().any(|&s| s != 0.0) {
+                return Err("zero floors produced a shortfall".into());
+            }
+            let weights = vec![1.0; groups.len()];
+            let plain = maxmin::max_min_rates(cap, groups, &weights);
+            let after = maxmin::max_min_rates(&residual, groups, &weights);
+            for (k, (a, b)) in plain.iter().zip(&after).enumerate() {
+                for (pa, pb) in a.iter().zip(b) {
+                    if pa.to_bits() != pb.to_bits() {
+                        return Err(format!("group {k} rates diverged: {pa} vs {pb}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Floor accounting: reservations never oversubscribe an edge, every
+/// reserved Gbps is debited from exactly the edges its path crosses, and
+/// `reserved + shortfall` covers each requested floor — infeasibility is
+/// surfaced, never silently clamped away.
+#[test]
+fn prop_reserve_floors_accounting() {
+    forall(
+        PropConfig { cases: 80, seed: 0xF10, max_size: 6 },
+        gen_floor_case,
+        |(cap, groups, floors)| {
+            let mut residual = cap.clone();
+            let (reserved, shortfall) = maxmin::reserve_floors(&mut residual, groups, floors);
+            // Per-edge debit equals the sum of reservations crossing it.
+            let mut debit = vec![0.0; cap.len()];
+            for (k, g) in groups.iter().enumerate() {
+                for (pi, p) in g.paths.iter().enumerate() {
+                    for &e in p {
+                        debit[e] += reserved[k][pi];
+                    }
+                }
+            }
+            for (e, ((orig, res), d)) in cap.iter().zip(&residual).zip(&debit).enumerate() {
+                if *res < -1e-12 || *res > orig + 1e-12 {
+                    return Err(format!("edge {e} residual {res} outside [0, {orig}]"));
+                }
+                if (orig - res - d).abs() > 1e-6 {
+                    return Err(format!(
+                        "edge {e} conservation broken: {orig} - {res} != debit {d}"
+                    ));
+                }
+            }
+            // Every floor is either fully reserved or the gap is reported.
+            for (k, g) in groups.iter().enumerate() {
+                let floor = floors[k];
+                let got: f64 = reserved[k].iter().sum();
+                if floor <= 0.0 || g.volume <= 0.0 {
+                    if got != 0.0 || shortfall[k] != 0.0 {
+                        return Err(format!("floorless group {k} got {got}/{}", shortfall[k]));
+                    }
+                    continue;
+                }
+                if got > floor + 1e-9 {
+                    return Err(format!("group {k} over-reserved: {got} > {floor}"));
+                }
+                if got + shortfall[k] < floor - 1e-6 {
+                    return Err(format!(
+                        "group {k} floor {floor} silently clamped: reserved {got} + \
+                         shortfall {} leaves a gap",
+                        shortfall[k]
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
