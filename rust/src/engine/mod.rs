@@ -45,7 +45,7 @@ pub mod cache;
 pub mod sharded;
 
 pub use cache::{ComponentCache, GammaCache};
-pub use sharded::ShardedEngine;
+pub use sharded::{ShardedEngine, SitePartition};
 
 use crate::coflow::CoflowId;
 use crate::lp;
@@ -434,6 +434,29 @@ impl RoundEngine {
                 }
             }
         }
+    }
+
+    /// Mark a set of *directed* edges failed (or restore them), the way a
+    /// structural WAN event would — used when an agent is declared down
+    /// and the site's incident edges must disappear from the path set.
+    /// Unlike [`LinkEvent::Fail`] this is per-direction, so an asymmetric
+    /// partition (only the edges *into* a site lost) is expressible.
+    /// Restoring re-anchors the estimator at base capacity, matching
+    /// recovery semantics. Always structural: the path set changed shape.
+    pub fn set_edges_down(&mut self, edges: &[EdgeId], down: bool, now: f64) -> WanReaction {
+        for &e in edges {
+            self.wan.set_edge_up(e, !down);
+            if !down {
+                let base = self.wan.link(e).base_capacity;
+                self.estimator.reset_edge(e, base, now);
+            }
+        }
+        self.paths = PathSet::compute(&self.wan, self.k);
+        self.bump_epoch();
+        self.comp_cache.touch_all();
+        self.warm_valid = false;
+        self.partition_stale = true;
+        WanReaction::Structural
     }
 
     /// The ρ-dampened capacity-change path shared by oracle truth events

@@ -868,6 +868,209 @@ pub fn recovery_json(cfg: &RecoverySweepConfig, rows: &[RecoveryRow]) -> Json {
     ])
 }
 
+/// Configuration of the **agent-chaos sweep** (the data-plane half of the
+/// fault-tolerance axis): one site's agent dies — or its data plane is
+/// partitioned — mid-workload while WAN dynamics are active, and the
+/// controller must detect it, park the touched coflows with their progress
+/// intact, re-solve the survivors, and resume the victims at the heal.
+/// Terra policy throughout; the axis under study is what a data-plane
+/// failure costs, not which policy wins.
+#[derive(Clone, Debug)]
+pub struct AgentChaosSweepConfig {
+    pub jobs: usize,
+    pub seed: u64,
+    /// Dynamics generation horizon (seconds of simulated time).
+    pub horizon_s: f64,
+    pub topology: String,
+    pub workload: String,
+    /// Dynamics profiles active while the site dies — same failure cases
+    /// as the recovery sweep, so the two axes compose.
+    pub profiles: Vec<String>,
+    /// Site kill / heal instants (simulated seconds), mid-workload.
+    pub kill_t: f64,
+    pub restart_t: f64,
+    /// The site whose agent (or data plane) fails.
+    pub site: usize,
+    /// Failure-detection latency: the liveness deadline (agent kill) or
+    /// stall-watchdog horizon (partition) the controller needs before it
+    /// declares the site down.
+    pub detection_s: f64,
+}
+
+impl Default for AgentChaosSweepConfig {
+    fn default() -> Self {
+        AgentChaosSweepConfig {
+            jobs: 6,
+            seed: 7,
+            horizon_s: 420.0,
+            topology: "swan".into(),
+            workload: "bigbench".into(),
+            profiles: vec!["calm".into(), "regional".into(), "gray".into()],
+            kill_t: 30.0,
+            restart_t: 35.0,
+            site: 1,
+            detection_s: 2.0,
+        }
+    }
+}
+
+/// The data-plane availability modes the agent-chaos sweep compares. The
+/// always-up anchor replays the identical scenario with no failure — its
+/// cell doubles as the proof that the chaos machinery is structurally
+/// inert when nothing fails.
+pub const AGENT_CHAOS_MODES: [&str; 3] = ["always-up", "agent-kill", "partition"];
+
+fn agent_chaos_for_mode(
+    mode: &str,
+    cfg: &AgentChaosSweepConfig,
+) -> Option<crate::sim::ChaosConfig> {
+    use crate::sim::{ChaosConfig, ChaosTarget, RecoveryMode};
+    let base = || {
+        ChaosConfig::new(cfg.kill_t, cfg.restart_t, RecoveryMode::Resync)
+            .with_detection_s(cfg.detection_s)
+    };
+    match mode {
+        "always-up" => None,
+        "agent-kill" => Some(base().with_target(ChaosTarget::Agent { site: cfg.site })),
+        "partition" => Some(base().with_target(ChaosTarget::Partition { site: cfg.site })),
+        other => panic!("unknown agent-chaos mode {other}"),
+    }
+}
+
+/// One agent-chaos cell: a ⟨profile, mode⟩ outcome.
+#[derive(Clone, Debug)]
+pub struct AgentChaosRow {
+    pub topology: String,
+    pub workload: String,
+    pub profile: String,
+    /// One of [`AGENT_CHAOS_MODES`].
+    pub mode: String,
+    pub avg_cct: f64,
+    pub p99_cct: f64,
+    /// CCT inflation vs the always-up data plane on the identical
+    /// scenario (always-up is 1.0 by construction).
+    pub cct_vs_always_up: f64,
+    /// Site-down declarations the controller made (0 when the failure was
+    /// a blip shorter than the detector).
+    pub agent_downs: usize,
+    /// Summed kill → declaration latency (seconds).
+    pub detection_s: f64,
+    /// Coflows parked at those declarations.
+    pub parked: usize,
+    /// Coflow·seconds of allocated-but-stalled traffic before detection.
+    pub stall_s: f64,
+    pub rounds: usize,
+    pub unfinished: usize,
+    pub makespan: f64,
+}
+
+/// Run the agent-chaos sweep: every ⟨profile, mode⟩ cell replays the
+/// *identical* workload and ground-truth event stream; only the data-plane
+/// failure differs. Rows come back in deterministic sweep order, the
+/// always-up baseline computed per profile to anchor `cct_vs_always_up`.
+pub fn agent_chaos_sweep(cfg: &AgentChaosSweepConfig) -> Vec<AgentChaosRow> {
+    let Some(wan) = topologies::by_name(&cfg.topology) else {
+        log::warn!("unknown topology {}; empty agent-chaos sweep", cfg.topology);
+        return Vec::new();
+    };
+    let Some(kind) = WorkloadKind::by_name(&cfg.workload) else {
+        log::warn!("unknown workload {}; empty agent-chaos sweep", cfg.workload);
+        return Vec::new();
+    };
+    assert!(cfg.site < wan.num_nodes(), "chaos site outside the topology");
+    let wseed = scenario_seed(cfg.seed, 0, 0, usize::MAX);
+    let wcfg = WorkloadConfig::new(kind, wseed);
+    let jobs = WorkloadGen::with_config(wcfg).jobs(&wan, cfg.jobs);
+    let mut rows = Vec::new();
+    for (pi, pname) in cfg.profiles.iter().enumerate() {
+        let Some(profile) = DynamicsProfile::by_name(pname) else {
+            log::warn!("unknown dynamics profile {pname}; skipping");
+            continue;
+        };
+        let sseed = scenario_seed(cfg.seed, 0, 0, pi);
+        let events = dynamics::generate(&wan, &profile, cfg.horizon_s, sseed);
+        let run = |chaos: Option<crate::sim::ChaosConfig>| -> Report {
+            let sim_cfg = SimConfig { chaos, ..Default::default() };
+            let mut sim =
+                Simulation::new(wan.clone(), Box::new(TerraPolicy::default()), sim_cfg);
+            for ev in &events {
+                sim.add_wan_event(ev.t, ev.ev.clone());
+            }
+            sim.run_jobs(jobs.clone())
+        };
+        let always_up = run(None);
+        for mode in AGENT_CHAOS_MODES {
+            let rep = if mode == "always-up" {
+                always_up.clone()
+            } else {
+                run(agent_chaos_for_mode(mode, cfg))
+            };
+            rows.push(AgentChaosRow {
+                topology: cfg.topology.clone(),
+                workload: cfg.workload.clone(),
+                profile: profile.name.clone(),
+                mode: mode.to_string(),
+                avg_cct: rep.avg_cct(),
+                p99_cct: rep.p99_cct(),
+                cct_vs_always_up: rep.avg_cct() / always_up.avg_cct().max(1e-9),
+                agent_downs: rep.agent_downs,
+                detection_s: rep.agent_detection_s,
+                parked: rep.agent_parked,
+                stall_s: rep.agent_stall_s,
+                rounds: rep.rounds,
+                unfinished: rep.unfinished(),
+                makespan: rep.makespan,
+            });
+        }
+    }
+    rows
+}
+
+/// Serialize agent-chaos results for `BENCH_agent_chaos.json`.
+pub fn agent_chaos_json(cfg: &AgentChaosSweepConfig, rows: &[AgentChaosRow]) -> Json {
+    let rows: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::from_pairs([
+                ("topology", Json::from(r.topology.clone())),
+                ("workload", r.workload.clone().into()),
+                ("profile", r.profile.clone().into()),
+                ("mode", r.mode.clone().into()),
+                ("avg_cct_s", r.avg_cct.into()),
+                ("p99_cct_s", r.p99_cct.into()),
+                ("cct_vs_always_up", r.cct_vs_always_up.into()),
+                ("agent_downs", r.agent_downs.into()),
+                ("detection_s", r.detection_s.into()),
+                ("parked", r.parked.into()),
+                ("stall_s", r.stall_s.into()),
+                ("rounds", r.rounds.into()),
+                ("unfinished", r.unfinished.into()),
+                ("makespan_s", r.makespan.into()),
+            ])
+        })
+        .collect();
+    Json::from_pairs([
+        ("seed", Json::from(cfg.seed)),
+        ("jobs", cfg.jobs.into()),
+        ("horizon_s", cfg.horizon_s.into()),
+        ("topology", cfg.topology.clone().into()),
+        ("workload", cfg.workload.clone().into()),
+        ("kill_t", cfg.kill_t.into()),
+        ("restart_t", cfg.restart_t.into()),
+        ("site", cfg.site.into()),
+        ("detection_s", cfg.detection_s.into()),
+        (
+            "profiles",
+            cfg.profiles.iter().map(|p| Json::from(p.clone())).collect::<Vec<_>>().into(),
+        ),
+        (
+            "modes",
+            AGENT_CHAOS_MODES.iter().map(|m| Json::from(m.to_string())).collect::<Vec<_>>().into(),
+        ),
+        ("rows", Json::Arr(rows)),
+    ])
+}
+
 /// Configuration of the **multi-tenant sweep** (the service-class axis):
 /// batch GDA jobs, streaming rate-floor coflows, and recurring geo-ML
 /// aggregation-tree jobs sharing one WAN while dynamics profiles inject
@@ -1271,6 +1474,44 @@ mod tests {
         for (a, b) in rows.iter().zip(&again) {
             assert_eq!(a.avg_cct.to_bits(), b.avg_cct.to_bits());
             assert_eq!(a.preserved_fraction.to_bits(), b.preserved_fraction.to_bits());
+        }
+    }
+
+    #[test]
+    fn agent_chaos_sweep_covers_grid_and_is_deterministic() {
+        let cfg = AgentChaosSweepConfig {
+            jobs: 2,
+            horizon_s: 160.0,
+            profiles: vec!["calm".into()],
+            kill_t: 20.0,
+            restart_t: 26.0,
+            detection_s: 1.0,
+            ..Default::default()
+        };
+        let rows = agent_chaos_sweep(&cfg);
+        assert_eq!(rows.len(), 3, "1 profile x 3 data-plane modes");
+        let get = |m: &str| rows.iter().find(|r| r.mode == m).unwrap();
+        let (up, kill, part) = (get("always-up"), get("agent-kill"), get("partition"));
+        // Always-up anchors the inflation ratio and emits no chaos metrics.
+        assert!((up.cct_vs_always_up - 1.0).abs() < 1e-12);
+        assert_eq!(up.agent_downs, 0);
+        assert_eq!(up.parked, 0);
+        assert_eq!(up.stall_s, 0.0);
+        // The outage outlives the detector, so both modes declare the site
+        // down exactly once, at the configured latency.
+        for r in [kill, part] {
+            assert_eq!(r.agent_downs, 1, "{r:?}");
+            assert!((r.detection_s - cfg.detection_s).abs() < 1e-9, "{r:?}");
+        }
+        // Agent kill and partition share flow-level semantics: identical
+        // cells by construction (only the modeled detector differs).
+        assert_eq!(kill.avg_cct.to_bits(), part.avg_cct.to_bits());
+        // Everything still finishes and the sweep is deterministic.
+        assert!(rows.iter().all(|r| r.unfinished == 0), "{rows:?}");
+        let again = agent_chaos_sweep(&cfg);
+        for (a, b) in rows.iter().zip(&again) {
+            assert_eq!(a.avg_cct.to_bits(), b.avg_cct.to_bits());
+            assert_eq!(a.stall_s.to_bits(), b.stall_s.to_bits());
         }
     }
 

@@ -49,6 +49,11 @@ fn main() {
                  \u{20}          (controller-chaos sweep: profiles x {{always-up, resync,\n\
                  \u{20}          from-zero}}, writes BENCH_recovery.json with preserved\n\
                  \u{20}          in-flight fraction / degraded drain / CCT inflation)\n\
+                 \u{20}          --agent-chaos [--kill T] [--restart T] [--site N]\n\
+                 \u{20}          [--detection SECS]\n\
+                 \u{20}          (data-plane chaos sweep: profiles x {{always-up, agent-kill,\n\
+                 \u{20}          partition}}, writes BENCH_agent_chaos.json with detection\n\
+                 \u{20}          latency / parked coflows / stall time / CCT inflation)\n\
                  \u{20}          --multitenant [--streams N] [--ml-jobs N] [--ml-iters N]\n\
                  \u{20}          (service-class sweep: batch + streams + geo-ML sync sharing\n\
                  \u{20}          one WAN per dynamics profile, writes BENCH_multitenant.json\n\
@@ -250,6 +255,9 @@ fn sweep(args: &Args) {
     if args.flag("recovery") || args.get("recovery").is_some() {
         return recovery_sweep(args);
     }
+    if args.flag("agent-chaos") || args.get("agent-chaos").is_some() {
+        return agent_chaos_sweep(args);
+    }
     if args.flag("multitenant") || args.get("multitenant").is_some() {
         return multitenant_sweep(args);
     }
@@ -406,6 +414,66 @@ fn recovery_sweep(args: &Args) {
     ));
     let out = args.get_or("out", "BENCH_recovery.json");
     match std::fs::write(out, format!("{}\n", exp::recovery_json(&cfg, &rows))) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => {
+            eprintln!("failed to write {out}: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// The data-plane chaos sweep: dynamics profiles × data-plane failure
+/// modes (always-up, agent-kill, partition) on one ⟨topology, workload⟩,
+/// writing `BENCH_agent_chaos.json` (or `--out`).
+fn agent_chaos_sweep(args: &Args) {
+    use terra::experiments as exp;
+    let defaults = exp::AgentChaosSweepConfig::default();
+    let list = |v: &str| -> Vec<String> { v.split(',').map(|s| s.trim().to_string()).collect() };
+    let cfg = exp::AgentChaosSweepConfig {
+        jobs: args.get_usize("jobs", defaults.jobs),
+        seed: args.get_u64("seed", defaults.seed),
+        horizon_s: args.get_f64("horizon", defaults.horizon_s),
+        topology: args.get_or("topology", &defaults.topology).to_string(),
+        workload: args.get_or("workload", &defaults.workload).to_string(),
+        profiles: args.get("profiles").map(list).unwrap_or(defaults.profiles),
+        kill_t: args.get_f64("kill", defaults.kill_t),
+        restart_t: args.get_f64("restart", defaults.restart_t),
+        site: args.get_usize("site", defaults.site),
+        detection_s: args.get_f64("detection", defaults.detection_s),
+    };
+    let rows = exp::agent_chaos_sweep(&cfg);
+    let mut t = Table::new(&[
+        "profile", "mode", "avg CCT", "vs up", "downs", "detect s", "parked", "stall s",
+        "unfin",
+    ]);
+    for r in &rows {
+        t.row(&[
+            r.profile.clone(),
+            r.mode.clone(),
+            format!("{:.1}s", r.avg_cct),
+            format!("{:.2}x", r.cct_vs_always_up),
+            r.agent_downs.to_string(),
+            format!("{:.1}", r.detection_s),
+            r.parked.to_string(),
+            format!("{:.1}", r.stall_s),
+            r.unfinished.to_string(),
+        ]);
+    }
+    t.print(&format!(
+        "Agent-chaos sweep: {} rows on {}/{} (seed {}, {} jobs, site {}, kill {:.0}s, \
+         heal {:.0}s, detect {:.1}s)",
+        rows.len(),
+        cfg.topology,
+        cfg.workload,
+        cfg.seed,
+        cfg.jobs,
+        cfg.site,
+        cfg.kill_t,
+        cfg.restart_t,
+        cfg.detection_s
+    ));
+    let out = args.get_or("out", "BENCH_agent_chaos.json");
+    match std::fs::write(out, format!("{}\n", exp::agent_chaos_json(&cfg, &rows))) {
         Ok(()) => println!("wrote {out}"),
         Err(e) => {
             eprintln!("failed to write {out}: {e}");

@@ -172,6 +172,19 @@ impl Wan {
         self.links[e].capacity = gbps.max(0.0);
     }
 
+    /// Set one directed edge's up/down state. Unlike [`LinkEvent::Fail`] /
+    /// [`LinkEvent::Recover`] this acts on a single direction — the agent-
+    /// liveness machinery marks a down site's *incident directed* edges
+    /// failed (possibly one direction only, for asymmetric partitions).
+    /// Bringing an edge back up restores base capacity, matching recovery
+    /// semantics (any fluctuated value from the down period is stale).
+    pub fn set_edge_up(&mut self, e: EdgeId, up: bool) {
+        self.links[e].up = up;
+        if up {
+            self.links[e].capacity = self.links[e].base_capacity;
+        }
+    }
+
     /// Apply a WAN event; returns the fractional bandwidth change it caused
     /// on the most-affected edge (used against the ρ re-optimization
     /// threshold, §3.1.3).

@@ -23,6 +23,7 @@
 
 use super::protocol::{self, DataHeader, ResyncEntry, TelemetrySample, CHUNK_BYTES, PROBE_COFLOW};
 use super::BYTES_PER_GBPS;
+use crate::util::backoff::{Backoff, CircuitBreaker};
 use crate::util::json::Json;
 use std::collections::{BTreeMap, HashMap};
 use std::io::Write;
@@ -45,8 +46,27 @@ const HEARTBEAT_DEADLINE: Duration = Duration::from_secs(2);
 /// feasible when assigned, but the WAN may have degraded since, and
 /// without the controller nobody re-checks feasibility.
 const DEGRADED_SCALE: f64 = 0.5;
-/// Pause between reconnect attempts while the controller is unreachable.
-const RECONNECT_DELAY: Duration = Duration::from_millis(200);
+/// Controller-reconnect backoff bounds: the dial loop sleeps a seeded
+/// exponential-with-jitter delay between attempts (see
+/// [`crate::util::backoff`]) instead of a fixed pause, so a fleet losing
+/// the same controller does not hammer it in lockstep the moment it
+/// returns. The cap is kept small enough that chaos tests bound their
+/// recovery waits.
+const RECONNECT_BASE: Duration = Duration::from_millis(100);
+const RECONNECT_MAX: Duration = Duration::from_secs(2);
+/// Peer data-connection dial policy: consecutive failures trip a per-peer
+/// circuit breaker (threshold [`crate::util::backoff::BREAKER_THRESHOLD`])
+/// whose cooldowns follow the same seeded backoff schedule.
+const PEER_DIAL_BASE: Duration = Duration::from_millis(100);
+const PEER_DIAL_MAX: Duration = Duration::from_secs(2);
+/// How often the sender thread tops up missing peer connections (a peer
+/// that was down when the `peers` table arrived is re-dialed from here,
+/// without controller involvement).
+const PEER_TOPUP_INTERVAL: Duration = Duration::from_millis(100);
+/// Consecutive zero-progress telemetry windows on an allocated path before
+/// the stall watchdog flags the ⟨transfer, path⟩ as stalled in its samples
+/// (4 × 250 ms ≈ 1 s of confirmed zero progress).
+const STALL_WINDOWS: u32 = 4;
 /// Cap on telemetry samples buffered while disconnected (oldest dropped);
 /// they ship inside the `resync_state` report on reconnect.
 const MAX_BUFFERED_SAMPLES: usize = 4096;
@@ -134,6 +154,40 @@ struct Outgoing {
     /// honoring the guarantee locally: floors are reserved off the top of
     /// the degraded envelope before the batch fair-share.
     floor_gbps: f64,
+    /// Stall watchdog: consecutive telemetry windows per path in which a
+    /// live allocation moved zero bytes. At [`STALL_WINDOWS`] the path's
+    /// samples carry the stall flag — affirmative outage evidence the
+    /// controller's estimator treats as capacity-capped even at zero
+    /// achieved throughput.
+    stall_windows: Vec<u32>,
+}
+
+/// Data-plane dial state shared by the control handler (which learns peer
+/// targets from the `peers` op) and the sender thread (which periodically
+/// tops up missing connections): retained targets per destination plus a
+/// per-peer circuit breaker over a seeded backoff schedule, so a dead peer
+/// is re-dialed at a bounded, decorrelated rate instead of on every
+/// control push.
+struct PeerState {
+    /// dst dc → (data address, connections wanted).
+    targets: Mutex<HashMap<usize, (String, usize)>>,
+    breakers: Mutex<HashMap<usize, CircuitBreaker>>,
+    /// Monotone clock origin for breaker cooldowns.
+    epoch: Instant,
+}
+
+impl PeerState {
+    fn new() -> PeerState {
+        PeerState {
+            targets: Mutex::new(HashMap::new()),
+            breakers: Mutex::new(HashMap::new()),
+            epoch: Instant::now(),
+        }
+    }
+
+    fn now_s(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
 }
 
 /// Receiver-side reassembly state of one incoming transfer.
@@ -181,6 +235,7 @@ impl Agent {
         let rx_counters: Arc<Mutex<HashMap<(u64, usize), Arc<AtomicU64>>>> = Arc::default();
         let incoming: Arc<Mutex<HashMap<(u64, usize), Incoming>>> = Arc::default();
         let pending: Arc<Mutex<PendingCtrl>> = Arc::default();
+        let peers = Arc::new(PeerState::new());
         let degraded = Arc::new(AtomicBool::new(false));
         let ctrl_addr = Arc::new(Mutex::new(controller_addr));
 
@@ -241,6 +296,7 @@ impl Agent {
             let degraded = degraded.clone();
             let pending = pending.clone();
             let ctrl_addr = ctrl_addr.clone();
+            let peers = peers.clone();
             threads.push(std::thread::spawn(move || {
                 let mut stream = Some(ctrl);
                 while !stop.load(Ordering::Relaxed) {
@@ -259,7 +315,7 @@ impl Agent {
                     *lock_recover(&last_rx) = Instant::now();
                     ctrl_session(
                         s, dc, &stop, &out, &conns, &incoming, &rx_counters, &ctrl_tx,
-                        &last_rx, &degraded,
+                        &last_rx, &degraded, &peers,
                     );
                     *lock_recover(&ctrl_tx) = None;
                 }
@@ -277,9 +333,11 @@ impl Agent {
             let last_rx = last_rx.clone();
             let degraded = degraded.clone();
             let pending = pending.clone();
+            let peers = peers.clone();
             threads.push(std::thread::spawn(move || {
                 let mut last = Instant::now();
                 let mut last_report = Instant::now();
+                let mut last_topup = Instant::now();
                 let payload = vec![0u8; CHUNK_BYTES];
                 while !stop.load(Ordering::Relaxed) {
                     std::thread::sleep(Duration::from_millis(4));
@@ -287,6 +345,13 @@ impl Agent {
                     let dt = now.duration_since(last).as_secs_f64();
                     last = now;
                     send_tick(dc, dt, &payload, &out, &conns);
+                    // Re-dial any missing peer connections (breaker-gated):
+                    // a peer that was unreachable when its table entry
+                    // arrived is wired up from here once it returns.
+                    if now.duration_since(last_topup) >= PEER_TOPUP_INTERVAL {
+                        last_topup = now;
+                        top_up_peer_conns(dc, &peers, &conns);
+                    }
                     // Watchdog: controller silent past the deadline (it
                     // heartbeats when idle, so silence means it is gone).
                     if !degraded.load(Ordering::Relaxed)
@@ -372,12 +437,17 @@ fn hello_msg(dc: usize, data_addr: std::net::SocketAddr) -> Json {
 
 /// Retry the controller address until a connection with a delivered
 /// `hello` exists (returned with the read timeout set) or stop is raised.
+/// Attempts are paced by a seeded exponential backoff with jitter (fresh
+/// schedule per outage, seeded from the dc id so a fleet decorrelates
+/// deterministically), and the sleep is chunked so a raised stop flag is
+/// honored within ~25 ms even mid-cooldown.
 fn reconnect(
     dc: usize,
     data_addr: std::net::SocketAddr,
     ctrl_addr: &Arc<Mutex<std::net::SocketAddr>>,
     stop: &AtomicBool,
 ) -> Option<TcpStream> {
+    let mut backoff = Backoff::new(0xA6E7 ^ dc as u64, RECONNECT_BASE, RECONNECT_MAX);
     loop {
         if stop.load(Ordering::Relaxed) {
             return None;
@@ -388,11 +458,19 @@ fn reconnect(
             if protocol::write_msg(&mut s, &hello_msg(dc, data_addr)).is_ok()
                 && s.set_read_timeout(Some(Duration::from_millis(100))).is_ok()
             {
-                log::info!("agent {dc}: reconnected to controller at {addr}");
+                log::info!(
+                    "agent {dc}: reconnected to controller at {addr} \
+                     (attempt {})",
+                    backoff.attempts() + 1
+                );
                 return Some(s);
             }
         }
-        std::thread::sleep(RECONNECT_DELAY);
+        let delay = backoff.next_delay();
+        let t0 = Instant::now();
+        while t0.elapsed() < delay && !stop.load(Ordering::Relaxed) {
+            std::thread::sleep(Duration::from_millis(25));
+        }
     }
 }
 
@@ -470,6 +548,7 @@ fn ctrl_session(
     ctrl_tx: &CtrlTx,
     last_rx: &Arc<Mutex<Instant>>,
     degraded: &Arc<AtomicBool>,
+    peers: &Arc<PeerState>,
 ) {
     // None until the first rates_full lands.
     let mut last_seq: Option<u64> = None;
@@ -510,7 +589,7 @@ fn ctrl_session(
             }
             Some("probe_request") => handle_probe(dc, &msg, conns, ctrl_tx),
             Some("hb") => {} // heartbeat: last_rx update above is the point
-            _ => handle_ctrl(&msg, out, conns, incoming, rx_counters),
+            _ => handle_ctrl(dc, &msg, out, conns, incoming, rx_counters, peers),
         }
     }
 }
@@ -594,6 +673,9 @@ fn enter_degraded(dc: usize, out: &Arc<Mutex<HashMap<(u64, usize), Outgoing>>>) 
         if e.window.len() < share.len() {
             e.window.resize(share.len(), 0.0);
         }
+        if e.stall_windows.len() < share.len() {
+            e.stall_windows.resize(share.len(), 0);
+        }
         e.rate = share;
         e.rate_windows = 0;
         active += 1;
@@ -606,47 +688,38 @@ fn enter_degraded(dc: usize, out: &Arc<Mutex<HashMap<(u64, usize), Outgoing>>>) 
 
 /// Apply a controller command.
 fn handle_ctrl(
+    dc: usize,
     msg: &Json,
     out: &Arc<Mutex<HashMap<(u64, usize), Outgoing>>>,
     conns: &Arc<Mutex<HashMap<usize, Vec<TcpStream>>>>,
     incoming: &Arc<Mutex<HashMap<(u64, usize), Incoming>>>,
     rx_counters: &Arc<Mutex<HashMap<(u64, usize), Arc<AtomicU64>>>>,
+    peers: &Arc<PeerState>,
 ) {
     match msg.get("op").and_then(|o| o.as_str()) {
-        // Establish persistent connections: one per path to each peer.
+        // Record the peer targets and fill the pools. Dialing is delegated
+        // to `top_up_peer_conns` so a peer that is down when the push
+        // arrives (its breaker open) gets retried from the sender thread
+        // instead of leaving the pool short forever.
         Some("peers") => {
             if let Some(arr) = msg.get("peers").and_then(|p| p.as_arr()) {
-                let mut c = lock_recover(conns);
-                for peer in arr {
-                    let (Some(dst), Some(addr), Some(k)) = (
-                        peer.get("dc").and_then(|x| x.as_u64()),
-                        peer.get("addr").and_then(|x| x.as_str()),
-                        peer.get("k").and_then(|x| x.as_u64()),
-                    ) else {
-                        log::warn!("agent: malformed peer entry dropped");
-                        continue;
-                    };
-                    // Sanity-cap k: a corrupt value must not spin this
-                    // thread opening unbounded connections.
-                    let k = k.min(1024) as usize;
-                    let entry = c.entry(dst as usize).or_default();
-                    while entry.len() < k {
-                        match TcpStream::connect(addr) {
-                            Ok(s) => {
-                                s.set_nodelay(true).ok();
-                                entry.push(s);
-                            }
-                            Err(e) => {
-                                log::warn!("agent: connect {addr}: {e}");
-                                break;
-                            }
-                        }
+                {
+                    let mut t = lock_recover(&peers.targets);
+                    for peer in arr {
+                        let (Some(dst), Some(addr), Some(k)) = (
+                            peer.get("dc").and_then(|x| x.as_u64()),
+                            peer.get("addr").and_then(|x| x.as_str()),
+                            peer.get("k").and_then(|x| x.as_u64()),
+                        ) else {
+                            log::warn!("agent: malformed peer entry dropped");
+                            continue;
+                        };
+                        // Sanity-cap k: a corrupt value must not spin this
+                        // thread opening unbounded connections.
+                        t.insert(dst as usize, (addr.to_string(), k.min(1024) as usize));
                     }
-                    // The pool must also shrink when the peer's path
-                    // count went down, or idle sockets leak and
-                    // `send_tick` keeps addressing stale path indices.
-                    entry.truncate(k);
                 }
+                top_up_peer_conns(dc, peers, conns);
             }
         }
         // Start an outgoing transfer.
@@ -659,6 +732,7 @@ fn handle_ctrl(
                 return;
             };
             let k = lock_recover(conns).get(&(dst as usize)).map(|v| v.len()).unwrap_or(0);
+            let reset = msg.get("reset").and_then(|x| x.as_bool()).unwrap_or(false);
             let mut o = lock_recover(out);
             let e = o.entry((coflow, dst as usize)).or_insert(Outgoing {
                 coflow,
@@ -669,9 +743,23 @@ fn handle_ctrl(
                 alloc: vec![0.0; k],
                 window: vec![0.0; k],
                 rate_windows: 0,
+                stall_windows: vec![0; k],
                 floor_gbps: 0.0,
             });
-            e.remaining += bytes;
+            if reset {
+                // Re-arm after an endpoint restart: the controller replaces
+                // the transfer outright (offsets restart at 0 and the peer's
+                // reassembly state was reset in lockstep), so adding onto a
+                // survivor's remaining/offset would double-count.
+                e.remaining = bytes;
+                e.offset = 0;
+                e.rate_windows = 0;
+                for w in e.stall_windows.iter_mut() {
+                    *w = 0;
+                }
+            } else {
+                e.remaining += bytes;
+            }
             // Stream-class transfers carry their rate floor; sanitize
             // network-supplied values the same way rates are.
             let floor = msg.get("floor_gbps").and_then(|x| x.as_f64()).unwrap_or(0.0);
@@ -691,16 +779,32 @@ fn handle_ctrl(
             let counter = Arc::new(AtomicU64::new(0));
             lock_recover(rx_counters).insert((coflow, src as usize), counter.clone());
             let mut inc = lock_recover(incoming);
-            let e = inc.entry((coflow, src as usize)).or_insert(Incoming {
-                expected: 0,
-                frontier: 0,
-                pending: BTreeMap::new(),
-                received: counter,
-            });
-            // Saturating: if data raced ahead of the expectation the entry
-            // already exists with the unsolicited u64::MAX sentinel, and a
-            // plain add would overflow.
-            e.expected = e.expected.saturating_add(bytes);
+            if msg.get("reset").and_then(|x| x.as_bool()).unwrap_or(false) {
+                // Re-arm after an endpoint restart: the sender restarts
+                // offsets at 0, so a surviving frontier > 0 would drop its
+                // chunks forever. Replace the reassembly state wholesale —
+                // the controller re-sized `bytes` to the remaining work.
+                inc.insert(
+                    (coflow, src as usize),
+                    Incoming {
+                        expected: bytes,
+                        frontier: 0,
+                        pending: BTreeMap::new(),
+                        received: counter,
+                    },
+                );
+            } else {
+                let e = inc.entry((coflow, src as usize)).or_insert(Incoming {
+                    expected: 0,
+                    frontier: 0,
+                    pending: BTreeMap::new(),
+                    received: counter,
+                });
+                // Saturating: if data raced ahead of the expectation the
+                // entry already exists with the unsolicited u64::MAX
+                // sentinel, and a plain add would overflow.
+                e.expected = e.expected.saturating_add(bytes);
+            }
         }
         // Update rates for (coflow, dst): one rate per path, Gbps (legacy
         // single-entry form; delta pushes batch the same payload).
@@ -709,6 +813,76 @@ fn handle_ctrl(
             trim_conns(out, conns);
         }
         _ => {}
+    }
+}
+
+/// Bring every per-destination data pool up to its wanted size, gated by
+/// the peer's circuit breaker: after [`BREAKER_THRESHOLD`] consecutive
+/// dial failures the peer is skipped until its backoff cooldown expires,
+/// then probed with a single dial. Breakers are seeded per (src, dst) so
+/// a fleet of agents recovering from the same partition decorrelates
+/// deterministically. Pools also shrink here when the wanted path count
+/// went down, or idle sockets leak and `send_tick` keeps addressing stale
+/// path indices. The peers lock is never held across a dial.
+fn top_up_peer_conns(
+    my_dc: usize,
+    peers: &PeerState,
+    conns: &Arc<Mutex<HashMap<usize, Vec<TcpStream>>>>,
+) {
+    let mut targets: Vec<(usize, String, usize)> = {
+        let t = lock_recover(&peers.targets);
+        t.iter().map(|(dst, (addr, k))| (*dst, addr.clone(), *k)).collect()
+    };
+    targets.sort_unstable_by_key(|&(dst, _, _)| dst);
+    for (dst, addr, k) in targets {
+        {
+            let mut c = lock_recover(conns);
+            let entry = c.entry(dst).or_default();
+            entry.truncate(k);
+            if entry.len() >= k {
+                continue;
+            }
+        }
+        loop {
+            let deficit = {
+                let c = lock_recover(conns);
+                k.saturating_sub(c.get(&dst).map(|v| v.len()).unwrap_or(0))
+            };
+            if deficit == 0 {
+                break;
+            }
+            let now = peers.now_s();
+            {
+                let mut b = lock_recover(&peers.breakers);
+                let brk = b.entry(dst).or_insert_with(|| {
+                    CircuitBreaker::new(
+                        0x9eed ^ ((my_dc as u64) << 32) ^ dst as u64,
+                        PEER_DIAL_BASE,
+                        PEER_DIAL_MAX,
+                    )
+                });
+                if !brk.allow(now) {
+                    break; // cooling down; the periodic top-up retries
+                }
+            }
+            match TcpStream::connect(addr.as_str()) {
+                Ok(s) => {
+                    s.set_nodelay(true).ok();
+                    lock_recover(conns).entry(dst).or_default().push(s);
+                    if let Some(b) = lock_recover(&peers.breakers).get_mut(&dst) {
+                        b.record_success();
+                    }
+                }
+                Err(e) => {
+                    log::warn!("agent {my_dc}: connect {addr}: {e}");
+                    let now = peers.now_s();
+                    if let Some(b) = lock_recover(&peers.breakers).get_mut(&dst) {
+                        b.record_failure(now);
+                    }
+                    break;
+                }
+            }
+        }
     }
 }
 
@@ -753,6 +927,9 @@ fn apply_rate_entry(entry: &Json, out: &Arc<Mutex<HashMap<(u64, usize), Outgoing
         }
         if e.window.len() < e.rate.len() {
             e.window.resize(e.rate.len(), 0.0);
+        }
+        if e.stall_windows.len() < e.rate.len() {
+            e.stall_windows.resize(e.rate.len(), 0);
         }
     }
 }
@@ -885,6 +1062,9 @@ fn send_tick(
             if o.window.len() <= p {
                 o.window.resize(p + 1, 0.0);
             }
+            if o.stall_windows.len() <= p {
+                o.stall_windows.resize(p + 1, 0);
+            }
             // Cap the bucket at one tick's worth plus a chunk to avoid
             // long-idle bursts defeating the shaper.
             o.budget[p] = (o.budget[p] + rate_bps * dt).min(rate_bps * 0.1 + CHUNK_BYTES as f64);
@@ -943,10 +1123,25 @@ fn flush_telemetry(
             // startup shortfall as link capacity).
             let stable = e.rate_windows > 0;
             e.rate_windows = e.rate_windows.saturating_add(1);
+            if e.stall_windows.len() < e.window.len() {
+                e.stall_windows.resize(e.window.len(), 0);
+            }
             for p in 0..e.window.len() {
                 let achieved = e.window[p];
                 let alloc = e.rate.get(p).copied().unwrap_or(0.0);
                 e.window[p] = 0.0;
+                // Stall watchdog: a live allocation with work left that
+                // moved zero bytes for STALL_WINDOWS consecutive stable
+                // windows flags the sample, so the controller can treat the
+                // path as capped even though achieved-at-zero evidence is
+                // otherwise discarded (the gray-outage case).
+                let stalled = if stable && achieved <= 0.0 && alloc > 0.0 && e.remaining > 0 {
+                    e.stall_windows[p] = e.stall_windows[p].saturating_add(1);
+                    e.stall_windows[p] >= STALL_WINDOWS
+                } else {
+                    e.stall_windows[p] = 0;
+                    false
+                };
                 if achieved <= 0.0 && alloc <= 0.0 {
                     continue;
                 }
@@ -958,6 +1153,7 @@ fn flush_telemetry(
                         gbps: achieved / window_s / BYTES_PER_GBPS,
                         alloc_gbps: if stable { alloc } else { 0.0 },
                         probe: false,
+                        stalled,
                     }
                     .to_json(),
                 );
@@ -1034,6 +1230,7 @@ fn handle_probe(
         gbps,
         alloc_gbps: 0.0,
         probe: true,
+        stalled: false,
     };
     let msg = Json::from_pairs([
         ("op", Json::from("telemetry_report")),
@@ -1143,6 +1340,7 @@ mod tests {
             alloc,
             window: vec![0.0; k],
             rate_windows: 0,
+            stall_windows: vec![0; k],
             floor_gbps: 0.0,
         }
     }
@@ -1341,5 +1539,116 @@ mod tests {
         assert_eq!(entries[1].remaining_bytes, 500_000);
         assert_eq!(entries[1].rates, vec![3.0, 1.0], "envelope, not degraded rate");
         assert_eq!(msgs.len(), 2, "buffered completion replayed after the report");
+    }
+
+    /// Re-arm protocol: a plain `transfer`/`expect` is additive (retries of
+    /// the original group command must stack), while `reset: true` replaces
+    /// the endpoint state wholesale — offsets restart at zero on the sender
+    /// and the receiver's reassembly frontier drops with them, so a
+    /// restarted endpoint can never deadlock against a survivor's frontier.
+    #[test]
+    fn reset_flag_replaces_transfer_and_expect_state() {
+        let out: Arc<Mutex<HashMap<(u64, usize), Outgoing>>> = Arc::default();
+        let conns: Arc<Mutex<HashMap<usize, Vec<TcpStream>>>> = Arc::default();
+        let incoming: Arc<Mutex<HashMap<(u64, usize), Incoming>>> = Arc::default();
+        let rx_counters: Arc<Mutex<HashMap<(u64, usize), Arc<AtomicU64>>>> = Arc::default();
+        let peers = Arc::new(PeerState::new());
+        let transfer = |bytes: u64, reset: bool| {
+            let mut m = Json::from_pairs([
+                ("op", Json::from("transfer")),
+                ("coflow", Json::from(7u64)),
+                ("dst", Json::from(2u64)),
+                ("bytes", Json::from(bytes)),
+            ]);
+            if reset {
+                m.set("reset", Json::from(true));
+            }
+            handle_ctrl(0, &m, &out, &conns, &incoming, &rx_counters, &peers);
+        };
+        transfer(1000, false);
+        transfer(1000, false);
+        {
+            let mut o = out.lock().unwrap();
+            let e = o.get_mut(&(7, 2)).unwrap();
+            assert_eq!(e.remaining, 2000, "plain transfers are additive");
+            // Simulate progress: a re-arm must discard it.
+            e.offset = 500;
+            e.remaining = 1500;
+        }
+        transfer(1600, true);
+        {
+            let o = out.lock().unwrap();
+            let e = &o[&(7, 2)];
+            assert_eq!(e.remaining, 1600, "reset replaces remaining");
+            assert_eq!(e.offset, 0, "reset restarts the offset stream");
+        }
+
+        let expect = |bytes: u64, reset: bool| {
+            let mut m = Json::from_pairs([
+                ("op", Json::from("expect")),
+                ("coflow", Json::from(7u64)),
+                ("src", Json::from(3u64)),
+                ("bytes", Json::from(bytes)),
+            ]);
+            if reset {
+                m.set("reset", Json::from(true));
+            }
+            handle_ctrl(0, &m, &out, &conns, &incoming, &rx_counters, &peers);
+        };
+        expect(1000, false);
+        expect(1000, false);
+        {
+            let mut inc = incoming.lock().unwrap();
+            let e = inc.get_mut(&(7, 3)).unwrap();
+            assert_eq!(e.expected, 2000, "plain expects are additive");
+            e.frontier = 700;
+            e.pending.insert(900, 100);
+        }
+        expect(1300, true);
+        {
+            let inc = incoming.lock().unwrap();
+            let e = &inc[&(7, 3)];
+            assert_eq!(e.expected, 1300, "reset replaces the target");
+            assert_eq!(e.frontier, 0, "reset drops the survivor frontier");
+            assert!(e.pending.is_empty(), "buffered out-of-order chunks dropped");
+        }
+    }
+
+    /// Stall watchdog: a path holding a live allocation and unfinished work
+    /// that moves zero bytes for [`STALL_WINDOWS`] consecutive stable
+    /// windows flags its telemetry sample; any progress resets the counter.
+    #[test]
+    fn stalled_paths_are_flagged_after_consecutive_idle_windows() {
+        let out: Arc<Mutex<HashMap<(u64, usize), Outgoing>>> = Arc::default();
+        {
+            let mut t = mk_outgoing(1 << 20, vec![2.0]);
+            t.rate_windows = 1; // rate already spanned a full window
+            out.lock().unwrap().insert((1, 2), t);
+        }
+        // Disconnected ctrl_tx: every flush lands in the pending buffer.
+        let ctrl_tx: CtrlTx = Arc::new(Mutex::new(None));
+        let pending: Arc<Mutex<PendingCtrl>> = Arc::default();
+        let last_stall = |p: &Arc<Mutex<PendingCtrl>>| {
+            let p = p.lock().unwrap();
+            p.samples
+                .last()
+                .and_then(|s| s.get("stall"))
+                .and_then(|x| x.as_bool())
+                .unwrap_or(false)
+        };
+        for i in 0..STALL_WINDOWS {
+            flush_telemetry(0.25, &out, &ctrl_tx, &pending);
+            assert!(
+                !last_stall(&pending) || i + 1 >= STALL_WINDOWS,
+                "no stall flag before the threshold (window {i})"
+            );
+        }
+        assert!(last_stall(&pending), "threshold window carries the stall flag");
+        // Progress clears the counter: the next idle window is unflagged.
+        out.lock().unwrap().get_mut(&(1, 2)).unwrap().window[0] = 1e6;
+        flush_telemetry(0.25, &out, &ctrl_tx, &pending);
+        assert!(!last_stall(&pending), "progress clears the stall state");
+        flush_telemetry(0.25, &out, &ctrl_tx, &pending);
+        assert!(!last_stall(&pending), "counter restarted from zero after progress");
     }
 }

@@ -12,7 +12,7 @@
 use super::protocol::{self, CoflowStatus, FlowSpec, ResyncEntry, TelemetrySample, PROBE_COFLOW};
 use super::rules::RuleTable;
 use crate::coflow::{Coflow, CoflowId, Flow, ServiceClass};
-use crate::engine::{EngineConfig, RoundEngine, ShardedEngine, WanReaction};
+use crate::engine::{EngineConfig, RoundEngine, ShardedEngine, SitePartition, WanReaction};
 use crate::net::telemetry::{self, TelemetryConfig};
 use crate::net::{LinkEvent, Wan};
 use crate::scheduler::{CoflowRates, CoflowState, Policy, RoundTrigger};
@@ -53,6 +53,15 @@ pub struct TestbedConfig {
     /// runs shard rounds concurrently and pushes each shard's rates as its
     /// solve completes (pipelined enforcement).
     pub shards: usize,
+    /// Agent liveness deadline: an agent whose control channel has been
+    /// silent this long (agents emit a telemetry report every ~250 ms, so
+    /// this is a miss budget of deadline/250 ms flushes) is declared down —
+    /// its connection is evicted, its site's edges are failed in the
+    /// engine, and its coflows park with achieved bytes preserved until it
+    /// reconnects. The generous default keeps partial fake-agent testbeds
+    /// (which never speak) alive through protocol tests; chaos tests dial
+    /// it down.
+    pub liveness_deadline: Duration,
 }
 
 impl TestbedConfig {
@@ -63,6 +72,7 @@ impl TestbedConfig {
             workers: crate::engine::default_workers(),
             telemetry: TelemetryConfig::default(),
             shards: 1,
+            liveness_deadline: Duration::from_secs(30),
         }
     }
 
@@ -78,6 +88,11 @@ impl TestbedConfig {
 
     pub fn with_shards(mut self, shards: usize) -> TestbedConfig {
         self.shards = shards;
+        self
+    }
+
+    pub fn with_liveness_deadline(mut self, deadline: Duration) -> TestbedConfig {
+        self.liveness_deadline = deadline;
         self
     }
 }
@@ -274,6 +289,11 @@ struct AgentConn {
     /// Readers and rate pushes check it against [`State::agent_gen`] so a
     /// superseded connection can neither mutate state nor receive frames.
     gen: u64,
+    /// Wall-clock instant of the last message received from this agent
+    /// (any op; agents emit a telemetry report every ~250 ms, which doubles
+    /// as their heartbeat). The liveness scan declares the agent down once
+    /// this ages past [`TestbedConfig::liveness_deadline`].
+    last_rx: Instant,
 }
 
 /// Control-plane traffic counters for the delta protocol.
@@ -290,6 +310,18 @@ pub struct DeltaStats {
     /// Control-channel write failures (agent writer threads). Each one
     /// closed an agent's outbound queue and flagged it for a full sync.
     pub write_errors: usize,
+}
+
+/// Data-plane liveness counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LivenessStats {
+    /// Agents declared down after missing the liveness deadline. Each one
+    /// evicted the agent's connection (writer retired, queue dropped) and
+    /// parked its coflows in the engine.
+    pub down_events: usize,
+    /// Previously-down agents that reconnected and were re-admitted (their
+    /// parked coflows resumed from achieved bytes).
+    pub up_events: usize,
 }
 
 /// Telemetry-plane traffic counters.
@@ -328,6 +360,8 @@ struct State {
     peers_sent: bool,
     delta: DeltaStats,
     telemetry: TelemetryStats,
+    liveness: LivenessStats,
+    liveness_deadline: Duration,
     /// Per-edge wall-clock time of the last probe_request, so a stale edge
     /// is probed once per staleness window rather than on every report.
     last_probe_req: Vec<f64>,
@@ -409,6 +443,8 @@ impl Controller {
             peers_sent: false,
             delta: DeltaStats::default(),
             telemetry: TelemetryStats::default(),
+            liveness: LivenessStats::default(),
+            liveness_deadline: cfg.liveness_deadline,
             last_probe_req: vec![f64::NEG_INFINITY; num_edges],
             truth_caps,
             epoch: Instant::now(),
@@ -437,10 +473,13 @@ impl Controller {
                 }
             }));
         }
-        // Heartbeat: keep every agent's control channel audibly alive even
-        // when no scheduling rounds run, so agents can tell "idle
-        // controller" from "dead controller" (their degraded-mode watchdog
-        // fires on silence, not on socket errors alone).
+        // Heartbeat + liveness: keep every agent's control channel audibly
+        // alive even when no scheduling rounds run (agents tell "idle
+        // controller" from "dead controller" by silence, not socket
+        // errors), and scan the other direction — an agent whose channel
+        // has been silent past the liveness deadline is declared down and
+        // its traffic parked. The scan runs every loop tick (50 ms) so
+        // detection latency is deadline + O(tick), not deadline + 500 ms.
         {
             let stop = stop.clone();
             let state = state.clone();
@@ -449,11 +488,22 @@ impl Controller {
                 let mut last = Instant::now();
                 while !stop.load(Ordering::Relaxed) {
                     std::thread::sleep(Duration::from_millis(50));
+                    let mut st = state.lock().unwrap();
+                    let deadline = st.liveness_deadline;
+                    let mut dead: Vec<usize> = st
+                        .agents
+                        .iter()
+                        .filter(|(_, a)| a.last_rx.elapsed() > deadline)
+                        .map(|(&dc, _)| dc)
+                        .collect();
+                    dead.sort_unstable();
+                    for dc in dead {
+                        declare_agent_down(&mut st, dc);
+                    }
                     if last.elapsed() < HEARTBEAT_INTERVAL {
                         continue;
                     }
                     last = Instant::now();
-                    let mut st = state.lock().unwrap();
                     for a in st.agents.values_mut() {
                         a.tx.send(hb.clone());
                     }
@@ -544,6 +594,25 @@ impl ControllerHandle {
         st.telemetry
     }
 
+    /// Liveness counters: agents declared down / re-admitted.
+    pub fn liveness_stats(&self) -> LivenessStats {
+        let st = self.state.lock().unwrap();
+        st.liveness
+    }
+
+    /// Whether the controller currently holds `dc`'s site as down (its
+    /// agent missed the liveness deadline and has not reconnected).
+    pub fn agent_down(&self, dc: usize) -> bool {
+        let st = self.state.lock().unwrap();
+        st.engine.site_down(dc)
+    }
+
+    /// Coflows currently parked because an endpoint site is down.
+    pub fn parked_coflows(&self) -> usize {
+        let st = self.state.lock().unwrap();
+        st.engine.parked_down_count()
+    }
+
     /// Total remaining volume (Gbit) the engine currently holds for a
     /// coflow — `None` once it finished (or was never admitted). The chaos
     /// tests use this to prove crash reconstruction preserved progress:
@@ -629,8 +698,22 @@ fn serve_conn(mut s: TcpStream, state: Arc<Mutex<State>>, stop: Arc<AtomicBool>)
                             seq: 0,
                             sent: HashMap::new(),
                             gen,
+                            last_rx: Instant::now(),
                         },
                     );
+                    // A site previously declared down is coming back:
+                    // restore its edges and un-park its coflows (in id
+                    // order, resuming from achieved bytes) before the
+                    // baseline sync goes out.
+                    let was_down = st.engine.site_down(dc);
+                    if was_down {
+                        let now_s = st.now_s();
+                        st.engine.set_site_up(dc, now_s);
+                        st.liveness.up_events += 1;
+                        let (wan, paths) =
+                            (st.engine.wan().clone(), st.engine.paths().clone());
+                        st.rules.reinstall(&wan, &paths);
+                    }
                     // Fresh connection, empty delta baseline: the very
                     // first frame on the new socket is a full-table sync
                     // so a (re)connected agent converges immediately.
@@ -638,6 +721,15 @@ fn serve_conn(mut s: TcpStream, state: Arc<Mutex<State>>, stop: Arc<AtomicBool>)
                     if st.agents.len() == st.engine.wan().num_nodes() {
                         resend_peers(&mut st);
                         st.peers_sent = true;
+                    } else if was_down {
+                        // Partial fleet (another site may still be dark):
+                        // the returning agent needs its peer table now,
+                        // and the survivors need its new data address.
+                        resend_peers(&mut st);
+                    }
+                    if was_down {
+                        resend_transfer_state(&mut st, dc);
+                        reallocate(&mut st, RoundTrigger::WanChange);
                     }
                 }
                 // Stay on this connection reading agent events.
@@ -672,6 +764,101 @@ fn serve_conn(mut s: TcpStream, state: Arc<Mutex<State>>, stop: Arc<AtomicBool>)
                     Json::from_pairs([("error", Json::from(format!("unknown op {op}")))]);
                 let _ = protocol::write_msg(&mut s, &err);
             }
+        }
+    }
+}
+
+/// Declare an agent down: evict its connection outright (retire the
+/// writer, drop the queue — a dead socket must not linger flagged
+/// full-sync forever), fail the site's edges in the engine so every coflow
+/// with an endpoint there parks with achieved bytes preserved, and
+/// re-solve the survivors around the hole.
+fn declare_agent_down(st: &mut State, dc: usize) {
+    let Some(mut conn) = st.agents.remove(&dc) else { return };
+    st.agent_gen.remove(&dc);
+    conn.tx.retire();
+    st.peers_sent = false;
+    st.liveness.down_events += 1;
+    log::warn!("controller: agent {dc} missed its liveness deadline; parking its traffic");
+    // Credit progress up to now *before* the park zeroes the victim's
+    // rates: the parked remaining (and the eventual reset re-arm budget)
+    // must reflect achieved bytes, not the volume at the last round.
+    st.drain_to_now();
+    let now_s = st.now_s();
+    let reaction = st.engine.set_site_down(dc, SitePartition::Full, now_s);
+    if reaction == WanReaction::Structural {
+        let (wan, paths) = (st.engine.wan().clone(), st.engine.paths().clone());
+        st.rules.reinstall(&wan, &paths);
+        resend_peers(st);
+        reallocate(st, RoundTrigger::WanChange);
+    }
+}
+
+/// Re-arm the data plane for a reconnected (previously down) agent. A
+/// restarted agent process lost its transfer table, and the surviving far
+/// ends of its groups hold reassembly state (contiguous-frontier offsets)
+/// a fresh sender can never align with — so every unfinished group
+/// touching the site is restarted *on both endpoints* with `reset`-flagged
+/// `expect`/`transfer` messages sized from the engine's remaining
+/// estimates. The receiver's frontier crossing its target is what
+/// completes a group, so the sender budget is padded up slightly: overshoot
+/// past the receiver's target is revoked after `group_done`, while an
+/// undershoot would stall the group forever.
+fn resend_transfer_state(st: &mut State, dc: usize) {
+    let mut groups: Vec<(CoflowId, usize, usize, u64, Option<f64>)> = Vec::new();
+    st.engine.visit_allocations(|cs, _| {
+        for (gi, g) in cs.groups.iter().enumerate() {
+            if g.src != dc && g.dst != dc {
+                continue;
+            }
+            let rem = cs.remaining.get(gi).copied().unwrap_or(0.0);
+            if rem <= ESTIMATE_FLOOR_GBIT {
+                continue;
+            }
+            let bytes = (rem * super::BYTES_PER_GBPS) as u64;
+            groups.push((cs.id, g.src, g.dst, bytes.max(1), cs.rate_floor()));
+        }
+    });
+    groups.sort_unstable_by_key(|&(id, src, dst, _, _)| (id, src, dst));
+    // Receiver expectations first (same discipline as fresh submissions):
+    // a reset target must be armed before the reset sender starts.
+    for &(id, src, dst, bytes, _) in &groups {
+        if let Some(a) = st.agents.get_mut(&dst) {
+            let m = Json::from_pairs([
+                ("op", Json::from("expect")),
+                ("coflow", id.into()),
+                ("src", src.into()),
+                ("bytes", bytes.into()),
+                ("reset", Json::from(true)),
+            ]);
+            a.tx.send(m);
+        }
+    }
+    let mut dsts: Vec<usize> = groups.iter().map(|&(_, _, d, _, _)| d).collect();
+    dsts.sort_unstable();
+    dsts.dedup();
+    for dst in dsts {
+        if let Some(a) = st.agents.get(&dst) {
+            a.tx.flush(Duration::from_secs(2));
+        }
+    }
+    for &(id, src, dst, bytes, floor) in &groups {
+        if let Some(a) = st.agents.get_mut(&src) {
+            // Pad the sender budget ~3% + a chunk past the receiver's
+            // target so drain-estimate skew cannot leave the frontier
+            // short of it.
+            let padded = bytes + bytes / 32 + 65_536;
+            let mut m = Json::from_pairs([
+                ("op", Json::from("transfer")),
+                ("coflow", id.into()),
+                ("dst", dst.into()),
+                ("bytes", padded.into()),
+                ("reset", Json::from(true)),
+            ]);
+            if let Some(f) = floor {
+                m.set("floor_gbps", f.into());
+            }
+            a.tx.send(m);
         }
     }
 }
@@ -775,6 +962,10 @@ fn agent_reader(
             log::info!("controller: superseded connection reader for dc {dc} exiting");
             return;
         }
+        // Anything the agent says proves it alive.
+        if let Some(a) = st.agents.get_mut(&dc) {
+            a.last_rx = Instant::now();
+        }
         match msg.get("op").and_then(|o| o.as_str()) {
             Some("group_done") => {
                 let (Some(coflow), Some(src), Some(dst)) = (
@@ -785,6 +976,14 @@ fn agent_reader(
                     log::warn!("controller: malformed group_done from dc {dc}, dropped");
                     continue;
                 };
+                // Duplicate-delivery guard: agents replay buffered
+                // completions after reconnects, and a `group_done` for a
+                // coflow the controller already saw finish must be a
+                // no-op — no double-complete, no spurious round, and no
+                // resurrecting an entry `take_finished` removed.
+                if st.coflows.get(&coflow).is_some_and(|m| m.finished.is_some()) {
+                    continue;
+                }
                 let coflow_finished =
                     st.engine.complete_group(coflow, src as usize, dst as usize);
                 if coflow_finished {
@@ -844,6 +1043,12 @@ fn handle_resync_state(st: &mut State, dc: usize, msg: &Json) {
     let mut touched: Vec<CoflowId> = Vec::new();
     for e in &entries {
         if e.dst_dc >= n || e.dst_dc == dc || e.remaining_bytes == 0 {
+            continue;
+        }
+        // A coflow this controller already saw complete must not be
+        // resurrected by a stale resync replay (the agent's report can
+        // race its own buffered `group_done`).
+        if st.coflows.get(&e.coflow).is_some_and(|m| m.finished.is_some()) {
             continue;
         }
         let rem_gbit = bytes_to_gbit(e.remaining_bytes).max(ESTIMATE_FLOOR_GBIT);
@@ -969,6 +1174,11 @@ fn fuse_telemetry_samples(st: &mut State, dc: usize, samples: &[Json]) {
         // aggregates globally.)
         let mut passive: HashMap<usize, (f64, f64)> = HashMap::new(); // edge -> (achieved, alloc)
         let mut probes: HashMap<usize, f64> = HashMap::new(); // edge -> best measurement
+        // Edges some sample's stall watchdog flagged: the agent saw N
+        // consecutive zero-progress windows on an allocated path, which is
+        // affirmative outage evidence — unlike a plain zero-achieved
+        // startup window, which says nothing.
+        let mut stalled: std::collections::HashSet<usize> = std::collections::HashSet::new();
         for sj in samples {
             let Some(s) = TelemetrySample::from_json(sj) else {
                 log::warn!("controller: malformed telemetry sample from dc {dc}, dropped");
@@ -1001,6 +1211,9 @@ fn fuse_telemetry_samples(st: &mut State, dc: usize, samples: &[Json]) {
                     let (ach, alloc) = passive.entry(e).or_insert((0.0, 0.0));
                     *ach += s.gbps;
                     *alloc += s.alloc_gbps.max(0.0);
+                    if s.stalled && s.alloc_gbps > 0.0 {
+                        stalled.insert(e);
+                    }
                 }
             }
         }
@@ -1018,8 +1231,13 @@ fn fuse_telemetry_samples(st: &mut State, dc: usize, samples: &[Json]) {
                 // well short of a nonzero total allocation that spanned
                 // the window (startup windows report alloc 0), and some
                 // bytes actually moved — an unopened connection says
-                // nothing about the link.
-                let capped = *alloc > 0.0 && *ach > 0.0 && *ach < alloc * 0.9;
+                // nothing about the link. Exception: a stall-flagged path
+                // (watchdog-confirmed zero progress under a live
+                // allocation) is capped evidence even at zero achieved —
+                // that is precisely the gray outage the zero-bytes guard
+                // would otherwise hide from the estimator.
+                let capped = *alloc > 0.0
+                    && ((*ach > 0.0 && *ach < alloc * 0.9) || stalled.contains(&e));
                 st.engine.observe_edge(e, ach.min(ceiling), capped, now);
             }
             if let Some(m) = probes.get(&e) {

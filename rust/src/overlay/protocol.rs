@@ -186,18 +186,28 @@ pub struct TelemetrySample {
     /// probes.
     pub alloc_gbps: f64,
     pub probe: bool,
+    /// Set by the sender's stall watchdog: this ⟨transfer, path⟩ made zero
+    /// progress for several consecutive windows despite a live allocation
+    /// — affirmative outage evidence, unlike an ordinary zero-achieved
+    /// window. The key is omitted on the wire when false, so samples from
+    /// (and to) older builds parse unchanged.
+    pub stalled: bool,
 }
 
 impl TelemetrySample {
     pub fn to_json(&self) -> Json {
-        Json::from_pairs([
+        let mut j = Json::from_pairs([
             ("coflow", Json::from(self.coflow)),
             ("dst", self.dst_dc.into()),
             ("path", self.path.into()),
             ("gbps", self.gbps.into()),
             ("alloc", self.alloc_gbps.into()),
             ("probe", self.probe.into()),
-        ])
+        ]);
+        if self.stalled {
+            j.set("stall", Json::from(true));
+        }
+        j
     }
 
     pub fn from_json(j: &Json) -> Option<TelemetrySample> {
@@ -208,6 +218,7 @@ impl TelemetrySample {
             gbps: j.get("gbps")?.as_f64()?,
             alloc_gbps: j.get("alloc").and_then(|x| x.as_f64()).unwrap_or(0.0),
             probe: j.get("probe").and_then(|x| x.as_bool()).unwrap_or(false),
+            stalled: j.get("stall").and_then(|x| x.as_bool()).unwrap_or(false),
         })
     }
 }
@@ -457,8 +468,21 @@ mod tests {
             gbps: 3.25,
             alloc_gbps: 5.0,
             probe: false,
+            stalled: false,
         };
+        // The stall key is omitted when false — old-format wire compat.
+        assert!(s.to_json().get("stall").is_none());
         assert_eq!(TelemetrySample::from_json(&s.to_json()), Some(s));
+        let st = TelemetrySample {
+            coflow: 9,
+            dst_dc: 1,
+            path: 0,
+            gbps: 0.0,
+            alloc_gbps: 2.0,
+            probe: false,
+            stalled: true,
+        };
+        assert_eq!(TelemetrySample::from_json(&st.to_json()), Some(st));
         let p = TelemetrySample {
             coflow: PROBE_COFLOW,
             dst_dc: 0,
@@ -466,6 +490,7 @@ mod tests {
             gbps: 12.0,
             alloc_gbps: 0.0,
             probe: true,
+            stalled: false,
         };
         assert_eq!(TelemetrySample::from_json(&p.to_json()), Some(p));
         assert_eq!(TelemetrySample::from_json(&Json::obj()), None);

@@ -62,10 +62,14 @@ pub struct SimConfig {
     pub chaos: Option<ChaosConfig>,
 }
 
-/// One controller crash/restart cycle for the simulator: the controller
-/// dies at `kill_t` (no scheduling rounds; agents keep draining their
-/// last-known allocation scaled by `degraded_scale`; submissions defer)
-/// and is back — state recovered per `mode` — at `restart_t`.
+/// One crash/restart cycle for the simulator. The default target is the
+/// controller: it dies at `kill_t` (no scheduling rounds; agents keep
+/// draining their last-known allocation scaled by `degraded_scale`;
+/// submissions defer) and is back — state recovered per `mode` — at
+/// `restart_t`. Data-plane targets instead fail one *site*: its traffic
+/// stalls at `kill_t`, the controller notices after `detection_s` (parks
+/// the touched coflows, re-solves the survivors), and the site heals at
+/// `restart_t` (parked coflows resume from their preserved progress).
 #[derive(Clone, Debug)]
 pub struct ChaosConfig {
     pub kill_t: f64,
@@ -75,12 +79,58 @@ pub struct ChaosConfig {
     /// fallback agents enforce while the controller is unreachable (the
     /// testbed agents use 0.5 of the last-known envelope).
     pub degraded_scale: f64,
+    /// What fails at `kill_t` (default: [`ChaosTarget::Controller`]).
+    pub target: ChaosTarget,
+    /// Failure-detection latency for data-plane targets: simulated seconds
+    /// between the failure and the controller declaring the site down
+    /// (models the liveness deadline for an agent kill, or the
+    /// stall-watchdog horizon for a partition). Ignored for the
+    /// controller target — agents detect controller silence themselves.
+    pub detection_s: f64,
+}
+
+/// What a [`ChaosConfig`] cycle takes down.
+///
+/// `Agent` and `Partition` behave identically at flow level (the site's
+/// traffic stops, detection parks it, healing un-parks it); they exist as
+/// distinct variants because they model different *detectors* — an agent
+/// kill is caught by the controller's liveness deadline, a data-plane
+/// partition by the stall watchdog (heartbeats still flow on the control
+/// channel) — and therefore carry different natural `detection_s` values.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChaosTarget {
+    /// The controller process (the `controller_chaos` axis).
+    Controller,
+    /// One site's agent process dies: all its traffic, both directions.
+    Agent { site: usize },
+    /// One site's data plane is severed while its agent stays up.
+    Partition { site: usize },
 }
 
 impl ChaosConfig {
     pub fn new(kill_t: f64, restart_t: f64, mode: RecoveryMode) -> ChaosConfig {
         assert!(kill_t.is_finite() && restart_t.is_finite() && kill_t < restart_t);
-        ChaosConfig { kill_t, restart_t, mode, degraded_scale: 0.5 }
+        ChaosConfig {
+            kill_t,
+            restart_t,
+            mode,
+            degraded_scale: 0.5,
+            target: ChaosTarget::Controller,
+            detection_s: 1.0,
+        }
+    }
+
+    /// Re-aim the cycle at a data-plane target.
+    pub fn with_target(mut self, target: ChaosTarget) -> ChaosConfig {
+        self.target = target;
+        self
+    }
+
+    /// Override the data-plane failure-detection latency.
+    pub fn with_detection_s(mut self, detection_s: f64) -> ChaosConfig {
+        assert!(detection_s.is_finite() && detection_s >= 0.0);
+        self.detection_s = detection_s;
+        self
     }
 }
 
@@ -136,6 +186,11 @@ enum EvKind {
     ChaosKill,
     /// Controller restarts and recovers per [`ChaosConfig::mode`].
     ChaosRestart,
+    /// The controller's failure detector fires for a data-plane target
+    /// (`detection_s` after the kill): the site is declared down, its
+    /// coflows park, survivors re-solve. Ignored if the site already
+    /// healed — a blip shorter than the detector never surfaces.
+    AgentDown { site: usize },
 }
 
 #[derive(Clone, Debug)]
@@ -208,6 +263,13 @@ pub struct Simulation {
     /// The next round is the restarted controller's reconstruction round;
     /// its wall-clock cost books as [`Report::recovery_round_s`].
     pending_recovery: bool,
+    /// Data-plane chaos state: the currently-failed site, if any. Its
+    /// traffic drains at zero (ground truth: the endpoint is gone) from
+    /// the kill until the heal, whether or not the controller has noticed.
+    dead_site: Option<usize>,
+    /// True once the failure detector fired for `dead_site` (the engine
+    /// holds the site down and the touched coflows are parked).
+    site_detected: bool,
     /// True once any stream (rate-floor) coflow was admitted — gates the
     /// per-advance violation-seconds scan so class-free runs pay nothing.
     has_streams: bool,
@@ -247,6 +309,8 @@ impl Simulation {
             record_idx: HashMap::new(),
             down: false,
             pending_recovery: false,
+            dead_site: None,
+            site_detected: false,
             has_streams: false,
         };
         if sim.truth.is_some() {
@@ -287,7 +351,8 @@ impl Simulation {
             EvKind::Telemetry
             | EvKind::Prior { .. }
             | EvKind::ChaosKill
-            | EvKind::ChaosRestart => {}
+            | EvKind::ChaosRestart
+            | EvKind::AgentDown { .. } => {}
             _ => self.pending_app_events += 1,
         }
         self.seq += 1;
@@ -426,7 +491,8 @@ impl Simulation {
                     EvKind::Telemetry
                     | EvKind::Prior { .. }
                     | EvKind::ChaosKill
-                    | EvKind::ChaosRestart => {}
+                    | EvKind::ChaosRestart
+                    | EvKind::AgentDown { .. } => {}
                     _ => self.pending_app_events -= 1,
                 }
                 match ev.kind {
@@ -515,12 +581,78 @@ impl Simulation {
                         }
                     }
                     EvKind::ChaosKill => {
-                        self.down = true;
-                        self.report.chaos_kills += 1;
-                        let mut inflight = 0.0;
-                        self.engine
-                            .visit_allocations(|cs, _| inflight += cs.total_remaining());
-                        self.report.inflight_at_kill_gbit += inflight;
+                        let chaos =
+                            self.cfg.chaos.clone().expect("kill without chaos config");
+                        match chaos.target {
+                            ChaosTarget::Controller => {
+                                self.down = true;
+                                self.report.chaos_kills += 1;
+                                let mut inflight = 0.0;
+                                self.engine.visit_allocations(|cs, _| {
+                                    inflight += cs.total_remaining()
+                                });
+                                self.report.inflight_at_kill_gbit += inflight;
+                            }
+                            ChaosTarget::Agent { site }
+                            | ChaosTarget::Partition { site } => {
+                                // The site's traffic stops now; the
+                                // controller only notices detection_s
+                                // later (liveness deadline / stall
+                                // watchdog).
+                                self.dead_site = Some(site);
+                                self.site_detected = false;
+                                self.push_event(
+                                    self.now + chaos.detection_s,
+                                    EvKind::AgentDown { site },
+                                );
+                            }
+                        }
+                    }
+                    EvKind::AgentDown { site } => {
+                        // Only a still-dead site is declared down: a blip
+                        // shorter than the detector never surfaces.
+                        if self.dead_site == Some(site) && !self.site_detected {
+                            self.site_detected = true;
+                            let chaos = self.cfg.chaos.as_ref().unwrap();
+                            self.report.agent_downs += 1;
+                            self.report.agent_detection_s += self.now - chaos.kill_t;
+                            let before = self.engine.parked_down_count();
+                            let reaction = self.engine.set_site_down(
+                                site,
+                                crate::engine::SitePartition::Full,
+                                self.now,
+                            );
+                            self.report.agent_parked +=
+                                self.engine.parked_down_count() - before;
+                            if let Some(t) = reaction.trigger() {
+                                needs_round = Some(t);
+                            }
+                        }
+                    }
+                    EvKind::ChaosRestart
+                        if !matches!(
+                            self.cfg.chaos.as_ref().map(|c| c.target),
+                            Some(ChaosTarget::Controller) | None
+                        ) =>
+                    {
+                        // Data-plane heal: traffic can move again; if the
+                        // down state surfaced, un-park through the engine
+                        // and let the reconstruction round re-admit the
+                        // parked coflows from their preserved progress.
+                        self.dead_site = None;
+                        if self.site_detected {
+                            self.site_detected = false;
+                            let chaos = self.cfg.chaos.as_ref().unwrap();
+                            let site = match chaos.target {
+                                ChaosTarget::Agent { site }
+                                | ChaosTarget::Partition { site } => site,
+                                ChaosTarget::Controller => unreachable!(),
+                            };
+                            let reaction = self.engine.set_site_up(site, self.now);
+                            if let Some(t) = reaction.trigger() {
+                                needs_round = Some(t);
+                            }
+                        }
                     }
                     EvKind::ChaosRestart => {
                         let chaos =
@@ -604,6 +736,24 @@ impl Simulation {
                 self.engine.visit_allocations(|cs, _| {
                     *factors.entry(cs.id).or_insert(1.0) *= scale;
                 });
+                throttle = Some(factors);
+            }
+            if let Some(site) = self.dead_site {
+                // Ground truth: nothing moves for coflows touching the
+                // failed site. Before detection they still hold their
+                // allocations (the stall the watchdog measures); after
+                // detection they are parked and no longer drain at all.
+                let mut factors = throttle.take().unwrap_or_default();
+                let mut touched = 0usize;
+                self.engine.visit_allocations(|cs, _| {
+                    if cs.groups.iter().any(|g| g.src == site || g.dst == site) {
+                        factors.insert(cs.id, 0.0);
+                        touched += 1;
+                    }
+                });
+                if !self.site_detected {
+                    self.report.agent_stall_s += touched as f64 * dt;
+                }
                 throttle = Some(factors);
             }
             if self.has_streams {
@@ -1393,6 +1543,105 @@ mod tests {
         assert_eq!(rep.chaos_kills, 1);
         assert!(rep.est_samples > 0);
         assert!((rep.preserved_fraction() - 1.0).abs() < 1e-9);
+    }
+
+    /// Data-plane chaos: an agent kill stalls its traffic (undetected,
+    /// allocated-but-idle), the detector parks the touched coflow with its
+    /// progress preserved, and the heal resumes it from the remaining
+    /// volume — not from zero.
+    #[test]
+    fn agent_chaos_parks_preserves_and_resumes() {
+        // 200 Gbit A->B over 20 Gbps (two paths): 10 s always-up. Site B
+        // dies at t=2 (40 Gbit done), detected at t=3, heals at t=6; the
+        // remaining 160 Gbit takes 8 s more -> makespan ~14 s. A re-run
+        // from zero would land at 16 s.
+        let wan = topologies::fig1a();
+        let cfg = SimConfig {
+            chaos: Some(
+                ChaosConfig::new(2.0, 6.0, RecoveryMode::Resync)
+                    .with_target(ChaosTarget::Agent { site: 1 })
+                    .with_detection_s(1.0),
+            ),
+            ..Default::default()
+        };
+        let mut sim = Simulation::new(wan, terra0(), cfg);
+        sim.add_job(Job::map_reduce(1, 0.0, 0.0, vec![mk_flow(0, 0, 1, 25.0)]));
+        let rep = sim.run();
+        assert_eq!(rep.unfinished(), 0);
+        assert_eq!(rep.chaos_kills, 0, "the controller never died");
+        assert_eq!(rep.agent_downs, 1);
+        assert!((rep.agent_detection_s - 1.0).abs() < 1e-9, "{}", rep.agent_detection_s);
+        assert_eq!(rep.agent_parked, 1);
+        // One coflow stalled for the 1 s detection window.
+        assert!((rep.agent_stall_s - 1.0).abs() < 1e-6, "{}", rep.agent_stall_s);
+        assert!(
+            (rep.makespan - 14.0).abs() < 0.3,
+            "progress across the outage must be preserved: makespan {}",
+            rep.makespan
+        );
+    }
+
+    /// Coflows whose paths never touch the failed site are uninterrupted:
+    /// on a line WAN (0-1-2-3) a partition of site 0 parks only the 0→1
+    /// victim, and the 2→3 survivor's JCT is unchanged to the tolerance of
+    /// the clock. (Survivors sharing links with the dead site may shift
+    /// either way — they lose relay paths but inherit the victim's share —
+    /// so the clean uninterrupted claim needs disjoint paths.)
+    #[test]
+    fn agent_chaos_survivors_uninterrupted() {
+        let line = || {
+            let mut w = Wan::new();
+            let n: Vec<usize> = (0..4).map(|i| w.add_node(&format!("n{i}"), 0.0, i as f64)).collect();
+            for i in 0..3 {
+                w.add_link(n[i], n[i + 1], 10.0, None);
+            }
+            w
+        };
+        let run = |chaos: Option<ChaosConfig>| {
+            let cfg = SimConfig { chaos, ..Default::default() };
+            let mut sim = Simulation::new(line(), terra0(), cfg);
+            sim.add_job(Job::map_reduce(1, 0.0, 0.0, vec![mk_flow(0, 0, 1, 12.5)]));
+            sim.add_job(Job::map_reduce(2, 0.0, 0.0, vec![mk_flow(1, 2, 3, 5.0)]));
+            sim.run()
+        };
+        let up = run(None);
+        let chaos = run(Some(
+            ChaosConfig::new(2.0, 6.0, RecoveryMode::Resync)
+                .with_target(ChaosTarget::Partition { site: 0 })
+                .with_detection_s(1.0),
+        ));
+        assert_eq!(up.unfinished(), 0);
+        assert_eq!(chaos.unfinished(), 0);
+        assert_eq!(chaos.agent_downs, 1);
+        assert_eq!(chaos.agent_parked, 1, "only the coflow touching site 0 parks");
+        let (u, c) = (up.jobs[1].jct().unwrap(), chaos.jobs[1].jct().unwrap());
+        assert!((c - u).abs() < 1e-9, "survivor perturbed by the failure: {c} vs {u}");
+        // The victim cannot finish before the heal.
+        assert!(chaos.jobs[0].jct().unwrap() > 6.0);
+    }
+
+    /// An agent-chaos cycle that never fires inside the horizon is inert:
+    /// bit-identical to the no-chaos run, zero agent metrics.
+    #[test]
+    fn agent_chaos_beyond_horizon_is_inert() {
+        let run = |chaos: Option<ChaosConfig>| {
+            let wan = topologies::fig1a();
+            let cfg = SimConfig { chaos, ..Default::default() };
+            let mut sim = Simulation::new(wan, terra0(), cfg);
+            sim.add_job(Job::map_reduce(1, 0.0, 0.0, vec![mk_flow(0, 0, 1, 25.0)]));
+            sim.run()
+        };
+        let base = run(None);
+        let late = run(Some(
+            ChaosConfig::new(1000.0, 1001.0, RecoveryMode::Resync)
+                .with_target(ChaosTarget::Agent { site: 1 }),
+        ));
+        assert_eq!(base.makespan.to_bits(), late.makespan.to_bits());
+        assert_eq!(base.rounds, late.rounds);
+        assert_eq!(late.agent_downs, 0);
+        assert_eq!(late.agent_detection_s, 0.0);
+        assert_eq!(late.agent_parked, 0);
+        assert_eq!(late.agent_stall_s, 0.0);
     }
 
     /// A stream with a feasible floor accrues no violation-seconds while

@@ -126,6 +126,18 @@ pub struct Report {
     pub inflight_at_kill_gbit: f64,
     pub inflight_at_restart_gbit: f64,
     pub recovery_round_s: f64,
+    /// Data-plane chaos (`agent_chaos` axis): agent/partition failures
+    /// the controller *detected* (declared down, parked the touched
+    /// coflows, re-solved the survivors), summed detection latency
+    /// (kill → declaration; the liveness deadline or the stall-watchdog
+    /// horizon, whichever detector the target models), coflows parked at
+    /// those declarations, and coflow·seconds the touched traffic sat
+    /// stalled before detection (allocated but moving nothing — the
+    /// window rescheduling cannot reclaim).
+    pub agent_downs: usize,
+    pub agent_detection_s: f64,
+    pub agent_parked: usize,
+    pub agent_stall_s: f64,
     /// Service classes: total seconds × coflows that streams spent below
     /// their rate floor (violation-seconds), and how many times an MlSync
     /// iteration re-shaped its aggregation tree because a tree link had

@@ -1,0 +1,279 @@
+//! Seeded exponential backoff with jitter, and a small per-peer circuit
+//! breaker — the shared retry substrate for every dial loop in the overlay
+//! (controller reconnects, peer data connections).
+//!
+//! Why not a fixed delay: a fleet of agents losing the same controller (or
+//! the same peer) all retry in lockstep, and a 200 ms constant turns an
+//! outage into a synchronized connect storm the moment the target returns.
+//! Exponential growth bounds the aggregate attempt rate during a long
+//! outage; jitter decorrelates the fleet; the seed keeps every delay
+//! sequence reproducible in tests ([`crate::util::rng::Pcg32`] underneath —
+//! no wall-clock entropy anywhere).
+//!
+//! The jitter policy is "equal jitter": for attempt `n` the delay is drawn
+//! uniformly from `[cap/2, cap)` where `cap = min(base·2ⁿ, max)`. The lower
+//! half is kept deterministic so the expected delay still doubles per
+//! attempt (full jitter can collapse to ~0 and re-synchronize retries), and
+//! the upper half spreads the fleet.
+
+use crate::util::rng::Pcg32;
+use std::time::Duration;
+
+/// Exponential backoff schedule with equal jitter. One instance per dial
+/// loop; [`Backoff::reset`] on success.
+#[derive(Clone, Debug)]
+pub struct Backoff {
+    base: Duration,
+    max: Duration,
+    attempt: u32,
+    rng: Pcg32,
+}
+
+impl Backoff {
+    /// A schedule starting at `base` and capping at `max`. `seed` pins the
+    /// jitter stream; derive it from a stable identity (dc id, peer id) so
+    /// distinct dialers jitter independently but reproducibly.
+    pub fn new(seed: u64, base: Duration, max: Duration) -> Backoff {
+        Backoff { base, max: max.max(base), attempt: 0, rng: Pcg32::new(seed) }
+    }
+
+    /// The delay to sleep before the next attempt. Guaranteed within
+    /// `[cap/2, cap]` for `cap = min(base·2^attempt, max)`, so the lower
+    /// bound is monotone non-decreasing until the cap is reached and the
+    /// delay never exceeds `max`.
+    pub fn next_delay(&mut self) -> Duration {
+        let cap = self.cap();
+        self.attempt = self.attempt.saturating_add(1);
+        let half = cap / 2.0;
+        Duration::from_secs_f64(half + self.rng.uniform(0.0, half))
+    }
+
+    /// Number of delays handed out since the last reset.
+    pub fn attempts(&self) -> u32 {
+        self.attempt
+    }
+
+    /// Back to the base schedule — call on a successful attempt.
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+    }
+
+    fn cap(&self) -> f64 {
+        let exp = self.attempt.min(32); // 2^32 × base saturates any max
+        (self.base.as_secs_f64() * (1u64 << exp) as f64).min(self.max.as_secs_f64())
+    }
+}
+
+/// Consecutive failures before a [`CircuitBreaker`] opens.
+pub const BREAKER_THRESHOLD: u32 = 3;
+
+/// Per-peer circuit breaker over a [`Backoff`] schedule. Closed passes
+/// every attempt through; after [`BREAKER_THRESHOLD`] consecutive failures
+/// it opens and refuses attempts for the schedule's current delay, then
+/// admits exactly one half-open probe whose outcome either closes the
+/// breaker (and resets the schedule) or re-opens it for the next, longer
+/// cooldown. Time is passed in by the caller (seconds on any monotone
+/// clock) so the policy is unit-testable without sleeping.
+#[derive(Clone, Debug)]
+pub struct CircuitBreaker {
+    backoff: Backoff,
+    consecutive_failures: u32,
+    /// `Some(t)` while open: no attempt before `t`. The first attempt at or
+    /// after `t` is the half-open probe.
+    open_until: Option<f64>,
+    /// True while the single half-open probe is outstanding.
+    probing: bool,
+}
+
+impl CircuitBreaker {
+    pub fn new(seed: u64, base: Duration, max: Duration) -> CircuitBreaker {
+        CircuitBreaker {
+            backoff: Backoff::new(seed, base, max),
+            consecutive_failures: 0,
+            open_until: None,
+            probing: false,
+        }
+    }
+
+    /// May the caller dial now? Closed → always; open → only once the
+    /// cooldown expired, and then only the single half-open probe until its
+    /// outcome is recorded.
+    pub fn allow(&mut self, now_s: f64) -> bool {
+        match self.open_until {
+            None => true,
+            Some(t) => {
+                if self.probing || now_s < t {
+                    return false;
+                }
+                self.probing = true;
+                true
+            }
+        }
+    }
+
+    /// Record a successful attempt: breaker closes, schedule resets.
+    pub fn record_success(&mut self) {
+        self.consecutive_failures = 0;
+        self.open_until = None;
+        self.probing = false;
+        self.backoff.reset();
+    }
+
+    /// Record a failed attempt at `now_s`. Opens the breaker once the
+    /// consecutive-failure threshold is reached (a failed half-open probe
+    /// re-opens immediately, with the next longer delay).
+    pub fn record_failure(&mut self, now_s: f64) {
+        self.consecutive_failures = self.consecutive_failures.saturating_add(1);
+        self.probing = false;
+        if self.consecutive_failures >= BREAKER_THRESHOLD {
+            let cooldown = self.backoff.next_delay().as_secs_f64();
+            self.open_until = Some(now_s + cooldown);
+        }
+    }
+
+    /// True while attempts are being refused (cooldown running or a probe
+    /// outstanding).
+    pub fn is_open(&self) -> bool {
+        self.open_until.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(x: u64) -> Duration {
+        Duration::from_millis(x)
+    }
+
+    /// Every delay stays within [cap/2, cap] for the attempt's cap, and
+    /// never exceeds the configured max.
+    #[test]
+    fn delays_are_bounded_by_schedule_and_max() {
+        let base = ms(100);
+        let max = ms(5_000);
+        let mut b = Backoff::new(42, base, max);
+        for attempt in 0..20u32 {
+            let cap = (base.as_secs_f64() * (1u64 << attempt.min(32)) as f64)
+                .min(max.as_secs_f64());
+            let d = b.next_delay().as_secs_f64();
+            assert!(d >= cap / 2.0 - 1e-12, "attempt {attempt}: {d} < {}", cap / 2.0);
+            assert!(d <= cap + 1e-12, "attempt {attempt}: {d} > {cap}");
+            assert!(d <= max.as_secs_f64() + 1e-12);
+        }
+    }
+
+    /// The deterministic lower half makes the floor of the schedule
+    /// monotone non-decreasing up to the cap — no early attempt can draw a
+    /// longer delay than a later attempt's guaranteed minimum would allow
+    /// to shrink back below.
+    #[test]
+    fn lower_bound_is_monotone_until_capped() {
+        let mut b = Backoff::new(7, ms(50), ms(10_000));
+        let mut prev_floor = 0.0;
+        for _ in 0..12 {
+            let cap = {
+                let attempt = b.attempts();
+                (0.05 * (1u64 << attempt) as f64).min(10.0)
+            };
+            let floor = cap / 2.0;
+            assert!(floor >= prev_floor, "floor regressed: {floor} < {prev_floor}");
+            prev_floor = floor;
+            let d = b.next_delay().as_secs_f64();
+            assert!(d >= floor - 1e-12);
+        }
+    }
+
+    /// Same seed ⇒ identical delay sequence; distinct seeds decorrelate.
+    #[test]
+    fn seeded_delays_are_deterministic() {
+        let mut a = Backoff::new(99, ms(100), ms(4_000));
+        let mut b = Backoff::new(99, ms(100), ms(4_000));
+        let mut c = Backoff::new(100, ms(100), ms(4_000));
+        let mut all_equal_c = true;
+        for _ in 0..16 {
+            let (da, db, dc) = (a.next_delay(), b.next_delay(), c.next_delay());
+            assert_eq!(da, db, "same seed must replay the same schedule");
+            all_equal_c &= da == dc;
+        }
+        assert!(!all_equal_c, "distinct seeds should jitter differently");
+    }
+
+    /// Reset returns to the base cap.
+    #[test]
+    fn reset_restarts_the_schedule() {
+        let mut b = Backoff::new(5, ms(100), ms(10_000));
+        for _ in 0..6 {
+            b.next_delay();
+        }
+        b.reset();
+        let d = b.next_delay().as_secs_f64();
+        assert!(d <= 0.1 + 1e-12, "post-reset delay back at the base cap: {d}");
+    }
+
+    /// Breaker lifecycle: closed through THRESHOLD-1 failures, opens on the
+    /// THRESHOLDth, refuses during cooldown, admits exactly one half-open
+    /// probe, and a probe success closes it again.
+    #[test]
+    fn breaker_opens_half_opens_and_closes() {
+        let mut cb = CircuitBreaker::new(3, ms(100), ms(1_000));
+        let mut now = 0.0;
+        for _ in 0..BREAKER_THRESHOLD - 1 {
+            assert!(cb.allow(now));
+            cb.record_failure(now);
+            assert!(!cb.is_open(), "below threshold must stay closed");
+        }
+        assert!(cb.allow(now));
+        cb.record_failure(now);
+        assert!(cb.is_open(), "threshold reached: breaker open");
+        assert!(!cb.allow(now), "open breaker refuses immediately");
+        now += 0.01;
+        assert!(!cb.allow(now), "still cooling down");
+        now += 1.0; // past any first-cooldown delay (≤ base·2^THRESHOLD ≤ 1 s)
+        assert!(cb.allow(now), "cooldown over: half-open probe admitted");
+        assert!(!cb.allow(now), "only ONE probe until its outcome lands");
+        cb.record_success();
+        assert!(!cb.is_open());
+        assert!(cb.allow(now), "closed again after the probe succeeded");
+    }
+
+    /// A failed half-open probe re-opens with a longer cooldown.
+    #[test]
+    fn failed_probe_reopens_with_longer_cooldown() {
+        let mut cb = CircuitBreaker::new(11, ms(100), ms(60_000));
+        let mut now = 0.0;
+        for _ in 0..BREAKER_THRESHOLD {
+            cb.record_failure(now);
+        }
+        let first_open = cb.open_until.unwrap();
+        now = first_open;
+        assert!(cb.allow(now));
+        cb.record_failure(now);
+        assert!(cb.is_open(), "failed probe re-opens");
+        let second_cooldown = cb.open_until.unwrap() - now;
+        // The schedule advanced, so the guaranteed floor grew past the
+        // first cooldown's cap/2.
+        assert!(
+            second_cooldown >= first_open - 0.0,
+            "cooldowns come from an advancing schedule"
+        );
+        assert!(!cb.allow(now + second_cooldown / 2.0));
+        assert!(cb.allow(now + second_cooldown + 1e-9));
+    }
+
+    /// Determinism end to end: two breakers with the same seed observe the
+    /// same failure times and produce identical open windows.
+    #[test]
+    fn breaker_is_deterministic_given_seed() {
+        let mut a = CircuitBreaker::new(77, ms(100), ms(8_000));
+        let mut b = CircuitBreaker::new(77, ms(100), ms(8_000));
+        for i in 0..10 {
+            let t = i as f64 * 0.5;
+            a.allow(t);
+            b.allow(t);
+            a.record_failure(t);
+            b.record_failure(t);
+            assert_eq!(a.open_until, b.open_until, "step {i}");
+        }
+    }
+}

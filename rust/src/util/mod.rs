@@ -3,6 +3,7 @@
 //! property-testing harness, a CLI argument parser, and a benchmark harness
 //! used by the `harness = false` benches.
 
+pub mod backoff;
 pub mod bench;
 pub mod cli;
 pub mod json;

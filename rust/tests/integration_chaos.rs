@@ -4,6 +4,10 @@
 //! envelope), a restarted controller rebuilds its world from `resync_state`
 //! reports with achieved bytes intact (nothing restarts from zero), and
 //! completions observed during the outage still reach the new controller.
+//! The mirror-image drill kills an *agent* instead: the controller's
+//! liveness deadline detects the silence, parks the victim's coflows with
+//! progress preserved, keeps scheduling the survivors around the hole, and
+//! re-arms a replacement agent from the preserved remaining.
 
 use std::time::{Duration, Instant};
 use terra::api::TerraClient;
@@ -200,4 +204,108 @@ fn completion_during_outage_reaches_restarted_controller() {
         a.shutdown();
     }
     handle2.shutdown();
+}
+
+/// The data-plane mirror of the controller-crash drill: kill an *agent*
+/// mid-transfer. The controller must notice the silence within the
+/// liveness deadline (the agents' 250 ms telemetry stream is the
+/// heartbeat), park the victim's coflow with achieved progress preserved,
+/// keep the survivors' traffic flowing throughout the outage, and — when a
+/// replacement agent registers for the dead site — re-arm the transfer
+/// from the preserved remaining (never from zero) and drive it to
+/// completion.
+#[test]
+fn agent_kill_is_detected_parked_and_resumed_from_achieved_bytes() {
+    const VOLUME: f64 = 120.0; // victim: ~6 s at fig1a's 20 Gbps aggregate
+    const SURVIVOR: f64 = 80.0;
+    let deadline = Duration::from_secs(2);
+    let policy = TerraPolicy::new(TerraConfig { alpha: 0.0, k: K, ..Default::default() });
+    let cfg = TestbedConfig::new(topologies::fig1a(), K).with_liveness_deadline(deadline);
+    let handle = Controller::spawn(cfg, Box::new(policy)).unwrap();
+    let mut agents = spawn_agents(&handle);
+    // After this remove, agents[0] is dc 1 (the receiver) and agents[1] is
+    // dc 2 (the survivor's sender).
+    let victim_sender = agents.remove(0);
+
+    // Victim coflow 0→1 plus a survivor 2→1 that spans the whole outage.
+    let mut client = TerraClient::connect(handle.addr).unwrap();
+    let flows = [FlowSpec { id: 0, src_dc: 0, dst_dc: 1, bytes: gbit(VOLUME) }];
+    let cid = client.submit_coflow(&flows, None).unwrap() as u64;
+    let flows = [FlowSpec { id: 0, src_dc: 2, dst_dc: 1, bytes: gbit(SURVIVOR) }];
+    let cid_s = client.submit_coflow(&flows, None).unwrap() as u64;
+    assert!(
+        wait_until(Duration::from_secs(5), || agents[0].received_bytes(cid, 0) > gbit(8.0)
+            && agents[0].received_bytes(cid_s, 2) > 0),
+        "transfers never got going"
+    );
+
+    // Kill the victim's sending agent: threads die, sockets close, and —
+    // crucially — nothing polite is said to the controller.
+    let killed = agents[0].received_bytes(cid, 0);
+    let t_kill = Instant::now();
+    victim_sender.shutdown();
+
+    // Detection is deadline-driven: the controller must declare the site
+    // down once the agent's channel is silent past the liveness deadline —
+    // neither instantly (EOF alone is not death) nor late.
+    assert!(
+        wait_until(Duration::from_secs(8), || handle.agent_down(0)),
+        "dead agent never declared down"
+    );
+    let elapsed = t_kill.elapsed();
+    assert!(
+        elapsed >= Duration::from_secs(1) && elapsed <= deadline + Duration::from_secs(3),
+        "detection latency {elapsed:?} not anchored to the {deadline:?} deadline"
+    );
+    assert_eq!(handle.liveness_stats().down_events, 1);
+
+    // The victim is parked — progress preserved, not finished, not dropped
+    // — while the survivor (no endpoint at the dead site) is not.
+    assert_eq!(handle.parked_coflows(), 1, "exactly the victim must be parked");
+    let killed_gbit = killed as f64 / BYTES_PER_GBPS;
+    let rem = handle.coflow_remaining_gbit(cid).expect("victim dropped from the engine");
+    assert!(
+        rem <= VOLUME - killed_gbit + 1.0,
+        "parked remaining {rem} of {VOLUME} ignores the {killed_gbit} Gbit already achieved"
+    );
+    assert!(rem > 5.0, "victim must not be spuriously completed by the kill");
+
+    // Survivor traffic keeps flowing with a site dark: the controller
+    // reschedules around the hole (the relay path through site 0 is gone;
+    // the direct edge is not), and bytes keep arriving.
+    let rx0 = agents[0].received_bytes(cid_s, 2);
+    std::thread::sleep(Duration::from_millis(400));
+    let rx1 = agents[0].received_bytes(cid_s, 2);
+    assert!(rx1 > rx0, "survivor stalled during the outage: {rx0} -> {rx1}");
+
+    // A replacement agent registers for the dead site: un-park, re-arm
+    // (reset transfer sized from the preserved remaining), resume.
+    let replacement = Agent::spawn(0, handle.addr).unwrap();
+    assert!(
+        wait_until(Duration::from_secs(8), || !handle.agent_down(0)
+            && handle.parked_coflows() == 0),
+        "replacement never un-parked the victim"
+    );
+    assert_eq!(handle.liveness_stats().up_events, 1);
+
+    // Both transfers complete end to end, and the completions reach the
+    // controller (remaining drops to None). The victim's budget came from
+    // the preserved remaining, so this finishes in seconds — a from-zero
+    // restart of 120 Gbit would blow well past the victim wait below.
+    let cct_s = client.wait_done(cid_s, 30.0).unwrap();
+    assert!(cct_s > 0.0);
+    assert!(
+        wait_until(Duration::from_secs(30), || handle.coflow_remaining_gbit(cid).is_none()),
+        "re-armed victim transfer never completed"
+    );
+    assert_eq!(
+        terra::overlay::agent::lock_poison_recoveries(),
+        0,
+        "a lock was poisoned during the agent-kill drill"
+    );
+    replacement.shutdown();
+    for a in agents {
+        a.shutdown();
+    }
+    handle.shutdown();
 }

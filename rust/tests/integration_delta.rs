@@ -386,3 +386,146 @@ fn write_error_is_counted_and_recovered_by_full_sync() {
     );
     handle.shutdown();
 }
+
+/// Liveness eviction drill: an agent whose control channel goes silent past
+/// the liveness deadline is declared down — connection evicted, its coflows
+/// parked with achieved progress preserved — and a reconnecting replacement
+/// gets the full re-arm sequence: baseline sync, reset-flagged transfer
+/// state sized from the preserved remaining, and fresh rates once the
+/// coflow un-parks.
+#[test]
+fn silent_agent_is_evicted_parked_and_rearmed_on_reconnect() {
+    let deadline = Duration::from_millis(2500);
+    let cfg = TestbedConfig::new(topologies::fig1a(), 1).with_liveness_deadline(deadline);
+    let handle = Controller::spawn(cfg, policy(1)).unwrap();
+    let mut agent = FakeAgent::connect(&handle, 0);
+    assert!(handle.wait_ready(1, Duration::from_secs(5)));
+    let long = Duration::from_secs(5);
+    assert!(agent.read_op("rates_full", long).is_some(), "baseline sync");
+
+    let mut client = TerraClient::connect(handle.addr).unwrap();
+    let c1 = client
+        .submit_coflow(&[FlowSpec { id: 0, src_dc: 0, dst_dc: 1, bytes: gbit(4000.0) }], None)
+        .unwrap() as u64;
+    assert!(agent.read_op("rates_delta", long).is_some(), "rates for the coflow");
+
+    // Refresh the agent's liveness clock with one last audible message,
+    // then go silent with the socket still OPEN: eviction must key off
+    // silence (a hung agent looks exactly like this), not off EOF.
+    agent.send(&Json::from_pairs([("op", Json::from("sync_request"))]));
+    assert!(agent.read_op("rates_full", long).is_some(), "requested full sync");
+    let t_silent = Instant::now();
+
+    let det = Instant::now() + Duration::from_secs(10);
+    while !handle.agent_down(0) {
+        assert!(Instant::now() < det, "silent agent never declared down");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    let elapsed = t_silent.elapsed();
+    assert!(
+        elapsed >= deadline.mul_f64(0.6) && elapsed <= deadline + Duration::from_secs(3),
+        "detection latency {elapsed:?} not anchored to the {deadline:?} deadline"
+    );
+    let stats = handle.liveness_stats();
+    assert_eq!(stats.down_events, 1, "{stats:?}");
+    assert_eq!(stats.up_events, 0, "{stats:?}");
+    assert_eq!(handle.parked_coflows(), 1, "victim coflow must be parked, not dropped");
+    let rem = handle.coflow_remaining_gbit(c1).expect("parked coflow lost from the engine");
+    assert!(rem > 3500.0, "parked remaining {rem} Gbit lost achieved progress");
+
+    // Replacement for the evicted dc: baseline full sync first, then the
+    // reset re-arm for the parked coflow's sender side (budget sized from
+    // the preserved remaining — never from zero, never from the original
+    // volume), then a round re-rates the un-parked coflow.
+    let mut replacement = FakeAgent::connect(&handle, 0);
+    let full = replacement.read_op("rates_full", long).expect("full sync on reconnect");
+    assert_eq!(full.get("seq").and_then(|s| s.as_u64()), Some(1), "fresh connection, fresh seq");
+    let xfer = replacement.read_op("transfer", long).expect("reset transfer re-arm");
+    assert_eq!(
+        xfer.get("reset").and_then(|r| r.as_bool()),
+        Some(true),
+        "re-arm must be a reset: {xfer}"
+    );
+    assert_eq!(xfer.get("coflow").and_then(|x| x.as_u64()), Some(c1));
+    assert_eq!(xfer.get("dst").and_then(|x| x.as_u64()), Some(1));
+    let budget =
+        xfer.get("bytes").and_then(|b| b.as_u64()).unwrap_or(0) as f64 / BYTES_PER_GBPS;
+    assert!(budget > 3500.0, "re-arm budget {budget} Gbit dropped achieved progress");
+    let rated = Instant::now() + Duration::from_secs(5);
+    while handle.scheduled_rate(c1) <= 0.0 {
+        assert!(Instant::now() < rated, "un-parked coflow never re-rated");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    let stats = handle.liveness_stats();
+    assert_eq!(stats.up_events, 1, "{stats:?}");
+    assert_eq!(stats.down_events, 1, "no spurious re-eviction: {stats:?}");
+    assert!(!handle.agent_down(0));
+    assert_eq!(handle.parked_coflows(), 0, "reconnect must un-park everything");
+    drop(agent); // the evicted socket outlived the whole drill; close it last
+    handle.shutdown();
+}
+
+/// Regression: a replayed `group_done` for a coflow the controller already
+/// saw finish must be absorbed — no double-complete (the recorded CCT is
+/// immutable), no spurious scheduling round, no resurrecting the entry
+/// `take_finished` already removed — and the controller stays fully
+/// serviceable afterwards. Agents replay buffered completions after
+/// reconnects, so this is a wire-visible contract, not an internal detail.
+#[test]
+fn replayed_group_done_is_idempotent() {
+    let handle =
+        Controller::spawn(TestbedConfig::new(topologies::fig1a(), 1), policy(1)).unwrap();
+    let mut agent = FakeAgent::connect(&handle, 0);
+    assert!(handle.wait_ready(1, Duration::from_secs(5)));
+    let long = Duration::from_secs(5);
+    assert!(agent.read_op("rates_full", long).is_some(), "baseline sync");
+
+    let mut client = TerraClient::connect(handle.addr).unwrap();
+    let c1 = client
+        .submit_coflow(&[FlowSpec { id: 0, src_dc: 0, dst_dc: 1, bytes: gbit(100.0) }], None)
+        .unwrap() as u64;
+    assert!(agent.read_op("rates_delta", long).is_some(), "rates for the coflow");
+    assert!(handle.coflow_remaining_gbit(c1).is_some(), "coflow not in the engine");
+
+    let done = Json::from_pairs([
+        ("op", Json::from("group_done")),
+        ("coflow", c1.into()),
+        ("src", Json::from(0u64)),
+        ("dst", Json::from(1u64)),
+    ]);
+    agent.send(&done);
+    let fin = Instant::now() + Duration::from_secs(5);
+    while handle.coflow_remaining_gbit(c1).is_some() {
+        assert!(Instant::now() < fin, "group_done never completed the coflow");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let cct1 = client.wait_done(c1, 5.0).unwrap();
+    let rounds = handle.rounds();
+
+    // The replay: same (coflow, src, dst) again, then a sync_request on the
+    // same socket — its rates_full reply proves the duplicate was consumed
+    // (same-connection ordering) before we assert anything.
+    agent.send(&done);
+    agent.send(&Json::from_pairs([("op", Json::from("sync_request"))]));
+    let full = agent.read_op("rates_full", long).expect("sync after replay");
+    assert!(
+        delta_keys(&full, "entries").is_empty(),
+        "replayed group_done resurrected an entry: {full}"
+    );
+    assert_eq!(handle.rounds(), rounds, "replayed group_done triggered a spurious round");
+    assert!(handle.coflow_remaining_gbit(c1).is_none(), "finished coflow resurrected");
+    let cct2 = client.wait_done(c1, 5.0).unwrap();
+    assert!(
+        (cct2 - cct1).abs() < 1e-9,
+        "replay moved the recorded CCT: {cct1} -> {cct2}"
+    );
+
+    // Still serviceable: a fresh submission gets an id and an allocation.
+    let c2 = client
+        .submit_coflow(&[FlowSpec { id: 0, src_dc: 0, dst_dc: 1, bytes: gbit(50.0) }], None)
+        .unwrap() as u64;
+    assert!(c2 > c1);
+    assert!(handle.scheduled_rate(c2) > 0.0, "engine stopped allocating after the replay");
+    handle.shutdown();
+}
