@@ -1,0 +1,55 @@
+//! Bench: the open-loop saturation sweep — ramp + bisect the arrival rate
+//! to the max-sustainable-coflows/s knee per ⟨topology, dynamics profile,
+//! policy, shard count⟩ cell, with the estimation-quality column
+//! (MAPE / stale-reaction latency) measured at the knee. Results are
+//! written to `BENCH_saturation.json` (same schema as
+//! `terra sweep --saturation`).
+
+use terra::experiments::{saturation_json, saturation_sweep, SaturationSweepConfig};
+use terra::util::bench::{quick_mode, report, time_n, Table};
+
+fn main() {
+    let cfg = if quick_mode() {
+        SaturationSweepConfig {
+            shard_counts: vec![1, 2],
+            warmup_s: 10.0,
+            measure_s: 30.0,
+            drain_s: 20.0,
+            profile_samples: 20,
+            max_lambda: 0.8,
+            bisect_iters: 2,
+            streams: 2,
+            ..SaturationSweepConfig::quick()
+        }
+    } else {
+        SaturationSweepConfig::quick()
+    };
+    let mut rows = Vec::new();
+    let t = time_n(0, 1, || rows = saturation_sweep(&cfg));
+    report("saturation_sweep", &t);
+
+    let mut tab = Table::new(&[
+        "topology", "profile", "policy", "shards", "knee/s", "sat", "evals", "p99 slow", "miss",
+        "MAPE",
+    ]);
+    for r in &rows {
+        let sat = if r.saturated { "y" } else { ">=cap" };
+        tab.row(&[
+            r.topology.clone(),
+            r.profile.clone(),
+            r.policy.clone(),
+            r.shards.to_string(),
+            format!("{:.3}", r.knee_lambda),
+            sat.to_string(),
+            r.evals.to_string(),
+            format!("{:.1}", r.p99_slowdown),
+            format!("{:.0}%", r.miss_rate * 100.0),
+            format!("{:.1}%", r.est_mape * 100.0),
+        ]);
+    }
+    tab.print("Saturation sweep: open-loop knee per cell");
+
+    let json = format!("{}\n", saturation_json(&cfg, &rows));
+    std::fs::write("BENCH_saturation.json", json).expect("write BENCH_saturation.json");
+    println!("wrote BENCH_saturation.json ({} rows)", rows.len());
+}

@@ -81,7 +81,7 @@ impl Policy for RapierPolicy {
         // heuristic degenerates to this under uniform bandwidth).
         let mut order: Vec<usize> = (0..coflows.len()).collect();
         order.sort_by(|&a, &b| {
-            coflows[a].total_remaining().partial_cmp(&coflows[b].total_remaining()).unwrap()
+            coflows[a].total_remaining().total_cmp(&coflows[b].total_remaining())
         });
 
         for &ci in &order {
@@ -113,7 +113,7 @@ impl Policy for RapierPolicy {
                 let best = rates
                     .iter()
                     .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .max_by(|a, b| a.1.total_cmp(b.1))
                     .map(|(p, _)| p)
                     .unwrap();
                 pinned.push((fi, best, total));

@@ -72,7 +72,7 @@ impl Policy for VarysPolicy {
             .enumerate()
             .map(|(i, cf)| (i, gamma_nonblocking(cf, net)))
             .collect();
-        order.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        order.sort_by(|a, b| a.1.total_cmp(&b.1));
 
         for &(i, gamma) in &order {
             let cf = &coflows[i];

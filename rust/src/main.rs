@@ -58,6 +58,12 @@ fn main() {
                  \u{20}          (service-class sweep: batch + streams + geo-ML sync sharing\n\
                  \u{20}          one WAN per dynamics profile, writes BENCH_multitenant.json\n\
                  \u{20}          with per-class CCT / violation-seconds / iteration time)\n\
+                 \u{20}          --saturation [--quick] [--shards 1,2] [--estimator E]\n\
+                 \u{20}          [--interarrival poisson|pareto|lognormal] [--lambda0 L]\n\
+                 \u{20}          [--max-lambda L] [--warmup S] [--measure S] [--drain S]\n\
+                 \u{20}          (open-loop saturation sweep: ramp + bisect arrivals to the\n\
+                 \u{20}          max-sustainable-coflows/s knee per topology x profile x\n\
+                 \u{20}          policy x shard-count cell, writes BENCH_saturation.json)\n\
                  testbed   --topology fig1a --gbit VOLUME [--shards S]\n\
                  \u{20}          (real TCP overlay demo)\n\
                  topology  --name swan|gscale|att|fig1a"
@@ -260,6 +266,9 @@ fn sweep(args: &Args) {
     }
     if args.flag("multitenant") || args.get("multitenant").is_some() {
         return multitenant_sweep(args);
+    }
+    if args.flag("saturation") || args.get("saturation").is_some() {
+        return saturation_sweep(args);
     }
     let defaults = exp::SweepConfig::default();
     let list = |v: &str| -> Vec<String> { v.split(',').map(|s| s.trim().to_string()).collect() };
@@ -531,6 +540,87 @@ fn multitenant_sweep(args: &Args) {
     ));
     let out = args.get_or("out", "BENCH_multitenant.json");
     match std::fs::write(out, format!("{}\n", exp::multitenant_json(&cfg, &rows))) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => {
+            eprintln!("failed to write {out}: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// The open-loop saturation sweep: ramp + bisect the arrival rate to the
+/// knee of every ⟨topology, profile, policy, shard count⟩ cell, writing
+/// `BENCH_saturation.json` (or `--out`). `--quick` starts from the
+/// CI-sized config.
+fn saturation_sweep(args: &Args) {
+    use terra::experiments as exp;
+    let defaults = if args.flag("quick") {
+        exp::SaturationSweepConfig::quick()
+    } else {
+        exp::SaturationSweepConfig::default()
+    };
+    let list = |v: &str| -> Vec<String> { v.split(',').map(|s| s.trim().to_string()).collect() };
+    let shard_list = |v: &str| -> Vec<usize> {
+        v.split(',').filter_map(|s| s.trim().parse::<usize>().ok()).collect()
+    };
+    let cfg = exp::SaturationSweepConfig {
+        seed: args.get_u64("seed", defaults.seed),
+        workload: args.get_or("workload", &defaults.workload).to_string(),
+        estimator: args.get_or("estimator", &defaults.estimator).to_string(),
+        interarrival: args.get_or("interarrival", &defaults.interarrival).to_string(),
+        streams: args.get_usize("streams", defaults.streams),
+        profile_samples: args.get_usize("profile-samples", defaults.profile_samples),
+        warmup_s: args.get_f64("warmup", defaults.warmup_s),
+        measure_s: args.get_f64("measure", defaults.measure_s),
+        drain_s: args.get_f64("drain", defaults.drain_s),
+        deadline_d: args.get_f64("deadlines", defaults.deadline_d),
+        lambda0: args.get_f64("lambda0", defaults.lambda0),
+        growth: args.get_f64("growth", defaults.growth),
+        max_lambda: args.get_f64("max-lambda", defaults.max_lambda),
+        bisect_iters: args.get_usize("bisect", defaults.bisect_iters),
+        p99_slowdown_limit: args.get_f64("slowdown-limit", defaults.p99_slowdown_limit),
+        miss_limit: args.get_f64("miss-limit", defaults.miss_limit),
+        topologies: args.get("topology").map(list).unwrap_or(defaults.topologies),
+        policies: args.get("policies").map(list).unwrap_or(defaults.policies),
+        profiles: args.get("profiles").map(list).unwrap_or(defaults.profiles),
+        shard_counts: args.get("shards").map(shard_list).unwrap_or(defaults.shard_counts),
+    };
+    let rows = exp::saturation_sweep(&cfg);
+    let mut t = Table::new(&[
+        "topology", "profile", "policy", "shards", "knee/s", "sat", "evals", "p99 slow", "miss",
+        "backlog", "MAPE", "unfin",
+    ]);
+    for r in &rows {
+        let sat = if r.saturated { "y" } else { ">=cap" };
+        t.row(&[
+            r.topology.clone(),
+            r.profile.clone(),
+            r.policy.clone(),
+            r.shards.to_string(),
+            format!("{:.3}", r.knee_lambda),
+            sat.to_string(),
+            r.evals.to_string(),
+            format!("{:.1}", r.p99_slowdown),
+            format!("{:.0}%", r.miss_rate * 100.0),
+            format!("{:.0}", r.backlog_p99),
+            format!("{:.1}%", r.est_mape * 100.0),
+            r.unfinished.to_string(),
+        ]);
+    }
+    t.print(&format!(
+        "Saturation sweep: {} cells, workload {} (seed {}, {} interarrival, {:.0}/{:.0}/{:.0}s \
+         warmup/measure/drain, estimator {})",
+        rows.len(),
+        cfg.workload,
+        cfg.seed,
+        cfg.interarrival,
+        cfg.warmup_s,
+        cfg.measure_s,
+        cfg.drain_s,
+        cfg.estimator
+    ));
+    let out = args.get_or("out", "BENCH_saturation.json");
+    match std::fs::write(out, format!("{}\n", exp::saturation_json(&cfg, &rows))) {
         Ok(()) => println!("wrote {out}"),
         Err(e) => {
             eprintln!("failed to write {out}: {e}");

@@ -239,13 +239,10 @@ impl TerraPolicy {
         order.sort_by(|a, b| {
             let (ca, cb) = (&coflows[a.0], &coflows[b.0]);
             match (ca.deadline, cb.deadline) {
-                (Some(da), Some(db)) => db
-                    .partial_cmp(&da)
-                    .unwrap()
-                    .then(a.1.partial_cmp(&b.1).unwrap()),
+                (Some(da), Some(db)) => db.total_cmp(&da).then(a.1.total_cmp(&b.1)),
                 (Some(_), None) => std::cmp::Ordering::Less,
                 (None, Some(_)) => std::cmp::Ordering::Greater,
-                (None, None) => a.1.partial_cmp(&b.1).unwrap(),
+                (None, None) => a.1.total_cmp(&b.1),
             }
         });
 
@@ -526,7 +523,9 @@ impl Policy for TerraPolicy {
             .iter()
             .filter(|c| c.admitted && c.deadline.is_some() && !c.done())
             .collect();
-        admitted.sort_by(|a, b| b.deadline.partial_cmp(&a.deadline).unwrap());
+        // The filter above guarantees `deadline.is_some()`; total_cmp on
+        // the inner f64 keeps the sort NaN-safe.
+        admitted.sort_by(|a, b| b.deadline.unwrap_or(0.0).total_cmp(&a.deadline.unwrap_or(0.0)));
         for cf in admitted {
             if let Some((mut sol, index)) = self.solve_min_cct(cf, &residual, net, None, None, 0)
             {

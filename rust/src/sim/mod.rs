@@ -1034,6 +1034,19 @@ impl Simulation {
             self.has_streams = true;
         }
 
+        // Offered-vs-admitted accounting + a backlog depth sample (the
+        // submitted coflow counts itself when it will enter the engine).
+        // Pure bookkeeping: no RNG draws, no event-queue effects — fixed
+        // job-set runs stay bit-identical.
+        self.report.offered += 1;
+        if admitted {
+            self.report.admitted += 1;
+        } else {
+            self.report.rejected += 1;
+        }
+        let depth = self.engine.len() + admitted as usize;
+        self.report.backlog.push((self.now, depth));
+
         self.owners.insert(id, (job, stage));
         self.record_idx.insert(id, self.report.coflows.len());
         self.report.coflows.push(CoflowRecord {

@@ -147,6 +147,18 @@ pub struct Report {
     /// Integral over rounds of unreservable floor demand (Gbps·rounds):
     /// > 0 means some round could not fit every admitted floor.
     pub floor_shortfall_gbps: f64,
+    /// Offered-vs-admitted accounting (the open-loop saturation harness):
+    /// WAN coflows submitted to the control plane, how many entered
+    /// scheduling, and how many admission control turned away. Always
+    /// `offered == admitted + rejected`.
+    pub offered: usize,
+    pub admitted: usize,
+    pub rejected: usize,
+    /// `(sim time, active coflows)` sampled at every coflow submission —
+    /// the instantaneous control-plane backlog. Under open-loop overload
+    /// this grows without bound; its windowed p99 is the saturation
+    /// sweep's queue-depth signal.
+    pub backlog: Vec<(f64, usize)>,
     /// Simulated makespan.
     pub makespan: f64,
 }
@@ -259,6 +271,24 @@ impl Report {
         self.coflows.iter().filter(|c| c.admitted && c.finish.is_none()).count()
     }
 
+    /// p99 of the sampled control-plane backlog (active coflows at
+    /// submission time), optionally restricted to a `[lo, hi)` window of
+    /// simulated time. 0.0 when nothing was sampled in the window.
+    pub fn backlog_p99_between(&self, lo: f64, hi: f64) -> f64 {
+        let depths: Vec<f64> = self
+            .backlog
+            .iter()
+            .filter(|&&(t, _)| t >= lo && t < hi)
+            .map(|&(_, d)| d as f64)
+            .collect();
+        stats::percentile(&depths, 99.0)
+    }
+
+    /// p99 backlog over the whole run.
+    pub fn backlog_p99(&self) -> f64 {
+        self.backlog_p99_between(f64::NEG_INFINITY, f64::INFINITY)
+    }
+
     /// How much transfer progress survived the controller restart, as
     /// `min(1, remaining_at_kill / remaining_at_restart)`. Resync
     /// reconstruction keeps (or shrinks, via degraded drains) the
@@ -354,6 +384,16 @@ mod tests {
         assert!((rep.utilization() - 0.5).abs() < 1e-12);
         assert!((rep.deadline_met_fraction() - 0.5).abs() < 1e-12);
         assert!((rep.avg_slowdown() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn backlog_percentiles_window() {
+        let mut rep = Report::default();
+        assert_eq!(rep.backlog_p99(), 0.0, "no samples");
+        rep.backlog = vec![(1.0, 2), (5.0, 10), (9.0, 4)];
+        assert!((rep.backlog_p99() - 9.88).abs() < 1e-9);
+        assert!((rep.backlog_p99_between(4.0, 10.0) - 9.94).abs() < 1e-9);
+        assert_eq!(rep.backlog_p99_between(20.0, 30.0), 0.0);
     }
 
     #[test]

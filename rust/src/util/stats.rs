@@ -25,7 +25,9 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp, not partial_cmp().unwrap(): a single NaN sample must not
+    // panic a whole report (NaNs sort last and only perturb the top end).
+    v.sort_by(f64::total_cmp);
     percentile_sorted(&v, p)
 }
 
@@ -82,7 +84,7 @@ pub struct Ecdf {
 
 impl Ecdf {
     pub fn new(mut xs: Vec<f64>) -> Self {
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.sort_by(f64::total_cmp);
         Ecdf { sorted: xs }
     }
 
@@ -151,6 +153,20 @@ mod tests {
         assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
         assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
         assert!((percentile(&xs, 95.0) - 3.85).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_survives_nan_samples() {
+        // Regression: the sort used partial_cmp().unwrap(), so one NaN
+        // sample panicked the whole report. With total_cmp, NaNs sort
+        // last and low/mid percentiles stay untouched.
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+        assert!(percentile(&xs, 100.0).is_nan());
+        // Ecdf had the same sort; NaN-last keeps eval() well-defined.
+        let e = Ecdf::new(vec![2.0, f64::NAN, 1.0]);
+        assert!((e.eval(1.5) - 1.0 / 3.0).abs() < 1e-12);
     }
 
     #[test]

@@ -67,7 +67,7 @@ mod tests {
         assert!(mean > 8.0 * med, "mean={mean} median={med}");
         // Top 10% should carry the overwhelming share of bytes.
         let mut sorted = vols.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         let total: f64 = sorted.iter().sum();
         let top10: f64 = sorted[sorted.len() * 9 / 10..].iter().sum();
         assert!(top10 / total > 0.85, "top10 share = {}", top10 / total);

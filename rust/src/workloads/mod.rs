@@ -21,9 +21,14 @@ pub mod classes;
 pub mod dag;
 pub mod deadlines;
 pub mod fb;
+pub mod openloop;
 
 pub use classes::{ml_sync_jobs, stream_jobs};
 pub use deadlines::assign_deadlines;
+pub use openloop::{
+    stream_fingerprint, HistoBin, Interarrival, OpenLoopConfig, OpenLoopGen, RvHisto,
+    WorkloadProfile,
+};
 
 use crate::net::Wan;
 use crate::sim::Job;

@@ -1,0 +1,671 @@
+//! Open-loop load generation for the saturation harness.
+//!
+//! Every sweep before this module replayed *fixed job sets*; the
+//! production question — how many coflows per second can a
+//! ⟨policy, topology, dynamics, shards, estimator⟩ cell sustain — needs
+//! open-loop arrivals whose statistics stay faithful to the traces. Three
+//! pieces:
+//!
+//! - [`RvHisto`]: a histogram-valued random variate sampled in O(1) with
+//!   the Vose/Walker weighted-alias method. Histograms are *derived* from
+//!   the existing `workloads/{fb,tpcds,…}` generators ([`WorkloadProfile`]
+//!   measures per-coflow size, WAN width, source/destination skew, and
+//!   service-class mix over a sample job set), so open-loop traffic is
+//!   distributionally faithful to the fixed evaluation workloads.
+//! - [`Interarrival`]: seeded interarrival processes (Poisson, Pareto,
+//!   log-normal) with rate rescaling that preserves the shape while the
+//!   load ramp sets the aggregate arrival rate λ.
+//! - [`OpenLoopGen`]: merges `streams` independent Pcg32-forked arrival
+//!   streams (the `net/dynamics` idiom) into one deterministic job
+//!   sequence over `[0, horizon_s)`. The output is a pure function of the
+//!   profile and [`OpenLoopConfig`] — notably independent of shard count
+//!   and of anything the simulator later does with the jobs, which is what
+//!   makes the "same seed ⇒ byte-identical arrival stream across shard
+//!   counts" property hold by construction.
+
+use crate::coflow::Flow;
+use crate::net::Wan;
+use crate::sim::Job;
+use crate::util::rng::Pcg32;
+
+use super::{WorkloadConfig, WorkloadGen, WorkloadKind};
+
+/// One histogram bin: values are drawn uniformly from `[lo, hi)` (or
+/// exactly `lo` when `lo == hi`) with probability proportional to
+/// `weight`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistoBin {
+    pub lo: f64,
+    pub hi: f64,
+    pub weight: f64,
+}
+
+impl HistoBin {
+    pub fn new(lo: f64, hi: f64, weight: f64) -> HistoBin {
+        HistoBin { lo, hi, weight }
+    }
+}
+
+/// A histogram-valued random variate with O(1) weighted-alias sampling
+/// (Vose 1991). Construction validates the histogram and precomputes the
+/// alias table; sampling costs one `below` + one or two `f64` draws.
+#[derive(Clone, Debug)]
+pub struct RvHisto {
+    bins: Vec<HistoBin>,
+    /// Vose alias table: `prob[i]` is the probability of keeping column
+    /// `i`; otherwise the draw is redirected to `alias[i]`.
+    prob: Vec<f64>,
+    alias: Vec<usize>,
+}
+
+impl RvHisto {
+    /// Build the alias table. Rejects histograms the sampler cannot give a
+    /// meaning to: empty or degenerate one-bin lists, non-finite bounds or
+    /// weights, negative weights, inverted bins, and all-zero weight.
+    pub fn new(bins: Vec<HistoBin>) -> Result<RvHisto, String> {
+        if bins.is_empty() {
+            return Err("empty histogram".into());
+        }
+        if bins.len() < 2 {
+            return Err("degenerate one-bin histogram (a constant, not a distribution)".into());
+        }
+        for (i, b) in bins.iter().enumerate() {
+            if !b.lo.is_finite() || !b.hi.is_finite() || !b.weight.is_finite() {
+                return Err(format!("bin {i} has non-finite fields: {b:?}"));
+            }
+            if b.weight < 0.0 {
+                return Err(format!("bin {i} has negative weight {}", b.weight));
+            }
+            if b.lo > b.hi {
+                return Err(format!("bin {i} is inverted: [{}, {})", b.lo, b.hi));
+            }
+        }
+        let total: f64 = bins.iter().map(|b| b.weight).sum();
+        if total <= 0.0 {
+            return Err("histogram has zero total weight".into());
+        }
+        let n = bins.len();
+        let mut prob: Vec<f64> = bins.iter().map(|b| b.weight * n as f64 / total).collect();
+        let mut alias: Vec<usize> = (0..n).collect();
+        let mut small: Vec<usize> = Vec::new();
+        let mut large: Vec<usize> = Vec::new();
+        for (i, &p) in prob.iter().enumerate() {
+            if p < 1.0 {
+                small.push(i);
+            } else {
+                large.push(i);
+            }
+        }
+        while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
+            small.pop();
+            large.pop();
+            alias[s] = l;
+            prob[l] = (prob[l] + prob[s]) - 1.0;
+            if prob[l] < 1.0 {
+                small.push(l);
+            } else {
+                large.push(l);
+            }
+        }
+        // Numerical leftovers on either worklist have probability 1.
+        for &i in small.iter().chain(large.iter()) {
+            prob[i] = 1.0;
+        }
+        Ok(RvHisto { bins, prob, alias })
+    }
+
+    /// Log-spaced histogram fitted to positive samples (`nbins >= 2`).
+    /// Used for heavy-tailed coflow volumes, where linear bins would put
+    /// everything in the first bucket. When all samples are equal the
+    /// histogram still carries `nbins` bins with the mass concentrated in
+    /// the sample's bucket (never a rejected one-bin degenerate).
+    pub fn log_bins(samples: &[f64], nbins: usize) -> Result<RvHisto, String> {
+        let nbins = nbins.max(2);
+        let pos: Vec<f64> = samples.iter().copied().filter(|&v| v > 0.0 && v.is_finite()).collect();
+        if pos.is_empty() {
+            return Err("no positive samples to fit".into());
+        }
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for &v in &pos {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        if hi <= lo {
+            // Constant sample set: widen around the value; only the bin
+            // containing it carries weight.
+            lo *= 0.5;
+            hi = lo * 3.0;
+        }
+        let (llo, lhi) = (lo.ln(), hi.ln());
+        let step = (lhi - llo) / nbins as f64;
+        let mut weights = vec![0.0f64; nbins];
+        for &v in &pos {
+            let idx = (((v.ln() - llo) / step) as usize).min(nbins - 1);
+            weights[idx] += 1.0;
+        }
+        let bins = (0..nbins)
+            .map(|i| {
+                let blo = (llo + i as f64 * step).exp();
+                let bhi = (llo + (i + 1) as f64 * step).exp();
+                HistoBin::new(blo, bhi, weights[i])
+            })
+            .collect();
+        RvHisto::new(bins)
+    }
+
+    /// Unit-width histogram over indices `0..weights.len()`: bin `i` is
+    /// `[i, i+1)` with the given weight. Used for discrete draws — WAN
+    /// widths, datacenter skew, service-class slots. A single-element
+    /// weight vector is padded with a zero-weight sibling so a constant
+    /// still round-trips through the (≥ 2 bins) validator.
+    pub fn indexed(weights: &[f64]) -> Result<RvHisto, String> {
+        if weights.is_empty() {
+            return Err("no index weights".into());
+        }
+        let mut bins: Vec<HistoBin> = weights
+            .iter()
+            .enumerate()
+            .map(|(i, &w)| HistoBin::new(i as f64, (i + 1) as f64, w))
+            .collect();
+        if bins.len() < 2 {
+            bins.push(HistoBin::new(1.0, 2.0, 0.0));
+        }
+        RvHisto::new(bins)
+    }
+
+    pub fn len(&self) -> usize {
+        self.bins.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bins.is_empty()
+    }
+
+    pub fn bins(&self) -> &[HistoBin] {
+        &self.bins
+    }
+
+    /// Probability mass of bin `i` (normalized weights).
+    pub fn mass(&self, i: usize) -> f64 {
+        let total: f64 = self.bins.iter().map(|b| b.weight).sum();
+        self.bins[i].weight / total
+    }
+
+    /// Expected value under uniform-within-bin sampling.
+    pub fn mean(&self) -> f64 {
+        let total: f64 = self.bins.iter().map(|b| b.weight).sum();
+        self.bins.iter().map(|b| 0.5 * (b.lo + b.hi) * b.weight).sum::<f64>() / total
+    }
+
+    /// Draw a bin index with probability proportional to its weight.
+    pub fn sample_index(&self, rng: &mut Pcg32) -> usize {
+        let col = rng.below(self.prob.len());
+        if rng.f64() < self.prob[col] {
+            col
+        } else {
+            self.alias[col]
+        }
+    }
+
+    /// Draw a value: alias-pick a bin, then uniform within it.
+    pub fn sample(&self, rng: &mut Pcg32) -> f64 {
+        let b = &self.bins[self.sample_index(rng)];
+        if b.hi > b.lo {
+            b.lo + (b.hi - b.lo) * rng.f64()
+        } else {
+            b.lo
+        }
+    }
+}
+
+/// Service-class slots of [`WorkloadProfile::class_mix`], in index order.
+pub const CLASS_SLOTS: [&str; 4] = ["batch", "deadline", "stream", "ml-sync"];
+
+/// Empirical distributions of one evaluation workload, measured over a
+/// sample job set from the fixed generators. Open-loop jobs are sampled
+/// from these histograms instead of replaying the trace.
+#[derive(Clone, Debug)]
+pub struct WorkloadProfile {
+    /// Source workload name (`fb`, `bigbench`, …).
+    pub workload: String,
+    /// Datacenter count of the WAN the profile was measured on (the skew
+    /// histograms are indexed by DC).
+    pub num_dcs: usize,
+    /// Per-coflow total WAN volume (Gbit), log-spaced bins.
+    pub volume: RvHisto,
+    /// WAN flows per coflow, unit bins over the width value.
+    pub width: RvHisto,
+    /// Byte-weighted source / destination datacenter popularity, unit bins
+    /// over DC index.
+    pub src_skew: RvHisto,
+    pub dst_skew: RvHisto,
+    /// Coflow count per service-class slot ([`CLASS_SLOTS`]); a stage with
+    /// a deadline counts as the "deadline" slot regardless of class.
+    pub class_mix: RvHisto,
+}
+
+impl WorkloadProfile {
+    /// Measure a profile by generating `sample_jobs` jobs from the fixed
+    /// generator for `kind` (deterministic in `seed`).
+    pub fn from_kind(
+        kind: WorkloadKind,
+        wan: &Wan,
+        seed: u64,
+        sample_jobs: usize,
+    ) -> WorkloadProfile {
+        let cfg = WorkloadConfig::new(kind, seed);
+        let jobs = WorkloadGen::with_config(cfg).jobs(wan, sample_jobs.max(1));
+        WorkloadProfile::from_jobs(kind.name(), &jobs, wan.num_nodes())
+            .expect("fixed workload sample produced no WAN coflows")
+    }
+
+    /// Measure a profile over an explicit job set (one histogram entry per
+    /// WAN coflow, i.e. per stage with at least one inter-DC flow).
+    pub fn from_jobs(
+        workload: &str,
+        jobs: &[Job],
+        num_dcs: usize,
+    ) -> Result<WorkloadProfile, String> {
+        let mut volumes: Vec<f64> = Vec::new();
+        let mut max_width = 0usize;
+        let mut widths: Vec<usize> = Vec::new();
+        let mut src_w = vec![0.0f64; num_dcs];
+        let mut dst_w = vec![0.0f64; num_dcs];
+        let mut class_w = vec![0.0f64; CLASS_SLOTS.len()];
+        for job in jobs {
+            for st in &job.stages {
+                let wan_flows: Vec<&Flow> =
+                    st.flows.iter().filter(|f| f.src_dc != f.dst_dc).collect();
+                if wan_flows.is_empty() {
+                    continue;
+                }
+                volumes.push(wan_flows.iter().map(|f| f.volume).sum());
+                widths.push(wan_flows.len());
+                max_width = max_width.max(wan_flows.len());
+                for f in &wan_flows {
+                    src_w[f.src_dc] += f.volume;
+                    dst_w[f.dst_dc] += f.volume;
+                }
+                let slot = if st.deadline.is_some() {
+                    1
+                } else {
+                    match st.class.name() {
+                        "deadline" => 1,
+                        "stream" => 2,
+                        "ml-sync" => 3,
+                        _ => 0,
+                    }
+                };
+                class_w[slot] += 1.0;
+            }
+        }
+        if volumes.is_empty() {
+            return Err(format!("job set for {workload} has no WAN coflows"));
+        }
+        let mut width_w = vec![0.0f64; max_width + 1];
+        for &w in &widths {
+            width_w[w] += 1.0;
+        }
+        Ok(WorkloadProfile {
+            workload: workload.to_string(),
+            num_dcs,
+            volume: RvHisto::log_bins(&volumes, 16)?,
+            width: RvHisto::indexed(&width_w)?,
+            src_skew: RvHisto::indexed(&src_w)?,
+            dst_skew: RvHisto::indexed(&dst_w)?,
+            class_mix: RvHisto::indexed(&class_w)?,
+        })
+    }
+}
+
+/// Seeded interarrival process. All variants expose their mean so the load
+/// ramp can rescale any shape to a target rate with [`Interarrival::with_rate`].
+#[derive(Clone, Copy, Debug)]
+pub enum Interarrival {
+    /// Exponential gaps — a Poisson arrival process at `lambda`/s.
+    Poisson { lambda: f64 },
+    /// Heavy-tailed gaps: `scale · U^{-1/alpha}` (minimum `scale`; the
+    /// mean is finite only for `alpha > 1`, which `with_rate` requires).
+    Pareto { alpha: f64, scale: f64 },
+    /// Log-normal gaps with underlying normal `(mu, sigma)`.
+    LogNormal { mu: f64, sigma: f64 },
+}
+
+impl Interarrival {
+    /// Canonical shape for a CLI name, rescaled to `rate` arrivals/s.
+    pub fn by_name(name: &str, rate: f64) -> Option<Interarrival> {
+        let shape = match name.to_ascii_lowercase().as_str() {
+            "poisson" | "exp" => Interarrival::Poisson { lambda: 1.0 },
+            "pareto" | "heavy" => Interarrival::Pareto { alpha: 1.5, scale: 1.0 },
+            "lognormal" | "log-normal" => Interarrival::LogNormal { mu: 0.0, sigma: 1.0 },
+            _ => return None,
+        };
+        Some(shape.with_rate(rate))
+    }
+
+    /// Mean gap in seconds.
+    pub fn mean(&self) -> f64 {
+        match *self {
+            Interarrival::Poisson { lambda } => 1.0 / lambda,
+            Interarrival::Pareto { alpha, scale } => scale * alpha / (alpha - 1.0),
+            Interarrival::LogNormal { mu, sigma } => (mu + 0.5 * sigma * sigma).exp(),
+        }
+    }
+
+    /// Arrival rate in events/s.
+    pub fn rate(&self) -> f64 {
+        1.0 / self.mean()
+    }
+
+    /// Same shape, rescaled so the mean gap is `1/rate`. Poisson adjusts
+    /// `lambda`, Pareto its `scale` (tail index preserved), log-normal its
+    /// `mu` (log-space spread preserved).
+    pub fn with_rate(self, rate: f64) -> Interarrival {
+        assert!(rate > 0.0 && rate.is_finite(), "arrival rate must be positive");
+        let mean = 1.0 / rate;
+        match self {
+            Interarrival::Poisson { .. } => Interarrival::Poisson { lambda: rate },
+            Interarrival::Pareto { alpha, .. } => {
+                assert!(alpha > 1.0, "Pareto interarrivals need alpha > 1 for a finite mean");
+                Interarrival::Pareto { alpha, scale: mean * (alpha - 1.0) / alpha }
+            }
+            Interarrival::LogNormal { sigma, .. } => {
+                Interarrival::LogNormal { mu: mean.ln() - 0.5 * sigma * sigma, sigma }
+            }
+        }
+    }
+
+    /// Draw one gap (seconds, strictly positive).
+    pub fn sample(&self, rng: &mut Pcg32) -> f64 {
+        match *self {
+            Interarrival::Poisson { lambda } => rng.exp(1.0 / lambda),
+            Interarrival::Pareto { alpha, scale } => {
+                let u = 1.0 - rng.f64(); // (0, 1]: avoid the infinite tail point
+                scale * u.powf(-1.0 / alpha)
+            }
+            Interarrival::LogNormal { mu, sigma } => rng.lognormal(mu, sigma),
+        }
+    }
+}
+
+/// Open-loop generator knobs.
+#[derive(Clone, Debug)]
+pub struct OpenLoopConfig {
+    pub seed: u64,
+    /// Aggregate arrival rate λ (coflows/s) across all streams. `<= 0`
+    /// disables the generator entirely: no jobs, no RNG draws — the
+    /// open-loop inertness guarantee for fixed-job-set paths.
+    pub lambda: f64,
+    /// Interarrival shape name ([`Interarrival::by_name`]).
+    pub interarrival: String,
+    /// Independent arrival streams, each at λ/streams (Pcg32-forked per
+    /// stream like `net/dynamics`).
+    pub streams: usize,
+    /// Arrivals are generated in `[0, horizon_s)`.
+    pub horizon_s: f64,
+    /// First job id (keeps open-loop ids disjoint from fixed job sets when
+    /// the two are mixed in one simulation).
+    pub base_id: u64,
+}
+
+impl Default for OpenLoopConfig {
+    fn default() -> Self {
+        OpenLoopConfig {
+            seed: 7,
+            lambda: 1.0,
+            interarrival: "poisson".into(),
+            streams: 4,
+            horizon_s: 300.0,
+            base_id: 1_000_000,
+        }
+    }
+}
+
+/// The open-loop job generator: per-stream interarrival processes merged
+/// into one arrival-ordered sequence of single-stage coflow jobs sampled
+/// from a [`WorkloadProfile`].
+pub struct OpenLoopGen {
+    profile: WorkloadProfile,
+    cfg: OpenLoopConfig,
+}
+
+impl OpenLoopGen {
+    pub fn new(profile: WorkloadProfile, cfg: OpenLoopConfig) -> OpenLoopGen {
+        OpenLoopGen { profile, cfg }
+    }
+
+    pub fn profile(&self) -> &WorkloadProfile {
+        &self.profile
+    }
+
+    /// Generate the arrival stream. Deterministic in `(profile, cfg)`;
+    /// `lambda <= 0` or a zero horizon yields the empty stream without
+    /// touching any RNG.
+    pub fn jobs(&self) -> Vec<Job> {
+        if self.cfg.lambda <= 0.0 || self.cfg.horizon_s <= 0.0 {
+            return Vec::new();
+        }
+        let streams = self.cfg.streams.max(1);
+        let per_stream_rate = self.cfg.lambda / streams as f64;
+        let Some(gap) = Interarrival::by_name(&self.cfg.interarrival, per_stream_rate) else {
+            log::warn!("unknown interarrival shape {}; empty stream", self.cfg.interarrival);
+            return Vec::new();
+        };
+        let mut root = Pcg32::new(self.cfg.seed ^ 0x0BE4_10AD);
+        // (arrival, stream, per-job rng) tuples, then a stable merge by
+        // (time, stream) — ties across streams resolve deterministically.
+        let mut arrivals: Vec<(f64, usize, Pcg32)> = Vec::new();
+        for s in 0..streams {
+            let mut srng = root.fork(s as u64);
+            let mut t = 0.0;
+            let mut k = 0u64;
+            loop {
+                t += gap.sample(&mut srng);
+                if !(t < self.cfg.horizon_s) {
+                    break;
+                }
+                let jrng = srng.fork(k);
+                arrivals.push((t, s, jrng));
+                k += 1;
+            }
+        }
+        arrivals.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        arrivals
+            .into_iter()
+            .enumerate()
+            .map(|(i, (t, _s, mut jrng))| {
+                self.sample_job(self.cfg.base_id + i as u64, t, &mut jrng)
+            })
+            .collect()
+    }
+
+    /// Sample one single-stage coflow job from the profile histograms.
+    fn sample_job(&self, id: u64, arrival: f64, rng: &mut Pcg32) -> Job {
+        let total = self.profile.volume.sample(rng).max(1e-3);
+        let width = (self.profile.width.sample(rng).floor() as usize).max(1);
+        // Exponential proportions split the total over the flows (skewed,
+        // like real shuffles, but always strictly positive).
+        let props: Vec<f64> = (0..width).map(|_| rng.exp(1.0).max(1e-9)).collect();
+        let psum: f64 = props.iter().sum();
+        let num_dcs = self.profile.num_dcs;
+        let flows: Vec<Flow> = props
+            .iter()
+            .enumerate()
+            .map(|(fi, &p)| {
+                let src = self.profile.src_skew.sample_index(rng).min(num_dcs - 1);
+                let mut dst = self.profile.dst_skew.sample_index(rng).min(num_dcs - 1);
+                // Bounded resample keeps the flow inter-DC without an
+                // unbounded loop on pathological skew.
+                for _ in 0..4 {
+                    if dst != src {
+                        break;
+                    }
+                    dst = self.profile.dst_skew.sample_index(rng).min(num_dcs - 1);
+                }
+                if dst == src {
+                    dst = (src + 1) % num_dcs;
+                }
+                Flow { id: fi as u64, src_dc: src, dst_dc: dst, volume: total * p / psum }
+            })
+            .collect();
+        // Non-batch class slots are *measured* in the profile but emitted
+        // as batch: the fixed evaluation traces the profiles derive from
+        // are batch-only, so the mix draw is exercised (keeping the stream
+        // deterministic in its presence) while floors/trees stay the
+        // multitenant sweep's concern. See DESIGN.md "known limitations".
+        let _class_slot = self.profile.class_mix.sample_index(rng);
+        Job::map_reduce(id, arrival, 0.0, flows)
+    }
+}
+
+/// Canonical byte encoding of a job stream — little-endian bit patterns of
+/// every id, arrival, and flow tuple. Two streams are the same workload
+/// if and only if their fingerprints are equal byte-for-byte; the
+/// open-loop property tests pin cross-run and cross-shard identity on it.
+pub fn stream_fingerprint(jobs: &[Job]) -> Vec<u8> {
+    let mut out = Vec::new();
+    for j in jobs {
+        out.extend_from_slice(&j.id.to_le_bytes());
+        out.extend_from_slice(&j.arrival.to_bits().to_le_bytes());
+        for st in &j.stages {
+            out.extend_from_slice(&st.compute_s.to_bits().to_le_bytes());
+            for f in &st.flows {
+                out.extend_from_slice(&f.id.to_le_bytes());
+                out.extend_from_slice(&(f.src_dc as u64).to_le_bytes());
+                out.extend_from_slice(&(f.dst_dc as u64).to_le_bytes());
+                out.extend_from_slice(&f.volume.to_bits().to_le_bytes());
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::topologies;
+
+    fn two_bins() -> Vec<HistoBin> {
+        vec![HistoBin::new(0.0, 1.0, 1.0), HistoBin::new(1.0, 2.0, 3.0)]
+    }
+
+    #[test]
+    fn alias_rejects_invalid_histograms() {
+        assert!(RvHisto::new(vec![]).is_err(), "empty");
+        assert!(RvHisto::new(vec![HistoBin::new(0.0, 1.0, 1.0)]).is_err(), "one-bin degenerate");
+        assert!(
+            RvHisto::new(vec![HistoBin::new(0.0, 1.0, 0.0), HistoBin::new(1.0, 2.0, 0.0)]).is_err(),
+            "zero total weight"
+        );
+        assert!(
+            RvHisto::new(vec![HistoBin::new(0.0, 1.0, -1.0), HistoBin::new(1.0, 2.0, 2.0)])
+                .is_err(),
+            "negative weight"
+        );
+        assert!(
+            RvHisto::new(vec![HistoBin::new(0.0, 1.0, f64::NAN), HistoBin::new(1.0, 2.0, 1.0)])
+                .is_err(),
+            "NaN weight"
+        );
+        assert!(
+            RvHisto::new(vec![HistoBin::new(2.0, 1.0, 1.0), HistoBin::new(1.0, 2.0, 1.0)]).is_err(),
+            "inverted bin"
+        );
+        assert!(RvHisto::new(two_bins()).is_ok());
+    }
+
+    #[test]
+    fn alias_samples_inside_bins_and_respects_weights() {
+        let h = RvHisto::new(two_bins()).unwrap();
+        let mut rng = Pcg32::new(11);
+        let mut hits = [0usize; 2];
+        for _ in 0..20_000 {
+            let idx = h.sample_index(&mut rng);
+            hits[idx] += 1;
+            let v = h.sample(&mut rng);
+            assert!((0.0..2.0).contains(&v));
+        }
+        let f1 = hits[1] as f64 / 20_000.0;
+        assert!((f1 - 0.75).abs() < 0.02, "bin-1 frequency {f1} vs weight 0.75");
+    }
+
+    #[test]
+    fn indexed_pads_constants_instead_of_rejecting() {
+        let h = RvHisto::indexed(&[5.0]).unwrap();
+        assert_eq!(h.len(), 2);
+        let mut rng = Pcg32::new(3);
+        for _ in 0..100 {
+            assert_eq!(h.sample_index(&mut rng), 0, "all mass on the only real bin");
+        }
+    }
+
+    #[test]
+    fn interarrival_rescaling_hits_the_target_rate() {
+        let mut rng = Pcg32::new(21);
+        for name in ["poisson", "pareto", "lognormal"] {
+            let ia = Interarrival::by_name(name, 2.0).unwrap();
+            assert!((ia.rate() - 2.0).abs() < 1e-12, "{name} analytic rate");
+            let n = 60_000;
+            let sum: f64 = (0..n).map(|_| ia.sample(&mut rng)).sum();
+            let emp = sum / n as f64;
+            // The α=1.5 Pareto mean converges at n^(1/3): loose tolerance
+            // there, tight elsewhere — both catch a wrong rescaling
+            // (which would be off by 2x).
+            let tol = if name == "pareto" { 0.2 } else { 0.05 };
+            assert!((emp - 0.5).abs() < tol, "{name}: empirical mean {emp} vs 0.5");
+        }
+        assert!(Interarrival::by_name("bogus", 1.0).is_none());
+    }
+
+    #[test]
+    fn profile_measures_the_fixed_workload() {
+        let wan = topologies::swan();
+        let p = WorkloadProfile::from_kind(WorkloadKind::Fb, &wan, 42, 40);
+        assert_eq!(p.num_dcs, wan.num_nodes());
+        assert_eq!(p.src_skew.len(), wan.num_nodes());
+        assert!(p.volume.mean() > 0.0);
+        // FB is batch-only: all class mass on slot 0.
+        assert!((p.class_mix.mass(0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn generator_is_deterministic_and_disabled_means_empty() {
+        let wan = topologies::swan();
+        let profile = WorkloadProfile::from_kind(WorkloadKind::Fb, &wan, 42, 30);
+        let cfg = OpenLoopConfig { lambda: 0.8, horizon_s: 120.0, ..Default::default() };
+        let a = OpenLoopGen::new(profile.clone(), cfg.clone()).jobs();
+        let b = OpenLoopGen::new(profile.clone(), cfg.clone()).jobs();
+        assert!(!a.is_empty());
+        assert_eq!(stream_fingerprint(&a), stream_fingerprint(&b));
+        let mut last = 0.0;
+        for j in &a {
+            j.validate().unwrap();
+            assert!(j.arrival >= last && j.arrival < cfg.horizon_s);
+            last = j.arrival;
+            assert_eq!(j.stages.len(), 1, "open-loop jobs are single-stage");
+            assert!(j.total_volume() > 0.0);
+        }
+        let off = OpenLoopConfig { lambda: 0.0, ..cfg };
+        assert!(OpenLoopGen::new(profile, off).jobs().is_empty());
+    }
+
+    #[test]
+    fn stream_count_changes_the_interleave_not_the_rate() {
+        let wan = topologies::swan();
+        let profile = WorkloadProfile::from_kind(WorkloadKind::Fb, &wan, 42, 30);
+        let mk = |streams| {
+            let cfg = OpenLoopConfig {
+                lambda: 1.0,
+                horizon_s: 400.0,
+                streams,
+                ..Default::default()
+            };
+            OpenLoopGen::new(profile.clone(), cfg).jobs().len() as f64
+        };
+        let (one, four) = (mk(1), mk(4));
+        // Both target λ·horizon = 400 arrivals in expectation.
+        assert!((one - 400.0).abs() < 80.0, "1 stream: {one}");
+        assert!((four - 400.0).abs() < 80.0, "4 streams: {four}");
+    }
+}
